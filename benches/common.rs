@@ -1,0 +1,43 @@
+//! Shared helpers for the custom bench harness (criterion is not
+//! vendored offline; see Cargo.toml `harness = false` targets).
+//!
+//! Environment knobs:
+//!   DAPD_N=60         samples per task (default varies per bench)
+//!   DAPD_ARTIFACTS=…  artifact directory (default ./artifacts)
+#![allow(dead_code)]
+
+use dapd::decode::{DecodeConfig, Method, MethodParams};
+use dapd::runtime::Engine;
+
+pub fn engine() -> Engine {
+    let dir = std::env::var("DAPD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Engine::load(std::path::Path::new(&dir))
+        .expect("artifacts not found - run `make artifacts` first")
+}
+
+pub fn n_samples(default: usize) -> usize {
+    std::env::var("DAPD_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// The paper's method lineup for the main tables.
+pub fn baseline_methods() -> Vec<Method> {
+    vec![Method::FastDllm, Method::EbSampler, Method::Klass]
+}
+
+pub fn dapd_methods() -> Vec<Method> {
+    vec![Method::DapdStaged, Method::DapdDirect]
+}
+
+/// Default config matching the paper's App. A hyperparameters.
+pub fn cfg(method: Method) -> DecodeConfig {
+    let mut c = DecodeConfig::new(method);
+    c.params = MethodParams::default();
+    c
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}

@@ -1,0 +1,111 @@
+//! Fig. 6: distribution of normalized mask-to-mask edge scores, and where
+//! the tau_min choices sit in its tail.
+//!
+//! Protocol mirrors App. A: decode step-by-step (Original) on the Sec. 6
+//! multiq workload, collecting the max-normalized pairwise edge scores
+//! among still-masked positions at every step, for both models.  Paper
+//! shape: the mass concentrates near zero; tau_min in {0.005, 0.01}
+//! admits almost all pairs early (the CDF below tau_min is tiny).
+
+mod common;
+
+ 
+use dapd::graph::max_normalize;
+use dapd::runtime::ForwardModel;
+use dapd::util::bench::{fmt_f, Table};
+use dapd::util::stats::Histogram;
+use dapd::workload::EvalSet;
+
+fn collect_hist(engine: &dapd::runtime::Engine, model_name: &str, n: usize) -> Histogram {
+    let model = engine.model_for(model_name, 8, engine.meta.gen_len).unwrap();
+    let set = EvalSet::load(&engine.meta, "multiq").unwrap().take(n);
+    let mut hist = Histogram::new(0.0, 1.0, 100);
+    let p = model.prompt_len();
+    let l = model.seq_len();
+    let mask_id = model.mask_id();
+
+    // step-by-step decode, harvesting edge scores at every forward
+    for chunk in set.instances.chunks(model.batch()) {
+        let mut tokens = vec![0i32; model.batch() * l];
+        for (s, inst) in chunk.iter().enumerate() {
+            tokens[s * l..s * l + p].copy_from_slice(&inst.prompt);
+            for i in p..l {
+                tokens[s * l + i] = mask_id;
+            }
+        }
+        for s in chunk.len()..model.batch() {
+            let (head, tail) = tokens.split_at_mut(s * l);
+            tail[..l].copy_from_slice(&head[..l]);
+        }
+        for _step in 0..model.gen_len() {
+            let out = model.forward(&tokens).unwrap();
+            let es = out.edge_scores.as_ref().unwrap();
+            for (s, _inst) in chunk.iter().enumerate() {
+                let masked: Vec<usize> =
+                    (p..l).filter(|&i| tokens[s * l + i] == mask_id).collect();
+                if masked.len() < 2 {
+                    continue;
+                }
+                let mut scores = Vec::with_capacity(masked.len() * masked.len());
+                for &i in &masked {
+                    for &j in &masked {
+                        if i != j {
+                            scores.push(es.at3(s, i, j));
+                        }
+                    }
+                }
+                max_normalize(&mut scores);
+                for sc in scores {
+                    hist.add(sc as f64);
+                }
+                // commit argmax-confidence position (Original decoding)
+                let mut best = (masked[0], f32::NEG_INFINITY, 0i32);
+                for &pos in &masked {
+                    let mut probs = out.logits.slice3(s, pos).to_vec();
+                    dapd::tensor::softmax_inplace(&mut probs);
+                    let (tok, conf) = dapd::tensor::argmax(&probs);
+                    if conf > best.1 {
+                        best = (pos, conf, tok as i32);
+                    }
+                }
+                tokens[s * l + best.0] = best.2;
+            }
+        }
+    }
+    hist
+}
+
+fn main() {
+    let engine = common::engine();
+    let n = common::n_samples(16);
+    let taus = [0.005f64, 0.01, 0.02, 0.05, 0.1, 0.2];
+
+    let mut t = Table::new(
+        &format!("Fig. 6: CDF of normalized edge scores below tau (multiq, n={n})"),
+        &["Model", "tau=0.005", "0.01", "0.02", "0.05", "0.1", "0.2"],
+    );
+    for model_name in ["sim-llada", "sim-dream"] {
+        let hist = collect_hist(&engine, model_name, n);
+        let mut row = vec![model_name.to_string()];
+        for tau in taus {
+            row.push(fmt_f(hist.cdf_below(tau), 3));
+        }
+        t.row(row);
+        // coarse histogram print (10 bins)
+        let coarse: Vec<u64> = hist
+            .counts
+            .chunks(10)
+            .map(|c| c.iter().sum())
+            .collect();
+        println!(
+            "{model_name} histogram (deciles of [0,1]): {:?} (total {})",
+            coarse, hist.total
+        );
+    }
+    t.print();
+    println!(
+        "paper shape: mass concentrated near zero; the chosen tau_min sits \
+         in the near-zero tail (CDF below it stays small), so early steps \
+         only exclude genuinely strong interactions"
+    );
+}

@@ -1,0 +1,129 @@
+//! Micro-benchmarks of the L3 hot path (the §Perf working set):
+//! softmax/conf extraction, edge-score gather, graph build, Welsh-Powell,
+//! plus one full decode step through the MockModel (no PJRT) and one
+//! through a real artifact when available.
+
+mod common;
+
+use dapd::decode::{decode_batch, DecodeConfig, Method};
+use dapd::graph::{max_normalize, DepGraph};
+use dapd::runtime::{ForwardModel, MockModel};
+use dapd::tensor::softmax_inplace;
+use dapd::util::bench::{fmt_f, time_it, Table};
+use dapd::util::rng::Pcg;
+
+fn main() {
+    let mut t = Table::new(
+        "L3 hot-path micro-benchmarks",
+        &["op", "n", "mean (us)", "sd (us)"],
+    );
+    let mut rng = Pcg::new(42);
+
+    // softmax over a vocab row x 40 candidates
+    let v = 92;
+    let rows: Vec<Vec<f32>> = (0..40)
+        .map(|_| (0..v).map(|_| rng.f64() as f32 * 8.0).collect())
+        .collect();
+    let (m, sd) = time_it(
+        || {
+            for r in &rows {
+                let mut buf = r.clone();
+                softmax_inplace(&mut buf);
+                std::hint::black_box(dapd::tensor::argmax(&buf));
+            }
+        },
+        20,
+        200,
+    );
+    t.row(vec!["softmax+argmax x40".into(), "92".into(), fmt_f(m * 1e6, 1), fmt_f(sd * 1e6, 1)]);
+
+    // edge-score gather + normalize for n candidates out of L=68
+    for n in [20usize, 40] {
+        let l = 68;
+        let es: Vec<f32> = (0..l * l).map(|_| rng.f64() as f32 * 0.02).collect();
+        let positions: Vec<usize> = (0..n).map(|i| 28 + i).collect();
+        let (m, sd) = time_it(
+            || {
+                let mut scores = vec![0.0f32; n * n];
+                for (ci, &i) in positions.iter().enumerate() {
+                    for (cj, &j) in positions.iter().enumerate() {
+                        if ci != cj {
+                            scores[ci * n + cj] = es[i * l + j];
+                        }
+                    }
+                }
+                max_normalize(&mut scores);
+                std::hint::black_box(&scores);
+            },
+            20,
+            200,
+        );
+        t.row(vec![
+            "edge gather+norm".into(),
+            n.to_string(),
+            fmt_f(m * 1e6, 1),
+            fmt_f(sd * 1e6, 1),
+        ]);
+    }
+
+    // graph build + Welsh-Powell at n=40 (the per-step DAPD cost)
+    for n in [20usize, 40] {
+        let scores: Vec<f32> = (0..n * n).map(|_| rng.f64() as f32).collect();
+        let prio: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+        let (m, sd) = time_it(
+            || {
+                let g = DepGraph::from_scores(n, |i, j| scores[i * n + j], 0.7);
+                std::hint::black_box(g.welsh_powell_set(&prio));
+            },
+            20,
+            200,
+        );
+        t.row(vec![
+            "graph build + WP set".into(),
+            n.to_string(),
+            fmt_f(m * 1e6, 1),
+            fmt_f(sd * 1e6, 1),
+        ]);
+    }
+
+    // full decode on the mock (all strategy machinery, no PJRT)
+    let mock = MockModel::new(4, 68, 28, 92);
+    let prompts: Vec<Vec<i32>> = (0..4).map(|i| vec![(i as i32 % 9) + 7; 28]).collect();
+    let (m, sd) = time_it(
+        || {
+            let cfg = DecodeConfig::new(Method::DapdStaged);
+            std::hint::black_box(decode_batch(&mock, &prompts, &cfg).unwrap());
+        },
+        3,
+        20,
+    );
+    t.row(vec![
+        "decode_batch mock b4 L68".into(),
+        "-".into(),
+        fmt_f(m * 1e6, 1),
+        fmt_f(sd * 1e6, 1),
+    ]);
+
+    // one real forward pass, when artifacts exist
+    if let Ok(engine) = std::panic::catch_unwind(common::engine) {
+        let model = engine.model_for("sim-llada", 4, engine.meta.gen_len).unwrap();
+        let tokens = vec![1i32; 4 * model.seq_len()];
+        let (m, sd) = time_it(
+            || {
+                std::hint::black_box(model.forward(&tokens).unwrap());
+            },
+            3,
+            20,
+        );
+        t.row(vec![
+            "PJRT forward b4 L68".into(),
+            "-".into(),
+            fmt_f(m * 1e6, 1),
+            fmt_f(sd * 1e6, 1),
+        ]);
+    }
+
+    t.print();
+    println!("(forward pass should dominate every graph op by >=100x — the");
+    println!(" paper's 'negligible graph overhead' claim, quantified)");
+}

@@ -1,0 +1,104 @@
+//! Tables 1, 9, 10: MRF validation — attention as a dependency signal.
+//!
+//! Table 1: overall AUC / edge-to-non-edge ratio / OVR (last-2 layers).
+//! Table 9: the same metrics per decoding step (mean ± sd over paths).
+//! Table 10: layer-selection ablation.
+//!
+//! Paper reference: AUC 0.928, ratio 2.204, OVR 0.04 (30 models x 100
+//! paths on 8-layer RADD toys); this testbed trains 3 seeds.
+
+mod common;
+
+use dapd::eval::mrf::{run_mrf_validation, LayerSel, MrfSummary};
+use dapd::runtime::ArtifactKind;
+use dapd::util::bench::{fmt_f, Table};
+use dapd::util::stats;
+
+fn main() {
+    let engine = common::engine();
+    let paths = common::n_samples(50);
+    let toys: Vec<_> = engine
+        .meta
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == ArtifactKind::Toy && a.batch > 1)
+        .cloned()
+        .collect();
+    assert!(!toys.is_empty(), "no toy artifacts");
+
+    // ---- Table 1 -----------------------------------------------------
+    let mut summaries: Vec<MrfSummary> = Vec::new();
+    for a in &toys {
+        let model = engine.model(&a.name).unwrap();
+        summaries.push(
+            run_mrf_validation(&model, &engine.meta.mrf, a.n_layers, LayerSel::LastK(2), paths, 7)
+                .unwrap(),
+        );
+    }
+    let mut t1 = Table::new(
+        &format!("Table 1: edge detection & degree estimation ({} models x {paths} paths, last-2 layers)",
+                 toys.len()),
+        &["", "AUC", "Ratio (Edge/Non-edge)", "OVR"],
+    );
+    let aucs: Vec<f64> = summaries.iter().map(|s| s.auc).collect();
+    let ratios: Vec<f64> = summaries.iter().map(|s| s.ratio).collect();
+    let ovrs: Vec<f64> = summaries.iter().map(|s| s.ovr).collect();
+    t1.row(vec![
+        "measured".into(),
+        fmt_f(stats::mean(&aucs), 3),
+        fmt_f(stats::mean(&ratios), 3),
+        fmt_f(stats::mean(&ovrs), 3),
+    ]);
+    t1.row(vec!["paper".into(), "0.928".into(), "2.204".into(), "0.04".into()]);
+    t1.print();
+
+    // ---- Table 9: per-step -------------------------------------------
+    let mut t9 = Table::new(
+        "Table 9: metrics across decoding steps (mean +/- sd, model 0)",
+        &["Step", "AUC", "Ratio", "OVR"],
+    );
+    for sm in &summaries[0].per_step {
+        t9.row(vec![
+            sm.step.to_string(),
+            format!("{:.3} +/- {:.2}", sm.auc_mean, sm.auc_sd),
+            format!("{:.2} +/- {:.2}", sm.ratio_mean, sm.ratio_sd),
+            format!("{:.2} +/- {:.2}", sm.ovr_mean, sm.ovr_sd),
+        ]);
+    }
+    t9.print();
+
+    // ---- Table 10: layer ablation ------------------------------------
+    let sels = [
+        LayerSel::LastK(2),
+        LayerSel::LastK(1),
+        LayerSel::LastK(4),
+        LayerSel::All,
+        LayerSel::FirstK(4),
+        LayerSel::FirstK(2),
+        LayerSel::FirstK(1),
+    ];
+    let mut t10 = Table::new(
+        "Table 10: layer-selection ablation (paper: last-2 best, first-1 worst)",
+        &["Layer Selection", "AUC", "Ratio", "OVR"],
+    );
+    for sel in sels {
+        let mut aucs = Vec::new();
+        let mut ratios = Vec::new();
+        let mut ovrs = Vec::new();
+        for a in &toys {
+            let model = engine.model(&a.name).unwrap();
+            let s =
+                run_mrf_validation(&model, &engine.meta.mrf, a.n_layers, sel, paths, 7).unwrap();
+            aucs.push(s.auc);
+            ratios.push(s.ratio);
+            ovrs.push(s.ovr);
+        }
+        t10.row(vec![
+            sel.label(),
+            fmt_f(stats::mean(&aucs), 3),
+            fmt_f(stats::mean(&ratios), 3),
+            fmt_f(stats::mean(&ovrs), 3),
+        ]);
+    }
+    t10.print();
+}

@@ -1,0 +1,73 @@
+//! Open-loop load test: Poisson arrivals against the coordinator, with
+//! latency percentiles and backpressure accounting — the serving-side
+//! stress test behind the Table 6 TPS claims.
+//!
+//!     cargo run --release --example load_test [-- --rate 2.0 --requests 40]
+
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use dapd::coordinator::{Coordinator, Response};
+use dapd::decode::{DecodeConfig, Method};
+use dapd::runtime::Engine;
+use dapd::util::args::Args;
+use dapd::util::rng::Pcg;
+use dapd::util::stats::Summary;
+use dapd::workload::{arrivals::Arrival, EvalSet};
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let rate = args.f64_or("rate", 2.0); // requests/second
+    let n = args.usize_or("requests", 40);
+    let engine: &'static Engine = Box::leak(Box::new(Engine::load(
+        std::path::Path::new(&args.str_or("artifacts", "artifacts")),
+    )?));
+    let model = engine.model_for("sim-llada", 4, engine.meta.gen_len)?;
+    let (coord, _worker) = Coordinator::start(model, Duration::from_millis(4), 64);
+
+    let set = EvalSet::load(&engine.meta, "struct")?;
+    let mut rng = Pcg::new(11);
+    let schedule = Arrival::Poisson { rate }.schedule(n, &mut rng);
+
+    let t0 = Instant::now();
+    let mut pending: Vec<Receiver<Response>> = Vec::new();
+    let mut rejected = 0usize;
+    for (i, &at) in schedule.iter().enumerate() {
+        let now = t0.elapsed().as_secs_f64();
+        if at > now {
+            std::thread::sleep(Duration::from_secs_f64(at - now));
+        }
+        let inst = &set.instances[i % set.len()];
+        match coord.submit(inst.prompt.clone(), DecodeConfig::new(Method::DapdStaged)) {
+            Ok(rx) => pending.push(rx),
+            Err(_) => rejected += 1, // backpressure: queue full
+        }
+    }
+    let mut lat = Summary::new();
+    let mut tokens = 0usize;
+    for rx in pending {
+        let r = rx.recv()?;
+        lat.add(r.latency.as_secs_f64());
+        tokens += r.gen.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\nopen-loop @ {rate} req/s, {n} requests ({rejected} rejected by backpressure)");
+    println!(
+        "completed {} in {wall:.1}s -> {:.2} req/s, {:.1} tok/s",
+        lat.count(),
+        lat.count() as f64 / wall,
+        tokens as f64 / wall
+    );
+    println!(
+        "latency p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  max {:.2}s",
+        lat.p50(),
+        lat.p95(),
+        lat.p99(),
+        lat.max()
+    );
+    println!("{}", coord.metrics.report());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! End-to-end serving demo: coordinator + TCP server + concurrent
+//! clients, with latency/throughput metrics (the deployment the README
+//! architecture diagram describes).
+//!
+//!     cargo run --release --example serve_demo [-- --requests 24]
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use anyhow::Result;
+use dapd::coordinator::Coordinator;
+use dapd::decode::{DecodeConfig, Method};
+use dapd::runtime::Engine;
+use dapd::server::{Client, Server};
+use dapd::util::args::Args;
+use dapd::workload::{scorer, EvalSet};
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let n_requests = args.usize_or("requests", 24);
+    let engine: &'static Engine = Box::leak(Box::new(Engine::load(
+        std::path::Path::new(&args.str_or("artifacts", "artifacts")),
+    )?));
+    let model = engine.model_for("sim-llada", 4, engine.meta.gen_len)?;
+
+    let (coord, _worker) = Coordinator::start(model, Duration::from_millis(5), 256);
+    let server = Server::bind(
+        "127.0.0.1:0",
+        coord.clone(),
+        DecodeConfig::new(Method::DapdStaged),
+    )?;
+    let addr = server.local_addr()?.to_string();
+    let stop = server.stop_handle();
+    let server_thread = std::thread::spawn(move || server.run());
+    println!("serving on {addr}");
+
+    // Mixed workload from three task families, over four client threads.
+    let tasks = ["struct", "multiq", "arith"];
+    let mut handles = Vec::new();
+    for c in 0..4 {
+        let addr = addr.clone();
+        let task = tasks[c % tasks.len()].to_string();
+        let meta = engine.meta.clone();
+        let per_client = n_requests / 4;
+        handles.push(std::thread::spawn(move || -> Result<(usize, f64)> {
+            let set = EvalSet::load(&meta, &task)?.take(per_client);
+            let mut client = Client::connect(&addr)?;
+            let mut correct = 0.0;
+            for inst in &set.instances {
+                let resp = client.request(&inst.prompt, None)?;
+                let gen: Vec<i32> = resp
+                    .get("gen")
+                    .to_i64_vec()
+                    .unwrap_or_default()
+                    .iter()
+                    .map(|&t| t as i32)
+                    .collect();
+                correct += scorer::score(&task, &gen, &inst.expect, &inst.spec);
+            }
+            Ok((set.len(), correct))
+        }));
+    }
+    let mut total = 0;
+    let mut correct = 0.0;
+    for h in handles {
+        let (n, c) = h.join().unwrap()?;
+        total += n;
+        correct += c;
+    }
+
+    println!("\n{}", coord.metrics.report());
+    println!(
+        "served {total} requests, mixed-task accuracy {:.1}%, \
+         mean batch size {:.2} (dynamic batching across clients)",
+        100.0 * correct / total as f64,
+        coord.metrics.mean_batch_size()
+    );
+    assert!(coord.metrics.requests.load(Ordering::Relaxed) as usize >= total);
+
+    stop.store(true, Ordering::SeqCst);
+    server_thread.join().unwrap()?;
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,356 @@
+"""Synthetic corpora for the simulated dLLMs.
+
+Each task family is the structural analogue of one of the paper's
+evaluation suites (see DESIGN.md "Substitutions"):
+
+  arith      -> GSM8K / Math500 (chained intra-answer dependencies)
+  struct     -> HumanEval / MBPP (rigid long-range syntax)
+  constraint -> IFEval (verifiable global output constraints)
+  multiq     -> the Sec. 6 TriviaQA 5-question aggregation
+  pbench-*   -> ParallelBench (copy / reverse / sort / latin / para / w2s)
+
+A generator returns ``(prompt, answer, spec)`` token lists plus a scoring
+spec; the same spec format is consumed by ``rust/src/workload``.  World
+knowledge (the multiq fact table and the paraphrase bijection) is a fixed
+seeded permutation so the model can memorize it during training.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import vocab as V
+
+# Fixed global "world knowledge", memorized by the model during training.
+_WORLD_SEED = 1234
+
+
+def fact_table() -> list[int]:
+    """multiq ground truth: FACT[i] = value index for key i (a bijection)."""
+    rng = np.random.default_rng(_WORLD_SEED)
+    return [int(x) for x in rng.permutation(V.N_KEYS) % V.N_VALS]
+
+
+def para_table() -> list[int]:
+    """paraphrase ground truth: PARA[i] = word index for word i (bijection)."""
+    rng = np.random.default_rng(_WORLD_SEED + 1)
+    return [int(x) for x in rng.permutation(V.N_WORDS)]
+
+
+_FACT = fact_table()
+_PARA = para_table()
+
+# ---------------------------------------------------------------------------
+# Task generators.  All answers are <= GEN_LEN-1 tokens (room for EOS).
+# ---------------------------------------------------------------------------
+
+PROMPT_LEN = 28  # multiq needs 26; everything else is shorter
+GEN_LEN = 40
+SEQ_LEN = PROMPT_LEN + GEN_LEN
+
+
+def gen_arith(rng: np.random.Generator):
+    """Chained modular arithmetic: the math-reasoning analogue.
+
+    prompt:  <arith> a = 3 ; b = 5 ; c = a + b ; ? c
+    answer:  c = 3 + 5 = 8 <eos>         (values mod 10)
+    Multi-hop chains substitute previously derived values, so the answer
+    tokens form a left-to-right dependency chain like a worked solution.
+    """
+    n_hops = int(rng.integers(1, 3))  # 1 or 2 derived vars
+    v0, v1 = int(rng.integers(0, 10)), int(rng.integers(0, 10))
+    names = [int(x) for x in rng.choice(V.N_VARS, size=2 + n_hops, replace=False)]
+    prompt = [V.T_ARITH,
+              V.var(names[0]), V.EQ, V.digit(v0), V.SEMI,
+              V.var(names[1]), V.EQ, V.digit(v1), V.SEMI]
+    values = [v0, v1]
+    for h in range(n_hops):
+        # derived var = previous var + one of the base vars
+        lhs = names[2 + h]
+        a_idx = 2 + h - 1 if h > 0 else 0
+        b_idx = 1
+        prompt += [V.var(lhs), V.EQ, V.var(names[a_idx]), V.PLUS,
+                   V.var(names[b_idx]), V.SEMI]
+        values.append((values[a_idx] + values[b_idx]) % 10)
+    ask = 2 + n_hops - 1
+    prompt += [V.QM, V.var(names[ask])]
+    # Worked answer: final equation with substituted values.
+    h = n_hops - 1
+    a_idx = 2 + h - 1 if h > 0 else 0
+    answer = [V.var(names[ask]), V.EQ, V.digit(values[a_idx]), V.PLUS,
+              V.digit(values[1]), V.EQ, V.digit(values[ask])]
+    spec = {"task": "arith", "final": values[ask]}
+    return prompt, answer, spec
+
+
+def render_struct(keys, vals, sep_tok):
+    answer = [V.LBRACK]
+    for i, (k, d) in enumerate(zip(keys, vals)):
+        if i:
+            answer.append(sep_tok)
+        answer += [V.key(k), V.COLON, V.digit(d)]
+    answer.append(V.RBRACK)
+    return answer
+
+
+def gen_struct(rng: np.random.Generator):
+    """Code-like structured output: the HumanEval/MBPP analogue.
+
+    prompt:  <struct> K3 7 K1 2 K9 5
+    answer:  [ K3 : 7 , K1 : 2 , K9 : 5 ] <eos>      (comma dialect)
+         or  [ K3 : 7 ; K1 : 2 ; K9 : 5 ] <eos>      (semicolon dialect)
+
+    The separator dialect is sampled uniformly at train time, so each
+    separator position is marginally ambiguous while all separators in
+    one answer are jointly constrained to agree — the paper's
+    joint-marginal mismatch, in miniature.  Scorers accept either
+    dialect but require internal consistency.
+    """
+    n = int(rng.integers(2, 5))
+    keys = [int(x) for x in rng.choice(V.N_KEYS, size=n, replace=False)]
+    vals = [int(rng.integers(0, 10)) for _ in range(n)]
+    prompt = [V.T_STRUCT]
+    for k, d in zip(keys, vals):
+        prompt += [V.key(k), V.digit(d)]
+    sep = V.COMMA if rng.integers(2) == 0 else V.SEMI
+    answer = render_struct(keys, vals, sep)
+    spec = {"task": "struct", "keys": keys, "vals": vals}
+    return prompt, answer, spec
+
+
+def gen_constraint(rng: np.random.Generator):
+    """Exact-count instruction following: the IFEval analogue.
+
+    prompt:  <const> W4 5      answer: W4 W4 W4 W4 W4 <eos>
+    """
+    w = int(rng.integers(0, V.N_WORDS))
+    d = int(rng.integers(2, 7))
+    prompt = [V.T_CONST, V.word(w), V.digit(d)]
+    answer = [V.word(w)] * d
+    spec = {"task": "constraint", "word": w, "count": d}
+    return prompt, answer, spec
+
+
+def gen_multiq(rng: np.random.Generator, n_q: int = 5):
+    """Bundled independent fact questions: the Sec. 6 TriviaQA analogue.
+
+    prompt:  <mq> [ 1 ] K7 ? [ 2 ] K2 ? ... (n_q questions)
+    answer:  [ 1 ] K7 : V{FACT[7]} <sep> [ 2 ] ... <eos>
+    The repeated key token inside each answer segment creates intra-segment
+    coupling, while segments are mutually independent given the prompt.
+    """
+    keys = [int(x) for x in rng.choice(V.N_KEYS, size=n_q, replace=False)]
+    prompt = [V.T_MQ]
+    for i, k in enumerate(keys):
+        prompt += [V.LBRACK, V.digit(i + 1), V.RBRACK, V.key(k), V.QM]
+    answer: list[int] = []
+    for i, k in enumerate(keys):
+        # Each segment independently picks one of two equal-length
+        # phrasings, so its bracket/equality tokens are marginally 50/50
+        # but jointly coupled *within* the segment — while segments stay
+        # mutually independent.  This is the structure the Sec. 6
+        # analysis needs (independent questions, internal coupling).
+        if rng.integers(2) == 0:
+            answer += [V.LBRACK, V.digit(i + 1), V.RBRACK,
+                       V.key(k), V.COLON, V.val(_FACT[k])]
+        else:
+            answer += [V.SEMI, V.digit(i + 1), V.SEMI,
+                       V.key(k), V.EQ, V.val(_FACT[k])]
+        if i + 1 < n_q:
+            answer.append(V.SEP)
+    spec = {"task": "multiq", "keys": keys,
+            "answers": [_FACT[k] for k in keys]}
+    return prompt, answer, spec
+
+
+def _gen_list(rng, marker, transform, task):
+    n = int(rng.integers(4, 7))
+    items = [int(x) for x in rng.integers(0, V.N_WORDS, size=n)]
+    prompt = [marker] + [V.word(w) for w in items]
+    out = transform(items)
+    answer = [V.LBRACK] + [V.word(w) for w in out] + [V.RBRACK]
+    spec = {"task": task, "items": items, "expect_items": out}
+    return prompt, answer, spec
+
+
+def gen_copy(rng):
+    """ParallelBench 'waiting line: copy' — weak inter-token coupling."""
+    return _gen_list(rng, V.T_COPY, lambda xs: list(xs), "pbench-copy")
+
+
+def gen_reverse(rng):
+    """ParallelBench 'waiting line: reverse'."""
+    return _gen_list(rng, V.T_REV, lambda xs: list(reversed(xs)), "pbench-rev")
+
+
+def gen_sort(rng):
+    """ParallelBench 'waiting line: sort' — global coupling (rank depends
+    on every other element)."""
+    return _gen_list(rng, V.T_SORT, lambda xs: sorted(xs), "pbench-sort")
+
+
+def gen_latin(rng: np.random.Generator):
+    """Order-3 Latin-square completion: the ParallelBench puzzle analogue.
+
+    prompt gives row 1 and cell (2,1); completion is then unique.
+    answer: remaining 5 cells in row-major order, over digits 1..3.
+    """
+    perm = [int(x) for x in rng.permutation(3)]
+    r1 = [p + 1 for p in perm]
+    # choose row 2 as a derangement-shift of row 1; cell (2,1) pins which
+    r2 = [r1[1], r1[2], r1[0]] if rng.integers(2) == 0 else [r1[2], r1[0], r1[1]]
+    r3 = [6 - a - b for a, b in zip(r1, r2)]
+    prompt = [V.T_LATIN] + [V.digit(d) for d in r1] + [V.digit(r2[0])]
+    answer = [V.digit(d) for d in r2[1:] + r3]
+    spec = {"task": "pbench-latin", "row1": r1, "r2c1": r2[0],
+            "expect": r2[1:] + r3}
+    return prompt, answer, spec
+
+
+def gen_para(rng: np.random.Generator):
+    """Learned word-to-word rewriting: the ParallelBench paraphrase analogue."""
+    n = int(rng.integers(3, 6))
+    items = [int(x) for x in rng.choice(V.N_WORDS, size=n, replace=False)]
+    prompt = [V.T_PARA] + [V.word(w) for w in items]
+    out = [_PARA[w] for w in items]
+    answer = [V.word(w) for w in out]
+    spec = {"task": "pbench-para", "items": items, "expect_items": out}
+    return prompt, answer, spec
+
+
+def gen_w2s(rng: np.random.Generator):
+    """Template expansion: the ParallelBench words-to-sentence analogue.
+
+    answer = x y <sep> y x where (x,y) is either prompt order, sampled
+    at train time.  Every answer position is marginally 50/50 between
+    the two words while the whole answer is one joint choice — the
+    hardest coupling pattern for parallel decoding (like ParallelBench's
+    paraphrase tasks).
+    """
+    a, b = (int(x) for x in rng.choice(V.N_WORDS, size=2, replace=False))
+    prompt = [V.T_W2S, V.word(a), V.word(b)]
+    x, y = (a, b) if rng.integers(2) == 0 else (b, a)
+    answer = [V.word(x), V.word(y), V.SEP, V.word(y), V.word(x)]
+    spec = {"task": "pbench-w2s", "a": a, "b": b}
+    return prompt, answer, spec
+
+
+GENERATORS = {
+    "arith": gen_arith,
+    "struct": gen_struct,
+    "constraint": gen_constraint,
+    "multiq": gen_multiq,
+    "pbench-copy": gen_copy,
+    "pbench-rev": gen_reverse,
+    "pbench-sort": gen_sort,
+    "pbench-latin": gen_latin,
+    "pbench-para": gen_para,
+    "pbench-w2s": gen_w2s,
+}
+
+# Sampling mix during training (multiq upweighted: it must memorize facts).
+TRAIN_MIX = [
+    ("arith", 2.0), ("struct", 2.0), ("constraint", 1.0), ("multiq", 3.0),
+    ("pbench-copy", 1.0), ("pbench-rev", 1.0), ("pbench-sort", 1.5),
+    ("pbench-latin", 1.0), ("pbench-para", 1.5), ("pbench-w2s", 1.0),
+]
+
+
+def pack_example(prompt, answer, eos_fill: bool, gen_len: int = GEN_LEN,
+                 prompt_len: int = PROMPT_LEN):
+    """Pack (prompt, answer) into a fixed [SEQ_LEN] row.
+
+    Prompt is right-padded with PAD to ``prompt_len``.  Answer is
+    terminated with EOS and padded to ``gen_len`` with EOS (LLaDA-style,
+    ``eos_fill=True`` — reproduces EOS overflow) or with FILL after a
+    single EOS (Dream-style).
+    Returns (tokens[SEQ_LEN], resp_mask[SEQ_LEN]) where resp_mask marks
+    positions eligible for diffusion masking (the generation window).
+    """
+    assert len(prompt) <= prompt_len, f"prompt too long: {len(prompt)}"
+    assert len(answer) < gen_len, f"answer too long: {len(answer)}"
+    row = list(prompt) + [V.PAD] * (prompt_len - len(prompt))
+    ans = list(answer) + [V.EOS]
+    pad_tok = V.EOS if eos_fill else V.FILL
+    ans += [pad_tok] * (gen_len - len(ans))
+    mask = [0] * prompt_len + [1] * gen_len
+    return row + ans, mask
+
+
+def training_batch(rng: np.random.Generator, batch: int, eos_fill: bool,
+                   gen_len: int = GEN_LEN, prompt_len: int = PROMPT_LEN):
+    """Sample a [batch, SEQ_LEN] tokens array + response mask from the mix."""
+    names = [n for n, _ in TRAIN_MIX]
+    weights = np.array([w for _, w in TRAIN_MIX])
+    weights = weights / weights.sum()
+    toks = np.zeros((batch, prompt_len + gen_len), np.int32)
+    rmask = np.zeros((batch, prompt_len + gen_len), np.int32)
+    for b in range(batch):
+        name = names[int(rng.choice(len(names), p=weights))]
+        prompt, answer, _ = GENERATORS[name](rng)
+        row, m = pack_example(prompt, answer, eos_fill, gen_len, prompt_len)
+        toks[b] = row
+        rmask[b] = m
+    return toks, rmask
+
+
+def eval_set(task: str, n: int, seed: int, gen_len: int = GEN_LEN,
+             prompt_len: int = PROMPT_LEN):
+    """Deterministic eval instances for a task, exported to rust."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        prompt, answer, spec = GENERATORS[task](rng)
+        padded = list(prompt) + [V.PAD] * (prompt_len - len(prompt))
+        out.append({"prompt": padded, "expect": list(answer), "spec": spec})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MRF toy dataset (Sec. 3.2): X1..X5 ~ U{0,1,2}, Y_i = (X_i + X_{i+1}) mod 3.
+# Sequence layout: [X1 X2 X3 X4 X5 Y1 Y2 Y3 Y4], vocab {0,1,2} + MASK(=3).
+# ---------------------------------------------------------------------------
+
+MRF_LEN = 9
+MRF_VOCAB = 4          # values 0,1,2 plus mask id 3
+MRF_MASK_ID = 3
+
+
+def mrf_sample(rng: np.random.Generator, batch: int) -> np.ndarray:
+    x = rng.integers(0, 3, size=(batch, 5))
+    y = (x[:, :4] + x[:, 1:]) % 3
+    return np.concatenate([x, y], axis=1).astype(np.int32)
+
+
+def mrf_true_edges() -> list[tuple[int, int]]:
+    """Ground-truth MRF edges: four triangles {X_i, X_{i+1}, Y_i}."""
+    edges = set()
+    for i in range(4):
+        tri = [i, i + 1, 5 + i]
+        for a in range(3):
+            for b in range(a + 1, 3):
+                edges.add((min(tri[a], tri[b]), max(tri[a], tri[b])))
+    return sorted(edges)
+
+
+def mrf_true_degrees() -> list[int]:
+    deg = [0] * MRF_LEN
+    for a, b in mrf_true_edges():
+        deg[a] += 1
+        deg[b] += 1
+    return deg
+
+
+if __name__ == "__main__":
+    import sys
+
+    rng = np.random.default_rng(0)
+    if "--show-mrf" in sys.argv:
+        print("MRF edges:", mrf_true_edges())
+        print("MRF degrees:", mrf_true_degrees())
+        print("sample:", mrf_sample(rng, 2))
+        sys.exit(0)
+    for name, gen in GENERATORS.items():
+        p, a, s = gen(rng)
+        print(f"[{name}] prompt: {V.detok(p)}")
+        print(f"[{name}] answer: {V.detok(a)}")

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: fused multi-head attention that also emits the
+attention probabilities.
+
+DAPD's whole point is that the dependency signal (attention) is reused
+from the forward pass, so the kernel must materialize the probability
+matrix in addition to the context — a flash-attention-style two-pass
+running softmax would discard it.  Instead we tile over (batch, head) and
+keep the full (Lq x Lk) score tile resident in VMEM:
+
+  * grid = (B, H): one program instance per (batch, head) pair;
+  * BlockSpec keeps q/k/v [L, Dh] tiles and the [L, L] score tile in VMEM.
+    For the model sizes served here (L <= 256, Dh <= 32) the footprint is
+    L*Dh*3*4 + L*L*4 bytes < 300 KiB, well under the ~16 MiB VMEM budget —
+    see DESIGN.md "Hardware adaptation" for the roofline estimate;
+  * the Lq x Lk matmul and the probs @ v matmul are MXU-shaped
+    (contraction over Dh and Lk respectively);
+  * softmax is computed in f32 with the usual max-subtraction.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (numerically identical).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, ctx_ref, probs_ref):
+    """One (batch, head) tile: full-L attention in VMEM."""
+    q = q_ref[0, 0]          # [L, Dh]
+    k = k_ref[0, 0]          # [L, Dh]
+    v = v_ref[0, 0]          # [L, Dh]
+    bias = bias_ref[0, 0]    # [L, L]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    # MXU matmul: [L, Dh] @ [Dh, L] -> [L, L] score tile (f32 accumulate).
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + bias
+    # Numerically-stable row softmax, all in VMEM.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / z
+    probs_ref[0, 0] = probs.astype(probs_ref.dtype)
+    # Second MXU matmul: [L, L] @ [L, Dh] -> context.
+    ctx_ref[0, 0] = jnp.dot(probs, v,
+                            preferred_element_type=jnp.float32
+                            ).astype(ctx_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def attention(q, k, v, bias=None):
+    """Fused MHA returning (context, probs); Pallas, interpret mode.
+
+    Same contract as ``ref.attention_ref``: q/k/v [B, H, L, Dh], optional
+    additive bias [B, 1, L, L] or [B, H, L, L].
+    """
+    b, h, l, dh = q.shape
+    if bias is None:
+        bias = jnp.zeros((b, 1, l, l), q.dtype)
+    if bias.shape[1] == 1 and h > 1:
+        bias = jnp.broadcast_to(bias, (b, h, l, l))
+
+    blk_qkv = pl.BlockSpec((1, 1, l, dh), lambda i, j: (i, j, 0, 0))
+    blk_ll = pl.BlockSpec((1, 1, l, l), lambda i, j: (i, j, 0, 0))
+    ctx, probs = pl.pallas_call(
+        _attn_kernel,
+        grid=(b, h),
+        in_specs=[blk_qkv, blk_qkv, blk_qkv, blk_ll],
+        out_specs=[blk_qkv, blk_ll],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, l, dh), q.dtype),
+            jax.ShapeDtypeStruct((b, h, l, l), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, bias)
+    return ctx, probs

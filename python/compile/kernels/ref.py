@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in this package has an oracle here with an identical
+signature; ``python/tests/test_kernels.py`` sweeps shapes/dtypes with
+hypothesis and asserts allclose between kernel and oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, bias=None):
+    """Multi-head attention returning (context, probs).
+
+    q, k, v: [B, H, L, Dh].  bias: optional [B, 1|H, L, L] additive logits
+    bias (used for PAD masking).  Returns context [B, H, L, Dh] and probs
+    [B, H, L, L].
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhld,bhmd->bhlm", q, k) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype))
+    if bias is not None:
+        scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhlm,bhmd->bhld", probs, v)
+    return ctx, probs
+
+
+def edge_scores_ref(attn, masked):
+    """Symmetrized, masked-pair edge scores + proxy degrees.
+
+    attn:   [B, L, L] layer/head-averaged attention (rows ~ sum to 1).
+    masked: [B, L] float {0,1}; 1 where the position is still [M].
+
+    Returns (scores [B, L, L], degrees [B, L]) where
+      scores[b,i,j] = 0.5*(a_ij + a_ji) * masked_i * masked_j, zero diag;
+      degrees[b,i]  = sum_j scores[b,i,j]   (the paper's proxy degree).
+    """
+    b, l, _ = attn.shape
+    sym = 0.5 * (attn + jnp.swapaxes(attn, 1, 2))
+    pair = masked[:, :, None] * masked[:, None, :]
+    eye = jnp.eye(l, dtype=attn.dtype)[None]
+    scores = sym * pair * (1.0 - eye)
+    degrees = scores.sum(axis=-1)
+    return scores, degrees

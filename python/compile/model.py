@@ -1,0 +1,243 @@
+"""L2: the masked-diffusion transformer (LLaDA/RADD-style), pure JAX.
+
+Bidirectional (no causal mask) pre-LN transformer with learned positional
+embeddings and a GELU MLP.  Like RADD/LLaDA, there is no explicit time
+conditioning: the mask pattern itself carries the diffusion state.
+
+The forward pass exposes exactly what the Rust coordinator needs:
+
+  * ``serving_forward``  -> (logits, attn_avg, edge_scores, degrees)
+      attn_avg averages heads over the final 30% of layers (the paper's
+      Sec. 4.3 choice) and the L1 ``edge_scores`` kernel pre-computes the
+      symmetrized masked pair scores + proxy degrees on-device, so L3
+      only does thresholding + Welsh-Powell.
+  * ``toy_forward``      -> (logits, attn_layers[B, n_layers, L, L])
+      per-layer head-averaged attention for the Sec. 3.2 MRF validation
+      and the Table 10 layer-selection ablation.
+
+``use_pallas=True`` routes the attention core and edge computation
+through the L1 Pallas kernels (what the AOT artifacts use);
+``use_pallas=False`` uses the jnp oracles (what the trainer uses — the
+two paths are asserted numerically identical in python/tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref as kref
+from .kernels.attention import attention as pallas_attention
+from .kernels.edge_scores import edge_scores as pallas_edge_scores
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + decoding-relevant constants for one model variant."""
+
+    name: str
+    vocab: int
+    seq_len: int           # maximum (training) sequence length
+    d_model: int
+    n_heads: int
+    n_layers: int
+    mlp_ratio: int = 4
+    mask_id: int = 1       # vocab id of [M]
+    pad_id: int = 0        # vocab id of <pad> (key-masked in attention)
+    # fraction of final layers whose attention feeds the dependency graph
+    attn_layer_frac: float = 0.3
+    # init scale for W_q/W_k: at 0.02 the q.k logits start ~1e-2 and the
+    # softmax is uniform ("lazy attention") — fine for the rich serving
+    # corpus, but the mod-3 toy (a grokking-style task) needs a larger
+    # scale to get first-order attention gradients within the CPU budget.
+    attn_init_scale: float = 0.02
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def graph_layers(self) -> list[int]:
+        """Indices of the final ceil(frac * n_layers) layers (Sec. 4.3)."""
+        k = max(1, math.ceil(self.attn_layer_frac * self.n_layers))
+        return list(range(self.n_layers - k, self.n_layers))
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(rng: np.random.Generator, cfg: ModelConfig) -> dict:
+    """Gaussian init scaled like GPT-2 (0.02, residual-scaled output projs)."""
+    d, v, l = cfg.d_model, cfg.vocab, cfg.seq_len
+
+    def norm(*shape, scale=0.02):
+        return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+    res_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    params = {
+        "tok_emb": norm(v, d),
+        "pos_emb": norm(l, d),
+        "ln_f_g": jnp.ones((d,), jnp.float32),
+        "ln_f_b": jnp.zeros((d,), jnp.float32),
+        "head": norm(d, v),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "ln1_g": jnp.ones((d,), jnp.float32),
+            "ln1_b": jnp.zeros((d,), jnp.float32),
+            "wq": norm(d, d, scale=cfg.attn_init_scale),
+            "wk": norm(d, d, scale=cfg.attn_init_scale),
+            "wv": norm(d, d),
+            "wo": norm(d, d, scale=res_scale),
+            "ln2_g": jnp.ones((d,), jnp.float32),
+            "ln2_b": jnp.zeros((d,), jnp.float32),
+            "w1": norm(d, cfg.mlp_ratio * d),
+            "b1": jnp.zeros((cfg.mlp_ratio * d,), jnp.float32),
+            "w2": norm(cfg.mlp_ratio * d, d, scale=res_scale),
+            "b2": jnp.zeros((d,), jnp.float32),
+        })
+    return params
+
+
+def params_to_flat(params: dict) -> dict[str, np.ndarray]:
+    """Flatten to name->array (npz caching)."""
+    flat = {k: np.asarray(v) for k, v in params.items() if k != "layers"}
+    for i, layer in enumerate(params["layers"]):
+        for k, v in layer.items():
+            flat[f"layers.{i}.{k}"] = np.asarray(v)
+    return flat
+
+
+def params_from_flat(flat: dict, cfg: ModelConfig) -> dict:
+    params = {k: jnp.asarray(v) for k, v in flat.items() if "." not in k}
+    params["layers"] = []
+    for i in range(cfg.n_layers):
+        layer = {}
+        prefix = f"layers.{i}."
+        for k, v in flat.items():
+            if k.startswith(prefix):
+                layer[k[len(prefix):]] = jnp.asarray(v)
+        params["layers"].append(layer)
+    return params
+
+
+def count_params(params: dict) -> int:
+    return sum(int(np.prod(v.shape)) for v in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def forward(params, cfg: ModelConfig, tokens, use_pallas: bool,
+            seq_len: int | None = None):
+    """Backbone forward.
+
+    tokens: [B, L] int32 with L == seq_len (defaults to cfg.seq_len; a
+    shorter L slices the positional table, used for the Table 7 length
+    sweep).  Returns (logits [B, L, V], attns [n_layers, B, L, L]) with
+    attns head-averaged per layer.
+    """
+    l = seq_len or cfg.seq_len
+    b = tokens.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :l]
+    # Key-side PAD mask: PAD positions receive no attention mass.
+    if cfg.pad_id >= 0:
+        pad = tokens == cfg.pad_id
+        bias = jnp.where(pad[:, None, None, :], -1e9, 0.0)
+        bias = bias.astype(jnp.float32)
+    else:
+        bias = jnp.zeros((b, 1, 1, l), jnp.float32)
+    bias = jnp.broadcast_to(bias, (b, 1, l, l))
+
+    attn_fn = pallas_attention if use_pallas else kref.attention_ref
+    attns = []
+    for layer in params["layers"]:
+        y = _layer_norm(x, layer["ln1_g"], layer["ln1_b"])
+        q = (y @ layer["wq"]).reshape(b, l, h, dh).transpose(0, 2, 1, 3)
+        k = (y @ layer["wk"]).reshape(b, l, h, dh).transpose(0, 2, 1, 3)
+        v = (y @ layer["wv"]).reshape(b, l, h, dh).transpose(0, 2, 1, 3)
+        ctx, probs = attn_fn(q, k, v, bias)
+        attns.append(probs.mean(axis=1))  # head-average -> [B, L, L]
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, l, cfg.d_model)
+        x = x + ctx @ layer["wo"]
+        y = _layer_norm(x, layer["ln2_g"], layer["ln2_b"])
+        y = jax.nn.gelu(y @ layer["w1"] + layer["b1"]) @ layer["w2"]
+        x = x + y + layer["b2"]
+    x = _layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    logits = x @ params["head"]
+    return logits, jnp.stack(attns)  # [n_layers, B, L, L]
+
+
+def serving_forward(params, cfg: ModelConfig, tokens, use_pallas: bool = True,
+                    seq_len: int | None = None):
+    """The AOT-exported request-path function.
+
+    Returns (logits, attn_avg, edge_scores, degrees):
+      attn_avg   [B, L, L]  head-avg over the final-30% layers,
+      edge_scores[B, L, L]  symmetrized masked pair scores (L1 kernel),
+      degrees    [B, L]     proxy degrees d~_i.
+    """
+    logits, attns = forward(params, cfg, tokens, use_pallas, seq_len)
+    sel = cfg.graph_layers()
+    attn_avg = attns[jnp.asarray(sel)].mean(axis=0)
+    masked = (tokens == cfg.mask_id).astype(attn_avg.dtype)
+    edge_fn = pallas_edge_scores if use_pallas else kref.edge_scores_ref
+    scores, degrees = edge_fn(attn_avg, masked)
+    return logits, attn_avg, scores, degrees
+
+
+def toy_forward(params, cfg: ModelConfig, tokens, use_pallas: bool = True):
+    """The MRF-validation export: per-layer attention for layer ablations.
+
+    Returns (logits [B, L, V], attn_layers [B, n_layers, L, L]).
+    """
+    logits, attns = forward(params, cfg, tokens, use_pallas)
+    return logits, attns.transpose(1, 0, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# Model zoo (see DESIGN.md substitutions)
+# ---------------------------------------------------------------------------
+
+def model_zoo() -> dict[str, ModelConfig]:
+    from . import datasets as D
+    from . import vocab as V
+
+    return {
+        # Model sizes are calibrated to the single-core CPU testbed (see
+        # DESIGN.md): ~250k params trains in minutes while still learning
+        # every task family and exhibiting structured attention.
+        # LLaDA stand-in: deeper, EOS-filled training (EOS overflow emerges)
+        "sim-llada": ModelConfig(
+            name="sim-llada", vocab=V.VOCAB_SIZE, seq_len=D.SEQ_LEN,
+            d_model=64, n_heads=4, n_layers=5,
+            mask_id=V.MASK, pad_id=V.PAD),
+        # Dream stand-in: shallower, FILL-padded training
+        "sim-dream": ModelConfig(
+            name="sim-dream", vocab=V.VOCAB_SIZE, seq_len=D.SEQ_LEN,
+            d_model=64, n_heads=4, n_layers=4,
+            mask_id=V.MASK, pad_id=V.PAD),
+        # Sec 3.2 toy: 8 transformer blocks like the paper's DiT/RADD setup.
+        # attn_init_scale breaks the lazy-attention plateau of the mod-3
+        # constraint task (a grokking-style objective) within CPU budget.
+        "mrf-toy": ModelConfig(
+            name="mrf-toy", vocab=D.MRF_VOCAB, seq_len=D.MRF_LEN,
+            d_model=32, n_heads=4, n_layers=8,
+            mask_id=D.MRF_MASK_ID, pad_id=-1,  # toy has no PAD token
+            attn_init_scale=0.15),
+    }

@@ -1,0 +1,148 @@
+"""Build-time trainer for the simulated dLLMs (never on the request path).
+
+Implements the LLaDA/MDM objective: sample t ~ U(0,1), mask each
+response-region token independently with probability t, and minimize the
+1/t-weighted masked cross-entropy
+
+    L = -E_{t, x_t} [ (1/t) * sum_{i: x_t^i = [M]} log p_theta(x_0^i | x_t) ]
+
+Prompt positions are never masked (instruction-tuning convention), so the
+model learns conditional marginals for the generation window only —
+exactly the quantity DAPD decodes from.
+
+Optimizer is a hand-rolled AdamW (optax is not available in this image);
+cosine LR with warmup.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets as D
+from .model import ModelConfig, forward, init_params
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8,
+                 weight_decay=0.01):
+    step = state["step"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                     state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+
+    def upd(p, m_, v_):
+        update = (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+        return p - lr * (update + weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}
+
+
+def lr_schedule(step, base_lr, warmup, total):
+    warm = base_lr * (step + 1) / warmup
+    progress = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+    cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# MDM loss
+# ---------------------------------------------------------------------------
+
+def mdm_loss(params, cfg: ModelConfig, x0, resp_mask, t, noise):
+    """LLaDA masked-diffusion loss for one batch.
+
+    x0: [B, L] clean tokens; resp_mask: [B, L] {0,1} maskable region;
+    t: [B] masking rates; noise: [B, L] uniforms for mask sampling.
+    """
+    masked = (noise < t[:, None]) & (resp_mask > 0)
+    xt = jnp.where(masked, cfg.mask_id, x0)
+    logits, _ = forward(params, cfg, xt, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_logp = jnp.take_along_axis(logp, x0[..., None], axis=-1)[..., 0]
+    weight = masked.astype(jnp.float32) / jnp.maximum(t[:, None], 1e-3)
+    # normalize by response length like the LLaDA reference implementation
+    denom = jnp.maximum(resp_mask.sum(), 1)
+    return -(tok_logp * weight).sum() / denom
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def train_step(params, opt_state, cfg: ModelConfig, x0, resp_mask, t, noise,
+               lr):
+    loss, grads = jax.value_and_grad(mdm_loss)(params, cfg, x0, resp_mask,
+                                               t, noise)
+    params, opt_state = adamw_update(params, grads, opt_state, lr)
+    return params, opt_state, loss
+
+
+# ---------------------------------------------------------------------------
+# Training loops
+# ---------------------------------------------------------------------------
+
+def train_serving_model(cfg: ModelConfig, *, eos_fill: bool, steps: int,
+                        batch: int = 32, base_lr: float = 3e-3,
+                        seed: int = 0, log_every: int = 200):
+    """Train one simulated dLLM on the mixed synthetic corpus."""
+    rng = np.random.default_rng(seed)
+    params = init_params(rng, cfg)
+    opt_state = adamw_init(params)
+    t0 = time.time()
+    loss_hist = []
+    for step in range(steps):
+        toks, rmask = D.training_batch(rng, batch, eos_fill=eos_fill)
+        t = rng.uniform(0.02, 1.0, size=batch).astype(np.float32)
+        noise = rng.uniform(size=toks.shape).astype(np.float32)
+        lr = lr_schedule(jnp.asarray(step, jnp.float32), base_lr,
+                         warmup=200, total=steps)
+        params, opt_state, loss = train_step(
+            params, opt_state, cfg, jnp.asarray(toks), jnp.asarray(rmask),
+            jnp.asarray(t), jnp.asarray(noise), lr)
+        if step % log_every == 0 or step == steps - 1:
+            loss_hist.append((step, float(loss)))
+            rate = (step + 1) / (time.time() - t0)
+            print(f"[{cfg.name}] step {step:5d} loss {float(loss):7.4f} "
+                  f"({rate:.1f} steps/s)", flush=True)
+    return params, loss_hist
+
+
+def train_mrf_toy(cfg: ModelConfig, *, steps: int, batch: int = 192,
+                  base_lr: float = 2e-3, seed: int = 0, log_every: int = 500):
+    """Train one Sec-3.2 toy MDM (all 9 positions maskable, no prompt)."""
+    rng = np.random.default_rng(seed)
+    params = init_params(rng, cfg)
+    opt_state = adamw_init(params)
+    rmask = np.ones((batch, cfg.seq_len), np.int32)
+    t0 = time.time()
+    loss_hist = []
+    for step in range(steps):
+        toks = D.mrf_sample(rng, batch)
+        t = rng.uniform(0.02, 1.0, size=batch).astype(np.float32)
+        noise = rng.uniform(size=toks.shape).astype(np.float32)
+        lr = lr_schedule(jnp.asarray(step, jnp.float32), base_lr,
+                         warmup=100, total=steps)
+        params, opt_state, loss = train_step(
+            params, opt_state, cfg, jnp.asarray(toks), jnp.asarray(rmask),
+            jnp.asarray(t), jnp.asarray(noise), lr)
+        if step % log_every == 0 or step == steps - 1:
+            loss_hist.append((step, float(loss)))
+            rate = (step + 1) / (time.time() - t0)
+            print(f"[{cfg.name} s{seed}] step {step:5d} loss "
+                  f"{float(loss):7.4f} ({rate:.1f} steps/s)", flush=True)
+    return params, loss_hist

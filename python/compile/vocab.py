@@ -1,0 +1,126 @@
+"""Shared vocabulary for the synthetic serving corpus.
+
+The same token-id table is exported to ``artifacts/metadata.json`` so the
+Rust coordinator and the Python trainer agree exactly on tokenization.
+dLLM substitution note (see DESIGN.md): LLaDA/Dream use a 126k/152k BPE
+vocab; our simulated models use a closed ~100-token vocabulary because the
+tasks are synthetic.  Nothing in DAPD depends on vocabulary size beyond
+softmax cost.
+"""
+
+from __future__ import annotations
+
+# --- special tokens -------------------------------------------------------
+PAD = 0      # inert padding (prompt right-pad)
+MASK = 1     # the [M] diffusion mask token
+EOS = 2      # end of answer; LLaDA-style models pad answers with EOS
+BOS = 3
+SEP = 4      # generic separator inside answers
+QM = 5       # "?" question marker
+FILL = 6     # neutral filler: Dream-style models pad answers with FILL
+
+LBRACK = 7
+RBRACK = 8
+COLON = 9
+COMMA = 10
+PLUS = 11
+EQ = 12
+SEMI = 13
+
+# --- digits 0..9 ----------------------------------------------------------
+DIGIT0 = 14
+N_DIGITS = 10
+
+
+def digit(d: int) -> int:
+    assert 0 <= d < N_DIGITS
+    return DIGIT0 + d
+
+
+# --- variable names a..j --------------------------------------------------
+VAR0 = DIGIT0 + N_DIGITS  # 24
+N_VARS = 10
+
+
+def var(i: int) -> int:
+    assert 0 <= i < N_VARS
+    return VAR0 + i
+
+
+# --- fact keys / values (multiq world knowledge) --------------------------
+KEY0 = VAR0 + N_VARS  # 34
+N_KEYS = 16
+
+
+def key(i: int) -> int:
+    assert 0 <= i < N_KEYS
+    return KEY0 + i
+
+
+VAL0 = KEY0 + N_KEYS  # 50
+N_VALS = 16
+
+
+def val(i: int) -> int:
+    assert 0 <= i < N_VALS
+    return VAL0 + i
+
+
+# --- generic words --------------------------------------------------------
+WORD0 = VAL0 + N_VALS  # 66
+N_WORDS = 16
+
+
+def word(i: int) -> int:
+    assert 0 <= i < N_WORDS
+    return WORD0 + i
+
+
+# --- task-type markers (first prompt token) -------------------------------
+T_ARITH = WORD0 + N_WORDS  # 82
+T_STRUCT = 83
+T_CONST = 84
+T_MQ = 85
+T_COPY = 86
+T_REV = 87
+T_SORT = 88
+T_LATIN = 89
+T_PARA = 90
+T_W2S = 91
+
+VOCAB_SIZE = 92
+
+_SPECIAL_NAMES = {
+    PAD: "<pad>", MASK: "<mask>", EOS: "<eos>", BOS: "<bos>", SEP: "<sep>",
+    QM: "?", FILL: "<fill>", LBRACK: "[", RBRACK: "]", COLON: ":",
+    COMMA: ",", PLUS: "+", EQ: "=", SEMI: ";",
+    T_ARITH: "<arith>", T_STRUCT: "<struct>", T_CONST: "<const>",
+    T_MQ: "<mq>", T_COPY: "<copy>", T_REV: "<rev>", T_SORT: "<sort>",
+    T_LATIN: "<latin>", T_PARA: "<para>", T_W2S: "<w2s>",
+}
+
+
+def token_name(t: int) -> str:
+    """Human-readable token name (debugging and metadata export)."""
+    if t in _SPECIAL_NAMES:
+        return _SPECIAL_NAMES[t]
+    if DIGIT0 <= t < DIGIT0 + N_DIGITS:
+        return str(t - DIGIT0)
+    if VAR0 <= t < VAR0 + N_VARS:
+        return chr(ord("a") + t - VAR0)
+    if KEY0 <= t < KEY0 + N_KEYS:
+        return f"K{t - KEY0}"
+    if VAL0 <= t < VAL0 + N_VALS:
+        return f"V{t - VAL0}"
+    if WORD0 <= t < WORD0 + N_WORDS:
+        return f"W{t - WORD0}"
+    return f"<unk{t}>"
+
+
+def vocab_table() -> dict[str, int]:
+    """name -> id map for metadata.json."""
+    return {token_name(t): t for t in range(VOCAB_SIZE)}
+
+
+def detok(tokens) -> str:
+    return " ".join(token_name(int(t)) for t in tokens)

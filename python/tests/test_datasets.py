@@ -1,0 +1,148 @@
+"""Dataset invariants: packing, determinism, task semantics."""
+
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import datasets as D
+from compile import vocab as V
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       task=st.sampled_from(sorted(D.GENERATORS)))
+def test_generator_bounds(seed, task):
+    rng = np.random.default_rng(seed)
+    prompt, answer, spec = D.GENERATORS[task](rng)
+    assert len(prompt) <= D.PROMPT_LEN
+    assert len(answer) < D.GEN_LEN
+    assert all(0 <= t < V.VOCAB_SIZE for t in prompt + answer)
+    assert V.MASK not in prompt and V.MASK not in answer
+    assert V.EOS not in answer
+    assert spec["task"] == task or spec["task"].startswith("pbench")
+
+
+@given(seed=st.integers(0, 2**31 - 1), eos_fill=st.booleans())
+def test_pack_example(seed, eos_fill):
+    rng = np.random.default_rng(seed)
+    prompt, answer, _ = D.gen_struct(rng)
+    row, mask = D.pack_example(prompt, answer, eos_fill)
+    assert len(row) == D.SEQ_LEN and len(mask) == D.SEQ_LEN
+    assert row[:len(prompt)] == prompt
+    assert all(t == V.PAD for t in row[len(prompt):D.PROMPT_LEN])
+    gen = row[D.PROMPT_LEN:]
+    assert gen[:len(answer)] == answer
+    assert gen[len(answer)] == V.EOS
+    pad_tok = V.EOS if eos_fill else V.FILL
+    assert all(t == pad_tok for t in gen[len(answer) + 1:])
+    assert mask == [0] * D.PROMPT_LEN + [1] * D.GEN_LEN
+
+
+def test_training_batch_shapes():
+    rng = np.random.default_rng(0)
+    toks, rmask = D.training_batch(rng, 8, eos_fill=True)
+    assert toks.shape == (8, D.SEQ_LEN) and rmask.shape == (8, D.SEQ_LEN)
+    assert toks.dtype == np.int32
+    # the generation window of an eos_fill batch always ends with EOS runs
+    assert (toks[:, -1] == V.EOS).all()
+
+
+def test_eval_set_deterministic_and_json_clean():
+    a = D.eval_set("multiq", 5, seed=42)
+    b = D.eval_set("multiq", 5, seed=42)
+    assert json.dumps(a) == json.dumps(b)
+    c = D.eval_set("multiq", 5, seed=43)
+    assert json.dumps(a) != json.dumps(c)
+
+
+def test_fact_and_para_are_deterministic_bijections():
+    f1, f2 = D.fact_table(), D.fact_table()
+    assert f1 == f2
+    assert sorted(set(f1)) == sorted(set(f1))  # values in range
+    p1 = D.para_table()
+    assert sorted(p1) == list(range(V.N_WORDS))  # a permutation
+
+
+def test_multiq_answers_follow_fact_table():
+    rng = np.random.default_rng(7)
+    fact = D.fact_table()
+    _, answer, spec = D.gen_multiq(rng)
+    assert spec["answers"] == [fact[k] for k in spec["keys"]]
+    # each segment contains key then its value
+    for i, k in enumerate(spec["keys"]):
+        assert V.key(k) in answer
+        assert V.val(fact[k]) in answer
+
+
+def test_arith_chain_is_consistent():
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        prompt, answer, spec = D.gen_arith(rng)
+        # answer: var = d1 + d2 = final
+        assert answer[1] == V.EQ and answer[-2] == V.EQ
+        d1 = answer[2] - V.DIGIT0
+        d2 = answer[4] - V.DIGIT0
+        final = answer[-1] - V.DIGIT0
+        assert (d1 + d2) % 10 == final == spec["final"]
+
+
+def test_latin_completion_valid():
+    rng = np.random.default_rng(4)
+    for _ in range(50):
+        _, answer, spec = D.gen_latin(rng)
+        r1 = spec["row1"]
+        cells = [spec["r2c1"]] + [t - V.DIGIT0 for t in answer]
+        r2, r3 = cells[:3], cells[3:]
+        grid = [r1, r2, r3]
+        for row in grid:
+            assert sorted(row) == [1, 2, 3]
+        for col in zip(*grid):
+            assert sorted(col) == [1, 2, 3]
+
+
+def test_sort_task_sorted():
+    rng = np.random.default_rng(5)
+    _, answer, spec = D.gen_sort(rng)
+    inner = [t - V.WORD0 for t in answer[1:-1]]
+    assert inner == sorted(spec["items"])
+
+
+def test_para_task_applies_table():
+    rng = np.random.default_rng(6)
+    tbl = D.para_table()
+    _, answer, spec = D.gen_para(rng)
+    assert [t - V.WORD0 for t in answer] == [tbl[w] for w in spec["items"]]
+
+
+# ---------------------------------------------------------------------------
+# MRF toy
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mrf_sample_constraints(seed):
+    rng = np.random.default_rng(seed)
+    s = D.mrf_sample(rng, 16)
+    assert s.shape == (16, 9)
+    assert s.min() >= 0 and s.max() <= 2
+    x, y = s[:, :5], s[:, 5:]
+    np.testing.assert_array_equal((x[:, :4] + x[:, 1:]) % 3, y)
+
+
+def test_mrf_ground_truth_graph():
+    edges = D.mrf_true_edges()
+    assert len(edges) == 12  # 4 triangles, edge (X_{i+1}, ...) shared? no:
+    # triangles {0,1,5},{1,2,6},{2,3,7},{3,4,8} share only X-chain nodes
+    deg = D.mrf_true_degrees()
+    assert deg == [2, 4, 4, 4, 2, 2, 2, 2, 2]
+    for a, b in edges:
+        assert 0 <= a < b < 9
+
+
+def test_vocab_names_unique():
+    names = [V.token_name(t) for t in range(V.VOCAB_SIZE)]
+    assert len(set(names)) == V.VOCAB_SIZE
+    assert V.vocab_table()["<mask>"] == V.MASK

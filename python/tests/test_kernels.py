@@ -1,0 +1,113 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; assert_allclose against ref.py is THE
+correctness signal for the kernels that end up inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.edge_scores import edge_scores
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# attention kernel
+# ---------------------------------------------------------------------------
+
+@given(b=st.integers(1, 3), h=st.integers(1, 4),
+       l=st.sampled_from([1, 4, 9, 17, 32]), dh=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_attention_matches_ref(b, h, l, dh, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = rand(rng, b, h, l, dh), rand(rng, b, h, l, dh), rand(rng, b, h, l, dh)
+    ctx, probs = attention(q, k, v)
+    ctx_r, probs_r = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(ctx, ctx_r, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(probs, probs_r, atol=1e-6, rtol=1e-5)
+
+
+@given(b=st.integers(1, 2), h=st.integers(1, 3), l=st.sampled_from([4, 12]),
+       seed=st.integers(0, 2**31 - 1), per_head=st.booleans())
+def test_attention_with_bias(b, h, l, seed, per_head):
+    rng = np.random.default_rng(seed)
+    dh = 8
+    q, k, v = rand(rng, b, h, l, dh), rand(rng, b, h, l, dh), rand(rng, b, h, l, dh)
+    bias = rand(rng, b, h if per_head else 1, l, l)
+    ctx, probs = attention(q, k, v, bias)
+    ctx_r, probs_r = ref.attention_ref(q, k, v, bias)
+    np.testing.assert_allclose(ctx, ctx_r, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(probs, probs_r, atol=1e-6, rtol=1e-5)
+
+
+def test_attention_rows_sum_to_one():
+    rng = np.random.default_rng(0)
+    q, k, v = (rand(rng, 2, 2, 16, 8) for _ in range(3))
+    _, probs = attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(probs).sum(-1),
+                               np.ones((2, 2, 16)), atol=1e-5)
+
+
+def test_attention_key_masking_bias():
+    """-1e9 bias on a key column removes all attention to it."""
+    rng = np.random.default_rng(1)
+    b, h, l, dh = 1, 2, 8, 8
+    q, k, v = (rand(rng, b, h, l, dh) for _ in range(3))
+    bias = np.zeros((b, 1, l, l), np.float32)
+    bias[..., 3] = -1e9
+    _, probs = attention(q, k, v, jnp.asarray(bias))
+    assert float(np.asarray(probs)[..., 3].max()) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# edge-score kernel
+# ---------------------------------------------------------------------------
+
+@given(b=st.integers(1, 4), l=st.sampled_from([2, 5, 9, 16, 40]),
+       seed=st.integers(0, 2**31 - 1))
+def test_edge_scores_match_ref(b, l, seed):
+    rng = np.random.default_rng(seed)
+    attn = jnp.asarray(rng.random((b, l, l)), jnp.float32)
+    masked = jnp.asarray(rng.integers(0, 2, (b, l)), jnp.float32)
+    s, d = edge_scores(attn, masked)
+    s_r, d_r = ref.edge_scores_ref(attn, masked)
+    np.testing.assert_allclose(s, s_r, atol=1e-6, rtol=1e-5)
+    np.testing.assert_allclose(d, d_r, atol=1e-5, rtol=1e-5)
+
+
+@given(b=st.integers(1, 3), l=st.sampled_from([3, 9, 24]),
+       seed=st.integers(0, 2**31 - 1))
+def test_edge_scores_invariants(b, l, seed):
+    """Symmetric, zero diagonal, zero on unmasked pairs, degrees = row sums."""
+    rng = np.random.default_rng(seed)
+    attn = jnp.asarray(rng.random((b, l, l)), jnp.float32)
+    masked = jnp.asarray(rng.integers(0, 2, (b, l)), jnp.float32)
+    s, d = edge_scores(attn, masked)
+    s = np.asarray(s)
+    np.testing.assert_allclose(s, np.swapaxes(s, 1, 2), atol=1e-6)
+    assert np.abs(np.diagonal(s, axis1=1, axis2=2)).max() == 0.0
+    m = np.asarray(masked)
+    pair = m[:, :, None] * m[:, None, :]
+    assert np.abs(s * (1 - pair)).max() == 0.0
+    np.testing.assert_allclose(np.asarray(d), s.sum(-1), atol=1e-5)
+
+
+def test_edge_scores_all_masked_uniform():
+    """Uniform attention, all masked -> every degree = (L-1)/L."""
+    l = 10
+    attn = jnp.full((1, l, l), 1.0 / l, jnp.float32)
+    masked = jnp.ones((1, l), jnp.float32)
+    _, d = edge_scores(attn, masked)
+    np.testing.assert_allclose(np.asarray(d)[0], np.full(l, (l - 1) / l),
+                               atol=1e-6)

@@ -1,0 +1,124 @@
+"""L2 model tests: shapes, pallas/jnp parity, masking semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets as D
+from compile import vocab as V
+from compile.model import (ModelConfig, count_params, forward, init_params,
+                           model_zoo, params_from_flat, params_to_flat,
+                           serving_forward, toy_forward)
+
+TINY = ModelConfig(name="tiny", vocab=V.VOCAB_SIZE, seq_len=20, d_model=16,
+                   n_heads=2, n_layers=3, mask_id=V.MASK, pad_id=V.PAD)
+
+
+def tiny_params(seed=0):
+    return init_params(np.random.default_rng(seed), TINY)
+
+
+def tokens(rng, b, l, vocab):
+    return jnp.asarray(rng.integers(2, vocab, size=(b, l)), jnp.int32)
+
+
+def test_forward_shapes():
+    p = tiny_params()
+    rng = np.random.default_rng(0)
+    toks = tokens(rng, 2, 20, TINY.vocab)
+    logits, attns = forward(p, TINY, toks, use_pallas=False)
+    assert logits.shape == (2, 20, TINY.vocab)
+    assert attns.shape == (TINY.n_layers, 2, 20, 20)
+
+
+def test_pallas_and_jnp_paths_agree():
+    p = tiny_params()
+    rng = np.random.default_rng(1)
+    toks = tokens(rng, 2, 20, TINY.vocab)
+    lg1, at1 = forward(p, TINY, toks, use_pallas=False)
+    lg2, at2 = forward(p, TINY, toks, use_pallas=True)
+    np.testing.assert_allclose(lg1, lg2, atol=2e-4, rtol=1e-4)
+    np.testing.assert_allclose(at1, at2, atol=1e-5, rtol=1e-4)
+
+
+def test_serving_forward_shapes_and_outputs():
+    p = tiny_params()
+    rng = np.random.default_rng(2)
+    toks = np.array(tokens(rng, 2, 20, TINY.vocab))
+    toks[:, 10:] = TINY.mask_id
+    lg, attn_avg, scores, deg = serving_forward(p, TINY, jnp.asarray(toks),
+                                                use_pallas=False)
+    assert lg.shape == (2, 20, TINY.vocab)
+    assert attn_avg.shape == (2, 20, 20)
+    assert scores.shape == (2, 20, 20)
+    assert deg.shape == (2, 20)
+    s = np.asarray(scores)
+    # scores only among masked pairs (positions 10..19)
+    assert np.abs(s[:, :10, :]).max() == 0.0
+    assert np.abs(s[:, :, :10]).max() == 0.0
+    assert s[:, 10:, 10:].max() > 0.0
+
+
+def test_serving_forward_pallas_parity():
+    p = tiny_params()
+    rng = np.random.default_rng(3)
+    toks = np.array(tokens(rng, 1, 20, TINY.vocab))
+    toks[:, 12:] = TINY.mask_id
+    outs_a = serving_forward(p, TINY, jnp.asarray(toks), use_pallas=False)
+    outs_b = serving_forward(p, TINY, jnp.asarray(toks), use_pallas=True)
+    for a, b in zip(outs_a, outs_b):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=1e-4)
+
+
+def test_toy_forward_layout():
+    cfg = model_zoo()["mrf-toy"]
+    p = init_params(np.random.default_rng(0), cfg)
+    toks = jnp.asarray(np.zeros((3, cfg.seq_len), np.int32))
+    lg, attns = toy_forward(p, cfg, toks, use_pallas=False)
+    assert lg.shape == (3, cfg.seq_len, cfg.vocab)
+    assert attns.shape == (3, cfg.n_layers, cfg.seq_len, cfg.seq_len)
+
+
+def test_pad_receives_no_attention():
+    p = tiny_params()
+    rng = np.random.default_rng(4)
+    toks = np.array(tokens(rng, 1, 20, TINY.vocab))
+    toks[0, 5:8] = V.PAD
+    _, attns = forward(p, TINY, jnp.asarray(toks), use_pallas=False)
+    a = np.asarray(attns)  # [layers, B, L, L]
+    assert a[:, 0, :, 5:8].max() < 1e-6
+
+
+def test_seq_len_slicing():
+    """Shorter seq_len slices the positional table (Table 7 sweep)."""
+    p = tiny_params()
+    rng = np.random.default_rng(5)
+    toks = tokens(rng, 1, 12, TINY.vocab)
+    logits, attns = forward(p, TINY, toks, use_pallas=False, seq_len=12)
+    assert logits.shape == (1, 12, TINY.vocab)
+    assert attns.shape == (TINY.n_layers, 1, 12, 12)
+
+
+def test_params_flat_roundtrip():
+    p = tiny_params()
+    flat = params_to_flat(p)
+    p2 = params_from_flat(flat, TINY)
+    rng = np.random.default_rng(6)
+    toks = tokens(rng, 1, 20, TINY.vocab)
+    lg1, _ = forward(p, TINY, toks, use_pallas=False)
+    lg2, _ = forward(p2, TINY, toks, use_pallas=False)
+    np.testing.assert_allclose(lg1, lg2)
+
+
+def test_graph_layers_last_30pct():
+    zoo = model_zoo()
+    for cfg in zoo.values():
+        gl = cfg.graph_layers()
+        assert gl, cfg.name
+        assert max(gl) == cfg.n_layers - 1
+        assert len(gl) == max(1, int(np.ceil(0.3 * cfg.n_layers)))
+        assert gl == sorted(gl)
+
+
+def test_count_params_positive():
+    assert count_params(tiny_params()) > 1000

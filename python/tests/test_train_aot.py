@@ -1,0 +1,90 @@
+"""Trainer + AOT pipeline tests (tiny configs, CPU-cheap)."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets as D
+from compile import vocab as V
+from compile.aot import lower_serving, lower_toy, to_hlo_text
+from compile.model import ModelConfig, init_params, model_zoo, serving_forward
+from compile.train import (adamw_init, adamw_update, lr_schedule, mdm_loss,
+                           train_step)
+
+TINY = ModelConfig(name="tiny", vocab=V.VOCAB_SIZE, seq_len=D.SEQ_LEN,
+                   d_model=16, n_heads=2, n_layers=2,
+                   mask_id=V.MASK, pad_id=V.PAD)
+
+
+def test_adamw_moves_params():
+    p = init_params(np.random.default_rng(0), TINY)
+    st = adamw_init(p)
+    g = {k: (jnp.ones_like(v) if k != "layers" else v)
+         for k, v in p.items()}
+    g["layers"] = [{k: jnp.ones_like(v) for k, v in layer.items()}
+                   for layer in p["layers"]]
+    p2, st2 = adamw_update(p, g, st, lr=1e-2)
+    assert float(jnp.abs(p2["tok_emb"] - p["tok_emb"]).max()) > 0
+    assert int(st2["step"]) == 1
+
+
+def test_lr_schedule_shape():
+    lrs = [float(lr_schedule(jnp.asarray(float(s)), 1e-3, 10, 100))
+           for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9          # warmup ascends
+    assert lrs[50] > lrs[99]                        # cosine decays
+    assert lrs[99] >= 0
+
+
+def test_mdm_loss_masks_only_response():
+    """Loss is invariant to prompt content at unmasked positions only
+    through conditioning; masked positions are all in the response."""
+    p = init_params(np.random.default_rng(0), TINY)
+    rng = np.random.default_rng(1)
+    toks, rmask = D.training_batch(rng, 4, eos_fill=True)
+    t = np.full(4, 0.5, np.float32)
+    noise = rng.uniform(size=toks.shape).astype(np.float32)
+    loss = mdm_loss(p, TINY, jnp.asarray(toks), jnp.asarray(rmask),
+                    jnp.asarray(t), jnp.asarray(noise))
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+def test_train_step_reduces_loss():
+    """A few steps on a fixed batch should reduce the loss (smoke)."""
+    p = init_params(np.random.default_rng(0), TINY)
+    st = adamw_init(p)
+    rng = np.random.default_rng(2)
+    toks, rmask = D.training_batch(rng, 16, eos_fill=True)
+    t = np.full(16, 0.5, np.float32)
+    noise = rng.uniform(size=toks.shape).astype(np.float32)
+    args = (jnp.asarray(toks), jnp.asarray(rmask), jnp.asarray(t),
+            jnp.asarray(noise))
+    first = None
+    for i in range(8):
+        p, st, loss = train_step(p, st, TINY, *args, jnp.asarray(3e-3))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first
+
+
+def test_hlo_text_has_constants_and_tuple():
+    """Regression for the two interchange gotchas: elided constants and
+    non-tuple outputs."""
+    p = init_params(np.random.default_rng(0), TINY)
+    text = lower_serving(p, TINY, batch=1, gen_len=8)
+    assert "constant({...})" not in text            # weights actually baked
+    assert "f32[" in text and "s32[1,36]" in text   # 28 prompt + 8 gen
+    # 4-tuple output signature
+    assert text.count("ROOT") >= 1
+
+
+def test_lower_toy_shapes():
+    cfg = ModelConfig(name="toy-tiny", vocab=D.MRF_VOCAB, seq_len=D.MRF_LEN,
+                      d_model=16, n_heads=2, n_layers=2,
+                      mask_id=D.MRF_MASK_ID, pad_id=-1)
+    p = init_params(np.random.default_rng(0), cfg)
+    text = lower_toy(p, cfg, batch=2)
+    assert "s32[2,9]" in text
+    assert "constant({...})" not in text

@@ -1,0 +1,217 @@
+//! Deployment configuration: JSON config file + CLI flag overrides.
+//!
+//! Precedence: built-in defaults < `--config file.json` < explicit flags.
+//! The same keys work in both layers, so a deployment can pin its decode
+//! policy in version control and still override ad hoc:
+//!
+//! ```json
+//! {
+//!   "model": "sim-llada", "batch": 4, "port": 7070,
+//!   "method": "dapd-staged", "blocks": 1, "eos_suppress": false,
+//!   "batch_wait_ms": 5, "queue_cap": 256,
+//!   "conf_threshold": 0.9, "gamma": 0.1, "kl_threshold": 0.01,
+//!   "tau_min": 0.01, "tau_max": 0.15
+//! }
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::decode::{DecodeConfig, Method, MethodParams};
+use crate::graph::TauSchedule;
+use crate::util::args::Args;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ServeSettings {
+    pub artifacts: String,
+    pub model: String,
+    pub batch: usize,
+    pub port: usize,
+    pub method: Method,
+    pub blocks: usize,
+    pub eos_suppress: bool,
+    pub batch_wait_ms: u64,
+    pub queue_cap: usize,
+    pub params: MethodParams,
+}
+
+impl Default for ServeSettings {
+    fn default() -> ServeSettings {
+        ServeSettings {
+            artifacts: "artifacts".into(),
+            model: "sim-llada".into(),
+            batch: 4,
+            port: 7070,
+            method: Method::DapdStaged,
+            blocks: 1,
+            eos_suppress: false,
+            batch_wait_ms: 5,
+            queue_cap: 256,
+            params: MethodParams::default(),
+        }
+    }
+}
+
+impl ServeSettings {
+    /// defaults -> optional --config file -> explicit CLI flags.
+    pub fn resolve(args: &Args) -> Result<ServeSettings> {
+        let mut s = ServeSettings::default();
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+            s.apply_json(&j)?;
+        }
+        s.apply_args(args)?;
+        s.validate()
+    }
+
+    fn apply_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(v) = j.get("artifacts").as_str() {
+            self.artifacts = v.into();
+        }
+        if let Some(v) = j.get("model").as_str() {
+            self.model = v.into();
+        }
+        if let Some(v) = j.get("batch").as_usize() {
+            self.batch = v;
+        }
+        if let Some(v) = j.get("port").as_usize() {
+            self.port = v;
+        }
+        if let Some(v) = j.get("method").as_str() {
+            self.method = Method::parse(v).ok_or_else(|| anyhow!("unknown method '{v}'"))?;
+        }
+        if let Some(v) = j.get("blocks").as_usize() {
+            self.blocks = v;
+        }
+        if let Some(v) = j.get("eos_suppress").as_bool() {
+            self.eos_suppress = v;
+        }
+        if let Some(v) = j.get("batch_wait_ms").as_usize() {
+            self.batch_wait_ms = v as u64;
+        }
+        if let Some(v) = j.get("queue_cap").as_usize() {
+            self.queue_cap = v;
+        }
+        let p = &mut self.params;
+        if let Some(v) = j.get("conf_threshold").as_f64() {
+            p.conf_threshold = v as f32;
+        }
+        if let Some(v) = j.get("gamma").as_f64() {
+            p.gamma = v as f32;
+        }
+        if let Some(v) = j.get("kl_threshold").as_f64() {
+            p.kl_threshold = v as f32;
+        }
+        let tau_min = j.get("tau_min").as_f64().unwrap_or(p.tau.min as f64) as f32;
+        let tau_max = j.get("tau_max").as_f64().unwrap_or(p.tau.max as f64) as f32;
+        if tau_min > tau_max {
+            return Err(anyhow!("tau_min > tau_max"));
+        }
+        p.tau = TauSchedule::new(tau_min, tau_max);
+        Ok(())
+    }
+
+    fn apply_args(&mut self, args: &Args) -> Result<()> {
+        self.artifacts = args.str_or("artifacts", &self.artifacts);
+        self.model = args.str_or("model", &self.model);
+        self.batch = args.usize_or("batch", self.batch);
+        self.port = args.usize_or("port", self.port);
+        if let Some(m) = args.get("method") {
+            self.method = Method::parse(m).ok_or_else(|| anyhow!("unknown method '{m}'"))?;
+        }
+        self.blocks = args.usize_or("blocks", self.blocks);
+        if args.has("eos-inf") {
+            self.eos_suppress = true;
+        }
+        self.batch_wait_ms = args.usize_or("batch-wait-ms", self.batch_wait_ms as usize) as u64;
+        self.queue_cap = args.usize_or("queue-cap", self.queue_cap);
+        let p = &mut self.params;
+        p.conf_threshold = args.f64_or("conf-threshold", p.conf_threshold as f64) as f32;
+        p.gamma = args.f64_or("gamma", p.gamma as f64) as f32;
+        p.kl_threshold = args.f64_or("kl-threshold", p.kl_threshold as f64) as f32;
+        let tau_min = args.f64_or("tau-min", p.tau.min as f64) as f32;
+        let tau_max = args.f64_or("tau-max", p.tau.max as f64) as f32;
+        if tau_min > tau_max {
+            return Err(anyhow!("tau_min > tau_max"));
+        }
+        p.tau = TauSchedule::new(tau_min, tau_max);
+        Ok(())
+    }
+
+    fn validate(self) -> Result<ServeSettings> {
+        if self.batch == 0 || self.blocks == 0 {
+            return Err(anyhow!("batch and blocks must be >= 1"));
+        }
+        if !(0.0..=1.0).contains(&self.params.conf_threshold) {
+            return Err(anyhow!("conf_threshold must be in [0,1]"));
+        }
+        Ok(self)
+    }
+
+    pub fn decode_config(&self) -> DecodeConfig {
+        let mut cfg = DecodeConfig::new(self.method);
+        cfg.params = self.params;
+        cfg.blocks = self.blocks;
+        cfg.eos_suppress = self.eos_suppress;
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(items: &[&str]) -> Args {
+        Args::parse_from(items.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_resolve() {
+        let s = ServeSettings::resolve(&args(&[])).unwrap();
+        assert_eq!(s.model, "sim-llada");
+        assert_eq!(s.method, Method::DapdStaged);
+    }
+
+    #[test]
+    fn file_then_flags_precedence() {
+        let dir = std::env::temp_dir().join("dapd_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"model": "sim-dream", "port": 9000, "method": "fast-dllm",
+                "tau_min": 0.02, "tau_max": 0.3}"#,
+        )
+        .unwrap();
+        let s = ServeSettings::resolve(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--port",
+            "9100",
+        ]))
+        .unwrap();
+        assert_eq!(s.model, "sim-dream"); // from file
+        assert_eq!(s.port, 9100); // flag overrides file
+        assert_eq!(s.method, Method::FastDllm);
+        assert!((s.params.tau.min - 0.02).abs() < 1e-6);
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        assert!(ServeSettings::resolve(&args(&["--batch", "0"])).is_err());
+        assert!(ServeSettings::resolve(&args(&["--tau-min", "0.5", "--tau-max", "0.1"])).is_err());
+        assert!(ServeSettings::resolve(&args(&["--conf-threshold", "1.5"])).is_err());
+        assert!(ServeSettings::resolve(&args(&["--method", "nope"])).is_err());
+    }
+
+    #[test]
+    fn decode_config_reflects_settings() {
+        let s = ServeSettings::resolve(&args(&["--method", "dapd-direct", "--blocks", "4"]))
+            .unwrap();
+        let cfg = s.decode_config();
+        assert_eq!(cfg.method, Method::DapdDirect);
+        assert_eq!(cfg.blocks, 4);
+    }
+}

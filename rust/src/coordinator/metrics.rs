@@ -1,0 +1,107 @@
+//! Serving metrics: counters + latency summaries (Table 6 TPS numbers
+//! come from here).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub tokens_out: AtomicU64,
+    pub errors: AtomicU64,
+    pub rejected: AtomicU64,
+    pub queue_depth: AtomicU64,
+    pub busy_micros: AtomicU64,
+    latency: Mutex<Summary>,
+    steps: Mutex<Summary>,
+    batch_sizes: Mutex<Summary>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, latency: Duration, steps: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latency.lock().unwrap().add(latency.as_secs_f64());
+        self.steps.lock().unwrap().add(steps as f64);
+    }
+
+    pub fn record_batch(&self, size: usize, tokens: usize, wall: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.tokens_out.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.busy_micros
+            .fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
+        self.batch_sizes.lock().unwrap().add(size as f64);
+    }
+
+    /// tokens per second over the engine's busy time
+    pub fn tps(&self) -> f64 {
+        let busy = self.busy_micros.load(Ordering::Relaxed) as f64 / 1e6;
+        if busy <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_out.load(Ordering::Relaxed) as f64 / busy
+    }
+
+    pub fn latency_p50_p95(&self) -> (f64, f64) {
+        let l = self.latency.lock().unwrap();
+        (l.p50(), l.p95())
+    }
+
+    pub fn mean_steps(&self) -> f64 {
+        self.steps.lock().unwrap().mean()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        self.batch_sizes.lock().unwrap().mean()
+    }
+
+    pub fn report(&self) -> String {
+        let (p50, p95) = self.latency_p50_p95();
+        format!(
+            "requests={} batches={} mean_batch={:.2} tokens={} tps={:.1} \
+             steps={:.1} latency_p50={:.3}s p95={:.3}s errors={} rejected={}",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.tokens_out.load(Ordering::Relaxed),
+            self.tps(),
+            self.mean_steps(),
+            p50,
+            p95,
+            self.errors.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::new();
+        m.record_request(Duration::from_millis(100), 10);
+        m.record_request(Duration::from_millis(300), 20);
+        m.record_batch(2, 80, Duration::from_millis(400));
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert!((m.mean_steps() - 15.0).abs() < 1e-9);
+        assert!((m.tps() - 200.0).abs() < 1.0);
+        assert!((m.mean_batch_size() - 2.0).abs() < 1e-9);
+        let (p50, p95) = m.latency_p50_p95();
+        assert!(p50 >= 0.1 && p95 <= 0.3 + 1e-9);
+        assert!(m.report().contains("requests=2"));
+    }
+
+    #[test]
+    fn tps_zero_before_traffic() {
+        assert_eq!(Metrics::new().tps(), 0.0);
+    }
+}

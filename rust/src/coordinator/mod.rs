@@ -1,0 +1,305 @@
+//! The serving coordinator: request router + dynamic batcher + inference
+//! worker + metrics.
+//!
+//! Architecture (thread-based; tokio is not vendored in this image):
+//!
+//!   clients -> submit() -> bounded queue -> batcher loop (inference
+//!   thread, owns the compiled executable) -> decode_batch -> per-request
+//!   response channels
+//!
+//! The batcher implements the classic dynamic-batching policy: take the
+//! first waiting request, then wait up to `batch_wait` for more, capped
+//! at the artifact's compiled batch size.  Per-method queues are not
+//! needed — a request carries its decode config, and the batcher groups
+//! compatible requests (same method+config hash) per batch.
+
+pub mod metrics;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::decode::{decode_batch, DecodeConfig};
+use crate::runtime::ForwardModel;
+pub use metrics::Metrics;
+
+/// A decode request: fixed-width prompt + the method configuration.
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub cfg: DecodeConfig,
+    pub submitted: Instant,
+    respond: SyncSender<Response>,
+    /// batching compatibility key (method + blocks + eos flags)
+    group: u64,
+}
+
+/// The reply a client receives.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub gen: Vec<i32>,
+    pub steps: usize,
+    /// queueing + inference latency
+    pub latency: Duration,
+}
+
+fn group_key(cfg: &DecodeConfig) -> u64 {
+    // method discriminant + blocks + eos flags; params assumed uniform
+    // per deployment (they are config-level, not request-level, in vLLM
+    // terms) but folded in coarsely anyway via bit tricks.
+    let m = cfg.method.name().as_bytes()[0] as u64
+        ^ (cfg.method.name().len() as u64) << 8;
+    m ^ (cfg.blocks as u64) << 16
+        ^ (cfg.eos_suppress as u64) << 32
+        ^ (cfg.params.conf_threshold.to_bits() as u64) << 33
+}
+
+struct Queue {
+    items: Mutex<VecDeque<Request>>,
+    available: Condvar,
+    closed: AtomicBool,
+    capacity: usize,
+}
+
+/// Handle for submitting requests; cheap to clone.
+#[derive(Clone)]
+pub struct Coordinator {
+    queue: Arc<Queue>,
+    pub metrics: Arc<Metrics>,
+    seq: Arc<AtomicU64>,
+}
+
+impl Coordinator {
+    /// Spawn the inference loop on the current thread's model.  Returns
+    /// the submit handle and the worker join handle.
+    ///
+    /// `model` is moved into the worker thread (PJRT executables live on
+    /// one thread; the single-core testbed wants exactly one anyway).
+    pub fn start<M>(
+        model: M,
+        batch_wait: Duration,
+        queue_cap: usize,
+    ) -> (Coordinator, std::thread::JoinHandle<()>)
+    where
+        M: ForwardModel + Send + 'static,
+    {
+        let queue = Arc::new(Queue {
+            items: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            closed: AtomicBool::new(false),
+            capacity: queue_cap,
+        });
+        let metrics = Arc::new(Metrics::new());
+        let coord = Coordinator {
+            queue: Arc::clone(&queue),
+            metrics: Arc::clone(&metrics),
+            seq: Arc::new(AtomicU64::new(0)),
+        };
+        let handle = std::thread::Builder::new()
+            .name("dapd-inference".into())
+            .spawn(move || inference_loop(model, queue, metrics, batch_wait))
+            .expect("spawn inference thread");
+        (coord, handle)
+    }
+
+    /// Submit a request; returns the response receiver.  Applies
+    /// backpressure by rejecting when the queue is full.
+    pub fn submit(&self, prompt: Vec<i32>, cfg: DecodeConfig) -> Result<Receiver<Response>> {
+        let (tx, rx) = sync_channel(1);
+        let group = group_key(&cfg);
+        {
+            let mut q = self.queue.items.lock().unwrap();
+            if self.queue.closed.load(Ordering::SeqCst) {
+                bail!("coordinator shut down");
+            }
+            if q.len() >= self.queue.capacity {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                bail!("queue full ({} requests)", q.len());
+            }
+            q.push_back(Request {
+                prompt,
+                cfg,
+                submitted: Instant::now(),
+                respond: tx,
+                group,
+            });
+            self.seq.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .queue_depth
+                .store(q.len() as u64, Ordering::Relaxed);
+        }
+        self.queue.available.notify_one();
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn call(&self, prompt: Vec<i32>, cfg: DecodeConfig) -> Result<Response> {
+        let rx = self.submit(prompt, cfg)?;
+        rx.recv().map_err(|_| anyhow!("inference worker dropped request"))
+    }
+
+    /// Stop accepting requests and wake the worker so it can exit.
+    pub fn shutdown(&self) {
+        self.queue.closed.store(true, Ordering::SeqCst);
+        self.queue.available.notify_all();
+    }
+}
+
+fn inference_loop<M: ForwardModel>(
+    model: M,
+    queue: Arc<Queue>,
+    metrics: Arc<Metrics>,
+    batch_wait: Duration,
+) {
+    let max_batch = model.batch();
+    loop {
+        // ---- collect a batch --------------------------------------------
+        let batch: Vec<Request> = {
+            let mut q = queue.items.lock().unwrap();
+            // wait for the first request
+            while q.is_empty() {
+                if queue.closed.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _timeout) = queue
+                    .available
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = guard;
+            }
+            // dynamic batching window: give stragglers `batch_wait`
+            if q.len() < max_batch && !batch_wait.is_zero() {
+                let deadline = Instant::now() + batch_wait;
+                while q.len() < max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, _to) = queue
+                        .available
+                        .wait_timeout(q, deadline - now)
+                        .unwrap();
+                    q = guard;
+                }
+            }
+            // take a method-compatible prefix group
+            let lead_group = q.front().unwrap().group;
+            let mut batch = Vec::with_capacity(max_batch);
+            let mut i = 0;
+            while i < q.len() && batch.len() < max_batch {
+                if q[i].group == lead_group {
+                    batch.push(q.remove(i).unwrap());
+                } else {
+                    i += 1;
+                }
+            }
+            metrics.queue_depth.store(q.len() as u64, Ordering::Relaxed);
+            batch
+        };
+        if batch.is_empty() {
+            continue;
+        }
+
+        // ---- run ---------------------------------------------------------
+        let cfg = batch[0].cfg.clone();
+        let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+        let t0 = Instant::now();
+        match decode_batch(&model, &prompts, &cfg) {
+            Ok(outs) => {
+                let wall = t0.elapsed();
+                let mut tokens = 0usize;
+                for (req, out) in batch.iter().zip(outs) {
+                    tokens += out.gen.len();
+                    let _ = req.respond.send(Response {
+                        gen: out.gen,
+                        steps: out.steps,
+                        latency: req.submitted.elapsed(),
+                    });
+                    metrics.record_request(req.submitted.elapsed(), out.steps);
+                }
+                metrics.record_batch(prompts.len(), tokens, wall);
+            }
+            Err(e) => {
+                crate::util::logging::info(&format!("batch failed: {e:#}"));
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                // receivers see a dropped channel -> error at call site
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::Method;
+    use crate::runtime::MockModel;
+
+    fn cfg() -> DecodeConfig {
+        DecodeConfig::new(Method::FastDllm)
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let m = MockModel::new(2, 16, 4, 12);
+        let want: Vec<i32> = (4..16).map(|i| m.true_token(i)).collect();
+        let (coord, handle) = Coordinator::start(m, Duration::ZERO, 64);
+        let resp = coord.call(vec![5; 4], cfg()).unwrap();
+        assert_eq!(resp.gen, want);
+        assert!(resp.steps >= 1);
+        coord.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let m = MockModel::new(4, 16, 4, 12);
+        let (coord, handle) = Coordinator::start(m, Duration::from_millis(20), 64);
+        let rxs: Vec<_> = (0..4)
+            .map(|_| coord.submit(vec![5; 4], cfg()).unwrap())
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(!r.gen.is_empty());
+        }
+        coord.shutdown();
+        handle.join().unwrap(); // metrics are final after the worker exits
+        assert!(coord.metrics.batches.load(Ordering::Relaxed) >= 1);
+        let reqs = coord.metrics.requests.load(Ordering::Relaxed);
+        let batches = coord.metrics.batches.load(Ordering::Relaxed);
+        assert_eq!(reqs, 4);
+        assert!(batches <= reqs);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let m = MockModel::new(1, 64, 4, 12);
+        let (coord, handle) = Coordinator::start(m, Duration::ZERO, 2);
+        // flood without reading responses
+        let mut acks = Vec::new();
+        let mut rejected = 0;
+        for _ in 0..50 {
+            match coord.submit(vec![5; 4], cfg()) {
+                Ok(rx) => acks.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected backpressure");
+        for rx in acks {
+            let _ = rx.recv();
+        }
+        coord.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_stops_acceptance() {
+        let m = MockModel::new(1, 16, 4, 12);
+        let (coord, handle) = Coordinator::start(m, Duration::ZERO, 8);
+        coord.shutdown();
+        handle.join().unwrap();
+        assert!(coord.submit(vec![5; 4], cfg()).is_err());
+    }
+}

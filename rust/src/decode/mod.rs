@@ -1,0 +1,546 @@
+//! Decoding strategies and the decode loop.
+//!
+//! Every training-free method from the paper's evaluation is implemented
+//! behind one `Strategy` trait operating on a per-sample `StepCtx`:
+//!
+//!   * `Original`    — confidence top-1, token-by-token (Tab. 2 baseline)
+//!   * `FastDllm`    — unmask everything above a confidence threshold
+//!   * `EbSampler`   — largest confidence-ordered prefix within an
+//!                     entropy budget gamma
+//!   * `Klass`       — confident AND KL-stable between consecutive steps
+//!   * `DapdStaged`  — Welsh-Powell independent set on the attention
+//!                     graph, conf-weighted degree ordering; once the
+//!                     mask ratio drops below 1/2, also admit conf > 0.9
+//!   * `DapdDirect`  — commit conf ~= 1.0 first, then dependency-aware
+//!                     selection on the rest (paper Remark 4.1)
+//!
+//! The driver (`decode_batch`) runs one AOT forward per step for a batch
+//! of samples, applies the strategy per sample, and records trajectories
+//! (for the Fig. 1/5 analyses) and per-sample NFE.
+
+pub mod strategies;
+
+use anyhow::{bail, Result};
+
+use crate::graph::TauSchedule;
+use crate::runtime::{ForwardModel, StepOutput};
+use crate::tensor::{argmax, entropy, kl_div, softmax_inplace};
+
+pub use strategies::{make_strategy, Strategy};
+
+/// Which decoding method to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Original,
+    FastDllm,
+    EbSampler,
+    Klass,
+    DapdStaged,
+    DapdDirect,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "original" => Method::Original,
+            "fast-dllm" => Method::FastDllm,
+            "eb-sampler" => Method::EbSampler,
+            "klass" => Method::Klass,
+            "dapd-staged" => Method::DapdStaged,
+            "dapd-direct" => Method::DapdDirect,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Original => "original",
+            Method::FastDllm => "fast-dllm",
+            Method::EbSampler => "eb-sampler",
+            Method::Klass => "klass",
+            Method::DapdStaged => "dapd-staged",
+            Method::DapdDirect => "dapd-direct",
+        }
+    }
+
+    pub fn all() -> [Method; 6] {
+        [
+            Method::Original,
+            Method::FastDllm,
+            Method::EbSampler,
+            Method::Klass,
+            Method::DapdStaged,
+            Method::DapdDirect,
+        ]
+    }
+}
+
+/// DAPD's Welsh-Powell priority rule (Sec. 4.3 design choice; the
+/// `ablation_ordering` bench compares these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DapdOrdering {
+    /// confidence-weighted proxy degree d~_i * conf_i (the paper's rule)
+    ConfDegree,
+    /// raw proxy degree d~_i (classic Welsh-Powell)
+    Degree,
+    /// confidence only (graph constrains, confidence orders)
+    Conf,
+    /// position order (no prioritization)
+    Index,
+}
+
+/// Method hyperparameters (paper App. A values are the defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct MethodParams {
+    /// Fast-dLLM / KLASS / DAPD stage-2 confidence threshold.
+    pub conf_threshold: f32,
+    /// EB-Sampler cumulative-entropy budget (nats).
+    pub gamma: f32,
+    /// KLASS stability threshold on KL(p_t || p_{t-1}).
+    pub kl_threshold: f32,
+    /// DAPD linear tau schedule over max-normalized edge scores.
+    pub tau: TauSchedule,
+    /// DAPD-Direct: conf >= 1 - eps counts as "confidence 1.0".
+    pub conf_one_eps: f32,
+    /// DAPD-Staged: mask ratio below which the conf rule activates.
+    pub stage_ratio: f32,
+    /// DAPD Welsh-Powell priority rule.
+    pub ordering: DapdOrdering,
+}
+
+impl Default for MethodParams {
+    fn default() -> MethodParams {
+        MethodParams {
+            conf_threshold: 0.9,
+            gamma: 0.1,
+            kl_threshold: 0.01,
+            // Calibrated for the simulated models via the paper's App. A
+            // procedure (Fig 6: place tau_min where the CDF of normalized
+            // mask-to-mask scores is small).  The small models' attention
+            // is more diffuse than LLaDA's, so the analogous schedule sits
+            // higher than the paper's [0.01, 0.15].
+            tau: TauSchedule::new(0.15, 0.40),
+            conf_one_eps: 1e-3,
+            stage_ratio: 0.5,
+            ordering: DapdOrdering::ConfDegree,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodeConfig {
+    pub method: Method,
+    pub params: MethodParams,
+    /// number of semi-autoregressive blocks over the generation window
+    pub blocks: usize,
+    /// EOS-Inf: suppress the EOS token at masked positions
+    pub eos_suppress: bool,
+    pub eos_id: i32,
+    /// safety cap on steps (defaults to gen_len; every step commits >= 1)
+    pub max_steps: usize,
+}
+
+impl DecodeConfig {
+    pub fn new(method: Method) -> DecodeConfig {
+        DecodeConfig {
+            method,
+            params: MethodParams::default(),
+            blocks: 1,
+            eos_suppress: false,
+            eos_id: 2,
+            max_steps: 0,
+        }
+    }
+}
+
+/// Per-sample view of one decoding step, over the *candidate* masked
+/// positions (within the active block).  Indices below are candidate
+/// indices 0..n; `positions[c]` maps back to absolute sequence positions.
+pub struct StepCtx<'a> {
+    pub positions: &'a [usize],
+    pub conf: &'a [f32],
+    pub argmax_tok: &'a [i32],
+    pub entropy: &'a [f32],
+    /// KL(p_t || p_{t-1}) per candidate; f32::INFINITY on the first step.
+    pub kl_prev: &'a [f32],
+    /// dense candidate-pair edge scores, max-normalized, [n*n]
+    pub scores_norm: &'a [f32],
+    /// row sums of `scores_norm` (proxy degrees over candidates)
+    pub degrees: &'a [f32],
+    /// fraction of the generation window already decoded (0 at start)
+    pub progress: f32,
+    /// fraction of the generation window still masked
+    pub mask_ratio: f32,
+}
+
+/// Result of decoding one sample.
+#[derive(Debug, Clone)]
+pub struct DecodeOutcome {
+    /// final full token sequence [seq_len]
+    pub tokens: Vec<i32>,
+    /// the generation window only [gen_len]
+    pub gen: Vec<i32>,
+    /// NFE: forward passes consumed by this sample
+    pub steps: usize,
+    /// step index at which each generation position was committed
+    pub commit_step: Vec<usize>,
+    /// generation-relative positions committed per step
+    pub per_step_commits: Vec<Vec<usize>>,
+}
+
+/// Decode up to `model.batch()` prompts in one batched loop.
+///
+/// Each prompt must be exactly `prompt_len` tokens (pre-padded).  Rows
+/// beyond `prompts.len()` are padded internally and discarded.  Per-sample
+/// NFE counts the steps until that sample finished (batching does not
+/// change per-sample step counts: rows are independent).
+pub fn decode_batch(
+    model: &dyn ForwardModel,
+    prompts: &[Vec<i32>],
+    cfg: &DecodeConfig,
+) -> Result<Vec<DecodeOutcome>> {
+    let b = model.batch();
+    let l = model.seq_len();
+    let p = model.prompt_len();
+    let g = model.gen_len();
+    let v = model.vocab();
+    let mask_id = model.mask_id();
+    if prompts.is_empty() || prompts.len() > b {
+        bail!("decode_batch: got {} prompts for batch {b}", prompts.len());
+    }
+    if cfg.blocks == 0 || cfg.blocks > g {
+        bail!("invalid block count {}", cfg.blocks);
+    }
+    let strategy = make_strategy(cfg.method, cfg.params);
+    let max_steps = if cfg.max_steps == 0 { g + 4 } else { cfg.max_steps };
+
+    // token board: all rows, masked generation windows
+    let mut tokens = vec![0i32; b * l];
+    for (s, prompt) in prompts.iter().enumerate() {
+        if prompt.len() != p {
+            bail!("prompt {} length {} != prompt_len {p}", s, prompt.len());
+        }
+        tokens[s * l..s * l + p].copy_from_slice(prompt);
+        for i in p..l {
+            tokens[s * l + i] = mask_id;
+        }
+    }
+    // dummy rows: copy of row 0 (keeps the forward numerically healthy)
+    for s in prompts.len()..b {
+        let (head, tail) = tokens.split_at_mut(s * l);
+        tail[..l].copy_from_slice(&head[..l]);
+    }
+
+    let n_samples = prompts.len();
+    let mut done = vec![false; n_samples];
+    let mut steps = vec![0usize; n_samples];
+    let mut commit_step = vec![vec![usize::MAX; g]; n_samples];
+    let mut per_step: Vec<Vec<Vec<usize>>> = vec![Vec::new(); n_samples];
+    let mut prev_probs: Vec<Vec<f32>> = vec![Vec::new(); n_samples]; // [g*v]
+    let mut cur_block = vec![0usize; n_samples];
+
+    let block_len = g / cfg.blocks;
+
+    for step in 0..max_steps {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let out: StepOutput = model.forward(&tokens)?;
+
+        for s in 0..n_samples {
+            if done[s] {
+                continue;
+            }
+            steps[s] = step + 1;
+
+            // ---- candidate set: masked positions in the active block ----
+            let (blk_start, blk_end) = loop {
+                let b0 = p + cur_block[s] * block_len;
+                let b1 = if cur_block[s] == cfg.blocks - 1 {
+                    p + g
+                } else {
+                    b0 + block_len
+                };
+                let any_masked =
+                    (b0..b1).any(|i| tokens[s * l + i] == mask_id);
+                if any_masked || cur_block[s] == cfg.blocks - 1 {
+                    break (b0, b1);
+                }
+                cur_block[s] += 1;
+            };
+            let positions: Vec<usize> = (blk_start..blk_end)
+                .filter(|&i| tokens[s * l + i] == mask_id)
+                .collect();
+            if positions.is_empty() {
+                done[s] = true;
+                continue;
+            }
+
+            // ---- per-candidate distributions ----------------------------
+            let n = positions.len();
+            let mut conf = vec![0.0f32; n];
+            let mut amax = vec![0i32; n];
+            let mut ent = vec![0.0f32; n];
+            let mut kl = vec![f32::INFINITY; n];
+            let mut probs_buf = vec![0.0f32; n * v];
+            for (c, &pos) in positions.iter().enumerate() {
+                let row = out.logits.slice3(s, pos);
+                let pb = &mut probs_buf[c * v..(c + 1) * v];
+                pb.copy_from_slice(row);
+                if cfg.eos_suppress {
+                    pb[cfg.eos_id as usize] = f32::NEG_INFINITY;
+                }
+                softmax_inplace(pb);
+                let (ai, av) = argmax(pb);
+                conf[c] = av;
+                amax[c] = ai as i32;
+                ent[c] = entropy(pb);
+                let gen_pos = pos - p;
+                if !prev_probs[s].is_empty() {
+                    let prev = &prev_probs[s][gen_pos * v..(gen_pos + 1) * v];
+                    if prev.iter().any(|&x| x > 0.0) {
+                        kl[c] = kl_div(pb, prev);
+                    }
+                }
+            }
+
+            // ---- candidate-pair edge scores ------------------------------
+            let mut scores = vec![0.0f32; n * n];
+            let mut degrees = vec![0.0f32; n];
+            if matches!(cfg.method, Method::DapdStaged | Method::DapdDirect) {
+                if let Some(es) = &out.edge_scores {
+                    for (ci, &i) in positions.iter().enumerate() {
+                        for (cj, &j) in positions.iter().enumerate() {
+                            if ci != cj {
+                                scores[ci * n + cj] = es.at3(s, i, j);
+                            }
+                        }
+                    }
+                } else if let Some(attn) = &out.attn_avg {
+                    for (ci, &i) in positions.iter().enumerate() {
+                        for (cj, &j) in positions.iter().enumerate() {
+                            if ci != cj {
+                                scores[ci * n + cj] =
+                                    0.5 * (attn.at3(s, i, j) + attn.at3(s, j, i));
+                            }
+                        }
+                    }
+                }
+                crate::graph::max_normalize(&mut scores);
+                for ci in 0..n {
+                    degrees[ci] = scores[ci * n..(ci + 1) * n].iter().sum();
+                }
+            }
+
+            let masked_total =
+                (p..p + g).filter(|&i| tokens[s * l + i] == mask_id).count();
+            let ctx = StepCtx {
+                positions: &positions,
+                conf: &conf,
+                argmax_tok: &amax,
+                entropy: &ent,
+                kl_prev: &kl,
+                scores_norm: &scores,
+                degrees: &degrees,
+                progress: 1.0 - masked_total as f32 / g as f32,
+                mask_ratio: masked_total as f32 / g as f32,
+            };
+            let mut selected = strategy.select(&ctx);
+            if selected.is_empty() {
+                // guarantee progress: commit the max-confidence candidate
+                let (best, _) = argmax(&conf);
+                selected = vec![best];
+            }
+            selected.sort_unstable();
+            selected.dedup();
+
+            // ---- commit ---------------------------------------------------
+            let mut committed = Vec::with_capacity(selected.len());
+            for &c in &selected {
+                let pos = positions[c];
+                tokens[s * l + pos] = amax[c];
+                commit_step[s][pos - p] = step;
+                committed.push(pos - p);
+            }
+            per_step[s].push(committed);
+
+            // store this step's distributions for KLASS stability
+            if prev_probs[s].is_empty() {
+                prev_probs[s] = vec![0.0f32; g * v];
+            }
+            for (c, &pos) in positions.iter().enumerate() {
+                let gen_pos = pos - p;
+                prev_probs[s][gen_pos * v..(gen_pos + 1) * v]
+                    .copy_from_slice(&probs_buf[c * v..(c + 1) * v]);
+            }
+
+            // done when nothing masked remains in the generation window
+            let remaining =
+                (p..p + g).any(|i| tokens[s * l + i] == mask_id);
+            if !remaining {
+                done[s] = true;
+            }
+        }
+    }
+
+    Ok((0..n_samples)
+        .map(|s| {
+            let row = &tokens[s * l..(s + 1) * l];
+            DecodeOutcome {
+                tokens: row.to_vec(),
+                gen: row[p..p + g].to_vec(),
+                steps: steps[s],
+                commit_step: commit_step[s]
+                    .iter()
+                    .map(|&x| if x == usize::MAX { 0 } else { x })
+                    .collect(),
+                per_step_commits: per_step[s].clone(),
+            }
+        })
+        .collect())
+}
+
+/// Decode an arbitrary number of prompts by chunking into model batches.
+pub fn decode_all(
+    model: &dyn ForwardModel,
+    prompts: &[Vec<i32>],
+    cfg: &DecodeConfig,
+) -> Result<Vec<DecodeOutcome>> {
+    let mut out = Vec::with_capacity(prompts.len());
+    for chunk in prompts.chunks(model.batch()) {
+        out.extend(decode_batch(model, chunk, cfg)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockModel;
+
+    fn mock() -> MockModel {
+        MockModel::new(2, 24, 8, 16)
+    }
+
+    fn prompts(n: usize) -> Vec<Vec<i32>> {
+        (0..n).map(|i| vec![(3 + i as i32) % 10 + 2; 8]).collect()
+    }
+
+    #[test]
+    fn original_decodes_one_per_step() {
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::Original);
+        let outs = decode_batch(&m, &prompts(1), &cfg).unwrap();
+        let o = &outs[0];
+        assert_eq!(o.steps, 16); // gen_len = 24 - 8
+        assert!(o.per_step_commits.iter().all(|c| c.len() == 1));
+        // fully decoded
+        assert!(o.gen.iter().all(|&t| t != m.mask_id));
+    }
+
+    #[test]
+    fn all_methods_complete_and_match_mock_targets() {
+        let m = mock();
+        for method in Method::all() {
+            let cfg = DecodeConfig::new(method);
+            let outs = decode_batch(&m, &prompts(2), &cfg).unwrap();
+            for o in &outs {
+                assert!(o.steps <= 16 + 4, "{method:?} too many steps");
+                assert!(o.gen.iter().all(|&t| t != m.mask_id));
+                // mock is deterministic: every method agrees on content
+                for (i, &t) in o.gen.iter().enumerate() {
+                    assert_eq!(t, m.true_token(8 + i), "{method:?} pos {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_methods_use_fewer_steps_than_original() {
+        let m = mock();
+        let base = decode_batch(&m, &prompts(1), &DecodeConfig::new(Method::Original)).unwrap()[0]
+            .steps;
+        // The mock's confidence frontier is sequential, so threshold-based
+        // Fast-dLLM can only tie Original; the dependency-aware methods
+        // exploit the banded graph and must strictly win.
+        for method in [Method::DapdStaged, Method::DapdDirect] {
+            let s = decode_batch(&m, &prompts(1), &DecodeConfig::new(method)).unwrap()[0].steps;
+            assert!(s < base, "{method:?}: {s} !< {base}");
+        }
+        let fd =
+            decode_batch(&m, &prompts(1), &DecodeConfig::new(Method::FastDllm)).unwrap()[0].steps;
+        assert!(fd <= base);
+    }
+
+    #[test]
+    fn trajectory_consistency() {
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::DapdStaged);
+        let o = &decode_batch(&m, &prompts(1), &cfg).unwrap()[0];
+        // every generation position committed exactly once across steps
+        let mut seen = vec![false; 16];
+        for commits in &o.per_step_commits {
+            for &c in commits {
+                assert!(!seen[c], "double commit at {c}");
+                seen[c] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // commit_step consistent with per_step_commits
+        for (step, commits) in o.per_step_commits.iter().enumerate() {
+            for &c in commits {
+                assert_eq!(o.commit_step[c], step);
+            }
+        }
+    }
+
+    #[test]
+    fn block_decoding_is_left_to_right() {
+        let m = mock();
+        let mut cfg = DecodeConfig::new(Method::FastDllm);
+        cfg.blocks = 4; // 16 / 4 = 4 per block
+        let o = &decode_batch(&m, &prompts(1), &cfg).unwrap()[0];
+        // a position in block k must not commit before any position of
+        // block k-1 finishes... weaker invariant: max commit step of block
+        // k-1 <= min commit step of block k
+        for k in 1..4 {
+            let prev_max = (0..4).map(|i| o.commit_step[(k - 1) * 4 + i]).max().unwrap();
+            let cur_min = (0..4).map(|i| o.commit_step[k * 4 + i]).min().unwrap();
+            assert!(prev_max <= cur_min, "block order violated at {k}");
+        }
+    }
+
+    #[test]
+    fn eos_suppression_blocks_eos() {
+        let mut m = mock();
+        m.mask_id = 1;
+        let mut cfg = DecodeConfig::new(Method::FastDllm);
+        cfg.eos_suppress = true;
+        // make the mock's "true" token EOS at some positions impossible:
+        // with suppression, argmax never equals eos_id
+        cfg.eos_id = m.true_token(10);
+        let o = &decode_batch(&m, &prompts(1), &cfg).unwrap()[0];
+        assert!(o.gen.iter().all(|&t| t != cfg.eos_id));
+    }
+
+    #[test]
+    fn decode_all_chunks() {
+        let m = mock(); // batch = 2
+        let cfg = DecodeConfig::new(Method::FastDllm);
+        let outs = decode_all(&m, &prompts(5), &cfg).unwrap();
+        assert_eq!(outs.len(), 5);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::Original);
+        assert!(decode_batch(&m, &[], &cfg).is_err());
+        assert!(decode_batch(&m, &prompts(3), &cfg).is_err()); // batch 2
+        let bad = vec![vec![0i32; 5]]; // wrong prompt len
+        assert!(decode_batch(&m, &bad, &cfg).is_err());
+        let mut cfg2 = DecodeConfig::new(Method::Original);
+        cfg2.blocks = 0;
+        assert!(decode_batch(&m, &prompts(1), &cfg2).is_err());
+    }
+}

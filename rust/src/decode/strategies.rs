@@ -1,0 +1,373 @@
+//! The training-free parallel decoding strategies (paper Sec. 2.2, 4.3).
+//!
+//! Each returns candidate indices to unmask this step.  An empty return
+//! is upgraded to {argmax-confidence} by the driver, so every strategy
+//! makes progress (matching all the papers' fallback behavior).
+
+use crate::graph::DepGraph;
+
+use super::{Method, MethodParams, StepCtx};
+
+pub trait Strategy: Send + Sync {
+    fn select(&self, ctx: &StepCtx) -> Vec<usize>;
+}
+
+pub fn make_strategy(method: Method, params: MethodParams) -> Box<dyn Strategy> {
+    match method {
+        Method::Original => Box::new(Original),
+        Method::FastDllm => Box::new(FastDllm { params }),
+        Method::EbSampler => Box::new(EbSampler { params }),
+        Method::Klass => Box::new(Klass { params }),
+        Method::DapdStaged => Box::new(Dapd {
+            params,
+            direct: false,
+        }),
+        Method::DapdDirect => Box::new(Dapd {
+            params,
+            direct: true,
+        }),
+    }
+}
+
+/// Confidence top-1: classic MaskGIT-style sequential decoding.
+pub struct Original;
+
+impl Strategy for Original {
+    fn select(&self, ctx: &StepCtx) -> Vec<usize> {
+        let (best, _) = crate::tensor::argmax(ctx.conf);
+        vec![best]
+    }
+}
+
+/// Fast-dLLM: unmask every candidate whose confidence clears a fixed
+/// threshold (Wu et al., 2026).
+pub struct FastDllm {
+    params: MethodParams,
+}
+
+impl Strategy for FastDllm {
+    fn select(&self, ctx: &StepCtx) -> Vec<usize> {
+        (0..ctx.conf.len())
+            .filter(|&c| ctx.conf[c] > self.params.conf_threshold)
+            .collect()
+    }
+}
+
+/// EB-Sampler: take the largest confidence-ordered prefix whose summed
+/// entropy stays within the budget gamma (Ben-Hamu et al., 2025).
+pub struct EbSampler {
+    params: MethodParams,
+}
+
+impl Strategy for EbSampler {
+    fn select(&self, ctx: &StepCtx) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..ctx.conf.len()).collect();
+        order.sort_by(|&a, &b| {
+            ctx.conf[b]
+                .partial_cmp(&ctx.conf[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut out = Vec::new();
+        let mut budget = 0.0f32;
+        for &c in &order {
+            budget += ctx.entropy[c];
+            if !out.is_empty() && budget > self.params.gamma {
+                break;
+            }
+            out.push(c); // first candidate always accepted
+        }
+        out
+    }
+}
+
+/// KLASS: confident AND stable — the token distribution barely moved
+/// between consecutive denoising steps (Kim et al., 2025b).
+pub struct Klass {
+    params: MethodParams,
+}
+
+impl Strategy for Klass {
+    fn select(&self, ctx: &StepCtx) -> Vec<usize> {
+        (0..ctx.conf.len())
+            .filter(|&c| {
+                ctx.conf[c] > self.params.conf_threshold
+                    && ctx.kl_prev[c] < self.params.kl_threshold
+            })
+            .collect()
+    }
+}
+
+/// DAPD (Sec. 4.3): Welsh-Powell independent set on the attention graph,
+/// ordered by confidence-weighted proxy degree d~_i * conf_i.
+///
+/// `direct = false` (Staged): once the remaining mask ratio drops below
+/// `stage_ratio`, additionally admit all candidates with conf >
+/// `conf_threshold` — the graph is sparse by then and confidence acts as
+/// an aggressive independent-set approximation.
+///
+/// `direct = true` (Direct, Remark 4.1): at every step, first commit all
+/// conf >= 1 - eps candidates (joint = product of marginals when a
+/// marginal is degenerate), then run the dependency-aware selection on
+/// the remaining candidates.
+pub struct Dapd {
+    params: MethodParams,
+    direct: bool,
+}
+
+impl Strategy for Dapd {
+    fn select(&self, ctx: &StepCtx) -> Vec<usize> {
+        let n = ctx.positions.len();
+        let tau = self.params.tau.at(ctx.progress);
+
+        let mut pre_committed: Vec<usize> = Vec::new();
+        let mut eligible: Vec<bool> = vec![true; n];
+        if self.direct {
+            for c in 0..n {
+                if ctx.conf[c] >= 1.0 - self.params.conf_one_eps {
+                    pre_committed.push(c);
+                    eligible[c] = false;
+                }
+            }
+        }
+
+        // dependency graph over eligible candidates at this step's tau
+        let graph = DepGraph::from_scores(
+            n,
+            |i, j| {
+                if eligible[i] && eligible[j] {
+                    ctx.scores_norm[i * n + j]
+                } else {
+                    // pre-committed nodes leave the graph entirely
+                    f32::NEG_INFINITY
+                }
+            },
+            tau,
+        );
+
+        // confidence-weighted degree ordering (Sec. 4.3 "Practical
+        // Implementation") by default; other rules exist for the
+        // ordering ablation.  Ineligible nodes sink to the bottom and
+        // are skipped below.
+        use super::DapdOrdering as O;
+        let priority: Vec<f32> = (0..n)
+            .map(|c| {
+                if !eligible[c] {
+                    return f32::NEG_INFINITY;
+                }
+                match self.params.ordering {
+                    O::ConfDegree => ctx.degrees[c] * ctx.conf[c],
+                    O::Degree => ctx.degrees[c],
+                    O::Conf => ctx.conf[c],
+                    O::Index => -(c as f32),
+                }
+            })
+            .collect();
+        let mut selected: Vec<usize> = graph
+            .welsh_powell_set(&priority)
+            .into_iter()
+            .filter(|&c| eligible[c])
+            .collect();
+
+        // Staged confidence shortcut in the sparse regime.
+        if !self.direct && ctx.mask_ratio < self.params.stage_ratio {
+            for c in 0..n {
+                if ctx.conf[c] > self.params.conf_threshold && !selected.contains(&c) {
+                    selected.push(c);
+                }
+            }
+        }
+
+        selected.extend(pre_committed);
+        selected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TauSchedule;
+
+    /// Hand-built StepCtx over owned buffers.
+    struct CtxBuf {
+        positions: Vec<usize>,
+        conf: Vec<f32>,
+        amax: Vec<i32>,
+        ent: Vec<f32>,
+        kl: Vec<f32>,
+        scores: Vec<f32>,
+        degrees: Vec<f32>,
+        progress: f32,
+        mask_ratio: f32,
+    }
+
+    impl CtxBuf {
+        fn new(conf: Vec<f32>) -> CtxBuf {
+            let n = conf.len();
+            CtxBuf {
+                positions: (0..n).collect(),
+                amax: vec![5; n],
+                ent: conf.iter().map(|c| 1.0 - c).collect(),
+                kl: vec![0.0; n],
+                scores: vec![0.0; n * n],
+                degrees: vec![0.0; n],
+                conf,
+                progress: 0.0,
+                mask_ratio: 1.0,
+            }
+        }
+
+        fn with_edge(mut self, i: usize, j: usize, s: f32) -> CtxBuf {
+            let n = self.conf.len();
+            self.scores[i * n + j] = s;
+            self.scores[j * n + i] = s;
+            self.degrees[i] += s;
+            self.degrees[j] += s;
+            self
+        }
+
+        fn ctx(&self) -> StepCtx<'_> {
+            StepCtx {
+                positions: &self.positions,
+                conf: &self.conf,
+                argmax_tok: &self.amax,
+                entropy: &self.ent,
+                kl_prev: &self.kl,
+                scores_norm: &self.scores,
+                degrees: &self.degrees,
+                progress: self.progress,
+                mask_ratio: self.mask_ratio,
+            }
+        }
+    }
+
+    fn params() -> MethodParams {
+        MethodParams {
+            tau: TauSchedule::new(0.1, 0.1),
+            ..MethodParams::default()
+        }
+    }
+
+    #[test]
+    fn original_picks_max_conf() {
+        let b = CtxBuf::new(vec![0.3, 0.9, 0.5]);
+        assert_eq!(Original.select(&b.ctx()), vec![1]);
+    }
+
+    #[test]
+    fn fast_dllm_thresholds() {
+        let s = FastDllm { params: params() };
+        let b = CtxBuf::new(vec![0.95, 0.5, 0.92, 0.89]);
+        assert_eq!(s.select(&b.ctx()), vec![0, 2]);
+        // nothing above threshold -> empty (driver falls back)
+        let b2 = CtxBuf::new(vec![0.5, 0.6]);
+        assert!(s.select(&b2.ctx()).is_empty());
+    }
+
+    #[test]
+    fn eb_sampler_entropy_budget() {
+        let mut p = params();
+        p.gamma = 0.16;
+        let s = EbSampler { params: p };
+        // conf order: 0.95(H=.05), 0.9(H=.1), 0.8(H=.2)
+        let b = CtxBuf::new(vec![0.8, 0.95, 0.9]);
+        // prefix sums: .05, .15, .35 -> first two fit within 0.16
+        assert_eq!(s.select(&b.ctx()), vec![1, 2]);
+    }
+
+    #[test]
+    fn eb_sampler_always_takes_one() {
+        let mut p = params();
+        p.gamma = 0.0;
+        let s = EbSampler { params: p };
+        let b = CtxBuf::new(vec![0.5, 0.6]);
+        assert_eq!(s.select(&b.ctx()).len(), 1);
+    }
+
+    #[test]
+    fn klass_needs_confidence_and_stability() {
+        let s = Klass { params: params() };
+        let mut b = CtxBuf::new(vec![0.95, 0.95, 0.5]);
+        b.kl = vec![0.001, 0.5, 0.001]; // candidate 1 unstable
+        assert_eq!(s.select(&b.ctx()), vec![0]);
+    }
+
+    #[test]
+    fn dapd_respects_edges() {
+        let s = Dapd {
+            params: params(),
+            direct: false,
+        };
+        // two strongly-coupled candidates + one isolated
+        let b = CtxBuf::new(vec![0.9, 0.8, 0.7]).with_edge(0, 1, 0.9);
+        let sel = s.select(&b.ctx());
+        // 0 has higher conf*degree than 1 -> selected; 1 conflicts; 2 free
+        assert!(sel.contains(&0));
+        assert!(!sel.contains(&1));
+        assert!(sel.contains(&2));
+    }
+
+    #[test]
+    fn dapd_hub_priority() {
+        // star: center 1 coupled to 0 and 2; center picked first despite
+        // equal confidence, because its degree dominates
+        let s = Dapd {
+            params: params(),
+            direct: false,
+        };
+        let b = CtxBuf::new(vec![0.8, 0.8, 0.8])
+            .with_edge(0, 1, 0.5)
+            .with_edge(1, 2, 0.5);
+        let sel = s.select(&b.ctx());
+        assert_eq!(sel, vec![1]);
+    }
+
+    #[test]
+    fn dapd_staged_conf_shortcut_after_half() {
+        let s = Dapd {
+            params: params(),
+            direct: false,
+        };
+        // coupled pair, both very confident; early: only one unmasks
+        let mut b = CtxBuf::new(vec![0.99, 0.98]).with_edge(0, 1, 0.9);
+        b.mask_ratio = 0.9;
+        assert_eq!(s.select(&b.ctx()).len(), 1);
+        // late (sparse regime): conf > 0.9 shortcut admits both
+        b.mask_ratio = 0.3;
+        let mut sel = s.select(&b.ctx());
+        sel.sort_unstable();
+        assert_eq!(sel, vec![0, 1]);
+    }
+
+    #[test]
+    fn dapd_direct_commits_conf_one() {
+        let s = Dapd {
+            params: params(),
+            direct: true,
+        };
+        // candidate 0 has conf 1.0 and is coupled to 1: both still decode
+        // (0 via direct commit, 1 as now-unconflicted graph node)
+        let b = CtxBuf::new(vec![0.9999, 0.8]).with_edge(0, 1, 0.9);
+        let mut sel = s.select(&b.ctx());
+        sel.sort_unstable();
+        assert_eq!(sel, vec![0, 1]);
+    }
+
+    #[test]
+    fn dapd_tau_schedule_prunes_edges_over_time() {
+        let p = MethodParams {
+            tau: TauSchedule::new(0.05, 0.95),
+            ..MethodParams::default()
+        };
+        let s = Dapd {
+            params: p,
+            direct: false,
+        };
+        let mut b = CtxBuf::new(vec![0.9, 0.8]).with_edge(0, 1, 0.5);
+        b.mask_ratio = 0.9; // keep staged shortcut off
+        b.progress = 0.0; // tau = 0.05 < 0.5 -> edge present
+        assert_eq!(s.select(&b.ctx()).len(), 1);
+        b.progress = 1.0; // tau = 0.95 > 0.5 -> edge pruned
+        assert_eq!(s.select(&b.ctx()).len(), 2);
+    }
+}

@@ -1,0 +1,236 @@
+//! Sec. 3.2 MRF validation (Tables 1, 9, 10): does attention recover the
+//! ground-truth dependency structure of the synthetic dataset?
+//!
+//! Drives the toy artifact with step-by-step decoding along random
+//! unmasking orders; at every step, builds edge scores from a selectable
+//! subset of layers and evaluates AUC / edge-ratio / OVR against the
+//! known MRF restricted to the still-masked nodes.
+
+use anyhow::{bail, Result};
+
+use crate::graph::metrics::{evaluate, GraphEval};
+use crate::runtime::{ForwardModel, MrfSpec};
+use crate::tensor::{argmax, Tensor};
+use crate::util::rng::Pcg;
+use crate::util::stats;
+
+/// Which layers feed the edge scores (Table 10 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerSel {
+    LastK(usize),
+    FirstK(usize),
+    All,
+}
+
+impl LayerSel {
+    pub fn indices(&self, n_layers: usize) -> Vec<usize> {
+        match *self {
+            LayerSel::LastK(k) => (n_layers.saturating_sub(k)..n_layers).collect(),
+            LayerSel::FirstK(k) => (0..k.min(n_layers)).collect(),
+            LayerSel::All => (0..n_layers).collect(),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            LayerSel::LastK(k) => format!("last-{k}"),
+            LayerSel::FirstK(k) => format!("first-{k}"),
+            LayerSel::All => "all".into(),
+        }
+    }
+}
+
+/// Per-step aggregate over all paths.
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub auc_mean: f64,
+    pub auc_sd: f64,
+    pub ratio_mean: f64,
+    pub ratio_sd: f64,
+    pub ovr_mean: f64,
+    pub ovr_sd: f64,
+    pub n: usize,
+}
+
+/// Overall summary (the Table 1 row).
+#[derive(Debug, Clone)]
+pub struct MrfSummary {
+    pub auc: f64,
+    pub ratio: f64,
+    pub ovr: f64,
+    pub per_step: Vec<StepMetrics>,
+}
+
+/// Average the selected layers of `attn_layers` [B, nl, L, L] for batch
+/// row `b` into a dense [L*L] buffer.
+fn layer_avg(attn: &Tensor, b: usize, layers: &[usize], l: usize) -> Vec<f32> {
+    let nl = attn.dims[1];
+    let mut out = vec![0.0f32; l * l];
+    for &layer in layers {
+        debug_assert!(layer < nl);
+        for i in 0..l {
+            for j in 0..l {
+                out[i * l + j] += attn.data[((b * nl + layer) * l + i) * l + j];
+            }
+        }
+    }
+    let inv = 1.0 / layers.len() as f32;
+    for x in &mut out {
+        *x *= inv;
+    }
+    out
+}
+
+/// Run the validation: `n_paths` random unmasking orders, metrics at every
+/// step with >= 2 masked nodes and >= 1 true edge among them.
+pub fn run_mrf_validation(
+    model: &dyn ForwardModel,
+    spec: &MrfSpec,
+    n_layers: usize,
+    sel: LayerSel,
+    n_paths: usize,
+    seed: u64,
+) -> Result<MrfSummary> {
+    let l = spec.len;
+    if model.seq_len() != l {
+        bail!("toy model seq_len {} != mrf len {l}", model.seq_len());
+    }
+    let b = model.batch();
+    let layers = sel.indices(n_layers);
+    let mut rng = Pcg::new(seed);
+
+    // per decoding step: vectors of per-path metric values
+    let mut aucs: Vec<Vec<f64>> = vec![Vec::new(); l];
+    let mut ratios: Vec<Vec<f64>> = vec![Vec::new(); l];
+    let mut ovrs: Vec<Vec<f64>> = vec![Vec::new(); l];
+
+    let mut path = 0;
+    while path < n_paths {
+        let chunk = (n_paths - path).min(b);
+        // all rows start fully masked
+        let mut tokens = vec![spec.mask_id; b * l];
+        for step in 0..l {
+            let out = model.forward(&tokens)?;
+            let attn = out
+                .attn_layers
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("toy artifact lacks attn_layers"))?;
+
+            for row in 0..chunk {
+                let masked: Vec<usize> = (0..l)
+                    .filter(|&i| tokens[row * l + i] == spec.mask_id)
+                    .collect();
+                // metrics while the masked subgraph is non-trivial
+                if masked.len() >= 2 {
+                    let avg = layer_avg(attn, row, &layers, l);
+                    let n = masked.len();
+                    let mut scores = vec![0.0f32; n * n];
+                    for (ci, &i) in masked.iter().enumerate() {
+                        for (cj, &j) in masked.iter().enumerate() {
+                            if ci != cj {
+                                scores[ci * n + cj] =
+                                    0.5 * (avg[i * l + j] + avg[j * l + i]);
+                            }
+                        }
+                    }
+                    // ground-truth subgraph over candidates
+                    let sub_edges: Vec<(usize, usize)> = spec
+                        .true_edges
+                        .iter()
+                        .filter_map(|&(a, bb)| {
+                            let ia = masked.iter().position(|&m| m == a)?;
+                            let ib = masked.iter().position(|&m| m == bb)?;
+                            Some((ia.min(ib), ia.max(ib)))
+                        })
+                        .collect();
+                    if !sub_edges.is_empty()
+                        && sub_edges.len() < n * (n - 1) / 2
+                    {
+                        let deg: Vec<f64> = (0..n)
+                            .map(|c| {
+                                sub_edges
+                                    .iter()
+                                    .filter(|&&(a, bb)| a == c || bb == c)
+                                    .count() as f64
+                            })
+                            .collect();
+                        let e: GraphEval = evaluate(&scores, n, &sub_edges, &deg);
+                        if e.auc.is_finite() {
+                            aucs[step].push(e.auc);
+                            ratios[step].push(e.ratio.min(1e6));
+                            ovrs[step].push(e.ovr);
+                        }
+                    }
+                }
+                // unmask one random position with the model's argmax
+                let masked: Vec<usize> = (0..l)
+                    .filter(|&i| tokens[row * l + i] == spec.mask_id)
+                    .collect();
+                if let Some(&pos) = masked.get(rng.below(masked.len().max(1))) {
+                    let mut probs = out.logits.slice3(row, pos).to_vec();
+                    // exclude the mask token itself from the argmax
+                    probs[spec.mask_id as usize] = f32::NEG_INFINITY;
+                    let (tok, _) = argmax(&probs);
+                    tokens[row * l + pos] = tok as i32;
+                }
+            }
+        }
+        path += chunk;
+    }
+
+    let mut per_step = Vec::new();
+    let mut all_auc = Vec::new();
+    let mut all_ratio = Vec::new();
+    let mut all_ovr = Vec::new();
+    for step in 0..l {
+        if aucs[step].is_empty() {
+            continue;
+        }
+        per_step.push(StepMetrics {
+            step: step + 1,
+            auc_mean: stats::mean(&aucs[step]),
+            auc_sd: stats::std_dev(&aucs[step]),
+            ratio_mean: stats::mean(&ratios[step]),
+            ratio_sd: stats::std_dev(&ratios[step]),
+            ovr_mean: stats::mean(&ovrs[step]),
+            ovr_sd: stats::std_dev(&ovrs[step]),
+            n: aucs[step].len(),
+        });
+        all_auc.extend_from_slice(&aucs[step]);
+        all_ratio.extend_from_slice(&ratios[step]);
+        all_ovr.extend_from_slice(&ovrs[step]);
+    }
+    Ok(MrfSummary {
+        auc: stats::mean(&all_auc),
+        ratio: stats::mean(&all_ratio),
+        ovr: stats::mean(&all_ovr),
+        per_step,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_sel_indices() {
+        assert_eq!(LayerSel::LastK(2).indices(8), vec![6, 7]);
+        assert_eq!(LayerSel::FirstK(2).indices(8), vec![0, 1]);
+        assert_eq!(LayerSel::All.indices(3), vec![0, 1, 2]);
+        assert_eq!(LayerSel::LastK(5).indices(3), vec![0, 1, 2]);
+        assert_eq!(LayerSel::LastK(1).label(), "last-1");
+    }
+
+    #[test]
+    fn layer_avg_averages() {
+        // 2 layers, L=2: layer0 all 1.0, layer1 all 3.0
+        let mut data = vec![1.0f32; 4];
+        data.extend(vec![3.0f32; 4]);
+        let t = Tensor::new(data, &[1, 2, 2, 2]);
+        let avg = layer_avg(&t, 0, &[0, 1], 2);
+        assert!(avg.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        let only1 = layer_avg(&t, 0, &[1], 2);
+        assert!(only1.iter().all(|&x| (x - 3.0).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,387 @@
+//! The attention-induced dependency graph (paper Secs. 3-4).
+//!
+//! Masked positions are nodes; symmetrized attention scores above a
+//! threshold are edges (an MRF proxy).  Parallel decoding reduces to
+//! selecting an independent set per step; DAPD uses a Welsh-Powell-style
+//! degree-prioritized greedy selection (Sec. 4.3).
+
+pub mod metrics;
+
+use crate::tensor::Tensor;
+
+/// Linear threshold schedule tau_t over decoding progress (App. A).
+///
+/// Applied to **max-normalized** edge scores: the paper's Fig. 6 studies
+/// normalized mask-to-mask scores, which makes tau dimensionless and
+/// comparable across steps/models.
+#[derive(Debug, Clone, Copy)]
+pub struct TauSchedule {
+    pub min: f32,
+    pub max: f32,
+}
+
+impl TauSchedule {
+    pub fn new(min: f32, max: f32) -> TauSchedule {
+        assert!(min <= max);
+        TauSchedule { min, max }
+    }
+
+    /// progress in [0,1] = fraction of the generation window decoded.
+    pub fn at(&self, progress: f32) -> f32 {
+        self.min + (self.max - self.min) * progress.clamp(0.0, 1.0)
+    }
+}
+
+/// Dependency graph over `n` candidate nodes with bitset adjacency rows
+/// (u64 words) — dense enough for L <= a few hundred, and Welsh-Powell
+/// non-adjacency checks become word-wise AND.
+#[derive(Debug, Clone)]
+pub struct DepGraph {
+    n: usize,
+    words: usize,
+    adj: Vec<u64>, // n rows x words
+    degree: Vec<u32>,
+}
+
+impl DepGraph {
+    pub fn new(n: usize) -> DepGraph {
+        let words = n.div_ceil(64);
+        DepGraph {
+            n,
+            words,
+            adj: vec![0; n * words],
+            degree: vec![0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn add_edge(&mut self, i: usize, j: usize) {
+        if i == j {
+            return;
+        }
+        let (wi, bi) = (j / 64, j % 64);
+        let (wj, bj) = (i / 64, i % 64);
+        let before = self.adj[i * self.words + wi] >> bi & 1;
+        self.adj[i * self.words + wi] |= 1 << bi;
+        self.adj[j * self.words + wj] |= 1 << bj;
+        if before == 0 {
+            self.degree[i] += 1;
+            self.degree[j] += 1;
+        }
+    }
+
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.adj[i * self.words + j / 64] >> (j % 64) & 1 == 1
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.degree[i] as usize
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.degree.iter().map(|&d| d as usize).sum::<usize>() / 2
+    }
+
+    fn row(&self, i: usize) -> &[u64] {
+        &self.adj[i * self.words..(i + 1) * self.words]
+    }
+
+    /// Build from a candidate->candidate score lookup: edge iff
+    /// `score(i,j) > tau` (scores assumed symmetric).
+    pub fn from_scores<F: Fn(usize, usize) -> f32>(n: usize, score: F, tau: f32) -> DepGraph {
+        let mut g = DepGraph::new(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if score(i, j) > tau {
+                    g.add_edge(i, j);
+                }
+            }
+        }
+        g
+    }
+
+    /// Welsh-Powell-style maximal independent set: scan nodes in the
+    /// given priority order (highest first), adding each node that is
+    /// non-adjacent to everything already selected (Sec. 4.3).
+    ///
+    /// `priority` has one entry per node; ties broken by node index for
+    /// determinism.  Returns selected node indices.
+    pub fn welsh_powell_set(&self, priority: &[f32]) -> Vec<usize> {
+        assert_eq!(priority.len(), self.n);
+        let mut order: Vec<usize> = (0..self.n).collect();
+        order.sort_by(|&a, &b| {
+            priority[b]
+                .partial_cmp(&priority[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut selected_bits = vec![0u64; self.words];
+        let mut selected = Vec::new();
+        for &node in &order {
+            let row = self.row(node);
+            let conflict = row
+                .iter()
+                .zip(&selected_bits)
+                .any(|(r, s)| r & s != 0);
+            if !conflict {
+                selected_bits[node / 64] |= 1 << (node % 64);
+                selected.push(node);
+            }
+        }
+        selected
+    }
+
+    /// Full greedy (Welsh-Powell) coloring: repeatedly peel independent
+    /// sets by descending degree.  Returns (colors per node, n_colors);
+    /// n_colors estimates the number of parallel decode steps needed to
+    /// cover the current graph (Sec. 4.2).
+    pub fn greedy_coloring(&self) -> (Vec<usize>, usize) {
+        let mut colors = vec![usize::MAX; self.n];
+        let mut order: Vec<usize> = (0..self.n).collect();
+        order.sort_by(|&a, &b| self.degree[b].cmp(&self.degree[a]).then(a.cmp(&b)));
+        let mut n_colors = 0;
+        for &node in &order {
+            if colors[node] != usize::MAX {
+                continue;
+            }
+            let color = n_colors;
+            n_colors += 1;
+            colors[node] = color;
+            'next: for &other in &order {
+                if colors[other] != usize::MAX {
+                    continue;
+                }
+                // adjacent to any node already in this color class?
+                for w in 0..self.words {
+                    let mut class_bits = 0u64;
+                    for b in 0..64 {
+                        let idx = w * 64 + b;
+                        if idx < self.n && colors[idx] == color {
+                            class_bits |= 1 << b;
+                        }
+                    }
+                    if self.row(other)[w] & class_bits != 0 {
+                        continue 'next;
+                    }
+                }
+                colors[other] = color;
+            }
+        }
+        (colors, n_colors)
+    }
+
+    /// Independent-set verification (used by tests and debug assertions).
+    pub fn is_independent(&self, nodes: &[usize]) -> bool {
+        for (a, &i) in nodes.iter().enumerate() {
+            for &j in &nodes[a + 1..] {
+                if self.has_edge(i, j) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Symmetrized masked edge scores computed natively from an attention
+/// matrix (the L1 kernel does the same on-device for serving artifacts;
+/// this path serves toy artifacts and integration cross-checks).
+///
+/// `attn`: [L, L] row-stochastic; `masked`: candidate positions.
+/// Returns (scores dense [n, n] over candidates, degrees [n]).
+pub fn edge_scores_from_attn(attn: &Tensor, b: usize, masked: &[usize]) -> (Vec<f32>, Vec<f32>) {
+    let n = masked.len();
+    let mut scores = vec![0.0f32; n * n];
+    let mut degrees = vec![0.0f32; n];
+    for (ii, &i) in masked.iter().enumerate() {
+        for (jj, &j) in masked.iter().enumerate() {
+            if ii == jj {
+                continue;
+            }
+            let s = 0.5 * (attn.at3(b, i, j) + attn.at3(b, j, i));
+            scores[ii * n + jj] = s;
+            degrees[ii] += s;
+        }
+    }
+    (scores, degrees)
+}
+
+/// Max-normalize a dense score matrix in place; returns the max.
+pub fn max_normalize(scores: &mut [f32]) -> f32 {
+    let m = scores.iter().cloned().fold(0.0f32, f32::max);
+    if m > 0.0 {
+        let inv = 1.0 / m;
+        for s in scores.iter_mut() {
+            *s *= inv;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    fn path_graph(n: usize) -> DepGraph {
+        let mut g = DepGraph::new(n);
+        for i in 0..n - 1 {
+            g.add_edge(i, i + 1);
+        }
+        g
+    }
+
+    #[test]
+    fn edges_and_degrees() {
+        let mut g = DepGraph::new(5);
+        g.add_edge(0, 1);
+        g.add_edge(0, 1); // idempotent
+        g.add_edge(1, 3);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 3));
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.edge_count(), 2);
+    }
+
+    #[test]
+    fn wp_set_on_path() {
+        // path 0-1-2-3-4, uniform priority: greedy by index picks 0,2,4
+        let g = path_graph(5);
+        let set = g.welsh_powell_set(&[1.0; 5]);
+        assert_eq!(set, vec![0, 2, 4]);
+        assert!(g.is_independent(&set));
+    }
+
+    #[test]
+    fn wp_set_respects_priority() {
+        let g = path_graph(3);
+        // prioritize the middle node: it blocks both neighbors
+        let set = g.welsh_powell_set(&[0.0, 1.0, 0.0]);
+        assert_eq!(set, vec![1]);
+    }
+
+    #[test]
+    fn wp_set_is_maximal() {
+        // no unselected node can be added
+        let mut g = DepGraph::new(6);
+        g.add_edge(0, 1);
+        g.add_edge(2, 3);
+        g.add_edge(4, 5);
+        let set = g.welsh_powell_set(&[0.9, 0.1, 0.8, 0.2, 0.7, 0.3]);
+        assert_eq!(set, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn coloring_on_triangle() {
+        let mut g = DepGraph::new(3);
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g.add_edge(0, 2);
+        let (colors, n) = g.greedy_coloring();
+        assert_eq!(n, 3);
+        let mut c = colors.clone();
+        c.sort_unstable();
+        c.dedup();
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn coloring_is_proper_prop() {
+        prop::check("coloring-proper", 30, |rng: &mut Pcg| {
+            let n = rng.range(2, 40);
+            let mut g = DepGraph::new(n);
+            for _ in 0..rng.below(3 * n) {
+                let i = rng.below(n);
+                let j = rng.below(n);
+                g.add_edge(i, j);
+            }
+            let (colors, n_colors) = g.greedy_coloring();
+            for i in 0..n {
+                assert!(colors[i] < n_colors);
+                for j in 0..n {
+                    if i != j && g.has_edge(i, j) {
+                        assert_ne!(colors[i], colors[j], "improper coloring");
+                    }
+                }
+            }
+            // n_colors <= max_degree + 1 (Welsh-Powell bound)
+            let max_deg = (0..n).map(|i| g.degree(i)).max().unwrap_or(0);
+            assert!(n_colors <= max_deg + 1, "WP bound violated");
+        });
+    }
+
+    #[test]
+    fn wp_set_independent_and_maximal_prop() {
+        prop::check("wp-independent-maximal", 40, |rng: &mut Pcg| {
+            let n = rng.range(1, 60);
+            let mut g = DepGraph::new(n);
+            for _ in 0..rng.below(2 * n) {
+                g.add_edge(rng.below(n), rng.below(n));
+            }
+            let prio: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+            let set = g.welsh_powell_set(&prio);
+            assert!(!set.is_empty());
+            assert!(g.is_independent(&set));
+            // maximality: every non-selected node conflicts with the set
+            for v in 0..n {
+                if !set.contains(&v) {
+                    assert!(
+                        set.iter().any(|&s| g.has_edge(v, s)),
+                        "set not maximal: {v} addable"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn from_scores_thresholding() {
+        let s = |i: usize, j: usize| if i + j == 3 { 0.5 } else { 0.01 };
+        let g = DepGraph::from_scores(4, s, 0.1);
+        assert!(g.has_edge(0, 3) && g.has_edge(1, 2));
+        assert_eq!(g.edge_count(), 2);
+        let g_hi = DepGraph::from_scores(4, s, 0.6);
+        assert_eq!(g_hi.edge_count(), 0);
+    }
+
+    #[test]
+    fn tau_schedule_linear() {
+        let t = TauSchedule::new(0.01, 0.05);
+        assert!((t.at(0.0) - 0.01).abs() < 1e-6);
+        assert!((t.at(1.0) - 0.05).abs() < 1e-6);
+        assert!((t.at(0.5) - 0.03).abs() < 1e-6);
+        assert!((t.at(-1.0) - 0.01).abs() < 1e-6);
+        assert!((t.at(2.0) - 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn edge_scores_from_attn_matches_definition() {
+        // 4x4 attention, candidates {1, 3}
+        let mut attn = vec![0.0f32; 16];
+        attn[1 * 4 + 3] = 0.4; // a_13
+        attn[3 * 4 + 1] = 0.2; // a_31
+        let t = Tensor::new(attn, &[1, 4, 4]);
+        let (s, d) = edge_scores_from_attn(&t, 0, &[1, 3]);
+        assert!((s[0 * 2 + 1] - 0.3).abs() < 1e-6);
+        assert!((s[1 * 2 + 0] - 0.3).abs() < 1e-6);
+        assert!((d[0] - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn max_normalize_scales() {
+        let mut s = vec![0.2, 0.4, 0.1];
+        let m = max_normalize(&mut s);
+        assert!((m - 0.4).abs() < 1e-6);
+        assert!((s[1] - 1.0).abs() < 1e-6);
+        let mut zero = vec![0.0; 3];
+        assert_eq!(max_normalize(&mut zero), 0.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! DAPD: Dependency-Aware Parallel Decoding for diffusion LLMs.
+//!
+//! Reproduction of Kim et al. (ICML 2026) as a three-layer serving stack:
+//! Pallas kernels (L1) and a JAX masked-diffusion model (L2) are AOT-lowered
+//! at build time to HLO text; this crate (L3) loads the artifacts on the
+//! PJRT CPU client and serves parallel-decoding requests with the paper's
+//! dependency-aware strategies and all training-free baselines.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! * [`util`]        — offline substrates: json, rng, cli, stats, pool
+//! * [`tensor`]      — flat f32 tensor views + softmax/entropy/KL
+//! * [`runtime`]     — artifact registry + PJRT engine + mock model
+//! * [`graph`]       — attention-induced dependency graph, Welsh-Powell
+//! * [`decode`]      — all decoding strategies + the decode loop
+//! * [`workload`]    — eval sets, task scorers, arrival processes
+//! * [`eval`]        — experiment harness (accuracy/steps grids, segments,
+//!                     trajectories, MRF validation)
+//! * [`coordinator`] — request router, dynamic batcher, metrics
+//! * [`server`]      — JSON-over-TCP serving front end
+
+pub mod config;
+pub mod coordinator;
+pub mod decode;
+pub mod eval;
+pub mod graph;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,279 @@
+//! dapd — the DAPD serving coordinator CLI.
+//!
+//! Subcommands:
+//!   info                         list artifacts + registry summary
+//!   decode  --model M --task T --method X [--n N] [--blocks B] [--eos-inf]
+//!   grid    --model M [--tasks a,b] [--methods x,y] [--n N]
+//!   mrf     [--paths N] [--layers last-2]      Sec 3.2 validation
+//!   serve   --model M [--port P] [--method X] [--batch B]
+//!   client  --addr HOST:PORT --task T [--n N] [--method X]
+//!
+//! Common flags: --artifacts DIR (default ./artifacts), --batch B,
+//! --tau-min/--tau-max, --conf-threshold, --gamma, --kl-threshold, -v.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use dapd::coordinator::Coordinator;
+use dapd::decode::{DecodeConfig, Method, MethodParams};
+use dapd::eval::mrf::{run_mrf_validation, LayerSel};
+use dapd::eval::{run_eval, segments};
+use dapd::graph::TauSchedule;
+use dapd::runtime::{ArtifactKind, Engine, ForwardModel};
+use dapd::server::{Client, Server};
+use dapd::util::args::Args;
+use dapd::util::bench::{fmt_f, Table};
+use dapd::util::logging;
+use dapd::workload::EvalSet;
+
+fn main() {
+    let args = Args::parse_env();
+    if args.has("v") || args.has("verbose") {
+        logging::set_level(2);
+    }
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let result = match cmd.as_str() {
+        "info" => cmd_info(&args),
+        "decode" => cmd_decode(&args),
+        "grid" => cmd_grid(&args),
+        "mrf" => cmd_mrf(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        _ => {
+            eprintln!(
+                "usage: dapd <info|decode|grid|mrf|serve|client> [flags]\n\
+                 see rust/src/main.rs header for the flag reference"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn method_params(args: &Args) -> MethodParams {
+    let d = MethodParams::default();
+    MethodParams {
+        conf_threshold: args.f64_or("conf-threshold", d.conf_threshold as f64) as f32,
+        gamma: args.f64_or("gamma", d.gamma as f64) as f32,
+        kl_threshold: args.f64_or("kl-threshold", d.kl_threshold as f64) as f32,
+        tau: TauSchedule::new(
+            args.f64_or("tau-min", d.tau.min as f64) as f32,
+            args.f64_or("tau-max", d.tau.max as f64) as f32,
+        ),
+        conf_one_eps: args.f64_or("conf-one-eps", d.conf_one_eps as f64) as f32,
+        stage_ratio: args.f64_or("stage-ratio", d.stage_ratio as f64) as f32,
+        ordering: d.ordering,
+    }
+}
+
+fn decode_config(args: &Args, method: Method) -> DecodeConfig {
+    let mut cfg = DecodeConfig::new(method);
+    cfg.params = method_params(args);
+    cfg.blocks = args.usize_or("blocks", 1);
+    cfg.eos_suppress = args.has("eos-inf");
+    cfg
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let meta = &engine.meta;
+    println!("vocab: {} tokens; prompt_len {}, gen_len {}",
+             meta.vocab_size, meta.prompt_len, meta.gen_len);
+    let mut t = Table::new("Artifacts", &["name", "kind", "batch", "seq", "gen", "layers"]);
+    for a in &meta.artifacts {
+        t.row(vec![
+            a.name.clone(),
+            format!("{:?}", a.kind),
+            a.batch.to_string(),
+            a.seq_len.to_string(),
+            a.gen_len.to_string(),
+            a.n_layers.to_string(),
+        ]);
+    }
+    t.print();
+    println!("eval sets: {:?}", meta.eval_sets.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+fn cmd_decode(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let model_name = args.str_or("model", "sim-llada");
+    let task = args.str_or("task", "struct");
+    let method = Method::parse(&args.str_or("method", "dapd-staged"))
+        .ok_or_else(|| anyhow!("unknown method"))?;
+    let batch = args.usize_or("batch", 8);
+    let gen_len = args.usize_or("gen-len", engine.meta.gen_len);
+    let n = args.usize_or("n", 30);
+
+    let model = engine.model_for(&model_name, batch, gen_len)?;
+    let set = EvalSet::load(&engine.meta, &task)?.take(n);
+    let cfg = decode_config(args, method);
+    let r = run_eval(&model, &set, &cfg, method.name())?;
+
+    let mut t = Table::new(
+        &format!("{task} on {model_name}"),
+        &["Method", "Acc.", "Steps", "TPS", "PeakSegs"],
+    );
+    t.row(vec![
+        r.method.clone(),
+        fmt_f(r.accuracy_pct(), 1),
+        fmt_f(r.avg_steps, 1),
+        fmt_f(r.tps, 1),
+        fmt_f(segments::peak_segments(&r.outcomes, model.gen_len()), 2),
+    ]);
+    t.print();
+    if args.has("show-samples") {
+        for (i, o) in r.outcomes.iter().take(3).enumerate() {
+            println!("[{i}] {}", engine.meta.detok(&o.gen));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_grid(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let model_name = args.str_or("model", "sim-llada");
+    let tasks = args.list_or("tasks", &["struct", "arith", "constraint", "multiq"]);
+    let methods = args.list_or(
+        "methods",
+        &["fast-dllm", "eb-sampler", "klass", "dapd-staged", "dapd-direct"],
+    );
+    let batch = args.usize_or("batch", 8);
+    let n = args.usize_or("n", 40);
+    let model = engine.model_for(&model_name, batch, engine.meta.gen_len)?;
+
+    let mut t = Table::new(
+        &format!("Accuracy-Steps grid on {model_name} (n={n})"),
+        &["Task", "Method", "Acc.", "Steps", "TPS"],
+    );
+    for task in &tasks {
+        let set = EvalSet::load(&engine.meta, task)?.take(n);
+        for mname in &methods {
+            let method = Method::parse(mname).ok_or_else(|| anyhow!("unknown method {mname}"))?;
+            let cfg = decode_config(args, method);
+            let r = run_eval(&model, &set, &cfg, mname)?;
+            t.row(vec![
+                task.clone(),
+                mname.clone(),
+                fmt_f(r.accuracy_pct(), 1),
+                fmt_f(r.avg_steps, 1),
+                fmt_f(r.tps, 1),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn parse_layer_sel(s: &str) -> Result<LayerSel> {
+    if s == "all" {
+        return Ok(LayerSel::All);
+    }
+    if let Some(k) = s.strip_prefix("last-") {
+        return Ok(LayerSel::LastK(k.parse()?));
+    }
+    if let Some(k) = s.strip_prefix("first-") {
+        return Ok(LayerSel::FirstK(k.parse()?));
+    }
+    bail!("layer selection must be all|last-K|first-K, got {s}")
+}
+
+fn cmd_mrf(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let paths = args.usize_or("paths", 50);
+    let sel = parse_layer_sel(&args.str_or("layers", "last-2"))?;
+    let seeds: Vec<String> = engine
+        .meta
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == ArtifactKind::Toy && a.batch > 1)
+        .map(|a| a.name.clone())
+        .collect();
+    if seeds.is_empty() {
+        bail!("no toy artifacts found (run `make artifacts`)");
+    }
+    let mut t = Table::new(
+        &format!("MRF validation ({} paths x {} models, layers={})",
+                 paths, seeds.len(), sel.label()),
+        &["Model", "AUC", "Edge/Non-edge", "OVR"],
+    );
+    for name in &seeds {
+        let info = engine.meta.find_by_name(name)?.clone();
+        let model = engine.model(name)?;
+        let summary = run_mrf_validation(
+            &model,
+            &engine.meta.mrf,
+            info.n_layers,
+            sel,
+            paths,
+            args.usize_or("seed", 7) as u64,
+        )?;
+        t.row(vec![
+            name.clone(),
+            fmt_f(summary.auc, 3),
+            fmt_f(summary.ratio, 3),
+            fmt_f(summary.ovr, 3),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    // defaults < --config file.json < explicit flags (see config module)
+    let settings = dapd::config::ServeSettings::resolve(args)?;
+    let engine = Engine::load(std::path::Path::new(&settings.artifacts))?;
+    let cfg = settings.decode_config();
+    let wait = Duration::from_millis(settings.batch_wait_ms);
+
+    // leak the engine so the model can be 'static for the worker thread
+    let engine: &'static Engine = Box::leak(Box::new(engine));
+    let model = engine.model_for(&settings.model, settings.batch, engine.meta.gen_len)?;
+    let (coord, _handle) = Coordinator::start(model, wait, settings.queue_cap);
+    let metrics = coord.metrics.clone();
+    let server = Server::bind(&format!("0.0.0.0:{}", settings.port), coord, cfg)?;
+
+    // periodic metrics report
+    std::thread::spawn(move || loop {
+        std::thread::sleep(Duration::from_secs(10));
+        logging::info(&metrics.report());
+    });
+    server.run()
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7070");
+    let artifacts = artifacts_dir(args);
+    let meta = dapd::runtime::Metadata::load(&artifacts)?;
+    let task = args.str_or("task", "struct");
+    let n = args.usize_or("n", 5);
+    let set = EvalSet::load(&meta, &task)?.take(n);
+    let mut client = Client::connect(&addr)?;
+    let method = args.get("method").map(|s| s.to_string());
+    for (i, inst) in set.instances.iter().enumerate() {
+        let resp = client.request(&inst.prompt, method.as_deref())?;
+        let gen: Vec<i32> = resp
+            .get("gen")
+            .to_i64_vec()
+            .context("response missing gen")?
+            .iter()
+            .map(|&t| t as i32)
+            .collect();
+        let score = dapd::workload::scorer::score(&task, &gen, &inst.expect, &inst.spec);
+        println!(
+            "[{i}] steps={} latency={}ms score={score} gen: {}",
+            resp.get("steps").as_usize().unwrap_or(0),
+            fmt_f(resp.get("latency_ms").as_f64().unwrap_or(0.0), 1),
+            meta.detok(&gen),
+        );
+    }
+    Ok(())
+}

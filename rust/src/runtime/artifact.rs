@@ -1,0 +1,270 @@
+//! Artifact registry: parses `artifacts/metadata.json` written by the
+//! Python AOT pipeline and exposes typed views of every compiled model
+//! variant, the vocabulary, the world tables, and the eval-set index.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT-lowered forward pass (weights baked in) on disk.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub model: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub vocab: usize,
+    pub mask_id: i32,
+    pub pad_id: i32,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_model: usize,
+    pub graph_layers: Vec<usize>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// (logits, attn_avg, edge_scores, degrees) — the request path.
+    Serving,
+    /// (logits, attn_layers) — the Sec. 3.2 MRF validation path.
+    Toy,
+}
+
+/// Special token ids shared with the Python tokenizer.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecialTokens {
+    pub pad: i32,
+    pub mask: i32,
+    pub eos: i32,
+    pub sep: i32,
+    pub fill: i32,
+}
+
+/// Ground-truth MRF description for the toy experiments.
+#[derive(Debug, Clone)]
+pub struct MrfSpec {
+    pub len: usize,
+    pub vocab: usize,
+    pub mask_id: i32,
+    pub true_edges: Vec<(usize, usize)>,
+    pub true_degrees: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Metadata {
+    pub root: PathBuf,
+    pub vocab_size: usize,
+    pub vocab: BTreeMap<String, i64>,
+    pub special: SpecialTokens,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub fact_table: Vec<usize>,
+    pub para_table: Vec<usize>,
+    pub mrf: MrfSpec,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub eval_sets: BTreeMap<String, String>, // task -> relative path
+}
+
+impl Metadata {
+    pub fn load(artifacts_dir: &Path) -> Result<Metadata> {
+        let path = artifacts_dir.join("metadata.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing metadata.json: {e}"))?;
+        Self::from_json(&j, artifacts_dir)
+    }
+
+    pub fn from_json(j: &Json, root: &Path) -> Result<Metadata> {
+        let special = j.get("special");
+        let get_tok = |name: &str| -> Result<i32> {
+            special
+                .get(name)
+                .as_i64()
+                .map(|v| v as i32)
+                .ok_or_else(|| anyhow!("metadata missing special token '{name}'"))
+        };
+        let mrf = j.get("mrf");
+        let edges: Vec<(usize, usize)> = mrf
+            .get("true_edges")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|e| {
+                let v = e.to_usize_vec()?;
+                Some((v[0], v[1]))
+            })
+            .collect();
+
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").as_arr().unwrap_or(&[]) {
+            let kind = match a.get("kind").as_str() {
+                Some("serving") => ArtifactKind::Serving,
+                Some("toy") => ArtifactKind::Toy,
+                other => bail!("unknown artifact kind {:?}", other),
+            };
+            artifacts.push(ArtifactInfo {
+                name: a.get("name").as_str().unwrap_or_default().to_string(),
+                model: a.get("model").as_str().unwrap_or_default().to_string(),
+                file: a.get("file").as_str().unwrap_or_default().to_string(),
+                kind,
+                batch: a.get("batch").as_usize().context("artifact batch")?,
+                seq_len: a.get("seq_len").as_usize().context("artifact seq_len")?,
+                prompt_len: a.get("prompt_len").as_usize().unwrap_or(0),
+                gen_len: a.get("gen_len").as_usize().context("artifact gen_len")?,
+                vocab: a.get("vocab").as_usize().context("artifact vocab")?,
+                mask_id: a.get("mask_id").as_i64().context("artifact mask_id")? as i32,
+                pad_id: a.get("pad_id").as_i64().unwrap_or(-1) as i32,
+                n_layers: a.get("n_layers").as_usize().unwrap_or(0),
+                n_heads: a.get("n_heads").as_usize().unwrap_or(0),
+                d_model: a.get("d_model").as_usize().unwrap_or(0),
+                graph_layers: a.get("graph_layers").to_usize_vec().unwrap_or_default(),
+            });
+        }
+
+        let mut eval_sets = BTreeMap::new();
+        if let Some(obj) = j.get("eval_sets").as_obj() {
+            for (task, entry) in obj {
+                if let Some(f) = entry.get("file").as_str() {
+                    eval_sets.insert(task.clone(), f.to_string());
+                }
+            }
+        }
+
+        Ok(Metadata {
+            root: root.to_path_buf(),
+            vocab_size: j.get("vocab_size").as_usize().context("vocab_size")?,
+            vocab: j
+                .get("vocab")
+                .as_obj()
+                .map(|o| {
+                    o.iter()
+                        .filter_map(|(k, v)| Some((k.clone(), v.as_i64()?)))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            special: SpecialTokens {
+                pad: get_tok("pad")?,
+                mask: get_tok("mask")?,
+                eos: get_tok("eos")?,
+                sep: get_tok("sep")?,
+                fill: get_tok("fill")?,
+            },
+            prompt_len: j.get("prompt_len").as_usize().context("prompt_len")?,
+            gen_len: j.get("gen_len").as_usize().context("gen_len")?,
+            fact_table: j.get("world").get("fact").to_usize_vec().unwrap_or_default(),
+            para_table: j.get("world").get("para").to_usize_vec().unwrap_or_default(),
+            mrf: MrfSpec {
+                len: mrf.get("len").as_usize().unwrap_or(9),
+                vocab: mrf.get("vocab").as_usize().unwrap_or(4),
+                mask_id: mrf.get("mask_id").as_i64().unwrap_or(3) as i32,
+                true_edges: edges,
+                true_degrees: mrf.get("true_degrees").to_usize_vec().unwrap_or_default(),
+            },
+            artifacts,
+            eval_sets,
+        })
+    }
+
+    /// Find an artifact by model name, batch and generation length.
+    pub fn find(&self, model: &str, batch: usize, gen_len: usize) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.batch == batch && a.gen_len == gen_len)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for model={model} batch={batch} gen_len={gen_len}; have: {:?}",
+                    self.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn find_by_name(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))
+    }
+
+    /// All distinct serving models in the registry.
+    pub fn serving_models(&self) -> Vec<String> {
+        let mut models: Vec<String> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Serving)
+            .map(|a| a.model.clone())
+            .collect();
+        models.sort();
+        models.dedup();
+        models
+    }
+
+    pub fn artifact_path(&self, a: &ArtifactInfo) -> PathBuf {
+        self.root.join(&a.file)
+    }
+
+    /// Reverse vocab: id -> name (debugging / detok).
+    pub fn detok(&self, tokens: &[i32]) -> String {
+        let rev: BTreeMap<i64, &str> = self.vocab.iter().map(|(k, v)| (*v, k.as_str())).collect();
+        tokens
+            .iter()
+            .map(|t| rev.get(&(*t as i64)).copied().unwrap_or("?"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta_json() -> Json {
+        Json::parse(
+            r#"{
+            "vocab_size": 92,
+            "vocab": {"<pad>": 0, "<mask>": 1, "<eos>": 2},
+            "special": {"pad": 0, "mask": 1, "eos": 2, "sep": 4, "fill": 6},
+            "prompt_len": 28, "gen_len": 40,
+            "world": {"fact": [3, 1, 2], "para": [1, 0]},
+            "mrf": {"len": 9, "vocab": 4, "mask_id": 3,
+                    "true_edges": [[0,1],[0,5]], "true_degrees": [2,4,4,4,2,2,2,2,2]},
+            "artifacts": [
+              {"name": "m_b1_g40", "model": "m", "file": "m.hlo.txt",
+               "kind": "serving", "batch": 1, "seq_len": 68, "prompt_len": 28,
+               "gen_len": 40, "outputs": ["logits"], "vocab": 92, "mask_id": 1,
+               "pad_id": 0, "n_layers": 5, "n_heads": 4, "d_model": 64,
+               "graph_layers": [3, 4]}
+            ],
+            "eval_sets": {"arith": {"file": "eval/arith.json", "n": 10}}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_metadata() {
+        let m = Metadata::from_json(&sample_meta_json(), Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.vocab_size, 92);
+        assert_eq!(m.special.mask, 1);
+        assert_eq!(m.fact_table, vec![3, 1, 2]);
+        assert_eq!(m.mrf.true_edges, vec![(0, 1), (0, 5)]);
+        let a = m.find("m", 1, 40).unwrap();
+        assert_eq!(a.kind, ArtifactKind::Serving);
+        assert_eq!(a.graph_layers, vec![3, 4]);
+        assert!(m.find("m", 2, 40).is_err());
+        assert_eq!(m.serving_models(), vec!["m"]);
+        assert_eq!(m.eval_sets["arith"], "eval/arith.json");
+    }
+
+    #[test]
+    fn detok_uses_vocab() {
+        let m = Metadata::from_json(&sample_meta_json(), Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.detok(&[0, 1, 2, 99]), "<pad> <mask> <eos> ?");
+    }
+}

@@ -1,0 +1,199 @@
+//! PJRT engine: compiles HLO-text artifacts once, executes them from the
+//! decode hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//! HLO *text* is the interchange format (serialized protos from jax>=0.5
+//! carry 64-bit instruction ids that xla_extension 0.5.1 rejects).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactInfo, ArtifactKind, Metadata};
+use super::{ForwardModel, StepOutput};
+use crate::tensor::Tensor;
+use crate::util::logging;
+
+/// Owns the PJRT client and a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub meta: Metadata,
+    /// compile cache keyed by artifact name (compilation is seconds-level)
+    cache: Mutex<HashMap<String, std::sync::Arc<CompiledArtifact>>>,
+}
+
+struct CompiledArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    info: ArtifactInfo,
+}
+
+// SAFETY: the xla crate wraps PJRT handles in `Rc` + raw pointers without
+// Send/Sync markers, but the PJRT C API itself is thread-safe and this
+// crate's usage is disciplined: an `XlaModel` is created on the control
+// thread and then *moved* into exactly one inference thread (the
+// coordinator's worker); executions are serialized per executable; the
+// `Engine` outlives all models it hands out (`main` leaks it for serving).
+// The only cross-thread traffic is moves, never shared mutation.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+unsafe impl Send for CompiledArtifact {}
+unsafe impl Sync for CompiledArtifact {}
+
+impl Engine {
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let meta = Metadata::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        logging::info(&format!(
+            "engine up: platform={} artifacts={} models={:?}",
+            client.platform_name(),
+            meta.artifacts.len(),
+            meta.serving_models()
+        ));
+        Ok(Engine {
+            client,
+            meta,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact and wrap it as a model.
+    pub fn model(&self, name: &str) -> Result<XlaModel<'_>> {
+        let info = self.meta.find_by_name(name)?.clone();
+        let compiled = {
+            let mut cache = self.cache.lock().unwrap();
+            if let Some(c) = cache.get(name) {
+                std::sync::Arc::clone(c)
+            } else {
+                let path = self.meta.artifact_path(&info);
+                let t0 = Instant::now();
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path not utf-8")?,
+                )
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", info.name))?;
+                logging::info(&format!(
+                    "compiled {} in {:.2}s",
+                    info.name,
+                    t0.elapsed().as_secs_f64()
+                ));
+                let arc = std::sync::Arc::new(CompiledArtifact {
+                    exe,
+                    info: info.clone(),
+                });
+                cache.insert(name.to_string(), std::sync::Arc::clone(&arc));
+                arc
+            }
+        };
+        Ok(XlaModel {
+            compiled,
+            _engine: std::marker::PhantomData,
+        })
+    }
+
+    /// Convenience: model by (model name, batch, gen_len).
+    pub fn model_for(&self, model: &str, batch: usize, gen_len: usize) -> Result<XlaModel<'_>> {
+        let name = self.meta.find(model, batch, gen_len)?.name.clone();
+        self.model(&name)
+    }
+}
+
+/// A compiled forward pass bound to the engine lifetime.
+pub struct XlaModel<'e> {
+    compiled: std::sync::Arc<CompiledArtifact>,
+    _engine: std::marker::PhantomData<&'e Engine>,
+}
+
+impl<'e> XlaModel<'e> {
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.compiled.info
+    }
+
+    fn execute(&self, tokens: &[i32]) -> Result<Vec<xla::Literal>> {
+        let info = &self.compiled.info;
+        if tokens.len() != info.batch * info.seq_len {
+            bail!(
+                "token buffer {} != batch {} x seq_len {}",
+                tokens.len(),
+                info.batch,
+                info.seq_len
+            );
+        }
+        let lit = xla::Literal::vec1(tokens)
+            .reshape(&[info.batch as i64, info.seq_len as i64])
+            .context("reshaping tokens")?;
+        let result = self.compiled.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+impl<'e> ForwardModel for XlaModel<'e> {
+    fn batch(&self) -> usize {
+        self.compiled.info.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.compiled.info.seq_len
+    }
+    fn prompt_len(&self) -> usize {
+        self.compiled.info.prompt_len
+    }
+    fn gen_len(&self) -> usize {
+        self.compiled.info.gen_len
+    }
+    fn vocab(&self) -> usize {
+        self.compiled.info.vocab
+    }
+    fn mask_id(&self) -> i32 {
+        self.compiled.info.mask_id
+    }
+
+    fn forward(&self, tokens: &[i32]) -> Result<StepOutput> {
+        let info = &self.compiled.info;
+        let (b, l, v) = (info.batch, info.seq_len, info.vocab);
+        let outs = self.execute(tokens)?;
+        match info.kind {
+            ArtifactKind::Serving => {
+                if outs.len() != 4 {
+                    bail!("serving artifact returned {} outputs, want 4", outs.len());
+                }
+                Ok(StepOutput {
+                    batch: b,
+                    seq_len: l,
+                    vocab: v,
+                    logits: Tensor::new(outs[0].to_vec::<f32>()?, &[b, l, v]),
+                    attn_avg: Some(Tensor::new(outs[1].to_vec::<f32>()?, &[b, l, l])),
+                    edge_scores: Some(Tensor::new(outs[2].to_vec::<f32>()?, &[b, l, l])),
+                    degrees: Some(Tensor::new(outs[3].to_vec::<f32>()?, &[b, l])),
+                    attn_layers: None,
+                })
+            }
+            ArtifactKind::Toy => {
+                if outs.len() != 2 {
+                    bail!("toy artifact returned {} outputs, want 2", outs.len());
+                }
+                let nl = info.n_layers;
+                Ok(StepOutput {
+                    batch: b,
+                    seq_len: l,
+                    vocab: v,
+                    logits: Tensor::new(outs[0].to_vec::<f32>()?, &[b, l, v]),
+                    attn_avg: None,
+                    edge_scores: None,
+                    degrees: None,
+                    attn_layers: Some(Tensor::new(
+                        outs[1].to_vec::<f32>()?,
+                        &[b, nl, l, l],
+                    )),
+                })
+            }
+        }
+    }
+}

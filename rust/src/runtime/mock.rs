@@ -1,0 +1,211 @@
+//! Synthetic `ForwardModel` for logic tests and artifact-free benches.
+//!
+//! Emulates the *shape* of a masked diffusion model without any learned
+//! weights: each position has a deterministic "true" token, prediction
+//! confidence grows with the number of already-revealed neighbors (local
+//! context), and attention couples positions within a configurable band —
+//! so dependency-aware strategies face non-trivial structure.
+
+use anyhow::{bail, Result};
+
+use super::{ForwardModel, StepOutput};
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct MockModel {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub prompt_len: usize,
+    pub vocab: usize,
+    pub mask_id: i32,
+    /// attention band half-width: |i-j| <= band -> coupled
+    pub band: usize,
+    /// base confidence at masked positions with no revealed neighbors
+    pub base_conf: f32,
+    /// confidence gained per revealed neighbor (saturating at 0.995)
+    pub conf_gain: f32,
+}
+
+impl MockModel {
+    pub fn new(batch: usize, seq_len: usize, prompt_len: usize, vocab: usize) -> MockModel {
+        MockModel {
+            batch,
+            seq_len,
+            prompt_len,
+            vocab,
+            mask_id: 1,
+            band: 2,
+            base_conf: 0.55,
+            conf_gain: 0.18,
+        }
+    }
+
+    /// The deterministic token the mock "wants" at a position.
+    pub fn true_token(&self, pos: usize) -> i32 {
+        // skip ids 0..=1 (pad, mask)
+        (2 + (pos * 7 + 3) % (self.vocab - 2)) as i32
+    }
+
+    fn confidence(&self, tokens: &[i32], pos: usize) -> f32 {
+        let mut revealed = 0;
+        for d in 1..=self.band {
+            if pos >= d && tokens[pos - d] != self.mask_id {
+                revealed += 1;
+            }
+            if pos + d < self.seq_len && tokens[pos + d] != self.mask_id {
+                revealed += 1;
+            }
+        }
+        (self.base_conf + self.conf_gain * revealed as f32).min(0.995)
+    }
+}
+
+impl ForwardModel for MockModel {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+    fn gen_len(&self) -> usize {
+        self.seq_len - self.prompt_len
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn mask_id(&self) -> i32 {
+        self.mask_id
+    }
+
+    fn forward(&self, tokens: &[i32]) -> Result<StepOutput> {
+        let (b, l, v) = (self.batch, self.seq_len, self.vocab);
+        if tokens.len() != b * l {
+            bail!("mock forward: token buffer size mismatch");
+        }
+        let mut logits = vec![0.0f32; b * l * v];
+        let mut attn = vec![0.0f32; b * l * l];
+        let mut scores = vec![0.0f32; b * l * l];
+        let mut degrees = vec![0.0f32; b * l];
+
+        for bi in 0..b {
+            let row = &tokens[bi * l..(bi + 1) * l];
+            // --- logits: peaked at true token with context-driven conf ----
+            for i in 0..l {
+                let base = (bi * l + i) * v;
+                let (target, conf) = if row[i] == self.mask_id {
+                    (self.true_token(i), self.confidence(row, i))
+                } else {
+                    (row[i], 0.999) // committed tokens reproduce themselves
+                };
+                // logits realizing: softmax = conf at target, uniform rest
+                let rest = ((1.0 - conf) / (v as f32 - 1.0)).max(1e-7);
+                let lo = rest.ln();
+                for t in 0..v {
+                    logits[base + t] = lo;
+                }
+                logits[base + target as usize] = conf.max(1e-7).ln();
+            }
+            // --- attention: banded, row-normalized -----------------------
+            for i in 0..l {
+                let base = (bi * l + i) * l;
+                let lo = i.saturating_sub(self.band);
+                let hi = (i + self.band).min(l - 1);
+                let w = 1.0 / (hi - lo + 1) as f32;
+                for j in lo..=hi {
+                    attn[base + j] = w;
+                }
+            }
+            // --- edge scores: symmetrized, masked-pairs, zero diag -------
+            for i in 0..l {
+                for j in 0..l {
+                    if i == j {
+                        continue;
+                    }
+                    let masked_pair =
+                        row[i] == self.mask_id && row[j] == self.mask_id;
+                    if masked_pair {
+                        let a_ij = attn[(bi * l + i) * l + j];
+                        let a_ji = attn[(bi * l + j) * l + i];
+                        let s = 0.5 * (a_ij + a_ji);
+                        scores[(bi * l + i) * l + j] = s;
+                        degrees[bi * l + i] += s;
+                    }
+                }
+            }
+        }
+
+        Ok(StepOutput {
+            batch: b,
+            seq_len: l,
+            vocab: v,
+            logits: Tensor::new(logits, &[b, l, v]),
+            attn_avg: Some(Tensor::new(attn, &[b, l, l])),
+            edge_scores: Some(Tensor::new(scores, &[b, l, l])),
+            degrees: Some(Tensor::new(degrees, &[b, l])),
+            attn_layers: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::softmax_inplace;
+
+    #[test]
+    fn output_shapes() {
+        let m = MockModel::new(2, 12, 4, 10);
+        let toks = vec![1i32; 24];
+        let out = m.forward(&toks).unwrap();
+        assert_eq!(out.logits.dims, vec![2, 12, 10]);
+        assert_eq!(out.edge_scores.as_ref().unwrap().dims, vec![2, 12, 12]);
+        assert_eq!(out.degrees.as_ref().unwrap().dims, vec![2, 12]);
+    }
+
+    #[test]
+    fn confidence_grows_with_context() {
+        let m = MockModel::new(1, 10, 0, 10);
+        let all_masked = vec![1i32; 10];
+        let out1 = m.forward(&all_masked).unwrap();
+        let mut some_revealed = all_masked.clone();
+        some_revealed[4] = 5;
+        some_revealed[6] = 5;
+        let out2 = m.forward(&some_revealed).unwrap();
+        let conf = |o: &StepOutput, i: usize| {
+            let mut p = o.logits.slice3(0, i).to_vec();
+            softmax_inplace(&mut p);
+            p.iter().cloned().fold(0.0f32, f32::max)
+        };
+        assert!(conf(&out2, 5) > conf(&out1, 5));
+    }
+
+    #[test]
+    fn edge_scores_vanish_when_unmasked() {
+        let m = MockModel::new(1, 8, 0, 10);
+        let mut toks = vec![1i32; 8];
+        toks[3] = 5; // committed
+        let out = m.forward(&toks).unwrap();
+        let s = out.edge_scores.unwrap();
+        for j in 0..8 {
+            assert_eq!(s.at3(0, 3, j), 0.0);
+            assert_eq!(s.at3(0, j, 3), 0.0);
+        }
+        // adjacent masked pair still coupled
+        assert!(s.at3(0, 5, 6) > 0.0);
+    }
+
+    #[test]
+    fn logits_are_valid_distributions() {
+        let m = MockModel::new(1, 6, 0, 12);
+        let out = m.forward(&vec![1i32; 6]).unwrap();
+        let mut p = out.logits.slice3(0, 0).to_vec();
+        softmax_inplace(&mut p);
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4);
+        let target = m.true_token(0) as usize;
+        assert!((p[target] - m.base_conf).abs() < 0.02);
+    }
+}

@@ -1,0 +1,50 @@
+//! Runtime: loads AOT artifacts (HLO text) onto the PJRT CPU client and
+//! executes them from the request path.  Python is never involved here.
+
+pub mod artifact;
+pub mod engine;
+pub mod mock;
+
+pub use artifact::{ArtifactInfo, ArtifactKind, Metadata, MrfSpec, SpecialTokens};
+pub use engine::{Engine, XlaModel};
+pub use mock::MockModel;
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// One forward pass over a batch: everything the decode loop consumes.
+///
+/// Serving artifacts fill all four fields; toy artifacts fill `logits`
+/// and `attn_layers`.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// [B, L, V]
+    pub logits: Tensor,
+    /// [B, L, L] head-avg over the final-30% layers (serving only)
+    pub attn_avg: Option<Tensor>,
+    /// [B, L, L] symmetrized masked pair scores (serving only)
+    pub edge_scores: Option<Tensor>,
+    /// [B, L] proxy degrees d~_i (serving only)
+    pub degrees: Option<Tensor>,
+    /// [B, n_layers, L, L] per-layer head-avg attention (toy only)
+    pub attn_layers: Option<Tensor>,
+}
+
+/// A compiled forward pass the decode loop can drive.
+///
+/// Implemented by `XlaModel` (PJRT) and `MockModel` (pure-rust synthetic
+/// model for logic tests and benches that must not depend on artifacts).
+pub trait ForwardModel {
+    fn batch(&self) -> usize;
+    fn seq_len(&self) -> usize;
+    fn prompt_len(&self) -> usize;
+    fn gen_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn mask_id(&self) -> i32;
+    /// tokens: row-major [batch * seq_len].
+    fn forward(&self, tokens: &[i32]) -> Result<StepOutput>;
+}

@@ -1,0 +1,221 @@
+//! Newline-delimited JSON over TCP: the serving front end + a client.
+//!
+//! Request:  {"prompt": [i32...], "method": "dapd-staged", "blocks": 1,
+//!            "eos_suppress": false}\n
+//! Response: {"ok": true, "gen": [...], "steps": n,
+//!            "latency_ms": x}\n  (or {"ok": false, "error": "..."})
+//!
+//! One thread per connection (the inference side is single-threaded
+//! anyway on this testbed; connection handling is cheap).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::Coordinator;
+use crate::decode::{DecodeConfig, Method};
+use crate::util::json::Json;
+use crate::util::logging;
+
+pub struct Server {
+    listener: TcpListener,
+    coord: Coordinator,
+    default_cfg: DecodeConfig,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn bind(addr: &str, coord: Coordinator, default_cfg: DecodeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Server {
+            listener,
+            coord,
+            default_cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept loop; returns when the stop flag is set (checked between
+    /// connections via a short accept timeout emulation).
+    pub fn run(&self) -> Result<()> {
+        self.listener.set_nonblocking(true)?;
+        logging::info(&format!("serving on {}", self.listener.local_addr()?));
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    logging::debug(&format!("connection from {peer}"));
+                    stream.set_nonblocking(false)?;
+                    let coord = self.coord.clone();
+                    let cfg = self.default_cfg.clone();
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, coord, cfg) {
+                            logging::debug(&format!("conn ended: {e:#}"));
+                        }
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: Coordinator, default_cfg: DecodeConfig) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_request(line.trim(), &coord, &default_cfg) {
+            Ok(mut obj) => {
+                obj.set("ok", true.into());
+                obj
+            }
+            Err(e) => {
+                let mut obj = Json::obj();
+                obj.set("ok", false.into());
+                obj.set("error", format!("{e:#}").into());
+                obj
+            }
+        };
+        writer.write_all(reply.dump().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+fn handle_request(line: &str, coord: &Coordinator, default_cfg: &DecodeConfig) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    let prompt: Vec<i32> = req
+        .get("prompt")
+        .to_i64_vec()
+        .ok_or_else(|| anyhow!("missing 'prompt' array"))?
+        .iter()
+        .map(|&t| t as i32)
+        .collect();
+    let mut cfg = default_cfg.clone();
+    if let Some(m) = req.get("method").as_str() {
+        cfg.method = Method::parse(m).ok_or_else(|| anyhow!("unknown method '{m}'"))?;
+    }
+    if let Some(b) = req.get("blocks").as_usize() {
+        cfg.blocks = b;
+    }
+    if let Some(e) = req.get("eos_suppress").as_bool() {
+        cfg.eos_suppress = e;
+    }
+    let resp = coord.call(prompt, cfg)?;
+    let mut obj = Json::obj();
+    obj.set("gen", resp.gen.iter().map(|&t| t as i64).collect::<Vec<i64>>().into());
+    obj.set("steps", resp.steps.into());
+    obj.set("latency_ms", (resp.latency.as_secs_f64() * 1e3).into());
+    Ok(obj)
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn request(&mut self, prompt: &[i32], method: Option<&str>) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set(
+            "prompt",
+            prompt.iter().map(|&t| t as i64).collect::<Vec<i64>>().into(),
+        );
+        if let Some(m) = method {
+            req.set("method", m.into());
+        }
+        self.writer.write_all(req.dump().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = Json::parse(line.trim()).map_err(|e| anyhow!("bad response: {e}"))?;
+        if resp.get("ok").as_bool() != Some(true) {
+            return Err(anyhow!(
+                "server error: {}",
+                resp.get("error").as_str().unwrap_or("?")
+            ));
+        }
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::Method;
+    use crate::runtime::MockModel;
+    use std::time::Duration;
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let m = MockModel::new(2, 16, 4, 12);
+        let want: Vec<i64> = (4..16).map(|i| m.true_token(i) as i64).collect();
+        let (coord, handle) = Coordinator::start(m, Duration::ZERO, 16);
+        let server = Server::bind(
+            "127.0.0.1:0",
+            coord.clone(),
+            DecodeConfig::new(Method::FastDllm),
+        )
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let stop = server.stop_handle();
+        let sh = std::thread::spawn(move || server.run().unwrap());
+
+        let mut client = Client::connect(&addr).unwrap();
+        let resp = client.request(&[5, 5, 5, 5], Some("dapd-staged")).unwrap();
+        assert_eq!(resp.get("gen").to_i64_vec().unwrap(), want);
+        assert!(resp.get("steps").as_usize().unwrap() >= 1);
+        // malformed request surfaces an error, connection survives
+        {
+            use std::io::Write;
+            let mut raw = TcpStream::connect(&addr).unwrap();
+            raw.write_all(b"{nope}\n").unwrap();
+            let mut r = BufReader::new(raw.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let j = Json::parse(line.trim()).unwrap();
+            assert_eq!(j.get("ok").as_bool(), Some(false));
+        }
+        // wrong method name errors cleanly
+        assert!(client.request(&[5; 4], Some("bogus")).is_err());
+
+        stop.store(true, Ordering::SeqCst);
+        sh.join().unwrap();
+        coord.shutdown();
+        handle.join().unwrap();
+    }
+}

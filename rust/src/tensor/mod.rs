@@ -1,0 +1,175 @@
+//! Minimal dense-tensor views over the flat f32 buffers PJRT returns.
+//!
+//! Row-major, shape-checked indexing; slices borrow rather than copy so
+//! the decode hot loop can walk logits/attention without allocation.
+
+/// Owned row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, dims: &[usize]) -> Tensor {
+        let n: usize = dims.iter().product();
+        assert_eq!(
+            data.len(),
+            n,
+            "tensor data {} != shape {:?} product",
+            data.len(),
+            dims
+        );
+        Tensor {
+            data,
+            dims: dims.to_vec(),
+        }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        Tensor::new(vec![0.0; dims.iter().product()], dims)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` along the leading axis, as a sub-view slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let s: usize = if self.rank() <= 1 {
+            1
+        } else {
+            self.dims[1..].iter().product()
+        };
+        &self.data[i * s..(i + 1) * s]
+    }
+
+    /// Element of a rank-2 tensor.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+
+    /// Element of a rank-3 tensor.
+    pub fn at3(&self, i: usize, j: usize, k: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 3);
+        self.data[(i * self.dims[1] + j) * self.dims[2] + k]
+    }
+
+    /// Contiguous innermost slice `[i, j, :]` of a rank-3 tensor.
+    pub fn slice3(&self, i: usize, j: usize) -> &[f32] {
+        debug_assert_eq!(self.rank(), 3);
+        let d2 = self.dims[2];
+        let base = (i * self.dims[1] + j) * d2;
+        &self.data[base..base + d2]
+    }
+
+    /// Contiguous slice `[i, :]` of a rank-2 tensor.
+    pub fn slice2(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.rank(), 2);
+        let d1 = self.dims[1];
+        &self.data[i * d1..(i + 1) * d1]
+    }
+}
+
+/// argmax + max over a slice; returns (index, value).  NaN-free inputs
+/// assumed (softmax outputs).
+pub fn argmax(xs: &[f32]) -> (usize, f32) {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    (best, bv)
+}
+
+/// In-place softmax over a slice (numerically stable).
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        z += *x;
+    }
+    let inv = 1.0 / z;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Shannon entropy (nats) of a probability slice.
+pub fn entropy(ps: &[f32]) -> f32 {
+    let mut h = 0.0;
+    for &p in ps {
+        if p > 1e-12 {
+            h -= p * p.ln();
+        }
+    }
+    h
+}
+
+/// KL(p || q) in nats; q is clamped away from zero.
+pub fn kl_div(p: &[f32], q: &[f32]) -> f32 {
+    debug_assert_eq!(p.len(), q.len());
+    let mut kl = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi > 1e-12 {
+            kl += pi * (pi / qi.max(1e-12)).ln();
+        }
+    }
+    kl.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing() {
+        let t = Tensor::new((0..24).map(|x| x as f32).collect(), &[2, 3, 4]);
+        assert_eq!(t.at3(1, 2, 3), 23.0);
+        assert_eq!(t.at3(0, 0, 0), 0.0);
+        assert_eq!(t.slice3(1, 0), &[12.0, 13.0, 14.0, 15.0]);
+        let t2 = Tensor::new((0..6).map(|x| x as f32).collect(), &[2, 3]);
+        assert_eq!(t2.at2(1, 1), 4.0);
+        assert_eq!(t2.slice2(0), &[0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_checked() {
+        Tensor::new(vec![0.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn softmax_and_entropy() {
+        let mut xs = vec![1.0, 2.0, 3.0];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+        let uniform = vec![0.25f32; 4];
+        assert!((entropy(&uniform) - (4f32).ln()).abs() < 1e-6);
+        let (i, v) = argmax(&xs);
+        assert_eq!(i, 2);
+        assert!(v > 0.6);
+    }
+
+    #[test]
+    fn kl_properties() {
+        let p = vec![0.7, 0.2, 0.1];
+        assert!(kl_div(&p, &p) < 1e-9);
+        let q = vec![0.1, 0.2, 0.7];
+        assert!(kl_div(&p, &q) > 0.1);
+    }
+}

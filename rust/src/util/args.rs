@@ -1,0 +1,117 @@
+//! CLI argument substrate (clap is not vendored in this offline image).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — `std::env::args()`
+    /// minus the program name in production.
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.bools.push(name.to_string());
+                }
+            } else {
+                args.positional.push(item);
+            }
+        }
+        args
+    }
+
+    pub fn parse_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse_from(items.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["serve", "--port", "7070", "--verbose", "--model=sim-llada"]);
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.usize_or("port", 0), 7070);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("model"), Some("sim-llada"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("n", 5), 5);
+        assert_eq!(a.f64_or("tau", 0.01), 0.01);
+        assert_eq!(a.str_or("x", "y"), "y");
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["--offset", "-3.5"]);
+        assert_eq!(a.f64_or("offset", 0.0), -3.5);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["--methods", "dapd-staged, fast-dllm"]);
+        assert_eq!(a.list_or("methods", &[]), vec!["dapd-staged", "fast-dllm"]);
+        assert_eq!(a.list_or("tasks", &["arith"]), vec!["arith"]);
+    }
+}

@@ -1,0 +1,113 @@
+//! Bench harness substrate (criterion is not vendored in this image).
+//!
+//! `cargo bench` runs each `benches/*.rs` with `harness = false`; they use
+//! this module for warmed-up timing and for printing paper-style tables.
+
+use std::time::Instant;
+
+/// Time `f` with warmup, returning (mean_secs, std_secs, iters).
+pub fn time_it<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    (super::stats::mean(&samples), super::stats::std_dev(&samples))
+}
+
+/// Fixed-width table printer matching the paper's row layout.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{:<width$}", c, width = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    format!("{:.*}", digits, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Demo", &["Method", "Acc.", "Steps"]);
+        t.row(vec!["DAPD".into(), "52.1".into(), "66.2".into()]);
+        t.row(vec!["Fast-dLLM".into(), "52.0".into(), "124.4".into()]);
+        let s = t.to_string();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("DAPD"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    fn time_it_positive() {
+        let (mean, _sd) = time_it(
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+            2,
+            5,
+        );
+        assert!(mean >= 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

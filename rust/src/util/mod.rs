@@ -1,0 +1,34 @@
+//! Infrastructure substrates built in-repo (only the `xla` crate closure
+//! is vendored in this offline image — see DESIGN.md "Substitutions").
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Tiny leveled logger: `log!(info, "...")`-style macros are overkill for
+/// this binary; a verbosity-gated printer is enough.
+pub mod logging {
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=quiet 1=info 2=debug
+
+    pub fn set_level(level: u8) {
+        LEVEL.store(level, Ordering::Relaxed);
+    }
+
+    pub fn info(msg: &str) {
+        if LEVEL.load(Ordering::Relaxed) >= 1 {
+            eprintln!("[dapd] {msg}");
+        }
+    }
+
+    pub fn debug(msg: &str) {
+        if LEVEL.load(Ordering::Relaxed) >= 2 {
+            eprintln!("[dapd:debug] {msg}");
+        }
+    }
+}

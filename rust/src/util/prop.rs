@@ -1,0 +1,60 @@
+//! Property-testing substrate (proptest is not vendored in this image).
+//!
+//! `check(name, cases, f)` runs `f` over `cases` seeded RNG instances; on
+//! failure it reports the seed so the case can be replayed exactly with
+//! `replay(seed, f)`.  Deliberately small: generators are just closures
+//! over `Pcg`, shrinking is replaced by deterministic replayability.
+
+use super::rng::Pcg;
+
+/// Run a randomized property `cases` times.  Panics with the failing seed.
+pub fn check<F: Fn(&mut Pcg)>(name: &str, cases: u64, f: F) {
+    // Fixed base seed derived from the property name: stable across runs.
+    let base = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Pcg::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay one failing case.
+pub fn replay<F: Fn(&mut Pcg)>(seed: u64, f: F) {
+    let mut rng = Pcg::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        check("addition-commutes", 50, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failing_seed() {
+        check("always-fails", 5, |rng| {
+            let x = rng.below(10);
+            assert!(x > 100, "x was {x}");
+        });
+    }
+}

@@ -1,0 +1,241 @@
+//! Statistics substrate: summaries, percentiles, histograms, ROC-AUC.
+//!
+//! Used by the coordinator metrics, the eval harness (Table 1/9/10 AUC and
+//! OVR), and the bench harness.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolation percentile; `q` in [0, 1].  Sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// ROC-AUC of `scores` against boolean labels, with proper tie handling
+/// (average ranks).  This is the Table 1 edge-detection metric.
+pub fn roc_auc(scores: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return f64::NAN;
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // average ranks over ties
+    let mut rank_sum_pos = 0.0;
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0; // 1-based
+        for &k in &idx[i..=j] {
+            if labels[k] {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    (rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0) / (n_pos * n_neg) as f64
+}
+
+/// Order Violation Rate (paper Sec. 3.2): fraction of strictly-ordered
+/// ground-truth pairs (d_i < d_j) whose proxy order is reversed.
+pub fn order_violation_rate(true_deg: &[f64], proxy_deg: &[f64]) -> f64 {
+    assert_eq!(true_deg.len(), proxy_deg.len());
+    let n = true_deg.len();
+    let mut pairs = 0usize;
+    let mut violations = 0usize;
+    for i in 0..n {
+        for j in 0..n {
+            if true_deg[i] < true_deg[j] {
+                pairs += 1;
+                if proxy_deg[i] > proxy_deg[j] {
+                    violations += 1;
+                }
+            }
+        }
+    }
+    if pairs == 0 {
+        0.0
+    } else {
+        violations as f64 / pairs as f64
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi); values outside are clamped to the
+/// edge bins.  Used for the Fig. 6 edge-score distribution.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(hi > lo && bins > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * bins as f64) as isize;
+        let b = t.clamp(0, bins as isize - 1) as usize;
+        self.counts[b] += 1;
+        self.total += 1;
+    }
+
+    /// Fraction of mass strictly below x.
+    pub fn cdf_below(&self, x: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let bins = self.counts.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * bins as f64).floor() as isize;
+        let b = t.clamp(0, bins as isize) as usize;
+        let below: u64 = self.counts[..b.min(bins)].iter().sum();
+        below as f64 / self.total as f64
+    }
+}
+
+/// Online latency/throughput summary used by the coordinator metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    xs: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Summary {
+        Summary::default()
+    }
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+    pub fn count(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn mean(&self) -> f64 {
+        mean(&self.xs)
+    }
+    pub fn p50(&self) -> f64 {
+        percentile(&self.xs, 0.50)
+    }
+    pub fn p95(&self) -> f64 {
+        percentile(&self.xs, 0.95)
+    }
+    pub fn p99(&self) -> f64 {
+        percentile(&self.xs, 0.99)
+    }
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138).abs() < 0.01);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert!((percentile(&xs, 0.5) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let scores = [0.9, 0.8, 0.7, 0.2, 0.1];
+        let labels = [true, true, true, false, false];
+        assert_eq!(roc_auc(&scores, &labels), 1.0);
+        let labels_inv = [false, false, false, true, true];
+        assert_eq!(roc_auc(&scores, &labels_inv), 0.0);
+    }
+
+    #[test]
+    fn auc_with_ties() {
+        // all scores equal -> AUC 0.5
+        let scores = [0.5, 0.5, 0.5, 0.5];
+        let labels = [true, false, true, false];
+        assert!((roc_auc(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ovr_basics() {
+        // proxy equals truth -> 0 violations
+        let t = [1.0, 2.0, 3.0];
+        assert_eq!(order_violation_rate(&t, &t), 0.0);
+        // fully reversed proxy -> all strict pairs violated
+        let rev = [3.0, 2.0, 1.0];
+        assert_eq!(order_violation_rate(&t, &rev), 1.0);
+        // ties in proxy are not violations
+        let flat = [1.0, 1.0, 1.0];
+        assert_eq!(order_violation_rate(&t, &flat), 0.0);
+    }
+
+    #[test]
+    fn histogram_cdf() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        for i in 0..100 {
+            h.add(i as f64 / 100.0);
+        }
+        assert_eq!(h.total, 100);
+        assert!((h.cdf_below(0.5) - 0.5).abs() < 0.05);
+        h.add(5.0); // clamped to top bin
+        assert_eq!(h.total, 101);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut s = Summary::new();
+        for i in 1..=1000 {
+            s.add(i as f64);
+        }
+        assert_eq!(s.count(), 1000);
+        assert!((s.p50() - 500.5).abs() < 1.0);
+        assert!(s.p99() > 985.0);
+        assert_eq!(s.max(), 1000.0);
+    }
+}

@@ -1,0 +1,66 @@
+//! Request arrival processes for the serving benchmarks (Table 6 uses
+//! closed-loop back-to-back requests; the load-test example uses Poisson).
+
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// back-to-back: next request as soon as a slot frees (closed loop)
+    Closed,
+    /// open loop with exponential inter-arrival times at `rate` req/s
+    Poisson { rate: f64 },
+    /// fixed inter-arrival gap in seconds
+    Uniform { gap: f64 },
+}
+
+impl Arrival {
+    /// Generate the absolute arrival times (seconds) for `n` requests.
+    pub fn schedule(&self, n: usize, rng: &mut Pcg) -> Vec<f64> {
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self {
+                Arrival::Closed => out.push(0.0),
+                Arrival::Poisson { rate } => {
+                    t += rng.exp(*rate);
+                    out.push(t);
+                }
+                Arrival::Uniform { gap } => {
+                    out.push(t);
+                    t += gap;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_is_all_zero() {
+        let mut rng = Pcg::new(0);
+        assert!(Arrival::Closed
+            .schedule(5, &mut rng)
+            .iter()
+            .all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn poisson_is_increasing_with_right_mean() {
+        let mut rng = Pcg::new(1);
+        let ts = Arrival::Poisson { rate: 100.0 }.schedule(5000, &mut rng);
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+        let mean_gap = ts.last().unwrap() / 5000.0;
+        assert!((mean_gap - 0.01).abs() < 0.002, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn uniform_fixed_gap() {
+        let mut rng = Pcg::new(2);
+        let ts = Arrival::Uniform { gap: 0.5 }.schedule(4, &mut rng);
+        assert_eq!(ts, vec![0.0, 0.5, 1.0, 1.5]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Workloads: eval-set loading (shared JSON format with the Python
+//! exporter), per-task scoring, and request arrival processes.
+
+pub mod arrivals;
+pub mod scorer;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::Metadata;
+use crate::util::json::Json;
+
+/// One evaluation instance: fixed-width prompt + expected answer + the
+/// task-specific scoring spec.
+#[derive(Debug, Clone)]
+pub struct EvalInstance {
+    pub prompt: Vec<i32>,
+    pub expect: Vec<i32>,
+    pub spec: Json,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub task: String,
+    pub instances: Vec<EvalInstance>,
+}
+
+impl EvalSet {
+    /// Load `artifacts/eval/{task}.json` via the metadata registry.
+    pub fn load(meta: &Metadata, task: &str) -> Result<EvalSet> {
+        let rel = meta
+            .eval_sets
+            .get(task)
+            .ok_or_else(|| anyhow!("no eval set for task '{task}'"))?;
+        Self::load_file(&meta.root.join(rel), task)
+    }
+
+    pub fn load_file(path: &Path, task: &str) -> Result<EvalSet> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let mut instances = Vec::new();
+        for item in j.as_arr().context("eval set must be a JSON array")? {
+            instances.push(EvalInstance {
+                prompt: item
+                    .get("prompt")
+                    .to_i64_vec()
+                    .context("instance missing prompt")?
+                    .iter()
+                    .map(|&t| t as i32)
+                    .collect(),
+                expect: item
+                    .get("expect")
+                    .to_i64_vec()
+                    .context("instance missing expect")?
+                    .iter()
+                    .map(|&t| t as i32)
+                    .collect(),
+                spec: item.get("spec").clone(),
+            });
+        }
+        Ok(EvalSet {
+            task: task.to_string(),
+            instances,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    /// First `n` instances (deterministic subsetting for quick benches).
+    pub fn take(&self, n: usize) -> EvalSet {
+        EvalSet {
+            task: self.task.clone(),
+            instances: self.instances.iter().take(n).cloned().collect(),
+        }
+    }
+}
+
+/// All evaluation task names, in the paper's presentation order.
+pub const MAIN_TASKS: [&str; 5] = ["struct", "arith", "constraint", "multiq", "pbench-copy"];
+pub const PBENCH_TASKS: [&str; 6] = [
+    "pbench-copy",
+    "pbench-rev",
+    "pbench-sort",
+    "pbench-latin",
+    "pbench-para",
+    "pbench-w2s",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_eval_set_from_json() {
+        let dir = std::env::temp_dir().join("dapd_test_evalset");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        std::fs::write(
+            &path,
+            r#"[{"prompt": [82, 24, 12], "expect": [24, 12], "spec": {"task": "arith", "final": 3}}]"#,
+        )
+        .unwrap();
+        let es = EvalSet::load_file(&path, "arith").unwrap();
+        assert_eq!(es.len(), 1);
+        assert_eq!(es.instances[0].prompt, vec![82, 24, 12]);
+        assert_eq!(es.instances[0].spec.get("final").as_i64(), Some(3));
+        let sub = es.take(5);
+        assert_eq!(sub.len(), 1);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(EvalSet::load_file(Path::new("/nonexistent/x.json"), "t").is_err());
+    }
+}

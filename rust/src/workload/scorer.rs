@@ -1,0 +1,358 @@
+//! Task scorers mirroring `python/compile/datasets.py` semantics.
+//!
+//! Vocabulary constants are duplicated here (request path must not read
+//! Python); `rust/tests/integration.rs` cross-checks them against the
+//! exported `metadata.json` vocab table.
+
+use crate::util::json::Json;
+
+/// Token ids shared with python/compile/vocab.py.
+pub mod vocab {
+    pub const PAD: i32 = 0;
+    pub const MASK: i32 = 1;
+    pub const EOS: i32 = 2;
+    pub const SEP: i32 = 4;
+    pub const FILL: i32 = 6;
+    pub const LBRACK: i32 = 7;
+    pub const RBRACK: i32 = 8;
+    pub const COLON: i32 = 9;
+    pub const COMMA: i32 = 10;
+    pub const PLUS: i32 = 11;
+    pub const EQ: i32 = 12;
+    pub const SEMI: i32 = 13;
+    pub const DIGIT0: i32 = 14;
+    pub const VAR0: i32 = 24;
+    pub const KEY0: i32 = 34;
+    pub const VAL0: i32 = 50;
+    pub const WORD0: i32 = 66;
+
+    pub fn digit(d: i64) -> i32 {
+        DIGIT0 + d as i32
+    }
+    pub fn key(k: i64) -> i32 {
+        KEY0 + k as i32
+    }
+    pub fn val(v: i64) -> i32 {
+        VAL0 + v as i32
+    }
+    pub fn word(w: i64) -> i32 {
+        WORD0 + w as i32
+    }
+}
+
+/// Truncate a generated window at the first EOS (and FILL, which
+/// Dream-style models emit after the answer).
+pub fn answer_of(gen: &[i32]) -> &[i32] {
+    let end = gen
+        .iter()
+        .position(|&t| t == vocab::EOS || t == vocab::FILL)
+        .unwrap_or(gen.len());
+    &gen[..end]
+}
+
+/// Score one generated window against an instance spec; returns [0, 1].
+///
+/// Most tasks are exact-match on the expected answer; `arith` extracts
+/// the final value (paper-style answer extraction), `multiq` scores each
+/// of the bundled questions independently, and `pbench-latin` accepts any
+/// *valid* Latin-square completion.
+pub fn score(task: &str, gen: &[i32], expect: &[i32], spec: &Json) -> f64 {
+    match task {
+        "arith" => score_arith(gen, spec),
+        "multiq" => score_multiq(gen, spec),
+        "pbench-latin" => score_latin(gen, spec),
+        "constraint" => score_constraint(gen, spec),
+        "struct" => score_struct(gen, spec),
+        "pbench-w2s" => score_w2s(gen, spec),
+        _ => score_exact(gen, expect),
+    }
+}
+
+fn score_exact(gen: &[i32], expect: &[i32]) -> f64 {
+    (answer_of(gen) == expect) as u8 as f64
+}
+
+/// Final answer = token after the last EQ (paper: parse after
+/// "Therefore, the answer is").
+fn score_arith(gen: &[i32], spec: &Json) -> f64 {
+    let ans = answer_of(gen);
+    let want = match spec.get("final").as_i64() {
+        Some(v) => vocab::digit(v),
+        None => return 0.0,
+    };
+    let last_eq = ans.iter().rposition(|&t| t == vocab::EQ);
+    match last_eq {
+        Some(i) if i + 1 < ans.len() => (ans[i + 1] == want) as u8 as f64,
+        _ => 0.0,
+    }
+}
+
+/// Fraction of the bundled questions answered correctly.  A question i is
+/// correct if its segment contains `key : value` (or the `key = value`
+/// dialect) with the ground-truth value.  Segment markers come in two
+/// trained phrasings — "[ i ]" and "; i ;" — and must be internally
+/// consistent ("[ i ;" is a joint-marginal mismatch artifact, rejected).
+fn score_multiq(gen: &[i32], spec: &Json) -> f64 {
+    let ans = answer_of(gen);
+    let keys = spec.get("keys").to_i64_vec().unwrap_or_default();
+    let answers = spec.get("answers").to_i64_vec().unwrap_or_default();
+    if keys.is_empty() || keys.len() != answers.len() {
+        return 0.0;
+    }
+    let markers = |i: usize| {
+        let d = vocab::digit(i as i64 + 1);
+        [[vocab::LBRACK, d, vocab::RBRACK], [vocab::SEMI, d, vocab::SEMI]]
+    };
+    let find = |pats: &[[i32; 3]], from: usize| -> Option<usize> {
+        (from..ans.len().saturating_sub(2))
+            .find(|&s| pats.iter().any(|p| ans[s..s + 3] == *p))
+    };
+    let mut correct = 0;
+    for (i, (&k, &a)) in keys.iter().zip(&answers).enumerate() {
+        let Some(start) = find(&markers(i), 0) else {
+            continue;
+        };
+        let end = find(&markers(i + 1), start + 3).unwrap_or(ans.len());
+        let seg = &ans[start..end];
+        // want "key(k) : val(a)" or "key(k) = val(a)" inside the segment
+        let hit = (0..seg.len().saturating_sub(2)).any(|s| {
+            seg[s] == vocab::key(k)
+                && (seg[s + 1] == vocab::COLON || seg[s + 1] == vocab::EQ)
+                && seg[s + 2] == vocab::val(a)
+        });
+        if hit {
+            correct += 1;
+        }
+    }
+    correct as f64 / keys.len() as f64
+}
+
+/// struct: exact match against either separator dialect (comma or semi),
+/// internally consistent.
+fn score_struct(gen: &[i32], spec: &Json) -> f64 {
+    let ans = answer_of(gen);
+    let keys = spec.get("keys").to_i64_vec().unwrap_or_default();
+    let vals = spec.get("vals").to_i64_vec().unwrap_or_default();
+    if keys.is_empty() || keys.len() != vals.len() {
+        return 0.0;
+    }
+    for sep in [vocab::COMMA, vocab::SEMI] {
+        let mut want = vec![vocab::LBRACK];
+        for (i, (&k, &v)) in keys.iter().zip(&vals).enumerate() {
+            if i > 0 {
+                want.push(sep);
+            }
+            want.extend([vocab::key(k), vocab::COLON, vocab::digit(v)]);
+        }
+        want.push(vocab::RBRACK);
+        if ans == want {
+            return 1.0;
+        }
+    }
+    0.0
+}
+
+/// w2s: `x y <sep> y x` for either assignment of the two prompt words —
+/// one joint choice across all four content positions.
+fn score_w2s(gen: &[i32], spec: &Json) -> f64 {
+    let ans = answer_of(gen);
+    let (Some(a), Some(b)) = (spec.get("a").as_i64(), spec.get("b").as_i64()) else {
+        return 0.0;
+    };
+    for (x, y) in [(a, b), (b, a)] {
+        let want = [
+            vocab::word(x),
+            vocab::word(y),
+            vocab::SEP,
+            vocab::word(y),
+            vocab::word(x),
+        ];
+        if ans == want {
+            return 1.0;
+        }
+    }
+    0.0
+}
+
+/// Valid completion check (row1 + r2c1 from the prompt, 5 generated
+/// cells): all rows and columns must be permutations of {1,2,3}.
+fn score_latin(gen: &[i32], spec: &Json) -> f64 {
+    let ans = answer_of(gen);
+    if ans.len() < 5 {
+        return 0.0;
+    }
+    let row1 = spec.get("row1").to_i64_vec().unwrap_or_default();
+    let Some(r2c1) = spec.get("r2c1").as_i64() else {
+        return 0.0;
+    };
+    if row1.len() != 3 {
+        return 0.0;
+    }
+    let cell = |t: i32| -> Option<i64> {
+        let d = (t - vocab::DIGIT0) as i64;
+        (1..=3).contains(&d).then_some(d)
+    };
+    let mut grid = [[0i64; 3]; 3];
+    grid[0] = [row1[0], row1[1], row1[2]];
+    grid[1][0] = r2c1;
+    let cells: Option<Vec<i64>> = ans[..5].iter().map(|&t| cell(t)).collect();
+    let Some(cells) = cells else {
+        return 0.0;
+    };
+    grid[1][1] = cells[0];
+    grid[1][2] = cells[1];
+    grid[2] = [cells[2], cells[3], cells[4]];
+    for i in 0..3 {
+        let mut row: Vec<i64> = grid[i].to_vec();
+        row.sort_unstable();
+        if row != [1, 2, 3] {
+            return 0.0;
+        }
+        let mut col: Vec<i64> = (0..3).map(|r| grid[r][i]).collect();
+        col.sort_unstable();
+        if col != [1, 2, 3] {
+            return 0.0;
+        }
+    }
+    1.0
+}
+
+/// Constraint satisfied iff the answer is exactly `count` copies of the
+/// word (the IFEval-style verifiable check).
+fn score_constraint(gen: &[i32], spec: &Json) -> f64 {
+    let ans = answer_of(gen);
+    let (Some(w), Some(c)) = (spec.get("word").as_i64(), spec.get("count").as_i64()) else {
+        return 0.0;
+    };
+    let tok = vocab::word(w);
+    (ans.len() == c as usize && ans.iter().all(|&t| t == tok)) as u8 as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::vocab::*;
+    use super::*;
+
+    fn j(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn answer_truncates_at_eos_and_fill() {
+        assert_eq!(answer_of(&[5, 6]), &[5]); // FILL truncates too? no: 6=FILL
+        assert_eq!(answer_of(&[5, 7, EOS, 9]), &[5, 7]);
+        assert_eq!(answer_of(&[5, 7]), &[5, 7]);
+    }
+
+    #[test]
+    fn exact_match_tasks() {
+        let expect = vec![word(3), word(1)];
+        let mut gen = expect.clone();
+        gen.push(EOS);
+        gen.push(EOS);
+        assert_eq!(score("pbench-copy", &gen, &expect, &Json::Null), 1.0);
+        let wrong = vec![word(3), word(2), EOS];
+        assert_eq!(score("pbench-copy", &wrong, &expect, &Json::Null), 0.0);
+        // missing EOS but right prefix + garbage -> wrong (exact semantics)
+        let trailing = vec![word(3), word(1), word(5)];
+        assert_eq!(score("pbench-copy", &trailing, &expect, &Json::Null), 0.0);
+    }
+
+    #[test]
+    fn arith_final_extraction() {
+        let spec = j(r#"{"final": 8}"#);
+        // "c = 3 + 5 = 8"
+        let gen = vec![VAR0 + 2, EQ, digit(3), PLUS, digit(5), EQ, digit(8), EOS];
+        assert_eq!(score("arith", &gen, &[], &spec), 1.0);
+        let bad = vec![VAR0 + 2, EQ, digit(3), PLUS, digit(5), EQ, digit(7), EOS];
+        assert_eq!(score("arith", &bad, &[], &spec), 0.0);
+        // derivation wrong but final right still counts (paper extracts answers)
+        let weird = vec![EQ, digit(8), EOS];
+        assert_eq!(score("arith", &weird, &[], &spec), 1.0);
+    }
+
+    #[test]
+    fn multiq_partial_credit() {
+        let spec = j(r#"{"keys": [2, 5], "answers": [7, 1]}"#);
+        // both segments right
+        let gen = vec![
+            LBRACK, digit(1), RBRACK, key(2), COLON, val(7), SEP,
+            LBRACK, digit(2), RBRACK, key(5), COLON, val(1), EOS,
+        ];
+        assert_eq!(score("multiq", &gen, &[], &spec), 1.0);
+        // second answer wrong -> half credit
+        let gen2 = vec![
+            LBRACK, digit(1), RBRACK, key(2), COLON, val(7), SEP,
+            LBRACK, digit(2), RBRACK, key(5), COLON, val(9), EOS,
+        ];
+        assert_eq!(score("multiq", &gen2, &[], &spec), 0.5);
+        // missing markers -> zero
+        assert_eq!(score("multiq", &[EOS], &[], &spec), 0.0);
+    }
+
+    #[test]
+    fn multiq_accepts_both_dialects_per_segment() {
+        let spec = j(r#"{"keys": [2, 5], "answers": [7, 1]}"#);
+        // segment 1 bracket dialect, segment 2 semi dialect
+        let gen = vec![
+            LBRACK, digit(1), RBRACK, key(2), COLON, val(7), SEP,
+            SEMI, digit(2), SEMI, key(5), EQ, val(1), EOS,
+        ];
+        assert_eq!(score("multiq", &gen, &[], &spec), 1.0);
+        // mismatched marker pair "[ 1 ;" never matches a marker pattern:
+        // segment 1 marker is absent -> half credit only
+        let mixed = vec![
+            LBRACK, digit(1), SEMI, key(2), COLON, val(7), SEP,
+            SEMI, digit(2), SEMI, key(5), EQ, val(1), EOS,
+        ];
+        assert_eq!(score("multiq", &mixed, &[], &spec), 0.5);
+    }
+
+    #[test]
+    fn struct_accepts_either_consistent_dialect() {
+        let spec = j(r#"{"keys": [3, 1], "vals": [7, 2]}"#);
+        let comma = vec![LBRACK, key(3), COLON, digit(7), COMMA, key(1), COLON, digit(2), RBRACK, EOS];
+        let semi = vec![LBRACK, key(3), COLON, digit(7), SEMI, key(1), COLON, digit(2), RBRACK, EOS];
+        assert_eq!(score("struct", &comma, &[], &spec), 1.0);
+        assert_eq!(score("struct", &semi, &[], &spec), 1.0);
+        // wrong value
+        let bad = vec![LBRACK, key(3), COLON, digit(6), COMMA, key(1), COLON, digit(2), RBRACK, EOS];
+        assert_eq!(score("struct", &bad, &[], &spec), 0.0);
+    }
+
+    #[test]
+    fn w2s_accepts_either_order_but_demands_consistency() {
+        let spec = j(r#"{"a": 3, "b": 8}"#);
+        let fwd = vec![word(3), word(8), SEP, word(8), word(3), EOS];
+        let rev = vec![word(8), word(3), SEP, word(3), word(8), EOS];
+        assert_eq!(score("pbench-w2s", &fwd, &[], &spec), 1.0);
+        assert_eq!(score("pbench-w2s", &rev, &[], &spec), 1.0);
+        // incoherent mix (the joint-marginal mismatch failure mode)
+        let mix = vec![word(3), word(3), SEP, word(8), word(8), EOS];
+        assert_eq!(score("pbench-w2s", &mix, &[], &spec), 0.0);
+    }
+
+    #[test]
+    fn latin_accepts_any_valid_completion() {
+        let spec = j(r#"{"row1": [1, 2, 3], "r2c1": 2}"#);
+        // completion: r2 = 2 3 1, r3 = 3 1 2
+        let gen = vec![digit(3), digit(1), digit(3), digit(1), digit(2), EOS];
+        assert_eq!(score("pbench-latin", &gen, &[], &spec), 1.0);
+        // invalid: repeated digit in row
+        let bad = vec![digit(3), digit(1), digit(3), digit(2), digit(2), EOS];
+        assert_eq!(score("pbench-latin", &bad, &[], &spec), 0.0);
+        // short answer
+        assert_eq!(score("pbench-latin", &[digit(1), EOS], &[], &spec), 0.0);
+    }
+
+    #[test]
+    fn constraint_exact_count() {
+        let spec = j(r#"{"word": 4, "count": 3}"#);
+        let gen = vec![word(4), word(4), word(4), EOS];
+        assert_eq!(score("constraint", &gen, &[], &spec), 1.0);
+        let too_many = vec![word(4); 4];
+        assert_eq!(score("constraint", &too_many, &[], &spec), 0.0);
+        let wrong_word = vec![word(5), word(4), word(4), EOS];
+        assert_eq!(score("constraint", &wrong_word, &[], &spec), 0.0);
+    }
+}

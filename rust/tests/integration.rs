@@ -1,0 +1,259 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//!
+//! These exercise the full L1->L2->L3 composition: HLO text parsing, PJRT
+//! compile + execute, output-tensor layouts, vocab agreement between the
+//! Python exporter and the Rust scorers, decode-loop end-to-end behavior,
+//! and the serving stack on a real model.
+
+use std::path::Path;
+use std::time::Duration;
+
+use dapd::coordinator::Coordinator;
+use dapd::decode::{decode_batch, DecodeConfig, Method};
+use dapd::eval::mrf::{run_mrf_validation, LayerSel};
+use dapd::eval::run_eval;
+use dapd::graph::edge_scores_from_attn;
+use dapd::runtime::{ArtifactKind, Engine, ForwardModel};
+use dapd::tensor::softmax_inplace;
+use dapd::workload::{scorer, EvalSet};
+
+fn engine() -> Engine {
+    Engine::load(Path::new("artifacts")).expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn metadata_vocab_matches_rust_constants() {
+    let e = engine();
+    let v = &e.meta.vocab;
+    assert_eq!(v["<pad>"], scorer::vocab::PAD as i64);
+    assert_eq!(v["<mask>"], scorer::vocab::MASK as i64);
+    assert_eq!(v["<eos>"], scorer::vocab::EOS as i64);
+    assert_eq!(v["<sep>"], scorer::vocab::SEP as i64);
+    assert_eq!(v["<fill>"], scorer::vocab::FILL as i64);
+    assert_eq!(v["["], scorer::vocab::LBRACK as i64);
+    assert_eq!(v["]"], scorer::vocab::RBRACK as i64);
+    assert_eq!(v[":"], scorer::vocab::COLON as i64);
+    assert_eq!(v[","], scorer::vocab::COMMA as i64);
+    assert_eq!(v[";"], scorer::vocab::SEMI as i64);
+    assert_eq!(v["="], scorer::vocab::EQ as i64);
+    assert_eq!(v["+"], scorer::vocab::PLUS as i64);
+    assert_eq!(v["0"], scorer::vocab::DIGIT0 as i64);
+    assert_eq!(v["a"], scorer::vocab::VAR0 as i64);
+    assert_eq!(v["K0"], scorer::vocab::KEY0 as i64);
+    assert_eq!(v["V0"], scorer::vocab::VAL0 as i64);
+    assert_eq!(v["W0"], scorer::vocab::WORD0 as i64);
+}
+
+#[test]
+fn serving_forward_output_contract() {
+    let e = engine();
+    let model = e.model_for("sim-llada", 1, e.meta.gen_len).unwrap();
+    let l = model.seq_len();
+    let p = model.prompt_len();
+    // prompt of pads + masked gen window
+    let mut tokens = vec![scorer::vocab::PAD; l];
+    for t in tokens.iter_mut().skip(p) {
+        *t = model.mask_id();
+    }
+    let out = model.forward(&tokens).unwrap();
+    assert_eq!(out.logits.dims, vec![1, l, model.vocab()]);
+    let attn = out.attn_avg.as_ref().unwrap();
+    let es = out.edge_scores.as_ref().unwrap();
+    let deg = out.degrees.as_ref().unwrap();
+    assert_eq!(attn.dims, vec![1, l, l]);
+    assert_eq!(es.dims, vec![1, l, l]);
+    assert_eq!(deg.dims, vec![1, l]);
+
+    // logits rows are finite and softmax-able
+    let mut probs = out.logits.slice3(0, p).to_vec();
+    assert!(probs.iter().all(|x| x.is_finite()));
+    softmax_inplace(&mut probs);
+    let sum: f32 = probs.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4);
+
+    // edge-score invariants on-device match the kernel contract:
+    // symmetric, zero diagonal, zero on prompt (unmasked) pairs
+    for i in (p..l).step_by(7) {
+        assert_eq!(es.at3(0, i, i), 0.0);
+        for j in (p..l).step_by(5) {
+            let a = es.at3(0, i, j);
+            let b = es.at3(0, j, i);
+            assert!((a - b).abs() < 1e-5, "asym at ({i},{j}): {a} vs {b}");
+        }
+    }
+    for j in 0..p {
+        assert_eq!(es.at3(0, p, j), 0.0, "prompt pair ({p},{j}) scored");
+    }
+    // degrees equal row sums of the score matrix
+    for i in (0..l).step_by(9) {
+        let row_sum: f32 = (0..l).map(|j| es.at3(0, i, j)).sum();
+        assert!((deg.at2(0, i) - row_sum).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn kernel_edge_scores_match_native_recompute() {
+    // cross-check: the Pallas edge-score kernel (inside the artifact) vs
+    // the rust-native recompute from attn_avg
+    let e = engine();
+    let model = e.model_for("sim-llada", 1, e.meta.gen_len).unwrap();
+    let l = model.seq_len();
+    let p = model.prompt_len();
+    let mut tokens = vec![scorer::vocab::PAD; l];
+    for t in tokens.iter_mut().skip(p) {
+        *t = model.mask_id();
+    }
+    let out = model.forward(&tokens).unwrap();
+    let attn = out.attn_avg.as_ref().unwrap();
+    let es = out.edge_scores.as_ref().unwrap();
+    let masked: Vec<usize> = (p..l).collect();
+    let (native, native_deg) = edge_scores_from_attn(attn, 0, &masked);
+    let n = masked.len();
+    for ci in 0..n {
+        for cj in 0..n {
+            let kernel = es.at3(0, masked[ci], masked[cj]);
+            assert!(
+                (kernel - native[ci * n + cj]).abs() < 1e-5,
+                "mismatch at ({ci},{cj})"
+            );
+        }
+        let kdeg = out.degrees.as_ref().unwrap().at2(0, masked[ci]);
+        assert!((kdeg - native_deg[ci]).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn decode_completes_on_real_model_all_methods() {
+    let e = engine();
+    let model = e.model_for("sim-llada", 2, e.meta.gen_len).unwrap();
+    let set = EvalSet::load(&e.meta, "struct").unwrap().take(2);
+    let prompts: Vec<Vec<i32>> = set.instances.iter().map(|i| i.prompt.clone()).collect();
+    for method in Method::all() {
+        let outs = decode_batch(&model, &prompts, &DecodeConfig::new(method)).unwrap();
+        for o in &outs {
+            assert!(o.gen.iter().all(|&t| t != model.mask_id()), "{method:?}");
+            assert!(o.steps >= 1 && o.steps <= model.gen_len() + 4);
+        }
+    }
+}
+
+#[test]
+fn dapd_beats_original_on_steps_with_real_model() {
+    let e = engine();
+    let model = e.model_for("sim-llada", 4, e.meta.gen_len).unwrap();
+    let set = EvalSet::load(&e.meta, "multiq").unwrap().take(4);
+    let base = run_eval(&model, &set, &DecodeConfig::new(Method::Original), "orig").unwrap();
+    let dapd = run_eval(&model, &set, &DecodeConfig::new(Method::DapdStaged), "dapd").unwrap();
+    assert!(
+        dapd.avg_steps < base.avg_steps,
+        "dapd {} !< original {}",
+        dapd.avg_steps,
+        base.avg_steps
+    );
+}
+
+#[test]
+fn toy_artifact_attn_layers_contract() {
+    let e = engine();
+    let toy = e
+        .meta
+        .artifacts
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Toy && a.batch > 1)
+        .expect("toy artifact")
+        .clone();
+    let model = e.model(&toy.name).unwrap();
+    let tokens = vec![e.meta.mrf.mask_id; toy.batch * toy.seq_len];
+    let out = model.forward(&tokens).unwrap();
+    let attn = out.attn_layers.as_ref().unwrap();
+    assert_eq!(
+        attn.dims,
+        vec![toy.batch, toy.n_layers, toy.seq_len, toy.seq_len]
+    );
+    // attention rows sum to one per layer
+    for layer in 0..toy.n_layers {
+        let mut sum = 0.0f32;
+        for j in 0..toy.seq_len {
+            sum += attn.data[((0 * toy.n_layers + layer) * toy.seq_len) * toy.seq_len + j];
+        }
+        assert!((sum - 1.0).abs() < 1e-3, "layer {layer} row sum {sum}");
+    }
+}
+
+#[test]
+fn mrf_validation_beats_chance() {
+    let e = engine();
+    let toy = e
+        .meta
+        .artifacts
+        .iter()
+        .find(|a| a.kind == ArtifactKind::Toy && a.batch > 1)
+        .unwrap()
+        .clone();
+    let model = e.model(&toy.name).unwrap();
+    // Which layers carry the dependency signal is scale-dependent (the
+    // paper's 8-layer RADD: last layers; our 8L/d32 toy: first layers —
+    // see EXPERIMENTS.md Table 10 row).  The mechanism test is
+    // layer-agnostic: the best-of-{all, first-2} selection must beat
+    // chance clearly.
+    let s_all = run_mrf_validation(&model, &e.meta.mrf, toy.n_layers, LayerSel::All, 10, 3)
+        .unwrap();
+    let s_first =
+        run_mrf_validation(&model, &e.meta.mrf, toy.n_layers, LayerSel::FirstK(2), 10, 3)
+            .unwrap();
+    let auc = s_all.auc.max(s_first.auc);
+    let ratio = s_all.ratio.max(s_first.ratio);
+    let ovr = s_all.ovr.min(s_first.ovr);
+    assert!(auc > 0.6, "attention should recover MRF edges, auc={auc}");
+    assert!(ratio > 1.0, "edge scores should exceed non-edge, r={ratio}");
+    assert!(ovr < 0.45, "degree ordering should beat chance, ovr={ovr}");
+}
+
+#[test]
+fn coordinator_serves_real_model() {
+    let e: &'static Engine = Box::leak(Box::new(engine()));
+    let model = e.model_for("sim-dream", 2, e.meta.gen_len).unwrap();
+    let set = EvalSet::load(&e.meta, "multiq").unwrap().take(2);
+    let (coord, handle) = Coordinator::start(model, Duration::from_millis(2), 16);
+    let rxs: Vec<_> = set
+        .instances
+        .iter()
+        .map(|i| {
+            coord
+                .submit(i.prompt.clone(), DecodeConfig::new(Method::DapdStaged))
+                .unwrap()
+        })
+        .collect();
+    let mut total_score = 0.0;
+    for (inst, rx) in set.instances.iter().zip(rxs) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.gen.len(), e.meta.gen_len);
+        total_score += scorer::score("multiq", &resp.gen, &inst.expect, &inst.spec);
+    }
+    // sim-dream memorized the fact table (training probe = 1.0); through
+    // the full serving stack it should stay well above chance (1/16)
+    assert!(total_score / 2.0 > 0.5, "score {}", total_score / 2.0);
+    coord.shutdown();
+    handle.join().unwrap();
+}
+
+#[test]
+fn batch_consistency_b1_vs_b4() {
+    // the same prompt decoded alone or inside a batch gives identical
+    // output (rows are independent; PAD rows don't leak)
+    let e = engine();
+    let m1 = e.model_for("sim-llada", 1, e.meta.gen_len).unwrap();
+    let m4 = e.model_for("sim-llada", 4, e.meta.gen_len).unwrap();
+    let set = EvalSet::load(&e.meta, "arith").unwrap().take(4);
+    let prompts: Vec<Vec<i32>> = set.instances.iter().map(|i| i.prompt.clone()).collect();
+    let cfg = DecodeConfig::new(Method::DapdStaged);
+    let solo: Vec<_> = prompts
+        .iter()
+        .map(|p| decode_batch(&m1, std::slice::from_ref(p), &cfg).unwrap()[0].clone())
+        .collect();
+    let batched = decode_batch(&m4, &prompts, &cfg).unwrap();
+    for (a, b) in solo.iter().zip(&batched) {
+        assert_eq!(a.gen, b.gen, "batching changed decode output");
+        assert_eq!(a.steps, b.steps, "batching changed step count");
+    }
+}

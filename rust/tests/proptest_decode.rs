@@ -1,0 +1,195 @@
+//! Property tests: decode-loop invariants over randomized mock models
+//! and configurations (artifact-free; complements rust/tests/integration.rs).
+
+use dapd::decode::{decode_batch, DapdOrdering, DecodeConfig, Method, MethodParams};
+use dapd::graph::TauSchedule;
+use dapd::runtime::MockModel;
+use dapd::util::prop;
+use dapd::util::rng::Pcg;
+
+fn random_mock(rng: &mut Pcg) -> MockModel {
+    let prompt_len = rng.range(2, 8);
+    let gen_len = rng.range(4, 24);
+    let mut m = MockModel::new(rng.range(1, 4), prompt_len + gen_len, prompt_len, rng.range(8, 40));
+    m.band = rng.range(1, 4);
+    m.base_conf = 0.4 + 0.3 * rng.f64() as f32;
+    m.conf_gain = 0.05 + 0.2 * rng.f64() as f32;
+    m
+}
+
+fn random_params(rng: &mut Pcg) -> MethodParams {
+    MethodParams {
+        conf_threshold: 0.6 + 0.35 * rng.f64() as f32,
+        gamma: 0.02 + 0.4 * rng.f64() as f32,
+        kl_threshold: 0.001 + 0.05 * rng.f64() as f32,
+        tau: {
+            let lo = 0.005 + 0.1 * rng.f64() as f32;
+            TauSchedule::new(lo, lo + 0.3 * rng.f64() as f32)
+        },
+        conf_one_eps: 1e-3,
+        stage_ratio: 0.3 + 0.4 * rng.f64() as f32,
+        ordering: [DapdOrdering::ConfDegree, DapdOrdering::Degree,
+                   DapdOrdering::Conf, DapdOrdering::Index][rng.below(4)],
+    }
+}
+
+fn random_method(rng: &mut Pcg) -> Method {
+    let all = Method::all();
+    all[rng.below(all.len())]
+}
+
+fn prompts_for(m: &MockModel, rng: &mut Pcg) -> Vec<Vec<i32>> {
+    let n = rng.range(1, m.batch + 1);
+    (0..n)
+        .map(|_| {
+            (0..m.prompt_len)
+                .map(|_| (2 + rng.below(m.vocab - 2)) as i32)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn every_decode_terminates_and_commits_each_position_once() {
+    prop::check("decode-terminates", 60, |rng: &mut Pcg| {
+        let m = random_mock(rng);
+        let mut cfg = DecodeConfig::new(random_method(rng));
+        cfg.params = random_params(rng);
+        let g = m.seq_len - m.prompt_len;
+        // random block count that divides into >= 1-token blocks
+        cfg.blocks = [1, 2, 4][rng.below(3)].min(g);
+        let prompts = prompts_for(&m, rng);
+        let outs = decode_batch(&m, &prompts, &cfg).unwrap();
+        assert_eq!(outs.len(), prompts.len());
+        for o in &outs {
+            // fully decoded
+            assert!(o.gen.iter().all(|&t| t != m.mask_id));
+            // NFE bounds: 1 <= steps <= gen_len (+ slack)
+            assert!(o.steps >= 1 && o.steps <= g + 4, "steps {}", o.steps);
+            // each position committed exactly once
+            let mut seen = vec![false; g];
+            for commits in &o.per_step_commits {
+                assert!(!commits.is_empty(), "empty step recorded");
+                for &c in commits {
+                    assert!(!seen[c], "double commit");
+                    seen[c] = true;
+                }
+            }
+            assert!(seen.iter().all(|&x| x), "position never committed");
+            // committed token matches the final sequence
+            assert_eq!(o.tokens.len(), m.seq_len);
+            assert_eq!(&o.tokens[m.prompt_len..], &o.gen[..]);
+        }
+    });
+}
+
+#[test]
+fn block_decoding_commits_blocks_in_order() {
+    prop::check("blocks-ordered", 40, |rng: &mut Pcg| {
+        let m = random_mock(rng);
+        let g = m.seq_len - m.prompt_len;
+        let blocks = rng.range(2, 5).min(g);
+        let mut cfg = DecodeConfig::new(random_method(rng));
+        cfg.params = random_params(rng);
+        cfg.blocks = blocks;
+        let prompts = prompts_for(&m, rng);
+        let outs = decode_batch(&m, &prompts, &cfg).unwrap();
+        let block_len = g / blocks;
+        for o in &outs {
+            for k in 1..blocks {
+                let prev_end = if k == blocks { g } else { k * block_len };
+                let prev_max = (0..prev_end)
+                    .map(|i| o.commit_step[i])
+                    .max()
+                    .unwrap();
+                let cur_start = k * block_len;
+                let cur_end = if k == blocks - 1 { g } else { (k + 1) * block_len };
+                let cur_min = (cur_start..cur_end)
+                    .map(|i| o.commit_step[i])
+                    .min()
+                    .unwrap();
+                assert!(
+                    prev_max <= cur_min,
+                    "block {k} started (step {cur_min}) before earlier \
+                     blocks finished (step {prev_max})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn eos_suppression_never_emits_eos() {
+    prop::check("eos-suppressed", 40, |rng: &mut Pcg| {
+        let m = random_mock(rng);
+        let mut cfg = DecodeConfig::new(random_method(rng));
+        cfg.params = random_params(rng);
+        cfg.eos_suppress = true;
+        // pick an EOS id that the mock would otherwise emit somewhere
+        let some_pos = m.prompt_len + rng.below(m.seq_len - m.prompt_len);
+        cfg.eos_id = m.true_token(some_pos);
+        let prompts = prompts_for(&m, rng);
+        let outs = decode_batch(&m, &prompts, &cfg).unwrap();
+        for o in &outs {
+            assert!(
+                o.gen.iter().all(|&t| t != cfg.eos_id),
+                "suppressed token emitted"
+            );
+        }
+    });
+}
+
+#[test]
+fn deterministic_across_runs() {
+    prop::check("decode-deterministic", 20, |rng: &mut Pcg| {
+        let m = random_mock(rng);
+        let mut cfg = DecodeConfig::new(random_method(rng));
+        cfg.params = random_params(rng);
+        let prompts = prompts_for(&m, rng);
+        let a = decode_batch(&m, &prompts, &cfg).unwrap();
+        let b = decode_batch(&m, &prompts, &cfg).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.gen, y.gen);
+            assert_eq!(x.steps, y.steps);
+            assert_eq!(x.per_step_commits, y.per_step_commits);
+        }
+    });
+}
+
+#[test]
+fn dapd_never_co_commits_strongly_coupled_neighbors_early() {
+    // With the mock's banded coupling and a tau below the band weight,
+    // DAPD-Staged in the dense regime (mask_ratio >= stage_ratio) must
+    // not commit two adjacent positions in the same step.
+    prop::check("dapd-respects-band", 30, |rng: &mut Pcg| {
+        let mut m = random_mock(rng);
+        m.band = 1;
+        let g = m.seq_len - m.prompt_len;
+        let mut cfg = DecodeConfig::new(Method::DapdStaged);
+        cfg.params = random_params(rng);
+        cfg.params.tau = TauSchedule::new(0.05, 0.05);
+        cfg.params.stage_ratio = 0.5;
+        let prompts = prompts_for(&m, rng);
+        let outs = decode_batch(&m, &prompts, &cfg).unwrap();
+        for o in &outs {
+            let mut masked_count = g;
+            for commits in &o.per_step_commits {
+                let dense = masked_count as f32 / g as f32 >= 0.5;
+                if dense {
+                    let mut sorted = commits.clone();
+                    sorted.sort_unstable();
+                    for w in sorted.windows(2) {
+                        assert!(
+                            w[1] - w[0] > 1,
+                            "adjacent positions {} and {} co-committed in \
+                             dense regime",
+                            w[0],
+                            w[1]
+                        );
+                    }
+                }
+                masked_count -= commits.len();
+            }
+        }
+    });
+}
