@@ -2,6 +2,10 @@
 //! softmax/conf extraction, edge-score gather, graph build, Welsh-Powell,
 //! plus one full decode step through the MockModel (no PJRT) and one
 //! through a real artifact when available.
+//!
+//! Environment knobs (CI's bench-smoke job uses both):
+//!   DAPD_ITERS=N        timed iterations per op (default 200)
+//!   DAPD_BENCH_JSON=f   also write the results as a JSON summary to `f`
 
 mod common;
 
@@ -10,13 +14,67 @@ use dapd::graph::{max_normalize, DepGraph};
 use dapd::runtime::{ForwardModel, MockModel};
 use dapd::tensor::softmax_inplace;
 use dapd::util::bench::{fmt_f, time_it, Table};
+use dapd::util::json::Json;
 use dapd::util::rng::Pcg;
 
+/// Collects rows for both the printed table and the JSON summary.
+struct Recorder {
+    table: Table,
+    rows: Vec<Json>,
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder {
+            table: Table::new(
+                "L3 hot-path micro-benchmarks",
+                &["op", "n", "mean (us)", "sd (us)"],
+            ),
+            rows: Vec::new(),
+        }
+    }
+
+    fn add(&mut self, op: &str, n: &str, iters: usize, mean_s: f64, sd_s: f64) {
+        self.table.row(vec![
+            op.to_string(),
+            n.to_string(),
+            fmt_f(mean_s * 1e6, 1),
+            fmt_f(sd_s * 1e6, 1),
+        ]);
+        let mut row = Json::obj();
+        row.set("op", op.into());
+        row.set("n", n.into());
+        row.set("iters", iters.into());
+        row.set("mean_us", (mean_s * 1e6).into());
+        row.set("sd_us", (sd_s * 1e6).into());
+        self.rows.push(row);
+    }
+
+    fn finish(self) {
+        self.table.print();
+        if let Ok(path) = std::env::var("DAPD_BENCH_JSON") {
+            let mut out = Json::obj();
+            out.set("bench", "micro_hotpath".into());
+            out.set("rows", Json::Arr(self.rows));
+            match std::fs::write(&path, out.dump()) {
+                Ok(()) => println!("wrote JSON summary to {path}"),
+                Err(e) => eprintln!("failed writing {path}: {e}"),
+            }
+        }
+    }
+}
+
 fn main() {
-    let mut t = Table::new(
-        "L3 hot-path micro-benchmarks",
-        &["op", "n", "mean (us)", "sd (us)"],
-    );
+    let iters: usize = std::env::var("DAPD_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    let warmup = (iters / 10).max(1);
+    // the full-decode ops are ~100x heavier per iteration
+    let heavy_iters = (iters / 10).max(1);
+    let heavy_warmup = (warmup / 5).max(1);
+
+    let mut rec = Recorder::new();
     let mut rng = Pcg::new(42);
 
     // softmax over a vocab row x 40 candidates
@@ -32,10 +90,10 @@ fn main() {
                 std::hint::black_box(dapd::tensor::argmax(&buf));
             }
         },
-        20,
-        200,
+        warmup,
+        iters,
     );
-    t.row(vec!["softmax+argmax x40".into(), "92".into(), fmt_f(m * 1e6, 1), fmt_f(sd * 1e6, 1)]);
+    rec.add("softmax+argmax x40", "92", iters, m, sd);
 
     // edge-score gather + normalize for n candidates out of L=68
     for n in [20usize, 40] {
@@ -55,15 +113,10 @@ fn main() {
                 max_normalize(&mut scores);
                 std::hint::black_box(&scores);
             },
-            20,
-            200,
+            warmup,
+            iters,
         );
-        t.row(vec![
-            "edge gather+norm".into(),
-            n.to_string(),
-            fmt_f(m * 1e6, 1),
-            fmt_f(sd * 1e6, 1),
-        ]);
+        rec.add("edge gather+norm", &n.to_string(), iters, m, sd);
     }
 
     // graph build + Welsh-Powell at n=40 (the per-step DAPD cost)
@@ -75,15 +128,10 @@ fn main() {
                 let g = DepGraph::from_scores(n, |i, j| scores[i * n + j], 0.7);
                 std::hint::black_box(g.welsh_powell_set(&prio));
             },
-            20,
-            200,
+            warmup,
+            iters,
         );
-        t.row(vec![
-            "graph build + WP set".into(),
-            n.to_string(),
-            fmt_f(m * 1e6, 1),
-            fmt_f(sd * 1e6, 1),
-        ]);
+        rec.add("graph build + WP set", &n.to_string(), iters, m, sd);
     }
 
     // full decode on the mock (all strategy machinery, no PJRT)
@@ -94,15 +142,10 @@ fn main() {
             let cfg = DecodeConfig::new(Method::DapdStaged);
             std::hint::black_box(decode_batch(&mock, &prompts, &cfg).unwrap());
         },
-        3,
-        20,
+        heavy_warmup,
+        heavy_iters,
     );
-    t.row(vec![
-        "decode_batch mock b4 L68".into(),
-        "-".into(),
-        fmt_f(m * 1e6, 1),
-        fmt_f(sd * 1e6, 1),
-    ]);
+    rec.add("decode_batch mock b4 L68", "-", heavy_iters, m, sd);
 
     // one real forward pass, when artifacts exist
     if let Ok(engine) = std::panic::catch_unwind(common::engine) {
@@ -112,18 +155,13 @@ fn main() {
             || {
                 std::hint::black_box(model.forward(&tokens).unwrap());
             },
-            3,
-            20,
+            heavy_warmup,
+            heavy_iters,
         );
-        t.row(vec![
-            "PJRT forward b4 L68".into(),
-            "-".into(),
-            fmt_f(m * 1e6, 1),
-            fmt_f(sd * 1e6, 1),
-        ]);
+        rec.add("PJRT forward b4 L68", "-", heavy_iters, m, sd);
     }
 
-    t.print();
+    rec.finish();
     println!("(forward pass should dominate every graph op by >=100x — the");
     println!(" paper's 'negligible graph overhead' claim, quantified)");
 }

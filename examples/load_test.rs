@@ -1,73 +1,222 @@
-//! Open-loop load test: Poisson arrivals against the coordinator, with
-//! latency percentiles and backpressure accounting — the serving-side
-//! stress test behind the Table 6 TPS claims.
+//! Load test against the coordinator's sharded worker pool, with latency
+//! percentiles, backpressure accounting, and a worker-scaling comparison
+//! — the serving-side stress test behind the Table 6 TPS claims.
 //!
-//!     cargo run --release --example load_test [-- --rate 2.0 --requests 40]
+//! By default it runs closed-loop (all requests submitted at once) on the
+//! mock model for each worker count in `--workers`, checks that every
+//! request's generation is token-for-token identical across pool sizes,
+//! and prints the aggregate-throughput speedup:
+//!
+//!     cargo run --release --example load_test
+//!     cargo run --release --example load_test -- --workers 1,4 --requests 64
+//!     cargo run --release --example load_test -- --rate 2.0     # Poisson open loop
+//!     cargo run --release --example load_test -- --artifacts artifacts  # PJRT
+//!
+//! When artifacts are present (and `--mock` is not given) the prompts come
+//! from the exported `struct` eval set and the pool compiles per-worker
+//! PJRT executables; otherwise it falls back to the synthetic model.
 
+use std::collections::HashMap;
 use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-use dapd::coordinator::{Coordinator, Response};
+use anyhow::{bail, Result};
+use dapd::coordinator::{Coordinator, PoolOptions, Response};
 use dapd::decode::{DecodeConfig, Method};
-use dapd::runtime::Engine;
+use dapd::runtime::{Engine, MockModel, ModelPool};
 use dapd::util::args::Args;
+use dapd::util::bench::{fmt_f, Table};
 use dapd::util::rng::Pcg;
 use dapd::util::stats::Summary;
 use dapd::workload::{arrivals::Arrival, EvalSet};
 
-fn main() -> Result<()> {
-    let args = Args::parse_env();
-    let rate = args.f64_or("rate", 2.0); // requests/second
-    let n = args.usize_or("requests", 40);
-    let engine: &'static Engine = Box::leak(Box::new(Engine::load(
-        std::path::Path::new(&args.str_or("artifacts", "artifacts")),
-    )?));
-    let model = engine.model_for("sim-llada", 4, engine.meta.gen_len)?;
-    let (coord, _worker) = Coordinator::start(model, Duration::from_millis(4), 64);
+struct RunStats {
+    wall: f64,
+    tokens: usize,
+    rejected: usize,
+    lat: Summary,
+    /// request index -> generation (for cross-pool identity checks)
+    gens: HashMap<usize, Vec<i32>>,
+}
 
-    let set = EvalSet::load(&engine.meta, "struct")?;
-    let mut rng = Pcg::new(11);
-    let schedule = Arrival::Poisson { rate }.schedule(n, &mut rng);
-
+fn run_load(
+    pool: &ModelPool,
+    workers: usize,
+    prompts: &[Vec<i32>],
+    schedule: &[f64],
+    queue_cap: usize,
+) -> Result<RunStats> {
+    let opts = PoolOptions {
+        workers,
+        batch_wait: Duration::from_millis(4),
+        queue_cap,
+    };
+    let (coord, handles) = Coordinator::start_pool(pool, &opts)?;
     let t0 = Instant::now();
-    let mut pending: Vec<Receiver<Response>> = Vec::new();
+    let mut pending: Vec<(usize, Receiver<Response>)> = Vec::new();
     let mut rejected = 0usize;
     for (i, &at) in schedule.iter().enumerate() {
         let now = t0.elapsed().as_secs_f64();
         if at > now {
             std::thread::sleep(Duration::from_secs_f64(at - now));
         }
-        let inst = &set.instances[i % set.len()];
-        match coord.submit(inst.prompt.clone(), DecodeConfig::new(Method::DapdStaged)) {
-            Ok(rx) => pending.push(rx),
+        let prompt = prompts[i % prompts.len()].clone();
+        match coord.submit(prompt, DecodeConfig::new(Method::DapdStaged)) {
+            Ok(rx) => pending.push((i, rx)),
             Err(_) => rejected += 1, // backpressure: queue full
         }
     }
     let mut lat = Summary::new();
     let mut tokens = 0usize;
-    for rx in pending {
+    let mut gens = HashMap::new();
+    for (i, rx) in pending {
         let r = rx.recv()?;
         lat.add(r.latency.as_secs_f64());
         tokens += r.gen.len();
+        gens.insert(i, r.gen);
     }
     let wall = t0.elapsed().as_secs_f64();
-
-    println!("\nopen-loop @ {rate} req/s, {n} requests ({rejected} rejected by backpressure)");
-    println!(
-        "completed {} in {wall:.1}s -> {:.2} req/s, {:.1} tok/s",
-        lat.count(),
-        lat.count() as f64 / wall,
-        tokens as f64 / wall
-    );
-    println!(
-        "latency p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  max {:.2}s",
-        lat.p50(),
-        lat.p95(),
-        lat.p99(),
-        lat.max()
-    );
-    println!("{}", coord.metrics.report());
     coord.shutdown();
+    handles.join();
+    Ok(RunStats {
+        wall,
+        tokens,
+        rejected,
+        lat,
+        gens,
+    })
+}
+
+fn mock_setup(n: usize) -> (ModelPool, Vec<Vec<i32>>) {
+    // shapes mirror the sim-llada artifact family (batch 4, L=68, V=92)
+    let model = MockModel::new(4, 68, 28, 92);
+    let mut rng = Pcg::new(7);
+    let prompts = (0..n)
+        .map(|_| (0..28).map(|_| (2 + rng.below(90)) as i32).collect())
+        .collect();
+    (ModelPool::mock(model), prompts)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let n = args.usize_or("requests", 48);
+    let rate = args.f64_or("rate", 0.0); // req/s; 0 = closed loop
+    let worker_counts: Vec<usize> = args
+        .list_or("workers", &["1", "4"])
+        .iter()
+        .map(|w| w.parse().expect("--workers expects a list of integers"))
+        .collect();
+    if worker_counts.is_empty() {
+        bail!("--workers needs at least one pool size");
+    }
+
+    let (pool, prompts) = if args.has("mock") {
+        mock_setup(n)
+    } else {
+        let dir = args.str_or("artifacts", "artifacts");
+        match Engine::load(std::path::Path::new(&dir)) {
+            Ok(engine) => {
+                let engine = Arc::new(engine);
+                let set = EvalSet::load(&engine.meta, "struct")?;
+                let prompts: Vec<Vec<i32>> = (0..n)
+                    .map(|i| set.instances[i % set.len()].prompt.clone())
+                    .collect();
+                let gen_len = engine.meta.gen_len;
+                (ModelPool::pjrt(engine, "sim-llada", 4, gen_len)?, prompts)
+            }
+            Err(e) => {
+                eprintln!("artifacts unavailable ({e:#}); using the mock model");
+                mock_setup(n)
+            }
+        }
+    };
+
+    run_all(pool, prompts, n, rate, &worker_counts)
+}
+
+fn run_all(
+    pool: ModelPool,
+    prompts: Vec<Vec<i32>>,
+    n: usize,
+    rate: f64,
+    worker_counts: &[usize],
+) -> Result<()> {
+    let mut rng = Pcg::new(11);
+    let schedule = if rate > 0.0 {
+        Arrival::Poisson { rate }.schedule(n, &mut rng)
+    } else {
+        Arrival::Closed.schedule(n, &mut rng)
+    };
+    // closed-loop comparisons want zero rejects so generations line up
+    let queue_cap = if rate > 0.0 { 64 } else { n + 8 };
+
+    let mode = if rate > 0.0 {
+        format!("open loop @ {rate} req/s")
+    } else {
+        "closed loop".to_string()
+    };
+    println!(
+        "load test: {} on {}, {n} requests, pools {:?}",
+        mode,
+        pool.describe(),
+        worker_counts
+    );
+
+    let mut t = Table::new(
+        "Aggregate throughput vs worker count",
+        &[
+            "workers", "done", "rej", "wall (s)", "req/s", "tok/s", "p50 (s)", "p95 (s)",
+            "speedup",
+        ],
+    );
+    let mut baseline: Option<RunStats> = None;
+    let mut compared = 0usize;
+    for &w in worker_counts {
+        let stats = run_load(&pool, w, &prompts, &schedule, queue_cap)?;
+        let tput = stats.tokens as f64 / stats.wall;
+        let speedup = match &baseline {
+            Some(b) => tput / (b.tokens as f64 / b.wall),
+            None => 1.0,
+        };
+        t.row(vec![
+            w.to_string(),
+            stats.lat.count().to_string(),
+            stats.rejected.to_string(),
+            fmt_f(stats.wall, 2),
+            fmt_f(stats.lat.count() as f64 / stats.wall, 2),
+            fmt_f(tput, 1),
+            fmt_f(stats.lat.p50(), 3),
+            fmt_f(stats.lat.p95(), 3),
+            fmt_f(speedup, 2),
+        ]);
+        if let Some(b) = &baseline {
+            // per-request generations must be identical to the
+            // single-worker baseline: pooling must never change outputs
+            for (i, gen) in &stats.gens {
+                if let Some(base_gen) = b.gens.get(i) {
+                    if gen != base_gen {
+                        bail!(
+                            "request {i}: {w}-worker pool diverged from the \
+                             {}-worker baseline",
+                            worker_counts[0]
+                        );
+                    }
+                    compared += 1;
+                }
+            }
+        } else {
+            baseline = Some(stats);
+        }
+    }
+    t.print();
+    if compared > 0 {
+        println!(
+            "checked {compared} generations against the {}-worker baseline: identical",
+            worker_counts[0]
+        );
+    } else if worker_counts.len() > 1 {
+        println!("warning: no request completed in both runs — identity unverified");
+    }
     Ok(())
 }

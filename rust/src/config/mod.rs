@@ -6,7 +6,7 @@
 //!
 //! ```json
 //! {
-//!   "model": "sim-llada", "batch": 4, "port": 7070,
+//!   "model": "sim-llada", "batch": 4, "port": 7070, "workers": 4,
 //!   "method": "dapd-staged", "blocks": 1, "eos_suppress": false,
 //!   "batch_wait_ms": 5, "queue_cap": 256,
 //!   "conf_threshold": 0.9, "gamma": 0.1, "kl_threshold": 0.01,
@@ -27,6 +27,8 @@ pub struct ServeSettings {
     pub model: String,
     pub batch: usize,
     pub port: usize,
+    /// inference workers in the coordinator pool (each owns a replica)
+    pub workers: usize,
     pub method: Method,
     pub blocks: usize,
     pub eos_suppress: bool,
@@ -42,6 +44,7 @@ impl Default for ServeSettings {
             model: "sim-llada".into(),
             batch: 4,
             port: 7070,
+            workers: 1,
             method: Method::DapdStaged,
             blocks: 1,
             eos_suppress: false,
@@ -78,6 +81,9 @@ impl ServeSettings {
         }
         if let Some(v) = j.get("port").as_usize() {
             self.port = v;
+        }
+        if let Some(v) = j.get("workers").as_usize() {
+            self.workers = v;
         }
         if let Some(v) = j.get("method").as_str() {
             self.method = Method::parse(v).ok_or_else(|| anyhow!("unknown method '{v}'"))?;
@@ -118,6 +124,7 @@ impl ServeSettings {
         self.model = args.str_or("model", &self.model);
         self.batch = args.usize_or("batch", self.batch);
         self.port = args.usize_or("port", self.port);
+        self.workers = args.usize_or("workers", self.workers);
         if let Some(m) = args.get("method") {
             self.method = Method::parse(m).ok_or_else(|| anyhow!("unknown method '{m}'"))?;
         }
@@ -143,6 +150,9 @@ impl ServeSettings {
     fn validate(self) -> Result<ServeSettings> {
         if self.batch == 0 || self.blocks == 0 {
             return Err(anyhow!("batch and blocks must be >= 1"));
+        }
+        if self.workers == 0 {
+            return Err(anyhow!("workers must be >= 1"));
         }
         if !(0.0..=1.0).contains(&self.params.conf_threshold) {
             return Err(anyhow!("conf_threshold must be in [0,1]"));
@@ -199,8 +209,28 @@ mod tests {
     }
 
     #[test]
+    fn workers_from_file_and_flags() {
+        let dir = std::env::temp_dir().join("dapd_cfg_workers_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"workers": 2}"#).unwrap();
+        let s = ServeSettings::resolve(&args(&["--config", path.to_str().unwrap()])).unwrap();
+        assert_eq!(s.workers, 2);
+        let s = ServeSettings::resolve(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--workers",
+            "8",
+        ]))
+        .unwrap();
+        assert_eq!(s.workers, 8); // flag overrides file
+        assert_eq!(ServeSettings::resolve(&args(&[])).unwrap().workers, 1);
+    }
+
+    #[test]
     fn validation_rejects_bad_values() {
         assert!(ServeSettings::resolve(&args(&["--batch", "0"])).is_err());
+        assert!(ServeSettings::resolve(&args(&["--workers", "0"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--tau-min", "0.5", "--tau-max", "0.1"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--conf-threshold", "1.5"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--method", "nope"])).is_err());

@@ -5,6 +5,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 #[derive(Debug, Default)]
@@ -16,6 +17,10 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub queue_depth: AtomicU64,
     pub busy_micros: AtomicU64,
+    /// forward passes run (continuous batching: one per step)
+    pub steps_run: AtomicU64,
+    /// occupied slots summed over forward passes (occupancy numerator)
+    pub slot_steps: AtomicU64,
     latency: Mutex<Summary>,
     steps: Mutex<Summary>,
     batch_sizes: Mutex<Summary>,
@@ -40,7 +45,16 @@ impl Metrics {
         self.batch_sizes.lock().unwrap().add(size as f64);
     }
 
-    /// tokens per second over the engine's busy time
+    /// One forward pass with `occupied` live slots (continuous batching).
+    pub fn record_step(&self, occupied: usize) {
+        self.steps_run.fetch_add(1, Ordering::Relaxed);
+        self.slot_steps.fetch_add(occupied as u64, Ordering::Relaxed);
+    }
+
+    /// tokens per second over this recorder's engine-busy time.  On the
+    /// pool aggregate, busy time is summed across workers, so this reads
+    /// as per-worker throughput; the per-worker metrics (and the wall
+    /// clock in benches/load_test) carry the aggregate story.
     pub fn tps(&self) -> f64 {
         let busy = self.busy_micros.load(Ordering::Relaxed) as f64 / 1e6;
         if busy <= 0.0 {
@@ -58,8 +72,53 @@ impl Metrics {
         self.steps.lock().unwrap().mean()
     }
 
+    /// Mean slot occupancy per forward pass when step records exist
+    /// (continuous batching), else the classic per-call batch-size mean.
     pub fn mean_batch_size(&self) -> f64 {
+        let steps = self.steps_run.load(Ordering::Relaxed);
+        if steps > 0 {
+            return self.slot_steps.load(Ordering::Relaxed) as f64 / steps as f64;
+        }
         self.batch_sizes.lock().unwrap().mean()
+    }
+
+    /// Structured snapshot for the serving metrics endpoint (the server's
+    /// `{"metrics": true}` request returns one of these per worker plus
+    /// the aggregate).
+    pub fn to_json(&self) -> Json {
+        let (p50, p95) = self.latency_p50_p95();
+        let mut j = Json::obj();
+        j.set(
+            "requests",
+            (self.requests.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "batches",
+            (self.batches.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "tokens_out",
+            (self.tokens_out.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set("errors", (self.errors.load(Ordering::Relaxed) as i64).into());
+        j.set(
+            "rejected",
+            (self.rejected.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "queue_depth",
+            (self.queue_depth.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "steps_run",
+            (self.steps_run.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set("tps", self.tps().into());
+        j.set("mean_steps", self.mean_steps().into());
+        j.set("mean_batch_size", self.mean_batch_size().into());
+        j.set("latency_p50_s", p50.into());
+        j.set("latency_p95_s", p95.into());
+        j
     }
 
     pub fn report(&self) -> String {
@@ -103,5 +162,30 @@ mod tests {
     #[test]
     fn tps_zero_before_traffic() {
         assert_eq!(Metrics::new().tps(), 0.0);
+    }
+
+    #[test]
+    fn occupancy_tracking_overrides_batch_size_mean() {
+        let m = Metrics::new();
+        // classic per-call recording only: summary mean
+        m.record_batch(2, 80, Duration::from_millis(400));
+        assert!((m.mean_batch_size() - 2.0).abs() < 1e-9);
+        // step records flip the metric to true occupancy: (4 + 2) / 2
+        m.record_step(4);
+        m.record_step(2);
+        assert!((m.mean_batch_size() - 3.0).abs() < 1e-9);
+        assert_eq!(m.steps_run.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn json_snapshot_carries_counters() {
+        let m = Metrics::new();
+        m.record_request(Duration::from_millis(50), 8);
+        m.record_batch(1, 40, Duration::from_millis(200));
+        let j = m.to_json();
+        assert_eq!(j.get("requests").as_i64(), Some(1));
+        assert_eq!(j.get("tokens_out").as_i64(), Some(40));
+        assert!(j.get("tps").as_f64().unwrap() > 0.0);
+        assert!(j.get("latency_p95_s").as_f64().unwrap() >= 0.05 - 1e-9);
     }
 }

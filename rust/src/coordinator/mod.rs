@@ -1,30 +1,45 @@
-//! The serving coordinator: request router + dynamic batcher + inference
-//! worker + metrics.
+//! The serving coordinator: a sharded, continuously-batching worker pool.
 //!
 //! Architecture (thread-based; tokio is not vendored in this image):
 //!
-//!   clients -> submit() -> bounded queue -> batcher loop (inference
-//!   thread, owns the compiled executable) -> decode_batch -> per-request
-//!   response channels
+//!   clients -> submit() -> per-group sub-queues (sharded by group_key)
+//!           -> N inference workers, each owning its own ForwardModel
+//!              replica from runtime::ModelPool
+//!           -> SlotBatch continuous batching (a finished sample's slot is
+//!              backfilled from the group's queue at *step* granularity)
+//!           -> per-request response channels
 //!
-//! The batcher implements the classic dynamic-batching policy: take the
-//! first waiting request, then wait up to `batch_wait` for more, capped
-//! at the artifact's compiled batch size.  Per-method queues are not
-//! needed — a request carries its decode config, and the batcher groups
-//! compatible requests (same method+config hash) per batch.
+//! Scheduling policy: a worker takes the globally oldest waiting request,
+//! adopts its compatibility group (method + blocks + eos flags — see
+//! [`group_key`]), optionally waits `batch_wait` for stragglers, then
+//! steps the batch; between steps it backfills free slots from the same
+//! group's queue, so the batch stays full under load without ever waiting
+//! for the whole board to drain.  When the board empties the worker goes
+//! back for the oldest request of *any* group.
+//!
+//! Backpressure is a bound on the total queued requests across all
+//! shards; `submit` rejects above it.  `shutdown` stops acceptance but
+//! drains both in-flight batches and already-queued requests before the
+//! workers exit (graceful).
+//!
+//! Metrics are recorded twice: into the aggregate (`Coordinator::metrics`,
+//! the backward-compatible endpoint) and into a per-worker `Metrics` for
+//! the breakdown (`worker_metrics`, surfaced by the server's metrics
+//! request and the periodic report).
 
 pub mod metrics;
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::decode::{decode_batch, DecodeConfig};
-use crate::runtime::ForwardModel;
+use crate::decode::{DecodeConfig, SlotBatch};
+use crate::runtime::{ForwardModel, ModelPool};
+use crate::util::logging;
 pub use metrics::Metrics;
 
 /// A decode request: fixed-width prompt + the method configuration.
@@ -35,6 +50,8 @@ pub struct Request {
     respond: SyncSender<Response>,
     /// batching compatibility key (method + blocks + eos flags)
     group: u64,
+    /// global arrival order (FIFO across shards)
+    seq: u64,
 }
 
 /// The reply a client receives.
@@ -46,38 +63,194 @@ pub struct Response {
     pub latency: Duration,
 }
 
-fn group_key(cfg: &DecodeConfig) -> u64 {
-    // method discriminant + blocks + eos flags; params assumed uniform
-    // per deployment (they are config-level, not request-level, in vLLM
-    // terms) but folded in coarsely anyway via bit tricks.
-    let m = cfg.method.name().as_bytes()[0] as u64
-        ^ (cfg.method.name().len() as u64) << 8;
-    m ^ (cfg.blocks as u64) << 16
-        ^ (cfg.eos_suppress as u64) << 32
-        ^ (cfg.params.conf_threshold.to_bits() as u64) << 33
+fn fnv_mix(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Batching compatibility key: requests with equal keys may share a
+/// `SlotBatch` (they are decoded under one config).  Folds the full
+/// method name, block count, EOS settings, step cap and the confidence
+/// threshold through FNV-1a; the remaining params are config-level in
+/// vLLM terms (uniform per deployment) and intentionally excluded.
+///
+/// The seed's bit-trick key collided for `dapd-staged`/`dapd-direct`
+/// (same first byte, same length), which would have decoded one method's
+/// requests under the other's config — hence the full-name hash.
+pub fn group_key(cfg: &DecodeConfig) -> u64 {
+    let mut h = fnv_mix(0xcbf29ce484222325, cfg.method.name().as_bytes());
+    h = fnv_mix(h, &(cfg.blocks as u64).to_le_bytes());
+    h = fnv_mix(h, &[cfg.eos_suppress as u8]);
+    h = fnv_mix(h, &cfg.eos_id.to_le_bytes());
+    h = fnv_mix(h, &(cfg.max_steps as u64).to_le_bytes());
+    h = fnv_mix(h, &cfg.params.conf_threshold.to_bits().to_le_bytes());
+    h
+}
+
+/// One compatibility group's FIFO sub-queue.
+struct Shard {
+    key: u64,
+    items: VecDeque<Request>,
+}
+
+struct QueueState {
+    shards: Vec<Shard>,
+    /// total requests across all shards (the backpressure bound)
+    total: usize,
+    closed: bool,
+}
+
+impl QueueState {
+    /// Pop the globally oldest request (FIFO across shards).
+    fn pop_oldest(&mut self) -> Option<Request> {
+        let idx = self
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, sh)| !sh.items.is_empty())
+            .min_by_key(|(_, sh)| sh.items.front().unwrap().seq)
+            .map(|(i, _)| i)?;
+        let req = self.shards[idx].items.pop_front().unwrap();
+        if self.shards[idx].items.is_empty() {
+            self.shards.remove(idx);
+        }
+        self.total -= 1;
+        Some(req)
+    }
+
+    /// Pop the oldest request of one compatibility group — unless an
+    /// *older* request of a different group is waiting.  This bounds
+    /// cross-group starvation: a continuous-batching session keeps
+    /// feeding only while its group stays at the global FIFO front, so
+    /// the worker returns to `pop_oldest` (and the starving group) after
+    /// at most one batch drain.
+    fn pop_group(&mut self, key: u64) -> Option<Request> {
+        let idx = self.shards.iter().position(|sh| sh.key == key)?;
+        // shards are dropped when emptied, so front() is always Some
+        let head_seq = self.shards[idx].items.front().unwrap().seq;
+        let older_elsewhere = self.shards.iter().any(|sh| {
+            sh.key != key
+                && sh.items.front().map(|r| r.seq < head_seq).unwrap_or(false)
+        });
+        if older_elsewhere {
+            return None;
+        }
+        let req = self.shards[idx].items.pop_front().unwrap();
+        if self.shards[idx].items.is_empty() {
+            self.shards.remove(idx);
+        }
+        self.total -= 1;
+        Some(req)
+    }
+
+    fn push(&mut self, req: Request) {
+        match self.shards.iter_mut().find(|sh| sh.key == req.group) {
+            Some(sh) => sh.items.push_back(req),
+            None => {
+                let key = req.group;
+                let mut items = VecDeque::new();
+                items.push_back(req);
+                self.shards.push(Shard { key, items });
+            }
+        }
+        self.total += 1;
+    }
 }
 
 struct Queue {
-    items: Mutex<VecDeque<Request>>,
+    state: Mutex<QueueState>,
     available: Condvar,
-    closed: AtomicBool,
     capacity: usize,
+}
+
+/// Pool sizing and batching policy.
+#[derive(Debug, Clone)]
+pub struct PoolOptions {
+    /// number of inference workers (each gets its own model replica)
+    pub workers: usize,
+    /// dynamic-batching straggler window before the first step
+    pub batch_wait: Duration,
+    /// total queued-request bound across all shards (backpressure)
+    pub queue_cap: usize,
+}
+
+impl Default for PoolOptions {
+    fn default() -> PoolOptions {
+        PoolOptions {
+            workers: 1,
+            batch_wait: Duration::from_millis(5),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// Join handle for the whole worker pool.
+pub struct CoordinatorHandle {
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl CoordinatorHandle {
+    /// Wait for every worker to exit (call after `shutdown`).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
 }
 
 /// Handle for submitting requests; cheap to clone.
 #[derive(Clone)]
 pub struct Coordinator {
     queue: Arc<Queue>,
+    /// aggregate metrics across all workers (the stable endpoint)
     pub metrics: Arc<Metrics>,
+    /// per-worker breakdown, index = worker id
+    worker_metrics: Arc<Vec<Arc<Metrics>>>,
     seq: Arc<AtomicU64>,
 }
 
 impl Coordinator {
-    /// Spawn the inference loop on the current thread's model.  Returns
-    /// the submit handle and the worker join handle.
-    ///
-    /// `model` is moved into the worker thread (PJRT executables live on
-    /// one thread; the single-core testbed wants exactly one anyway).
+    fn with_capacity(queue_cap: usize, workers: usize) -> Coordinator {
+        Coordinator {
+            queue: Arc::new(Queue {
+                state: Mutex::new(QueueState {
+                    shards: Vec::new(),
+                    total: 0,
+                    closed: false,
+                }),
+                available: Condvar::new(),
+                capacity: queue_cap,
+            }),
+            metrics: Arc::new(Metrics::new()),
+            worker_metrics: Arc::new((0..workers).map(|_| Arc::new(Metrics::new())).collect()),
+            seq: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    fn spawn_worker(
+        &self,
+        worker_id: usize,
+        model: Box<dyn ForwardModel + Send>,
+        batch_wait: Duration,
+    ) -> std::thread::JoinHandle<()> {
+        let queue = Arc::clone(&self.queue);
+        let global = Arc::clone(&self.metrics);
+        let local = Arc::clone(&self.worker_metrics[worker_id]);
+        std::thread::Builder::new()
+            .name(format!("dapd-infer-{worker_id}"))
+            .spawn(move || worker_loop(worker_id, model, queue, global, local, batch_wait))
+            .expect("spawn inference worker")
+    }
+
+    /// Single-worker convenience used by tests and the older call sites:
+    /// move `model` into one inference thread.  Equivalent to a pool of
+    /// size 1.
     pub fn start<M>(
         model: M,
         batch_wait: Duration,
@@ -86,50 +259,59 @@ impl Coordinator {
     where
         M: ForwardModel + Send + 'static,
     {
-        let queue = Arc::new(Queue {
-            items: Mutex::new(VecDeque::new()),
-            available: Condvar::new(),
-            closed: AtomicBool::new(false),
-            capacity: queue_cap,
-        });
-        let metrics = Arc::new(Metrics::new());
-        let coord = Coordinator {
-            queue: Arc::clone(&queue),
-            metrics: Arc::clone(&metrics),
-            seq: Arc::new(AtomicU64::new(0)),
-        };
-        let handle = std::thread::Builder::new()
-            .name("dapd-inference".into())
-            .spawn(move || inference_loop(model, queue, metrics, batch_wait))
-            .expect("spawn inference thread");
+        let coord = Coordinator::with_capacity(queue_cap, 1);
+        let handle = coord.spawn_worker(0, Box::new(model), batch_wait);
         (coord, handle)
     }
 
+    /// Spawn `opts.workers` inference workers, each with its own replica
+    /// from `pool`.
+    pub fn start_pool(
+        pool: &ModelPool,
+        opts: &PoolOptions,
+    ) -> Result<(Coordinator, CoordinatorHandle)> {
+        if opts.workers == 0 {
+            bail!("worker pool needs at least one worker");
+        }
+        let coord = Coordinator::with_capacity(opts.queue_cap, opts.workers);
+        let mut handles = Vec::with_capacity(opts.workers);
+        for w in 0..opts.workers {
+            let model = pool.replica()?;
+            handles.push(coord.spawn_worker(w, model, opts.batch_wait));
+        }
+        logging::info(&format!(
+            "coordinator up: {} worker(s) on {}",
+            opts.workers,
+            pool.describe()
+        ));
+        Ok((coord, CoordinatorHandle { handles }))
+    }
+
     /// Submit a request; returns the response receiver.  Applies
-    /// backpressure by rejecting when the queue is full.
+    /// backpressure by rejecting when the (sharded) queue is full.
     pub fn submit(&self, prompt: Vec<i32>, cfg: DecodeConfig) -> Result<Receiver<Response>> {
         let (tx, rx) = sync_channel(1);
         let group = group_key(&cfg);
         {
-            let mut q = self.queue.items.lock().unwrap();
-            if self.queue.closed.load(Ordering::SeqCst) {
+            let mut st = self.queue.state.lock().unwrap();
+            if st.closed {
                 bail!("coordinator shut down");
             }
-            if q.len() >= self.queue.capacity {
+            if st.total >= self.queue.capacity {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                bail!("queue full ({} requests)", q.len());
+                bail!("queue full ({} requests)", st.total);
             }
-            q.push_back(Request {
+            st.push(Request {
                 prompt,
                 cfg,
                 submitted: Instant::now(),
                 respond: tx,
                 group,
+                seq: self.seq.fetch_add(1, Ordering::Relaxed),
             });
-            self.seq.fetch_add(1, Ordering::Relaxed);
             self.metrics
                 .queue_depth
-                .store(q.len() as u64, Ordering::Relaxed);
+                .store(st.total as u64, Ordering::Relaxed);
         }
         self.queue.available.notify_one();
         Ok(rx)
@@ -141,92 +323,218 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("inference worker dropped request"))
     }
 
-    /// Stop accepting requests and wake the worker so it can exit.
+    /// Stop accepting requests and wake the workers; queued and in-flight
+    /// requests still complete (graceful drain).
     pub fn shutdown(&self) {
-        self.queue.closed.store(true, Ordering::SeqCst);
+        self.queue.state.lock().unwrap().closed = true;
         self.queue.available.notify_all();
+    }
+
+    /// Per-worker metrics, index = worker id.
+    pub fn worker_metrics(&self) -> &[Arc<Metrics>] {
+        &self.worker_metrics
+    }
+
+    /// Aggregate + per-worker report for logs.
+    pub fn report(&self) -> String {
+        let mut out = self.metrics.report();
+        if self.worker_metrics.len() > 1 {
+            for (w, m) in self.worker_metrics.iter().enumerate() {
+                out.push_str(&format!("\n  worker[{w}] {}", m.report()));
+            }
+        }
+        out
     }
 }
 
-fn inference_loop<M: ForwardModel>(
-    model: M,
+struct InFlight {
+    respond: SyncSender<Response>,
+    submitted: Instant,
+}
+
+/// Admit one request into the worker's batch, tracking it under a fresh
+/// ticket; on admit failure the response channel is dropped so the caller
+/// observes an error.
+fn admit_request(
+    worker_id: usize,
+    ticket: &mut u64,
+    batch: &mut SlotBatch<'_>,
+    inflight: &mut HashMap<u64, InFlight>,
+    global: &Metrics,
+    local: &Metrics,
+    req: Request,
+) {
+    *ticket += 1;
+    match batch.admit(*ticket, &req.prompt) {
+        Ok(_slot) => {
+            inflight.insert(
+                *ticket,
+                InFlight {
+                    respond: req.respond,
+                    submitted: req.submitted,
+                },
+            );
+        }
+        Err(e) => {
+            logging::info(&format!("worker {worker_id}: rejected admit: {e:#}"));
+            global.errors.fetch_add(1, Ordering::Relaxed);
+            local.errors.fetch_add(1, Ordering::Relaxed);
+            // dropping req.respond signals the error to the caller
+        }
+    }
+}
+
+/// One inference worker: adopt the oldest group, batch continuously at
+/// step granularity, drain, repeat.  Exits when the coordinator is closed
+/// and every shard is empty.
+fn worker_loop(
+    worker_id: usize,
+    model: Box<dyn ForwardModel + Send>,
     queue: Arc<Queue>,
-    metrics: Arc<Metrics>,
+    global: Arc<Metrics>,
+    local: Arc<Metrics>,
     batch_wait: Duration,
 ) {
-    let max_batch = model.batch();
+    let model: &dyn ForwardModel = model.as_ref();
+    let mut ticket = 0u64;
     loop {
-        // ---- collect a batch --------------------------------------------
-        let batch: Vec<Request> = {
-            let mut q = queue.items.lock().unwrap();
-            // wait for the first request
-            while q.is_empty() {
-                if queue.closed.load(Ordering::SeqCst) {
+        // ---- adopt the globally oldest waiting request ------------------
+        let first = {
+            let mut st = queue.state.lock().unwrap();
+            loop {
+                if let Some(req) = st.pop_oldest() {
+                    global.queue_depth.store(st.total as u64, Ordering::Relaxed);
+                    break req;
+                }
+                if st.closed {
                     return;
                 }
                 let (guard, _timeout) = queue
                     .available
-                    .wait_timeout(q, Duration::from_millis(50))
+                    .wait_timeout(st, Duration::from_millis(50))
                     .unwrap();
-                q = guard;
+                st = guard;
             }
-            // dynamic batching window: give stragglers `batch_wait`
-            if q.len() < max_batch && !batch_wait.is_zero() {
-                let deadline = Instant::now() + batch_wait;
-                while q.len() < max_batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    let (guard, _to) = queue
-                        .available
-                        .wait_timeout(q, deadline - now)
-                        .unwrap();
-                    q = guard;
-                }
-            }
-            // take a method-compatible prefix group
-            let lead_group = q.front().unwrap().group;
-            let mut batch = Vec::with_capacity(max_batch);
-            let mut i = 0;
-            while i < q.len() && batch.len() < max_batch {
-                if q[i].group == lead_group {
-                    batch.push(q.remove(i).unwrap());
-                } else {
-                    i += 1;
-                }
-            }
-            metrics.queue_depth.store(q.len() as u64, Ordering::Relaxed);
-            batch
         };
-        if batch.is_empty() {
-            continue;
+
+        let group = first.group;
+        let cfg = first.cfg.clone();
+        let mut batch = match SlotBatch::new(model, &cfg) {
+            Ok(b) => b,
+            Err(e) => {
+                // invalid config: drop the channel so the caller errors out
+                logging::info(&format!("worker {worker_id}: bad config: {e:#}"));
+                global.errors.fetch_add(1, Ordering::Relaxed);
+                local.errors.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        };
+        let mut inflight: HashMap<u64, InFlight> = HashMap::new();
+        admit_request(
+            worker_id,
+            &mut ticket,
+            &mut batch,
+            &mut inflight,
+            &global,
+            &local,
+            first,
+        );
+
+        // ---- dynamic-batching window: wait for stragglers once ----------
+        if batch.has_free_slot() && !batch_wait.is_zero() {
+            let deadline = Instant::now() + batch_wait;
+            let mut st = queue.state.lock().unwrap();
+            loop {
+                while batch.has_free_slot() {
+                    match st.pop_group(group) {
+                        Some(req) => admit_request(
+                            worker_id,
+                            &mut ticket,
+                            &mut batch,
+                            &mut inflight,
+                            &global,
+                            &local,
+                            req,
+                        ),
+                        None => break,
+                    }
+                }
+                if !batch.has_free_slot() || st.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) = queue
+                    .available
+                    .wait_timeout(st, deadline - now)
+                    .unwrap();
+                st = guard;
+            }
+            global.queue_depth.store(st.total as u64, Ordering::Relaxed);
         }
 
-        // ---- run ---------------------------------------------------------
-        let cfg = batch[0].cfg.clone();
-        let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
-        let t0 = Instant::now();
-        match decode_batch(&model, &prompts, &cfg) {
-            Ok(outs) => {
-                let wall = t0.elapsed();
-                let mut tokens = 0usize;
-                for (req, out) in batch.iter().zip(outs) {
-                    tokens += out.gen.len();
-                    let _ = req.respond.send(Response {
-                        gen: out.gen,
-                        steps: out.steps,
-                        latency: req.submitted.elapsed(),
-                    });
-                    metrics.record_request(req.submitted.elapsed(), out.steps);
+        // ---- continuous-batching session --------------------------------
+        let session_t0 = Instant::now();
+        let mut session_reqs = 0usize;
+        let mut session_tokens = 0usize;
+        loop {
+            if batch.occupied() == 0 {
+                break;
+            }
+            let occupied = batch.occupied();
+            match batch.step() {
+                Ok(finished) => {
+                    global.record_step(occupied);
+                    local.record_step(occupied);
+                    for (id, out) in finished {
+                        let Some(fl) = inflight.remove(&id) else { continue };
+                        let latency = fl.submitted.elapsed();
+                        session_reqs += 1;
+                        session_tokens += out.gen.len();
+                        global.record_request(latency, out.steps);
+                        local.record_request(latency, out.steps);
+                        let _ = fl.respond.send(Response {
+                            gen: out.gen,
+                            steps: out.steps,
+                            latency,
+                        });
+                    }
                 }
-                metrics.record_batch(prompts.len(), tokens, wall);
+                Err(e) => {
+                    logging::info(&format!("worker {worker_id}: batch failed: {e:#}"));
+                    global.errors.fetch_add(1, Ordering::Relaxed);
+                    local.errors.fetch_add(1, Ordering::Relaxed);
+                    // receivers see dropped channels -> error at call site
+                    inflight.clear();
+                    break;
+                }
             }
-            Err(e) => {
-                crate::util::logging::info(&format!("batch failed: {e:#}"));
-                metrics.errors.fetch_add(1, Ordering::Relaxed);
-                // receivers see a dropped channel -> error at call site
+            // backfill freed slots from this group's shard, step-granular
+            if batch.has_free_slot() {
+                let mut st = queue.state.lock().unwrap();
+                while batch.has_free_slot() {
+                    match st.pop_group(group) {
+                        Some(req) => admit_request(
+                            worker_id,
+                            &mut ticket,
+                            &mut batch,
+                            &mut inflight,
+                            &global,
+                            &local,
+                            req,
+                        ),
+                        None => break,
+                    }
+                }
+                global.queue_depth.store(st.total as u64, Ordering::Relaxed);
             }
+        }
+        if session_reqs > 0 {
+            let wall = session_t0.elapsed();
+            global.record_batch(session_reqs, session_tokens, wall);
+            local.record_batch(session_reqs, session_tokens, wall);
         }
     }
 }
@@ -301,5 +609,44 @@ mod tests {
         coord.shutdown();
         handle.join().unwrap();
         assert!(coord.submit(vec![5; 4], cfg()).is_err());
+    }
+
+    #[test]
+    fn pool_spreads_work_across_workers() {
+        let pool = ModelPool::mock(MockModel::new(2, 16, 4, 12));
+        let opts = PoolOptions {
+            workers: 2,
+            batch_wait: Duration::ZERO,
+            queue_cap: 64,
+        };
+        let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
+        assert_eq!(handles.workers(), 2);
+        let rxs: Vec<_> = (0..8)
+            .map(|_| coord.submit(vec![5; 4], cfg()).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        coord.shutdown();
+        handles.join();
+        assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), 8);
+        let per_worker: u64 = coord
+            .worker_metrics()
+            .iter()
+            .map(|m| m.requests.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(per_worker, 8, "per-worker metrics must sum to aggregate");
+    }
+
+    #[test]
+    fn group_key_separates_incompatible_configs() {
+        let a = cfg();
+        let b = cfg();
+        assert_eq!(group_key(&a), group_key(&b));
+        let mut c = cfg();
+        c.blocks = 4;
+        assert_ne!(group_key(&a), group_key(&c));
+        let d = DecodeConfig::new(Method::DapdStaged);
+        assert_ne!(group_key(&a), group_key(&d));
     }
 }

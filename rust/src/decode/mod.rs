@@ -14,18 +14,21 @@
 //!   * `DapdDirect`  — commit conf ~= 1.0 first, then dependency-aware
 //!                     selection on the rest (paper Remark 4.1)
 //!
-//! The driver (`decode_batch`) runs one AOT forward per step for a batch
-//! of samples, applies the strategy per sample, and records trajectories
+//! The driver is the slot-level [`SlotBatch`] (see [`slots`]): one AOT
+//! forward per step over a board of independently-progressing samples,
+//! with finished slots backfillable mid-flight (continuous batching).
+//! `decode_batch` is its drain-style wrapper and records trajectories
 //! (for the Fig. 1/5 analyses) and per-sample NFE.
 
+pub mod slots;
 pub mod strategies;
 
 use anyhow::{bail, Result};
 
 use crate::graph::TauSchedule;
-use crate::runtime::{ForwardModel, StepOutput};
-use crate::tensor::{argmax, entropy, kl_div, softmax_inplace};
+use crate::runtime::ForwardModel;
 
+pub use slots::SlotBatch;
 pub use strategies::{make_strategy, Strategy};
 
 /// Which decoding method to run.
@@ -190,213 +193,33 @@ pub struct DecodeOutcome {
 
 /// Decode up to `model.batch()` prompts in one batched loop.
 ///
-/// Each prompt must be exactly `prompt_len` tokens (pre-padded).  Rows
-/// beyond `prompts.len()` are padded internally and discarded.  Per-sample
-/// NFE counts the steps until that sample finished (batching does not
-/// change per-sample step counts: rows are independent).
+/// Each prompt must be exactly `prompt_len` tokens (pre-padded).  This is
+/// the drain-style view over [`SlotBatch`]: admit everything up front,
+/// step until the board empties.  Per-sample NFE counts the steps until
+/// that sample finished (batching does not change per-sample step counts:
+/// rows are independent).
 pub fn decode_batch(
     model: &dyn ForwardModel,
     prompts: &[Vec<i32>],
     cfg: &DecodeConfig,
 ) -> Result<Vec<DecodeOutcome>> {
     let b = model.batch();
-    let l = model.seq_len();
-    let p = model.prompt_len();
-    let g = model.gen_len();
-    let v = model.vocab();
-    let mask_id = model.mask_id();
     if prompts.is_empty() || prompts.len() > b {
         bail!("decode_batch: got {} prompts for batch {b}", prompts.len());
     }
-    if cfg.blocks == 0 || cfg.blocks > g {
-        bail!("invalid block count {}", cfg.blocks);
-    }
-    let strategy = make_strategy(cfg.method, cfg.params);
-    let max_steps = if cfg.max_steps == 0 { g + 4 } else { cfg.max_steps };
-
-    // token board: all rows, masked generation windows
-    let mut tokens = vec![0i32; b * l];
+    let mut batch = SlotBatch::new(model, cfg)?;
     for (s, prompt) in prompts.iter().enumerate() {
-        if prompt.len() != p {
-            bail!("prompt {} length {} != prompt_len {p}", s, prompt.len());
-        }
-        tokens[s * l..s * l + p].copy_from_slice(prompt);
-        for i in p..l {
-            tokens[s * l + i] = mask_id;
+        batch.admit(s as u64, prompt)?;
+    }
+    let mut out: Vec<Option<DecodeOutcome>> = (0..prompts.len()).map(|_| None).collect();
+    while batch.occupied() > 0 {
+        for (id, outcome) in batch.step()? {
+            out[id as usize] = Some(outcome);
         }
     }
-    // dummy rows: copy of row 0 (keeps the forward numerically healthy)
-    for s in prompts.len()..b {
-        let (head, tail) = tokens.split_at_mut(s * l);
-        tail[..l].copy_from_slice(&head[..l]);
-    }
-
-    let n_samples = prompts.len();
-    let mut done = vec![false; n_samples];
-    let mut steps = vec![0usize; n_samples];
-    let mut commit_step = vec![vec![usize::MAX; g]; n_samples];
-    let mut per_step: Vec<Vec<Vec<usize>>> = vec![Vec::new(); n_samples];
-    let mut prev_probs: Vec<Vec<f32>> = vec![Vec::new(); n_samples]; // [g*v]
-    let mut cur_block = vec![0usize; n_samples];
-
-    let block_len = g / cfg.blocks;
-
-    for step in 0..max_steps {
-        if done.iter().all(|&d| d) {
-            break;
-        }
-        let out: StepOutput = model.forward(&tokens)?;
-
-        for s in 0..n_samples {
-            if done[s] {
-                continue;
-            }
-            steps[s] = step + 1;
-
-            // ---- candidate set: masked positions in the active block ----
-            let (blk_start, blk_end) = loop {
-                let b0 = p + cur_block[s] * block_len;
-                let b1 = if cur_block[s] == cfg.blocks - 1 {
-                    p + g
-                } else {
-                    b0 + block_len
-                };
-                let any_masked =
-                    (b0..b1).any(|i| tokens[s * l + i] == mask_id);
-                if any_masked || cur_block[s] == cfg.blocks - 1 {
-                    break (b0, b1);
-                }
-                cur_block[s] += 1;
-            };
-            let positions: Vec<usize> = (blk_start..blk_end)
-                .filter(|&i| tokens[s * l + i] == mask_id)
-                .collect();
-            if positions.is_empty() {
-                done[s] = true;
-                continue;
-            }
-
-            // ---- per-candidate distributions ----------------------------
-            let n = positions.len();
-            let mut conf = vec![0.0f32; n];
-            let mut amax = vec![0i32; n];
-            let mut ent = vec![0.0f32; n];
-            let mut kl = vec![f32::INFINITY; n];
-            let mut probs_buf = vec![0.0f32; n * v];
-            for (c, &pos) in positions.iter().enumerate() {
-                let row = out.logits.slice3(s, pos);
-                let pb = &mut probs_buf[c * v..(c + 1) * v];
-                pb.copy_from_slice(row);
-                if cfg.eos_suppress {
-                    pb[cfg.eos_id as usize] = f32::NEG_INFINITY;
-                }
-                softmax_inplace(pb);
-                let (ai, av) = argmax(pb);
-                conf[c] = av;
-                amax[c] = ai as i32;
-                ent[c] = entropy(pb);
-                let gen_pos = pos - p;
-                if !prev_probs[s].is_empty() {
-                    let prev = &prev_probs[s][gen_pos * v..(gen_pos + 1) * v];
-                    if prev.iter().any(|&x| x > 0.0) {
-                        kl[c] = kl_div(pb, prev);
-                    }
-                }
-            }
-
-            // ---- candidate-pair edge scores ------------------------------
-            let mut scores = vec![0.0f32; n * n];
-            let mut degrees = vec![0.0f32; n];
-            if matches!(cfg.method, Method::DapdStaged | Method::DapdDirect) {
-                if let Some(es) = &out.edge_scores {
-                    for (ci, &i) in positions.iter().enumerate() {
-                        for (cj, &j) in positions.iter().enumerate() {
-                            if ci != cj {
-                                scores[ci * n + cj] = es.at3(s, i, j);
-                            }
-                        }
-                    }
-                } else if let Some(attn) = &out.attn_avg {
-                    for (ci, &i) in positions.iter().enumerate() {
-                        for (cj, &j) in positions.iter().enumerate() {
-                            if ci != cj {
-                                scores[ci * n + cj] =
-                                    0.5 * (attn.at3(s, i, j) + attn.at3(s, j, i));
-                            }
-                        }
-                    }
-                }
-                crate::graph::max_normalize(&mut scores);
-                for ci in 0..n {
-                    degrees[ci] = scores[ci * n..(ci + 1) * n].iter().sum();
-                }
-            }
-
-            let masked_total =
-                (p..p + g).filter(|&i| tokens[s * l + i] == mask_id).count();
-            let ctx = StepCtx {
-                positions: &positions,
-                conf: &conf,
-                argmax_tok: &amax,
-                entropy: &ent,
-                kl_prev: &kl,
-                scores_norm: &scores,
-                degrees: &degrees,
-                progress: 1.0 - masked_total as f32 / g as f32,
-                mask_ratio: masked_total as f32 / g as f32,
-            };
-            let mut selected = strategy.select(&ctx);
-            if selected.is_empty() {
-                // guarantee progress: commit the max-confidence candidate
-                let (best, _) = argmax(&conf);
-                selected = vec![best];
-            }
-            selected.sort_unstable();
-            selected.dedup();
-
-            // ---- commit ---------------------------------------------------
-            let mut committed = Vec::with_capacity(selected.len());
-            for &c in &selected {
-                let pos = positions[c];
-                tokens[s * l + pos] = amax[c];
-                commit_step[s][pos - p] = step;
-                committed.push(pos - p);
-            }
-            per_step[s].push(committed);
-
-            // store this step's distributions for KLASS stability
-            if prev_probs[s].is_empty() {
-                prev_probs[s] = vec![0.0f32; g * v];
-            }
-            for (c, &pos) in positions.iter().enumerate() {
-                let gen_pos = pos - p;
-                prev_probs[s][gen_pos * v..(gen_pos + 1) * v]
-                    .copy_from_slice(&probs_buf[c * v..(c + 1) * v]);
-            }
-
-            // done when nothing masked remains in the generation window
-            let remaining =
-                (p..p + g).any(|i| tokens[s * l + i] == mask_id);
-            if !remaining {
-                done[s] = true;
-            }
-        }
-    }
-
-    Ok((0..n_samples)
-        .map(|s| {
-            let row = &tokens[s * l..(s + 1) * l];
-            DecodeOutcome {
-                tokens: row.to_vec(),
-                gen: row[p..p + g].to_vec(),
-                steps: steps[s],
-                commit_step: commit_step[s]
-                    .iter()
-                    .map(|&x| if x == usize::MAX { 0 } else { x })
-                    .collect(),
-                per_step_commits: per_step[s].clone(),
-            }
-        })
+    Ok(out
+        .into_iter()
+        .map(|o| o.expect("every admitted slot finishes"))
         .collect())
 }
 

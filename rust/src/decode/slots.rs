@@ -1,0 +1,422 @@
+//! Slot-level continuous batching: the decode loop, refactored so a
+//! finished sample's batch slot can be backfilled with a fresh request
+//! *between steps* instead of waiting for the whole batch to drain.
+//!
+//! A [`SlotBatch`] owns the token board for one compiled batch and a
+//! per-slot decode state.  The coordinator's workers drive it:
+//!
+//!   admit(id, prompt)  -> occupy a free slot (any time between steps)
+//!   step()             -> one forward pass; returns finished (id, outcome)
+//!
+//! Rows of a masked-diffusion forward are independent (bidirectional
+//! attention never crosses batch rows), so a sample's generation is
+//! bit-identical whether it decodes alone, in a full batch, or admitted
+//! mid-flight next to half-finished neighbors — `decode_batch` is now a
+//! thin wrapper over this type and the decode tests pin that equivalence.
+//!
+//! Every slot counts its own NFE: `steps` is the number of forwards the
+//! slot participated in, and `commit_step` / `per_step_commits` are
+//! indexed in slot-local steps, exactly as the drain-style loop reported
+//! them.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{make_strategy, DecodeConfig, DecodeOutcome, Method, StepCtx, Strategy};
+use crate::runtime::{ForwardModel, StepOutput};
+use crate::tensor::{argmax, entropy, kl_div, softmax_inplace};
+
+/// Per-slot decode state (one in-flight sample).
+struct SlotState {
+    /// caller-chosen request id, echoed back on completion
+    id: u64,
+    /// forwards this slot has participated in (per-sample NFE)
+    steps: usize,
+    cur_block: usize,
+    /// slot-local step at which each generation position committed
+    commit_step: Vec<usize>,
+    /// generation-relative positions committed per slot-local step
+    per_step: Vec<Vec<usize>>,
+    /// previous-step distributions over the generation window [g*v]
+    /// (empty until the first step) — KLASS stability input
+    prev_probs: Vec<f32>,
+}
+
+/// A continuously-batched decode loop over one model's compiled batch.
+pub struct SlotBatch<'m> {
+    model: &'m dyn ForwardModel,
+    cfg: DecodeConfig,
+    strategy: Box<dyn Strategy>,
+    max_steps: usize,
+    /// token board, row-major [batch * seq_len]
+    tokens: Vec<i32>,
+    slots: Vec<Option<SlotState>>,
+    occupied: usize,
+}
+
+impl<'m> SlotBatch<'m> {
+    /// Validate the config against the model and set up an empty board.
+    pub fn new(model: &'m dyn ForwardModel, cfg: &DecodeConfig) -> Result<SlotBatch<'m>> {
+        let g = model.gen_len();
+        if cfg.blocks == 0 || cfg.blocks > g {
+            bail!("invalid block count {}", cfg.blocks);
+        }
+        let max_steps = if cfg.max_steps == 0 {
+            g + 4
+        } else {
+            cfg.max_steps
+        };
+        Ok(SlotBatch {
+            model,
+            cfg: cfg.clone(),
+            strategy: make_strategy(cfg.method, cfg.params),
+            max_steps,
+            tokens: vec![0i32; model.batch() * model.seq_len()],
+            slots: (0..model.batch()).map(|_| None).collect(),
+            occupied: 0,
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.occupied
+    }
+
+    pub fn has_free_slot(&self) -> bool {
+        self.occupied < self.slots.len()
+    }
+
+    pub fn config(&self) -> &DecodeConfig {
+        &self.cfg
+    }
+
+    /// Occupy a free slot with a fresh request.  Callable between any two
+    /// steps; the new sample starts at its own step 0.
+    pub fn admit(&mut self, id: u64, prompt: &[i32]) -> Result<usize> {
+        let l = self.model.seq_len();
+        let p = self.model.prompt_len();
+        let g = self.model.gen_len();
+        let mask_id = self.model.mask_id();
+        if prompt.len() != p {
+            bail!("prompt length {} != prompt_len {p}", prompt.len());
+        }
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| anyhow!("no free slot (batch {})", self.slots.len()))?;
+        self.tokens[slot * l..slot * l + p].copy_from_slice(prompt);
+        for i in p..l {
+            self.tokens[slot * l + i] = mask_id;
+        }
+        // keep vacant rows numerically healthy for the forward pass by
+        // mirroring a live row (their logits are never read)
+        let row: Vec<i32> = self.tokens[slot * l..(slot + 1) * l].to_vec();
+        for s2 in 0..self.slots.len() {
+            if s2 != slot && self.slots[s2].is_none() {
+                self.tokens[s2 * l..(s2 + 1) * l].copy_from_slice(&row);
+            }
+        }
+        self.slots[slot] = Some(SlotState {
+            id,
+            steps: 0,
+            cur_block: 0,
+            commit_step: vec![usize::MAX; g],
+            per_step: Vec::new(),
+            prev_probs: Vec::new(),
+        });
+        self.occupied += 1;
+        Ok(slot)
+    }
+
+    /// Run one forward pass and advance every occupied slot by one step.
+    /// Returns the samples that finished this step (their slots are free
+    /// again on return).
+    pub fn step(&mut self) -> Result<Vec<(u64, DecodeOutcome)>> {
+        if self.occupied == 0 {
+            bail!("step() on an empty batch");
+        }
+        let l = self.model.seq_len();
+        let p = self.model.prompt_len();
+        let g = self.model.gen_len();
+        let v = self.model.vocab();
+        let mask_id = self.model.mask_id();
+        let block_len = g / self.cfg.blocks;
+
+        let out: StepOutput = self.model.forward(&self.tokens)?;
+
+        let mut finished = Vec::new();
+        for s in 0..self.slots.len() {
+            if self.slots[s].is_none() {
+                continue;
+            }
+            let mut finish = false;
+            {
+                let cfg = &self.cfg;
+                let st = self.slots[s].as_mut().unwrap();
+                let step = st.steps;
+                st.steps += 1;
+
+                // ---- candidate set: masked positions in the active block
+                let (blk_start, blk_end) = loop {
+                    let b0 = p + st.cur_block * block_len;
+                    let b1 = if st.cur_block == cfg.blocks - 1 {
+                        p + g
+                    } else {
+                        b0 + block_len
+                    };
+                    let any_masked =
+                        (b0..b1).any(|i| self.tokens[s * l + i] == mask_id);
+                    if any_masked || st.cur_block == cfg.blocks - 1 {
+                        break (b0, b1);
+                    }
+                    st.cur_block += 1;
+                };
+                let positions: Vec<usize> = (blk_start..blk_end)
+                    .filter(|&i| self.tokens[s * l + i] == mask_id)
+                    .collect();
+                if positions.is_empty() {
+                    finish = true;
+                } else {
+                    // ---- per-candidate distributions --------------------
+                    let n = positions.len();
+                    let mut conf = vec![0.0f32; n];
+                    let mut amax = vec![0i32; n];
+                    let mut ent = vec![0.0f32; n];
+                    let mut kl = vec![f32::INFINITY; n];
+                    let mut probs_buf = vec![0.0f32; n * v];
+                    for (c, &pos) in positions.iter().enumerate() {
+                        let row = out.logits.slice3(s, pos);
+                        let pb = &mut probs_buf[c * v..(c + 1) * v];
+                        pb.copy_from_slice(row);
+                        if cfg.eos_suppress {
+                            pb[cfg.eos_id as usize] = f32::NEG_INFINITY;
+                        }
+                        softmax_inplace(pb);
+                        let (ai, av) = argmax(pb);
+                        conf[c] = av;
+                        amax[c] = ai as i32;
+                        ent[c] = entropy(pb);
+                        let gen_pos = pos - p;
+                        if !st.prev_probs.is_empty() {
+                            let prev =
+                                &st.prev_probs[gen_pos * v..(gen_pos + 1) * v];
+                            if prev.iter().any(|&x| x > 0.0) {
+                                kl[c] = kl_div(pb, prev);
+                            }
+                        }
+                    }
+
+                    // ---- candidate-pair edge scores ---------------------
+                    let mut scores = vec![0.0f32; n * n];
+                    let mut degrees = vec![0.0f32; n];
+                    if matches!(cfg.method, Method::DapdStaged | Method::DapdDirect) {
+                        if let Some(es) = &out.edge_scores {
+                            for (ci, &i) in positions.iter().enumerate() {
+                                for (cj, &j) in positions.iter().enumerate() {
+                                    if ci != cj {
+                                        scores[ci * n + cj] = es.at3(s, i, j);
+                                    }
+                                }
+                            }
+                        } else if let Some(attn) = &out.attn_avg {
+                            for (ci, &i) in positions.iter().enumerate() {
+                                for (cj, &j) in positions.iter().enumerate() {
+                                    if ci != cj {
+                                        scores[ci * n + cj] = 0.5
+                                            * (attn.at3(s, i, j) + attn.at3(s, j, i));
+                                    }
+                                }
+                            }
+                        }
+                        crate::graph::max_normalize(&mut scores);
+                        for ci in 0..n {
+                            degrees[ci] = scores[ci * n..(ci + 1) * n].iter().sum();
+                        }
+                    }
+
+                    let masked_total = (p..p + g)
+                        .filter(|&i| self.tokens[s * l + i] == mask_id)
+                        .count();
+                    let ctx = StepCtx {
+                        positions: &positions,
+                        conf: &conf,
+                        argmax_tok: &amax,
+                        entropy: &ent,
+                        kl_prev: &kl,
+                        scores_norm: &scores,
+                        degrees: &degrees,
+                        progress: 1.0 - masked_total as f32 / g as f32,
+                        mask_ratio: masked_total as f32 / g as f32,
+                    };
+                    let mut selected = self.strategy.select(&ctx);
+                    if selected.is_empty() {
+                        // guarantee progress: commit the max-confidence candidate
+                        let (best, _) = argmax(&conf);
+                        selected = vec![best];
+                    }
+                    selected.sort_unstable();
+                    selected.dedup();
+
+                    // ---- commit -----------------------------------------
+                    let mut committed = Vec::with_capacity(selected.len());
+                    for &c in &selected {
+                        let pos = positions[c];
+                        self.tokens[s * l + pos] = amax[c];
+                        st.commit_step[pos - p] = step;
+                        committed.push(pos - p);
+                    }
+                    st.per_step.push(committed);
+
+                    // store this step's distributions for KLASS stability
+                    if st.prev_probs.is_empty() {
+                        st.prev_probs = vec![0.0f32; g * v];
+                    }
+                    for (c, &pos) in positions.iter().enumerate() {
+                        let gen_pos = pos - p;
+                        st.prev_probs[gen_pos * v..(gen_pos + 1) * v]
+                            .copy_from_slice(&probs_buf[c * v..(c + 1) * v]);
+                    }
+
+                    // done when nothing masked remains in the generation
+                    // window, or the per-sample step cap is hit
+                    let remaining =
+                        (p..p + g).any(|i| self.tokens[s * l + i] == mask_id);
+                    if !remaining || st.steps >= self.max_steps {
+                        finish = true;
+                    }
+                }
+            }
+            if finish {
+                let st = self.slots[s].take().unwrap();
+                self.occupied -= 1;
+                let row = &self.tokens[s * l..(s + 1) * l];
+                finished.push((
+                    st.id,
+                    DecodeOutcome {
+                        tokens: row.to_vec(),
+                        gen: row[p..p + g].to_vec(),
+                        steps: st.steps,
+                        commit_step: st
+                            .commit_step
+                            .iter()
+                            .map(|&x| if x == usize::MAX { 0 } else { x })
+                            .collect(),
+                        per_step_commits: st.per_step,
+                    },
+                ));
+            }
+        }
+        Ok(finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::decode_batch;
+    use crate::runtime::MockModel;
+
+    fn mock() -> MockModel {
+        MockModel::new(2, 24, 8, 16)
+    }
+
+    fn prompt(tag: i32) -> Vec<i32> {
+        vec![(3 + tag) % 10 + 2; 8]
+    }
+
+    #[test]
+    fn drains_like_decode_batch() {
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::DapdStaged);
+        let prompts = vec![prompt(0), prompt(1)];
+        let want = decode_batch(&m, &prompts, &cfg).unwrap();
+
+        let mut sb = SlotBatch::new(&m, &cfg).unwrap();
+        sb.admit(0, &prompts[0]).unwrap();
+        sb.admit(1, &prompts[1]).unwrap();
+        let mut got: Vec<Option<DecodeOutcome>> = vec![None, None];
+        while sb.occupied() > 0 {
+            for (id, o) in sb.step().unwrap() {
+                got[id as usize] = Some(o);
+            }
+        }
+        for (w, g) in want.iter().zip(got) {
+            let g = g.unwrap();
+            assert_eq!(w.gen, g.gen);
+            assert_eq!(w.steps, g.steps);
+            assert_eq!(w.per_step_commits, g.per_step_commits);
+        }
+    }
+
+    #[test]
+    fn midflight_admission_matches_solo_decode() {
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::FastDllm);
+        // solo baselines
+        let solo0 = decode_batch(&m, &[prompt(0)], &cfg).unwrap()[0].clone();
+        let solo1 = decode_batch(&m, &[prompt(1)], &cfg).unwrap()[0].clone();
+
+        // start request 0 alone, admit request 1 two steps later
+        let mut sb = SlotBatch::new(&m, &cfg).unwrap();
+        sb.admit(0, &prompt(0)).unwrap();
+        let mut done = std::collections::HashMap::new();
+        for _ in 0..2 {
+            for (id, o) in sb.step().unwrap() {
+                done.insert(id, o);
+            }
+        }
+        sb.admit(1, &prompt(1)).unwrap();
+        while sb.occupied() > 0 {
+            for (id, o) in sb.step().unwrap() {
+                done.insert(id, o);
+            }
+        }
+        let got0 = &done[&0];
+        let got1 = &done[&1];
+        assert_eq!(got0.gen, solo0.gen, "resident sample perturbed by admission");
+        assert_eq!(got0.steps, solo0.steps);
+        assert_eq!(got1.gen, solo1.gen, "admitted sample differs from solo");
+        assert_eq!(got1.steps, solo1.steps, "late admission changed NFE");
+        assert_eq!(got1.per_step_commits, solo1.per_step_commits);
+    }
+
+    #[test]
+    fn slot_is_reusable_after_finish() {
+        let m = MockModel::new(1, 16, 4, 12);
+        let cfg = DecodeConfig::new(Method::FastDllm);
+        let mut sb = SlotBatch::new(&m, &cfg).unwrap();
+        for round in 0..3u64 {
+            let slot = sb.admit(round, &[5; 4]).unwrap();
+            assert_eq!(slot, 0, "single-slot batch must reuse slot 0");
+            let mut finished = Vec::new();
+            while sb.occupied() > 0 {
+                finished.extend(sb.step().unwrap());
+            }
+            assert_eq!(finished.len(), 1);
+            assert_eq!(finished[0].0, round);
+        }
+    }
+
+    #[test]
+    fn admit_validates_prompt_and_capacity() {
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::Original);
+        let mut sb = SlotBatch::new(&m, &cfg).unwrap();
+        assert!(sb.admit(0, &[1, 2, 3]).is_err(), "wrong prompt length");
+        sb.admit(0, &prompt(0)).unwrap();
+        sb.admit(1, &prompt(1)).unwrap();
+        assert!(!sb.has_free_slot());
+        assert!(sb.admit(2, &prompt(2)).is_err(), "over capacity");
+    }
+
+    #[test]
+    fn step_on_empty_batch_errors() {
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::Original);
+        let mut sb = SlotBatch::new(&m, &cfg).unwrap();
+        assert!(sb.step().is_err());
+    }
+}

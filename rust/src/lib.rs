@@ -9,13 +9,15 @@
 //! Module map (see DESIGN.md for the full inventory):
 //! * [`util`]        — offline substrates: json, rng, cli, stats, pool
 //! * [`tensor`]      — flat f32 tensor views + softmax/entropy/KL
-//! * [`runtime`]     — artifact registry + PJRT engine + mock model
+//! * [`runtime`]     — artifact registry + PJRT engine + mock model +
+//!                     per-worker model replication (`ModelPool`)
 //! * [`graph`]       — attention-induced dependency graph, Welsh-Powell
-//! * [`decode`]      — all decoding strategies + the decode loop
+//! * [`decode`]      — all decoding strategies + the slot-level
+//!                     continuously-batching decode loop
 //! * [`workload`]    — eval sets, task scorers, arrival processes
 //! * [`eval`]        — experiment harness (accuracy/steps grids, segments,
 //!                     trajectories, MRF validation)
-//! * [`coordinator`] — request router, dynamic batcher, metrics
+//! * [`coordinator`] — sharded continuous-batching worker pool, metrics
 //! * [`server`]      — JSON-over-TCP serving front end
 
 pub mod config;

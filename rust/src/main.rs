@@ -5,22 +5,24 @@
 //!   decode  --model M --task T --method X [--n N] [--blocks B] [--eos-inf]
 //!   grid    --model M [--tasks a,b] [--methods x,y] [--n N]
 //!   mrf     [--paths N] [--layers last-2]      Sec 3.2 validation
-//!   serve   --model M [--port P] [--method X] [--batch B]
+//!   serve   --model M [--port P] [--method X] [--batch B] [--workers N]
+//!           [--mock]   (--mock serves the synthetic model, no artifacts)
 //!   client  --addr HOST:PORT --task T [--n N] [--method X]
 //!
 //! Common flags: --artifacts DIR (default ./artifacts), --batch B,
 //! --tau-min/--tau-max, --conf-threshold, --gamma, --kl-threshold, -v.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use dapd::coordinator::Coordinator;
+use dapd::coordinator::{Coordinator, PoolOptions};
 use dapd::decode::{DecodeConfig, Method, MethodParams};
 use dapd::eval::mrf::{run_mrf_validation, LayerSel};
 use dapd::eval::{run_eval, segments};
 use dapd::graph::TauSchedule;
-use dapd::runtime::{ArtifactKind, Engine, ForwardModel};
+use dapd::runtime::{ArtifactKind, Engine, ForwardModel, MockModel, ModelPool};
 use dapd::server::{Client, Server};
 use dapd::util::args::Args;
 use dapd::util::bench::{fmt_f, Table};
@@ -230,21 +232,30 @@ fn cmd_mrf(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     // defaults < --config file.json < explicit flags (see config module)
     let settings = dapd::config::ServeSettings::resolve(args)?;
-    let engine = Engine::load(std::path::Path::new(&settings.artifacts))?;
     let cfg = settings.decode_config();
-    let wait = Duration::from_millis(settings.batch_wait_ms);
 
-    // leak the engine so the model can be 'static for the worker thread
-    let engine: &'static Engine = Box::leak(Box::new(engine));
-    let model = engine.model_for(&settings.model, settings.batch, engine.meta.gen_len)?;
-    let (coord, _handle) = Coordinator::start(model, wait, settings.queue_cap);
-    let metrics = coord.metrics.clone();
+    // model source: registry artifact, or the synthetic model with --mock
+    // (artifact-free serving for CI and demos; shapes mirror sim-llada)
+    let pool = if args.has("mock") {
+        ModelPool::mock(MockModel::new(settings.batch, 68, 28, 92))
+    } else {
+        let engine = Arc::new(Engine::load(std::path::Path::new(&settings.artifacts))?);
+        let gen_len = engine.meta.gen_len;
+        ModelPool::pjrt(engine, &settings.model, settings.batch, gen_len)?
+    };
+    let opts = PoolOptions {
+        workers: settings.workers,
+        batch_wait: Duration::from_millis(settings.batch_wait_ms),
+        queue_cap: settings.queue_cap,
+    };
+    let (coord, _handles) = Coordinator::start_pool(&pool, &opts)?;
+    let reporter = coord.clone();
     let server = Server::bind(&format!("0.0.0.0:{}", settings.port), coord, cfg)?;
 
-    // periodic metrics report
+    // periodic metrics report (aggregate + per-worker breakdown)
     std::thread::spawn(move || loop {
         std::thread::sleep(Duration::from_secs(10));
-        logging::info(&metrics.report());
+        logging::info(&reporter.report());
     });
     server.run()
 }

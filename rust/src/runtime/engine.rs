@@ -5,15 +5,20 @@
 //! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.
 //! HLO *text* is the interchange format (serialized protos from jax>=0.5
 //! carry 64-bit instruction ids that xla_extension 0.5.1 rejects).
+//!
+//! On images without the vendored `xla` crate this compiles against the
+//! [`pjrt`](super::pjrt) stub, and `Engine::load` fails at runtime with a
+//! pointer to the mock backend.
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use super::artifact::{ArtifactInfo, ArtifactKind, Metadata};
+use super::pjrt as xla;
 use super::{ForwardModel, StepOutput};
 use crate::tensor::Tensor;
 use crate::util::logging;
@@ -23,7 +28,7 @@ pub struct Engine {
     client: xla::PjRtClient,
     pub meta: Metadata,
     /// compile cache keyed by artifact name (compilation is seconds-level)
-    cache: Mutex<HashMap<String, std::sync::Arc<CompiledArtifact>>>,
+    cache: Mutex<HashMap<String, Arc<CompiledArtifact>>>,
 }
 
 struct CompiledArtifact {
@@ -33,11 +38,12 @@ struct CompiledArtifact {
 
 // SAFETY: the xla crate wraps PJRT handles in `Rc` + raw pointers without
 // Send/Sync markers, but the PJRT C API itself is thread-safe and this
-// crate's usage is disciplined: an `XlaModel` is created on the control
-// thread and then *moved* into exactly one inference thread (the
-// coordinator's worker); executions are serialized per executable; the
-// `Engine` outlives all models it hands out (`main` leaks it for serving).
-// The only cross-thread traffic is moves, never shared mutation.
+// crate's usage is disciplined: each `XlaModel` is owned by exactly one
+// inference worker, pool workers get *fresh* executables (see
+// `model_fresh`) so executions are never issued concurrently against one
+// executable, and the `Engine` outlives all models it hands out (callers
+// keep it in an `Arc` or leak it).  The only cross-thread traffic is moves
+// and `Arc` clones of immutable compiled artifacts, never shared mutation.
 unsafe impl Send for Engine {}
 unsafe impl Sync for Engine {}
 unsafe impl Send for CompiledArtifact {}
@@ -60,58 +66,82 @@ impl Engine {
         })
     }
 
+    fn compile(&self, info: &ArtifactInfo) -> Result<Arc<CompiledArtifact>> {
+        let path = self.meta.artifact_path(info);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", info.name))?;
+        logging::info(&format!(
+            "compiled {} in {:.2}s",
+            info.name,
+            t0.elapsed().as_secs_f64()
+        ));
+        Ok(Arc::new(CompiledArtifact {
+            exe,
+            info: info.clone(),
+        }))
+    }
+
     /// Compile (or fetch cached) an artifact and wrap it as a model.
-    pub fn model(&self, name: &str) -> Result<XlaModel<'_>> {
+    pub fn model(&self, name: &str) -> Result<XlaModel> {
         let info = self.meta.find_by_name(name)?.clone();
         let compiled = {
             let mut cache = self.cache.lock().unwrap();
             if let Some(c) = cache.get(name) {
-                std::sync::Arc::clone(c)
+                Arc::clone(c)
             } else {
-                let path = self.meta.artifact_path(&info);
-                let t0 = Instant::now();
-                let proto = xla::HloModuleProto::from_text_file(
-                    path.to_str().context("artifact path not utf-8")?,
-                )
-                .with_context(|| format!("parsing HLO text {}", path.display()))?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                let exe = self
-                    .client
-                    .compile(&comp)
-                    .with_context(|| format!("compiling {}", info.name))?;
-                logging::info(&format!(
-                    "compiled {} in {:.2}s",
-                    info.name,
-                    t0.elapsed().as_secs_f64()
-                ));
-                let arc = std::sync::Arc::new(CompiledArtifact {
-                    exe,
-                    info: info.clone(),
-                });
-                cache.insert(name.to_string(), std::sync::Arc::clone(&arc));
+                let arc = self.compile(&info)?;
+                cache.insert(name.to_string(), Arc::clone(&arc));
                 arc
             }
         };
+        Ok(XlaModel { compiled })
+    }
+
+    /// Compile a *fresh* executable, bypassing the cache.
+    ///
+    /// The worker pool gives every inference worker its own executable so
+    /// executions never contend on one PJRT handle (see the SAFETY note);
+    /// this is the "clone per-worker executables" path `ModelPool` uses.
+    pub fn model_fresh(&self, name: &str) -> Result<XlaModel> {
+        let info = self.meta.find_by_name(name)?.clone();
         Ok(XlaModel {
-            compiled,
-            _engine: std::marker::PhantomData,
+            compiled: self.compile(&info)?,
         })
     }
 
     /// Convenience: model by (model name, batch, gen_len).
-    pub fn model_for(&self, model: &str, batch: usize, gen_len: usize) -> Result<XlaModel<'_>> {
+    pub fn model_for(&self, model: &str, batch: usize, gen_len: usize) -> Result<XlaModel> {
         let name = self.meta.find(model, batch, gen_len)?.name.clone();
         self.model(&name)
     }
 }
 
-/// A compiled forward pass bound to the engine lifetime.
-pub struct XlaModel<'e> {
-    compiled: std::sync::Arc<CompiledArtifact>,
-    _engine: std::marker::PhantomData<&'e Engine>,
+/// A compiled forward pass.
+///
+/// Owns an `Arc` of the compiled artifact, so it is `Send` and can be
+/// moved into an inference worker; the owning [`Engine`] must outlive it
+/// (pool replicas hold the engine `Arc` alongside — see
+/// `runtime::model_pool`).
+///
+/// INVARIANT (unchecked since the engine lifetime parameter was dropped
+/// for pooling): with a real PJRT binding the executable dangles if the
+/// `Engine` (which owns the client) is dropped first.  Every in-tree
+/// caller either leaks the engine, declares it before its models (drop
+/// order), or goes through `ModelPool`; when re-vendoring the `xla`
+/// crate, prefer routing all model construction through `ModelPool`.
+pub struct XlaModel {
+    compiled: Arc<CompiledArtifact>,
 }
 
-impl<'e> XlaModel<'e> {
+impl XlaModel {
     pub fn info(&self) -> &ArtifactInfo {
         &self.compiled.info
     }
@@ -135,7 +165,7 @@ impl<'e> XlaModel<'e> {
     }
 }
 
-impl<'e> ForwardModel for XlaModel<'e> {
+impl ForwardModel for XlaModel {
     fn batch(&self) -> usize {
         self.compiled.info.batch
     }

@@ -200,7 +200,7 @@ mod tests {
     #[test]
     fn logits_are_valid_distributions() {
         let m = MockModel::new(1, 6, 0, 12);
-        let out = m.forward(&vec![1i32; 6]).unwrap();
+        let out = m.forward(&[1i32; 6]).unwrap();
         let mut p = out.logits.slice3(0, 0).to_vec();
         softmax_inplace(&mut p);
         let sum: f32 = p.iter().sum();

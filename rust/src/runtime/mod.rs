@@ -4,10 +4,13 @@
 pub mod artifact;
 pub mod engine;
 pub mod mock;
+pub mod model_pool;
+pub mod pjrt;
 
 pub use artifact::{ArtifactInfo, ArtifactKind, Metadata, MrfSpec, SpecialTokens};
 pub use engine::{Engine, XlaModel};
 pub use mock::MockModel;
+pub use model_pool::ModelPool;
 
 use anyhow::Result;
 

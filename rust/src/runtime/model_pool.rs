@@ -1,0 +1,150 @@
+//! Per-worker model replication for the sharded serving pool.
+//!
+//! A [`ModelPool`] describes *how to obtain* a `ForwardModel`, and hands
+//! each inference worker its own replica:
+//!
+//! * **Mock** — the synthetic model; replicas are plain clones, so an
+//!   N-worker pool scales with cores (each clone is an independent
+//!   pure-rust forward pass).
+//! * **Pjrt** — an artifact from the registry; every replica compiles a
+//!   *fresh* executable via [`Engine::model_fresh`], so workers never
+//!   contend on a single PJRT handle (executions on one executable are
+//!   serialized — see the SAFETY note in `engine.rs`).
+//!
+//! Replicas are `Box<dyn ForwardModel + Send>` so the coordinator can move
+//! them into worker threads without caring which backend they came from.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{Engine, ForwardModel, MockModel, StepOutput, XlaModel};
+
+/// A source of per-worker `ForwardModel` replicas.
+pub enum ModelPool {
+    /// Synthetic model; replicas are cheap clones.
+    Mock(MockModel),
+    /// Registry artifact; each replica is a fresh per-worker compile.
+    Pjrt {
+        engine: Arc<Engine>,
+        artifact: String,
+    },
+}
+
+impl ModelPool {
+    /// Pool backed by the pure-rust mock model.
+    pub fn mock(model: MockModel) -> ModelPool {
+        ModelPool::Mock(model)
+    }
+
+    /// Pool backed by a registry artifact selected by
+    /// (model name, batch, gen_len); resolution errors surface here, at
+    /// deploy time, rather than on the first replica.
+    pub fn pjrt(
+        engine: Arc<Engine>,
+        model: &str,
+        batch: usize,
+        gen_len: usize,
+    ) -> Result<ModelPool> {
+        let artifact = engine.meta.find(model, batch, gen_len)?.name.clone();
+        Ok(ModelPool::Pjrt { engine, artifact })
+    }
+
+    /// Pool backed by a registry artifact addressed by name.
+    pub fn pjrt_by_name(engine: Arc<Engine>, artifact: &str) -> Result<ModelPool> {
+        engine.meta.find_by_name(artifact)?;
+        Ok(ModelPool::Pjrt {
+            engine,
+            artifact: artifact.to_string(),
+        })
+    }
+
+    /// Batch capacity of every replica this pool produces.
+    pub fn batch(&self) -> Result<usize> {
+        match self {
+            ModelPool::Mock(m) => Ok(m.batch),
+            ModelPool::Pjrt { engine, artifact } => {
+                Ok(engine.meta.find_by_name(artifact)?.batch)
+            }
+        }
+    }
+
+    /// Produce one worker-owned replica.
+    pub fn replica(&self) -> Result<Box<dyn ForwardModel + Send>> {
+        match self {
+            ModelPool::Mock(m) => Ok(Box::new(m.clone())),
+            ModelPool::Pjrt { engine, artifact } => {
+                let model = engine.model_fresh(artifact)?;
+                Ok(Box::new(PooledXla {
+                    model,
+                    _engine: Arc::clone(engine),
+                }))
+            }
+        }
+    }
+
+    /// Human-readable description for logs.
+    pub fn describe(&self) -> String {
+        match self {
+            ModelPool::Mock(m) => format!(
+                "mock(batch={} seq={} prompt={} vocab={})",
+                m.batch, m.seq_len, m.prompt_len, m.vocab
+            ),
+            ModelPool::Pjrt { artifact, .. } => format!("pjrt({artifact})"),
+        }
+    }
+}
+
+/// An `XlaModel` replica that keeps its engine alive (the executable's
+/// client is owned by the engine).
+struct PooledXla {
+    model: XlaModel,
+    _engine: Arc<Engine>,
+}
+
+impl ForwardModel for PooledXla {
+    fn batch(&self) -> usize {
+        self.model.batch()
+    }
+    fn seq_len(&self) -> usize {
+        self.model.seq_len()
+    }
+    fn prompt_len(&self) -> usize {
+        self.model.prompt_len()
+    }
+    fn gen_len(&self) -> usize {
+        self.model.gen_len()
+    }
+    fn vocab(&self) -> usize {
+        self.model.vocab()
+    }
+    fn mask_id(&self) -> i32 {
+        self.model.mask_id()
+    }
+    fn forward(&self, tokens: &[i32]) -> Result<StepOutput> {
+        self.model.forward(tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_replicas_are_independent_equals() {
+        let pool = ModelPool::mock(MockModel::new(2, 16, 4, 12));
+        let a = pool.replica().unwrap();
+        let b = pool.replica().unwrap();
+        assert_eq!(pool.batch().unwrap(), 2);
+        let tokens = vec![1i32; 2 * 16];
+        let oa = a.forward(&tokens).unwrap();
+        let ob = b.forward(&tokens).unwrap();
+        assert_eq!(oa.logits.data, ob.logits.data, "replicas must agree");
+    }
+
+    #[test]
+    fn describe_names_the_backend() {
+        let pool = ModelPool::mock(MockModel::new(1, 8, 2, 10));
+        assert!(pool.describe().starts_with("mock("));
+    }
+}

@@ -1,0 +1,146 @@
+//! Stub of the `xla` crate surface the engine compiles against.
+//!
+//! The offline image does not carry the `xla`/PJRT crate closure, so this
+//! module mirrors its API shape (client, HLO-proto parsing, compiled
+//! executables, literals) with constructors that fail cleanly at runtime.
+//! `Engine::load` therefore returns a descriptive error on this image and
+//! every artifact-free path (tests, benches, CI) runs on [`MockModel`].
+//!
+//! Swapping the real binding back in is mechanical: delete this module and
+//! change `use super::pjrt as xla` in `engine.rs` to `use xla` — the call
+//! shapes below are copied from the binding this repo was written against.
+//!
+//! [`MockModel`]: super::MockModel
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error`; converts into `anyhow::Error`
+/// through the std-error blanket impl.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what}: the PJRT runtime is not vendored in this build; serve the \
+         mock backend (--mock) or vendor the `xla` crate closure (see \
+         DESIGN.md \"Substitutions\")"
+    )))
+}
+
+/// Stand-in for `xla::PjRtClient`.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto` (HLO *text* is the interchange
+/// format; serialized protos from jax>=0.5 carry 64-bit instruction ids
+/// that xla_extension 0.5.1 rejects).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Stand-in for `xla::Literal`.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: Copy>(_xs: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().err().expect("stub must not succeed");
+        let msg = err.to_string();
+        assert!(msg.contains("--mock"), "message should point at the mock path");
+        assert!(msg.contains("DESIGN.md"), "message should point at the docs");
+    }
+
+    #[test]
+    fn stub_error_converts_to_anyhow() {
+        fn load() -> anyhow::Result<PjRtClient> {
+            let client = PjRtClient::cpu()?;
+            Ok(client)
+        }
+        assert!(load().is_err());
+    }
+}

@@ -5,8 +5,12 @@
 //! Response: {"ok": true, "gen": [...], "steps": n,
 //!            "latency_ms": x}\n  (or {"ok": false, "error": "..."})
 //!
-//! One thread per connection (the inference side is single-threaded
-//! anyway on this testbed; connection handling is cheap).
+//! Metrics:  {"metrics": true}\n
+//!           -> {"ok": true, "aggregate": {...}, "workers": [{...}, ...]}
+//!
+//! One thread per connection; the inference side is the coordinator's
+//! sharded worker pool, so concurrent connections genuinely execute in
+//! parallel across workers.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -108,6 +112,21 @@ fn handle_conn(stream: TcpStream, coord: Coordinator, default_cfg: DecodeConfig)
 
 fn handle_request(line: &str, coord: &Coordinator, default_cfg: &DecodeConfig) -> Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    if req.get("metrics").as_bool() == Some(true) {
+        let mut obj = Json::obj();
+        obj.set("aggregate", coord.metrics.to_json());
+        obj.set(
+            "workers",
+            Json::Arr(
+                coord
+                    .worker_metrics()
+                    .iter()
+                    .map(|m| m.to_json())
+                    .collect(),
+            ),
+        );
+        return Ok(obj);
+    }
     let prompt: Vec<i32> = req
         .get("prompt")
         .to_i64_vec()
@@ -212,6 +231,20 @@ mod tests {
         }
         // wrong method name errors cleanly
         assert!(client.request(&[5; 4], Some("bogus")).is_err());
+
+        // metrics request reports the served traffic, per worker
+        {
+            use std::io::Write;
+            let mut raw = TcpStream::connect(&addr).unwrap();
+            raw.write_all(b"{\"metrics\": true}\n").unwrap();
+            let mut r = BufReader::new(raw.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let j = Json::parse(line.trim()).unwrap();
+            assert_eq!(j.get("ok").as_bool(), Some(true));
+            assert!(j.get("aggregate").get("requests").as_i64().unwrap() >= 1);
+            assert_eq!(j.get("workers").as_arr().unwrap().len(), 1);
+        }
 
         stop.store(true, Ordering::SeqCst);
         sh.join().unwrap();

@@ -1,5 +1,6 @@
-//! Infrastructure substrates built in-repo (only the `xla` crate closure
-//! is vendored in this offline image — see DESIGN.md "Substitutions").
+//! Infrastructure substrates built in-repo (the offline image vendors no
+//! external crates beyond the in-tree `anyhow` shim under `vendor/`, and
+//! the PJRT binding is stubbed — see DESIGN.md "Substitutions").
 
 pub mod args;
 pub mod bench;

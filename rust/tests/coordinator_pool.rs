@@ -1,0 +1,199 @@
+//! Worker-pool coordinator tests on the mock model (artifact-free):
+//! compatibility grouping, backpressure, graceful shutdown with in-flight
+//! requests, and the pool-vs-sequential decode-equivalence guarantee.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use dapd::coordinator::{group_key, Coordinator, PoolOptions};
+use dapd::decode::{decode_all, DecodeConfig, Method};
+use dapd::runtime::{MockModel, ModelPool};
+use dapd::util::rng::Pcg;
+
+fn mock() -> MockModel {
+    MockModel::new(4, 32, 8, 24)
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    let mut rng = Pcg::new(23);
+    (0..n)
+        .map(|_| (0..8).map(|_| (2 + rng.below(22)) as i32).collect())
+        .collect()
+}
+
+fn opts(workers: usize, queue_cap: usize) -> PoolOptions {
+    PoolOptions {
+        workers,
+        batch_wait: Duration::from_millis(2),
+        queue_cap,
+    }
+}
+
+#[test]
+fn group_key_batches_compatible_requests_only() {
+    // identical configs share a key
+    let a = DecodeConfig::new(Method::FastDllm);
+    let b = DecodeConfig::new(Method::FastDllm);
+    assert_eq!(group_key(&a), group_key(&b));
+
+    // every method pair is mutually incompatible
+    let keys: Vec<u64> = Method::all()
+        .iter()
+        .map(|&m| group_key(&DecodeConfig::new(m)))
+        .collect();
+    for i in 0..keys.len() {
+        for j in 0..keys.len() {
+            if i != j {
+                assert_ne!(keys[i], keys[j], "methods {i} and {j} collide");
+            }
+        }
+    }
+
+    // blocks, eos flags and the confidence threshold all split groups
+    let mut c = DecodeConfig::new(Method::FastDllm);
+    c.blocks = 2;
+    assert_ne!(group_key(&a), group_key(&c));
+    let mut d = DecodeConfig::new(Method::FastDllm);
+    d.eos_suppress = true;
+    assert_ne!(group_key(&a), group_key(&d));
+    let mut e = DecodeConfig::new(Method::FastDllm);
+    e.params.conf_threshold = 0.75;
+    assert_ne!(group_key(&a), group_key(&e));
+}
+
+#[test]
+fn pool_output_matches_sequential_decode_token_for_token() {
+    let m = mock();
+    let cfg = DecodeConfig::new(Method::DapdStaged);
+    let ps = prompts(12);
+
+    // single-model sequential baseline (no coordinator at all)
+    let baseline = decode_all(&m, &ps, &cfg).unwrap();
+
+    // multi-client pool: one thread per client, 4 workers
+    let pool = ModelPool::mock(m);
+    let (coord, handles) = Coordinator::start_pool(&pool, &opts(4, 64)).unwrap();
+    let mut clients = Vec::new();
+    for p in ps.clone() {
+        let coord = coord.clone();
+        let cfg = cfg.clone();
+        clients.push(std::thread::spawn(move || coord.call(p, cfg).unwrap()));
+    }
+    let responses: Vec<_> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    coord.shutdown();
+    handles.join();
+
+    for (i, (base, resp)) in baseline.iter().zip(&responses).enumerate() {
+        assert_eq!(base.gen, resp.gen, "request {i}: pool changed the generation");
+        assert_eq!(base.steps, resp.steps, "request {i}: pool changed the NFE");
+    }
+}
+
+#[test]
+fn pool_backpressure_rejects_on_full_queue() {
+    // one slow worker with a single slot, tiny queue
+    let pool = ModelPool::mock(MockModel::new(1, 64, 4, 12));
+    let (coord, handles) = Coordinator::start_pool(&pool, &opts(1, 3)).unwrap();
+    let cfg = DecodeConfig::new(Method::Original); // 1 token/step: slowest
+    let mut acks = Vec::new();
+    let mut rejected = 0usize;
+    for _ in 0..64 {
+        match coord.submit(vec![5; 4], cfg.clone()) {
+            Ok(rx) => acks.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "flooding a cap-3 queue must reject");
+    assert!(
+        coord.metrics.rejected.load(Ordering::Relaxed) >= rejected as u64,
+        "rejections must be counted"
+    );
+    for rx in acks {
+        rx.recv().unwrap(); // accepted requests still complete
+    }
+    coord.shutdown();
+    handles.join();
+}
+
+#[test]
+fn shutdown_drains_queued_and_inflight_requests() {
+    let pool = ModelPool::mock(mock());
+    let (coord, handles) = Coordinator::start_pool(&pool, &opts(2, 64)).unwrap();
+    let cfg = DecodeConfig::new(Method::FastDllm);
+    let rxs: Vec<_> = prompts(10)
+        .into_iter()
+        .map(|p| coord.submit(p, cfg.clone()).unwrap())
+        .collect();
+    // shut down while requests are queued/in flight...
+    coord.shutdown();
+    // ...acceptance stops immediately...
+    assert!(coord.submit(vec![5; 8], cfg).is_err());
+    // ...but everything already accepted completes
+    for rx in rxs {
+        let r = rx.recv().expect("graceful shutdown must drain accepted work");
+        assert!(!r.gen.is_empty());
+    }
+    handles.join();
+    assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), 10);
+}
+
+#[test]
+fn incompatible_groups_get_correct_results() {
+    // interleave two methods; grouping must never mix their configs
+    let m = mock();
+    let fast = DecodeConfig::new(Method::FastDllm);
+    let orig = DecodeConfig::new(Method::Original);
+    let ps = prompts(8);
+    let base_fast = decode_all(&m, &ps, &fast).unwrap();
+    let base_orig = decode_all(&m, &ps, &orig).unwrap();
+
+    let pool = ModelPool::mock(m);
+    let (coord, handles) = Coordinator::start_pool(&pool, &opts(2, 64)).unwrap();
+    let rxs: Vec<_> = ps
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let cfg = if i % 2 == 0 { fast.clone() } else { orig.clone() };
+            coord.submit(p.clone(), cfg).unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap();
+        let base = if i % 2 == 0 { &base_fast[i] } else { &base_orig[i] };
+        assert_eq!(r.gen, base.gen, "request {i} decoded under the wrong config");
+        assert_eq!(r.steps, base.steps, "request {i} NFE changed");
+    }
+    coord.shutdown();
+    handles.join();
+}
+
+#[test]
+fn per_worker_metrics_sum_to_aggregate() {
+    let pool = ModelPool::mock(mock());
+    let (coord, handles) = Coordinator::start_pool(&pool, &opts(3, 64)).unwrap();
+    let cfg = DecodeConfig::new(Method::FastDllm);
+    let rxs: Vec<_> = prompts(9)
+        .into_iter()
+        .map(|p| coord.submit(p, cfg.clone()).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    coord.shutdown();
+    handles.join();
+
+    assert_eq!(coord.worker_metrics().len(), 3);
+    let sum: u64 = coord
+        .worker_metrics()
+        .iter()
+        .map(|m| m.requests.load(Ordering::Relaxed))
+        .sum();
+    assert_eq!(sum, coord.metrics.requests.load(Ordering::Relaxed));
+    assert_eq!(sum, 9);
+    let token_sum: u64 = coord
+        .worker_metrics()
+        .iter()
+        .map(|m| m.tokens_out.load(Ordering::Relaxed))
+        .sum();
+    assert_eq!(token_sum, coord.metrics.tokens_out.load(Ordering::Relaxed));
+}

@@ -1,0 +1,207 @@
+//! In-tree shim of the `anyhow` API surface this workspace uses.
+//!
+//! The build image is offline (no crates.io), so the real crate cannot be
+//! fetched; this reimplements the subset the serving stack relies on with
+//! identical call-site syntax: `Result`, `Error`, `anyhow!`, `bail!`, and
+//! the `Context` extension trait on `Result`/`Option`.
+//!
+//! Semantics intentionally match the real crate where it matters:
+//! * `{}` formats the outermost message only; `{:#}` joins the whole
+//!   context chain as `outer: inner: root` (the repo prints `{e:#}`).
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` value,
+//!   capturing its `source()` chain.
+//! * `Error` itself does NOT implement `std::error::Error` (this is what
+//!   makes the blanket `From` coherent — same trick as upstream).
+
+use std::fmt;
+
+/// Drop-in replacement for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chain error: `chain[0]` is the outermost message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn new(msg: String) -> Error {
+        Error { chain: vec![msg] }
+    }
+
+    /// Construct from any displayable value.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error::new(m.to_string())
+    }
+
+    /// Wrap with an outer context message (what `.context(...)` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The full outer-to-root context chain.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        for cause in &self.chain[1..] {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` (any convertible error) and `Option` (None -> message).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::new(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// `anyhow!("fmt", args...)` — construct an [`Error`] from a format string
+/// (with inline captures) or any displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::new(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::new(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `bail!(...)` — early-return `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `ensure!(cond, ...)` — `bail!` when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::new("root".into()).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "file missing");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+
+        assert_eq!(Some(7u32).context("fine").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Err(anyhow!("fell through at {}", x))
+        }
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+        assert_eq!(format!("{}", f(5).unwrap_err()), "fell through at 5");
+    }
+
+    #[test]
+    fn chain_is_ordered_outer_to_root() {
+        let e = Error::new("root".into()).context("mid").context("outer");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["outer", "mid", "root"]);
+    }
+}
