@@ -1,0 +1,269 @@
+//! Cache-reuse bench: steps/s for cached vs uncached decode, per method,
+//! plus the cross-request prefix-cache section.
+//!
+//! For every method the same prompts are decoded (a) uncached — the seed
+//! path — and (b) through the compute-reuse subsystem at
+//! `refresh_every` in {1, 4, 8}.  The bench *asserts* the subsystem's
+//! contract:
+//!
+//!   * cached output is token-for-token identical to uncached at every
+//!     refresh period (the mock backend is deterministic and the loop
+//!     only reads recomputed positions);
+//!   * at `refresh_every >= 4`, cached decode reaches >= 1.5x steps/s.
+//!
+//! Environment knobs (CI's bench-smoke job uses them):
+//!   DAPD_ITERS=N          timed decodes per mode (default 6)
+//!   DAPD_BENCH_JSON=f     also write the results as a JSON summary to `f`
+//!   DAPD_MIN_SPEEDUP=x.y  speedup gate at refresh_every=4 (default 1.5;
+//!                         the token-identity asserts always run)
+
+use std::sync::Arc;
+
+use dapd::cache::{CacheConfig, CacheStats, PrefixCache, PrefixHandle};
+use dapd::decode::{DecodeConfig, DecodeOutcome, Method, SlotBatch};
+use dapd::runtime::MockModel;
+use dapd::util::bench::{fmt_f, time_it, Table};
+use dapd::util::json::Json;
+use dapd::util::rng::Pcg;
+
+/// One full decode of `prompts` through a fresh `SlotBatch`; returns the
+/// outcomes, the compute-reuse counters and the board-step count.
+fn decode_once(
+    model: &MockModel,
+    cfg: &DecodeConfig,
+    cache: &CacheConfig,
+    prefix: Option<PrefixHandle>,
+    prompts: &[Vec<i32>],
+) -> (Vec<DecodeOutcome>, CacheStats, usize) {
+    let mut sb = SlotBatch::with_cache(model, cfg, cache, prefix).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        sb.admit(i as u64, p).unwrap();
+    }
+    let mut outs: Vec<Option<DecodeOutcome>> = (0..prompts.len()).map(|_| None).collect();
+    let mut board_steps = 0usize;
+    while sb.occupied() > 0 {
+        board_steps += 1;
+        for (id, o) in sb.step().unwrap() {
+            outs[id as usize] = Some(o);
+        }
+    }
+    (
+        outs.into_iter().map(|o| o.unwrap()).collect(),
+        sb.cache_stats(),
+        board_steps,
+    )
+}
+
+/// One printed/JSON result row.
+struct Row {
+    method: Method,
+    mode: String,
+    mean_s: f64,
+    steps: usize,
+    speedup: f64,
+    frac: f64,
+}
+
+fn add_row(table: &mut Table, rows: &mut Vec<Json>, row: Row) {
+    let steps_per_s = row.steps as f64 / row.mean_s;
+    table.row(vec![
+        row.method.name().to_string(),
+        row.mode.clone(),
+        fmt_f(row.mean_s * 1e3, 2),
+        fmt_f(steps_per_s, 0),
+        fmt_f(row.speedup, 2),
+        fmt_f(row.frac, 3),
+    ]);
+    let mut r = Json::obj();
+    r.set("method", row.method.name().into());
+    r.set("mode", row.mode.as_str().into());
+    r.set("mean_ms", (row.mean_s * 1e3).into());
+    r.set("steps_per_s", steps_per_s.into());
+    r.set("speedup", row.speedup.into());
+    r.set("compute_frac", row.frac.into());
+    rows.push(r);
+}
+
+fn assert_identical(want: &[DecodeOutcome], got: &[DecodeOutcome], ctx: &str) {
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.gen, g.gen, "{ctx}: sample {i} tokens diverged");
+        assert_eq!(w.steps, g.steps, "{ctx}: sample {i} NFE diverged");
+        assert_eq!(
+            w.per_step_commits, g.per_step_commits,
+            "{ctx}: sample {i} trajectory diverged"
+        );
+    }
+}
+
+fn main() {
+    let iters: usize = std::env::var("DAPD_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6);
+
+    // long prompt, short-ish generation window: the serving shape where
+    // frozen prompt rows pay off most (APD's observation)
+    let model = MockModel::new(4, 128, 96, 256);
+    let mut rng = Pcg::new(17);
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|_| (0..96).map(|_| (2 + rng.below(254)) as i32).collect())
+        .collect();
+
+    let off = CacheConfig::default();
+    let mut table = Table::new(
+        "Cache reuse: steps/s cached vs uncached (mock, b=4 L=128 P=96 V=256)",
+        &["method", "mode", "ms/decode", "steps/s", "speedup", "compute_frac"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    let mut min_speedup_at_4 = f64::INFINITY;
+    for method in Method::all() {
+        let cfg = DecodeConfig::new(method);
+        let (base_out, _, board_steps) = decode_once(&model, &cfg, &off, None, &prompts);
+        let (t_off, _) = time_it(
+            || {
+                std::hint::black_box(decode_once(&model, &cfg, &off, None, &prompts));
+            },
+            1,
+            iters,
+        );
+        add_row(
+            &mut table,
+            &mut rows,
+            Row {
+                method,
+                mode: "uncached".into(),
+                mean_s: t_off,
+                steps: board_steps,
+                speedup: 1.0,
+                frac: 1.0,
+            },
+        );
+
+        for refresh_every in [1usize, 4, 8] {
+            let cache = CacheConfig {
+                enabled: true,
+                refresh_every,
+                epsilon: 0.0,
+                prefix_lru_cap: 0,
+            };
+            let (out, stats, steps) = decode_once(&model, &cfg, &cache, None, &prompts);
+            assert_eq!(steps, board_steps, "{method:?}: cached board-step count");
+            assert_identical(
+                &base_out,
+                &out,
+                &format!("{} refresh_every={refresh_every}", method.name()),
+            );
+            let (t_on, _) = time_it(
+                || {
+                    std::hint::black_box(decode_once(&model, &cfg, &cache, None, &prompts));
+                },
+                1,
+                iters,
+            );
+            let speedup = t_off / t_on;
+            if refresh_every == 4 {
+                min_speedup_at_4 = min_speedup_at_4.min(speedup);
+            }
+            add_row(
+                &mut table,
+                &mut rows,
+                Row {
+                    method,
+                    mode: format!("refresh={refresh_every}"),
+                    mean_s: t_on,
+                    steps,
+                    speedup,
+                    frac: stats.compute_frac(),
+                },
+            );
+        }
+    }
+    table.print();
+
+    // ---- cross-request prefix cache: same prompt, repeated ------------
+    let solo = MockModel::new(1, 128, 96, 256);
+    let prompt: Vec<i32> = (0..96).map(|i| 2 + (i as i32 * 5) % 250).collect();
+    let cfg = DecodeConfig::new(Method::DapdStaged);
+    let cache = CacheConfig {
+        enabled: true,
+        refresh_every: 4,
+        epsilon: 0.0,
+        prefix_lru_cap: 8,
+    };
+    let requests = 8usize;
+    let (base_out, _, _) = decode_once(&solo, &cfg, &off, None, &[prompt.clone()]);
+    let run_repeats = |prefix_cap: usize| -> (f64, u64, u64) {
+        let pc = Arc::new(PrefixCache::new(prefix_cap));
+        let handle = PrefixHandle::new(Arc::clone(&pc), "bench-solo");
+        let t0 = std::time::Instant::now();
+        let mut served = 0u64;
+        for _ in 0..requests {
+            let (out, stats, _) = decode_once(
+                &solo,
+                &cfg,
+                &cache,
+                if prefix_cap > 0 {
+                    Some(handle.clone())
+                } else {
+                    None
+                },
+                &[prompt.clone()],
+            );
+            assert_identical(&base_out, &out, "prefix repeat");
+            served += stats.prefix_served_steps;
+        }
+        (t0.elapsed().as_secs_f64(), served, pc.hits())
+    };
+    let (t_noprefix, served0, _) = run_repeats(0);
+    let (t_prefix, served, hits) = run_repeats(8);
+    assert_eq!(served0, 0);
+    assert_eq!(
+        served,
+        (requests - 1) as u64,
+        "every repeat request must skip its first forward"
+    );
+    assert_eq!(hits, (requests - 1) as u64);
+    let mut prefix_table = Table::new(
+        &format!("Prefix cache: {requests} identical requests (b=1)"),
+        &["mode", "total ms", "first-steps served from cache"],
+    );
+    prefix_table.row(vec![
+        "no prefix".into(),
+        fmt_f(t_noprefix * 1e3, 2),
+        "0".into(),
+    ]);
+    prefix_table.row(vec![
+        "prefix lru".into(),
+        fmt_f(t_prefix * 1e3, 2),
+        served.to_string(),
+    ]);
+    prefix_table.print();
+
+    // ---- acceptance: >= 1.5x steps/s at refresh_every >= 4 ------------
+    let min_required: f64 = std::env::var("DAPD_MIN_SPEEDUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.5);
+    println!(
+        "\nminimum speedup across methods at refresh_every=4: {:.2}x (gate: {:.2}x)",
+        min_speedup_at_4, min_required
+    );
+    assert!(
+        min_speedup_at_4 >= min_required,
+        "cache must deliver >= {min_required:.2}x steps/s at refresh_every=4 \
+         (got {min_speedup_at_4:.2}x)"
+    );
+
+    if let Ok(path) = std::env::var("DAPD_BENCH_JSON") {
+        let mut out = Json::obj();
+        out.set("bench", "cache_reuse".into());
+        out.set("min_speedup_at_refresh_4", min_speedup_at_4.into());
+        out.set("prefix_first_steps_served", (served as i64).into());
+        out.set("rows", Json::Arr(rows));
+        match std::fs::write(&path, out.dump()) {
+            Ok(()) => println!("wrote JSON summary to {path}"),
+            Err(e) => eprintln!("failed writing {path}: {e}"),
+        }
+    }
+}

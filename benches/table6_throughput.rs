@@ -41,6 +41,7 @@ fn pool_scaling(n: usize) {
             workers,
             batch_wait: Duration::from_millis(2),
             queue_cap: n + 8,
+            ..PoolOptions::default()
         };
         let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
         let t0 = Instant::now();

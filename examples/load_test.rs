@@ -51,6 +51,7 @@ fn run_load(
         workers,
         batch_wait: Duration::from_millis(4),
         queue_cap,
+        ..PoolOptions::default()
     };
     let (coord, handles) = Coordinator::start_pool(pool, &opts)?;
     let t0 = Instant::now();

@@ -1,0 +1,360 @@
+//! Block-wise cached forwards (the APD/Fast-dLLM lever, engine-agnostic).
+//!
+//! [`ForwardCache`] keeps the last `StepOutput` as a frozen snapshot and,
+//! on steady-state steps, asks the model to recompute only the *window* —
+//! the union of currently-masked positions across batch rows — splicing
+//! the fresh rows into the snapshot.  A full forward happens on the first
+//! step, every `refresh_every` steps, and whenever a committed value
+//! changed without passing through mask (a freshly-admitted request
+//! rewrote a row's prompt); ordinary mask -> token commits stay on the
+//! windowed path.
+//!
+//! The decode loop reads outputs only at masked positions, all of which
+//! are inside the window by construction, so frozen rows are never
+//! observed and cached decode is exact for deterministic backends; for
+//! approximate windowed backends (a real KV-cache forward), staleness is
+//! bounded by `refresh_every`.
+//!
+//! [`CachedModel`] wraps any `ForwardModel` with the same policy behind
+//! the trait itself (one snapshot clone per step); the zero-copy
+//! [`ForwardCache`] is what `SlotBatch` drives on the hot path.
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+
+use super::{CacheConfig, CacheStats};
+use crate::runtime::{ForwardModel, StepOutput};
+use crate::tensor::Tensor;
+
+/// Frozen-snapshot forward cache; see the module docs.
+pub struct ForwardCache {
+    refresh_every: usize,
+    cached: Option<StepOutput>,
+    last_tokens: Vec<i32>,
+    steps_since_refresh: usize,
+    /// scratch: per-position window membership for the current step
+    in_window: Vec<bool>,
+    /// scratch: sorted window positions for the current step
+    window: Vec<usize>,
+    pub stats: CacheStats,
+}
+
+impl ForwardCache {
+    pub fn new(refresh_every: usize) -> ForwardCache {
+        ForwardCache {
+            refresh_every: refresh_every.max(1),
+            cached: None,
+            last_tokens: Vec::new(),
+            steps_since_refresh: 0,
+            in_window: Vec::new(),
+            window: Vec::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// One step's forward through the cache.  Returns a borrow of the
+    /// up-to-date snapshot (no clone on the hot path).
+    pub fn forward(&mut self, model: &dyn ForwardModel, tokens: &[i32]) -> Result<&StepOutput> {
+        let b = model.batch();
+        let l = model.seq_len();
+        let mask_id = model.mask_id();
+
+        // window = union of masked positions across batch rows
+        self.in_window.clear();
+        self.in_window.resize(l, false);
+        for (idx, &t) in tokens.iter().enumerate() {
+            if t == mask_id {
+                self.in_window[idx % l] = true;
+            }
+        }
+        self.window.clear();
+        for i in 0..l {
+            if self.in_window[i] {
+                self.window.push(i);
+            }
+        }
+
+        let full = match &self.cached {
+            None => true,
+            Some(c) => {
+                self.steps_since_refresh + 1 >= self.refresh_every
+                    || self.window.is_empty()
+                    // per-layer toy outputs have no splicing path
+                    || c.attn_layers.is_some()
+                    || tokens.len() != self.last_tokens.len()
+                    // a committed value changed without passing through
+                    // mask: a row was reset (mid-flight admission with a
+                    // new prompt) and the snapshot rows are invalid.
+                    // mask -> token transitions are ordinary commits (the
+                    // incremental flow this cache exists for), and
+                    // token -> mask re-masking puts the position back in
+                    // the window, so neither forces a refresh.
+                    || tokens
+                        .iter()
+                        .zip(&self.last_tokens)
+                        .enumerate()
+                        .any(|(idx, (&a, &b))| {
+                            a != b && b != mask_id && !self.in_window[idx % l]
+                        })
+            }
+        };
+
+        self.stats.positions_total += (b * l) as u64;
+        if full {
+            let out = model.forward(tokens)?;
+            self.stats.full_forwards += 1;
+            self.stats.positions_computed += (b * l) as u64;
+            self.steps_since_refresh = 0;
+            self.cached = Some(out);
+        } else {
+            let fresh = model.forward_window(tokens, &self.window)?;
+            let cached = self.cached.as_mut().unwrap();
+            let compatible = fresh.logits.dims == cached.logits.dims
+                && fresh.attn_avg.is_some() == cached.attn_avg.is_some()
+                && fresh.edge_scores.is_some() == cached.edge_scores.is_some()
+                && fresh.degrees.is_some() == cached.degrees.is_some();
+            if compatible {
+                self.stats.window_forwards += 1;
+                self.stats.positions_computed += (b * self.window.len()) as u64;
+                self.steps_since_refresh += 1;
+                splice3(&mut cached.logits, &fresh.logits, &self.window);
+                if let (Some(d), Some(s)) = (&mut cached.attn_avg, &fresh.attn_avg) {
+                    splice3(d, s, &self.window);
+                }
+                if let (Some(d), Some(s)) = (&mut cached.edge_scores, &fresh.edge_scores) {
+                    splice3(d, s, &self.window);
+                }
+                if let (Some(d), Some(s)) = (&mut cached.degrees, &fresh.degrees) {
+                    splice2(d, s, &self.window);
+                }
+            } else {
+                // windowed output shaped unlike the snapshot: treat it as
+                // a full forward (the default trait impl lands here only
+                // if the model changes its output layout mid-flight)
+                self.stats.full_forwards += 1;
+                self.stats.positions_computed += (b * l) as u64;
+                self.steps_since_refresh = 0;
+                self.cached = Some(fresh);
+            }
+        }
+        self.last_tokens.clear();
+        self.last_tokens.extend_from_slice(tokens);
+        Ok(self.cached.as_ref().unwrap())
+    }
+}
+
+/// Copy window rows `[*, i, :]` of a rank-3 `[b, l, k]` tensor.
+fn splice3(dst: &mut Tensor, src: &Tensor, window: &[usize]) {
+    debug_assert_eq!(dst.dims, src.dims);
+    let (b, l, k) = (dst.dims[0], dst.dims[1], dst.dims[2]);
+    for bi in 0..b {
+        for &i in window {
+            let base = (bi * l + i) * k;
+            dst.data[base..base + k].copy_from_slice(&src.data[base..base + k]);
+        }
+    }
+}
+
+/// Copy window entries `[*, i]` of a rank-2 `[b, l]` tensor.
+fn splice2(dst: &mut Tensor, src: &Tensor, window: &[usize]) {
+    debug_assert_eq!(dst.dims, src.dims);
+    let (b, l) = (dst.dims[0], dst.dims[1]);
+    for bi in 0..b {
+        for &i in window {
+            dst.data[bi * l + i] = src.data[bi * l + i];
+        }
+    }
+}
+
+/// Drop-in `ForwardModel` wrapper around [`ForwardCache`]: callers that
+/// only know the trait (eval harness, examples) get block-wise caching
+/// without touching `SlotBatch`.  Each `forward` clones the snapshot, so
+/// the hot serving path prefers the borrowing `ForwardCache` inside
+/// `SlotBatch` instead.
+pub struct CachedModel<M: ForwardModel> {
+    inner: M,
+    cache: RefCell<ForwardCache>,
+}
+
+impl<M: ForwardModel> CachedModel<M> {
+    /// Honors `cfg.enabled`: a disabled config degrades to
+    /// `refresh_every = 1`, i.e. a full forward every step — the exact
+    /// uncached behavior, matching `SlotBatch::with_cache`.
+    pub fn new(inner: M, cfg: &CacheConfig) -> CachedModel<M> {
+        let refresh_every = if cfg.enabled { cfg.refresh_every } else { 1 };
+        CachedModel {
+            inner,
+            cache: RefCell::new(ForwardCache::new(refresh_every)),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.cache.borrow().stats
+    }
+
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+}
+
+impl<M: ForwardModel> ForwardModel for CachedModel<M> {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+    fn prompt_len(&self) -> usize {
+        self.inner.prompt_len()
+    }
+    fn gen_len(&self) -> usize {
+        self.inner.gen_len()
+    }
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn mask_id(&self) -> i32 {
+        self.inner.mask_id()
+    }
+    fn forward(&self, tokens: &[i32]) -> Result<StepOutput> {
+        let mut cache = self.cache.borrow_mut();
+        Ok(cache.forward(&self.inner, tokens)?.clone())
+    }
+    // forward_window deliberately not overridden: a cache wrapped in a
+    // cache degrades to full forwards instead of double-splicing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::{decode_batch, DecodeConfig, Method};
+    use crate::runtime::MockModel;
+
+    fn mock() -> MockModel {
+        MockModel::new(2, 24, 8, 16)
+    }
+
+    fn prompts() -> Vec<Vec<i32>> {
+        vec![vec![5; 8], vec![7; 8]]
+    }
+
+    #[test]
+    fn wrapper_is_token_identical_at_any_refresh() {
+        let dc = DecodeConfig::new(Method::DapdStaged);
+        let base = decode_batch(&mock(), &prompts(), &dc).unwrap();
+        for refresh_every in [1usize, 2, 4, 9] {
+            let cfg = CacheConfig {
+                enabled: true,
+                refresh_every,
+                ..CacheConfig::default()
+            };
+            let cm = CachedModel::new(mock(), &cfg);
+            let got = decode_batch(&cm, &prompts(), &dc).unwrap();
+            for (w, g) in base.iter().zip(&got) {
+                assert_eq!(w.gen, g.gen, "refresh_every={refresh_every}");
+                assert_eq!(w.steps, g.steps);
+                assert_eq!(w.per_step_commits, g.per_step_commits);
+            }
+            let stats = cm.stats();
+            if refresh_every == 1 {
+                assert_eq!(stats.window_forwards, 0, "refresh=1 must not splice");
+            } else {
+                assert!(stats.window_forwards > 0, "refresh={refresh_every} never spliced");
+                assert!(stats.compute_frac() < 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_cadence_is_respected() {
+        let m = mock();
+        let mut fc = ForwardCache::new(3);
+        // constant all-masked board: only the cadence forces fulls
+        let tokens = vec![m.mask_id; m.batch * m.seq_len];
+        for _ in 0..7 {
+            fc.forward(&m, &tokens).unwrap();
+        }
+        // steps: full, w, w, full, w, w, full
+        assert_eq!(fc.stats.full_forwards, 3);
+        assert_eq!(fc.stats.window_forwards, 4);
+    }
+
+    #[test]
+    fn outside_window_change_forces_refresh() {
+        let m = mock();
+        let mut fc = ForwardCache::new(1000);
+        let l = m.seq_len;
+        let mut tokens = vec![m.mask_id; m.batch * l];
+        // prompt region committed on every row (the window is the union
+        // of masked positions across rows)
+        for row in 0..m.batch {
+            for i in 0..m.prompt_len {
+                tokens[row * l + i] = 5;
+            }
+        }
+        fc.forward(&m, &tokens).unwrap();
+        fc.forward(&m, &tokens).unwrap();
+        assert_eq!(fc.stats.full_forwards, 1);
+        assert_eq!(fc.stats.window_forwards, 1);
+        // rewrite row 0's committed prompt (a new request took the row)
+        for i in 0..m.prompt_len {
+            tokens[i] = 9;
+        }
+        fc.forward(&m, &tokens).unwrap();
+        assert_eq!(fc.stats.full_forwards, 2, "row reset must force a full forward");
+    }
+
+    #[test]
+    fn commits_stay_on_the_windowed_path() {
+        // a mask -> token transition between steps is the normal decode
+        // flow and must NOT be mistaken for a row reset
+        let m = mock();
+        let l = m.seq_len;
+        let mut fc = ForwardCache::new(1000);
+        let mut tokens = vec![m.mask_id; m.batch * l];
+        for row in 0..m.batch {
+            for i in 0..m.prompt_len {
+                tokens[row * l + i] = 5;
+            }
+        }
+        fc.forward(&m, &tokens).unwrap();
+        // commit one generation position on every row (leaves the window)
+        for row in 0..m.batch {
+            tokens[row * l + m.prompt_len] = 7;
+        }
+        fc.forward(&m, &tokens).unwrap();
+        assert_eq!(fc.stats.full_forwards, 1, "commit misread as row reset");
+        assert_eq!(fc.stats.window_forwards, 1);
+        // re-masking (same-prompt re-admission) also stays windowed: the
+        // position rejoins the window and is recomputed fresh
+        tokens[m.prompt_len] = m.mask_id;
+        fc.forward(&m, &tokens).unwrap();
+        assert_eq!(fc.stats.full_forwards, 1);
+        assert_eq!(fc.stats.window_forwards, 2);
+    }
+
+    #[test]
+    fn windowed_rows_match_full_forward() {
+        let m = mock();
+        let l = m.seq_len;
+        let mut tokens = vec![m.mask_id; m.batch * l];
+        for row in 0..m.batch {
+            for i in 0..m.prompt_len {
+                tokens[row * l + i] = 4 + row as i32;
+            }
+            // commit a few generation positions too
+            tokens[row * l + m.prompt_len] = 6;
+        }
+        let full = m.forward(&tokens).unwrap();
+        let mut fc = ForwardCache::new(1000);
+        fc.forward(&m, &tokens).unwrap();
+        // re-commit nothing; second step splices the same window
+        let out = fc.forward(&m, &tokens).unwrap();
+        assert_eq!(out.logits.data, full.logits.data);
+        assert_eq!(
+            out.edge_scores.as_ref().unwrap().data,
+            full.edge_scores.as_ref().unwrap().data
+        );
+    }
+}

@@ -1,0 +1,313 @@
+//! Incremental dependency-graph maintenance.
+//!
+//! The decode loop used to rebuild its `DepGraph` from scratch every
+//! step even though most edge scores barely move between consecutive
+//! denoising steps.  [`IncrementalGraph`] keeps the graph (and the score
+//! matrix it was built from) alive across steps over a *stable node
+//! universe* — in `SlotBatch`, the positions of the active block — and
+//! applies only the deltas:
+//!
+//! * the caller names which universe nodes are *present* this step (the
+//!   eligible candidates); a node that departs (committed, or
+//!   pre-committed under DAPD-Direct) has its edges and stored scores
+//!   cleared once, in O(universe) — equivalent to an effective score of
+//!   `-inf` from then on;
+//! * among present nodes, a score that moved by at most `epsilon` is
+//!   treated as unchanged (the stored value stays authoritative), and an
+//!   edge toggles exactly when its authoritative score crosses the
+//!   current tau — which also handles the tau schedule moving between
+//!   steps;
+//! * if the universe itself changes (block advance, new request), the
+//!   state resets and is counted as a full rebuild.
+//!
+//! Per-step cost is O(n^2) pair scans over the *present* set plus
+//! O(universe) per departure; the graph and score matrix are reused
+//! across steps (unlike `DepGraph::from_scores`, which reallocates both
+//! every step) — the caller still passes small per-step index vectors.
+//! With `epsilon = 0` the maintained graph is *identical* to a
+//! from-scratch build over the effective scores at every step (pinned by
+//! a property test below); a positive epsilon is an explicit, bounded
+//! approximation.
+
+use crate::graph::DepGraph;
+
+/// Maintenance counters, merged into `cache::CacheStats` by `SlotBatch`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GraphStats {
+    pub full_rebuilds: u64,
+    pub incremental_updates: u64,
+    pub pairs_toggled: u64,
+}
+
+impl GraphStats {
+    pub fn merge(&mut self, o: &GraphStats) {
+        self.full_rebuilds += o.full_rebuilds;
+        self.incremental_updates += o.incremental_updates;
+        self.pairs_toggled += o.pairs_toggled;
+    }
+}
+
+/// A `DepGraph` maintained across steps by score deltas; see the module
+/// docs for the update rules.
+pub struct IncrementalGraph {
+    eps: f32,
+    /// identity of the node universe (absolute positions)
+    universe: Vec<usize>,
+    /// authoritative symmetric score matrix over universe pairs,
+    /// `u * u`; `-inf` means "no possible edge" (absent node)
+    scores: Vec<f32>,
+    /// universe nodes present (candidate) as of the previous update
+    prev_present: Vec<bool>,
+    /// scratch for the current update's present mask
+    next_present: Vec<bool>,
+    graph: DepGraph,
+    pub stats: GraphStats,
+}
+
+impl IncrementalGraph {
+    pub fn new(eps: f32) -> IncrementalGraph {
+        IncrementalGraph {
+            eps,
+            universe: Vec::new(),
+            scores: Vec::new(),
+            prev_present: Vec::new(),
+            next_present: Vec::new(),
+            graph: DepGraph::new(0),
+            stats: GraphStats::default(),
+        }
+    }
+
+    /// Bring the graph to the state a from-scratch
+    /// `DepGraph::from_scores` build over the effective scores would
+    /// produce — exactly when `eps == 0`, within the epsilon tolerance
+    /// otherwise.  Effective score of universe pair `(ui, uj)` is
+    /// `scores[ci * n + cj]` when both are present (with `present`
+    /// mapping universe index -> candidate index), else `-inf`.
+    ///
+    /// `universe` names the nodes — a changed universe resets the state.
+    /// `scores` is the dense symmetric candidate matrix, `n * n`.
+    pub fn update(
+        &mut self,
+        universe: &[usize],
+        present: &[(usize, usize)],
+        scores: &[f32],
+        n: usize,
+        tau: f32,
+    ) -> &DepGraph {
+        let u = universe.len();
+        debug_assert_eq!(scores.len(), n * n);
+        if universe != self.universe.as_slice() {
+            self.universe.clear();
+            self.universe.extend_from_slice(universe);
+            self.scores.clear();
+            self.scores.resize(u * u, f32::NEG_INFINITY);
+            self.prev_present.clear();
+            self.prev_present.resize(u, false);
+            self.graph = DepGraph::new(u);
+            self.stats.full_rebuilds += 1;
+        } else {
+            self.stats.incremental_updates += 1;
+        }
+
+        self.next_present.clear();
+        self.next_present.resize(u, false);
+        for &(ui, _) in present {
+            self.next_present[ui] = true;
+        }
+
+        // departures: a node that stopped being a candidate loses its
+        // edges and stored scores once (effective score -inf from now on)
+        for d in 0..u {
+            if self.prev_present[d] && !self.next_present[d] {
+                for j in 0..u {
+                    if self.graph.has_edge(d, j) {
+                        self.graph.remove_edge(d, j);
+                        self.stats.pairs_toggled += 1;
+                    }
+                    self.scores[d * u + j] = f32::NEG_INFINITY;
+                    self.scores[j * u + d] = f32::NEG_INFINITY;
+                }
+            }
+        }
+
+        // present-present pairs: epsilon-gated score refresh, then flip
+        // the edge when the authoritative score crosses the current tau
+        for (a, &(ui, ci)) in present.iter().enumerate() {
+            for &(uj, cj) in &present[a + 1..] {
+                let idx = ui * u + uj;
+                let s = scores[ci * n + cj];
+                // NaN from (-inf) - (-inf) compares false, but a present
+                // pair always carries a finite candidate score, so fresh
+                // arrivals (stored -inf) are always refreshed here
+                if (s - self.scores[idx]).abs() > self.eps {
+                    self.scores[idx] = s;
+                    self.scores[uj * u + ui] = s;
+                }
+                let want = self.scores[idx] > tau;
+                if want != self.graph.has_edge(ui, uj) {
+                    if want {
+                        self.graph.add_edge(ui, uj);
+                    } else {
+                        self.graph.remove_edge(ui, uj);
+                    }
+                    self.stats.pairs_toggled += 1;
+                }
+            }
+        }
+        std::mem::swap(&mut self.prev_present, &mut self.next_present);
+        &self.graph
+    }
+
+    pub fn graph(&self) -> &DepGraph {
+        &self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    fn assert_graphs_equal(got: &DepGraph, want: &DepGraph, ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: node count");
+        for i in 0..got.len() {
+            assert_eq!(got.degree(i), want.degree(i), "{ctx}: degree of {i}");
+            for j in 0..got.len() {
+                assert_eq!(
+                    got.has_edge(i, j),
+                    want.has_edge(i, j),
+                    "{ctx}: edge ({i},{j})"
+                );
+            }
+        }
+    }
+
+    fn random_symmetric(rng: &mut Pcg, n: usize) -> Vec<f32> {
+        let mut scores = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let s = rng.f64() as f32;
+                scores[i * n + j] = s;
+                scores[j * n + i] = s;
+            }
+        }
+        scores
+    }
+
+    #[test]
+    fn matches_from_scratch_on_random_score_sequences() {
+        prop::check("incgraph-equals-scratch", 40, |rng: &mut Pcg| {
+            let u = rng.range(2, 24);
+            let universe: Vec<usize> = (0..u).map(|i| 50 + i).collect();
+            // scores over universe pairs; the candidate set starts full
+            // and loses random members as "commits" happen
+            let mut uni_scores = random_symmetric(rng, u);
+            let mut cand: Vec<usize> = (0..u).collect();
+            let mut inc = IncrementalGraph::new(0.0);
+            for step in 0..8 {
+                let tau = 0.1 + 0.8 * rng.f64() as f32;
+                let n = cand.len();
+                let mut cand_scores = vec![0.0f32; n * n];
+                for (a, &ua) in cand.iter().enumerate() {
+                    for (b, &ub) in cand.iter().enumerate() {
+                        if a != b {
+                            cand_scores[a * n + b] = uni_scores[ua * u + ub];
+                        }
+                    }
+                }
+                let present: Vec<(usize, usize)> =
+                    cand.iter().enumerate().map(|(c, &ui)| (ui, c)).collect();
+                let got = inc.update(&universe, &present, &cand_scores, n, tau);
+                let want = DepGraph::from_scores(
+                    u,
+                    |i, j| {
+                        if cand.contains(&i) && cand.contains(&j) {
+                            uni_scores[i * u + j]
+                        } else {
+                            f32::NEG_INFINITY
+                        }
+                    },
+                    tau,
+                );
+                assert_graphs_equal(got, &want, &format!("step {step} tau {tau}"));
+                // drift a random subset of pairs, then commit a node
+                for _ in 0..rng.below(2 * u) + 1 {
+                    let i = rng.below(u);
+                    let j = rng.below(u);
+                    if i != j {
+                        let s = rng.f64() as f32;
+                        uni_scores[i * u + j] = s;
+                        uni_scores[j * u + i] = s;
+                    }
+                }
+                if cand.len() > 2 && rng.bool(0.5) {
+                    cand.remove(rng.below(cand.len()));
+                }
+            }
+            assert_eq!(inc.stats.full_rebuilds, 1, "stable universe must not rebuild");
+            assert_eq!(inc.stats.incremental_updates, 7);
+        });
+    }
+
+    #[test]
+    fn universe_change_forces_rebuild() {
+        let mut inc = IncrementalGraph::new(0.0);
+        let p3: Vec<(usize, usize)> = vec![(0, 0), (1, 1), (2, 2)];
+        inc.update(&[0, 1, 2], &p3, &[0.0; 9], 3, 0.5);
+        let p2: Vec<(usize, usize)> = vec![(0, 0), (1, 1)];
+        inc.update(&[0, 2], &p2, &[0.0; 4], 2, 0.5);
+        assert_eq!(inc.stats.full_rebuilds, 2);
+        assert_eq!(inc.stats.incremental_updates, 0);
+        assert_eq!(inc.graph().len(), 2);
+    }
+
+    #[test]
+    fn departures_drop_their_edges() {
+        let universe = [10usize, 11, 12];
+        let mut inc = IncrementalGraph::new(0.0);
+        let present: Vec<(usize, usize)> = vec![(0, 0), (1, 1), (2, 2)];
+        let mut s = vec![0.0f32; 9];
+        s[1] = 0.9; // (0,1)
+        s[3] = 0.9;
+        s[5] = 0.9; // (1,2)
+        s[7] = 0.9;
+        let g = inc.update(&universe, &present, &s, 3, 0.5);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 2));
+        // node 11 commits: remaining candidates 10 and 12, uncoupled
+        let present2: Vec<(usize, usize)> = vec![(0, 0), (2, 1)];
+        let g = inc.update(&universe, &present2, &[0.0; 4], 2, 0.5);
+        assert_eq!(g.edge_count(), 0, "departed node kept an edge");
+        assert_eq!(inc.stats.full_rebuilds, 1, "same universe: no rebuild");
+        assert_eq!(inc.stats.incremental_updates, 1);
+    }
+
+    #[test]
+    fn epsilon_freezes_small_drift() {
+        let universe = [7usize, 9];
+        let present: Vec<(usize, usize)> = vec![(0, 0), (1, 1)];
+        let mut inc = IncrementalGraph::new(0.2);
+        let g = inc.update(&universe, &present, &[0.0, 0.5, 0.5, 0.0], 2, 0.4);
+        assert!(g.has_edge(0, 1));
+        // drift within epsilon: the stored 0.5 stays authoritative, and
+        // 0.5 > 0.48 keeps the edge even though the fresh 0.45 would not
+        let g = inc.update(&universe, &present, &[0.0, 0.45, 0.45, 0.0], 2, 0.48);
+        assert!(g.has_edge(0, 1), "within-epsilon drift must not flip the edge");
+        // drift beyond epsilon is applied
+        let g = inc.update(&universe, &present, &[0.0, 0.1, 0.1, 0.0], 2, 0.48);
+        assert!(!g.has_edge(0, 1));
+        assert_eq!(inc.stats.pairs_toggled, 2);
+    }
+
+    #[test]
+    fn tau_crossing_with_stable_scores_toggles() {
+        let universe = [3usize, 4];
+        let present: Vec<(usize, usize)> = vec![(0, 0), (1, 1)];
+        let s = [0.0f32, 0.6, 0.6, 0.0];
+        let mut inc = IncrementalGraph::new(0.0);
+        assert!(inc.update(&universe, &present, &s, 2, 0.5).has_edge(0, 1));
+        assert!(!inc.update(&universe, &present, &s, 2, 0.7).has_edge(0, 1));
+        assert!(inc.update(&universe, &present, &s, 2, 0.5).has_edge(0, 1));
+        assert_eq!(inc.stats.pairs_toggled, 3);
+    }
+}

@@ -1,0 +1,142 @@
+//! Compute-reuse subsystem: stop recomputing what didn't change.
+//!
+//! Between consecutive denoising steps most positions are unchanged and
+//! most edge scores barely move, yet the seed decode loop paid a full
+//! forward over the whole window and a from-scratch `DepGraph` rebuild
+//! every step.  This module removes that waste in three layers:
+//!
+//! * [`block_kv`] — a [`ForwardCache`] that freezes per-position outputs
+//!   (logits and attention/edge-score rows) outside the currently-masked
+//!   window and refreshes them every `refresh_every` steps,
+//!   Fast-dLLM/APD-style; steady-state steps only recompute the active
+//!   window via `ForwardModel::forward_window`.  [`CachedModel`] is the
+//!   drop-in `ForwardModel` wrapper over the same engine.
+//! * [`incremental_graph`] — [`IncrementalGraph`] maintains a `DepGraph`
+//!   across steps by toggling only the edges whose scores moved beyond
+//!   an epsilon (or crossed tau), instead of rebuilding every bitset row.
+//! * [`prefix`] — [`PrefixCache`], a coordinator-level LRU keyed by
+//!   (model, prompt hash) that reuses the first-step outputs across
+//!   requests sharing a prompt, with hit/miss counters.
+//!
+//! Safety argument: the decode loop only ever reads forward outputs at
+//! *masked* positions, and every masked position is inside the recompute
+//! window, so frozen entries are never observed — with a deterministic
+//! backend the cached decode is token-for-token identical to the
+//! uncached one at any `refresh_every` (pinned by
+//! `rust/tests/cache_identity.rs` and the decode property tests).
+
+pub mod block_kv;
+pub mod incremental_graph;
+pub mod prefix;
+
+pub use block_kv::{CachedModel, ForwardCache};
+pub use incremental_graph::{GraphStats, IncrementalGraph};
+pub use prefix::{FirstStepRows, PrefixCache, PrefixHandle};
+
+/// Policy knobs for the whole subsystem, plumbed from `config` through
+/// the coordinator into `SlotBatch`.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// master switch; disabled reproduces the seed decode path exactly
+    pub enabled: bool,
+    /// full-forward refresh period: 1 = refresh every step (no reuse of
+    /// frozen rows), k = one full forward per k steps
+    pub refresh_every: usize,
+    /// incremental-graph score tolerance: edge-score drift at or below
+    /// this is treated as unchanged (0.0 = exact maintenance)
+    pub epsilon: f32,
+    /// cross-request prefix LRU capacity in entries (0 disables it)
+    pub prefix_lru_cap: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> CacheConfig {
+        CacheConfig {
+            enabled: false,
+            refresh_every: 4,
+            epsilon: 0.0,
+            prefix_lru_cap: 64,
+        }
+    }
+}
+
+/// Aggregated compute-reuse counters; merged from the forward cache, the
+/// per-slot incremental graphs and the prefix layer into the serving
+/// metrics (`coordinator::Metrics::record_cache`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CacheStats {
+    /// full forwards (refresh steps)
+    pub full_forwards: u64,
+    /// windowed forwards (steady-state steps)
+    pub window_forwards: u64,
+    /// steps answered entirely from the prefix cache (no forward at all)
+    pub prefix_served_steps: u64,
+    /// position-rows actually recomputed
+    pub positions_computed: u64,
+    /// position-rows a fully-uncached loop would have computed
+    pub positions_total: u64,
+    /// incremental-graph full rebuilds (candidate universe changed)
+    pub graph_full_rebuilds: u64,
+    /// incremental-graph delta updates
+    pub graph_incremental_updates: u64,
+    /// individual edges toggled by delta updates
+    pub graph_pairs_toggled: u64,
+}
+
+impl CacheStats {
+    pub fn merge(&mut self, o: &CacheStats) {
+        self.full_forwards += o.full_forwards;
+        self.window_forwards += o.window_forwards;
+        self.prefix_served_steps += o.prefix_served_steps;
+        self.positions_computed += o.positions_computed;
+        self.positions_total += o.positions_total;
+        self.graph_full_rebuilds += o.graph_full_rebuilds;
+        self.graph_incremental_updates += o.graph_incremental_updates;
+        self.graph_pairs_toggled += o.graph_pairs_toggled;
+    }
+
+    /// Fraction of per-position forward compute actually executed
+    /// (1.0 = no reuse; lower is better).  The NFE-equivalent saving is
+    /// `1 - compute_frac`.
+    pub fn compute_frac(&self) -> f64 {
+        if self.positions_total == 0 {
+            return 1.0;
+        }
+        self.positions_computed as f64 / self.positions_total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_off_and_sane() {
+        let c = CacheConfig::default();
+        assert!(!c.enabled);
+        assert!(c.refresh_every >= 1);
+        assert_eq!(c.epsilon, 0.0);
+    }
+
+    #[test]
+    fn stats_merge_and_frac() {
+        let mut a = CacheStats {
+            full_forwards: 1,
+            window_forwards: 3,
+            positions_computed: 25,
+            positions_total: 100,
+            ..CacheStats::default()
+        };
+        let b = CacheStats {
+            positions_computed: 75,
+            positions_total: 100,
+            graph_pairs_toggled: 7,
+            ..CacheStats::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.window_forwards, 3);
+        assert_eq!(a.graph_pairs_toggled, 7);
+        assert!((a.compute_frac() - 0.5).abs() < 1e-9);
+        assert_eq!(CacheStats::default().compute_frac(), 1.0);
+    }
+}

@@ -1,0 +1,304 @@
+//! Cross-request prefix cache.
+//!
+//! Every request starts from the same board state — prompt followed by
+//! all-mask — so the first forward pass is a pure function of (model,
+//! prompt).  [`PrefixCache`] is a coordinator-level LRU keyed by a hash
+//! of both; a hit hands the admitting slot its first-step output rows
+//! ([`FirstStepRows`]) so that a board whose slots are all on step 0 can
+//! skip the forward pass entirely.
+//!
+//! Rows of a masked-diffusion forward are independent across the batch
+//! (the invariant `SlotBatch` already pins), so a row captured from one
+//! batch composition is valid in any other.  Hit/miss/insert/eviction
+//! counters feed the serving metrics endpoint.
+//!
+//! Scope: the forward skip only engages when *every* occupied slot is on
+//! step 0 with a hit (batch 1, drained boards, or same-prompt bursts
+//! admitted together).  On a mixed board the batched forward runs anyway
+//! and the prefetched rows are dropped — so `hits` measures submit-time
+//! prompt recognition while `SlotBatch`'s `prefix_served_steps` (the
+//! `cache_prefix_steps` metric) measures forwards actually skipped.
+//! Folding per-row prefills into the windowed forward of a mixed board
+//! is future work (tracked in ROADMAP.md).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::StepOutput;
+use crate::util::json::Json;
+use crate::util::{fnv1a, FNV_OFFSET};
+
+/// One batch row of a first-step `StepOutput` (prompt + all-mask board).
+#[derive(Debug, Clone)]
+pub struct FirstStepRows {
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// `[seq_len * vocab]`
+    pub logits: Vec<f32>,
+    /// `[seq_len * seq_len]` when the model emits head-avg attention
+    pub attn: Option<Vec<f32>>,
+    /// `[seq_len * seq_len]` when the model emits edge scores
+    pub scores: Option<Vec<f32>>,
+    /// `[seq_len]` when the model emits proxy degrees
+    pub degrees: Option<Vec<f32>>,
+}
+
+impl FirstStepRows {
+    /// Capture batch row `row` of a step output.
+    pub fn from_output(out: &StepOutput, row: usize) -> FirstStepRows {
+        let l = out.seq_len;
+        let v = out.vocab;
+        FirstStepRows {
+            seq_len: l,
+            vocab: v,
+            logits: out.logits.data[row * l * v..(row + 1) * l * v].to_vec(),
+            attn: out
+                .attn_avg
+                .as_ref()
+                .map(|t| t.data[row * l * l..(row + 1) * l * l].to_vec()),
+            scores: out
+                .edge_scores
+                .as_ref()
+                .map(|t| t.data[row * l * l..(row + 1) * l * l].to_vec()),
+            degrees: out
+                .degrees
+                .as_ref()
+                .map(|t| t.data[row * l..(row + 1) * l].to_vec()),
+        }
+    }
+}
+
+struct Entry {
+    last_used: u64,
+    /// the exact prompt this entry was captured from — verified on every
+    /// hit so a 64-bit key collision can never serve another prompt's
+    /// logits
+    prompt: Vec<i32>,
+    rows: Arc<FirstStepRows>,
+}
+
+struct Lru {
+    map: HashMap<u64, Entry>,
+    tick: u64,
+}
+
+/// Shared LRU of first-step rows; see the module docs.
+pub struct PrefixCache {
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+    inner: Mutex<Lru>,
+}
+
+impl PrefixCache {
+    pub fn new(cap: usize) -> PrefixCache {
+        PrefixCache {
+            cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            inner: Mutex::new(Lru {
+                map: HashMap::new(),
+                tick: 0,
+            }),
+        }
+    }
+
+    /// Cache key over (model identity salt, prompt tokens).
+    pub fn key(model_salt: u64, prompt: &[i32]) -> u64 {
+        let mut h = fnv1a(FNV_OFFSET, &model_salt.to_le_bytes());
+        for &t in prompt {
+            h = fnv1a(h, &t.to_le_bytes());
+        }
+        h
+    }
+
+    /// Look up, bumping recency and the hit/miss counters.  A hit is
+    /// exact: the stored prompt is compared token-for-token, so a key
+    /// collision degrades to a miss instead of serving wrong logits.
+    pub fn get(&self, key: u64, prompt: &[i32]) -> Option<Arc<FirstStepRows>> {
+        let mut lru = self.inner.lock().unwrap();
+        lru.tick += 1;
+        let tick = lru.tick;
+        match lru.map.get_mut(&key) {
+            Some(entry) if entry.prompt == prompt => {
+                entry.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&entry.rows))
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (idempotent for identical keys), evicting the least
+    /// recently used entry beyond capacity.
+    pub fn insert(&self, key: u64, prompt: &[i32], rows: FirstStepRows) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut lru = self.inner.lock().unwrap();
+        lru.tick += 1;
+        let tick = lru.tick;
+        lru.map.insert(
+            key,
+            Entry {
+                last_used: tick,
+                prompt: prompt.to_vec(),
+                rows: Arc::new(rows),
+            },
+        );
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        while lru.map.len() > self.cap {
+            // capacity is config-bounded, so the O(n) victim scan is fine
+            let victim = lru
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .unwrap();
+            lru.map.remove(&victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        if h + m == 0.0 {
+            return 0.0;
+        }
+        h / (h + m)
+    }
+
+    /// Snapshot for the serving metrics endpoint.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("entries", self.len().into());
+        j.set("capacity", self.cap.into());
+        j.set("hits", (self.hits() as i64).into());
+        j.set("misses", (self.misses() as i64).into());
+        j.set(
+            "inserts",
+            (self.inserts.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "evictions",
+            (self.evictions.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set("hit_rate", self.hit_rate().into());
+        j
+    }
+}
+
+/// A cache plus the model-identity salt requests are keyed under; cheap
+/// to clone into workers.
+#[derive(Clone)]
+pub struct PrefixHandle {
+    pub cache: Arc<PrefixCache>,
+    pub model_salt: u64,
+}
+
+impl PrefixHandle {
+    /// `model_tag` must identify the model *and its shapes* (the pool's
+    /// `describe()` string does) — two models sharing a salt would serve
+    /// each other's logits.
+    pub fn new(cache: Arc<PrefixCache>, model_tag: &str) -> PrefixHandle {
+        PrefixHandle {
+            cache,
+            model_salt: fnv1a(FNV_OFFSET, model_tag.as_bytes()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(tag: f32) -> FirstStepRows {
+        FirstStepRows {
+            seq_len: 2,
+            vocab: 3,
+            logits: vec![tag; 6],
+            attn: None,
+            scores: None,
+            degrees: None,
+        }
+    }
+
+    #[test]
+    fn get_counts_hits_and_misses() {
+        let c = PrefixCache::new(4);
+        let k = PrefixCache::key(1, &[5, 6]);
+        assert!(c.get(k, &[5, 6]).is_none());
+        c.insert(k, &[5, 6], rows(1.0));
+        assert_eq!(c.get(k, &[5, 6]).unwrap().logits[0], 1.0);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn colliding_key_with_different_prompt_misses() {
+        // a forged/colliding key must never serve another prompt's rows
+        let c = PrefixCache::new(4);
+        let k = PrefixCache::key(1, &[5, 6]);
+        c.insert(k, &[5, 6], rows(1.0));
+        assert!(c.get(k, &[6, 5]).is_none(), "prompt mismatch must miss");
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn keys_separate_models_and_prompts() {
+        let a = PrefixCache::key(1, &[5, 6]);
+        assert_eq!(a, PrefixCache::key(1, &[5, 6]));
+        assert_ne!(a, PrefixCache::key(2, &[5, 6]));
+        assert_ne!(a, PrefixCache::key(1, &[6, 5]));
+        assert_ne!(a, PrefixCache::key(1, &[5, 6, 7]));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let c = PrefixCache::new(2);
+        let (k1, k2, k3) = (11u64, 22u64, 33u64);
+        c.insert(k1, &[1], rows(1.0));
+        c.insert(k2, &[2], rows(2.0));
+        assert!(c.get(k1, &[1]).is_some()); // k1 now most recent
+        c.insert(k3, &[3], rows(3.0)); // evicts k2
+        assert_eq!(c.len(), 2);
+        assert!(c.get(k1, &[1]).is_some());
+        assert!(c.get(k2, &[2]).is_none(), "LRU victim must be k2");
+        assert!(c.get(k3, &[3]).is_some());
+        assert_eq!(c.to_json().get("evictions").as_i64(), Some(1));
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let c = PrefixCache::new(0);
+        c.insert(7, &[1], rows(1.0));
+        assert!(c.is_empty());
+        assert!(c.get(7, &[1]).is_none());
+    }
+}

@@ -10,12 +10,19 @@
 //!   "method": "dapd-staged", "blocks": 1, "eos_suppress": false,
 //!   "batch_wait_ms": 5, "queue_cap": 256,
 //!   "conf_threshold": 0.9, "gamma": 0.1, "kl_threshold": 0.01,
-//!   "tau_min": 0.01, "tau_max": 0.15
+//!   "tau_min": 0.01, "tau_max": 0.15,
+//!   "cache_enabled": true, "refresh_every": 4,
+//!   "cache_epsilon": 0.0, "prefix_lru_cap": 64
 //! }
 //! ```
+//!
+//! The `cache_*`/`refresh_every`/`prefix_lru_cap` keys configure the
+//! compute-reuse subsystem (CLI: `--cache`/`--no-cache`,
+//! `--refresh-every`, `--cache-epsilon`, `--prefix-lru-cap`).
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::cache::CacheConfig;
 use crate::decode::{DecodeConfig, Method, MethodParams};
 use crate::graph::TauSchedule;
 use crate::util::args::Args;
@@ -35,6 +42,14 @@ pub struct ServeSettings {
     pub batch_wait_ms: u64,
     pub queue_cap: usize,
     pub params: MethodParams,
+    /// compute-reuse subsystem master switch
+    pub cache_enabled: bool,
+    /// full-forward refresh period when the cache is enabled
+    pub refresh_every: usize,
+    /// incremental-graph score tolerance (0.0 = exact maintenance)
+    pub cache_epsilon: f32,
+    /// cross-request prefix LRU capacity (0 disables the prefix layer)
+    pub prefix_lru_cap: usize,
 }
 
 impl Default for ServeSettings {
@@ -51,6 +66,10 @@ impl Default for ServeSettings {
             batch_wait_ms: 5,
             queue_cap: 256,
             params: MethodParams::default(),
+            cache_enabled: CacheConfig::default().enabled,
+            refresh_every: CacheConfig::default().refresh_every,
+            cache_epsilon: CacheConfig::default().epsilon,
+            prefix_lru_cap: CacheConfig::default().prefix_lru_cap,
         }
     }
 }
@@ -86,7 +105,7 @@ impl ServeSettings {
             self.workers = v;
         }
         if let Some(v) = j.get("method").as_str() {
-            self.method = Method::parse(v).ok_or_else(|| anyhow!("unknown method '{v}'"))?;
+            self.method = Method::parse_or_err(v)?;
         }
         if let Some(v) = j.get("blocks").as_usize() {
             self.blocks = v;
@@ -99,6 +118,18 @@ impl ServeSettings {
         }
         if let Some(v) = j.get("queue_cap").as_usize() {
             self.queue_cap = v;
+        }
+        if let Some(v) = j.get("cache_enabled").as_bool() {
+            self.cache_enabled = v;
+        }
+        if let Some(v) = j.get("refresh_every").as_usize() {
+            self.refresh_every = v;
+        }
+        if let Some(v) = j.get("cache_epsilon").as_f64() {
+            self.cache_epsilon = v as f32;
+        }
+        if let Some(v) = j.get("prefix_lru_cap").as_usize() {
+            self.prefix_lru_cap = v;
         }
         let p = &mut self.params;
         if let Some(v) = j.get("conf_threshold").as_f64() {
@@ -126,7 +157,7 @@ impl ServeSettings {
         self.port = args.usize_or("port", self.port);
         self.workers = args.usize_or("workers", self.workers);
         if let Some(m) = args.get("method") {
-            self.method = Method::parse(m).ok_or_else(|| anyhow!("unknown method '{m}'"))?;
+            self.method = Method::parse_or_err(m)?;
         }
         self.blocks = args.usize_or("blocks", self.blocks);
         if args.has("eos-inf") {
@@ -134,6 +165,17 @@ impl ServeSettings {
         }
         self.batch_wait_ms = args.usize_or("batch-wait-ms", self.batch_wait_ms as usize) as u64;
         self.queue_cap = args.usize_or("queue-cap", self.queue_cap);
+        if args.has("cache") {
+            self.cache_enabled = true;
+        }
+        // flags must be able to override a config file in both
+        // directions; --no-cache wins if both are given
+        if args.has("no-cache") {
+            self.cache_enabled = false;
+        }
+        self.refresh_every = args.usize_or("refresh-every", self.refresh_every);
+        self.cache_epsilon = args.f64_or("cache-epsilon", self.cache_epsilon as f64) as f32;
+        self.prefix_lru_cap = args.usize_or("prefix-lru-cap", self.prefix_lru_cap);
         let p = &mut self.params;
         p.conf_threshold = args.f64_or("conf-threshold", p.conf_threshold as f64) as f32;
         p.gamma = args.f64_or("gamma", p.gamma as f64) as f32;
@@ -147,15 +189,38 @@ impl ServeSettings {
         Ok(())
     }
 
+    /// Reject configurations that would wedge or panic the pool
+    /// downstream, each with an actionable message.
     fn validate(self) -> Result<ServeSettings> {
-        if self.batch == 0 || self.blocks == 0 {
-            return Err(anyhow!("batch and blocks must be >= 1"));
+        if self.batch == 0 {
+            return Err(anyhow!("batch must be >= 1 (got 0: no decode slots)"));
+        }
+        if self.blocks == 0 {
+            return Err(anyhow!("blocks must be >= 1 (got 0: empty decode blocks)"));
         }
         if self.workers == 0 {
-            return Err(anyhow!("workers must be >= 1"));
+            return Err(anyhow!(
+                "workers must be >= 1 (got 0: the pool would accept requests but \
+                 never run them)"
+            ));
+        }
+        if self.queue_cap == 0 {
+            return Err(anyhow!(
+                "queue_cap must be >= 1 (got 0: every submit would be rejected \
+                 as over-capacity)"
+            ));
         }
         if !(0.0..=1.0).contains(&self.params.conf_threshold) {
             return Err(anyhow!("conf_threshold must be in [0,1]"));
+        }
+        if self.cache_enabled && self.refresh_every == 0 {
+            return Err(anyhow!(
+                "refresh_every must be >= 1 when the cache is enabled \
+                 (1 = refresh every step)"
+            ));
+        }
+        if self.cache_epsilon < 0.0 {
+            return Err(anyhow!("cache_epsilon must be >= 0"));
         }
         Ok(self)
     }
@@ -166,6 +231,16 @@ impl ServeSettings {
         cfg.blocks = self.blocks;
         cfg.eos_suppress = self.eos_suppress;
         cfg
+    }
+
+    /// The compute-reuse policy for the coordinator pool.
+    pub fn cache_config(&self) -> CacheConfig {
+        CacheConfig {
+            enabled: self.cache_enabled,
+            refresh_every: self.refresh_every,
+            epsilon: self.cache_epsilon,
+            prefix_lru_cap: self.prefix_lru_cap,
+        }
     }
 }
 
@@ -231,9 +306,66 @@ mod tests {
     fn validation_rejects_bad_values() {
         assert!(ServeSettings::resolve(&args(&["--batch", "0"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--workers", "0"])).is_err());
+        assert!(ServeSettings::resolve(&args(&["--queue-cap", "0"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--tau-min", "0.5", "--tau-max", "0.1"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--conf-threshold", "1.5"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--method", "nope"])).is_err());
+        assert!(ServeSettings::resolve(&args(&["--cache", "--refresh-every", "0"])).is_err());
+        assert!(ServeSettings::resolve(&args(&["--cache-epsilon", "-0.5"])).is_err());
+        // refresh_every 0 is only rejected when the cache is on
+        assert!(ServeSettings::resolve(&args(&["--refresh-every", "0"])).is_ok());
+    }
+
+    #[test]
+    fn bad_values_get_actionable_messages() {
+        let msg =
+            |flags: &[&str]| format!("{:#}", ServeSettings::resolve(&args(flags)).unwrap_err());
+        assert!(msg(&["--workers", "0"]).contains("workers must be >= 1"));
+        assert!(msg(&["--queue-cap", "0"]).contains("queue_cap must be >= 1"));
+        assert!(msg(&["--batch", "0"]).contains("batch must be >= 1"));
+        // unknown methods list the valid names
+        let m = msg(&["--method", "nope"]);
+        assert!(m.contains("nope") && m.contains("dapd-staged") && m.contains("klass"));
+    }
+
+    #[test]
+    fn cache_settings_resolve_from_file_and_flags() {
+        let dir = std::env::temp_dir().join("dapd_cfg_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"cache_enabled": true, "refresh_every": 8, "prefix_lru_cap": 16,
+                "cache_epsilon": 0.05}"#,
+        )
+        .unwrap();
+        let s = ServeSettings::resolve(&args(&["--config", path.to_str().unwrap()])).unwrap();
+        assert!(s.cache_enabled);
+        assert_eq!(s.refresh_every, 8);
+        // --no-cache overrides a file that enabled the cache
+        let off =
+            ServeSettings::resolve(&args(&["--config", path.to_str().unwrap(), "--no-cache"]))
+                .unwrap();
+        assert!(!off.cache_enabled);
+        assert_eq!(s.prefix_lru_cap, 16);
+        assert!((s.cache_epsilon - 0.05).abs() < 1e-6);
+        let c = s.cache_config();
+        assert!(c.enabled);
+        assert_eq!(c.refresh_every, 8);
+        // flags override the file
+        let s = ServeSettings::resolve(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--refresh-every",
+            "2",
+            "--prefix-lru-cap",
+            "0",
+        ]))
+        .unwrap();
+        assert_eq!(s.refresh_every, 2);
+        assert_eq!(s.prefix_lru_cap, 0);
+        // defaults leave the cache off
+        assert!(!ServeSettings::resolve(&args(&[])).unwrap().cache_enabled);
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::cache::CacheStats;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -21,6 +22,23 @@ pub struct Metrics {
     pub steps_run: AtomicU64,
     /// occupied slots summed over forward passes (occupancy numerator)
     pub slot_steps: AtomicU64,
+    /// compute reuse: full (refresh) forwards through the cache layer
+    pub cache_full_forwards: AtomicU64,
+    /// compute reuse: windowed (spliced) forwards
+    pub cache_window_forwards: AtomicU64,
+    /// compute reuse: steps served entirely from the prefix cache
+    pub cache_prefix_steps: AtomicU64,
+    /// compute reuse: position-rows actually recomputed
+    pub cache_positions_computed: AtomicU64,
+    /// compute reuse: position-rows an uncached loop would have computed
+    pub cache_positions_total: AtomicU64,
+    /// incremental-graph full rebuilds
+    pub graph_full_rebuilds: AtomicU64,
+    /// incremental-graph delta updates
+    pub graph_incremental_updates: AtomicU64,
+    /// individual edges flipped by delta updates (what `cache_epsilon`
+    /// suppresses — the signal for tuning that knob)
+    pub graph_pairs_toggled: AtomicU64,
     latency: Mutex<Summary>,
     steps: Mutex<Summary>,
     batch_sizes: Mutex<Summary>,
@@ -49,6 +67,36 @@ impl Metrics {
     pub fn record_step(&self, occupied: usize) {
         self.steps_run.fetch_add(1, Ordering::Relaxed);
         self.slot_steps.fetch_add(occupied as u64, Ordering::Relaxed);
+    }
+
+    /// Fold a decode session's compute-reuse counters into the metrics.
+    pub fn record_cache(&self, s: &CacheStats) {
+        self.cache_full_forwards
+            .fetch_add(s.full_forwards, Ordering::Relaxed);
+        self.cache_window_forwards
+            .fetch_add(s.window_forwards, Ordering::Relaxed);
+        self.cache_prefix_steps
+            .fetch_add(s.prefix_served_steps, Ordering::Relaxed);
+        self.cache_positions_computed
+            .fetch_add(s.positions_computed, Ordering::Relaxed);
+        self.cache_positions_total
+            .fetch_add(s.positions_total, Ordering::Relaxed);
+        self.graph_full_rebuilds
+            .fetch_add(s.graph_full_rebuilds, Ordering::Relaxed);
+        self.graph_incremental_updates
+            .fetch_add(s.graph_incremental_updates, Ordering::Relaxed);
+        self.graph_pairs_toggled
+            .fetch_add(s.graph_pairs_toggled, Ordering::Relaxed);
+    }
+
+    /// Fraction of per-position forward compute actually executed
+    /// (1.0 = no reuse recorded; lower is better).
+    pub fn cache_compute_frac(&self) -> f64 {
+        let total = self.cache_positions_total.load(Ordering::Relaxed);
+        if total == 0 {
+            return 1.0;
+        }
+        self.cache_positions_computed.load(Ordering::Relaxed) as f64 / total as f64
     }
 
     /// tokens per second over this recorder's engine-busy time.  On the
@@ -118,12 +166,37 @@ impl Metrics {
         j.set("mean_batch_size", self.mean_batch_size().into());
         j.set("latency_p50_s", p50.into());
         j.set("latency_p95_s", p95.into());
+        j.set(
+            "cache_full_forwards",
+            (self.cache_full_forwards.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "cache_window_forwards",
+            (self.cache_window_forwards.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "cache_prefix_steps",
+            (self.cache_prefix_steps.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set("cache_compute_frac", self.cache_compute_frac().into());
+        j.set(
+            "graph_full_rebuilds",
+            (self.graph_full_rebuilds.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "graph_incremental_updates",
+            (self.graph_incremental_updates.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "graph_pairs_toggled",
+            (self.graph_pairs_toggled.load(Ordering::Relaxed) as i64).into(),
+        );
         j
     }
 
     pub fn report(&self) -> String {
         let (p50, p95) = self.latency_p50_p95();
-        format!(
+        let mut out = format!(
             "requests={} batches={} mean_batch={:.2} tokens={} tps={:.1} \
              steps={:.1} latency_p50={:.3}s p95={:.3}s errors={} rejected={}",
             self.requests.load(Ordering::Relaxed),
@@ -136,7 +209,19 @@ impl Metrics {
             p95,
             self.errors.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
-        )
+        );
+        let reused = self.cache_window_forwards.load(Ordering::Relaxed)
+            + self.cache_prefix_steps.load(Ordering::Relaxed);
+        if reused > 0 {
+            out.push_str(&format!(
+                " cache[full={} window={} prefix_steps={} compute_frac={:.2}]",
+                self.cache_full_forwards.load(Ordering::Relaxed),
+                self.cache_window_forwards.load(Ordering::Relaxed),
+                self.cache_prefix_steps.load(Ordering::Relaxed),
+                self.cache_compute_frac(),
+            ));
+        }
+        out
     }
 }
 
@@ -175,6 +260,29 @@ mod tests {
         m.record_step(2);
         assert!((m.mean_batch_size() - 3.0).abs() < 1e-9);
         assert_eq!(m.steps_run.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn cache_counters_fold_and_report() {
+        let m = Metrics::new();
+        assert_eq!(m.cache_compute_frac(), 1.0);
+        m.record_cache(&CacheStats {
+            full_forwards: 2,
+            window_forwards: 6,
+            prefix_served_steps: 1,
+            positions_computed: 40,
+            positions_total: 160,
+            graph_full_rebuilds: 1,
+            graph_incremental_updates: 7,
+            graph_pairs_toggled: 3,
+        });
+        assert!((m.cache_compute_frac() - 0.25).abs() < 1e-9);
+        let j = m.to_json();
+        assert_eq!(j.get("cache_window_forwards").as_i64(), Some(6));
+        assert_eq!(j.get("cache_prefix_steps").as_i64(), Some(1));
+        assert_eq!(j.get("graph_incremental_updates").as_i64(), Some(7));
+        assert_eq!(j.get("graph_pairs_toggled").as_i64(), Some(3));
+        assert!(m.report().contains("cache[full=2 window=6"));
     }
 
     #[test]

@@ -37,9 +37,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::cache::{CacheConfig, FirstStepRows, PrefixCache, PrefixHandle};
 use crate::decode::{DecodeConfig, SlotBatch};
 use crate::runtime::{ForwardModel, ModelPool};
 use crate::util::logging;
+use crate::util::{fnv1a, FNV_OFFSET};
 pub use metrics::Metrics;
 
 /// A decode request: fixed-width prompt + the method configuration.
@@ -52,6 +54,9 @@ pub struct Request {
     group: u64,
     /// global arrival order (FIFO across shards)
     seq: u64,
+    /// first-step rows prefetched from the prefix cache at submit time,
+    /// so the worker's step path never takes the cache lock for a hit
+    prefill: Option<Arc<FirstStepRows>>,
 }
 
 /// The reply a client receives.
@@ -63,29 +68,23 @@ pub struct Response {
     pub latency: Duration,
 }
 
-fn fnv_mix(mut h: u64, bytes: &[u8]) -> u64 {
-    for &b in bytes {
-        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
-    }
-    h
-}
-
 /// Batching compatibility key: requests with equal keys may share a
 /// `SlotBatch` (they are decoded under one config).  Folds the full
 /// method name, block count, EOS settings, step cap and the confidence
-/// threshold through FNV-1a; the remaining params are config-level in
-/// vLLM terms (uniform per deployment) and intentionally excluded.
+/// threshold through FNV-1a (`util::fnv1a`, shared with the prefix
+/// cache); the remaining params are config-level in vLLM terms (uniform
+/// per deployment) and intentionally excluded.
 ///
 /// The seed's bit-trick key collided for `dapd-staged`/`dapd-direct`
 /// (same first byte, same length), which would have decoded one method's
 /// requests under the other's config — hence the full-name hash.
 pub fn group_key(cfg: &DecodeConfig) -> u64 {
-    let mut h = fnv_mix(0xcbf29ce484222325, cfg.method.name().as_bytes());
-    h = fnv_mix(h, &(cfg.blocks as u64).to_le_bytes());
-    h = fnv_mix(h, &[cfg.eos_suppress as u8]);
-    h = fnv_mix(h, &cfg.eos_id.to_le_bytes());
-    h = fnv_mix(h, &(cfg.max_steps as u64).to_le_bytes());
-    h = fnv_mix(h, &cfg.params.conf_threshold.to_bits().to_le_bytes());
+    let mut h = fnv1a(FNV_OFFSET, cfg.method.name().as_bytes());
+    h = fnv1a(h, &(cfg.blocks as u64).to_le_bytes());
+    h = fnv1a(h, &[cfg.eos_suppress as u8]);
+    h = fnv1a(h, &cfg.eos_id.to_le_bytes());
+    h = fnv1a(h, &(cfg.max_steps as u64).to_le_bytes());
+    h = fnv1a(h, &cfg.params.conf_threshold.to_bits().to_le_bytes());
     h
 }
 
@@ -174,6 +173,9 @@ pub struct PoolOptions {
     pub batch_wait: Duration,
     /// total queued-request bound across all shards (backpressure)
     pub queue_cap: usize,
+    /// compute-reuse subsystem (block-wise cached forwards, incremental
+    /// dependency graphs, cross-request prefix cache)
+    pub cache: CacheConfig,
 }
 
 impl Default for PoolOptions {
@@ -182,6 +184,7 @@ impl Default for PoolOptions {
             workers: 1,
             batch_wait: Duration::from_millis(5),
             queue_cap: 256,
+            cache: CacheConfig::default(),
         }
     }
 }
@@ -213,10 +216,19 @@ pub struct Coordinator {
     /// per-worker breakdown, index = worker id
     worker_metrics: Arc<Vec<Arc<Metrics>>>,
     seq: Arc<AtomicU64>,
+    /// compute-reuse policy handed to every worker's `SlotBatch`
+    cache_cfg: CacheConfig,
+    /// shared cross-request prefix cache (when the cache is enabled)
+    prefix: Option<PrefixHandle>,
 }
 
 impl Coordinator {
-    fn with_capacity(queue_cap: usize, workers: usize) -> Coordinator {
+    fn with_capacity(
+        queue_cap: usize,
+        workers: usize,
+        cache_cfg: CacheConfig,
+        prefix: Option<PrefixHandle>,
+    ) -> Coordinator {
         Coordinator {
             queue: Arc::new(Queue {
                 state: Mutex::new(QueueState {
@@ -230,6 +242,8 @@ impl Coordinator {
             metrics: Arc::new(Metrics::new()),
             worker_metrics: Arc::new((0..workers).map(|_| Arc::new(Metrics::new())).collect()),
             seq: Arc::new(AtomicU64::new(0)),
+            cache_cfg,
+            prefix,
         }
     }
 
@@ -242,15 +256,28 @@ impl Coordinator {
         let queue = Arc::clone(&self.queue);
         let global = Arc::clone(&self.metrics);
         let local = Arc::clone(&self.worker_metrics[worker_id]);
+        let cache_cfg = self.cache_cfg.clone();
+        let prefix = self.prefix.clone();
         std::thread::Builder::new()
             .name(format!("dapd-infer-{worker_id}"))
-            .spawn(move || worker_loop(worker_id, model, queue, global, local, batch_wait))
+            .spawn(move || {
+                worker_loop(
+                    worker_id,
+                    model,
+                    queue,
+                    global,
+                    local,
+                    batch_wait,
+                    cache_cfg,
+                    prefix,
+                )
+            })
             .expect("spawn inference worker")
     }
 
     /// Single-worker convenience used by tests and the older call sites:
     /// move `model` into one inference thread.  Equivalent to a pool of
-    /// size 1.
+    /// size 1 with compute reuse disabled.
     pub fn start<M>(
         model: M,
         batch_wait: Duration,
@@ -259,7 +286,7 @@ impl Coordinator {
     where
         M: ForwardModel + Send + 'static,
     {
-        let coord = Coordinator::with_capacity(queue_cap, 1);
+        let coord = Coordinator::with_capacity(queue_cap, 1, CacheConfig::default(), None);
         let handle = coord.spawn_worker(0, Box::new(model), batch_wait);
         (coord, handle)
     }
@@ -273,25 +300,57 @@ impl Coordinator {
         if opts.workers == 0 {
             bail!("worker pool needs at least one worker");
         }
-        let coord = Coordinator::with_capacity(opts.queue_cap, opts.workers);
+        if opts.queue_cap == 0 {
+            bail!("queue_cap must be >= 1 (a zero-capacity queue rejects every request)");
+        }
+        if opts.cache.enabled && opts.cache.refresh_every == 0 {
+            bail!("cache refresh_every must be >= 1");
+        }
+        let prefix = if opts.cache.enabled && opts.cache.prefix_lru_cap > 0 {
+            Some(PrefixHandle::new(
+                Arc::new(PrefixCache::new(opts.cache.prefix_lru_cap)),
+                &pool.describe(),
+            ))
+        } else {
+            None
+        };
+        let coord =
+            Coordinator::with_capacity(opts.queue_cap, opts.workers, opts.cache.clone(), prefix);
         let mut handles = Vec::with_capacity(opts.workers);
         for w in 0..opts.workers {
             let model = pool.replica()?;
             handles.push(coord.spawn_worker(w, model, opts.batch_wait));
         }
+        let cache_note = if opts.cache.enabled {
+            format!(
+                " [cache: refresh_every={} prefix_lru={}]",
+                opts.cache.refresh_every, opts.cache.prefix_lru_cap
+            )
+        } else {
+            String::new()
+        };
         logging::info(&format!(
-            "coordinator up: {} worker(s) on {}",
+            "coordinator up: {} worker(s) on {}{}",
             opts.workers,
-            pool.describe()
+            pool.describe(),
+            cache_note
         ));
         Ok((coord, CoordinatorHandle { handles }))
     }
 
     /// Submit a request; returns the response receiver.  Applies
     /// backpressure by rejecting when the (sharded) queue is full.
+    /// Accepted requests consult the prefix cache here (counting
+    /// hits/misses) so hits ride into the worker with the request;
+    /// rejected submissions never touch the cache or its counters.
     pub fn submit(&self, prompt: Vec<i32>, cfg: DecodeConfig) -> Result<Receiver<Response>> {
         let (tx, rx) = sync_channel(1);
         let group = group_key(&cfg);
+        // hash outside the queue lock (pure function of the prompt)
+        let prefix_key = self
+            .prefix
+            .as_ref()
+            .map(|h| PrefixCache::key(h.model_salt, &prompt));
         {
             let mut st = self.queue.state.lock().unwrap();
             if st.closed {
@@ -301,6 +360,13 @@ impl Coordinator {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 bail!("queue full ({} requests)", st.total);
             }
+            // only accepted requests consult the cache; the prefix mutex
+            // nests inside the queue lock (workers take it without the
+            // queue lock, so there is no ordering cycle)
+            let prefill = match (&self.prefix, prefix_key) {
+                (Some(h), Some(key)) => h.cache.get(key, &prompt),
+                _ => None,
+            };
             st.push(Request {
                 prompt,
                 cfg,
@@ -308,6 +374,7 @@ impl Coordinator {
                 respond: tx,
                 group,
                 seq: self.seq.fetch_add(1, Ordering::Relaxed),
+                prefill,
             });
             self.metrics
                 .queue_depth
@@ -333,6 +400,11 @@ impl Coordinator {
     /// Per-worker metrics, index = worker id.
     pub fn worker_metrics(&self) -> &[Arc<Metrics>] {
         &self.worker_metrics
+    }
+
+    /// The shared cross-request prefix cache, when enabled.
+    pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        self.prefix.as_ref().map(|h| &h.cache)
     }
 
     /// Aggregate + per-worker report for logs.
@@ -365,21 +437,23 @@ fn admit_request(
     req: Request,
 ) {
     *ticket += 1;
-    match batch.admit(*ticket, &req.prompt) {
+    let Request {
+        prompt,
+        respond,
+        submitted,
+        prefill,
+        ..
+    } = req;
+    // the prefix cache was consulted at submit time; hand the rows over
+    match batch.admit_prefetched(*ticket, &prompt, prefill) {
         Ok(_slot) => {
-            inflight.insert(
-                *ticket,
-                InFlight {
-                    respond: req.respond,
-                    submitted: req.submitted,
-                },
-            );
+            inflight.insert(*ticket, InFlight { respond, submitted });
         }
         Err(e) => {
             logging::info(&format!("worker {worker_id}: rejected admit: {e:#}"));
             global.errors.fetch_add(1, Ordering::Relaxed);
             local.errors.fetch_add(1, Ordering::Relaxed);
-            // dropping req.respond signals the error to the caller
+            // dropping the respond channel signals the error to the caller
         }
     }
 }
@@ -387,6 +461,7 @@ fn admit_request(
 /// One inference worker: adopt the oldest group, batch continuously at
 /// step granularity, drain, repeat.  Exits when the coordinator is closed
 /// and every shard is empty.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
     model: Box<dyn ForwardModel + Send>,
@@ -394,6 +469,8 @@ fn worker_loop(
     global: Arc<Metrics>,
     local: Arc<Metrics>,
     batch_wait: Duration,
+    cache_cfg: CacheConfig,
+    prefix: Option<PrefixHandle>,
 ) {
     let model: &dyn ForwardModel = model.as_ref();
     let mut ticket = 0u64;
@@ -419,7 +496,7 @@ fn worker_loop(
 
         let group = first.group;
         let cfg = first.cfg.clone();
-        let mut batch = match SlotBatch::new(model, &cfg) {
+        let mut batch = match SlotBatch::with_cache(model, &cfg, &cache_cfg, prefix.clone()) {
             Ok(b) => b,
             Err(e) => {
                 // invalid config: drop the channel so the caller errors out
@@ -536,6 +613,10 @@ fn worker_loop(
             global.record_batch(session_reqs, session_tokens, wall);
             local.record_batch(session_reqs, session_tokens, wall);
         }
+        // fold this session's compute-reuse counters into the metrics
+        let cache_stats = batch.cache_stats();
+        global.record_cache(&cache_stats);
+        local.record_cache(&cache_stats);
     }
 }
 
@@ -636,6 +717,48 @@ mod tests {
             .map(|m| m.requests.load(Ordering::Relaxed))
             .sum();
         assert_eq!(per_worker, 8, "per-worker metrics must sum to aggregate");
+    }
+
+    #[test]
+    fn zero_queue_cap_is_rejected() {
+        let pool = ModelPool::mock(MockModel::new(1, 16, 4, 12));
+        let opts = PoolOptions {
+            queue_cap: 0,
+            ..PoolOptions::default()
+        };
+        assert!(Coordinator::start_pool(&pool, &opts).is_err());
+    }
+
+    #[test]
+    fn cached_pool_serves_identical_tokens_and_counts_reuse() {
+        let m = MockModel::new(2, 16, 4, 12);
+        let want: Vec<i32> = (4..16).map(|i| m.true_token(i)).collect();
+        let pool = ModelPool::mock(m);
+        let opts = PoolOptions {
+            batch_wait: Duration::ZERO,
+            cache: CacheConfig {
+                enabled: true,
+                refresh_every: 4,
+                epsilon: 0.0,
+                prefix_lru_cap: 8,
+            },
+            ..PoolOptions::default()
+        };
+        let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
+        for _ in 0..3 {
+            let resp = coord.call(vec![5; 4], cfg()).unwrap();
+            assert_eq!(resp.gen, want, "cached pool changed the generation");
+        }
+        coord.shutdown();
+        handles.join();
+        assert!(
+            coord.prefix_cache().unwrap().hits() >= 1,
+            "repeat prompts must hit the prefix cache"
+        );
+        let m = &coord.metrics;
+        let reused = m.cache_window_forwards.load(Ordering::Relaxed)
+            + m.cache_prefix_steps.load(Ordering::Relaxed);
+        assert!(reused > 0, "metrics must show compute reuse");
     }
 
     #[test]

@@ -23,9 +23,10 @@
 pub mod slots;
 pub mod strategies;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::graph::TauSchedule;
+use crate::cache::{CacheConfig, PrefixHandle};
+use crate::graph::{DepGraph, TauSchedule};
 use crate::runtime::ForwardModel;
 
 pub use slots::SlotBatch;
@@ -52,6 +53,15 @@ impl Method {
             "dapd-staged" => Method::DapdStaged,
             "dapd-direct" => Method::DapdDirect,
             _ => return None,
+        })
+    }
+
+    /// `parse` with an error that lists the valid names — the message
+    /// the server and CLI surface on a typo.
+    pub fn parse_or_err(s: &str) -> Result<Method> {
+        Method::parse(s).ok_or_else(|| {
+            let names: Vec<&str> = Method::all().iter().map(|m| m.name()).collect();
+            anyhow!("unknown method '{s}' (valid: {})", names.join(", "))
         })
     }
 
@@ -111,6 +121,16 @@ pub struct MethodParams {
     pub ordering: DapdOrdering,
 }
 
+impl MethodParams {
+    /// DAPD-Direct's pre-commit rule: `conf >= 1 - eps` counts as
+    /// "confidence 1.0" (Remark 4.1).  The single definition shared by
+    /// the `Dapd` strategy and the cache layer's incremental-graph
+    /// wiring, which must agree on node eligibility.
+    pub fn dapd_pre_commits(&self, conf: f32) -> bool {
+        conf >= 1.0 - self.conf_one_eps
+    }
+}
+
 impl Default for MethodParams {
     fn default() -> MethodParams {
         MethodParams {
@@ -156,6 +176,19 @@ impl DecodeConfig {
     }
 }
 
+/// A dependency graph prebuilt by the cache layer over a stable node
+/// *universe* (the active block's positions), handed to graph-based
+/// strategies through [`StepCtx::graph`].  Non-candidate universe nodes
+/// are isolated (no edges) and map to `usize::MAX`, so a Welsh-Powell
+/// scan over the universe selects exactly the same candidates as one
+/// over a candidates-only graph.
+pub struct PrebuiltGraph<'a> {
+    pub graph: &'a DepGraph,
+    /// universe node index -> candidate index (`usize::MAX` = not a
+    /// candidate this step)
+    pub to_candidate: &'a [usize],
+}
+
 /// Per-sample view of one decoding step, over the *candidate* masked
 /// positions (within the active block).  Indices below are candidate
 /// indices 0..n; `positions[c]` maps back to absolute sequence positions.
@@ -174,6 +207,10 @@ pub struct StepCtx<'a> {
     pub progress: f32,
     /// fraction of the generation window still masked
     pub mask_ratio: f32,
+    /// incrementally-maintained dependency graph from the cache layer;
+    /// `None` makes graph-based strategies build their own from
+    /// `scores_norm` (the uncached path)
+    pub graph: Option<PrebuiltGraph<'a>>,
 }
 
 /// Result of decoding one sample.
@@ -203,11 +240,26 @@ pub fn decode_batch(
     prompts: &[Vec<i32>],
     cfg: &DecodeConfig,
 ) -> Result<Vec<DecodeOutcome>> {
+    decode_batch_cached(model, prompts, cfg, &CacheConfig::default(), None)
+}
+
+/// `decode_batch` through the compute-reuse subsystem: same contract,
+/// but the loop runs block-wise cached forwards, incremental dependency
+/// graphs, and (when a handle is given) the cross-request prefix cache.
+/// With a deterministic model and `cache.epsilon == 0` the output is
+/// token-for-token identical to `decode_batch`.
+pub fn decode_batch_cached(
+    model: &dyn ForwardModel,
+    prompts: &[Vec<i32>],
+    cfg: &DecodeConfig,
+    cache: &CacheConfig,
+    prefix: Option<PrefixHandle>,
+) -> Result<Vec<DecodeOutcome>> {
     let b = model.batch();
     if prompts.is_empty() || prompts.len() > b {
         bail!("decode_batch: got {} prompts for batch {b}", prompts.len());
     }
-    let mut batch = SlotBatch::new(model, cfg)?;
+    let mut batch = SlotBatch::with_cache(model, cfg, cache, prefix)?;
     for (s, prompt) in prompts.iter().enumerate() {
         batch.admit(s as u64, prompt)?;
     }
@@ -344,6 +396,16 @@ mod tests {
         cfg.eos_id = m.true_token(10);
         let o = &decode_batch(&m, &prompts(1), &cfg).unwrap()[0];
         assert!(o.gen.iter().all(|&t| t != cfg.eos_id));
+    }
+
+    #[test]
+    fn parse_or_err_lists_valid_methods() {
+        assert_eq!(Method::parse_or_err("klass").unwrap(), Method::Klass);
+        let msg = format!("{:#}", Method::parse_or_err("bogus").unwrap_err());
+        assert!(msg.contains("bogus"));
+        for m in Method::all() {
+            assert!(msg.contains(m.name()), "error must list {}", m.name());
+        }
     }
 
     #[test]

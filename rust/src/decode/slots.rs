@@ -18,12 +18,26 @@
 //! slot participated in, and `commit_step` / `per_step_commits` are
 //! indexed in slot-local steps, exactly as the drain-style loop reported
 //! them.
+//!
+//! With a [`CacheConfig`] attached (see [`SlotBatch::with_cache`]) the
+//! loop runs through the compute-reuse subsystem: steady-state forwards
+//! recompute only the masked window (`cache::ForwardCache`), each slot's
+//! dependency graph is maintained incrementally over the active-block
+//! universe (`cache::IncrementalGraph`), and boards whose slots are all
+//! on step 0 with prefix-cache hits skip the forward pass entirely.
+//! Disabled (the default), the loop is byte-for-byte the seed path.
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::{make_strategy, DecodeConfig, DecodeOutcome, Method, StepCtx, Strategy};
+use super::{make_strategy, DecodeConfig, DecodeOutcome, Method, PrebuiltGraph, StepCtx, Strategy};
+use crate::cache::{
+    CacheConfig, CacheStats, FirstStepRows, ForwardCache, GraphStats, IncrementalGraph,
+    PrefixCache, PrefixHandle,
+};
 use crate::runtime::{ForwardModel, StepOutput};
-use crate::tensor::{argmax, entropy, kl_div, softmax_inplace};
+use crate::tensor::{argmax, entropy, kl_div, softmax_inplace, Tensor};
 
 /// Per-slot decode state (one in-flight sample).
 struct SlotState {
@@ -39,6 +53,12 @@ struct SlotState {
     /// previous-step distributions over the generation window [g*v]
     /// (empty until the first step) — KLASS stability input
     prev_probs: Vec<f32>,
+    /// prefix-cache key of this slot's prompt (prefix cache attached)
+    prefix_key: Option<u64>,
+    /// prefetched first-step rows; consumed at slot-local step 0
+    prefill: Option<Arc<FirstStepRows>>,
+    /// incrementally-maintained dependency graph (DAPD + cache enabled)
+    inc_graph: Option<IncrementalGraph>,
 }
 
 /// A continuously-batched decode loop over one model's compiled batch.
@@ -51,14 +71,40 @@ pub struct SlotBatch<'m> {
     tokens: Vec<i32>,
     slots: Vec<Option<SlotState>>,
     occupied: usize,
+    /// compute-reuse policy (disabled = the seed decode path)
+    cache_cfg: CacheConfig,
+    /// frozen-snapshot forward cache (when enabled)
+    fwd_cache: Option<ForwardCache>,
+    /// cross-request prefix cache (when enabled and attached)
+    prefix: Option<PrefixHandle>,
+    /// graph-maintenance counters accumulated from finished slots
+    graph_stats: GraphStats,
+    /// steps answered entirely from the prefix cache
+    prefix_served_steps: u64,
 }
 
 impl<'m> SlotBatch<'m> {
-    /// Validate the config against the model and set up an empty board.
+    /// Validate the config against the model and set up an empty board
+    /// (compute reuse disabled: the seed decode path).
     pub fn new(model: &'m dyn ForwardModel, cfg: &DecodeConfig) -> Result<SlotBatch<'m>> {
+        SlotBatch::with_cache(model, cfg, &CacheConfig::default(), None)
+    }
+
+    /// Like [`SlotBatch::new`], decoding through the compute-reuse
+    /// subsystem per `cache`; `prefix` optionally attaches a shared
+    /// cross-request prefix cache (ignored unless `cache.enabled`).
+    pub fn with_cache(
+        model: &'m dyn ForwardModel,
+        cfg: &DecodeConfig,
+        cache: &CacheConfig,
+        prefix: Option<PrefixHandle>,
+    ) -> Result<SlotBatch<'m>> {
         let g = model.gen_len();
         if cfg.blocks == 0 || cfg.blocks > g {
             bail!("invalid block count {}", cfg.blocks);
+        }
+        if cache.enabled && cache.refresh_every == 0 {
+            bail!("cache refresh_every must be >= 1");
         }
         let max_steps = if cfg.max_steps == 0 {
             g + 4
@@ -73,6 +119,15 @@ impl<'m> SlotBatch<'m> {
             tokens: vec![0i32; model.batch() * model.seq_len()],
             slots: (0..model.batch()).map(|_| None).collect(),
             occupied: 0,
+            fwd_cache: if cache.enabled {
+                Some(ForwardCache::new(cache.refresh_every))
+            } else {
+                None
+            },
+            prefix: if cache.enabled { prefix } else { None },
+            cache_cfg: cache.clone(),
+            graph_stats: GraphStats::default(),
+            prefix_served_steps: 0,
         })
     }
 
@@ -93,8 +148,25 @@ impl<'m> SlotBatch<'m> {
     }
 
     /// Occupy a free slot with a fresh request.  Callable between any two
-    /// steps; the new sample starts at its own step 0.
+    /// steps; the new sample starts at its own step 0.  Consults the
+    /// attached prefix cache (counting hits/misses) when one is present.
     pub fn admit(&mut self, id: u64, prompt: &[i32]) -> Result<usize> {
+        let prefill = self
+            .prefix
+            .as_ref()
+            .and_then(|h| h.cache.get(PrefixCache::key(h.model_salt, prompt), prompt));
+        self.admit_prefetched(id, prompt, prefill)
+    }
+
+    /// `admit` with first-step rows the caller already fetched from the
+    /// prefix cache (the coordinator consults it at submit time so the
+    /// step path never takes the cache lock twice).
+    pub fn admit_prefetched(
+        &mut self,
+        id: u64,
+        prompt: &[i32],
+        prefill: Option<Arc<FirstStepRows>>,
+    ) -> Result<usize> {
         let l = self.model.seq_len();
         let p = self.model.prompt_len();
         let g = self.model.gen_len();
@@ -119,6 +191,10 @@ impl<'m> SlotBatch<'m> {
                 self.tokens[s2 * l..(s2 + 1) * l].copy_from_slice(&row);
             }
         }
+        let prefix_key = self
+            .prefix
+            .as_ref()
+            .map(|h| PrefixCache::key(h.model_salt, prompt));
         self.slots[slot] = Some(SlotState {
             id,
             steps: 0,
@@ -126,6 +202,9 @@ impl<'m> SlotBatch<'m> {
             commit_step: vec![usize::MAX; g],
             per_step: Vec::new(),
             prev_probs: Vec::new(),
+            prefix_key,
+            prefill: if self.prefix.is_some() { prefill } else { None },
+            inc_graph: None,
         });
         self.occupied += 1;
         Ok(slot)
@@ -144,8 +223,33 @@ impl<'m> SlotBatch<'m> {
         let v = self.model.vocab();
         let mask_id = self.model.mask_id();
         let block_len = g / self.cfg.blocks;
+        let cache_enabled = self.cache_cfg.enabled;
+        let cache_eps = self.cache_cfg.epsilon;
 
-        let out: StepOutput = self.model.forward(&self.tokens)?;
+        // ---- forward source: a board whose slots are all on step 0 with
+        // prefix-cache rows skips the forward entirely; otherwise run
+        // through the frozen-snapshot cache (windowed recompute) or, with
+        // the cache disabled, the plain full forward
+        let prefix_step = self.prefix.is_some()
+            && self
+                .slots
+                .iter()
+                .flatten()
+                .all(|st| st.steps == 0 && st.prefill.is_some());
+        let owned_out: StepOutput;
+        let out: &StepOutput = if prefix_step {
+            owned_out = self.assemble_prefix_board()?;
+            self.prefix_served_steps += 1;
+            &owned_out
+        } else if self.fwd_cache.is_some() {
+            self.fwd_cache
+                .as_mut()
+                .unwrap()
+                .forward(self.model, &self.tokens)?
+        } else {
+            owned_out = self.model.forward(&self.tokens)?;
+            &owned_out
+        };
 
         let mut finished = Vec::new();
         for s in 0..self.slots.len() {
@@ -158,6 +262,19 @@ impl<'m> SlotBatch<'m> {
                 let st = self.slots[s].as_mut().unwrap();
                 let step = st.steps;
                 st.steps += 1;
+
+                if step == 0 {
+                    // publish this slot's first-step rows for future
+                    // same-prompt requests (unless they came from the
+                    // cache in the first place)
+                    if !prefix_step && st.prefill.is_none() {
+                        if let (Some(h), Some(key)) = (self.prefix.as_ref(), st.prefix_key) {
+                            let prompt = &self.tokens[s * l..s * l + p];
+                            h.cache.insert(key, prompt, FirstStepRows::from_output(out, s));
+                        }
+                    }
+                    st.prefill = None;
+                }
 
                 // ---- candidate set: masked positions in the active block
                 let (blk_start, blk_end) = loop {
@@ -210,9 +327,10 @@ impl<'m> SlotBatch<'m> {
                     }
 
                     // ---- candidate-pair edge scores ---------------------
+                    let is_dapd = matches!(cfg.method, Method::DapdStaged | Method::DapdDirect);
                     let mut scores = vec![0.0f32; n * n];
                     let mut degrees = vec![0.0f32; n];
-                    if matches!(cfg.method, Method::DapdStaged | Method::DapdDirect) {
+                    if is_dapd {
                         if let Some(es) = &out.edge_scores {
                             for (ci, &i) in positions.iter().enumerate() {
                                 for (cj, &j) in positions.iter().enumerate() {
@@ -240,6 +358,39 @@ impl<'m> SlotBatch<'m> {
                     let masked_total = (p..p + g)
                         .filter(|&i| self.tokens[s * l + i] == mask_id)
                         .count();
+                    let progress = 1.0 - masked_total as f32 / g as f32;
+
+                    // ---- incremental dependency graph (cache layer) -----
+                    // Maintained per slot over the active-block universe
+                    // (stable until the block advances), so between steps
+                    // only edge flips are applied instead of a rebuild.
+                    let mut to_candidate: Vec<usize> = Vec::new();
+                    let graph = if cache_enabled && is_dapd {
+                        let u = blk_end - blk_start;
+                        let universe: Vec<usize> = (blk_start..blk_end).collect();
+                        to_candidate = vec![usize::MAX; u];
+                        // present = eligible candidates; committed
+                        // positions and (for DAPD-Direct) conf~1.0
+                        // candidates stay absent/isolated — this mirrors
+                        // the eligibility rule inside the Dapd strategy
+                        let direct = cfg.method == Method::DapdDirect;
+                        let mut present: Vec<(usize, usize)> = Vec::with_capacity(n);
+                        for (c, &pos) in positions.iter().enumerate() {
+                            let ui = pos - blk_start;
+                            to_candidate[ui] = c;
+                            if !(direct && cfg.params.dapd_pre_commits(conf[c])) {
+                                present.push((ui, c));
+                            }
+                        }
+                        let tau = cfg.params.tau.at(progress);
+                        let ig = st
+                            .inc_graph
+                            .get_or_insert_with(|| IncrementalGraph::new(cache_eps));
+                        Some(ig.update(&universe, &present, &scores, n, tau))
+                    } else {
+                        None
+                    };
+
                     let ctx = StepCtx {
                         positions: &positions,
                         conf: &conf,
@@ -248,8 +399,12 @@ impl<'m> SlotBatch<'m> {
                         kl_prev: &kl,
                         scores_norm: &scores,
                         degrees: &degrees,
-                        progress: 1.0 - masked_total as f32 / g as f32,
+                        progress,
                         mask_ratio: masked_total as f32 / g as f32,
+                        graph: graph.map(|dep| PrebuiltGraph {
+                            graph: dep,
+                            to_candidate: &to_candidate,
+                        }),
                     };
                     let mut selected = self.strategy.select(&ctx);
                     if selected.is_empty() {
@@ -291,6 +446,9 @@ impl<'m> SlotBatch<'m> {
             }
             if finish {
                 let st = self.slots[s].take().unwrap();
+                if let Some(ig) = &st.inc_graph {
+                    self.graph_stats.merge(&ig.stats);
+                }
                 self.occupied -= 1;
                 let row = &self.tokens[s * l..(s + 1) * l];
                 finished.push((
@@ -310,6 +468,91 @@ impl<'m> SlotBatch<'m> {
             }
         }
         Ok(finished)
+    }
+
+    /// Aggregated compute-reuse counters for this batch so far (forward
+    /// cache + per-slot incremental graphs + prefix-served steps).
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut stats = self.fwd_cache.as_ref().map(|c| c.stats).unwrap_or_default();
+        let mut gs = self.graph_stats;
+        for st in self.slots.iter().flatten() {
+            if let Some(ig) = &st.inc_graph {
+                gs.merge(&ig.stats);
+            }
+        }
+        stats.graph_full_rebuilds = gs.full_rebuilds;
+        stats.graph_incremental_updates = gs.incremental_updates;
+        stats.graph_pairs_toggled = gs.pairs_toggled;
+        stats.prefix_served_steps = self.prefix_served_steps;
+        // a prefix-served step computed nothing, but an uncached loop
+        // would have run a full board forward — count it in the total so
+        // compute_frac reflects the saving
+        let board = (self.model.batch() * self.model.seq_len()) as u64;
+        stats.positions_total += self.prefix_served_steps * board;
+        stats
+    }
+
+    /// Build a step-0 `StepOutput` for the whole board from the occupied
+    /// slots' prefix-cache rows (all slots verified on step 0 with rows
+    /// present by the caller).  Vacant rows stay zero: the per-slot loop
+    /// never reads them.
+    fn assemble_prefix_board(&self) -> Result<StepOutput> {
+        let b = self.model.batch();
+        let l = self.model.seq_len();
+        let v = self.model.vocab();
+        let occupied: Vec<(usize, &FirstStepRows)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(s, st)| {
+                let rows = st.as_ref()?.prefill.as_deref()?;
+                Some((s, rows))
+            })
+            .collect();
+        let with_attn = occupied.iter().all(|(_, r)| r.attn.is_some());
+        let with_scores = occupied.iter().all(|(_, r)| r.scores.is_some());
+        let with_degrees = occupied.iter().all(|(_, r)| r.degrees.is_some());
+        let mut logits = vec![0.0f32; b * l * v];
+        let mut attn = if with_attn {
+            Some(vec![0.0f32; b * l * l])
+        } else {
+            None
+        };
+        let mut scores = if with_scores {
+            Some(vec![0.0f32; b * l * l])
+        } else {
+            None
+        };
+        let mut degrees = if with_degrees {
+            Some(vec![0.0f32; b * l])
+        } else {
+            None
+        };
+        for &(s, rows) in &occupied {
+            if rows.seq_len != l || rows.vocab != v {
+                bail!("prefix-cache rows have mismatched shapes");
+            }
+            logits[s * l * v..(s + 1) * l * v].copy_from_slice(&rows.logits);
+            if let (Some(dst), Some(src)) = (attn.as_mut(), rows.attn.as_ref()) {
+                dst[s * l * l..(s + 1) * l * l].copy_from_slice(src);
+            }
+            if let (Some(dst), Some(src)) = (scores.as_mut(), rows.scores.as_ref()) {
+                dst[s * l * l..(s + 1) * l * l].copy_from_slice(src);
+            }
+            if let (Some(dst), Some(src)) = (degrees.as_mut(), rows.degrees.as_ref()) {
+                dst[s * l..(s + 1) * l].copy_from_slice(src);
+            }
+        }
+        Ok(StepOutput {
+            batch: b,
+            seq_len: l,
+            vocab: v,
+            logits: Tensor::new(logits, &[b, l, v]),
+            attn_avg: attn.map(|d| Tensor::new(d, &[b, l, l])),
+            edge_scores: scores.map(|d| Tensor::new(d, &[b, l, l])),
+            degrees: degrees.map(|d| Tensor::new(d, &[b, l])),
+            attn_layers: None,
+        })
     }
 }
 
@@ -418,5 +661,85 @@ mod tests {
         let cfg = DecodeConfig::new(Method::Original);
         let mut sb = SlotBatch::new(&m, &cfg).unwrap();
         assert!(sb.step().is_err());
+    }
+
+    #[test]
+    fn cached_batch_matches_uncached() {
+        let m = mock();
+        for method in [Method::DapdStaged, Method::DapdDirect, Method::FastDllm] {
+            let cfg = DecodeConfig::new(method);
+            let want = decode_batch(&m, &[prompt(0), prompt(1)], &cfg).unwrap();
+            for refresh in [1usize, 4] {
+                let cache = CacheConfig {
+                    enabled: true,
+                    refresh_every: refresh,
+                    epsilon: 0.0,
+                    prefix_lru_cap: 0,
+                };
+                let mut sb = SlotBatch::with_cache(&m, &cfg, &cache, None).unwrap();
+                sb.admit(0, &prompt(0)).unwrap();
+                sb.admit(1, &prompt(1)).unwrap();
+                let mut got: Vec<Option<DecodeOutcome>> = vec![None, None];
+                while sb.occupied() > 0 {
+                    for (id, o) in sb.step().unwrap() {
+                        got[id as usize] = Some(o);
+                    }
+                }
+                let stats = sb.cache_stats();
+                if refresh > 1 {
+                    assert!(stats.window_forwards > 0, "{method:?} never spliced");
+                    assert!(stats.compute_frac() < 1.0);
+                }
+                if matches!(method, Method::DapdStaged | Method::DapdDirect) {
+                    assert!(
+                        stats.graph_incremental_updates > 0,
+                        "{method:?} never updated its graph incrementally"
+                    );
+                }
+                for (w, o) in want.iter().zip(&got) {
+                    let o = o.as_ref().unwrap();
+                    assert_eq!(w.gen, o.gen, "{method:?} refresh {refresh}");
+                    assert_eq!(w.steps, o.steps);
+                    assert_eq!(w.per_step_commits, o.per_step_commits);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_cache_skips_first_forward_on_repeat() {
+        let m = MockModel::new(1, 16, 4, 12);
+        let cfg = DecodeConfig::new(Method::FastDllm);
+        let want = decode_batch(&m, &[vec![5; 4]], &cfg).unwrap();
+        let pc = Arc::new(PrefixCache::new(4));
+        let handle = PrefixHandle::new(Arc::clone(&pc), "mock-1x16");
+        let cache = CacheConfig {
+            enabled: true,
+            refresh_every: 4,
+            epsilon: 0.0,
+            prefix_lru_cap: 4,
+        };
+        for round in 0..3u64 {
+            let mut sb = SlotBatch::with_cache(&m, &cfg, &cache, Some(handle.clone())).unwrap();
+            sb.admit(round, &[5; 4]).unwrap();
+            let mut done = Vec::new();
+            while sb.occupied() > 0 {
+                done.extend(sb.step().unwrap());
+            }
+            assert_eq!(done.len(), 1);
+            assert_eq!(done[0].1.gen, want[0].gen, "round {round}");
+            assert_eq!(done[0].1.steps, want[0].steps, "round {round} NFE");
+            let stats = sb.cache_stats();
+            if round == 0 {
+                assert_eq!(stats.prefix_served_steps, 0);
+            } else {
+                assert_eq!(
+                    stats.prefix_served_steps, 1,
+                    "round {round} must serve step 0 from the prefix cache"
+                );
+            }
+        }
+        assert_eq!(pc.misses(), 1, "only the first request may miss");
+        assert_eq!(pc.hits(), 2);
     }
 }

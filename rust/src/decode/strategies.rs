@@ -124,50 +124,81 @@ impl Strategy for Dapd {
         let mut eligible: Vec<bool> = vec![true; n];
         if self.direct {
             for c in 0..n {
-                if ctx.conf[c] >= 1.0 - self.params.conf_one_eps {
+                if self.params.dapd_pre_commits(ctx.conf[c]) {
                     pre_committed.push(c);
                     eligible[c] = false;
                 }
             }
         }
 
-        // dependency graph over eligible candidates at this step's tau
-        let graph = DepGraph::from_scores(
-            n,
-            |i, j| {
-                if eligible[i] && eligible[j] {
-                    ctx.scores_norm[i * n + j]
-                } else {
-                    // pre-committed nodes leave the graph entirely
-                    f32::NEG_INFINITY
-                }
-            },
-            tau,
-        );
-
         // confidence-weighted degree ordering (Sec. 4.3 "Practical
         // Implementation") by default; other rules exist for the
         // ordering ablation.  Ineligible nodes sink to the bottom and
         // are skipped below.
         use super::DapdOrdering as O;
-        let priority: Vec<f32> = (0..n)
-            .map(|c| {
-                if !eligible[c] {
-                    return f32::NEG_INFINITY;
-                }
-                match self.params.ordering {
-                    O::ConfDegree => ctx.degrees[c] * ctx.conf[c],
-                    O::Degree => ctx.degrees[c],
-                    O::Conf => ctx.conf[c],
-                    O::Index => -(c as f32),
-                }
-            })
-            .collect();
-        let mut selected: Vec<usize> = graph
-            .welsh_powell_set(&priority)
-            .into_iter()
-            .filter(|&c| eligible[c])
-            .collect();
+        let cand_priority = |c: usize| -> f32 {
+            if !eligible[c] {
+                return f32::NEG_INFINITY;
+            }
+            match self.params.ordering {
+                O::ConfDegree => ctx.degrees[c] * ctx.conf[c],
+                O::Degree => ctx.degrees[c],
+                O::Conf => ctx.conf[c],
+                O::Index => -(c as f32),
+            }
+        };
+
+        let mut selected: Vec<usize> = if let Some(pg) = &ctx.graph {
+            // cache layer handed us an incrementally-maintained graph
+            // over the block universe; non-candidates are isolated and
+            // lowest-priority, so the Welsh-Powell scan selects exactly
+            // what a candidates-only graph would (see PrebuiltGraph)
+            let u = pg.graph.len();
+            debug_assert_eq!(pg.to_candidate.len(), u);
+            let priority: Vec<f32> = (0..u)
+                .map(|ui| {
+                    let c = pg.to_candidate[ui];
+                    if c == usize::MAX {
+                        f32::NEG_INFINITY
+                    } else {
+                        cand_priority(c)
+                    }
+                })
+                .collect();
+            let picks = pg.graph.welsh_powell_set(&priority);
+            picks
+                .into_iter()
+                .filter_map(|ui| {
+                    let c = pg.to_candidate[ui];
+                    if c != usize::MAX && eligible[c] {
+                        Some(c)
+                    } else {
+                        None
+                    }
+                })
+                .collect()
+        } else {
+            // uncached path: dependency graph over eligible candidates
+            // at this step's tau, rebuilt from scratch
+            let graph = DepGraph::from_scores(
+                n,
+                |i, j| {
+                    if eligible[i] && eligible[j] {
+                        ctx.scores_norm[i * n + j]
+                    } else {
+                        // pre-committed nodes leave the graph entirely
+                        f32::NEG_INFINITY
+                    }
+                },
+                tau,
+            );
+            let priority: Vec<f32> = (0..n).map(cand_priority).collect();
+            graph
+                .welsh_powell_set(&priority)
+                .into_iter()
+                .filter(|&c| eligible[c])
+                .collect()
+        };
 
         // Staged confidence shortcut in the sparse regime.
         if !self.direct && ctx.mask_ratio < self.params.stage_ratio {
@@ -237,6 +268,7 @@ mod tests {
                 degrees: &self.degrees,
                 progress: self.progress,
                 mask_ratio: self.mask_ratio,
+                graph: None,
             }
         }
     }
@@ -351,6 +383,29 @@ mod tests {
         let mut sel = s.select(&b.ctx());
         sel.sort_unstable();
         assert_eq!(sel, vec![0, 1]);
+    }
+
+    #[test]
+    fn prebuilt_universe_graph_matches_candidate_graph() {
+        use super::super::PrebuiltGraph;
+        let s = Dapd {
+            params: params(),
+            direct: false,
+        };
+        let b = CtxBuf::new(vec![0.9, 0.8, 0.7]).with_edge(0, 1, 0.9);
+        let plain = s.select(&b.ctx());
+        // same candidates embedded at universe nodes 0, 2, 4 of a 6-node
+        // universe; non-candidates are isolated
+        let mut g = DepGraph::new(6);
+        g.add_edge(0, 2); // the (c0, c1) edge, 0.9 > tau
+        let to_candidate = vec![0usize, usize::MAX, 1, usize::MAX, 2, usize::MAX];
+        let mut ctx = b.ctx();
+        ctx.graph = Some(PrebuiltGraph {
+            graph: &g,
+            to_candidate: &to_candidate,
+        });
+        let via_universe = s.select(&ctx);
+        assert_eq!(plain, via_universe, "universe scan must match candidate scan");
     }
 
     #[test]

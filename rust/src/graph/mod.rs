@@ -77,6 +77,23 @@ impl DepGraph {
         }
     }
 
+    /// Remove an edge (no-op when absent); inverse of [`DepGraph::add_edge`],
+    /// used by the cache layer's incremental maintenance.
+    pub fn remove_edge(&mut self, i: usize, j: usize) {
+        if i == j {
+            return;
+        }
+        let (wi, bi) = (j / 64, j % 64);
+        let (wj, bj) = (i / 64, i % 64);
+        let before = self.adj[i * self.words + wi] >> bi & 1;
+        self.adj[i * self.words + wi] &= !(1u64 << bi);
+        self.adj[j * self.words + wj] &= !(1u64 << bj);
+        if before == 1 {
+            self.degree[i] -= 1;
+            self.degree[j] -= 1;
+        }
+    }
+
     pub fn has_edge(&self, i: usize, j: usize) -> bool {
         self.adj[i * self.words + j / 64] >> (j % 64) & 1 == 1
     }
@@ -249,6 +266,23 @@ mod tests {
         assert!(!g.has_edge(0, 3));
         assert_eq!(g.degree(1), 2);
         assert_eq!(g.edge_count(), 2);
+    }
+
+    #[test]
+    fn remove_edge_inverts_add() {
+        let mut g = DepGraph::new(70); // spans two bitset words
+        g.add_edge(0, 1);
+        g.add_edge(1, 66);
+        g.remove_edge(1, 66);
+        g.remove_edge(1, 66); // idempotent
+        g.remove_edge(2, 3); // absent: no-op
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(1, 66) && !g.has_edge(66, 1));
+        assert_eq!(g.degree(1), 1);
+        assert_eq!(g.degree(66), 0);
+        assert_eq!(g.edge_count(), 1);
+        g.remove_edge(0, 1);
+        assert_eq!(g.edge_count(), 0);
     }
 
     #[test]

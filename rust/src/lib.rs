@@ -12,6 +12,9 @@
 //! * [`runtime`]     — artifact registry + PJRT engine + mock model +
 //!                     per-worker model replication (`ModelPool`)
 //! * [`graph`]       — attention-induced dependency graph, Welsh-Powell
+//! * [`cache`]       — compute reuse: block-wise cached forwards,
+//!                     incremental dependency graphs, cross-request
+//!                     prefix cache
 //! * [`decode`]      — all decoding strategies + the slot-level
 //!                     continuously-batching decode loop
 //! * [`workload`]    — eval sets, task scorers, arrival processes
@@ -20,6 +23,7 @@
 //! * [`coordinator`] — sharded continuous-batching worker pool, metrics
 //! * [`server`]      — JSON-over-TCP serving front end
 
+pub mod cache;
 pub mod config;
 pub mod coordinator;
 pub mod decode;

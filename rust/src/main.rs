@@ -7,6 +7,8 @@
 //!   mrf     [--paths N] [--layers last-2]      Sec 3.2 validation
 //!   serve   --model M [--port P] [--method X] [--batch B] [--workers N]
 //!           [--mock]   (--mock serves the synthetic model, no artifacts)
+//!           [--cache] [--refresh-every K] [--cache-epsilon E]
+//!           [--prefix-lru-cap N]   (compute-reuse subsystem)
 //!   client  --addr HOST:PORT --task T [--n N] [--method X]
 //!
 //! Common flags: --artifacts DIR (default ./artifacts), --batch B,
@@ -15,7 +17,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use dapd::coordinator::{Coordinator, PoolOptions};
 use dapd::decode::{DecodeConfig, Method, MethodParams};
@@ -109,8 +111,7 @@ fn cmd_decode(args: &Args) -> Result<()> {
     let engine = Engine::load(&artifacts_dir(args))?;
     let model_name = args.str_or("model", "sim-llada");
     let task = args.str_or("task", "struct");
-    let method = Method::parse(&args.str_or("method", "dapd-staged"))
-        .ok_or_else(|| anyhow!("unknown method"))?;
+    let method = Method::parse_or_err(&args.str_or("method", "dapd-staged"))?;
     let batch = args.usize_or("batch", 8);
     let gen_len = args.usize_or("gen-len", engine.meta.gen_len);
     let n = args.usize_or("n", 30);
@@ -159,7 +160,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
     for task in &tasks {
         let set = EvalSet::load(&engine.meta, task)?.take(n);
         for mname in &methods {
-            let method = Method::parse(mname).ok_or_else(|| anyhow!("unknown method {mname}"))?;
+            let method = Method::parse_or_err(mname)?;
             let cfg = decode_config(args, method);
             let r = run_eval(&model, &set, &cfg, mname)?;
             t.row(vec![
@@ -247,6 +248,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: settings.workers,
         batch_wait: Duration::from_millis(settings.batch_wait_ms),
         queue_cap: settings.queue_cap,
+        cache: settings.cache_config(),
     };
     let (coord, _handles) = Coordinator::start_pool(&pool, &opts)?;
     let reporter = coord.clone();

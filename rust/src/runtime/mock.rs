@@ -58,6 +58,84 @@ impl MockModel {
         }
         (self.base_conf + self.conf_gain * revealed as f32).min(0.995)
     }
+
+    /// Banded attention weight a_ij as a pure function of (i, j): row i
+    /// attends uniformly over its band.  Both the full and the windowed
+    /// forward derive attention (and edge scores) from this, so windowed
+    /// rows are bit-identical to full-forward rows.
+    fn attn_weight(&self, i: usize, j: usize) -> f32 {
+        let lo = i.saturating_sub(self.band);
+        let hi = (i + self.band).min(self.seq_len - 1);
+        if j < lo || j > hi {
+            return 0.0;
+        }
+        1.0 / (hi - lo + 1) as f32
+    }
+
+    /// Forward pass over a subset of sequence positions (every batch
+    /// row): the shared body of `forward` (all positions) and
+    /// `forward_window`.  Non-selected rows stay zero.
+    fn forward_rows(&self, tokens: &[i32], rows: &[usize]) -> Result<StepOutput> {
+        let (b, l, v) = (self.batch, self.seq_len, self.vocab);
+        if tokens.len() != b * l {
+            bail!("mock forward: token buffer size mismatch");
+        }
+        let mut logits = vec![0.0f32; b * l * v];
+        let mut attn = vec![0.0f32; b * l * l];
+        let mut scores = vec![0.0f32; b * l * l];
+        let mut degrees = vec![0.0f32; b * l];
+
+        for bi in 0..b {
+            let row = &tokens[bi * l..(bi + 1) * l];
+            for &i in rows {
+                // --- logits: peaked at true token, context-driven conf --
+                let base = (bi * l + i) * v;
+                let (target, conf) = if row[i] == self.mask_id {
+                    (self.true_token(i), self.confidence(row, i))
+                } else {
+                    (row[i], 0.999) // committed tokens reproduce themselves
+                };
+                // logits realizing: softmax = conf at target, uniform rest
+                let rest = ((1.0 - conf) / (v as f32 - 1.0)).max(1e-7);
+                let lo = rest.ln();
+                for t in 0..v {
+                    logits[base + t] = lo;
+                }
+                logits[base + target as usize] = conf.max(1e-7).ln();
+
+                // --- attention row: banded, row-normalized --------------
+                let abase = (bi * l + i) * l;
+                for j in 0..l {
+                    let w = self.attn_weight(i, j);
+                    if w > 0.0 {
+                        attn[abase + j] = w;
+                    }
+                }
+
+                // --- edge-score row: symmetrized, masked pairs ----------
+                if row[i] == self.mask_id {
+                    for j in 0..l {
+                        if j != i && row[j] == self.mask_id {
+                            let s = 0.5 * (self.attn_weight(i, j) + self.attn_weight(j, i));
+                            scores[abase + j] = s;
+                            degrees[bi * l + i] += s;
+                        }
+                    }
+                }
+            }
+        }
+
+        Ok(StepOutput {
+            batch: b,
+            seq_len: l,
+            vocab: v,
+            logits: Tensor::new(logits, &[b, l, v]),
+            attn_avg: Some(Tensor::new(attn, &[b, l, l])),
+            edge_scores: Some(Tensor::new(scores, &[b, l, l])),
+            degrees: Some(Tensor::new(degrees, &[b, l])),
+            attn_layers: None,
+        })
+    }
 }
 
 impl ForwardModel for MockModel {
@@ -81,72 +159,15 @@ impl ForwardModel for MockModel {
     }
 
     fn forward(&self, tokens: &[i32]) -> Result<StepOutput> {
-        let (b, l, v) = (self.batch, self.seq_len, self.vocab);
-        if tokens.len() != b * l {
-            bail!("mock forward: token buffer size mismatch");
-        }
-        let mut logits = vec![0.0f32; b * l * v];
-        let mut attn = vec![0.0f32; b * l * l];
-        let mut scores = vec![0.0f32; b * l * l];
-        let mut degrees = vec![0.0f32; b * l];
+        let rows: Vec<usize> = (0..self.seq_len).collect();
+        self.forward_rows(tokens, &rows)
+    }
 
-        for bi in 0..b {
-            let row = &tokens[bi * l..(bi + 1) * l];
-            // --- logits: peaked at true token with context-driven conf ----
-            for i in 0..l {
-                let base = (bi * l + i) * v;
-                let (target, conf) = if row[i] == self.mask_id {
-                    (self.true_token(i), self.confidence(row, i))
-                } else {
-                    (row[i], 0.999) // committed tokens reproduce themselves
-                };
-                // logits realizing: softmax = conf at target, uniform rest
-                let rest = ((1.0 - conf) / (v as f32 - 1.0)).max(1e-7);
-                let lo = rest.ln();
-                for t in 0..v {
-                    logits[base + t] = lo;
-                }
-                logits[base + target as usize] = conf.max(1e-7).ln();
-            }
-            // --- attention: banded, row-normalized -----------------------
-            for i in 0..l {
-                let base = (bi * l + i) * l;
-                let lo = i.saturating_sub(self.band);
-                let hi = (i + self.band).min(l - 1);
-                let w = 1.0 / (hi - lo + 1) as f32;
-                for j in lo..=hi {
-                    attn[base + j] = w;
-                }
-            }
-            // --- edge scores: symmetrized, masked-pairs, zero diag -------
-            for i in 0..l {
-                for j in 0..l {
-                    if i == j {
-                        continue;
-                    }
-                    let masked_pair =
-                        row[i] == self.mask_id && row[j] == self.mask_id;
-                    if masked_pair {
-                        let a_ij = attn[(bi * l + i) * l + j];
-                        let a_ji = attn[(bi * l + j) * l + i];
-                        let s = 0.5 * (a_ij + a_ji);
-                        scores[(bi * l + i) * l + j] = s;
-                        degrees[bi * l + i] += s;
-                    }
-                }
-            }
-        }
-
-        Ok(StepOutput {
-            batch: b,
-            seq_len: l,
-            vocab: v,
-            logits: Tensor::new(logits, &[b, l, v]),
-            attn_avg: Some(Tensor::new(attn, &[b, l, l])),
-            edge_scores: Some(Tensor::new(scores, &[b, l, l])),
-            degrees: Some(Tensor::new(degrees, &[b, l])),
-            attn_layers: None,
-        })
+    /// Genuinely cheaper windowed forward: only the requested rows are
+    /// computed, which is what makes the cache layer's speedup real on
+    /// the mock backend.
+    fn forward_window(&self, tokens: &[i32], window: &[usize]) -> Result<StepOutput> {
+        self.forward_rows(tokens, window)
     }
 }
 
@@ -195,6 +216,42 @@ mod tests {
         }
         // adjacent masked pair still coupled
         assert!(s.at3(0, 5, 6) > 0.0);
+    }
+
+    #[test]
+    fn forward_window_rows_match_full_forward() {
+        let m = MockModel::new(2, 12, 4, 10);
+        let mut toks = vec![1i32; 24];
+        for row in 0..2 {
+            for i in 0..4 {
+                toks[row * 12 + i] = 3 + row as i32;
+            }
+            toks[row * 12 + 6] = 7; // one committed generation position
+        }
+        let full = m.forward(&toks).unwrap();
+        let window: Vec<usize> = (0..12).filter(|&i| toks[i] == m.mask_id).collect();
+        let win = m.forward_window(&toks, &window).unwrap();
+        for bi in 0..2 {
+            for &i in &window {
+                assert_eq!(win.logits.slice3(bi, i), full.logits.slice3(bi, i));
+                for j in 0..12 {
+                    assert_eq!(
+                        win.attn_avg.as_ref().unwrap().at3(bi, i, j),
+                        full.attn_avg.as_ref().unwrap().at3(bi, i, j)
+                    );
+                    assert_eq!(
+                        win.edge_scores.as_ref().unwrap().at3(bi, i, j),
+                        full.edge_scores.as_ref().unwrap().at3(bi, i, j)
+                    );
+                }
+                assert_eq!(
+                    win.degrees.as_ref().unwrap().at2(bi, i),
+                    full.degrees.as_ref().unwrap().at2(bi, i)
+                );
+            }
+            // a non-window row stays zero in the windowed output
+            assert!(win.logits.slice3(bi, 6).iter().all(|&x| x == 0.0));
+        }
     }
 
     #[test]

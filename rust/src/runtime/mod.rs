@@ -50,4 +50,16 @@ pub trait ForwardModel {
     fn mask_id(&self) -> i32;
     /// tokens: row-major [batch * seq_len].
     fn forward(&self, tokens: &[i32]) -> Result<StepOutput>;
+
+    /// Windowed forward: recompute fresh outputs only for the sequence
+    /// positions in `window` (sorted ascending; applied to every batch
+    /// row).  Rows outside the window may be zero or stale in the
+    /// returned `StepOutput` — the cache layer (`cache::ForwardCache`)
+    /// splices the window rows into its frozen snapshot and never reads
+    /// the rest.  The default falls back to a full forward, so
+    /// implementing this is purely an optimization.
+    fn forward_window(&self, tokens: &[i32], window: &[usize]) -> Result<StepOutput> {
+        let _ = window;
+        self.forward(tokens)
+    }
 }

@@ -124,6 +124,9 @@ impl ForwardModel for PooledXla {
     fn forward(&self, tokens: &[i32]) -> Result<StepOutput> {
         self.model.forward(tokens)
     }
+    fn forward_window(&self, tokens: &[i32], window: &[usize]) -> Result<StepOutput> {
+        self.model.forward_window(tokens, window)
+    }
 }
 
 #[cfg(test)]

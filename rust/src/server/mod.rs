@@ -125,6 +125,9 @@ fn handle_request(line: &str, coord: &Coordinator, default_cfg: &DecodeConfig) -
                     .collect(),
             ),
         );
+        if let Some(pc) = coord.prefix_cache() {
+            obj.set("prefix_cache", pc.to_json());
+        }
         return Ok(obj);
     }
     let prompt: Vec<i32> = req
@@ -136,7 +139,8 @@ fn handle_request(line: &str, coord: &Coordinator, default_cfg: &DecodeConfig) -
         .collect();
     let mut cfg = default_cfg.clone();
     if let Some(m) = req.get("method").as_str() {
-        cfg.method = Method::parse(m).ok_or_else(|| anyhow!("unknown method '{m}'"))?;
+        // lists the valid method names on a typo
+        cfg.method = Method::parse_or_err(m)?;
     }
     if let Some(b) = req.get("blocks").as_usize() {
         cfg.blocks = b;
@@ -229,8 +233,14 @@ mod tests {
             let j = Json::parse(line.trim()).unwrap();
             assert_eq!(j.get("ok").as_bool(), Some(false));
         }
-        // wrong method name errors cleanly
-        assert!(client.request(&[5; 4], Some("bogus")).is_err());
+        // wrong method name errors cleanly, listing the valid names
+        let err = client.request(&[5; 4], Some("bogus")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("bogus"), "error should echo the input: {msg}");
+        assert!(
+            msg.contains("dapd-staged") && msg.contains("fast-dllm"),
+            "error should list valid methods: {msg}"
+        );
 
         // metrics request reports the served traffic, per worker
         {

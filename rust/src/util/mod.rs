@@ -10,6 +10,32 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// Fold `bytes` into an FNV-1a 64-bit hash state.  The one hash used for
+/// grouping/cache keys across the crate (coordinator `group_key`, the
+/// prefix cache) — a single definition so key spaces cannot silently
+/// diverge.
+pub fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{fnv1a, FNV_OFFSET};
+
+    #[test]
+    fn fnv1a_matches_reference_vector() {
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c
+        assert_eq!(fnv1a(FNV_OFFSET, b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv1a(FNV_OFFSET, b"ab"), fnv1a(FNV_OFFSET, b"ba"));
+    }
+}
+
 /// Tiny leveled logger: `log!(info, "...")`-style macros are overkill for
 /// this binary; a verbosity-gated printer is enough.
 pub mod logging {

@@ -1,0 +1,187 @@
+//! Cache-correctness integration tests (artifact-free):
+//!
+//! * `refresh_every = 1` (always refresh) reproduces uncached decode
+//!   token-for-token for every method — the subsystem's identity
+//!   contract from the issue;
+//! * deeper refresh periods stay identical on the deterministic mock
+//!   (the loop never reads a frozen row);
+//! * the `CachedModel` trait wrapper is transparent;
+//! * the prefix cache round-trips repeat prompts without changing
+//!   tokens or NFE;
+//! * a cache-enabled coordinator pool matches an uncached pool and
+//!   surfaces reuse in its metrics.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dapd::cache::{CacheConfig, CachedModel, PrefixCache, PrefixHandle};
+use dapd::coordinator::{Coordinator, PoolOptions};
+use dapd::decode::{
+    decode_batch, decode_batch_cached, DecodeConfig, DecodeOutcome, Method, SlotBatch,
+};
+use dapd::runtime::{MockModel, ModelPool};
+use dapd::util::rng::Pcg;
+
+fn mock() -> MockModel {
+    MockModel::new(2, 32, 8, 24)
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    let mut rng = Pcg::new(41);
+    (0..n)
+        .map(|_| (0..8).map(|_| (2 + rng.below(22)) as i32).collect())
+        .collect()
+}
+
+fn cache(refresh_every: usize) -> CacheConfig {
+    CacheConfig {
+        enabled: true,
+        refresh_every,
+        epsilon: 0.0,
+        prefix_lru_cap: 0,
+    }
+}
+
+fn assert_same(want: &[DecodeOutcome], got: &[DecodeOutcome], ctx: &str) {
+    assert_eq!(want.len(), got.len());
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.gen, g.gen, "{ctx}: sample {i} tokens");
+        assert_eq!(w.steps, g.steps, "{ctx}: sample {i} NFE");
+        assert_eq!(w.commit_step, g.commit_step, "{ctx}: sample {i} commit steps");
+        assert_eq!(
+            w.per_step_commits, g.per_step_commits,
+            "{ctx}: sample {i} trajectory"
+        );
+    }
+}
+
+#[test]
+fn refresh_every_one_reproduces_uncached_decode_per_method() {
+    let m = mock();
+    let ps = prompts(2);
+    for method in Method::all() {
+        for blocks in [1usize, 4] {
+            let mut cfg = DecodeConfig::new(method);
+            cfg.blocks = blocks;
+            let want = decode_batch(&m, &ps, &cfg).unwrap();
+            let got = decode_batch_cached(&m, &ps, &cfg, &cache(1), None).unwrap();
+            assert_same(
+                &want,
+                &got,
+                &format!("{} blocks={blocks} refresh=1", method.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn deeper_refresh_periods_stay_identical_on_the_mock() {
+    let m = mock();
+    let ps = prompts(2);
+    for method in Method::all() {
+        let cfg = DecodeConfig::new(method);
+        let want = decode_batch(&m, &ps, &cfg).unwrap();
+        for refresh_every in [2usize, 4, 7] {
+            let got = decode_batch_cached(&m, &ps, &cfg, &cache(refresh_every), None).unwrap();
+            assert_same(
+                &want,
+                &got,
+                &format!("{} refresh={refresh_every}", method.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn cached_model_wrapper_is_transparent() {
+    let cfg = DecodeConfig::new(Method::DapdStaged);
+    let want = decode_batch(&mock(), &prompts(2), &cfg).unwrap();
+    for refresh_every in [1usize, 4] {
+        let cm = CachedModel::new(mock(), &cache(refresh_every));
+        let got = decode_batch(&cm, &prompts(2), &cfg).unwrap();
+        assert_same(&want, &got, &format!("wrapper refresh={refresh_every}"));
+        if refresh_every > 1 {
+            let stats = cm.stats();
+            assert!(stats.window_forwards > 0, "wrapper never reused compute");
+            assert!(stats.compute_frac() < 1.0);
+        }
+    }
+}
+
+#[test]
+fn prefix_cache_round_trips_repeat_prompts() {
+    let m = MockModel::new(1, 24, 8, 16);
+    let cfg = DecodeConfig::new(Method::DapdDirect);
+    let prompt = vec![6i32; 8];
+    let want = decode_batch(&m, &[prompt.clone()], &cfg).unwrap();
+    let pc = Arc::new(PrefixCache::new(4));
+    let handle = PrefixHandle::new(Arc::clone(&pc), "cache-identity-test");
+    let cc = CacheConfig {
+        enabled: true,
+        refresh_every: 4,
+        epsilon: 0.0,
+        prefix_lru_cap: 4,
+    };
+    for round in 0..3u64 {
+        let mut sb = SlotBatch::with_cache(&m, &cfg, &cc, Some(handle.clone())).unwrap();
+        sb.admit(round, &prompt).unwrap();
+        let mut done = Vec::new();
+        while sb.occupied() > 0 {
+            done.extend(sb.step().unwrap());
+        }
+        assert_eq!(done.len(), 1);
+        assert_same(
+            &want,
+            &[done.remove(0).1],
+            &format!("prefix round {round}"),
+        );
+        let stats = sb.cache_stats();
+        assert_eq!(stats.prefix_served_steps, u64::from(round > 0));
+    }
+    assert_eq!(pc.misses(), 1);
+    assert_eq!(pc.hits(), 2);
+    assert_eq!(pc.len(), 1);
+}
+
+#[test]
+fn cached_pool_matches_uncached_pool_token_for_token() {
+    let ps = prompts(8);
+    let cfg = DecodeConfig::new(Method::DapdStaged);
+
+    let run = |cache: CacheConfig| -> Vec<Vec<i32>> {
+        let pool = ModelPool::mock(mock());
+        let opts = PoolOptions {
+            workers: 2,
+            batch_wait: Duration::from_millis(2),
+            queue_cap: 64,
+            cache,
+        };
+        let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
+        let rxs: Vec<_> = ps
+            .iter()
+            .map(|p| coord.submit(p.clone(), cfg.clone()).unwrap())
+            .collect();
+        let gens: Vec<Vec<i32>> = rxs.into_iter().map(|rx| rx.recv().unwrap().gen).collect();
+        coord.shutdown();
+        handles.join();
+        if opts.cache.enabled {
+            let reused = coord.metrics.cache_window_forwards.load(Ordering::Relaxed)
+                + coord.metrics.cache_prefix_steps.load(Ordering::Relaxed);
+            assert!(reused > 0, "cache-enabled pool recorded no reuse");
+            assert!(coord.prefix_cache().is_some());
+        } else {
+            assert!(coord.prefix_cache().is_none());
+        }
+        gens
+    };
+
+    let plain = run(CacheConfig::default());
+    let cached = run(CacheConfig {
+        enabled: true,
+        refresh_every: 4,
+        epsilon: 0.0,
+        prefix_lru_cap: 16,
+    });
+    assert_eq!(plain, cached, "cache changed served generations");
+}

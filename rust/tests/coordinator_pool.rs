@@ -26,6 +26,7 @@ fn opts(workers: usize, queue_cap: usize) -> PoolOptions {
         workers,
         batch_wait: Duration::from_millis(2),
         queue_cap,
+        ..PoolOptions::default()
     }
 }
 

@@ -1,7 +1,10 @@
 //! Property tests: decode-loop invariants over randomized mock models
 //! and configurations (artifact-free; complements rust/tests/integration.rs).
 
-use dapd::decode::{decode_batch, DapdOrdering, DecodeConfig, Method, MethodParams};
+use dapd::cache::CacheConfig;
+use dapd::decode::{
+    decode_batch, decode_batch_cached, DapdOrdering, DecodeConfig, Method, MethodParams,
+};
 use dapd::graph::TauSchedule;
 use dapd::runtime::MockModel;
 use dapd::util::prop;
@@ -152,6 +155,33 @@ fn deterministic_across_runs() {
             assert_eq!(x.gen, y.gen);
             assert_eq!(x.steps, y.steps);
             assert_eq!(x.per_step_commits, y.per_step_commits);
+        }
+    });
+}
+
+#[test]
+fn cached_decode_is_token_identical_to_uncached() {
+    // the compute-reuse subsystem must be invisible: random models,
+    // methods, block counts and refresh periods, exact epsilon
+    prop::check("cache-identity", 40, |rng: &mut Pcg| {
+        let m = random_mock(rng);
+        let mut cfg = DecodeConfig::new(random_method(rng));
+        cfg.params = random_params(rng);
+        let g = m.seq_len - m.prompt_len;
+        cfg.blocks = [1, 2, 4][rng.below(3)].min(g);
+        let prompts = prompts_for(&m, rng);
+        let want = decode_batch(&m, &prompts, &cfg).unwrap();
+        let cache = CacheConfig {
+            enabled: true,
+            refresh_every: rng.range(1, 7),
+            epsilon: 0.0,
+            prefix_lru_cap: 0,
+        };
+        let got = decode_batch_cached(&m, &prompts, &cfg, &cache, None).unwrap();
+        for (w, c) in want.iter().zip(&got) {
+            assert_eq!(w.gen, c.gen, "tokens diverged under caching");
+            assert_eq!(w.steps, c.steps, "NFE diverged under caching");
+            assert_eq!(w.per_step_commits, c.per_step_commits);
         }
     });
 }
