@@ -20,16 +20,18 @@
 //! * if the universe itself changes (block advance, new request), the
 //!   state resets and is counted as a full rebuild.
 //!
-//! Per-step cost is O(n^2) pair scans over the *present* set plus
-//! O(universe) per departure; the graph and score matrix are reused
-//! across steps (unlike `DepGraph::from_scores`, which reallocates both
-//! every step) — the caller still passes small per-step index vectors.
-//! With `epsilon = 0` the maintained graph is *identical* to a
-//! from-scratch build over the effective scores at every step (pinned by
-//! a property test below); a positive epsilon is an explicit, bounded
-//! approximation.
+//! Fresh scores arrive as the step pipeline's sparse CSR
+//! [`EdgeScores`]; each present node's CSR row is expanded into a
+//! reusable dense scratch row (absent pairs read as 0.0, exactly the
+//! dense semantics) and diffed against the stored matrix, so the
+//! per-step cost is O(present + nnz) expansion plus the O(present^2)
+//! pair walk over stored state — with zero steady-state allocation.
+//! Departures still cost O(universe) each.  With `epsilon = 0` the
+//! maintained graph is *identical* to a from-scratch build over the
+//! effective scores at every step (pinned by a property test below); a
+//! positive epsilon is an explicit, bounded approximation.
 
-use crate::graph::DepGraph;
+use crate::graph::{DepGraph, EdgeScores};
 
 /// Maintenance counters, merged into `cache::CacheStats` by `SlotBatch`.
 #[derive(Debug, Default, Clone, Copy)]
@@ -60,6 +62,8 @@ pub struct IncrementalGraph {
     prev_present: Vec<bool>,
     /// scratch for the current update's present mask
     next_present: Vec<bool>,
+    /// scratch: one CSR row expanded dense over candidate indices
+    row_buf: Vec<f32>,
     graph: DepGraph,
     pub stats: GraphStats,
 }
@@ -72,6 +76,7 @@ impl IncrementalGraph {
             scores: Vec::new(),
             prev_present: Vec::new(),
             next_present: Vec::new(),
+            row_buf: Vec::new(),
             graph: DepGraph::new(0),
             stats: GraphStats::default(),
         }
@@ -81,21 +86,21 @@ impl IncrementalGraph {
     /// `DepGraph::from_scores` build over the effective scores would
     /// produce — exactly when `eps == 0`, within the epsilon tolerance
     /// otherwise.  Effective score of universe pair `(ui, uj)` is
-    /// `scores[ci * n + cj]` when both are present (with `present`
-    /// mapping universe index -> candidate index), else `-inf`.
+    /// `edges.get(ci, cj)` when both are present (with `present`
+    /// mapping universe index -> candidate index; absent CSR pairs read
+    /// as 0.0), else `-inf`.
     ///
     /// `universe` names the nodes — a changed universe resets the state.
-    /// `scores` is the dense symmetric candidate matrix, `n * n`.
+    /// `edges` is the step pipeline's CSR candidate-pair matrix.
     pub fn update(
         &mut self,
         universe: &[usize],
         present: &[(usize, usize)],
-        scores: &[f32],
-        n: usize,
+        edges: &EdgeScores,
         tau: f32,
     ) -> &DepGraph {
         let u = universe.len();
-        debug_assert_eq!(scores.len(), n * n);
+        let n = edges.n();
         if universe != self.universe.as_slice() {
             self.universe.clear();
             self.universe.extend_from_slice(universe);
@@ -131,11 +136,20 @@ impl IncrementalGraph {
         }
 
         // present-present pairs: epsilon-gated score refresh, then flip
-        // the edge when the authoritative score crosses the current tau
+        // the edge when the authoritative score crosses the current tau.
+        // Each node's fresh CSR row is expanded into a dense scratch row
+        // once (absent pairs = 0.0), so the inner pair walk stays O(1)
+        // per lookup with no binary searches.
+        self.row_buf.clear();
+        self.row_buf.resize(n, 0.0);
         for (a, &(ui, ci)) in present.iter().enumerate() {
+            let (cols, vals) = edges.row(ci);
+            for (&cj, &s) in cols.iter().zip(vals) {
+                self.row_buf[cj] = s;
+            }
             for &(uj, cj) in &present[a + 1..] {
                 let idx = ui * u + uj;
-                let s = scores[ci * n + cj];
+                let s = self.row_buf[cj];
                 // NaN from (-inf) - (-inf) compares false, but a present
                 // pair always carries a finite candidate score, so fresh
                 // arrivals (stored -inf) are always refreshed here
@@ -152,6 +166,10 @@ impl IncrementalGraph {
                     }
                     self.stats.pairs_toggled += 1;
                 }
+            }
+            // sparse clear: only the expanded entries are non-zero
+            for &cj in cols {
+                self.row_buf[cj] = 0.0;
             }
         }
         std::mem::swap(&mut self.prev_present, &mut self.next_present);
@@ -218,7 +236,8 @@ mod tests {
                 }
                 let present: Vec<(usize, usize)> =
                     cand.iter().enumerate().map(|(c, &ui)| (ui, c)).collect();
-                let got = inc.update(&universe, &present, &cand_scores, n, tau);
+                let es = EdgeScores::from_dense(&cand_scores, n);
+                let got = inc.update(&universe, &present, &es, tau);
                 let want = DepGraph::from_scores(
                     u,
                     |i, j| {
@@ -254,9 +273,9 @@ mod tests {
     fn universe_change_forces_rebuild() {
         let mut inc = IncrementalGraph::new(0.0);
         let p3: Vec<(usize, usize)> = vec![(0, 0), (1, 1), (2, 2)];
-        inc.update(&[0, 1, 2], &p3, &[0.0; 9], 3, 0.5);
+        inc.update(&[0, 1, 2], &p3, &EdgeScores::from_dense(&[0.0; 9], 3), 0.5);
         let p2: Vec<(usize, usize)> = vec![(0, 0), (1, 1)];
-        inc.update(&[0, 2], &p2, &[0.0; 4], 2, 0.5);
+        inc.update(&[0, 2], &p2, &EdgeScores::from_dense(&[0.0; 4], 2), 0.5);
         assert_eq!(inc.stats.full_rebuilds, 2);
         assert_eq!(inc.stats.incremental_updates, 0);
         assert_eq!(inc.graph().len(), 2);
@@ -272,11 +291,16 @@ mod tests {
         s[3] = 0.9;
         s[5] = 0.9; // (1,2)
         s[7] = 0.9;
-        let g = inc.update(&universe, &present, &s, 3, 0.5);
+        let g = inc.update(&universe, &present, &EdgeScores::from_dense(&s, 3), 0.5);
         assert!(g.has_edge(0, 1) && g.has_edge(1, 2));
         // node 11 commits: remaining candidates 10 and 12, uncoupled
         let present2: Vec<(usize, usize)> = vec![(0, 0), (2, 1)];
-        let g = inc.update(&universe, &present2, &[0.0; 4], 2, 0.5);
+        let g = inc.update(
+            &universe,
+            &present2,
+            &EdgeScores::from_dense(&[0.0; 4], 2),
+            0.5,
+        );
         assert_eq!(g.edge_count(), 0, "departed node kept an edge");
         assert_eq!(inc.stats.full_rebuilds, 1, "same universe: no rebuild");
         assert_eq!(inc.stats.incremental_updates, 1);
@@ -287,14 +311,15 @@ mod tests {
         let universe = [7usize, 9];
         let present: Vec<(usize, usize)> = vec![(0, 0), (1, 1)];
         let mut inc = IncrementalGraph::new(0.2);
-        let g = inc.update(&universe, &present, &[0.0, 0.5, 0.5, 0.0], 2, 0.4);
+        let es = |s: f32| EdgeScores::from_dense(&[0.0, s, s, 0.0], 2);
+        let g = inc.update(&universe, &present, &es(0.5), 0.4);
         assert!(g.has_edge(0, 1));
         // drift within epsilon: the stored 0.5 stays authoritative, and
         // 0.5 > 0.48 keeps the edge even though the fresh 0.45 would not
-        let g = inc.update(&universe, &present, &[0.0, 0.45, 0.45, 0.0], 2, 0.48);
+        let g = inc.update(&universe, &present, &es(0.45), 0.48);
         assert!(g.has_edge(0, 1), "within-epsilon drift must not flip the edge");
         // drift beyond epsilon is applied
-        let g = inc.update(&universe, &present, &[0.0, 0.1, 0.1, 0.0], 2, 0.48);
+        let g = inc.update(&universe, &present, &es(0.1), 0.48);
         assert!(!g.has_edge(0, 1));
         assert_eq!(inc.stats.pairs_toggled, 2);
     }
@@ -303,11 +328,35 @@ mod tests {
     fn tau_crossing_with_stable_scores_toggles() {
         let universe = [3usize, 4];
         let present: Vec<(usize, usize)> = vec![(0, 0), (1, 1)];
-        let s = [0.0f32, 0.6, 0.6, 0.0];
+        let s = EdgeScores::from_dense(&[0.0f32, 0.6, 0.6, 0.0], 2);
         let mut inc = IncrementalGraph::new(0.0);
-        assert!(inc.update(&universe, &present, &s, 2, 0.5).has_edge(0, 1));
-        assert!(!inc.update(&universe, &present, &s, 2, 0.7).has_edge(0, 1));
-        assert!(inc.update(&universe, &present, &s, 2, 0.5).has_edge(0, 1));
+        assert!(inc.update(&universe, &present, &s, 0.5).has_edge(0, 1));
+        assert!(!inc.update(&universe, &present, &s, 0.7).has_edge(0, 1));
+        assert!(inc.update(&universe, &present, &s, 0.5).has_edge(0, 1));
         assert_eq!(inc.stats.pairs_toggled, 3);
+    }
+
+    #[test]
+    fn sparse_zero_pairs_overwrite_stored_scores() {
+        // a pair whose fresh score dropped to exactly 0 is absent from
+        // the CSR; the expansion must still refresh the stored score to
+        // 0.0 and drop the edge (dense semantics)
+        let universe = [5usize, 6];
+        let present: Vec<(usize, usize)> = vec![(0, 0), (1, 1)];
+        let mut inc = IncrementalGraph::new(0.0);
+        let g = inc.update(
+            &universe,
+            &present,
+            &EdgeScores::from_dense(&[0.0, 0.9, 0.9, 0.0], 2),
+            0.5,
+        );
+        assert!(g.has_edge(0, 1));
+        let g = inc.update(
+            &universe,
+            &present,
+            &EdgeScores::from_dense(&[0.0; 4], 2),
+            0.5,
+        );
+        assert!(!g.has_edge(0, 1), "zeroed pair must lose its edge");
     }
 }

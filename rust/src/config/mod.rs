@@ -12,13 +12,17 @@
 //!   "conf_threshold": 0.9, "gamma": 0.1, "kl_threshold": 0.01,
 //!   "tau_min": 0.01, "tau_max": 0.15,
 //!   "cache_enabled": true, "refresh_every": 4,
-//!   "cache_epsilon": 0.0, "prefix_lru_cap": 64
+//!   "cache_epsilon": 0.0, "prefix_lru_cap": 64,
+//!   "feature_threads": 1
 //! }
 //! ```
 //!
 //! The `cache_*`/`refresh_every`/`prefix_lru_cap` keys configure the
 //! compute-reuse subsystem (CLI: `--cache`/`--no-cache`,
 //! `--refresh-every`, `--cache-epsilon`, `--prefix-lru-cap`).
+//! `feature_threads` (CLI: `--feature-threads`) fans the per-step
+//! feature derivation out across slots; 1 keeps the sequential
+//! zero-alloc pipeline and results never depend on the value.
 
 use anyhow::{anyhow, Context, Result};
 
@@ -50,6 +54,8 @@ pub struct ServeSettings {
     pub cache_epsilon: f32,
     /// cross-request prefix LRU capacity (0 disables the prefix layer)
     pub prefix_lru_cap: usize,
+    /// scoped threads for the per-step feature fan-out (1 = sequential)
+    pub feature_threads: usize,
 }
 
 impl Default for ServeSettings {
@@ -70,6 +76,7 @@ impl Default for ServeSettings {
             refresh_every: CacheConfig::default().refresh_every,
             cache_epsilon: CacheConfig::default().epsilon,
             prefix_lru_cap: CacheConfig::default().prefix_lru_cap,
+            feature_threads: 1,
         }
     }
 }
@@ -131,6 +138,9 @@ impl ServeSettings {
         if let Some(v) = j.get("prefix_lru_cap").as_usize() {
             self.prefix_lru_cap = v;
         }
+        if let Some(v) = j.get("feature_threads").as_usize() {
+            self.feature_threads = v;
+        }
         let p = &mut self.params;
         if let Some(v) = j.get("conf_threshold").as_f64() {
             p.conf_threshold = v as f32;
@@ -145,6 +155,12 @@ impl ServeSettings {
         let tau_max = j.get("tau_max").as_f64().unwrap_or(p.tau.max as f64) as f32;
         if tau_min > tau_max {
             return Err(anyhow!("tau_min > tau_max"));
+        }
+        if tau_min < 0.0 {
+            return Err(anyhow!(
+                "tau_min must be >= 0 (tau thresholds apply to non-negative \
+                 normalized edge scores)"
+            ));
         }
         p.tau = TauSchedule::new(tau_min, tau_max);
         Ok(())
@@ -176,6 +192,7 @@ impl ServeSettings {
         self.refresh_every = args.usize_or("refresh-every", self.refresh_every);
         self.cache_epsilon = args.f64_or("cache-epsilon", self.cache_epsilon as f64) as f32;
         self.prefix_lru_cap = args.usize_or("prefix-lru-cap", self.prefix_lru_cap);
+        self.feature_threads = args.usize_or("feature-threads", self.feature_threads);
         let p = &mut self.params;
         p.conf_threshold = args.f64_or("conf-threshold", p.conf_threshold as f64) as f32;
         p.gamma = args.f64_or("gamma", p.gamma as f64) as f32;
@@ -184,6 +201,12 @@ impl ServeSettings {
         let tau_max = args.f64_or("tau-max", p.tau.max as f64) as f32;
         if tau_min > tau_max {
             return Err(anyhow!("tau_min > tau_max"));
+        }
+        if tau_min < 0.0 {
+            return Err(anyhow!(
+                "tau_min must be >= 0 (tau thresholds apply to non-negative \
+                 normalized edge scores)"
+            ));
         }
         p.tau = TauSchedule::new(tau_min, tau_max);
         Ok(())
@@ -222,6 +245,12 @@ impl ServeSettings {
         if self.cache_epsilon < 0.0 {
             return Err(anyhow!("cache_epsilon must be >= 0"));
         }
+        if self.feature_threads == 0 {
+            return Err(anyhow!(
+                "feature_threads must be >= 1 (1 = the sequential zero-alloc \
+                 pipeline)"
+            ));
+        }
         Ok(self)
     }
 
@@ -230,6 +259,7 @@ impl ServeSettings {
         cfg.params = self.params;
         cfg.blocks = self.blocks;
         cfg.eos_suppress = self.eos_suppress;
+        cfg.feature_threads = self.feature_threads;
         cfg
     }
 
@@ -308,10 +338,14 @@ mod tests {
         assert!(ServeSettings::resolve(&args(&["--workers", "0"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--queue-cap", "0"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--tau-min", "0.5", "--tau-max", "0.1"])).is_err());
+        // negative tau must be a clean config error, not a panic (the
+        // CSR substrate asserts non-negative thresholds downstream)
+        assert!(ServeSettings::resolve(&args(&["--tau-min", "-0.1"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--conf-threshold", "1.5"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--method", "nope"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--cache", "--refresh-every", "0"])).is_err());
         assert!(ServeSettings::resolve(&args(&["--cache-epsilon", "-0.5"])).is_err());
+        assert!(ServeSettings::resolve(&args(&["--feature-threads", "0"])).is_err());
         // refresh_every 0 is only rejected when the cache is on
         assert!(ServeSettings::resolve(&args(&["--refresh-every", "0"])).is_ok());
     }
@@ -375,5 +409,8 @@ mod tests {
         let cfg = s.decode_config();
         assert_eq!(cfg.method, Method::DapdDirect);
         assert_eq!(cfg.blocks, 4);
+        assert_eq!(cfg.feature_threads, 1, "sequential pipeline by default");
+        let s = ServeSettings::resolve(&args(&["--feature-threads", "4"])).unwrap();
+        assert_eq!(s.decode_config().feature_threads, 4);
     }
 }

@@ -6,6 +6,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::cache::CacheStats;
+use crate::decode::StepTimings;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -39,6 +40,13 @@ pub struct Metrics {
     /// individual edges flipped by delta updates (what `cache_epsilon`
     /// suppresses — the signal for tuning that knob)
     pub graph_pairs_toggled: AtomicU64,
+    /// step pipeline: wall-clock in board-level feature derivation
+    pub feature_ns: AtomicU64,
+    /// step pipeline: wall-clock in cache-layer graph maintenance
+    pub graph_build_ns: AtomicU64,
+    /// step pipeline: wall-clock in strategy selection (includes the
+    /// uncached DAPD graph rebuild)
+    pub select_ns: AtomicU64,
     latency: Mutex<Summary>,
     steps: Mutex<Summary>,
     batch_sizes: Mutex<Summary>,
@@ -87,6 +95,16 @@ impl Metrics {
             .fetch_add(s.graph_incremental_updates, Ordering::Relaxed);
         self.graph_pairs_toggled
             .fetch_add(s.graph_pairs_toggled, Ordering::Relaxed);
+    }
+
+    /// Fold a decode session's step-pipeline phase timings into the
+    /// metrics (`feature_ns` / `graph_build_ns` / `select_ns` in the
+    /// metrics endpoint).
+    pub fn record_step_timings(&self, t: &StepTimings) {
+        self.feature_ns.fetch_add(t.feature_ns, Ordering::Relaxed);
+        self.graph_build_ns
+            .fetch_add(t.graph_build_ns, Ordering::Relaxed);
+        self.select_ns.fetch_add(t.select_ns, Ordering::Relaxed);
     }
 
     /// Fraction of per-position forward compute actually executed
@@ -191,6 +209,18 @@ impl Metrics {
             "graph_pairs_toggled",
             (self.graph_pairs_toggled.load(Ordering::Relaxed) as i64).into(),
         );
+        j.set(
+            "feature_ns",
+            (self.feature_ns.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "graph_build_ns",
+            (self.graph_build_ns.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "select_ns",
+            (self.select_ns.load(Ordering::Relaxed) as i64).into(),
+        );
         j
     }
 
@@ -283,6 +313,25 @@ mod tests {
         assert_eq!(j.get("graph_incremental_updates").as_i64(), Some(7));
         assert_eq!(j.get("graph_pairs_toggled").as_i64(), Some(3));
         assert!(m.report().contains("cache[full=2 window=6"));
+    }
+
+    #[test]
+    fn step_timings_fold_into_json() {
+        let m = Metrics::new();
+        m.record_step_timings(&StepTimings {
+            feature_ns: 120,
+            graph_build_ns: 40,
+            select_ns: 60,
+        });
+        m.record_step_timings(&StepTimings {
+            feature_ns: 30,
+            graph_build_ns: 0,
+            select_ns: 10,
+        });
+        let j = m.to_json();
+        assert_eq!(j.get("feature_ns").as_i64(), Some(150));
+        assert_eq!(j.get("graph_build_ns").as_i64(), Some(40));
+        assert_eq!(j.get("select_ns").as_i64(), Some(70));
     }
 
     #[test]

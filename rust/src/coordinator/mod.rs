@@ -613,10 +613,14 @@ fn worker_loop(
             global.record_batch(session_reqs, session_tokens, wall);
             local.record_batch(session_reqs, session_tokens, wall);
         }
-        // fold this session's compute-reuse counters into the metrics
+        // fold this session's compute-reuse counters and step-pipeline
+        // phase timings into the metrics
         let cache_stats = batch.cache_stats();
         global.record_cache(&cache_stats);
         local.record_cache(&cache_stats);
+        let timings = batch.timings();
+        global.record_step_timings(&timings);
+        local.record_step_timings(&timings);
     }
 }
 
@@ -699,6 +703,7 @@ mod tests {
             workers: 2,
             batch_wait: Duration::ZERO,
             queue_cap: 64,
+            ..PoolOptions::default()
         };
         let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
         assert_eq!(handles.workers(), 2);
@@ -759,6 +764,11 @@ mod tests {
         let reused = m.cache_window_forwards.load(Ordering::Relaxed)
             + m.cache_prefix_steps.load(Ordering::Relaxed);
         assert!(reused > 0, "metrics must show compute reuse");
+        assert!(
+            m.feature_ns.load(Ordering::Relaxed) > 0
+                && m.select_ns.load(Ordering::Relaxed) > 0,
+            "step-pipeline timings must reach the metrics"
+        );
     }
 
     #[test]

@@ -1,0 +1,531 @@
+//! The zero-alloc step pipeline: board-level per-slot feature derivation.
+//!
+//! Every decoding step needs the same per-candidate features — marginal
+//! distributions, confidence/argmax, entropy, KL-vs-previous-step, and
+//! (for the dependency-aware methods) attention-induced edge scores with
+//! proxy degrees.  The seed interleaved that work inside
+//! `SlotBatch::step` with fresh heap allocations per slot per step
+//! (O(n·v) probability buffers and an O(n^2) dense score matrix); this
+//! module pulls it out into:
+//!
+//! * [`StepArena`] — one per board slot, holding every per-step buffer
+//!   (including the previous-step distributions that used to live in the
+//!   slot state).  Buffers grow to their peak size once and are then
+//!   reused: the steady-state derivation performs **zero allocations**,
+//!   asserted by `benches/step_pipeline.rs` under a counting global
+//!   allocator.
+//! * [`EdgeScores`] (from [`crate::graph::csr`]) — the sparse CSR
+//!   replacement for the dense `n*n` score matrix, built in O(nnz).
+//! * [`FeaturePipeline`] — derives all [`StepCtx`] inputs for the whole
+//!   board in one pass; with `feature_threads > 1` the slots are fanned
+//!   out across scoped worker threads (`util::pool::scope_chunks`).
+//!   Slots write only to their own arenas, so the parallel derivation is
+//!   bit-identical to the sequential one (pinned by a property test);
+//!   the parallel path allocates a small per-step job list and is
+//!   therefore opt-in — the default sequential path is the zero-alloc
+//!   one.
+//!
+//! [`StepCtx`]: super::StepCtx
+
+use crate::graph::EdgeScores;
+use crate::runtime::{ForwardModel, StepOutput};
+use crate::tensor::{argmax, entropy, kl_div, softmax_inplace};
+use crate::util::pool;
+
+use super::{DecodeConfig, Method};
+
+/// The model geometry the pipeline needs, copied out of a
+/// [`ForwardModel`] once per batch so derivation never re-queries the
+/// trait object in the hot loop.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelDims {
+    pub seq_len: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub vocab: usize,
+    pub mask_id: i32,
+}
+
+impl ModelDims {
+    pub fn of(model: &dyn ForwardModel) -> ModelDims {
+        ModelDims {
+            seq_len: model.seq_len(),
+            prompt_len: model.prompt_len(),
+            gen_len: model.gen_len(),
+            vocab: model.vocab(),
+            mask_id: model.mask_id(),
+        }
+    }
+}
+
+/// Per-step scalar results of one slot's derivation.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SlotMeta {
+    /// active block after any advance performed this step
+    pub cur_block: usize,
+    /// absolute [start, end) of the active block
+    pub blk_start: usize,
+    pub blk_end: usize,
+    /// masked positions over the whole generation window
+    pub masked_total: usize,
+    /// fraction of the generation window already decoded
+    pub progress: f32,
+}
+
+/// All per-slot step buffers, grown once and reused every step — the
+/// arena behind one board slot.  Candidate-indexed fields (`conf`,
+/// `amax`, ...) are resized to the step's candidate count `n`; `n` only
+/// shrinks as a request decodes, so steady state never reallocates.
+#[derive(Debug, Default)]
+pub struct StepArena {
+    /// absolute sequence positions of this step's candidates
+    pub positions: Vec<usize>,
+    /// per-candidate argmax probability
+    pub conf: Vec<f32>,
+    /// per-candidate argmax token
+    pub amax: Vec<i32>,
+    /// per-candidate entropy (nats)
+    pub entropy: Vec<f32>,
+    /// per-candidate KL(p_t || p_{t-1}); `f32::INFINITY` when no
+    /// previous distribution exists
+    pub kl: Vec<f32>,
+    /// candidate-pair edge scores, CSR, max-normalized
+    pub edges: EdgeScores,
+    /// proxy degrees (edge-score row sums)
+    pub degrees: Vec<f32>,
+    /// this step's candidate distributions, [n * vocab]
+    probs: Vec<f32>,
+    /// previous-step distributions over the generation window
+    /// [gen_len * vocab]; persists across the steps of one request
+    prev_probs: Vec<f32>,
+    has_prev: bool,
+    /// scratch for the cache layer's incremental-graph wiring
+    pub universe: Vec<usize>,
+    pub to_candidate: Vec<usize>,
+    pub present: Vec<(usize, usize)>,
+    pub meta: SlotMeta,
+}
+
+impl StepArena {
+    pub fn new() -> StepArena {
+        StepArena::default()
+    }
+
+    /// Prepare the arena for a freshly-admitted request: zero the
+    /// previous-step distributions in place (no reallocation once the
+    /// buffer reached `gen_len * vocab`).
+    pub fn reset_request(&mut self, gen_len: usize, vocab: usize) {
+        self.prev_probs.clear();
+        self.prev_probs.resize(gen_len * vocab, 0.0);
+        self.has_prev = false;
+    }
+
+    /// Whether a previous step's distributions are available (false on a
+    /// request's first step) — the KLASS stability gate.
+    pub fn has_prev(&self) -> bool {
+        self.has_prev
+    }
+
+    /// Store this step's candidate distributions as the next step's
+    /// "previous" — called after the commit, exactly where the seed loop
+    /// wrote `SlotState::prev_probs`.
+    pub fn commit_prev(&mut self, prompt_len: usize, vocab: usize) {
+        for (c, &pos) in self.positions.iter().enumerate() {
+            let gen_pos = pos - prompt_len;
+            self.prev_probs[gen_pos * vocab..(gen_pos + 1) * vocab]
+                .copy_from_slice(&self.probs[c * vocab..(c + 1) * vocab]);
+        }
+        self.has_prev = true;
+    }
+}
+
+/// Aggregate wall-clock spent in the step pipeline's phases, reported
+/// through the worker metrics (`feature_ns` / `graph_build_ns` /
+/// `select_ns` in the `{"metrics": true}` endpoint).  `graph_build_ns`
+/// covers the cache layer's incremental-graph maintenance; the uncached
+/// DAPD path rebuilds its graph inside selection, so that cost lands in
+/// `select_ns`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StepTimings {
+    pub feature_ns: u64,
+    pub graph_build_ns: u64,
+    pub select_ns: u64,
+}
+
+impl StepTimings {
+    pub fn merge(&mut self, o: &StepTimings) {
+        self.feature_ns += o.feature_ns;
+        self.graph_build_ns += o.graph_build_ns;
+        self.select_ns += o.select_ns;
+    }
+}
+
+/// One slot's derivation work for a board-level pass.
+pub struct FeatureJob<'a> {
+    /// batch row index
+    pub slot: usize,
+    /// the slot's active block before this step
+    pub cur_block: usize,
+    /// the slot's token row, [seq_len]
+    pub tokens: &'a [i32],
+    pub arena: &'a mut StepArena,
+}
+
+/// Board-level feature derivation: sequential by default, fanned out
+/// across scoped threads when constructed with `threads > 1`.
+#[derive(Debug, Clone, Copy)]
+pub struct FeaturePipeline {
+    threads: usize,
+}
+
+impl FeaturePipeline {
+    pub fn new(threads: usize) -> FeaturePipeline {
+        FeaturePipeline {
+            threads: threads.max(1),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Derive every job's features.  Jobs touch disjoint arenas and read
+    /// shared immutable state, so the parallel fan-out is bit-identical
+    /// to the sequential pass.
+    pub fn derive_board(
+        &self,
+        cfg: &DecodeConfig,
+        dims: &ModelDims,
+        out: &StepOutput,
+        jobs: &mut [FeatureJob<'_>],
+    ) {
+        if self.threads <= 1 || jobs.len() <= 1 {
+            for job in jobs.iter_mut() {
+                derive_slot(
+                    cfg,
+                    dims,
+                    job.tokens,
+                    out,
+                    job.slot,
+                    job.cur_block,
+                    &mut *job.arena,
+                );
+            }
+        } else {
+            pool::scope_chunks(self.threads, jobs, |job| {
+                derive_slot(
+                    cfg,
+                    dims,
+                    job.tokens,
+                    out,
+                    job.slot,
+                    job.cur_block,
+                    &mut *job.arena,
+                );
+            });
+        }
+    }
+}
+
+/// Derive one slot's step features into its arena: block advance,
+/// candidate set, marginal statistics, and (for the dependency-aware
+/// methods) the CSR edge scores with degrees.  Zero allocations once the
+/// arena is warm.
+///
+/// `row` is the slot's batch-row index into `out`; `tokens` is that
+/// row's token slice.  The advanced block lands in `arena.meta`; an
+/// empty `arena.positions` afterwards means the sample is finished.
+pub fn derive_slot(
+    cfg: &DecodeConfig,
+    dims: &ModelDims,
+    tokens: &[i32],
+    out: &StepOutput,
+    row: usize,
+    cur_block: usize,
+    arena: &mut StepArena,
+) {
+    let p = dims.prompt_len;
+    let g = dims.gen_len;
+    let v = dims.vocab;
+    debug_assert_eq!(tokens.len(), dims.seq_len);
+    let block_len = g / cfg.blocks;
+
+    // ---- advance past fully-committed blocks ---------------------------
+    let mut cur_block = cur_block;
+    let (blk_start, blk_end) = loop {
+        let b0 = p + cur_block * block_len;
+        let b1 = if cur_block == cfg.blocks - 1 {
+            p + g
+        } else {
+            b0 + block_len
+        };
+        let any_masked = (b0..b1).any(|i| tokens[i] == dims.mask_id);
+        if any_masked || cur_block == cfg.blocks - 1 {
+            break (b0, b1);
+        }
+        cur_block += 1;
+    };
+
+    // ---- candidate set: masked positions in the active block -----------
+    arena.positions.clear();
+    arena
+        .positions
+        .extend((blk_start..blk_end).filter(|&i| tokens[i] == dims.mask_id));
+    let n = arena.positions.len();
+
+    let masked_total = (p..p + g).filter(|&i| tokens[i] == dims.mask_id).count();
+    arena.meta = SlotMeta {
+        cur_block,
+        blk_start,
+        blk_end,
+        masked_total,
+        progress: 1.0 - masked_total as f32 / g as f32,
+    };
+    if n == 0 {
+        return; // finished sample; nothing to derive
+    }
+
+    // ---- per-candidate distributions -----------------------------------
+    arena.conf.clear();
+    arena.conf.resize(n, 0.0);
+    arena.amax.clear();
+    arena.amax.resize(n, 0);
+    arena.entropy.clear();
+    arena.entropy.resize(n, 0.0);
+    arena.kl.clear();
+    arena.kl.resize(n, f32::INFINITY);
+    if arena.probs.len() < n * v {
+        arena.probs.resize(n * v, 0.0);
+    }
+    for (c, &pos) in arena.positions.iter().enumerate() {
+        let logits = out.logits.slice3(row, pos);
+        let pb = &mut arena.probs[c * v..(c + 1) * v];
+        pb.copy_from_slice(logits);
+        if cfg.eos_suppress {
+            pb[cfg.eos_id as usize] = f32::NEG_INFINITY;
+        }
+        softmax_inplace(pb);
+        let (ai, av) = argmax(pb);
+        arena.conf[c] = av;
+        arena.amax[c] = ai as i32;
+        arena.entropy[c] = entropy(pb);
+        if arena.has_prev {
+            let gen_pos = pos - p;
+            let prev = &arena.prev_probs[gen_pos * v..(gen_pos + 1) * v];
+            if prev.iter().any(|&x| x > 0.0) {
+                arena.kl[c] = kl_div(pb, prev);
+            }
+        }
+    }
+
+    // ---- candidate-pair edge scores (dependency-aware methods only) ----
+    let is_dapd = matches!(cfg.method, Method::DapdStaged | Method::DapdDirect);
+    arena.edges.begin(n);
+    if is_dapd {
+        if let Some(es) = &out.edge_scores {
+            for (ci, &i) in arena.positions.iter().enumerate() {
+                for (cj, &j) in arena.positions.iter().enumerate() {
+                    if ci != cj {
+                        let s = es.at3(row, i, j);
+                        if s > 0.0 {
+                            arena.edges.push(cj, s);
+                        }
+                    }
+                }
+                arena.edges.end_row();
+            }
+        } else if let Some(attn) = &out.attn_avg {
+            for (ci, &i) in arena.positions.iter().enumerate() {
+                for (cj, &j) in arena.positions.iter().enumerate() {
+                    if ci != cj {
+                        let s = 0.5 * (attn.at3(row, i, j) + attn.at3(row, j, i));
+                        if s > 0.0 {
+                            arena.edges.push(cj, s);
+                        }
+                    }
+                }
+                arena.edges.end_row();
+            }
+        } else {
+            for _ in 0..n {
+                arena.edges.end_row();
+            }
+        }
+        arena.edges.max_normalize();
+        arena.edges.degrees_into(&mut arena.degrees);
+    } else {
+        for _ in 0..n {
+            arena.edges.end_row();
+        }
+        arena.degrees.clear();
+        arena.degrees.resize(n, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::DecodeConfig;
+    use crate::graph::max_normalize;
+    use crate::runtime::MockModel;
+
+    fn masked_board(m: &MockModel) -> Vec<i32> {
+        let mut tokens = vec![5i32; m.batch * m.seq_len];
+        for b in 0..m.batch {
+            for i in m.prompt_len..m.seq_len {
+                tokens[b * m.seq_len + i] = m.mask_id;
+            }
+        }
+        tokens
+    }
+
+    /// The seed's dense derivation, replicated: probabilities, conf,
+    /// entropy, dense gathered+normalized scores and row-sum degrees.
+    fn dense_reference(
+        m: &MockModel,
+        out: &StepOutput,
+        row: usize,
+        positions: &[usize],
+        eos: Option<i32>,
+    ) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let v = m.vocab;
+        let n = positions.len();
+        let mut conf = vec![0.0f32; n];
+        let mut amax = vec![0i32; n];
+        let mut ent = vec![0.0f32; n];
+        for (c, &pos) in positions.iter().enumerate() {
+            let mut pb = out.logits.slice3(row, pos).to_vec();
+            if let Some(id) = eos {
+                pb[id as usize] = f32::NEG_INFINITY;
+            }
+            softmax_inplace(&mut pb);
+            let (ai, av) = argmax(&pb);
+            conf[c] = av;
+            amax[c] = ai as i32;
+            ent[c] = entropy(&pb);
+        }
+        let es = out.edge_scores.as_ref().unwrap();
+        let mut scores = vec![0.0f32; n * n];
+        for (ci, &i) in positions.iter().enumerate() {
+            for (cj, &j) in positions.iter().enumerate() {
+                if ci != cj {
+                    scores[ci * n + cj] = es.at3(row, i, j);
+                }
+            }
+        }
+        max_normalize(&mut scores);
+        let degrees: Vec<f32> = (0..n)
+            .map(|ci| scores[ci * n..(ci + 1) * n].iter().sum())
+            .collect();
+        (conf, amax, ent, scores, degrees)
+    }
+
+    #[test]
+    fn derive_matches_dense_reference() {
+        let m = MockModel::new(2, 24, 8, 16);
+        let dims = ModelDims::of(&m);
+        let tokens = masked_board(&m);
+        let out = m.forward(&tokens).unwrap();
+        let cfg = DecodeConfig::new(Method::DapdStaged);
+        let mut arena = StepArena::new();
+        arena.reset_request(dims.gen_len, dims.vocab);
+        for row in 0..2 {
+            let tr = &tokens[row * dims.seq_len..(row + 1) * dims.seq_len];
+            derive_slot(&cfg, &dims, tr, &out, row, 0, &mut arena);
+            let positions: Vec<usize> = (8..24).collect();
+            assert_eq!(arena.positions, positions);
+            assert_eq!(arena.meta.masked_total, 16);
+            assert!((arena.meta.progress - 0.0).abs() < 1e-6);
+            let (conf, amax, ent, scores, degrees) =
+                dense_reference(&m, &out, row, &positions, None);
+            let n = positions.len();
+            assert_eq!(arena.conf, conf);
+            assert_eq!(arena.amax, amax);
+            assert_eq!(arena.entropy, ent);
+            assert!(arena.kl.iter().all(|&k| k == f32::INFINITY), "first step");
+            for i in 0..n {
+                assert!((arena.degrees[i] - degrees[i]).abs() < 1e-5, "deg {i}");
+                for j in 0..n {
+                    assert!(
+                        (arena.edges.get(i, j) - scores[i * n + j]).abs() < 1e-6,
+                        "edge ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kl_uses_previous_step_distributions() {
+        let m = MockModel::new(1, 16, 4, 12);
+        let dims = ModelDims::of(&m);
+        let tokens = masked_board(&m);
+        let out = m.forward(&tokens).unwrap();
+        let cfg = DecodeConfig::new(Method::Klass);
+        let mut arena = StepArena::new();
+        arena.reset_request(dims.gen_len, dims.vocab);
+        derive_slot(&cfg, &dims, &tokens, &out, 0, 0, &mut arena);
+        assert!(!arena.has_prev());
+        arena.commit_prev(dims.prompt_len, dims.vocab);
+        assert!(arena.has_prev());
+        // identical distributions on the rerun: KL collapses to ~0
+        derive_slot(&cfg, &dims, &tokens, &out, 0, 0, &mut arena);
+        assert!(arena.kl.iter().all(|&k| k.is_finite() && k < 1e-6));
+        // a fresh request must forget them again
+        arena.reset_request(dims.gen_len, dims.vocab);
+        derive_slot(&cfg, &dims, &tokens, &out, 0, 0, &mut arena);
+        assert!(arena.kl.iter().all(|&k| k == f32::INFINITY));
+    }
+
+    #[test]
+    fn block_advance_skips_committed_blocks() {
+        let m = MockModel::new(1, 16, 4, 12);
+        let dims = ModelDims::of(&m);
+        let mut cfg = DecodeConfig::new(Method::FastDllm);
+        cfg.blocks = 4; // 3 tokens per block
+        let mut tokens = masked_board(&m);
+        // commit block 0 entirely
+        for i in 4..7 {
+            tokens[i] = 5;
+        }
+        let out = m.forward(&tokens).unwrap();
+        let mut arena = StepArena::new();
+        arena.reset_request(dims.gen_len, dims.vocab);
+        derive_slot(&cfg, &dims, &tokens, &out, 0, 0, &mut arena);
+        assert_eq!(arena.meta.cur_block, 1);
+        assert_eq!((arena.meta.blk_start, arena.meta.blk_end), (7, 10));
+        assert_eq!(arena.positions, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn parallel_board_matches_sequential() {
+        let m = MockModel::new(4, 24, 8, 16);
+        let dims = ModelDims::of(&m);
+        let tokens = masked_board(&m);
+        let out = m.forward(&tokens).unwrap();
+        let cfg = DecodeConfig::new(Method::DapdDirect);
+        let run = |threads: usize| -> Vec<(Vec<f32>, Vec<f32>)> {
+            let mut arenas: Vec<StepArena> = (0..4).map(|_| StepArena::new()).collect();
+            for a in &mut arenas {
+                a.reset_request(dims.gen_len, dims.vocab);
+            }
+            let mut jobs: Vec<FeatureJob> = arenas
+                .iter_mut()
+                .enumerate()
+                .map(|(s, arena)| FeatureJob {
+                    slot: s,
+                    cur_block: 0,
+                    tokens: &tokens[s * dims.seq_len..(s + 1) * dims.seq_len],
+                    arena,
+                })
+                .collect();
+            FeaturePipeline::new(threads).derive_board(&cfg, &dims, &out, &mut jobs);
+            drop(jobs); // release the arena borrows before reading results
+            arenas
+                .iter()
+                .map(|a| (a.conf.clone(), a.degrees.clone()))
+                .collect()
+        };
+        assert_eq!(run(1), run(3));
+    }
+}

@@ -19,16 +19,25 @@
 //! with finished slots backfillable mid-flight (continuous batching).
 //! `decode_batch` is its drain-style wrapper and records trajectories
 //! (for the Fig. 1/5 analyses) and per-sample NFE.
+//!
+//! Per-step feature derivation lives in [`features`]: a [`StepArena`] of
+//! reusable per-slot buffers and a [`FeaturePipeline`] that fills every
+//! [`StepCtx`] input for the whole board in one pass — zero steady-state
+//! allocations, with candidate-pair edge scores in sparse CSR form
+//! ([`crate::graph::EdgeScores`]) instead of the seed's dense `n*n`
+//! matrix.
 
+pub mod features;
 pub mod slots;
 pub mod strategies;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::cache::{CacheConfig, PrefixHandle};
-use crate::graph::{DepGraph, TauSchedule};
+use crate::graph::{DepGraph, EdgeScores, TauSchedule};
 use crate::runtime::ForwardModel;
 
+pub use features::{FeaturePipeline, ModelDims, StepArena, StepTimings};
 pub use slots::SlotBatch;
 pub use strategies::{make_strategy, Strategy};
 
@@ -161,6 +170,11 @@ pub struct DecodeConfig {
     pub eos_id: i32,
     /// safety cap on steps (defaults to gen_len; every step commits >= 1)
     pub max_steps: usize,
+    /// scoped threads for the per-step feature fan-out across slots
+    /// (1 = the sequential zero-alloc pipeline).  Deployment-level knob:
+    /// it never changes decode results (pinned by a property test), so
+    /// it is excluded from the coordinator's batching `group_key`.
+    pub feature_threads: usize,
 }
 
 impl DecodeConfig {
@@ -172,6 +186,7 @@ impl DecodeConfig {
             eos_suppress: false,
             eos_id: 2,
             max_steps: 0,
+            feature_threads: 1,
         }
     }
 }
@@ -192,6 +207,8 @@ pub struct PrebuiltGraph<'a> {
 /// Per-sample view of one decoding step, over the *candidate* masked
 /// positions (within the active block).  Indices below are candidate
 /// indices 0..n; `positions[c]` maps back to absolute sequence positions.
+/// All slices live in the slot's [`StepArena`], filled by the
+/// [`FeaturePipeline`] board pass.
 pub struct StepCtx<'a> {
     pub positions: &'a [usize],
     pub conf: &'a [f32],
@@ -199,17 +216,17 @@ pub struct StepCtx<'a> {
     pub entropy: &'a [f32],
     /// KL(p_t || p_{t-1}) per candidate; f32::INFINITY on the first step.
     pub kl_prev: &'a [f32],
-    /// dense candidate-pair edge scores, max-normalized, [n*n]
-    pub scores_norm: &'a [f32],
-    /// row sums of `scores_norm` (proxy degrees over candidates)
+    /// candidate-pair edge scores, sparse CSR, max-normalized
+    pub edges: &'a EdgeScores,
+    /// edge-score row sums (proxy degrees over candidates)
     pub degrees: &'a [f32],
     /// fraction of the generation window already decoded (0 at start)
     pub progress: f32,
     /// fraction of the generation window still masked
     pub mask_ratio: f32,
     /// incrementally-maintained dependency graph from the cache layer;
-    /// `None` makes graph-based strategies build their own from
-    /// `scores_norm` (the uncached path)
+    /// `None` makes graph-based strategies build their own from `edges`
+    /// (the uncached path)
     pub graph: Option<PrebuiltGraph<'a>>,
 }
 

@@ -19,27 +19,42 @@
 //! indexed in slot-local steps, exactly as the drain-style loop reported
 //! them.
 //!
+//! Per-step feature derivation runs through the zero-alloc pipeline
+//! ([`super::features`]): each slot owns a [`StepArena`] of reusable
+//! buffers (marginals, CSR edge scores, the previous-step distributions
+//! for KLASS), filled for the whole board in one pass before the
+//! per-slot select/commit loop.  Steady-state steps allocate nothing;
+//! `feature_threads > 1` fans the derivation out across scoped threads
+//! without changing any result.  Phase timings (`feature_ns`,
+//! `graph_build_ns`, `select_ns`) accumulate in [`StepTimings`] and flow
+//! into the worker metrics.
+//!
 //! With a [`CacheConfig`] attached (see [`SlotBatch::with_cache`]) the
 //! loop runs through the compute-reuse subsystem: steady-state forwards
 //! recompute only the masked window (`cache::ForwardCache`), each slot's
 //! dependency graph is maintained incrementally over the active-block
-//! universe (`cache::IncrementalGraph`), and boards whose slots are all
-//! on step 0 with prefix-cache hits skip the forward pass entirely.
-//! Disabled (the default), the loop is byte-for-byte the seed path.
+//! universe (`cache::IncrementalGraph`, diffing the CSR scores), and
+//! boards whose slots are all on step 0 with prefix-cache hits skip the
+//! forward pass entirely.  Disabled (the default), the loop is
+//! result-identical to the seed path.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use super::features::{self, FeatureJob, FeaturePipeline, ModelDims, StepArena, StepTimings};
 use super::{make_strategy, DecodeConfig, DecodeOutcome, Method, PrebuiltGraph, StepCtx, Strategy};
 use crate::cache::{
     CacheConfig, CacheStats, FirstStepRows, ForwardCache, GraphStats, IncrementalGraph,
     PrefixCache, PrefixHandle,
 };
 use crate::runtime::{ForwardModel, StepOutput};
-use crate::tensor::{argmax, entropy, kl_div, softmax_inplace, Tensor};
+use crate::tensor::{argmax, Tensor};
 
-/// Per-slot decode state (one in-flight sample).
+/// Per-slot decode state (one in-flight sample).  Step buffers live in
+/// the slot's [`StepArena`]; this carries only the request's identity
+/// and its commit trajectory.
 struct SlotState {
     /// caller-chosen request id, echoed back on completion
     id: u64,
@@ -48,11 +63,11 @@ struct SlotState {
     cur_block: usize,
     /// slot-local step at which each generation position committed
     commit_step: Vec<usize>,
-    /// generation-relative positions committed per slot-local step
-    per_step: Vec<Vec<usize>>,
-    /// previous-step distributions over the generation window [g*v]
-    /// (empty until the first step) — KLASS stability input
-    prev_probs: Vec<f32>,
+    /// flat commit log: generation-relative positions in commit order
+    /// (capacity `gen_len`, so steady-state pushes never reallocate)
+    per_step_flat: Vec<usize>,
+    /// end offset into `per_step_flat` after each recorded step
+    per_step_ends: Vec<usize>,
     /// prefix-cache key of this slot's prompt (prefix cache attached)
     prefix_key: Option<u64>,
     /// prefetched first-step rows; consumed at slot-local step 0
@@ -65,11 +80,18 @@ struct SlotState {
 pub struct SlotBatch<'m> {
     model: &'m dyn ForwardModel,
     cfg: DecodeConfig,
+    dims: ModelDims,
     strategy: Box<dyn Strategy>,
     max_steps: usize,
     /// token board, row-major [batch * seq_len]
     tokens: Vec<i32>,
     slots: Vec<Option<SlotState>>,
+    /// per-slot reusable step buffers (the zero-alloc pipeline)
+    arenas: Vec<StepArena>,
+    pipeline: FeaturePipeline,
+    /// reusable selection buffer shared across the per-slot loop
+    sel_buf: Vec<usize>,
+    timings: StepTimings,
     occupied: usize,
     /// compute-reuse policy (disabled = the seed decode path)
     cache_cfg: CacheConfig,
@@ -114,10 +136,15 @@ impl<'m> SlotBatch<'m> {
         Ok(SlotBatch {
             model,
             cfg: cfg.clone(),
+            dims: ModelDims::of(model),
             strategy: make_strategy(cfg.method, cfg.params),
             max_steps,
             tokens: vec![0i32; model.batch() * model.seq_len()],
             slots: (0..model.batch()).map(|_| None).collect(),
+            arenas: (0..model.batch()).map(|_| StepArena::new()).collect(),
+            pipeline: FeaturePipeline::new(cfg.feature_threads),
+            sel_buf: Vec::new(),
+            timings: StepTimings::default(),
             occupied: 0,
             fwd_cache: if cache.enabled {
                 Some(ForwardCache::new(cache.refresh_every))
@@ -167,10 +194,10 @@ impl<'m> SlotBatch<'m> {
         prompt: &[i32],
         prefill: Option<Arc<FirstStepRows>>,
     ) -> Result<usize> {
-        let l = self.model.seq_len();
-        let p = self.model.prompt_len();
-        let g = self.model.gen_len();
-        let mask_id = self.model.mask_id();
+        let l = self.dims.seq_len;
+        let p = self.dims.prompt_len;
+        let g = self.dims.gen_len;
+        let mask_id = self.dims.mask_id;
         if prompt.len() != p {
             bail!("prompt length {} != prompt_len {p}", prompt.len());
         }
@@ -195,13 +222,14 @@ impl<'m> SlotBatch<'m> {
             .prefix
             .as_ref()
             .map(|h| PrefixCache::key(h.model_salt, prompt));
+        self.arenas[slot].reset_request(g, self.dims.vocab);
         self.slots[slot] = Some(SlotState {
             id,
             steps: 0,
             cur_block: 0,
             commit_step: vec![usize::MAX; g],
-            per_step: Vec::new(),
-            prev_probs: Vec::new(),
+            per_step_flat: Vec::with_capacity(g),
+            per_step_ends: Vec::with_capacity(g + 1),
             prefix_key,
             prefill: if self.prefix.is_some() { prefill } else { None },
             inc_graph: None,
@@ -217,12 +245,11 @@ impl<'m> SlotBatch<'m> {
         if self.occupied == 0 {
             bail!("step() on an empty batch");
         }
-        let l = self.model.seq_len();
-        let p = self.model.prompt_len();
-        let g = self.model.gen_len();
-        let v = self.model.vocab();
-        let mask_id = self.model.mask_id();
-        let block_len = g / self.cfg.blocks;
+        let l = self.dims.seq_len;
+        let p = self.dims.prompt_len;
+        let g = self.dims.gen_len;
+        let v = self.dims.vocab;
+        let mask_id = self.dims.mask_id;
         let cache_enabled = self.cache_cfg.enabled;
         let cache_eps = self.cache_cfg.epsilon;
 
@@ -251,6 +278,45 @@ impl<'m> SlotBatch<'m> {
             &owned_out
         };
 
+        // ---- board-level feature derivation (the zero-alloc pipeline) --
+        let t_feat = Instant::now();
+        if self.pipeline.threads() > 1 && self.occupied > 1 {
+            // parallel fan-out over scoped threads; the per-step job list
+            // is the one allocation this opt-in mode pays
+            let mut jobs: Vec<FeatureJob> = Vec::with_capacity(self.occupied);
+            for (s, (slot, arena)) in self
+                .slots
+                .iter()
+                .zip(self.arenas.iter_mut())
+                .enumerate()
+            {
+                if let Some(st) = slot {
+                    jobs.push(FeatureJob {
+                        slot: s,
+                        cur_block: st.cur_block,
+                        tokens: &self.tokens[s * l..(s + 1) * l],
+                        arena,
+                    });
+                }
+            }
+            self.pipeline.derive_board(&self.cfg, &self.dims, out, &mut jobs);
+        } else {
+            for s in 0..self.slots.len() {
+                let Some(st) = &self.slots[s] else { continue };
+                let cur_block = st.cur_block;
+                features::derive_slot(
+                    &self.cfg,
+                    &self.dims,
+                    &self.tokens[s * l..(s + 1) * l],
+                    out,
+                    s,
+                    cur_block,
+                    &mut self.arenas[s],
+                );
+            }
+        }
+        self.timings.feature_ns += t_feat.elapsed().as_nanos() as u64;
+
         let mut finished = Vec::new();
         for s in 0..self.slots.len() {
             if self.slots[s].is_none() {
@@ -276,164 +342,93 @@ impl<'m> SlotBatch<'m> {
                     st.prefill = None;
                 }
 
-                // ---- candidate set: masked positions in the active block
-                let (blk_start, blk_end) = loop {
-                    let b0 = p + st.cur_block * block_len;
-                    let b1 = if st.cur_block == cfg.blocks - 1 {
-                        p + g
-                    } else {
-                        b0 + block_len
-                    };
-                    let any_masked =
-                        (b0..b1).any(|i| self.tokens[s * l + i] == mask_id);
-                    if any_masked || st.cur_block == cfg.blocks - 1 {
-                        break (b0, b1);
-                    }
-                    st.cur_block += 1;
-                };
-                let positions: Vec<usize> = (blk_start..blk_end)
-                    .filter(|&i| self.tokens[s * l + i] == mask_id)
-                    .collect();
-                if positions.is_empty() {
+                let arena = &mut self.arenas[s];
+                st.cur_block = arena.meta.cur_block;
+                if arena.positions.is_empty() {
                     finish = true;
                 } else {
-                    // ---- per-candidate distributions --------------------
-                    let n = positions.len();
-                    let mut conf = vec![0.0f32; n];
-                    let mut amax = vec![0i32; n];
-                    let mut ent = vec![0.0f32; n];
-                    let mut kl = vec![f32::INFINITY; n];
-                    let mut probs_buf = vec![0.0f32; n * v];
-                    for (c, &pos) in positions.iter().enumerate() {
-                        let row = out.logits.slice3(s, pos);
-                        let pb = &mut probs_buf[c * v..(c + 1) * v];
-                        pb.copy_from_slice(row);
-                        if cfg.eos_suppress {
-                            pb[cfg.eos_id as usize] = f32::NEG_INFINITY;
-                        }
-                        softmax_inplace(pb);
-                        let (ai, av) = argmax(pb);
-                        conf[c] = av;
-                        amax[c] = ai as i32;
-                        ent[c] = entropy(pb);
-                        let gen_pos = pos - p;
-                        if !st.prev_probs.is_empty() {
-                            let prev =
-                                &st.prev_probs[gen_pos * v..(gen_pos + 1) * v];
-                            if prev.iter().any(|&x| x > 0.0) {
-                                kl[c] = kl_div(pb, prev);
-                            }
-                        }
-                    }
-
-                    // ---- candidate-pair edge scores ---------------------
-                    let is_dapd = matches!(cfg.method, Method::DapdStaged | Method::DapdDirect);
-                    let mut scores = vec![0.0f32; n * n];
-                    let mut degrees = vec![0.0f32; n];
-                    if is_dapd {
-                        if let Some(es) = &out.edge_scores {
-                            for (ci, &i) in positions.iter().enumerate() {
-                                for (cj, &j) in positions.iter().enumerate() {
-                                    if ci != cj {
-                                        scores[ci * n + cj] = es.at3(s, i, j);
-                                    }
-                                }
-                            }
-                        } else if let Some(attn) = &out.attn_avg {
-                            for (ci, &i) in positions.iter().enumerate() {
-                                for (cj, &j) in positions.iter().enumerate() {
-                                    if ci != cj {
-                                        scores[ci * n + cj] = 0.5
-                                            * (attn.at3(s, i, j) + attn.at3(s, j, i));
-                                    }
-                                }
-                            }
-                        }
-                        crate::graph::max_normalize(&mut scores);
-                        for ci in 0..n {
-                            degrees[ci] = scores[ci * n..(ci + 1) * n].iter().sum();
-                        }
-                    }
-
-                    let masked_total = (p..p + g)
-                        .filter(|&i| self.tokens[s * l + i] == mask_id)
-                        .count();
-                    let progress = 1.0 - masked_total as f32 / g as f32;
+                    let is_dapd =
+                        matches!(cfg.method, Method::DapdStaged | Method::DapdDirect);
+                    let progress = arena.meta.progress;
+                    let masked_total = arena.meta.masked_total;
+                    let tau = cfg.params.tau.at(progress);
 
                     // ---- incremental dependency graph (cache layer) -----
                     // Maintained per slot over the active-block universe
                     // (stable until the block advances), so between steps
                     // only edge flips are applied instead of a rebuild.
-                    let mut to_candidate: Vec<usize> = Vec::new();
                     let graph = if cache_enabled && is_dapd {
+                        let t_graph = Instant::now();
+                        let (blk_start, blk_end) =
+                            (arena.meta.blk_start, arena.meta.blk_end);
                         let u = blk_end - blk_start;
-                        let universe: Vec<usize> = (blk_start..blk_end).collect();
-                        to_candidate = vec![usize::MAX; u];
+                        arena.universe.clear();
+                        arena.universe.extend(blk_start..blk_end);
+                        arena.to_candidate.clear();
+                        arena.to_candidate.resize(u, usize::MAX);
+                        arena.present.clear();
                         // present = eligible candidates; committed
                         // positions and (for DAPD-Direct) conf~1.0
                         // candidates stay absent/isolated — this mirrors
                         // the eligibility rule inside the Dapd strategy
                         let direct = cfg.method == Method::DapdDirect;
-                        let mut present: Vec<(usize, usize)> = Vec::with_capacity(n);
-                        for (c, &pos) in positions.iter().enumerate() {
+                        for (c, &pos) in arena.positions.iter().enumerate() {
                             let ui = pos - blk_start;
-                            to_candidate[ui] = c;
-                            if !(direct && cfg.params.dapd_pre_commits(conf[c])) {
-                                present.push((ui, c));
+                            arena.to_candidate[ui] = c;
+                            if !(direct && cfg.params.dapd_pre_commits(arena.conf[c])) {
+                                arena.present.push((ui, c));
                             }
                         }
-                        let tau = cfg.params.tau.at(progress);
                         let ig = st
                             .inc_graph
                             .get_or_insert_with(|| IncrementalGraph::new(cache_eps));
-                        Some(ig.update(&universe, &present, &scores, n, tau))
+                        let dep =
+                            ig.update(&arena.universe, &arena.present, &arena.edges, tau);
+                        self.timings.graph_build_ns +=
+                            t_graph.elapsed().as_nanos() as u64;
+                        Some(dep)
                     } else {
                         None
                     };
 
                     let ctx = StepCtx {
-                        positions: &positions,
-                        conf: &conf,
-                        argmax_tok: &amax,
-                        entropy: &ent,
-                        kl_prev: &kl,
-                        scores_norm: &scores,
-                        degrees: &degrees,
+                        positions: &arena.positions,
+                        conf: &arena.conf,
+                        argmax_tok: &arena.amax,
+                        entropy: &arena.entropy,
+                        kl_prev: &arena.kl,
+                        edges: &arena.edges,
+                        degrees: &arena.degrees,
                         progress,
                         mask_ratio: masked_total as f32 / g as f32,
                         graph: graph.map(|dep| PrebuiltGraph {
                             graph: dep,
-                            to_candidate: &to_candidate,
+                            to_candidate: &arena.to_candidate,
                         }),
                     };
-                    let mut selected = self.strategy.select(&ctx);
-                    if selected.is_empty() {
-                        // guarantee progress: commit the max-confidence candidate
-                        let (best, _) = argmax(&conf);
-                        selected = vec![best];
+                    let t_sel = Instant::now();
+                    self.strategy.select(&ctx, &mut self.sel_buf);
+                    if self.sel_buf.is_empty() {
+                        // guarantee progress: commit the max-confidence
+                        // candidate
+                        let (best, _) = argmax(&arena.conf);
+                        self.sel_buf.push(best);
                     }
-                    selected.sort_unstable();
-                    selected.dedup();
+                    self.sel_buf.sort_unstable();
+                    self.sel_buf.dedup();
+                    self.timings.select_ns += t_sel.elapsed().as_nanos() as u64;
 
                     // ---- commit -----------------------------------------
-                    let mut committed = Vec::with_capacity(selected.len());
-                    for &c in &selected {
-                        let pos = positions[c];
-                        self.tokens[s * l + pos] = amax[c];
+                    for &c in &self.sel_buf {
+                        let pos = arena.positions[c];
+                        self.tokens[s * l + pos] = arena.amax[c];
                         st.commit_step[pos - p] = step;
-                        committed.push(pos - p);
+                        st.per_step_flat.push(pos - p);
                     }
-                    st.per_step.push(committed);
+                    st.per_step_ends.push(st.per_step_flat.len());
 
                     // store this step's distributions for KLASS stability
-                    if st.prev_probs.is_empty() {
-                        st.prev_probs = vec![0.0f32; g * v];
-                    }
-                    for (c, &pos) in positions.iter().enumerate() {
-                        let gen_pos = pos - p;
-                        st.prev_probs[gen_pos * v..(gen_pos + 1) * v]
-                            .copy_from_slice(&probs_buf[c * v..(c + 1) * v]);
-                    }
+                    arena.commit_prev(p, v);
 
                     // done when nothing masked remains in the generation
                     // window, or the per-sample step cap is hit
@@ -451,6 +446,12 @@ impl<'m> SlotBatch<'m> {
                 }
                 self.occupied -= 1;
                 let row = &self.tokens[s * l..(s + 1) * l];
+                let mut per_step = Vec::with_capacity(st.per_step_ends.len());
+                let mut start = 0;
+                for &end in &st.per_step_ends {
+                    per_step.push(st.per_step_flat[start..end].to_vec());
+                    start = end;
+                }
                 finished.push((
                     st.id,
                     DecodeOutcome {
@@ -462,7 +463,7 @@ impl<'m> SlotBatch<'m> {
                             .iter()
                             .map(|&x| if x == usize::MAX { 0 } else { x })
                             .collect(),
-                        per_step_commits: st.per_step,
+                        per_step_commits: per_step,
                     },
                 ));
             }
@@ -492,14 +493,21 @@ impl<'m> SlotBatch<'m> {
         stats
     }
 
+    /// Aggregated step-pipeline phase timings since construction
+    /// (feature derivation / cache-layer graph maintenance / strategy
+    /// selection) — the worker pool folds these into its metrics.
+    pub fn timings(&self) -> StepTimings {
+        self.timings
+    }
+
     /// Build a step-0 `StepOutput` for the whole board from the occupied
     /// slots' prefix-cache rows (all slots verified on step 0 with rows
     /// present by the caller).  Vacant rows stay zero: the per-slot loop
     /// never reads them.
     fn assemble_prefix_board(&self) -> Result<StepOutput> {
         let b = self.model.batch();
-        let l = self.model.seq_len();
-        let v = self.model.vocab();
+        let l = self.dims.seq_len;
+        let v = self.dims.vocab;
         let occupied: Vec<(usize, &FirstStepRows)> = self
             .slots
             .iter()
@@ -741,5 +749,42 @@ mod tests {
         }
         assert_eq!(pc.misses(), 1, "only the first request may miss");
         assert_eq!(pc.hits(), 2);
+    }
+
+    #[test]
+    fn feature_threads_do_not_change_results() {
+        let m = MockModel::new(4, 24, 8, 16);
+        for method in [Method::DapdStaged, Method::Klass] {
+            let mut cfg = DecodeConfig::new(method);
+            let base = decode_batch(&m, &[prompt(0), prompt(1), prompt(2)], &cfg).unwrap();
+            cfg.feature_threads = 3;
+            let par = decode_batch(&m, &[prompt(0), prompt(1), prompt(2)], &cfg).unwrap();
+            for (b, q) in base.iter().zip(&par) {
+                assert_eq!(b.gen, q.gen, "{method:?}");
+                assert_eq!(b.steps, q.steps);
+                assert_eq!(b.per_step_commits, q.per_step_commits);
+            }
+        }
+    }
+
+    #[test]
+    fn timings_accumulate_per_phase() {
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::DapdStaged);
+        let cache = CacheConfig {
+            enabled: true,
+            refresh_every: 4,
+            epsilon: 0.0,
+            prefix_lru_cap: 0,
+        };
+        let mut sb = SlotBatch::with_cache(&m, &cfg, &cache, None).unwrap();
+        sb.admit(0, &prompt(0)).unwrap();
+        while sb.occupied() > 0 {
+            sb.step().unwrap();
+        }
+        let t = sb.timings();
+        assert!(t.feature_ns > 0, "feature phase untimed");
+        assert!(t.select_ns > 0, "select phase untimed");
+        assert!(t.graph_build_ns > 0, "cached DAPD must time graph upkeep");
     }
 }

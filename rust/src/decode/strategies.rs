@@ -1,15 +1,26 @@
 //! The training-free parallel decoding strategies (paper Sec. 2.2, 4.3).
 //!
-//! Each returns candidate indices to unmask this step.  An empty return
-//! is upgraded to {argmax-confidence} by the driver, so every strategy
-//! makes progress (matching all the papers' fallback behavior).
+//! Each fills `out` with the candidate indices to unmask this step.  An
+//! empty result is upgraded to {argmax-confidence} by the driver, so
+//! every strategy makes progress (matching all the papers' fallback
+//! behavior).
+//!
+//! Strategies take `&mut self` and an output buffer: every per-step
+//! scratch (Welsh-Powell ordering, eligibility masks, the rebuilt
+//! dependency graph of the uncached DAPD path) lives in the strategy and
+//! is reused across steps, so selection performs zero steady-state
+//! allocations — the discipline `benches/step_pipeline.rs` asserts under
+//! a counting allocator.  Edge scores arrive as sparse CSR
+//! [`crate::graph::EdgeScores`] (`StepCtx::edges`), never as a dense
+//! matrix.
 
-use crate::graph::DepGraph;
+use crate::graph::{DepGraph, WpScratch};
 
-use super::{Method, MethodParams, StepCtx};
+use super::{DapdOrdering, Method, MethodParams, StepCtx};
 
-pub trait Strategy: Send + Sync {
-    fn select(&self, ctx: &StepCtx) -> Vec<usize>;
+pub trait Strategy: Send {
+    /// Fill `out` (cleared first) with this step's selection.
+    fn select(&mut self, ctx: &StepCtx, out: &mut Vec<usize>);
 }
 
 pub fn make_strategy(method: Method, params: MethodParams) -> Box<dyn Strategy> {
@@ -18,14 +29,8 @@ pub fn make_strategy(method: Method, params: MethodParams) -> Box<dyn Strategy> 
         Method::FastDllm => Box::new(FastDllm { params }),
         Method::EbSampler => Box::new(EbSampler { params }),
         Method::Klass => Box::new(Klass { params }),
-        Method::DapdStaged => Box::new(Dapd {
-            params,
-            direct: false,
-        }),
-        Method::DapdDirect => Box::new(Dapd {
-            params,
-            direct: true,
-        }),
+        Method::DapdStaged => Box::new(Dapd::new(params, false)),
+        Method::DapdDirect => Box::new(Dapd::new(params, true)),
     }
 }
 
@@ -33,9 +38,10 @@ pub fn make_strategy(method: Method, params: MethodParams) -> Box<dyn Strategy> 
 pub struct Original;
 
 impl Strategy for Original {
-    fn select(&self, ctx: &StepCtx) -> Vec<usize> {
+    fn select(&mut self, ctx: &StepCtx, out: &mut Vec<usize>) {
+        out.clear();
         let (best, _) = crate::tensor::argmax(ctx.conf);
-        vec![best]
+        out.push(best);
     }
 }
 
@@ -46,10 +52,9 @@ pub struct FastDllm {
 }
 
 impl Strategy for FastDllm {
-    fn select(&self, ctx: &StepCtx) -> Vec<usize> {
-        (0..ctx.conf.len())
-            .filter(|&c| ctx.conf[c] > self.params.conf_threshold)
-            .collect()
+    fn select(&mut self, ctx: &StepCtx, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend((0..ctx.conf.len()).filter(|&c| ctx.conf[c] > self.params.conf_threshold));
     }
 }
 
@@ -60,24 +65,28 @@ pub struct EbSampler {
 }
 
 impl Strategy for EbSampler {
-    fn select(&self, ctx: &StepCtx) -> Vec<usize> {
-        let mut order: Vec<usize> = (0..ctx.conf.len()).collect();
-        order.sort_by(|&a, &b| {
+    fn select(&mut self, ctx: &StepCtx, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(0..ctx.conf.len());
+        // unstable sort with an index tie-break: a total order, so the
+        // result is deterministic and allocation-free (a stable sort
+        // would allocate its merge buffer every step)
+        out.sort_unstable_by(|&a, &b| {
             ctx.conf[b]
                 .partial_cmp(&ctx.conf[a])
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(a.cmp(&b))
         });
-        let mut out = Vec::new();
         let mut budget = 0.0f32;
-        for &c in &order {
+        let mut keep = 0;
+        for (k, &c) in out.iter().enumerate() {
             budget += ctx.entropy[c];
-            if !out.is_empty() && budget > self.params.gamma {
+            if k > 0 && budget > self.params.gamma {
                 break;
             }
-            out.push(c); // first candidate always accepted
+            keep = k + 1; // first candidate always accepted
         }
-        out
+        out.truncate(keep);
     }
 }
 
@@ -88,13 +97,12 @@ pub struct Klass {
 }
 
 impl Strategy for Klass {
-    fn select(&self, ctx: &StepCtx) -> Vec<usize> {
-        (0..ctx.conf.len())
-            .filter(|&c| {
-                ctx.conf[c] > self.params.conf_threshold
-                    && ctx.kl_prev[c] < self.params.kl_threshold
-            })
-            .collect()
+    fn select(&mut self, ctx: &StepCtx, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend((0..ctx.conf.len()).filter(|&c| {
+            ctx.conf[c] > self.params.conf_threshold
+                && ctx.kl_prev[c] < self.params.kl_threshold
+        }));
     }
 }
 
@@ -113,111 +121,153 @@ impl Strategy for Klass {
 pub struct Dapd {
     params: MethodParams,
     direct: bool,
+    // ---- reusable per-step scratch (zero steady-state allocation) ----
+    eligible: Vec<bool>,
+    pre_committed: Vec<usize>,
+    priority: Vec<f32>,
+    picks: Vec<usize>,
+    /// membership mask over this step's graph selection — the staged
+    /// confidence shortcut used to `selected.contains(&c)` per candidate
+    /// (an O(n^2) scan); the mask makes it O(n)
+    in_selected: Vec<bool>,
+    /// rebuilt-from-CSR graph of the uncached path
+    graph: DepGraph,
+    wp: WpScratch,
+}
+
+impl Dapd {
+    pub fn new(params: MethodParams, direct: bool) -> Dapd {
+        Dapd {
+            params,
+            direct,
+            eligible: Vec::new(),
+            pre_committed: Vec::new(),
+            priority: Vec::new(),
+            picks: Vec::new(),
+            in_selected: Vec::new(),
+            graph: DepGraph::new(0),
+            wp: WpScratch::default(),
+        }
+    }
+}
+
+/// Welsh-Powell priority of candidate `c` (Sec. 4.3 "Practical
+/// Implementation" by default; other rules exist for the ordering
+/// ablation).  Ineligible nodes sink to the bottom and are skipped by
+/// the selection filters.
+fn cand_priority(
+    ordering: DapdOrdering,
+    eligible: &[bool],
+    degrees: &[f32],
+    conf: &[f32],
+    c: usize,
+) -> f32 {
+    if !eligible[c] {
+        return f32::NEG_INFINITY;
+    }
+    match ordering {
+        DapdOrdering::ConfDegree => degrees[c] * conf[c],
+        DapdOrdering::Degree => degrees[c],
+        DapdOrdering::Conf => conf[c],
+        DapdOrdering::Index => -(c as f32),
+    }
 }
 
 impl Strategy for Dapd {
-    fn select(&self, ctx: &StepCtx) -> Vec<usize> {
+    fn select(&mut self, ctx: &StepCtx, out: &mut Vec<usize>) {
+        out.clear();
         let n = ctx.positions.len();
         let tau = self.params.tau.at(ctx.progress);
 
-        let mut pre_committed: Vec<usize> = Vec::new();
-        let mut eligible: Vec<bool> = vec![true; n];
+        self.pre_committed.clear();
+        self.eligible.clear();
+        self.eligible.resize(n, true);
         if self.direct {
             for c in 0..n {
                 if self.params.dapd_pre_commits(ctx.conf[c]) {
-                    pre_committed.push(c);
-                    eligible[c] = false;
+                    self.pre_committed.push(c);
+                    self.eligible[c] = false;
                 }
             }
         }
 
-        // confidence-weighted degree ordering (Sec. 4.3 "Practical
-        // Implementation") by default; other rules exist for the
-        // ordering ablation.  Ineligible nodes sink to the bottom and
-        // are skipped below.
-        use super::DapdOrdering as O;
-        let cand_priority = |c: usize| -> f32 {
-            if !eligible[c] {
-                return f32::NEG_INFINITY;
-            }
-            match self.params.ordering {
-                O::ConfDegree => ctx.degrees[c] * ctx.conf[c],
-                O::Degree => ctx.degrees[c],
-                O::Conf => ctx.conf[c],
-                O::Index => -(c as f32),
-            }
-        };
-
-        let mut selected: Vec<usize> = if let Some(pg) = &ctx.graph {
+        if let Some(pg) = &ctx.graph {
             // cache layer handed us an incrementally-maintained graph
             // over the block universe; non-candidates are isolated and
             // lowest-priority, so the Welsh-Powell scan selects exactly
             // what a candidates-only graph would (see PrebuiltGraph)
             let u = pg.graph.len();
             debug_assert_eq!(pg.to_candidate.len(), u);
-            let priority: Vec<f32> = (0..u)
-                .map(|ui| {
-                    let c = pg.to_candidate[ui];
-                    if c == usize::MAX {
-                        f32::NEG_INFINITY
-                    } else {
-                        cand_priority(c)
-                    }
-                })
-                .collect();
-            let picks = pg.graph.welsh_powell_set(&priority);
-            picks
-                .into_iter()
-                .filter_map(|ui| {
-                    let c = pg.to_candidate[ui];
-                    if c != usize::MAX && eligible[c] {
-                        Some(c)
-                    } else {
-                        None
-                    }
-                })
-                .collect()
+            self.priority.clear();
+            for &c in pg.to_candidate.iter() {
+                self.priority.push(if c == usize::MAX {
+                    f32::NEG_INFINITY
+                } else {
+                    cand_priority(
+                        self.params.ordering,
+                        &self.eligible,
+                        ctx.degrees,
+                        ctx.conf,
+                        c,
+                    )
+                });
+            }
+            pg.graph
+                .welsh_powell_into(&self.priority, &mut self.wp, &mut self.picks);
+            for &ui in &self.picks {
+                let c = pg.to_candidate[ui];
+                if c != usize::MAX && self.eligible[c] {
+                    out.push(c);
+                }
+            }
         } else {
             // uncached path: dependency graph over eligible candidates
-            // at this step's tau, rebuilt from scratch
-            let graph = DepGraph::from_scores(
-                n,
-                |i, j| {
-                    if eligible[i] && eligible[j] {
-                        ctx.scores_norm[i * n + j]
-                    } else {
-                        // pre-committed nodes leave the graph entirely
-                        f32::NEG_INFINITY
-                    }
-                },
-                tau,
-            );
-            let priority: Vec<f32> = (0..n).map(cand_priority).collect();
-            graph
-                .welsh_powell_set(&priority)
-                .into_iter()
-                .filter(|&c| eligible[c])
-                .collect()
-        };
-
-        // Staged confidence shortcut in the sparse regime.
-        if !self.direct && ctx.mask_ratio < self.params.stage_ratio {
+            // at this step's tau, rebuilt from the CSR scores into the
+            // reusable graph (pre-committed nodes leave it entirely)
+            let eligible = &self.eligible;
+            self.graph
+                .rebuild_from_csr(ctx.edges, tau, |c| eligible[c]);
+            self.priority.clear();
             for c in 0..n {
-                if ctx.conf[c] > self.params.conf_threshold && !selected.contains(&c) {
-                    selected.push(c);
+                self.priority.push(cand_priority(
+                    self.params.ordering,
+                    eligible,
+                    ctx.degrees,
+                    ctx.conf,
+                    c,
+                ));
+            }
+            self.graph
+                .welsh_powell_into(&self.priority, &mut self.wp, &mut self.picks);
+            for &c in &self.picks {
+                if self.eligible[c] {
+                    out.push(c);
                 }
             }
         }
 
-        selected.extend(pre_committed);
-        selected
+        // Staged confidence shortcut in the sparse regime.
+        if !self.direct && ctx.mask_ratio < self.params.stage_ratio {
+            self.in_selected.clear();
+            self.in_selected.resize(n, false);
+            for &c in out.iter() {
+                self.in_selected[c] = true;
+            }
+            for c in 0..n {
+                if ctx.conf[c] > self.params.conf_threshold && !self.in_selected[c] {
+                    out.push(c);
+                }
+            }
+        }
+
+        out.extend_from_slice(&self.pre_committed);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::TauSchedule;
+    use crate::graph::{EdgeScores, TauSchedule};
 
     /// Hand-built StepCtx over owned buffers.
     struct CtxBuf {
@@ -227,6 +277,7 @@ mod tests {
         ent: Vec<f32>,
         kl: Vec<f32>,
         scores: Vec<f32>,
+        edges: EdgeScores,
         degrees: Vec<f32>,
         progress: f32,
         mask_ratio: f32,
@@ -241,6 +292,7 @@ mod tests {
                 ent: conf.iter().map(|c| 1.0 - c).collect(),
                 kl: vec![0.0; n],
                 scores: vec![0.0; n * n],
+                edges: EdgeScores::from_dense(&vec![0.0; n * n], n),
                 degrees: vec![0.0; n],
                 conf,
                 progress: 0.0,
@@ -254,6 +306,7 @@ mod tests {
             self.scores[j * n + i] = s;
             self.degrees[i] += s;
             self.degrees[j] += s;
+            self.edges.from_dense_into(&self.scores, n);
             self
         }
 
@@ -264,13 +317,19 @@ mod tests {
                 argmax_tok: &self.amax,
                 entropy: &self.ent,
                 kl_prev: &self.kl,
-                scores_norm: &self.scores,
+                edges: &self.edges,
                 degrees: &self.degrees,
                 progress: self.progress,
                 mask_ratio: self.mask_ratio,
                 graph: None,
             }
         }
+    }
+
+    fn run(s: &mut dyn Strategy, ctx: &StepCtx) -> Vec<usize> {
+        let mut out = Vec::new();
+        s.select(ctx, &mut out);
+        out
     }
 
     fn params() -> MethodParams {
@@ -283,56 +342,53 @@ mod tests {
     #[test]
     fn original_picks_max_conf() {
         let b = CtxBuf::new(vec![0.3, 0.9, 0.5]);
-        assert_eq!(Original.select(&b.ctx()), vec![1]);
+        assert_eq!(run(&mut Original, &b.ctx()), vec![1]);
     }
 
     #[test]
     fn fast_dllm_thresholds() {
-        let s = FastDllm { params: params() };
+        let mut s = FastDllm { params: params() };
         let b = CtxBuf::new(vec![0.95, 0.5, 0.92, 0.89]);
-        assert_eq!(s.select(&b.ctx()), vec![0, 2]);
+        assert_eq!(run(&mut s, &b.ctx()), vec![0, 2]);
         // nothing above threshold -> empty (driver falls back)
         let b2 = CtxBuf::new(vec![0.5, 0.6]);
-        assert!(s.select(&b2.ctx()).is_empty());
+        assert!(run(&mut s, &b2.ctx()).is_empty());
     }
 
     #[test]
     fn eb_sampler_entropy_budget() {
         let mut p = params();
         p.gamma = 0.16;
-        let s = EbSampler { params: p };
+        let mut s = EbSampler { params: p };
         // conf order: 0.95(H=.05), 0.9(H=.1), 0.8(H=.2)
         let b = CtxBuf::new(vec![0.8, 0.95, 0.9]);
         // prefix sums: .05, .15, .35 -> first two fit within 0.16
-        assert_eq!(s.select(&b.ctx()), vec![1, 2]);
+        assert_eq!(run(&mut s, &b.ctx()), vec![1, 2]);
     }
 
     #[test]
     fn eb_sampler_always_takes_one() {
         let mut p = params();
         p.gamma = 0.0;
-        let s = EbSampler { params: p };
+        let mut s = EbSampler { params: p };
         let b = CtxBuf::new(vec![0.5, 0.6]);
-        assert_eq!(s.select(&b.ctx()).len(), 1);
+        assert_eq!(run(&mut s, &b.ctx()).len(), 1);
     }
 
     #[test]
     fn klass_needs_confidence_and_stability() {
-        let s = Klass { params: params() };
+        let mut s = Klass { params: params() };
         let mut b = CtxBuf::new(vec![0.95, 0.95, 0.5]);
         b.kl = vec![0.001, 0.5, 0.001]; // candidate 1 unstable
-        assert_eq!(s.select(&b.ctx()), vec![0]);
+        assert_eq!(run(&mut s, &b.ctx()), vec![0]);
     }
 
     #[test]
     fn dapd_respects_edges() {
-        let s = Dapd {
-            params: params(),
-            direct: false,
-        };
+        let mut s = Dapd::new(params(), false);
         // two strongly-coupled candidates + one isolated
         let b = CtxBuf::new(vec![0.9, 0.8, 0.7]).with_edge(0, 1, 0.9);
-        let sel = s.select(&b.ctx());
+        let sel = run(&mut s, &b.ctx());
         // 0 has higher conf*degree than 1 -> selected; 1 conflicts; 2 free
         assert!(sel.contains(&0));
         assert!(!sel.contains(&1));
@@ -343,44 +399,35 @@ mod tests {
     fn dapd_hub_priority() {
         // star: center 1 coupled to 0 and 2; center picked first despite
         // equal confidence, because its degree dominates
-        let s = Dapd {
-            params: params(),
-            direct: false,
-        };
+        let mut s = Dapd::new(params(), false);
         let b = CtxBuf::new(vec![0.8, 0.8, 0.8])
             .with_edge(0, 1, 0.5)
             .with_edge(1, 2, 0.5);
-        let sel = s.select(&b.ctx());
+        let sel = run(&mut s, &b.ctx());
         assert_eq!(sel, vec![1]);
     }
 
     #[test]
     fn dapd_staged_conf_shortcut_after_half() {
-        let s = Dapd {
-            params: params(),
-            direct: false,
-        };
+        let mut s = Dapd::new(params(), false);
         // coupled pair, both very confident; early: only one unmasks
         let mut b = CtxBuf::new(vec![0.99, 0.98]).with_edge(0, 1, 0.9);
         b.mask_ratio = 0.9;
-        assert_eq!(s.select(&b.ctx()).len(), 1);
+        assert_eq!(run(&mut s, &b.ctx()).len(), 1);
         // late (sparse regime): conf > 0.9 shortcut admits both
         b.mask_ratio = 0.3;
-        let mut sel = s.select(&b.ctx());
+        let mut sel = run(&mut s, &b.ctx());
         sel.sort_unstable();
         assert_eq!(sel, vec![0, 1]);
     }
 
     #[test]
     fn dapd_direct_commits_conf_one() {
-        let s = Dapd {
-            params: params(),
-            direct: true,
-        };
+        let mut s = Dapd::new(params(), true);
         // candidate 0 has conf 1.0 and is coupled to 1: both still decode
         // (0 via direct commit, 1 as now-unconflicted graph node)
         let b = CtxBuf::new(vec![0.9999, 0.8]).with_edge(0, 1, 0.9);
-        let mut sel = s.select(&b.ctx());
+        let mut sel = run(&mut s, &b.ctx());
         sel.sort_unstable();
         assert_eq!(sel, vec![0, 1]);
     }
@@ -388,12 +435,9 @@ mod tests {
     #[test]
     fn prebuilt_universe_graph_matches_candidate_graph() {
         use super::super::PrebuiltGraph;
-        let s = Dapd {
-            params: params(),
-            direct: false,
-        };
+        let mut s = Dapd::new(params(), false);
         let b = CtxBuf::new(vec![0.9, 0.8, 0.7]).with_edge(0, 1, 0.9);
-        let plain = s.select(&b.ctx());
+        let plain = run(&mut s, &b.ctx());
         // same candidates embedded at universe nodes 0, 2, 4 of a 6-node
         // universe; non-candidates are isolated
         let mut g = DepGraph::new(6);
@@ -404,7 +448,7 @@ mod tests {
             graph: &g,
             to_candidate: &to_candidate,
         });
-        let via_universe = s.select(&ctx);
+        let via_universe = run(&mut s, &ctx);
         assert_eq!(plain, via_universe, "universe scan must match candidate scan");
     }
 
@@ -414,15 +458,26 @@ mod tests {
             tau: TauSchedule::new(0.05, 0.95),
             ..MethodParams::default()
         };
-        let s = Dapd {
-            params: p,
-            direct: false,
-        };
+        let mut s = Dapd::new(p, false);
         let mut b = CtxBuf::new(vec![0.9, 0.8]).with_edge(0, 1, 0.5);
         b.mask_ratio = 0.9; // keep staged shortcut off
         b.progress = 0.0; // tau = 0.05 < 0.5 -> edge present
-        assert_eq!(s.select(&b.ctx()).len(), 1);
+        assert_eq!(run(&mut s, &b.ctx()).len(), 1);
         b.progress = 1.0; // tau = 0.95 > 0.5 -> edge pruned
-        assert_eq!(s.select(&b.ctx()).len(), 2);
+        assert_eq!(run(&mut s, &b.ctx()).len(), 2);
+    }
+
+    #[test]
+    fn strategy_reuse_across_steps_is_stateless() {
+        // the scratch buffers must not leak one step's state into the
+        // next: shrinking n and changing edges give the same answers a
+        // fresh strategy would
+        let mut warm = Dapd::new(params(), false);
+        let big = CtxBuf::new(vec![0.9, 0.8, 0.7, 0.6]).with_edge(0, 1, 0.9);
+        let _ = run(&mut warm, &big.ctx());
+        let small = CtxBuf::new(vec![0.7, 0.9]).with_edge(0, 1, 0.9);
+        let got = run(&mut warm, &small.ctx());
+        let fresh = run(&mut Dapd::new(params(), false), &small.ctx());
+        assert_eq!(got, fresh);
     }
 }

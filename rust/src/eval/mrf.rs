@@ -9,6 +9,7 @@
 use anyhow::{bail, Result};
 
 use crate::graph::metrics::{evaluate, GraphEval};
+use crate::graph::EdgeScores;
 use crate::runtime::{ForwardModel, MrfSpec};
 use crate::tensor::{argmax, Tensor};
 use crate::util::rng::Pcg;
@@ -63,10 +64,11 @@ pub struct MrfSummary {
 }
 
 /// Average the selected layers of `attn_layers` [B, nl, L, L] for batch
-/// row `b` into a dense [L*L] buffer.
-fn layer_avg(attn: &Tensor, b: usize, layers: &[usize], l: usize) -> Vec<f32> {
+/// row `b` into a reusable dense [L*L] buffer.
+fn layer_avg_into(attn: &Tensor, b: usize, layers: &[usize], l: usize, out: &mut Vec<f32>) {
     let nl = attn.dims[1];
-    let mut out = vec![0.0f32; l * l];
+    out.clear();
+    out.resize(l * l, 0.0);
     for &layer in layers {
         debug_assert!(layer < nl);
         for i in 0..l {
@@ -76,10 +78,9 @@ fn layer_avg(attn: &Tensor, b: usize, layers: &[usize], l: usize) -> Vec<f32> {
         }
     }
     let inv = 1.0 / layers.len() as f32;
-    for x in &mut out {
+    for x in out.iter_mut() {
         *x *= inv;
     }
-    out
 }
 
 /// Run the validation: `n_paths` random unmasking orders, metrics at every
@@ -105,6 +106,12 @@ pub fn run_mrf_validation(
     let mut ratios: Vec<Vec<f64>> = vec![Vec::new(); l];
     let mut ovrs: Vec<Vec<f64>> = vec![Vec::new(); l];
 
+    // reusable step buffers: the layer average, the CSR edge scores the
+    // substrate produces, and their dense expansion for `evaluate`
+    let mut avg: Vec<f32> = Vec::new();
+    let mut edges = EdgeScores::new();
+    let mut scores: Vec<f32> = Vec::new();
+
     let mut path = 0;
     while path < n_paths {
         let chunk = (n_paths - path).min(b);
@@ -123,17 +130,24 @@ pub fn run_mrf_validation(
                     .collect();
                 // metrics while the masked subgraph is non-trivial
                 if masked.len() >= 2 {
-                    let avg = layer_avg(attn, row, &layers, l);
+                    layer_avg_into(attn, row, &layers, l, &mut avg);
                     let n = masked.len();
-                    let mut scores = vec![0.0f32; n * n];
+                    // symmetrized scores through the CSR edge substrate
+                    // (what the decode pipeline consumes), expanded to
+                    // dense only for the AUC/OVR evaluation
+                    edges.begin(n);
                     for (ci, &i) in masked.iter().enumerate() {
                         for (cj, &j) in masked.iter().enumerate() {
                             if ci != cj {
-                                scores[ci * n + cj] =
-                                    0.5 * (avg[i * l + j] + avg[j * l + i]);
+                                let s = 0.5 * (avg[i * l + j] + avg[j * l + i]);
+                                if s > 0.0 {
+                                    edges.push(cj, s);
+                                }
                             }
                         }
+                        edges.end_row();
                     }
+                    edges.to_dense_into(&mut scores);
                     // ground-truth subgraph over candidates
                     let sub_edges: Vec<(usize, usize)> = spec
                         .true_edges
@@ -228,9 +242,10 @@ mod tests {
         let mut data = vec![1.0f32; 4];
         data.extend(vec![3.0f32; 4]);
         let t = Tensor::new(data, &[1, 2, 2, 2]);
-        let avg = layer_avg(&t, 0, &[0, 1], 2);
+        let mut avg = Vec::new();
+        layer_avg_into(&t, 0, &[0, 1], 2, &mut avg);
         assert!(avg.iter().all(|&x| (x - 2.0).abs() < 1e-6));
-        let only1 = layer_avg(&t, 0, &[1], 2);
-        assert!(only1.iter().all(|&x| (x - 3.0).abs() < 1e-6));
+        layer_avg_into(&t, 0, &[1], 2, &mut avg);
+        assert!(avg.iter().all(|&x| (x - 3.0).abs() < 1e-6));
     }
 }

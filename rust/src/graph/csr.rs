@@ -1,0 +1,244 @@
+//! Sparse candidate-pair edge scores in CSR form — the edge substrate
+//! the whole step pipeline runs on.
+//!
+//! The seed decode loop materialized a dense `n*n` score matrix per slot
+//! per step; attention-induced dependency graphs are sparse (banded or
+//! thresholded attention), so almost all of that buffer was zeros that
+//! still had to be allocated, normalized and summed.  [`EdgeScores`]
+//! stores only the strictly-positive entries, row by row, in three flat
+//! vectors that are reused across steps (`begin` keeps capacity), so the
+//! steady-state build cost is O(nnz) with zero allocation.
+//!
+//! Representation contract (what makes the CSR path *exactly* equal to
+//! the dense one, pinned by the `from_csr` property test):
+//!
+//! * scores are attention mass, hence `>= 0`; only entries `> 0.0` are
+//!   stored and an absent pair reads as `0.0`;
+//! * thresholds (tau schedules) are non-negative, so `score > tau` is
+//!   false for every unstored pair — [`DepGraph::from_csr`] over the CSR
+//!   equals [`DepGraph::from_scores`] over the dense matrix;
+//! * row sums (proxy degrees) and the max over entries are unchanged by
+//!   dropping zeros, so degrees and max-normalization agree too.
+//!
+//! [`DepGraph::from_csr`]: super::DepGraph::from_csr
+//! [`DepGraph::from_scores`]: super::DepGraph::from_scores
+
+/// Symmetric candidate-pair scores over `n` nodes, CSR layout, storing
+/// only strictly-positive entries.  Both `(i, j)` and `(j, i)` are
+/// stored so row iteration yields full neighborhoods (degrees are plain
+/// row sums, as in the dense layout).
+#[derive(Debug, Clone, Default)]
+pub struct EdgeScores {
+    n: usize,
+    /// row start offsets, `n + 1` entries once all rows are closed
+    row_ptr: Vec<usize>,
+    /// column (candidate) indices, ascending within each row
+    cols: Vec<usize>,
+    vals: Vec<f32>,
+}
+
+impl EdgeScores {
+    pub fn new() -> EdgeScores {
+        EdgeScores::default()
+    }
+
+    /// Number of nodes (candidates) of the last `begin`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored (directed) entries; the undirected edge count is `nnz / 2`.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Start a fresh build over `n` nodes, keeping buffer capacity.
+    /// Rows must then be emitted in order: `push` the ascending columns
+    /// of row 0, `end_row()`, row 1, ... until `n` rows are closed.
+    pub fn begin(&mut self, n: usize) {
+        self.n = n;
+        self.row_ptr.clear();
+        self.row_ptr.reserve(n + 1);
+        self.row_ptr.push(0);
+        self.cols.clear();
+        self.vals.clear();
+    }
+
+    /// Append one entry to the row currently being built.  Callers emit
+    /// columns in ascending order (the builders in this crate iterate
+    /// candidates in index order), which `get` relies on.
+    #[inline]
+    pub fn push(&mut self, col: usize, val: f32) {
+        debug_assert!(col < self.n);
+        debug_assert!(val > 0.0, "only strictly-positive scores are stored");
+        debug_assert!(
+            self.cols.len() == *self.row_ptr.last().unwrap()
+                || *self.cols.last().unwrap() < col,
+            "columns must ascend within a row"
+        );
+        self.cols.push(col);
+        self.vals.push(val);
+    }
+
+    /// Close the row currently being built.
+    #[inline]
+    pub fn end_row(&mut self) {
+        debug_assert!(self.row_ptr.len() <= self.n, "more rows than begin(n)");
+        self.row_ptr.push(self.cols.len());
+    }
+
+    /// Columns and values of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f32]) {
+        let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.cols[a..b], &self.vals[a..b])
+    }
+
+    /// Score of pair `(i, j)`; `0.0` when the pair is not stored
+    /// (binary search over the ascending row columns).
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&j) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Maximum stored score (0.0 when empty) — equal to the dense max,
+    /// since dropped entries are zeros.
+    pub fn max(&self) -> f32 {
+        self.vals.iter().cloned().fold(0.0f32, f32::max)
+    }
+
+    /// Divide every stored score by the max (no-op when the max is 0);
+    /// returns the max.  Mirrors [`super::max_normalize`] on the dense
+    /// layout.
+    pub fn max_normalize(&mut self) -> f32 {
+        let m = self.max();
+        if m > 0.0 {
+            let inv = 1.0 / m;
+            for v in &mut self.vals {
+                *v *= inv;
+            }
+        }
+        m
+    }
+
+    /// Row sums (proxy degrees) into a reusable buffer.
+    pub fn degrees_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.n, 0.0);
+        for i in 0..self.n {
+            let (_, vals) = self.row(i);
+            out[i] = vals.iter().sum();
+        }
+    }
+
+    /// Expand into a dense row-major `n*n` buffer (absent pairs = 0.0).
+    /// For consumers that still need the dense view (graph-recovery
+    /// metrics); reuses `out`'s capacity.
+    pub fn to_dense_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.n * self.n, 0.0);
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            for (&j, &s) in cols.iter().zip(vals) {
+                out[i * self.n + j] = s;
+            }
+        }
+    }
+
+    /// Build from a dense row-major `n*n` matrix, keeping entries
+    /// `> 0.0` (tests, benches and the dense-reference pipelines).
+    pub fn from_dense(scores: &[f32], n: usize) -> EdgeScores {
+        let mut es = EdgeScores::new();
+        es.from_dense_into(scores, n);
+        es
+    }
+
+    /// `from_dense` into `self`, reusing capacity.
+    pub fn from_dense_into(&mut self, scores: &[f32], n: usize) {
+        assert_eq!(scores.len(), n * n);
+        self.begin(n);
+        for i in 0..n {
+            for j in 0..n {
+                let s = scores[i * n + j];
+                if j != i && s > 0.0 {
+                    self.push(j, s);
+                }
+            }
+            self.end_row();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_3() -> Vec<f32> {
+        // symmetric, zero diag: edges (0,1)=0.5, (1,2)=0.25
+        vec![
+            0.0, 0.5, 0.0, //
+            0.5, 0.0, 0.25, //
+            0.0, 0.25, 0.0,
+        ]
+    }
+
+    #[test]
+    fn build_get_and_degrees() {
+        let es = EdgeScores::from_dense(&dense_3(), 3);
+        assert_eq!(es.n(), 3);
+        assert_eq!(es.nnz(), 4);
+        assert_eq!(es.get(0, 1), 0.5);
+        assert_eq!(es.get(1, 0), 0.5);
+        assert_eq!(es.get(0, 2), 0.0);
+        let (cols, vals) = es.row(1);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[0.5, 0.25]);
+        let mut deg = Vec::new();
+        es.degrees_into(&mut deg);
+        assert_eq!(deg, vec![0.5, 0.75, 0.25]);
+    }
+
+    #[test]
+    fn max_normalize_matches_dense() {
+        let mut dense = dense_3();
+        let mut es = EdgeScores::from_dense(&dense, 3);
+        let m_sparse = es.max_normalize();
+        let m_dense = crate::graph::max_normalize(&mut dense);
+        assert_eq!(m_sparse, m_dense);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(es.get(i, j), dense[i * 3 + j], "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_to_dense() {
+        let dense = dense_3();
+        let es = EdgeScores::from_dense(&dense, 3);
+        let mut back = Vec::new();
+        es.to_dense_into(&mut back);
+        assert_eq!(back, dense);
+    }
+
+    #[test]
+    fn reuse_keeps_capacity_and_resets_state() {
+        let mut es = EdgeScores::from_dense(&dense_3(), 3);
+        let cols_cap = es.cols.capacity();
+        es.from_dense_into(&[0.0, 0.9, 0.9, 0.0], 2);
+        assert_eq!(es.n(), 2);
+        assert_eq!(es.nnz(), 2);
+        assert_eq!(es.get(0, 1), 0.9);
+        assert!(es.cols.capacity() >= cols_cap.min(2));
+        // empty build
+        es.begin(1);
+        es.end_row();
+        assert_eq!(es.nnz(), 0);
+        assert_eq!(es.get(0, 0), 0.0);
+        assert_eq!(es.max(), 0.0);
+        assert_eq!(es.max_normalize(), 0.0);
+    }
+}

@@ -5,7 +5,10 @@
 //! selecting an independent set per step; DAPD uses a Welsh-Powell-style
 //! degree-prioritized greedy selection (Sec. 4.3).
 
+pub mod csr;
 pub mod metrics;
+
+pub use csr::EdgeScores;
 
 use crate::tensor::Tensor;
 
@@ -23,6 +26,10 @@ pub struct TauSchedule {
 impl TauSchedule {
     pub fn new(min: f32, max: f32) -> TauSchedule {
         assert!(min <= max);
+        // non-negative thresholds are what make the sparse edge substrate
+        // exact: pairs absent from an `EdgeScores` read as 0.0, and
+        // `0.0 > tau` must stay false (see graph::csr module docs)
+        assert!(min >= 0.0, "tau must be non-negative");
         TauSchedule { min, max }
     }
 
@@ -52,6 +59,19 @@ impl DepGraph {
             adj: vec![0; n * words],
             degree: vec![0; n],
         }
+    }
+
+    /// Clear and resize for `n` nodes, reusing the bitset buffers.  Once
+    /// warm (the buffers have reached their peak size), resetting costs
+    /// a memset and no allocation — the rebuild discipline of the
+    /// zero-alloc step pipeline.
+    pub fn reset(&mut self, n: usize) {
+        self.n = n;
+        self.words = n.div_ceil(64);
+        self.adj.clear();
+        self.adj.resize(n * self.words, 0);
+        self.degree.clear();
+        self.degree.resize(n, 0);
     }
 
     pub fn len(&self) -> usize {
@@ -124,6 +144,42 @@ impl DepGraph {
         g
     }
 
+    /// Build from sparse CSR edge scores: edge iff the stored score is
+    /// `> tau`.  For `tau >= 0` (every schedule in this crate) this
+    /// equals [`DepGraph::from_scores`] over the dense matrix, in O(nnz)
+    /// instead of O(n^2) — pinned by a property test below.
+    pub fn from_csr(edges: &EdgeScores, tau: f32) -> DepGraph {
+        let mut g = DepGraph::new(edges.n());
+        g.rebuild_from_csr(edges, tau, |_| true);
+        g
+    }
+
+    /// Reusable-buffer variant of [`DepGraph::from_csr`] with a node
+    /// eligibility predicate: ineligible nodes keep no edges (equivalent
+    /// to an effective score of `-inf`, the rule DAPD-Direct uses for
+    /// pre-committed candidates).
+    pub fn rebuild_from_csr<F: Fn(usize) -> bool>(
+        &mut self,
+        edges: &EdgeScores,
+        tau: f32,
+        eligible: F,
+    ) {
+        let n = edges.n();
+        self.reset(n);
+        for i in 0..n {
+            if !eligible(i) {
+                continue;
+            }
+            let (cols, vals) = edges.row(i);
+            for (&j, &s) in cols.iter().zip(vals) {
+                // symmetric storage: visit each undirected pair once
+                if j > i && s > tau && eligible(j) {
+                    self.add_edge(i, j);
+                }
+            }
+        }
+    }
+
     /// Welsh-Powell-style maximal independent set: scan nodes in the
     /// given priority order (highest first), adding each node that is
     /// non-adjacent to everything already selected (Sec. 4.3).
@@ -131,28 +187,45 @@ impl DepGraph {
     /// `priority` has one entry per node; ties broken by node index for
     /// determinism.  Returns selected node indices.
     pub fn welsh_powell_set(&self, priority: &[f32]) -> Vec<usize> {
+        let mut scratch = WpScratch::default();
+        let mut out = Vec::new();
+        self.welsh_powell_into(priority, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`DepGraph::welsh_powell_set`] into reusable buffers — the
+    /// zero-alloc form the step pipeline calls every step.  The sort is
+    /// unstable; the comparator's index tie-break makes it a total
+    /// order, so the selection is identical to the allocating form.
+    pub fn welsh_powell_into(
+        &self,
+        priority: &[f32],
+        scratch: &mut WpScratch,
+        out: &mut Vec<usize>,
+    ) {
         assert_eq!(priority.len(), self.n);
-        let mut order: Vec<usize> = (0..self.n).collect();
-        order.sort_by(|&a, &b| {
+        scratch.order.clear();
+        scratch.order.extend(0..self.n);
+        scratch.order.sort_unstable_by(|&a, &b| {
             priority[b]
                 .partial_cmp(&priority[a])
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(a.cmp(&b))
         });
-        let mut selected_bits = vec![0u64; self.words];
-        let mut selected = Vec::new();
-        for &node in &order {
+        scratch.selected_bits.clear();
+        scratch.selected_bits.resize(self.words, 0);
+        out.clear();
+        for &node in &scratch.order {
             let row = self.row(node);
             let conflict = row
                 .iter()
-                .zip(&selected_bits)
+                .zip(&scratch.selected_bits)
                 .any(|(r, s)| r & s != 0);
             if !conflict {
-                selected_bits[node / 64] |= 1 << (node % 64);
-                selected.push(node);
+                scratch.selected_bits[node / 64] |= 1 << (node % 64);
+                out.push(node);
             }
         }
-        selected
     }
 
     /// Full greedy (Welsh-Powell) coloring: repeatedly peel independent
@@ -207,27 +280,45 @@ impl DepGraph {
     }
 }
 
+/// Reusable scratch for [`DepGraph::welsh_powell_into`].
+#[derive(Debug, Default, Clone)]
+pub struct WpScratch {
+    order: Vec<usize>,
+    selected_bits: Vec<u64>,
+}
+
 /// Symmetrized masked edge scores computed natively from an attention
 /// matrix (the L1 kernel does the same on-device for serving artifacts;
 /// this path serves toy artifacts and integration cross-checks).
 ///
-/// `attn`: [L, L] row-stochastic; `masked`: candidate positions.
-/// Returns (scores dense [n, n] over candidates, degrees [n]).
-pub fn edge_scores_from_attn(attn: &Tensor, b: usize, masked: &[usize]) -> (Vec<f32>, Vec<f32>) {
+/// `attn`: [L, L] row-stochastic; `masked`: candidate positions.  Builds
+/// the sparse CSR `edges` over candidate indices (only pairs with
+/// positive attention mass are materialized) and the proxy degrees,
+/// reusing both buffers' capacity.
+pub fn edge_scores_from_attn(
+    attn: &Tensor,
+    b: usize,
+    masked: &[usize],
+    edges: &mut EdgeScores,
+    degrees: &mut Vec<f32>,
+) {
     let n = masked.len();
-    let mut scores = vec![0.0f32; n * n];
-    let mut degrees = vec![0.0f32; n];
+    edges.begin(n);
+    degrees.clear();
+    degrees.resize(n, 0.0);
     for (ii, &i) in masked.iter().enumerate() {
         for (jj, &j) in masked.iter().enumerate() {
             if ii == jj {
                 continue;
             }
             let s = 0.5 * (attn.at3(b, i, j) + attn.at3(b, j, i));
-            scores[ii * n + jj] = s;
-            degrees[ii] += s;
+            if s > 0.0 {
+                edges.push(jj, s);
+                degrees[ii] += s;
+            }
         }
+        edges.end_row();
     }
-    (scores, degrees)
 }
 
 /// Max-normalize a dense score matrix in place; returns the max.
@@ -403,10 +494,88 @@ mod tests {
         attn[1 * 4 + 3] = 0.4; // a_13
         attn[3 * 4 + 1] = 0.2; // a_31
         let t = Tensor::new(attn, &[1, 4, 4]);
-        let (s, d) = edge_scores_from_attn(&t, 0, &[1, 3]);
-        assert!((s[0 * 2 + 1] - 0.3).abs() < 1e-6);
-        assert!((s[1 * 2 + 0] - 0.3).abs() < 1e-6);
+        let mut es = EdgeScores::new();
+        let mut d = Vec::new();
+        edge_scores_from_attn(&t, 0, &[1, 3], &mut es, &mut d);
+        assert_eq!(es.n(), 2);
+        assert_eq!(es.nnz(), 2); // the symmetric pair, both directions
+        assert!((es.get(0, 1) - 0.3).abs() < 1e-6);
+        assert!((es.get(1, 0) - 0.3).abs() < 1e-6);
         assert!((d[0] - 0.3).abs() < 1e-6);
+        // reuse with a different candidate set keeps the buffers coherent
+        edge_scores_from_attn(&t, 0, &[0, 1, 3], &mut es, &mut d);
+        assert_eq!(es.n(), 3);
+        assert!((es.get(1, 2) - 0.3).abs() < 1e-6);
+        assert_eq!(es.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn from_csr_equals_from_scores_prop() {
+        // the satellite pin: DepGraph::from_csr over the sparse substrate
+        // equals DepGraph::from_scores over the dense matrix, at random
+        // densities and random tau
+        prop::check("from-csr-equals-dense", 50, |rng: &mut Pcg| {
+            let n = rng.range(1, 48);
+            let mut scores = vec![0.0f32; n * n];
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    // ~half the pairs stay exactly zero (unstored in CSR)
+                    if rng.bool(0.5) {
+                        let s = rng.f64() as f32;
+                        scores[i * n + j] = s;
+                        scores[j * n + i] = s;
+                    }
+                }
+            }
+            let tau = rng.f64() as f32; // in [0, 1)
+            let want = DepGraph::from_scores(n, |i, j| scores[i * n + j], tau);
+            let es = EdgeScores::from_dense(&scores, n);
+            let got = DepGraph::from_csr(&es, tau);
+            assert_eq!(got.len(), want.len());
+            for i in 0..n {
+                assert_eq!(got.degree(i), want.degree(i), "degree of {i}");
+                for j in 0..n {
+                    assert_eq!(got.has_edge(i, j), want.has_edge(i, j), "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn reset_reuses_and_rebuild_respects_eligibility() {
+        let mut g = DepGraph::new(5);
+        g.add_edge(0, 1);
+        g.reset(3);
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.edge_count(), 0);
+        // rebuild over a triangle, with node 1 ineligible
+        let dense = [
+            0.0, 0.9, 0.9, //
+            0.9, 0.0, 0.9, //
+            0.9, 0.9, 0.0,
+        ];
+        let es = EdgeScores::from_dense(&dense, 3);
+        g.rebuild_from_csr(&es, 0.5, |i| i != 1);
+        assert!(g.has_edge(0, 2));
+        assert!(!g.has_edge(0, 1) && !g.has_edge(1, 2));
+        assert_eq!(g.edge_count(), 1);
+    }
+
+    #[test]
+    fn welsh_powell_into_matches_allocating_form() {
+        prop::check("wp-into-equals-set", 30, |rng: &mut Pcg| {
+            let n = rng.range(1, 60);
+            let mut g = DepGraph::new(n);
+            for _ in 0..rng.below(2 * n) {
+                g.add_edge(rng.below(n), rng.below(n));
+            }
+            let prio: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+            let want = g.welsh_powell_set(&prio);
+            let mut scratch = WpScratch::default();
+            let mut got = Vec::new();
+            g.welsh_powell_into(&prio, &mut scratch, &mut got);
+            assert_eq!(got, want);
+        });
     }
 
     #[test]

@@ -11,11 +11,13 @@
 //! * [`tensor`]      — flat f32 tensor views + softmax/entropy/KL
 //! * [`runtime`]     — artifact registry + PJRT engine + mock model +
 //!                     per-worker model replication (`ModelPool`)
-//! * [`graph`]       — attention-induced dependency graph, Welsh-Powell
+//! * [`graph`]       — attention-induced dependency graph, Welsh-Powell,
+//!                     sparse CSR edge scores (`EdgeScores`)
 //! * [`cache`]       — compute reuse: block-wise cached forwards,
 //!                     incremental dependency graphs, cross-request
 //!                     prefix cache
-//! * [`decode`]      — all decoding strategies + the slot-level
+//! * [`decode`]      — all decoding strategies + the zero-alloc step
+//!                     pipeline (`features`) + the slot-level
 //!                     continuously-batching decode loop
 //! * [`workload`]    — eval sets, task scorers, arrival processes
 //! * [`eval`]        — experiment harness (accuracy/steps grids, segments,

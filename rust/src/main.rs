@@ -9,6 +9,8 @@
 //!           [--mock]   (--mock serves the synthetic model, no artifacts)
 //!           [--cache] [--refresh-every K] [--cache-epsilon E]
 //!           [--prefix-lru-cap N]   (compute-reuse subsystem)
+//!           [--feature-threads T]  (per-step feature fan-out; 1 =
+//!           the sequential zero-alloc pipeline, results unchanged)
 //!   client  --addr HOST:PORT --task T [--n N] [--method X]
 //!
 //! Common flags: --artifacts DIR (default ./artifacts), --batch B,
@@ -62,28 +64,30 @@ fn artifacts_dir(args: &Args) -> std::path::PathBuf {
     std::path::PathBuf::from(args.str_or("artifacts", "artifacts"))
 }
 
-fn method_params(args: &Args) -> MethodParams {
+fn method_params(args: &Args) -> Result<MethodParams> {
     let d = MethodParams::default();
-    MethodParams {
+    let tau_min = args.f64_or("tau-min", d.tau.min as f64) as f32;
+    let tau_max = args.f64_or("tau-max", d.tau.max as f64) as f32;
+    if tau_min < 0.0 || tau_min > tau_max {
+        bail!("tau schedule must satisfy 0 <= tau-min <= tau-max (got {tau_min}..{tau_max})");
+    }
+    Ok(MethodParams {
         conf_threshold: args.f64_or("conf-threshold", d.conf_threshold as f64) as f32,
         gamma: args.f64_or("gamma", d.gamma as f64) as f32,
         kl_threshold: args.f64_or("kl-threshold", d.kl_threshold as f64) as f32,
-        tau: TauSchedule::new(
-            args.f64_or("tau-min", d.tau.min as f64) as f32,
-            args.f64_or("tau-max", d.tau.max as f64) as f32,
-        ),
+        tau: TauSchedule::new(tau_min, tau_max),
         conf_one_eps: args.f64_or("conf-one-eps", d.conf_one_eps as f64) as f32,
         stage_ratio: args.f64_or("stage-ratio", d.stage_ratio as f64) as f32,
         ordering: d.ordering,
-    }
+    })
 }
 
-fn decode_config(args: &Args, method: Method) -> DecodeConfig {
+fn decode_config(args: &Args, method: Method) -> Result<DecodeConfig> {
     let mut cfg = DecodeConfig::new(method);
-    cfg.params = method_params(args);
+    cfg.params = method_params(args)?;
     cfg.blocks = args.usize_or("blocks", 1);
     cfg.eos_suppress = args.has("eos-inf");
-    cfg
+    Ok(cfg)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -118,7 +122,7 @@ fn cmd_decode(args: &Args) -> Result<()> {
 
     let model = engine.model_for(&model_name, batch, gen_len)?;
     let set = EvalSet::load(&engine.meta, &task)?.take(n);
-    let cfg = decode_config(args, method);
+    let cfg = decode_config(args, method)?;
     let r = run_eval(&model, &set, &cfg, method.name())?;
 
     let mut t = Table::new(
@@ -161,7 +165,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
         let set = EvalSet::load(&engine.meta, task)?.take(n);
         for mname in &methods {
             let method = Method::parse_or_err(mname)?;
-            let cfg = decode_config(args, method);
+            let cfg = decode_config(args, method)?;
             let r = run_eval(&model, &set, &cfg, mname)?;
             t.row(vec![
                 task.clone(),

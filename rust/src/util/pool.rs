@@ -1,8 +1,12 @@
 //! Thread-pool substrate (tokio is not vendored; the coordinator uses
 //! blocking threads over std::sync primitives).
 //!
-//! A fixed pool of workers draining a shared FIFO of boxed closures.
-//! `scope_map` provides a parallel-map convenience used by benches.
+//! A fixed pool of workers draining a shared FIFO of boxed closures;
+//! `par_map` is the parallel-map convenience over it.  `scope_chunks`
+//! is the *scoped* counterpart for jobs that borrow the caller's stack
+//! (the step pipeline's per-slot feature fan-out): the persistent pool
+//! requires `'static` closures, so borrowing work runs on
+//! `std::thread::scope` threads instead.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -63,6 +67,44 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Run `f` over every item with up to `threads` scoped worker threads,
+/// splitting `items` into contiguous chunks.  Unlike [`ThreadPool`] /
+/// [`par_map`], the closure may borrow from the caller's stack (no
+/// `'static` bound) — this is what lets the decode step pipeline fan
+/// per-slot derivation out over arenas it only borrows.  Runs inline
+/// when one thread (or one item) makes spawning pointless.
+///
+/// Cost model: this spawns fresh OS threads per call (tens of
+/// microseconds each) — worthwhile only when each item's work clearly
+/// exceeds the spawn cost (large boards / big candidate windows).  For
+/// small per-item work, callers should stay at `threads = 1`; the
+/// decode pipeline exposes this via `feature_threads` and its
+/// `feature_ns` metric is the signal for tuning it.
+pub fn scope_chunks<T, F>(threads: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Send + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        for item in items.iter_mut() {
+            f(item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads.min(n));
+    thread::scope(|scope| {
+        let f = &f;
+        for slice in items.chunks_mut(chunk) {
+            scope.spawn(move || {
+                for item in slice {
+                    f(item);
+                }
+            });
+        }
+    });
+}
+
 /// Parallel map with result ordering preserved.
 pub fn par_map<T, R, F>(pool: &ThreadPool, items: Vec<T>, f: F) -> Vec<R>
 where
@@ -112,5 +154,19 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = par_map(&pool, (0..50).collect(), |x: usize| x * x);
         assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_chunks_runs_every_item_with_borrows() {
+        // the closure borrows `base` from the caller's stack — the whole
+        // point of the scoped variant
+        let base = 10usize;
+        for threads in [1usize, 2, 3, 8] {
+            let mut items: Vec<usize> = (0..7).collect();
+            scope_chunks(threads, &mut items, |x| *x += base);
+            assert_eq!(items, (10..17).collect::<Vec<_>>(), "threads={threads}");
+        }
+        let mut empty: Vec<usize> = Vec::new();
+        scope_chunks(4, &mut empty, |_| unreachable!());
     }
 }

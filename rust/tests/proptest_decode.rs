@@ -3,10 +3,12 @@
 
 use dapd::cache::CacheConfig;
 use dapd::decode::{
-    decode_batch, decode_batch_cached, DapdOrdering, DecodeConfig, Method, MethodParams,
+    decode_batch, decode_batch_cached, make_strategy, DapdOrdering, DecodeConfig, DecodeOutcome,
+    Method, MethodParams, StepCtx,
 };
-use dapd::graph::TauSchedule;
-use dapd::runtime::MockModel;
+use dapd::graph::{max_normalize, EdgeScores, TauSchedule};
+use dapd::runtime::{ForwardModel, MockModel};
+use dapd::tensor::{argmax, entropy, kl_div, softmax_inplace};
 use dapd::util::prop;
 use dapd::util::rng::Pcg;
 
@@ -182,6 +184,214 @@ fn cached_decode_is_token_identical_to_uncached() {
             assert_eq!(w.gen, c.gen, "tokens diverged under caching");
             assert_eq!(w.steps, c.steps, "NFE diverged under caching");
             assert_eq!(w.per_step_commits, c.per_step_commits);
+        }
+    });
+}
+
+/// The *seed's* decode loop, replicated densely over a batch-1 model:
+/// fresh per-step buffers, a dense gathered + max-normalized score
+/// matrix with row-sum degrees, converted to CSR only at the `StepCtx`
+/// boundary.  This is the dense reference the arena + CSR pipeline must
+/// match token-for-token and NFE-identically.
+fn reference_decode(m: &MockModel, prompt: &[i32], cfg: &DecodeConfig) -> DecodeOutcome {
+    assert_eq!(m.batch, 1);
+    let l = m.seq_len;
+    let p = m.prompt_len;
+    let g = l - p;
+    let v = m.vocab;
+    let mask_id = m.mask_id;
+    let block_len = g / cfg.blocks;
+    let max_steps = if cfg.max_steps == 0 { g + 4 } else { cfg.max_steps };
+    let is_dapd = matches!(cfg.method, Method::DapdStaged | Method::DapdDirect);
+
+    let mut tokens: Vec<i32> = prompt.to_vec();
+    tokens.resize(l, mask_id);
+    let mut strategy = make_strategy(cfg.method, cfg.params);
+    let mut prev_probs: Vec<f32> = Vec::new();
+    let mut cur_block = 0usize;
+    let mut steps = 0usize;
+    let mut commit_step = vec![usize::MAX; g];
+    let mut per_step: Vec<Vec<usize>> = Vec::new();
+    loop {
+        let out = m.forward(&tokens).unwrap();
+        let step = steps;
+        steps += 1;
+
+        let (blk_start, blk_end) = loop {
+            let b0 = p + cur_block * block_len;
+            let b1 = if cur_block == cfg.blocks - 1 {
+                p + g
+            } else {
+                b0 + block_len
+            };
+            let any_masked = (b0..b1).any(|i| tokens[i] == mask_id);
+            if any_masked || cur_block == cfg.blocks - 1 {
+                break (b0, b1);
+            }
+            cur_block += 1;
+        };
+        let positions: Vec<usize> = (blk_start..blk_end)
+            .filter(|&i| tokens[i] == mask_id)
+            .collect();
+        if positions.is_empty() {
+            break;
+        }
+        let n = positions.len();
+        let mut conf = vec![0.0f32; n];
+        let mut amax = vec![0i32; n];
+        let mut ent = vec![0.0f32; n];
+        let mut kl = vec![f32::INFINITY; n];
+        let mut probs_buf = vec![0.0f32; n * v];
+        for (c, &pos) in positions.iter().enumerate() {
+            let row = out.logits.slice3(0, pos);
+            let pb = &mut probs_buf[c * v..(c + 1) * v];
+            pb.copy_from_slice(row);
+            if cfg.eos_suppress {
+                pb[cfg.eos_id as usize] = f32::NEG_INFINITY;
+            }
+            softmax_inplace(pb);
+            let (ai, av) = argmax(pb);
+            conf[c] = av;
+            amax[c] = ai as i32;
+            ent[c] = entropy(pb);
+            let gen_pos = pos - p;
+            if !prev_probs.is_empty() {
+                let prev = &prev_probs[gen_pos * v..(gen_pos + 1) * v];
+                if prev.iter().any(|&x| x > 0.0) {
+                    kl[c] = kl_div(pb, prev);
+                }
+            }
+        }
+        let mut scores = vec![0.0f32; n * n];
+        let mut degrees = vec![0.0f32; n];
+        if is_dapd {
+            let es = out.edge_scores.as_ref().unwrap();
+            for (ci, &i) in positions.iter().enumerate() {
+                for (cj, &j) in positions.iter().enumerate() {
+                    if ci != cj {
+                        scores[ci * n + cj] = es.at3(0, i, j);
+                    }
+                }
+            }
+            max_normalize(&mut scores);
+            for ci in 0..n {
+                degrees[ci] = scores[ci * n..(ci + 1) * n].iter().sum();
+            }
+        }
+        let edges = EdgeScores::from_dense(&scores, n);
+        let masked_total = (p..p + g).filter(|&i| tokens[i] == mask_id).count();
+        let ctx = StepCtx {
+            positions: &positions,
+            conf: &conf,
+            argmax_tok: &amax,
+            entropy: &ent,
+            kl_prev: &kl,
+            edges: &edges,
+            degrees: &degrees,
+            progress: 1.0 - masked_total as f32 / g as f32,
+            mask_ratio: masked_total as f32 / g as f32,
+            graph: None,
+        };
+        let mut selected = Vec::new();
+        strategy.select(&ctx, &mut selected);
+        if selected.is_empty() {
+            selected.push(argmax(&conf).0);
+        }
+        selected.sort_unstable();
+        selected.dedup();
+
+        let mut committed = Vec::with_capacity(selected.len());
+        for &c in &selected {
+            let pos = positions[c];
+            tokens[pos] = amax[c];
+            commit_step[pos - p] = step;
+            committed.push(pos - p);
+        }
+        per_step.push(committed);
+
+        if prev_probs.is_empty() {
+            prev_probs = vec![0.0f32; g * v];
+        }
+        for (c, &pos) in positions.iter().enumerate() {
+            let gen_pos = pos - p;
+            prev_probs[gen_pos * v..(gen_pos + 1) * v]
+                .copy_from_slice(&probs_buf[c * v..(c + 1) * v]);
+        }
+
+        let remaining = (p..p + g).any(|i| tokens[i] == mask_id);
+        if !remaining || steps >= max_steps {
+            break;
+        }
+    }
+    DecodeOutcome {
+        gen: tokens[p..p + g].to_vec(),
+        tokens,
+        steps,
+        commit_step: commit_step
+            .iter()
+            .map(|&x| if x == usize::MAX { 0 } else { x })
+            .collect(),
+        per_step_commits: per_step,
+    }
+}
+
+#[test]
+fn arena_csr_pipeline_matches_seed_dense_path_all_methods() {
+    // the satellite pin: for every method, cached and uncached, the
+    // arena + CSR pipeline is token-for-token and NFE-identical to the
+    // seed's dense per-step derivation (replicated in reference_decode;
+    // rows of a mock forward are independent, so a batch-1 reference
+    // covers every row of the batched decode)
+    prop::check("pipeline-equals-seed-dense", 12, |rng: &mut Pcg| {
+        let m = random_mock(rng);
+        let mut solo = m.clone();
+        solo.batch = 1;
+        let g = m.seq_len - m.prompt_len;
+        let prompts = prompts_for(&m, rng);
+        for method in Method::all() {
+            let mut cfg = DecodeConfig::new(method);
+            cfg.params = random_params(rng);
+            cfg.blocks = [1, 2, 4][rng.below(3)].min(g);
+            let got = decode_batch(&m, &prompts, &cfg).unwrap();
+            let cache = CacheConfig {
+                enabled: true,
+                refresh_every: rng.range(1, 5),
+                epsilon: 0.0,
+                prefix_lru_cap: 0,
+            };
+            let got_cached = decode_batch_cached(&m, &prompts, &cfg, &cache, None).unwrap();
+            for (i, prompt) in prompts.iter().enumerate() {
+                let want = reference_decode(&solo, prompt, &cfg);
+                for (label, o) in [("uncached", &got[i]), ("cached", &got_cached[i])] {
+                    assert_eq!(o.gen, want.gen, "{method:?} {label}: tokens");
+                    assert_eq!(o.steps, want.steps, "{method:?} {label}: NFE");
+                    assert_eq!(
+                        o.per_step_commits, want.per_step_commits,
+                        "{method:?} {label}: trajectory"
+                    );
+                    assert_eq!(o.commit_step, want.commit_step, "{method:?} {label}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn feature_thread_fanout_is_invisible() {
+    // feature_threads is a deployment knob: any thread count must give
+    // bit-identical decodes (slots write only their own arenas)
+    prop::check("feature-threads-invisible", 20, |rng: &mut Pcg| {
+        let m = random_mock(rng);
+        let mut cfg = DecodeConfig::new(random_method(rng));
+        cfg.params = random_params(rng);
+        let prompts = prompts_for(&m, rng);
+        let base = decode_batch(&m, &prompts, &cfg).unwrap();
+        cfg.feature_threads = rng.range(2, 6);
+        let par = decode_batch(&m, &prompts, &cfg).unwrap();
+        for (a, b) in base.iter().zip(&par) {
+            assert_eq!(a.gen, b.gen, "tokens diverged under feature fan-out");
+            assert_eq!(a.steps, b.steps);
+            assert_eq!(a.per_step_commits, b.per_step_commits);
         }
     });
 }
