@@ -11,11 +11,19 @@
 //!     only reads recomputed positions);
 //!   * at `refresh_every >= 4`, cached decode reaches >= 1.5x steps/s.
 //!
+//! A third section drives a *mixed* board: two requests decode from step
+//! 0 while two same-prompt repeats are admitted mid-flight with
+//! prefix-cache hits.  The hit rows are spliced into the windowed
+//! forward (never forcing a full one), and the section asserts both
+//! token identity against the uncached run of the same admission
+//! schedule and the `DAPD_MIN_SPEEDUP` steps/s gate.
+//!
 //! Environment knobs (CI's bench-smoke job uses them):
 //!   DAPD_ITERS=N          timed decodes per mode (default 6)
 //!   DAPD_BENCH_JSON=f     also write the results as a JSON summary to `f`
-//!   DAPD_MIN_SPEEDUP=x.y  speedup gate at refresh_every=4 (default 1.5;
-//!                         the token-identity asserts always run)
+//!   DAPD_MIN_SPEEDUP=x.y  speedup gate at refresh_every=4 and on the
+//!                         mixed-board section (default 1.5; the
+//!                         token-identity asserts always run)
 
 use std::sync::Arc;
 
@@ -42,6 +50,48 @@ fn decode_once(
     let mut outs: Vec<Option<DecodeOutcome>> = (0..prompts.len()).map(|_| None).collect();
     let mut board_steps = 0usize;
     while sb.occupied() > 0 {
+        board_steps += 1;
+        for (id, o) in sb.step().unwrap() {
+            outs[id as usize] = Some(o);
+        }
+    }
+    (
+        outs.into_iter().map(|o| o.unwrap()).collect(),
+        sb.cache_stats(),
+        board_steps,
+    )
+}
+
+/// One full decode under a fixed admission schedule: request `i` is
+/// admitted at board-step `admit_at[i]` (as soon as a slot frees).  The
+/// schedule depends only on step counts, which are identical between
+/// cached and uncached runs (the identity contract), so both runs see
+/// the same board compositions.
+fn decode_scheduled(
+    model: &MockModel,
+    cfg: &DecodeConfig,
+    cache: &CacheConfig,
+    prefix: Option<PrefixHandle>,
+    prompts: &[Vec<i32>],
+    admit_at: &[usize],
+) -> (Vec<DecodeOutcome>, CacheStats, usize) {
+    assert_eq!(prompts.len(), admit_at.len());
+    let mut sb = SlotBatch::with_cache(model, cfg, cache, prefix).unwrap();
+    let mut outs: Vec<Option<DecodeOutcome>> = (0..prompts.len()).map(|_| None).collect();
+    let mut next = 0usize;
+    let mut board_steps = 0usize;
+    loop {
+        while next < prompts.len() && admit_at[next] <= board_steps && sb.has_free_slot() {
+            sb.admit(next as u64, &prompts[next]).unwrap();
+            next += 1;
+        }
+        if sb.occupied() == 0 {
+            if next >= prompts.len() {
+                break;
+            }
+            board_steps += 1; // idle tick until the next admission
+            continue;
+        }
         board_steps += 1;
         for (id, o) in sb.step().unwrap() {
             outs[id as usize] = Some(o);
@@ -240,19 +290,130 @@ fn main() {
     ]);
     prefix_table.print();
 
-    // ---- acceptance: >= 1.5x steps/s at refresh_every >= 4 ------------
+    // ---- mixed boards: prefix hits spliced into the windowed forward --
+    // two cold requests decode from step 0; two repeats of already-seen
+    // prompts are admitted mid-flight, so the board mixes step-0 hits
+    // with in-flight slots — the case that used to force full forwards.
+    let mixed_model = MockModel::new(4, 128, 96, 256);
+    let mixed_prompts: Vec<Vec<i32>> = {
+        let mut rng = Pcg::new(29);
+        let a: Vec<i32> = (0..96).map(|_| (2 + rng.below(254)) as i32).collect();
+        let b: Vec<i32> = (0..96).map(|_| (2 + rng.below(254)) as i32).collect();
+        // requests 2 and 3 repeat the first two prompts -> prefix hits
+        vec![a.clone(), b.clone(), a, b]
+    };
+    let admit_at = [0usize, 0, 3, 5];
+    let mixed_cfg = DecodeConfig::new(Method::DapdStaged);
+    let mixed_cache = CacheConfig {
+        enabled: true,
+        refresh_every: 4,
+        epsilon: 0.0,
+        prefix_lru_cap: 8,
+    };
+    let (base_mixed, _, mixed_steps) = decode_scheduled(
+        &mixed_model,
+        &mixed_cfg,
+        &off,
+        None,
+        &mixed_prompts,
+        &admit_at,
+    );
+    let pc = Arc::new(PrefixCache::new(8));
+    let mixed_handle = PrefixHandle::new(Arc::clone(&pc), "bench-mixed");
+    // warm the prefix cache so the mid-flight admissions hit
+    decode_scheduled(
+        &mixed_model,
+        &mixed_cfg,
+        &mixed_cache,
+        Some(mixed_handle.clone()),
+        &mixed_prompts[..2],
+        &[0, 0],
+    );
+    let (cached_mixed, mixed_stats, cached_steps) = decode_scheduled(
+        &mixed_model,
+        &mixed_cfg,
+        &mixed_cache,
+        Some(mixed_handle.clone()),
+        &mixed_prompts,
+        &admit_at,
+    );
+    assert_eq!(cached_steps, mixed_steps, "mixed board-step count diverged");
+    assert_identical(&base_mixed, &cached_mixed, "mixed board");
+    assert!(
+        mixed_stats.prefix_rows_spliced >= 2,
+        "mid-flight hits must be spliced into the windowed forward \
+         (got {} spliced rows)",
+        mixed_stats.prefix_rows_spliced
+    );
+    let (t_mixed_off, _) = time_it(
+        || {
+            std::hint::black_box(decode_scheduled(
+                &mixed_model,
+                &mixed_cfg,
+                &off,
+                None,
+                &mixed_prompts,
+                &admit_at,
+            ));
+        },
+        1,
+        iters,
+    );
+    let (t_mixed_on, _) = time_it(
+        || {
+            std::hint::black_box(decode_scheduled(
+                &mixed_model,
+                &mixed_cfg,
+                &mixed_cache,
+                Some(mixed_handle.clone()),
+                &mixed_prompts,
+                &admit_at,
+            ));
+        },
+        1,
+        iters,
+    );
+    let mixed_speedup = t_mixed_off / t_mixed_on;
+    let mut mixed_table = Table::new(
+        "Mixed board: 2 cold + 2 mid-flight prefix hits (dapd-staged, refresh=4)",
+        &["mode", "ms/decode", "steps/s", "speedup", "spliced rows"],
+    );
+    mixed_table.row(vec![
+        "uncached".into(),
+        fmt_f(t_mixed_off * 1e3, 2),
+        fmt_f(mixed_steps as f64 / t_mixed_off, 0),
+        "1.00".into(),
+        "0".into(),
+    ]);
+    mixed_table.row(vec![
+        "cached+prefix".into(),
+        fmt_f(t_mixed_on * 1e3, 2),
+        fmt_f(mixed_steps as f64 / t_mixed_on, 0),
+        fmt_f(mixed_speedup, 2),
+        mixed_stats.prefix_rows_spliced.to_string(),
+    ]);
+    mixed_table.print();
+
+    // ---- acceptance: >= 1.5x steps/s at refresh_every >= 4, and on ----
+    // ---- the mixed-board schedule ------------------------------------
     let min_required: f64 = std::env::var("DAPD_MIN_SPEEDUP")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1.5);
     println!(
-        "\nminimum speedup across methods at refresh_every=4: {:.2}x (gate: {:.2}x)",
-        min_speedup_at_4, min_required
+        "\nminimum speedup across methods at refresh_every=4: {:.2}x, \
+         mixed-board: {:.2}x (gate: {:.2}x)",
+        min_speedup_at_4, mixed_speedup, min_required
     );
     assert!(
         min_speedup_at_4 >= min_required,
         "cache must deliver >= {min_required:.2}x steps/s at refresh_every=4 \
          (got {min_speedup_at_4:.2}x)"
+    );
+    assert!(
+        mixed_speedup >= min_required,
+        "mixed boards must deliver >= {min_required:.2}x steps/s \
+         (got {mixed_speedup:.2}x)"
     );
 
     if let Ok(path) = std::env::var("DAPD_BENCH_JSON") {
@@ -260,6 +421,12 @@ fn main() {
         out.set("bench", "cache_reuse".into());
         out.set("min_speedup_at_refresh_4", min_speedup_at_4.into());
         out.set("prefix_first_steps_served", (served as i64).into());
+        out.set("mixed_speedup", mixed_speedup.into());
+        out.set(
+            "mixed_prefix_rows_spliced",
+            (mixed_stats.prefix_rows_spliced as i64).into(),
+        );
+        out.set("mixed_steps", (mixed_steps as i64).into());
         out.set("rows", Json::Arr(rows));
         match std::fs::write(&path, out.dump()) {
             Ok(()) => println!("wrote JSON summary to {path}"),

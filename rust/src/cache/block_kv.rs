@@ -2,30 +2,78 @@
 //!
 //! [`ForwardCache`] keeps the last `StepOutput` as a frozen snapshot and,
 //! on steady-state steps, asks the model to recompute only the *window* —
-//! the union of currently-masked positions across batch rows — splicing
-//! the fresh rows into the snapshot.  A full forward happens on the first
-//! step, every `refresh_every` steps, and whenever a committed value
-//! changed without passing through mask (a freshly-admitted request
-//! rewrote a row's prompt); ordinary mask -> token commits stay on the
-//! windowed path.
+//! each batch row's own currently-masked positions (row-aware: one row's
+//! columns never drag into another row's recompute) — splicing the fresh
+//! rows into the snapshot.  A full forward happens on the first step,
+//! every `refresh_every` steps, and whenever a committed value changed
+//! without passing through mask (a freshly-admitted request rewrote a
+//! row's prompt); ordinary mask -> token commits stay on the windowed
+//! path.
+//!
+//! [`ForwardCache::forward_planned`] is the row-aware entry `SlotBatch`
+//! drives: the caller declares which rows it will read
+//! ([`ActiveRows`] — vacant slots are excluded from both the window and
+//! the row-reset scan) and which rows to serve from prefix-cache
+//! first-step snapshots ([`super::FirstStepRows`], spliced per row).  A
+//! *mixed* board — some rows on step 0 with prefix hits, others
+//! mid-flight — therefore takes the windowed path instead of a full
+//! forward; a board of only prefix rows takes no forward at all; a
+//! fully-committed board (empty window) serves the frozen snapshot with
+//! zero recompute.  [`StepSource`] reports which of these happened.
 //!
 //! The decode loop reads outputs only at masked positions, all of which
-//! are inside the window by construction, so frozen rows are never
-//! observed and cached decode is exact for deterministic backends; for
-//! approximate windowed backends (a real KV-cache forward), staleness is
-//! bounded by `refresh_every`.
+//! are inside the window (or freshly spliced from an exact first-step
+//! snapshot) by construction, so frozen rows are never observed and
+//! cached decode is exact for deterministic backends; for approximate
+//! windowed backends (a real KV-cache forward), staleness is bounded by
+//! `refresh_every`.
 //!
 //! [`CachedModel`] wraps any `ForwardModel` with the same policy behind
 //! the trait itself (one snapshot clone per step); the zero-copy
 //! [`ForwardCache`] is what `SlotBatch` drives on the hot path.
 
 use std::cell::RefCell;
+use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use super::prefix::FirstStepRows;
 use super::{CacheConfig, CacheStats};
-use crate::runtime::{ForwardModel, StepOutput};
+use crate::runtime::{ForwardModel, RowWindows, StepOutput};
 use crate::tensor::Tensor;
+
+/// Which batch rows the caller will read recomputed outputs for.
+#[derive(Debug, Clone, Copy)]
+pub enum ActiveRows<'a> {
+    /// every batch row (the [`CachedModel`] wrapper: no slot knowledge)
+    All,
+    /// per-row mask; `false` rows are never read this step (vacant
+    /// slots, prefix-spliced rows) and are excluded from both the
+    /// recompute window and the row-reset scan
+    Mask(&'a [bool]),
+}
+
+impl ActiveRows<'_> {
+    fn is_active(&self, row: usize) -> bool {
+        match self {
+            ActiveRows::All => true,
+            ActiveRows::Mask(m) => m[row],
+        }
+    }
+}
+
+/// Where one cached step's output came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepSource {
+    /// genuine `model.forward` (first step, refresh cadence, row reset)
+    Full,
+    /// row-aware windowed recompute spliced into the frozen snapshot
+    Windowed,
+    /// snapshot served as-is: no masked position remained to read
+    Frozen,
+    /// board served entirely from prefix-cache rows (no model call)
+    PrefixOnly,
+}
 
 /// Frozen-snapshot forward cache; see the module docs.
 pub struct ForwardCache {
@@ -33,10 +81,14 @@ pub struct ForwardCache {
     cached: Option<StepOutput>,
     last_tokens: Vec<i32>,
     steps_since_refresh: usize,
-    /// scratch: per-position window membership for the current step
+    /// scratch: per-(row, position) window membership, `[b * l]`
     in_window: Vec<bool>,
-    /// scratch: sorted window positions for the current step
-    window: Vec<usize>,
+    /// scratch: flat per-row window positions ([`RowWindows`] storage)
+    win_positions: Vec<usize>,
+    /// scratch: batch rows with a non-empty window
+    win_rows: Vec<usize>,
+    /// scratch: per window row, its range into `win_positions`
+    win_spans: Vec<(usize, usize)>,
     pub stats: CacheStats,
 }
 
@@ -48,67 +100,160 @@ impl ForwardCache {
             last_tokens: Vec::new(),
             steps_since_refresh: 0,
             in_window: Vec::new(),
-            window: Vec::new(),
+            win_positions: Vec::new(),
+            win_rows: Vec::new(),
+            win_spans: Vec::new(),
             stats: CacheStats::default(),
         }
     }
 
-    /// One step's forward through the cache.  Returns a borrow of the
-    /// up-to-date snapshot (no clone on the hot path).
+    /// One step's forward through the cache with every row active and no
+    /// prefix splices (the [`CachedModel`] wrapper's view).  Returns a
+    /// borrow of the up-to-date snapshot (no clone on the hot path).
     pub fn forward(&mut self, model: &dyn ForwardModel, tokens: &[i32]) -> Result<&StepOutput> {
+        Ok(self.forward_planned(model, tokens, ActiveRows::All, &[])?.0)
+    }
+
+    /// One step's forward through the cache, row-aware.
+    ///
+    /// `active` declares the rows whose recomputed outputs the caller
+    /// will read; `splices` lists `(row, first-step rows)` pairs to
+    /// serve from the prefix cache instead of recomputing (such rows
+    /// must not be marked active).  Returns the up-to-date snapshot and
+    /// the [`StepSource`] that produced it.
+    pub fn forward_planned(
+        &mut self,
+        model: &dyn ForwardModel,
+        tokens: &[i32],
+        active: ActiveRows<'_>,
+        splices: &[(usize, Arc<FirstStepRows>)],
+    ) -> Result<(&StepOutput, StepSource)> {
         let b = model.batch();
         let l = model.seq_len();
+        let v = model.vocab();
         let mask_id = model.mask_id();
+        if tokens.len() != b * l {
+            bail!("cached forward: token buffer {} != {b}x{l}", tokens.len());
+        }
+        if let ActiveRows::Mask(m) = active {
+            if m.len() != b {
+                bail!("cached forward: active mask {} != batch {b}", m.len());
+            }
+        }
+        for (row, rows) in splices {
+            if *row >= b || rows.seq_len != l || rows.vocab != v {
+                bail!("prefix-cache rows have mismatched shapes");
+            }
+            debug_assert!(
+                !active.is_active(*row),
+                "a spliced row must not also be active"
+            );
+        }
 
-        // window = union of masked positions across batch rows
+        // ---- per-row windows over the rows the caller will read --------
         self.in_window.clear();
-        self.in_window.resize(l, false);
-        for (idx, &t) in tokens.iter().enumerate() {
-            if t == mask_id {
-                self.in_window[idx % l] = true;
+        self.in_window.resize(b * l, false);
+        self.win_positions.clear();
+        self.win_rows.clear();
+        self.win_spans.clear();
+        for bi in 0..b {
+            if !active.is_active(bi) {
+                continue;
+            }
+            let start = self.win_positions.len();
+            for i in 0..l {
+                if tokens[bi * l + i] == mask_id {
+                    self.in_window[bi * l + i] = true;
+                    self.win_positions.push(i);
+                }
+            }
+            if self.win_positions.len() > start {
+                self.win_rows.push(bi);
+                self.win_spans.push((start, self.win_positions.len()));
             }
         }
-        self.window.clear();
-        for i in 0..l {
-            if self.in_window[i] {
-                self.window.push(i);
-            }
-        }
+        let window_total = self.win_positions.len();
 
-        let full = match &self.cached {
-            None => true,
+        // ---- does anything invalidate the snapshot outright? -----------
+        let invalid = match &self.cached {
+            None => false,
             Some(c) => {
-                self.steps_since_refresh + 1 >= self.refresh_every
-                    || self.window.is_empty()
-                    // per-layer toy outputs have no splicing path
-                    || c.attn_layers.is_some()
+                // per-layer toy outputs have no splicing path
+                c.attn_layers.is_some()
                     || tokens.len() != self.last_tokens.len()
+                    // a prefix row that can't be spliced into this
+                    // snapshot's field layout must be recomputed
+                    || splices.iter().any(|(_, r)| !r.matches(c))
                     // a committed value changed without passing through
                     // mask: a row was reset (mid-flight admission with a
-                    // new prompt) and the snapshot rows are invalid.
+                    // new prompt) and its snapshot rows are invalid.
                     // mask -> token transitions are ordinary commits (the
                     // incremental flow this cache exists for), and
                     // token -> mask re-masking puts the position back in
-                    // the window, so neither forces a refresh.
+                    // the window, so neither forces a refresh.  Rows the
+                    // caller never reads (vacant, spliced) are exempt.
                     || tokens
                         .iter()
                         .zip(&self.last_tokens)
                         .enumerate()
-                        .any(|(idx, (&a, &b))| {
-                            a != b && b != mask_id && !self.in_window[idx % l]
+                        .any(|(idx, (&a, &prev))| {
+                            a != prev
+                                && prev != mask_id
+                                && !self.in_window[idx]
+                                && active.is_active(idx / l)
                         })
             }
         };
 
         self.stats.positions_total += (b * l) as u64;
-        if full {
+
+        // ---- serve without a model call when nothing needs compute -----
+        // An empty window means no masked position will be read; with
+        // splices the board is answered from exact first-step rows, and
+        // without them the frozen snapshot is already current (nothing
+        // changed outside mask).  `refresh_every == 1` keeps its
+        // uncached-equivalence contract: no frozen serving there.
+        let servable = window_total == 0
+            && !invalid
+            && (!splices.is_empty() || (self.cached.is_some() && self.refresh_every > 1));
+        let source = if servable {
+            if self.cached.is_none() {
+                self.cached = Some(blank_board(b, l, v, splices));
+            }
+            let cached = self.cached.as_mut().unwrap();
+            for (row, rows) in splices {
+                rows.splice_into(cached, *row);
+            }
+            if splices.is_empty() {
+                // serving the snapshot untouched adds no staleness, so
+                // the refresh clock does not advance
+                self.stats.frozen_steps += 1;
+                StepSource::Frozen
+            } else {
+                self.stats.prefix_rows_spliced += splices.len() as u64;
+                StepSource::PrefixOnly
+            }
+        } else if self.cached.is_none()
+            || invalid
+            || self.steps_since_refresh + 1 >= self.refresh_every
+            || window_total == 0
+        {
+            // a full forward computes every row — including prefix rows,
+            // whose step-0 boards are part of `tokens` — so there is
+            // nothing left to splice
             let out = model.forward(tokens)?;
             self.stats.full_forwards += 1;
             self.stats.positions_computed += (b * l) as u64;
             self.steps_since_refresh = 0;
             self.cached = Some(out);
+            StepSource::Full
         } else {
-            let fresh = model.forward_window(tokens, &self.window)?;
+            let windows = RowWindows {
+                rows: &self.win_rows,
+                spans: &self.win_spans,
+                positions: &self.win_positions,
+            };
+            let fresh = model.forward_window_rows(tokens, &windows)?;
             let cached = self.cached.as_mut().unwrap();
             let compatible = fresh.logits.dims == cached.logits.dims
                 && fresh.attn_avg.is_some() == cached.attn_avg.is_some()
@@ -116,54 +261,88 @@ impl ForwardCache {
                 && fresh.degrees.is_some() == cached.degrees.is_some();
             if compatible {
                 self.stats.window_forwards += 1;
-                self.stats.positions_computed += (b * self.window.len()) as u64;
+                self.stats.positions_computed += window_total as u64;
                 self.steps_since_refresh += 1;
-                splice3(&mut cached.logits, &fresh.logits, &self.window);
-                if let (Some(d), Some(s)) = (&mut cached.attn_avg, &fresh.attn_avg) {
-                    splice3(d, s, &self.window);
+                for (bi, positions) in windows.iter() {
+                    splice3_row(&mut cached.logits, &fresh.logits, bi, positions);
+                    if let (Some(d), Some(s)) = (&mut cached.attn_avg, &fresh.attn_avg) {
+                        splice3_row(d, s, bi, positions);
+                    }
+                    if let (Some(d), Some(s)) = (&mut cached.edge_scores, &fresh.edge_scores) {
+                        splice3_row(d, s, bi, positions);
+                    }
+                    if let (Some(d), Some(s)) = (&mut cached.degrees, &fresh.degrees) {
+                        splice2_row(d, s, bi, positions);
+                    }
                 }
-                if let (Some(d), Some(s)) = (&mut cached.edge_scores, &fresh.edge_scores) {
-                    splice3(d, s, &self.window);
+                for (row, rows) in splices {
+                    rows.splice_into(cached, *row);
                 }
-                if let (Some(d), Some(s)) = (&mut cached.degrees, &fresh.degrees) {
-                    splice2(d, s, &self.window);
-                }
+                self.stats.prefix_rows_spliced += splices.len() as u64;
+                StepSource::Windowed
             } else {
-                // windowed output shaped unlike the snapshot: treat it as
-                // a full forward (the default trait impl lands here only
-                // if the model changes its output layout mid-flight)
+                // windowed output shaped unlike the snapshot (a backend
+                // that changed its output layout mid-flight): the
+                // windowed result leaves non-window rows unspecified, so
+                // snapshotting *it* would serve garbage until the next
+                // refresh — run a genuine full forward instead
+                let out = model.forward(tokens)?;
                 self.stats.full_forwards += 1;
                 self.stats.positions_computed += (b * l) as u64;
                 self.steps_since_refresh = 0;
-                self.cached = Some(fresh);
+                self.cached = Some(out);
+                StepSource::Full
             }
-        }
+        };
         self.last_tokens.clear();
         self.last_tokens.extend_from_slice(tokens);
-        Ok(self.cached.as_ref().unwrap())
+        Ok((self.cached.as_ref().unwrap(), source))
     }
 }
 
-/// Copy window rows `[*, i, :]` of a rank-3 `[b, l, k]` tensor.
-fn splice3(dst: &mut Tensor, src: &Tensor, window: &[usize]) {
-    debug_assert_eq!(dst.dims, src.dims);
-    let (b, l, k) = (dst.dims[0], dst.dims[1], dst.dims[2]);
-    for bi in 0..b {
-        for &i in window {
-            let base = (bi * l + i) * k;
-            dst.data[base..base + k].copy_from_slice(&src.data[base..base + k]);
-        }
+/// An all-zero serving board carrying exactly the fields every splice
+/// can fill (the cold all-prefill case: no snapshot exists yet and no
+/// model call is needed).  Rows not spliced stay zero — by contract the
+/// caller never reads them.
+fn blank_board(
+    b: usize,
+    l: usize,
+    v: usize,
+    splices: &[(usize, Arc<FirstStepRows>)],
+) -> StepOutput {
+    let with_attn = splices.iter().all(|(_, r)| r.attn.is_some());
+    let with_scores = splices.iter().all(|(_, r)| r.scores.is_some());
+    let with_degrees = splices.iter().all(|(_, r)| r.degrees.is_some());
+    StepOutput {
+        batch: b,
+        seq_len: l,
+        vocab: v,
+        logits: Tensor::new(vec![0.0; b * l * v], &[b, l, v]),
+        attn_avg: with_attn.then(|| Tensor::new(vec![0.0; b * l * l], &[b, l, l])),
+        edge_scores: with_scores.then(|| Tensor::new(vec![0.0; b * l * l], &[b, l, l])),
+        degrees: with_degrees.then(|| Tensor::new(vec![0.0; b * l], &[b, l])),
+        attn_layers: None,
     }
 }
 
-/// Copy window entries `[*, i]` of a rank-2 `[b, l]` tensor.
-fn splice2(dst: &mut Tensor, src: &Tensor, window: &[usize]) {
+/// Copy rows `[bi, i, :]`, `i` in `positions`, of a rank-3 `[b, l, k]`
+/// tensor.
+fn splice3_row(dst: &mut Tensor, src: &Tensor, bi: usize, positions: &[usize]) {
     debug_assert_eq!(dst.dims, src.dims);
-    let (b, l) = (dst.dims[0], dst.dims[1]);
-    for bi in 0..b {
-        for &i in window {
-            dst.data[bi * l + i] = src.data[bi * l + i];
-        }
+    let (l, k) = (dst.dims[1], dst.dims[2]);
+    for &i in positions {
+        let base = (bi * l + i) * k;
+        dst.data[base..base + k].copy_from_slice(&src.data[base..base + k]);
+    }
+}
+
+/// Copy entries `[bi, i]`, `i` in `positions`, of a rank-2 `[b, l]`
+/// tensor.
+fn splice2_row(dst: &mut Tensor, src: &Tensor, bi: usize, positions: &[usize]) {
+    debug_assert_eq!(dst.dims, src.dims);
+    let l = dst.dims[1];
+    for &i in positions {
+        dst.data[bi * l + i] = src.data[bi * l + i];
     }
 }
 
@@ -221,8 +400,9 @@ impl<M: ForwardModel> ForwardModel for CachedModel<M> {
         let mut cache = self.cache.borrow_mut();
         Ok(cache.forward(&self.inner, tokens)?.clone())
     }
-    // forward_window deliberately not overridden: a cache wrapped in a
-    // cache degrades to full forwards instead of double-splicing
+    // forward_window / forward_window_rows deliberately not overridden:
+    // a cache wrapped in a cache degrades to full forwards instead of
+    // double-splicing
 }
 
 #[cfg(test)]
@@ -332,6 +512,209 @@ mod tests {
         fc.forward(&m, &tokens).unwrap();
         assert_eq!(fc.stats.full_forwards, 1);
         assert_eq!(fc.stats.window_forwards, 2);
+    }
+
+    #[test]
+    fn fully_committed_board_serves_frozen_snapshot() {
+        // no masked position remains -> nothing will be read, so the
+        // frozen snapshot is served with zero recompute and counted
+        // under frozen_steps, not full_forwards
+        let m = mock();
+        let l = m.seq_len;
+        let mut fc = ForwardCache::new(4);
+        let mut tokens = Vec::new();
+        for _row in 0..m.batch {
+            tokens.extend((0..l).map(|i| m.true_token(i)));
+        }
+        let want = m.forward(&tokens).unwrap();
+        fc.forward(&m, &tokens).unwrap();
+        for _ in 0..5 {
+            let out = fc.forward(&m, &tokens).unwrap();
+            assert_eq!(out.logits.data, want.logits.data);
+        }
+        assert_eq!(fc.stats.full_forwards, 1, "frozen steps must not re-forward");
+        assert_eq!(fc.stats.window_forwards, 0);
+        assert_eq!(fc.stats.frozen_steps, 5);
+        // positions accounting still charges the uncached-equivalent
+        assert_eq!(
+            fc.stats.positions_total,
+            (6 * m.batch * l) as u64
+        );
+        assert_eq!(fc.stats.positions_computed, (m.batch * l) as u64);
+    }
+
+    #[test]
+    fn refresh_every_one_never_serves_frozen() {
+        // the disabled-cache degrade (`refresh_every = 1`) must stay a
+        // full forward every step, fully-committed boards included
+        let m = mock();
+        let tokens: Vec<i32> = (0..m.batch * m.seq_len)
+            .map(|i| m.true_token(i % m.seq_len))
+            .collect();
+        let mut fc = ForwardCache::new(1);
+        fc.forward(&m, &tokens).unwrap();
+        fc.forward(&m, &tokens).unwrap();
+        assert_eq!(fc.stats.full_forwards, 2);
+        assert_eq!(fc.stats.frozen_steps, 0);
+    }
+
+    /// A backend whose windowed output drops fields the snapshot has —
+    /// the incompatible-shape branch must fall back to a genuine full
+    /// forward instead of snapshotting the partial windowed output.
+    struct ShapeShift(MockModel);
+
+    impl ForwardModel for ShapeShift {
+        fn batch(&self) -> usize {
+            self.0.batch
+        }
+        fn seq_len(&self) -> usize {
+            self.0.seq_len
+        }
+        fn prompt_len(&self) -> usize {
+            self.0.prompt_len
+        }
+        fn gen_len(&self) -> usize {
+            self.0.gen_len()
+        }
+        fn vocab(&self) -> usize {
+            self.0.vocab
+        }
+        fn mask_id(&self) -> i32 {
+            self.0.mask_id
+        }
+        fn forward(&self, tokens: &[i32]) -> Result<StepOutput> {
+            self.0.forward(tokens)
+        }
+        fn forward_window_rows(
+            &self,
+            tokens: &[i32],
+            windows: &RowWindows<'_>,
+        ) -> Result<StepOutput> {
+            let mut out = self.0.forward_window_rows(tokens, windows)?;
+            out.degrees = None; // layout changed mid-flight
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn incompatible_windowed_output_falls_back_to_full_forward() {
+        let m = ShapeShift(mock());
+        let l = m.seq_len();
+        let mut tokens = vec![m.mask_id(); m.batch() * l];
+        for row in 0..m.batch() {
+            for i in 0..m.prompt_len() {
+                tokens[row * l + i] = 5;
+            }
+        }
+        let want = m.forward(&tokens).unwrap();
+        let mut fc = ForwardCache::new(1000);
+        fc.forward(&m, &tokens).unwrap();
+        let out = fc.forward(&m, &tokens).unwrap();
+        // the snapshot must be a genuine full forward: committed prompt
+        // rows carry real values, not the windowed output's zeros
+        assert_eq!(out.logits.data, want.logits.data);
+        assert!(out.degrees.is_some(), "snapshot lost a field");
+        assert!(
+            out.logits.slice3(0, 0).iter().any(|&x| x != 0.0),
+            "prompt row served as stale zeros"
+        );
+        assert_eq!(fc.stats.full_forwards, 2, "fallback must be a full forward");
+        assert_eq!(fc.stats.window_forwards, 0);
+    }
+
+    #[test]
+    fn mixed_board_splices_prefix_rows_into_windowed_forward() {
+        // row 0 mid-flight, row 1 freshly admitted with prefix-cache
+        // rows: the step takes the windowed path, row 1 is spliced, and
+        // every masked read equals a full forward of the same board
+        let m = mock();
+        let l = m.seq_len;
+        let p = m.prompt_len;
+
+        // board A: row 0 decoding prompt 5s (one commit), row 1 idle
+        let mut tokens = vec![m.mask_id; m.batch * l];
+        for row in 0..m.batch {
+            for i in 0..p {
+                tokens[row * l + i] = 5;
+            }
+        }
+        let mut fc = ForwardCache::new(1000);
+        fc.forward(&m, &tokens).unwrap();
+        tokens[p] = m.true_token(p); // row 0 commits one position
+
+        // capture row 1's first-step rows for prompt 7s from a separate
+        // step-0 board (any batch composition: rows are independent)
+        let mut first_board = tokens.clone();
+        for i in 0..p {
+            first_board[l + i] = 7;
+        }
+        for i in p..l {
+            first_board[l + i] = m.mask_id;
+        }
+        let captured =
+            FirstStepRows::from_output(&m.forward(&first_board).unwrap(), 1);
+
+        // admit prompt 7s into row 1 (prompt rewritten + gen re-masked)
+        for i in 0..p {
+            tokens[l + i] = 7;
+        }
+        for i in p..l {
+            tokens[l + i] = m.mask_id;
+        }
+        let want = m.forward(&tokens).unwrap();
+        let active = [true, false];
+        let splices = vec![(1usize, Arc::new(captured))];
+        let (out, source) = fc
+            .forward_planned(&m, &tokens, ActiveRows::Mask(&active), &splices)
+            .unwrap();
+        assert_eq!(source, StepSource::Windowed, "mixed board must stay windowed");
+        // every masked position of both rows reads full-forward values
+        for row in 0..m.batch {
+            for i in 0..l {
+                if tokens[row * l + i] == m.mask_id {
+                    assert_eq!(
+                        out.logits.slice3(row, i),
+                        want.logits.slice3(row, i),
+                        "row {row} pos {i}"
+                    );
+                    assert_eq!(
+                        out.edge_scores.as_ref().unwrap().at3(row, i, i.max(1) - 1),
+                        want.edge_scores.as_ref().unwrap().at3(row, i, i.max(1) - 1),
+                    );
+                }
+            }
+        }
+        let stats = fc.stats;
+        assert_eq!(stats.full_forwards, 1, "splice admission forced a full forward");
+        assert_eq!(stats.window_forwards, 1);
+        assert_eq!(stats.prefix_rows_spliced, 1);
+    }
+
+    #[test]
+    fn all_prefill_cold_board_serves_without_model_call() {
+        let m = MockModel::new(2, 16, 4, 12);
+        let l = m.seq_len;
+        let mut tokens = vec![m.mask_id; 2 * l];
+        for row in 0..2 {
+            for i in 0..4 {
+                tokens[row * l + i] = 6 + row as i32;
+            }
+        }
+        let want = m.forward(&tokens).unwrap();
+        let splices: Vec<(usize, Arc<FirstStepRows>)> = (0..2)
+            .map(|row| (row, Arc::new(FirstStepRows::from_output(&want, row))))
+            .collect();
+        let mut fc = ForwardCache::new(4);
+        let active = [false, false];
+        let (out, source) = fc
+            .forward_planned(&m, &tokens, ActiveRows::Mask(&active), &splices)
+            .unwrap();
+        assert_eq!(source, StepSource::PrefixOnly);
+        assert_eq!(out.logits.data, want.logits.data);
+        assert_eq!(fc.stats.full_forwards, 0, "prefix-only step ran a forward");
+        assert_eq!(fc.stats.prefix_rows_spliced, 2);
+        assert_eq!(fc.stats.positions_computed, 0);
+        assert_eq!(fc.stats.positions_total, (2 * l) as u64);
     }
 
     #[test]

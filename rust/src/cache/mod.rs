@@ -8,9 +8,12 @@
 //! * [`block_kv`] — a [`ForwardCache`] that freezes per-position outputs
 //!   (logits and attention/edge-score rows) outside the currently-masked
 //!   window and refreshes them every `refresh_every` steps,
-//!   Fast-dLLM/APD-style; steady-state steps only recompute the active
-//!   window via `ForwardModel::forward_window`.  [`CachedModel`] is the
-//!   drop-in `ForwardModel` wrapper over the same engine.
+//!   Fast-dLLM/APD-style; steady-state steps recompute only each row's
+//!   own masked window via `ForwardModel::forward_window_rows`, splice
+//!   prefix-cache hit rows in per row (mixed boards stay windowed), and
+//!   serve fully-committed boards from the frozen snapshot.
+//!   [`CachedModel`] is the drop-in `ForwardModel` wrapper over the same
+//!   engine.
 //! * [`incremental_graph`] — [`IncrementalGraph`] maintains a `DepGraph`
 //!   across steps by toggling only the edges whose scores moved beyond
 //!   an epsilon (or crossed tau), instead of rebuilding every bitset row.
@@ -29,7 +32,7 @@ pub mod block_kv;
 pub mod incremental_graph;
 pub mod prefix;
 
-pub use block_kv::{CachedModel, ForwardCache};
+pub use block_kv::{ActiveRows, CachedModel, ForwardCache, StepSource};
 pub use incremental_graph::{GraphStats, IncrementalGraph};
 pub use prefix::{FirstStepRows, PrefixCache, PrefixHandle};
 
@@ -71,6 +74,13 @@ pub struct CacheStats {
     pub window_forwards: u64,
     /// steps answered entirely from the prefix cache (no forward at all)
     pub prefix_served_steps: u64,
+    /// batch rows served from prefix-cache first-step snapshots instead
+    /// of being recomputed — counts both all-prefill boards and rows
+    /// spliced into a *mixed* board's windowed forward
+    pub prefix_rows_spliced: u64,
+    /// steps served from the frozen snapshot with zero recompute (no
+    /// masked position remained to read)
+    pub frozen_steps: u64,
     /// position-rows actually recomputed
     pub positions_computed: u64,
     /// position-rows a fully-uncached loop would have computed
@@ -88,6 +98,8 @@ impl CacheStats {
         self.full_forwards += o.full_forwards;
         self.window_forwards += o.window_forwards;
         self.prefix_served_steps += o.prefix_served_steps;
+        self.prefix_rows_spliced += o.prefix_rows_spliced;
+        self.frozen_steps += o.frozen_steps;
         self.positions_computed += o.positions_computed;
         self.positions_total += o.positions_total;
         self.graph_full_rebuilds += o.graph_full_rebuilds;

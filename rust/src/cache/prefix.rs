@@ -12,14 +12,14 @@
 //! batch composition is valid in any other.  Hit/miss/insert/eviction
 //! counters feed the serving metrics endpoint.
 //!
-//! Scope: the forward skip only engages when *every* occupied slot is on
-//! step 0 with a hit (batch 1, drained boards, or same-prompt bursts
-//! admitted together).  On a mixed board the batched forward runs anyway
-//! and the prefetched rows are dropped — so `hits` measures submit-time
-//! prompt recognition while `SlotBatch`'s `prefix_served_steps` (the
-//! `cache_prefix_steps` metric) measures forwards actually skipped.
-//! Folding per-row prefills into the windowed forward of a mixed board
-//! is future work (tracked in ROADMAP.md).
+//! Scope: on a board whose occupied slots are *all* on step 0 with hits
+//! the forward is skipped entirely (`cache_prefix_steps`); on a *mixed*
+//! board, hit rows are spliced per-row ([`FirstStepRows::splice_into`])
+//! into the windowed forward's snapshot and excluded from the recompute
+//! window (`cache::ForwardCache::forward_planned`), counted under
+//! `cache_prefix_rows_spliced`.  `hits` therefore measures submit-time
+//! prompt recognition, while `cache_prefix_steps` +
+//! `cache_prefix_rows_spliced` measure forwards/rows actually avoided.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -65,6 +65,38 @@ impl FirstStepRows {
                 .degrees
                 .as_ref()
                 .map(|t| t.data[row * l..(row + 1) * l].to_vec()),
+        }
+    }
+
+    /// Whether this cached row can be spliced into batch row slots of
+    /// `out`: shapes must agree and every field `out` carries must be
+    /// present here (extra cached fields are simply ignored).
+    pub fn matches(&self, out: &StepOutput) -> bool {
+        self.seq_len == out.seq_len
+            && self.vocab == out.vocab
+            && (out.attn_avg.is_none() || self.attn.is_some())
+            && (out.edge_scores.is_none() || self.scores.is_some())
+            && (out.degrees.is_none() || self.degrees.is_some())
+    }
+
+    /// Splice this cached first-step row into batch row `row` of `out`
+    /// (the per-row counterpart of assembling a whole board): logits and
+    /// every present auxiliary field are overwritten for the full
+    /// sequence.  Caller guarantees [`FirstStepRows::matches`].
+    pub fn splice_into(&self, out: &mut StepOutput, row: usize) {
+        debug_assert!(self.matches(out), "splice_into on mismatched shapes");
+        debug_assert!(row < out.batch, "splice_into row out of range");
+        let l = self.seq_len;
+        let v = self.vocab;
+        out.logits.data[row * l * v..(row + 1) * l * v].copy_from_slice(&self.logits);
+        if let (Some(dst), Some(src)) = (&mut out.attn_avg, &self.attn) {
+            dst.data[row * l * l..(row + 1) * l * l].copy_from_slice(src);
+        }
+        if let (Some(dst), Some(src)) = (&mut out.edge_scores, &self.scores) {
+            dst.data[row * l * l..(row + 1) * l * l].copy_from_slice(src);
+        }
+        if let (Some(dst), Some(src)) = (&mut out.degrees, &self.degrees) {
+            dst.data[row * l..(row + 1) * l].copy_from_slice(src);
         }
     }
 }
@@ -137,8 +169,13 @@ impl PrefixCache {
         }
     }
 
-    /// Insert (idempotent for identical keys), evicting the least
-    /// recently used entry beyond capacity.
+    /// Insert, evicting the least recently used entry beyond capacity.
+    /// Idempotent for identical keys: a same-key/same-prompt re-insert
+    /// keeps the existing entry (and every outstanding `Arc` to it),
+    /// only bumping its recency — it neither counts as an insert nor
+    /// drops the shared rows.  A same-key *different*-prompt insert is a
+    /// 64-bit collision; the newer prompt wins (the old entry could only
+    /// ever miss against it anyway, see [`PrefixCache::get`]).
     pub fn insert(&self, key: u64, prompt: &[i32], rows: FirstStepRows) {
         if self.cap == 0 {
             return;
@@ -146,6 +183,12 @@ impl PrefixCache {
         let mut lru = self.inner.lock().unwrap();
         lru.tick += 1;
         let tick = lru.tick;
+        if let Some(entry) = lru.map.get_mut(&key) {
+            if entry.prompt == prompt {
+                entry.last_used = tick;
+                return;
+            }
+        }
         lru.map.insert(
             key,
             Entry {
@@ -292,6 +335,68 @@ mod tests {
         assert!(c.get(k2, &[2]).is_none(), "LRU victim must be k2");
         assert!(c.get(k3, &[3]).is_some());
         assert_eq!(c.to_json().get("evictions").as_i64(), Some(1));
+    }
+
+    #[test]
+    fn same_prompt_reinsert_is_idempotent() {
+        let c = PrefixCache::new(4);
+        let k = PrefixCache::key(1, &[5, 6]);
+        c.insert(k, &[5, 6], rows(1.0));
+        let before = c.get(k, &[5, 6]).unwrap();
+        // re-publishing the same prompt must keep the entry (and every
+        // outstanding Arc) and not count as an insert
+        c.insert(k, &[5, 6], rows(9.0));
+        let after = c.get(k, &[5, 6]).unwrap();
+        assert!(Arc::ptr_eq(&before, &after), "re-insert dropped the entry");
+        assert_eq!(after.logits[0], 1.0, "re-insert must not overwrite");
+        assert_eq!(c.to_json().get("inserts").as_i64(), Some(1));
+        // a colliding key with a different prompt is a real (re)insert
+        c.insert(k, &[6, 5], rows(2.0));
+        assert_eq!(c.to_json().get("inserts").as_i64(), Some(2));
+        assert_eq!(c.get(k, &[6, 5]).unwrap().logits[0], 2.0);
+    }
+
+    #[test]
+    fn reinsert_bumps_recency() {
+        let c = PrefixCache::new(2);
+        c.insert(11, &[1], rows(1.0));
+        c.insert(22, &[2], rows(2.0));
+        // re-insert of k=11 refreshes it, so k=22 is the LRU victim
+        c.insert(11, &[1], rows(1.0));
+        c.insert(33, &[3], rows(3.0));
+        assert!(c.get(11, &[1]).is_some(), "refreshed entry evicted");
+        assert!(c.get(22, &[2]).is_none());
+    }
+
+    #[test]
+    fn splice_into_overwrites_one_row() {
+        use crate::runtime::{ForwardModel, MockModel};
+
+        let m = MockModel::new(2, 8, 3, 10);
+        let mut toks = vec![1i32; 16];
+        for row in 0..2 {
+            for i in 0..3 {
+                toks[row * 8 + i] = 4 + row as i32;
+            }
+        }
+        let all_mask_toks = vec![1i32; 16];
+        let out = m.forward(&toks).unwrap();
+        let captured = FirstStepRows::from_output(&out, 1);
+        let mut dst = m.forward(&all_mask_toks).unwrap();
+        assert!(captured.matches(&dst));
+        captured.splice_into(&mut dst, 0);
+        // row 0 of dst now equals row 1 of the source board
+        assert_eq!(&dst.logits.data[..8 * 10], &out.logits.data[8 * 10..]);
+        assert_eq!(
+            &dst.degrees.as_ref().unwrap().data[..8],
+            &out.degrees.as_ref().unwrap().data[8..]
+        );
+        // the other row is untouched
+        let all_mask = m.forward(&all_mask_toks).unwrap();
+        assert_eq!(
+            &dst.logits.data[8 * 10..],
+            &all_mask.logits.data[8 * 10..]
+        );
     }
 
     #[test]

@@ -19,7 +19,12 @@
 //!
 //! The `cache_*`/`refresh_every`/`prefix_lru_cap` keys configure the
 //! compute-reuse subsystem (CLI: `--cache`/`--no-cache`,
-//! `--refresh-every`, `--cache-epsilon`, `--prefix-lru-cap`).
+//! `--refresh-every`, `--cache-epsilon`, `--prefix-lru-cap`).  With the
+//! cache enabled, prefix hits pay off on every board shape: pure-hit
+//! boards skip the forward entirely and hit rows admitted next to
+//! in-flight slots are spliced into the row-aware windowed forward, so
+//! `prefix_lru_cap` helps under interleaved traffic, not just
+//! same-prompt bursts.
 //! `feature_threads` (CLI: `--feature-threads`) fans the per-step
 //! feature derivation out across slots; 1 keeps the sequential
 //! zero-alloc pipeline and results never depend on the value.
@@ -52,7 +57,8 @@ pub struct ServeSettings {
     pub refresh_every: usize,
     /// incremental-graph score tolerance (0.0 = exact maintenance)
     pub cache_epsilon: f32,
-    /// cross-request prefix LRU capacity (0 disables the prefix layer)
+    /// cross-request prefix LRU capacity (0 disables the prefix layer);
+    /// hits serve whole boards *and* splice into mixed boards
     pub prefix_lru_cap: usize,
     /// scoped threads for the per-step feature fan-out (1 = sequential)
     pub feature_threads: usize,

@@ -29,6 +29,12 @@ pub struct Metrics {
     pub cache_window_forwards: AtomicU64,
     /// compute reuse: steps served entirely from the prefix cache
     pub cache_prefix_steps: AtomicU64,
+    /// compute reuse: batch rows served from prefix-cache first-step
+    /// snapshots (all-prefill boards + rows spliced into mixed boards)
+    pub cache_prefix_rows_spliced: AtomicU64,
+    /// compute reuse: steps served from the frozen snapshot because no
+    /// masked position remained to read (zero recompute)
+    pub cache_frozen_steps: AtomicU64,
     /// compute reuse: position-rows actually recomputed
     pub cache_positions_computed: AtomicU64,
     /// compute reuse: position-rows an uncached loop would have computed
@@ -85,6 +91,10 @@ impl Metrics {
             .fetch_add(s.window_forwards, Ordering::Relaxed);
         self.cache_prefix_steps
             .fetch_add(s.prefix_served_steps, Ordering::Relaxed);
+        self.cache_prefix_rows_spliced
+            .fetch_add(s.prefix_rows_spliced, Ordering::Relaxed);
+        self.cache_frozen_steps
+            .fetch_add(s.frozen_steps, Ordering::Relaxed);
         self.cache_positions_computed
             .fetch_add(s.positions_computed, Ordering::Relaxed);
         self.cache_positions_total
@@ -196,6 +206,14 @@ impl Metrics {
             "cache_prefix_steps",
             (self.cache_prefix_steps.load(Ordering::Relaxed) as i64).into(),
         );
+        j.set(
+            "cache_prefix_rows_spliced",
+            (self.cache_prefix_rows_spliced.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "cache_frozen_steps",
+            (self.cache_frozen_steps.load(Ordering::Relaxed) as i64).into(),
+        );
         j.set("cache_compute_frac", self.cache_compute_frac().into());
         j.set(
             "graph_full_rebuilds",
@@ -241,13 +259,18 @@ impl Metrics {
             self.rejected.load(Ordering::Relaxed),
         );
         let reused = self.cache_window_forwards.load(Ordering::Relaxed)
-            + self.cache_prefix_steps.load(Ordering::Relaxed);
+            + self.cache_prefix_steps.load(Ordering::Relaxed)
+            + self.cache_prefix_rows_spliced.load(Ordering::Relaxed)
+            + self.cache_frozen_steps.load(Ordering::Relaxed);
         if reused > 0 {
             out.push_str(&format!(
-                " cache[full={} window={} prefix_steps={} compute_frac={:.2}]",
+                " cache[full={} window={} prefix_steps={} spliced_rows={} \
+                 frozen={} compute_frac={:.2}]",
                 self.cache_full_forwards.load(Ordering::Relaxed),
                 self.cache_window_forwards.load(Ordering::Relaxed),
                 self.cache_prefix_steps.load(Ordering::Relaxed),
+                self.cache_prefix_rows_spliced.load(Ordering::Relaxed),
+                self.cache_frozen_steps.load(Ordering::Relaxed),
                 self.cache_compute_frac(),
             ));
         }
@@ -300,6 +323,8 @@ mod tests {
             full_forwards: 2,
             window_forwards: 6,
             prefix_served_steps: 1,
+            prefix_rows_spliced: 4,
+            frozen_steps: 2,
             positions_computed: 40,
             positions_total: 160,
             graph_full_rebuilds: 1,
@@ -310,9 +335,12 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("cache_window_forwards").as_i64(), Some(6));
         assert_eq!(j.get("cache_prefix_steps").as_i64(), Some(1));
+        assert_eq!(j.get("cache_prefix_rows_spliced").as_i64(), Some(4));
+        assert_eq!(j.get("cache_frozen_steps").as_i64(), Some(2));
         assert_eq!(j.get("graph_incremental_updates").as_i64(), Some(7));
         assert_eq!(j.get("graph_pairs_toggled").as_i64(), Some(3));
         assert!(m.report().contains("cache[full=2 window=6"));
+        assert!(m.report().contains("spliced_rows=4"));
     }
 
     #[test]

@@ -31,11 +31,15 @@
 //!
 //! With a [`CacheConfig`] attached (see [`SlotBatch::with_cache`]) the
 //! loop runs through the compute-reuse subsystem: steady-state forwards
-//! recompute only the masked window (`cache::ForwardCache`), each slot's
+//! recompute only each row's own masked window
+//! (`cache::ForwardCache::forward_planned`, row-aware), each slot's
 //! dependency graph is maintained incrementally over the active-block
 //! universe (`cache::IncrementalGraph`, diffing the CSR scores), and
-//! boards whose slots are all on step 0 with prefix-cache hits skip the
-//! forward pass entirely.  Disabled (the default), the loop is
+//! prefix-cache hits are honored on *any* board shape: step-0 hit rows
+//! are spliced from their cached first-step snapshots and excluded from
+//! the recompute window — a mixed board (hits next to mid-flight slots)
+//! stays on the windowed path, and a board of only hits takes no
+//! forward at all.  Disabled (the default), the loop is
 //! result-identical to the seed path.
 
 use std::sync::Arc;
@@ -46,11 +50,11 @@ use anyhow::{anyhow, bail, Result};
 use super::features::{self, FeatureJob, FeaturePipeline, ModelDims, StepArena, StepTimings};
 use super::{make_strategy, DecodeConfig, DecodeOutcome, Method, PrebuiltGraph, StepCtx, Strategy};
 use crate::cache::{
-    CacheConfig, CacheStats, FirstStepRows, ForwardCache, GraphStats, IncrementalGraph,
-    PrefixCache, PrefixHandle,
+    ActiveRows, CacheConfig, CacheStats, FirstStepRows, ForwardCache, GraphStats,
+    IncrementalGraph, PrefixCache, PrefixHandle, StepSource,
 };
 use crate::runtime::{ForwardModel, StepOutput};
-use crate::tensor::{argmax, Tensor};
+use crate::tensor::argmax;
 
 /// Per-slot decode state (one in-flight sample).  Step buffers live in
 /// the slot's [`StepArena`]; this carries only the request's identity
@@ -103,6 +107,13 @@ pub struct SlotBatch<'m> {
     graph_stats: GraphStats,
     /// steps answered entirely from the prefix cache
     prefix_served_steps: u64,
+    /// scratch: per-row "will be read" mask for the planned forward
+    active_rows: Vec<bool>,
+    /// scratch: (row, first-step rows) prefix splices for this step
+    splice_rows: Vec<(usize, Arc<FirstStepRows>)>,
+    /// scratch: prefix keys already published this step (same-prompt
+    /// slots on one board publish once, not once per slot)
+    published_keys: Vec<u64>,
 }
 
 impl<'m> SlotBatch<'m> {
@@ -155,6 +166,9 @@ impl<'m> SlotBatch<'m> {
             cache_cfg: cache.clone(),
             graph_stats: GraphStats::default(),
             prefix_served_steps: 0,
+            active_rows: Vec::new(),
+            splice_rows: Vec::new(),
+            published_keys: Vec::new(),
         })
     }
 
@@ -253,27 +267,42 @@ impl<'m> SlotBatch<'m> {
         let cache_enabled = self.cache_cfg.enabled;
         let cache_eps = self.cache_cfg.epsilon;
 
-        // ---- forward source: a board whose slots are all on step 0 with
-        // prefix-cache rows skips the forward entirely; otherwise run
-        // through the frozen-snapshot cache (windowed recompute) or, with
-        // the cache disabled, the plain full forward
-        let prefix_step = self.prefix.is_some()
-            && self
-                .slots
-                .iter()
-                .flatten()
-                .all(|st| st.steps == 0 && st.prefill.is_some());
+        // ---- forward source: with the cache enabled every step goes
+        // through the planned (row-aware) forward — step-0 slots holding
+        // prefix-cache rows are spliced in per row and excluded from the
+        // recompute window, vacant rows are excluded outright, and a
+        // board of only prefix rows takes no forward at all.  With the
+        // cache disabled this is the plain full forward (the seed path).
+        let step_source;
         let owned_out: StepOutput;
-        let out: &StepOutput = if prefix_step {
-            owned_out = self.assemble_prefix_board()?;
-            self.prefix_served_steps += 1;
-            &owned_out
-        } else if self.fwd_cache.is_some() {
-            self.fwd_cache
-                .as_mut()
-                .unwrap()
-                .forward(self.model, &self.tokens)?
+        let out: &StepOutput = if self.fwd_cache.is_some() {
+            self.active_rows.clear();
+            self.active_rows.resize(self.slots.len(), false);
+            self.splice_rows.clear();
+            for (s, slot) in self.slots.iter().enumerate() {
+                if let Some(st) = slot {
+                    match (st.steps == 0, &st.prefill) {
+                        (true, Some(rows)) => {
+                            self.splice_rows.push((s, Arc::clone(rows)));
+                        }
+                        _ => self.active_rows[s] = true,
+                    }
+                }
+            }
+            let fc = self.fwd_cache.as_mut().unwrap();
+            let (o, src) = fc.forward_planned(
+                self.model,
+                &self.tokens,
+                ActiveRows::Mask(&self.active_rows),
+                &self.splice_rows,
+            )?;
+            step_source = src;
+            if src == StepSource::PrefixOnly {
+                self.prefix_served_steps += 1;
+            }
+            o
         } else {
+            step_source = StepSource::Full;
             owned_out = self.model.forward(&self.tokens)?;
             &owned_out
         };
@@ -318,6 +347,7 @@ impl<'m> SlotBatch<'m> {
         self.timings.feature_ns += t_feat.elapsed().as_nanos() as u64;
 
         let mut finished = Vec::new();
+        self.published_keys.clear();
         for s in 0..self.slots.len() {
             if self.slots[s].is_none() {
                 continue;
@@ -331,12 +361,18 @@ impl<'m> SlotBatch<'m> {
 
                 if step == 0 {
                     // publish this slot's first-step rows for future
-                    // same-prompt requests (unless they came from the
-                    // cache in the first place)
-                    if !prefix_step && st.prefill.is_none() {
+                    // same-prompt requests.  Only a genuine full forward
+                    // yields a complete, exact row (windowed/spliced
+                    // step-0 outputs only refresh masked rows), slots
+                    // that came from the cache never re-publish, and N
+                    // same-prompt slots on one board publish once.
+                    if step_source == StepSource::Full && st.prefill.is_none() {
                         if let (Some(h), Some(key)) = (self.prefix.as_ref(), st.prefix_key) {
-                            let prompt = &self.tokens[s * l..s * l + p];
-                            h.cache.insert(key, prompt, FirstStepRows::from_output(out, s));
+                            if !self.published_keys.contains(&key) {
+                                self.published_keys.push(key);
+                                let prompt = &self.tokens[s * l..s * l + p];
+                                h.cache.insert(key, prompt, FirstStepRows::from_output(out, s));
+                            }
                         }
                     }
                     st.prefill = None;
@@ -484,12 +520,10 @@ impl<'m> SlotBatch<'m> {
         stats.graph_full_rebuilds = gs.full_rebuilds;
         stats.graph_incremental_updates = gs.incremental_updates;
         stats.graph_pairs_toggled = gs.pairs_toggled;
+        // prefix-served steps flow through the planned forward, which
+        // already charges them to positions_total (computing nothing),
+        // so compute_frac reflects the saving without adjustment here
         stats.prefix_served_steps = self.prefix_served_steps;
-        // a prefix-served step computed nothing, but an uncached loop
-        // would have run a full board forward — count it in the total so
-        // compute_frac reflects the saving
-        let board = (self.model.batch() * self.model.seq_len()) as u64;
-        stats.positions_total += self.prefix_served_steps * board;
         stats
     }
 
@@ -498,69 +532,6 @@ impl<'m> SlotBatch<'m> {
     /// selection) — the worker pool folds these into its metrics.
     pub fn timings(&self) -> StepTimings {
         self.timings
-    }
-
-    /// Build a step-0 `StepOutput` for the whole board from the occupied
-    /// slots' prefix-cache rows (all slots verified on step 0 with rows
-    /// present by the caller).  Vacant rows stay zero: the per-slot loop
-    /// never reads them.
-    fn assemble_prefix_board(&self) -> Result<StepOutput> {
-        let b = self.model.batch();
-        let l = self.dims.seq_len;
-        let v = self.dims.vocab;
-        let occupied: Vec<(usize, &FirstStepRows)> = self
-            .slots
-            .iter()
-            .enumerate()
-            .filter_map(|(s, st)| {
-                let rows = st.as_ref()?.prefill.as_deref()?;
-                Some((s, rows))
-            })
-            .collect();
-        let with_attn = occupied.iter().all(|(_, r)| r.attn.is_some());
-        let with_scores = occupied.iter().all(|(_, r)| r.scores.is_some());
-        let with_degrees = occupied.iter().all(|(_, r)| r.degrees.is_some());
-        let mut logits = vec![0.0f32; b * l * v];
-        let mut attn = if with_attn {
-            Some(vec![0.0f32; b * l * l])
-        } else {
-            None
-        };
-        let mut scores = if with_scores {
-            Some(vec![0.0f32; b * l * l])
-        } else {
-            None
-        };
-        let mut degrees = if with_degrees {
-            Some(vec![0.0f32; b * l])
-        } else {
-            None
-        };
-        for &(s, rows) in &occupied {
-            if rows.seq_len != l || rows.vocab != v {
-                bail!("prefix-cache rows have mismatched shapes");
-            }
-            logits[s * l * v..(s + 1) * l * v].copy_from_slice(&rows.logits);
-            if let (Some(dst), Some(src)) = (attn.as_mut(), rows.attn.as_ref()) {
-                dst[s * l * l..(s + 1) * l * l].copy_from_slice(src);
-            }
-            if let (Some(dst), Some(src)) = (scores.as_mut(), rows.scores.as_ref()) {
-                dst[s * l * l..(s + 1) * l * l].copy_from_slice(src);
-            }
-            if let (Some(dst), Some(src)) = (degrees.as_mut(), rows.degrees.as_ref()) {
-                dst[s * l..(s + 1) * l].copy_from_slice(src);
-            }
-        }
-        Ok(StepOutput {
-            batch: b,
-            seq_len: l,
-            vocab: v,
-            logits: Tensor::new(logits, &[b, l, v]),
-            attn_avg: attn.map(|d| Tensor::new(d, &[b, l, l])),
-            edge_scores: scores.map(|d| Tensor::new(d, &[b, l, l])),
-            degrees: degrees.map(|d| Tensor::new(d, &[b, l])),
-            attn_layers: None,
-        })
     }
 }
 
@@ -749,6 +720,94 @@ mod tests {
         }
         assert_eq!(pc.misses(), 1, "only the first request may miss");
         assert_eq!(pc.hits(), 2);
+    }
+
+    #[test]
+    fn mixed_board_prefix_hit_takes_windowed_path() {
+        // acceptance pin: a board with >= 1 prefix-hit row and >= 1
+        // in-flight row must take the windowed (not full) forward path,
+        // with the spliced request bit-identical to an uncached decode
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::DapdStaged);
+        let cache = CacheConfig {
+            enabled: true,
+            refresh_every: 1000, // only resets could force extra fulls
+            epsilon: 0.0,
+            prefix_lru_cap: 8,
+        };
+        let pc = Arc::new(PrefixCache::new(8));
+        let handle = PrefixHandle::new(Arc::clone(&pc), "mock-mixed");
+
+        let solo_a = decode_batch(&m, &[prompt(0)], &cfg).unwrap()[0].clone();
+        let solo_b = decode_batch(&m, &[prompt(1)], &cfg).unwrap()[0].clone();
+
+        // warm the prefix cache with prompt 0
+        let mut warm = SlotBatch::with_cache(&m, &cfg, &cache, Some(handle.clone())).unwrap();
+        warm.admit(9, &prompt(0)).unwrap();
+        while warm.occupied() > 0 {
+            warm.step().unwrap();
+        }
+        assert_eq!(pc.len(), 1);
+
+        // fresh batch: start prompt 1 (miss), admit prompt 0 (hit)
+        // mid-flight -> mixed board
+        let mut sb = SlotBatch::with_cache(&m, &cfg, &cache, Some(handle.clone())).unwrap();
+        sb.admit(1, &prompt(1)).unwrap();
+        let mut done = std::collections::HashMap::new();
+        for _ in 0..2 {
+            for (id, o) in sb.step().unwrap() {
+                done.insert(id, o);
+            }
+        }
+        assert!(sb.occupied() > 0, "resident sample drained too early for a mixed board");
+        sb.admit(0, &prompt(0)).unwrap();
+        while sb.occupied() > 0 {
+            for (id, o) in sb.step().unwrap() {
+                done.insert(id, o);
+            }
+        }
+        let got_a = &done[&0];
+        let got_b = &done[&1];
+        assert_eq!(got_a.gen, solo_a.gen, "spliced sample diverged");
+        assert_eq!(got_a.steps, solo_a.steps, "spliced sample NFE diverged");
+        assert_eq!(got_a.per_step_commits, solo_a.per_step_commits);
+        assert_eq!(got_b.gen, solo_b.gen, "resident sample perturbed by splice");
+        assert_eq!(got_b.steps, solo_b.steps);
+
+        let stats = sb.cache_stats();
+        assert_eq!(
+            stats.full_forwards, 1,
+            "the mixed-board admission must stay on the windowed path"
+        );
+        assert!(stats.window_forwards > 0);
+        assert_eq!(stats.prefix_rows_spliced, 1, "hit row must be spliced");
+        assert_eq!(stats.prefix_served_steps, 0, "board was never all-prefill");
+    }
+
+    #[test]
+    fn same_prompt_slots_publish_once_per_board() {
+        let m = mock(); // batch 2
+        let cfg = DecodeConfig::new(Method::FastDllm);
+        let cache = CacheConfig {
+            enabled: true,
+            refresh_every: 4,
+            epsilon: 0.0,
+            prefix_lru_cap: 8,
+        };
+        let pc = Arc::new(PrefixCache::new(8));
+        let handle = PrefixHandle::new(Arc::clone(&pc), "mock-dedupe");
+        let mut sb = SlotBatch::with_cache(&m, &cfg, &cache, Some(handle)).unwrap();
+        sb.admit(0, &prompt(0)).unwrap();
+        sb.admit(1, &prompt(0)).unwrap(); // same prompt, same board
+        while sb.occupied() > 0 {
+            sb.step().unwrap();
+        }
+        assert_eq!(pc.len(), 1);
+        assert_eq!(
+            pc.to_json().get("inserts").as_i64(),
+            Some(1),
+            "N same-prompt slots on one board must insert once"
+        );
     }
 
     #[test]

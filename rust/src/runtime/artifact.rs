@@ -15,6 +15,12 @@ pub struct ArtifactInfo {
     pub name: String,
     pub model: String,
     pub file: String,
+    /// Optional windowed variant of `file`: the same computation taking
+    /// a second `[batch, seq_len]` i32 0/1 window-mask operand and
+    /// free to leave zero/stale outputs wherever the mask is 0.  When
+    /// present the engine serves `forward_window`/`forward_window_rows`
+    /// natively instead of through the full-forward trait fallback.
+    pub windowed_file: Option<String>,
     pub kind: ArtifactKind,
     pub batch: usize,
     pub seq_len: usize,
@@ -27,6 +33,24 @@ pub struct ArtifactInfo {
     pub n_heads: usize,
     pub d_model: usize,
     pub graph_layers: Vec<usize>,
+}
+
+impl ArtifactInfo {
+    /// The usable windowed variant file, if any: a declared
+    /// `windowed_file` on a *serving* artifact (the toy path has no
+    /// splice story).  The single eligibility gate shared by the
+    /// engine's compile paths and the pool's capability report.
+    pub fn windowed_variant(&self) -> Option<&str> {
+        match (&self.windowed_file, self.kind) {
+            (Some(file), ArtifactKind::Serving) => Some(file),
+            _ => None,
+        }
+    }
+
+    /// Whether [`ArtifactInfo::windowed_variant`] exists.
+    pub fn has_windowed(&self) -> bool {
+        self.windowed_variant().is_some()
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -113,6 +137,7 @@ impl Metadata {
                 name: a.get("name").as_str().unwrap_or_default().to_string(),
                 model: a.get("model").as_str().unwrap_or_default().to_string(),
                 file: a.get("file").as_str().unwrap_or_default().to_string(),
+                windowed_file: a.get("windowed_file").as_str().map(str::to_string),
                 kind,
                 batch: a.get("batch").as_usize().context("artifact batch")?,
                 seq_len: a.get("seq_len").as_usize().context("artifact seq_len")?,
@@ -257,6 +282,13 @@ mod tests {
         let a = m.find("m", 1, 40).unwrap();
         assert_eq!(a.kind, ArtifactKind::Serving);
         assert_eq!(a.graph_layers, vec![3, 4]);
+        assert_eq!(a.windowed_file, None, "windowed variant is opt-in");
+        assert!(!a.has_windowed());
+        let mut w = a.clone();
+        w.windowed_file = Some("m.windowed.hlo.txt".into());
+        assert!(w.has_windowed());
+        w.kind = ArtifactKind::Toy;
+        assert!(!w.has_windowed(), "toy artifacts have no windowed path");
         assert!(m.find("m", 2, 40).is_err());
         assert_eq!(m.serving_models(), vec!["m"]);
         assert_eq!(m.eval_sets["arith"], "eval/arith.json");

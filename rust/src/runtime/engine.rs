@@ -19,7 +19,7 @@ use anyhow::{bail, Context, Result};
 
 use super::artifact::{ArtifactInfo, ArtifactKind, Metadata};
 use super::pjrt as xla;
-use super::{ForwardModel, StepOutput};
+use super::{ForwardModel, RowWindows, StepOutput};
 use crate::tensor::Tensor;
 use crate::util::logging;
 
@@ -66,8 +66,14 @@ impl Engine {
         })
     }
 
-    fn compile(&self, info: &ArtifactInfo) -> Result<Arc<CompiledArtifact>> {
-        let path = self.meta.artifact_path(info);
+    /// Compile one HLO text file under a display label (the artifact
+    /// name, or `name#windowed` for the windowed variant).
+    fn compile_file(
+        &self,
+        label: &str,
+        path: &Path,
+        info: &ArtifactInfo,
+    ) -> Result<Arc<CompiledArtifact>> {
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("artifact path not utf-8")?,
@@ -77,10 +83,9 @@ impl Engine {
         let exe = self
             .client
             .compile(&comp)
-            .with_context(|| format!("compiling {}", info.name))?;
+            .with_context(|| format!("compiling {label}"))?;
         logging::info(&format!(
-            "compiled {} in {:.2}s",
-            info.name,
+            "compiled {label} in {:.2}s",
             t0.elapsed().as_secs_f64()
         ));
         Ok(Arc::new(CompiledArtifact {
@@ -89,20 +94,54 @@ impl Engine {
         }))
     }
 
+    fn compile(&self, info: &ArtifactInfo) -> Result<Arc<CompiledArtifact>> {
+        self.compile_file(&info.name, &self.meta.artifact_path(info), info)
+    }
+
+    /// Compile one windowed HLO variant file under `name#windowed`.
+    fn compile_windowed_file(
+        &self,
+        info: &ArtifactInfo,
+        file: &str,
+    ) -> Result<Arc<CompiledArtifact>> {
+        let label = format!("{}#windowed", info.name);
+        self.compile_file(&label, &self.meta.root.join(file), info)
+    }
+
+    /// Compile the windowed variant when the artifact is eligible
+    /// ([`ArtifactInfo::windowed_variant`]).
+    fn compile_windowed(&self, info: &ArtifactInfo) -> Result<Option<Arc<CompiledArtifact>>> {
+        info.windowed_variant()
+            .map(|file| self.compile_windowed_file(info, file))
+            .transpose()
+    }
+
+    /// Fetch-or-compile through the executable cache under `key`.
+    fn cached(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<Arc<CompiledArtifact>>,
+    ) -> Result<Arc<CompiledArtifact>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(c) = cache.get(key) {
+            return Ok(Arc::clone(c));
+        }
+        let arc = build()?;
+        cache.insert(key.to_string(), Arc::clone(&arc));
+        Ok(arc)
+    }
+
     /// Compile (or fetch cached) an artifact and wrap it as a model.
     pub fn model(&self, name: &str) -> Result<XlaModel> {
         let info = self.meta.find_by_name(name)?.clone();
-        let compiled = {
-            let mut cache = self.cache.lock().unwrap();
-            if let Some(c) = cache.get(name) {
-                Arc::clone(c)
-            } else {
-                let arc = self.compile(&info)?;
-                cache.insert(name.to_string(), Arc::clone(&arc));
-                arc
-            }
+        let compiled = self.cached(name, || self.compile(&info))?;
+        let windowed = match info.windowed_variant() {
+            Some(file) => Some(self.cached(&format!("{name}#windowed"), || {
+                self.compile_windowed_file(&info, file)
+            })?),
+            None => None,
         };
-        Ok(XlaModel { compiled })
+        Ok(XlaModel { compiled, windowed })
     }
 
     /// Compile a *fresh* executable, bypassing the cache.
@@ -114,6 +153,7 @@ impl Engine {
         let info = self.meta.find_by_name(name)?.clone();
         Ok(XlaModel {
             compiled: self.compile(&info)?,
+            windowed: self.compile_windowed(&info)?,
         })
     }
 
@@ -139,6 +179,9 @@ impl Engine {
 /// crate, prefer routing all model construction through `ModelPool`.
 pub struct XlaModel {
     compiled: Arc<CompiledArtifact>,
+    /// windowed variant (tokens + window-mask operands); present only
+    /// when the metadata declares `windowed_file` on a serving artifact
+    windowed: Option<Arc<CompiledArtifact>>,
 }
 
 impl XlaModel {
@@ -146,22 +189,84 @@ impl XlaModel {
         &self.compiled.info
     }
 
-    fn execute(&self, tokens: &[i32]) -> Result<Vec<xla::Literal>> {
+    fn board_literal(&self, data: &[i32], what: &str) -> Result<xla::Literal> {
         let info = &self.compiled.info;
-        if tokens.len() != info.batch * info.seq_len {
+        if data.len() != info.batch * info.seq_len {
             bail!(
-                "token buffer {} != batch {} x seq_len {}",
-                tokens.len(),
+                "{what} buffer {} != batch {} x seq_len {}",
+                data.len(),
                 info.batch,
                 info.seq_len
             );
         }
-        let lit = xla::Literal::vec1(tokens)
+        xla::Literal::vec1(data)
             .reshape(&[info.batch as i64, info.seq_len as i64])
-            .context("reshaping tokens")?;
+            .with_context(|| format!("reshaping {what}"))
+    }
+
+    fn execute(&self, tokens: &[i32]) -> Result<Vec<xla::Literal>> {
+        let lit = self.board_literal(tokens, "token")?;
         let result = self.compiled.exe.execute::<xla::Literal>(&[lit])?[0][0]
             .to_literal_sync()?;
         Ok(result.to_tuple()?)
+    }
+
+    /// Execute the windowed variant with a `[batch, seq_len]` 0/1 mask:
+    /// outputs where the mask is 0 may be zero or stale, exactly the
+    /// `forward_window*` contract the cache layer splices under.
+    fn execute_windowed(&self, tokens: &[i32], mask: &[i32]) -> Result<StepOutput> {
+        let exe = &self
+            .windowed
+            .as_ref()
+            .expect("execute_windowed without a windowed executable")
+            .exe;
+        let toks = self.board_literal(tokens, "token")?;
+        let win = self.board_literal(mask, "window-mask")?;
+        let result = exe.execute::<xla::Literal>(&[toks, win])?[0][0].to_literal_sync()?;
+        self.parse_serving(result.to_tuple()?)
+    }
+
+    /// Build the `[batch, seq_len]` 0/1 window-mask operand from
+    /// `(row, positions)` pairs — the one mask builder both windowed
+    /// entry points share, so their validation cannot drift.
+    fn window_mask<'a>(
+        &self,
+        windows: impl Iterator<Item = (usize, &'a [usize])>,
+    ) -> Result<Vec<i32>> {
+        let info = &self.compiled.info;
+        let (b, l) = (info.batch, info.seq_len);
+        let mut mask = vec![0i32; b * l];
+        for (bi, positions) in windows {
+            if bi >= b {
+                bail!("window row {bi} out of range (batch {b})");
+            }
+            for &i in positions {
+                if i >= l {
+                    bail!("window position {i} out of range (seq_len {l})");
+                }
+                mask[bi * l + i] = 1;
+            }
+        }
+        Ok(mask)
+    }
+
+    /// Unpack a serving artifact's 4-tuple into a `StepOutput`.
+    fn parse_serving(&self, outs: Vec<xla::Literal>) -> Result<StepOutput> {
+        let info = &self.compiled.info;
+        let (b, l, v) = (info.batch, info.seq_len, info.vocab);
+        if outs.len() != 4 {
+            bail!("serving artifact returned {} outputs, want 4", outs.len());
+        }
+        Ok(StepOutput {
+            batch: b,
+            seq_len: l,
+            vocab: v,
+            logits: Tensor::new(outs[0].to_vec::<f32>()?, &[b, l, v]),
+            attn_avg: Some(Tensor::new(outs[1].to_vec::<f32>()?, &[b, l, l])),
+            edge_scores: Some(Tensor::new(outs[2].to_vec::<f32>()?, &[b, l, l])),
+            degrees: Some(Tensor::new(outs[3].to_vec::<f32>()?, &[b, l])),
+            attn_layers: None,
+        })
     }
 }
 
@@ -190,21 +295,7 @@ impl ForwardModel for XlaModel {
         let (b, l, v) = (info.batch, info.seq_len, info.vocab);
         let outs = self.execute(tokens)?;
         match info.kind {
-            ArtifactKind::Serving => {
-                if outs.len() != 4 {
-                    bail!("serving artifact returned {} outputs, want 4", outs.len());
-                }
-                Ok(StepOutput {
-                    batch: b,
-                    seq_len: l,
-                    vocab: v,
-                    logits: Tensor::new(outs[0].to_vec::<f32>()?, &[b, l, v]),
-                    attn_avg: Some(Tensor::new(outs[1].to_vec::<f32>()?, &[b, l, l])),
-                    edge_scores: Some(Tensor::new(outs[2].to_vec::<f32>()?, &[b, l, l])),
-                    degrees: Some(Tensor::new(outs[3].to_vec::<f32>()?, &[b, l])),
-                    attn_layers: None,
-                })
-            }
+            ArtifactKind::Serving => self.parse_serving(outs),
             ArtifactKind::Toy => {
                 if outs.len() != 2 {
                     bail!("toy artifact returned {} outputs, want 2", outs.len());
@@ -225,5 +316,33 @@ impl ForwardModel for XlaModel {
                 })
             }
         }
+    }
+
+    /// Uniform-window forward: when the metadata declares a windowed
+    /// variant, execute it with every batch row's mask set at `window`;
+    /// otherwise fall back to a full forward (the trait default, kept
+    /// explicit here so the fallback is visible in one place).
+    fn forward_window(&self, tokens: &[i32], window: &[usize]) -> Result<StepOutput> {
+        if self.windowed.is_none() {
+            return self.forward(tokens);
+        }
+        let b = self.compiled.info.batch;
+        let mask = self.window_mask((0..b).map(|bi| (bi, window)))?;
+        self.execute_windowed(tokens, &mask)
+    }
+
+    /// Row-aware windowed forward: the windowed artifact's mask operand
+    /// is already per-(row, position), so mixed boards pay exactly the
+    /// union of their rows' own windows — nothing drags across rows.
+    fn forward_window_rows(&self, tokens: &[i32], windows: &RowWindows<'_>) -> Result<StepOutput> {
+        if self.windowed.is_none() {
+            return self.forward(tokens);
+        }
+        let mask = self.window_mask(windows.iter())?;
+        self.execute_windowed(tokens, &mask)
+    }
+
+    fn window_native(&self) -> bool {
+        self.windowed.is_some()
     }
 }

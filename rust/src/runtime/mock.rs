@@ -8,7 +8,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{ForwardModel, StepOutput};
+use super::{ForwardModel, RowWindows, StepOutput};
 use crate::tensor::Tensor;
 
 #[derive(Debug, Clone)]
@@ -72,6 +72,57 @@ impl MockModel {
         1.0 / (hi - lo + 1) as f32
     }
 
+    /// Compute one `(batch row, sequence position)` pair of the forward
+    /// output into the flat buffers — the shared body of the full,
+    /// uniform-window and per-row-window forwards.
+    #[allow(clippy::too_many_arguments)]
+    fn fill_position(
+        &self,
+        row: &[i32],
+        bi: usize,
+        i: usize,
+        logits: &mut [f32],
+        attn: &mut [f32],
+        scores: &mut [f32],
+        degrees: &mut [f32],
+    ) {
+        let (l, v) = (self.seq_len, self.vocab);
+        // --- logits: peaked at true token, context-driven conf ----------
+        let base = (bi * l + i) * v;
+        let (target, conf) = if row[i] == self.mask_id {
+            (self.true_token(i), self.confidence(row, i))
+        } else {
+            (row[i], 0.999) // committed tokens reproduce themselves
+        };
+        // logits realizing: softmax = conf at target, uniform rest
+        let rest = ((1.0 - conf) / (v as f32 - 1.0)).max(1e-7);
+        let lo = rest.ln();
+        for t in 0..v {
+            logits[base + t] = lo;
+        }
+        logits[base + target as usize] = conf.max(1e-7).ln();
+
+        // --- attention row: banded, row-normalized -----------------------
+        let abase = (bi * l + i) * l;
+        for j in 0..l {
+            let w = self.attn_weight(i, j);
+            if w > 0.0 {
+                attn[abase + j] = w;
+            }
+        }
+
+        // --- edge-score row: symmetrized, masked pairs -------------------
+        if row[i] == self.mask_id {
+            for j in 0..l {
+                if j != i && row[j] == self.mask_id {
+                    let s = 0.5 * (self.attn_weight(i, j) + self.attn_weight(j, i));
+                    scores[abase + j] = s;
+                    degrees[bi * l + i] += s;
+                }
+            }
+        }
+    }
+
     /// Forward pass over a subset of sequence positions (every batch
     /// row): the shared body of `forward` (all positions) and
     /// `forward_window`.  Non-selected rows stay zero.
@@ -88,40 +139,7 @@ impl MockModel {
         for bi in 0..b {
             let row = &tokens[bi * l..(bi + 1) * l];
             for &i in rows {
-                // --- logits: peaked at true token, context-driven conf --
-                let base = (bi * l + i) * v;
-                let (target, conf) = if row[i] == self.mask_id {
-                    (self.true_token(i), self.confidence(row, i))
-                } else {
-                    (row[i], 0.999) // committed tokens reproduce themselves
-                };
-                // logits realizing: softmax = conf at target, uniform rest
-                let rest = ((1.0 - conf) / (v as f32 - 1.0)).max(1e-7);
-                let lo = rest.ln();
-                for t in 0..v {
-                    logits[base + t] = lo;
-                }
-                logits[base + target as usize] = conf.max(1e-7).ln();
-
-                // --- attention row: banded, row-normalized --------------
-                let abase = (bi * l + i) * l;
-                for j in 0..l {
-                    let w = self.attn_weight(i, j);
-                    if w > 0.0 {
-                        attn[abase + j] = w;
-                    }
-                }
-
-                // --- edge-score row: symmetrized, masked pairs ----------
-                if row[i] == self.mask_id {
-                    for j in 0..l {
-                        if j != i && row[j] == self.mask_id {
-                            let s = 0.5 * (self.attn_weight(i, j) + self.attn_weight(j, i));
-                            scores[abase + j] = s;
-                            degrees[bi * l + i] += s;
-                        }
-                    }
-                }
+                self.fill_position(row, bi, i, &mut logits, &mut attn, &mut scores, &mut degrees);
             }
         }
 
@@ -168,6 +186,54 @@ impl ForwardModel for MockModel {
     /// the mock backend.
     fn forward_window(&self, tokens: &[i32], window: &[usize]) -> Result<StepOutput> {
         self.forward_rows(tokens, window)
+    }
+
+    /// Row-aware windowed forward: each batch row computes only its own
+    /// position list, so one row's masked columns never drag into
+    /// another row's recompute (the mixed-board splice path relies on
+    /// this being genuinely cheaper).
+    fn forward_window_rows(&self, tokens: &[i32], windows: &RowWindows<'_>) -> Result<StepOutput> {
+        let (b, l, v) = (self.batch, self.seq_len, self.vocab);
+        if tokens.len() != b * l {
+            bail!("mock forward: token buffer size mismatch");
+        }
+        let mut logits = vec![0.0f32; b * l * v];
+        let mut attn = vec![0.0f32; b * l * l];
+        let mut scores = vec![0.0f32; b * l * l];
+        let mut degrees = vec![0.0f32; b * l];
+
+        for (bi, positions) in windows.iter() {
+            if bi >= b {
+                bail!("mock forward: window row {bi} out of range (batch {b})");
+            }
+            // duplicates would double-accumulate degrees (see RowWindows)
+            debug_assert!(
+                positions.windows(2).all(|w| w[0] < w[1]),
+                "window positions must be strictly ascending"
+            );
+            let row = &tokens[bi * l..(bi + 1) * l];
+            for &i in positions {
+                if i >= l {
+                    bail!("mock forward: window position {i} out of range (seq_len {l})");
+                }
+                self.fill_position(row, bi, i, &mut logits, &mut attn, &mut scores, &mut degrees);
+            }
+        }
+
+        Ok(StepOutput {
+            batch: b,
+            seq_len: l,
+            vocab: v,
+            logits: Tensor::new(logits, &[b, l, v]),
+            attn_avg: Some(Tensor::new(attn, &[b, l, l])),
+            edge_scores: Some(Tensor::new(scores, &[b, l, l])),
+            degrees: Some(Tensor::new(degrees, &[b, l])),
+            attn_layers: None,
+        })
+    }
+
+    fn window_native(&self) -> bool {
+        true
     }
 }
 
@@ -252,6 +318,50 @@ mod tests {
             // a non-window row stays zero in the windowed output
             assert!(win.logits.slice3(bi, 6).iter().all(|&x| x == 0.0));
         }
+    }
+
+    #[test]
+    fn window_conformance_holds_for_the_mock() {
+        // the shared conformance check: per-row windowed rows (and the
+        // union-window rows) are bit-identical to a full forward
+        let m = MockModel::new(3, 16, 5, 12);
+        let mut toks = vec![1i32; 3 * 16];
+        for row in 0..3 {
+            for i in 0..5 {
+                toks[row * 16 + i] = 3 + row as i32;
+            }
+            // rows progress unevenly: row r has r committed gen positions
+            for k in 0..row {
+                toks[row * 16 + 5 + k] = 7 + k as i32;
+            }
+        }
+        assert!(m.window_native());
+        crate::runtime::check_window_conformance(&m, &toks).unwrap();
+    }
+
+    #[test]
+    fn forward_window_rows_computes_only_requested_rows() {
+        let m = MockModel::new(2, 12, 4, 10);
+        let mut toks = vec![1i32; 24];
+        for row in 0..2 {
+            for i in 0..4 {
+                toks[row * 12 + i] = 3;
+            }
+        }
+        // only row 1, positions 5 and 7
+        let windows = RowWindows {
+            rows: &[1],
+            spans: &[(0, 2)],
+            positions: &[5, 7],
+        };
+        assert_eq!(windows.len(), 2);
+        let win = m.forward_window_rows(&toks, &windows).unwrap();
+        let full = m.forward(&toks).unwrap();
+        assert_eq!(win.logits.slice3(1, 5), full.logits.slice3(1, 5));
+        assert_eq!(win.logits.slice3(1, 7), full.logits.slice3(1, 7));
+        // row 0 (not requested) and unrequested row-1 positions stay zero
+        assert!(win.logits.slice3(0, 5).iter().all(|&x| x == 0.0));
+        assert!(win.logits.slice3(1, 6).iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -37,6 +37,45 @@ pub struct StepOutput {
     pub attn_layers: Option<Tensor>,
 }
 
+/// A row-aware recompute request for one windowed forward: for each
+/// listed batch row, the sequence positions that must be freshly
+/// computed.  Flat-packed CSR-style (rows / spans / positions) so
+/// steady-state callers (`cache::ForwardCache`) can rebuild one without
+/// allocating.
+///
+/// Invariants (callers must uphold, implementations may
+/// `debug_assert`): `rows` lists each batch row at most once, and each
+/// span's positions are strictly ascending — duplicates would double
+/// accumulated outputs (e.g. proxy degrees) in native backends.
+#[derive(Debug, Clone, Copy)]
+pub struct RowWindows<'a> {
+    /// batch rows with a non-empty window, ascending, unique
+    pub rows: &'a [usize],
+    /// per entry in `rows`: `(start, end)` range into `positions`
+    pub spans: &'a [(usize, usize)],
+    /// flat position lists, strictly ascending within each span
+    pub positions: &'a [usize],
+}
+
+impl<'a> RowWindows<'a> {
+    /// Iterate `(batch row, positions)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &'a [usize])> + '_ {
+        self.rows
+            .iter()
+            .zip(self.spans)
+            .map(|(&r, &(s, e))| (r, &self.positions[s..e]))
+    }
+
+    /// Total number of `(row, position)` pairs requested.
+    pub fn len(&self) -> usize {
+        self.spans.iter().map(|&(s, e)| e - s).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
 /// A compiled forward pass the decode loop can drive.
 ///
 /// Implemented by `XlaModel` (PJRT) and `MockModel` (pure-rust synthetic
@@ -62,4 +101,124 @@ pub trait ForwardModel {
         let _ = window;
         self.forward(tokens)
     }
+
+    /// Row-aware windowed forward: recompute only `windows` — each batch
+    /// row's own position list — instead of one shared window.  Every
+    /// `(row, position)` pair outside the request may be zero or stale
+    /// in the returned `StepOutput`.  The default unions the per-row
+    /// lists and defers to [`ForwardModel::forward_window`], which is a
+    /// correct superset; backends with a native per-row path (the mock,
+    /// windowed artifacts) override it so one row's columns never drag
+    /// into another row's recompute.
+    fn forward_window_rows(&self, tokens: &[i32], windows: &RowWindows<'_>) -> Result<StepOutput> {
+        let mut union: Vec<usize> = Vec::new();
+        for (_, positions) in windows.iter() {
+            union.extend_from_slice(positions);
+        }
+        union.sort_unstable();
+        union.dedup();
+        self.forward_window(tokens, &union)
+    }
+
+    /// Whether windowed forwards are computed natively (genuinely
+    /// cheaper than a full forward) rather than through the full-forward
+    /// trait fallback.  Purely informational — the cache layer is
+    /// correct either way — but it lets deploy-time logs and benches
+    /// tell real reuse from a correctness-neutral fallback.
+    fn window_native(&self) -> bool {
+        false
+    }
+}
+
+/// Windowed-forward conformance check shared by the mock unit tests and
+/// the engine integration tests: for the per-row masked windows of
+/// `tokens`, both [`ForwardModel::forward_window`] (union window) and
+/// [`ForwardModel::forward_window_rows`] must return rows bit-identical
+/// to the same rows of a full forward.  Backends without a native
+/// windowed path satisfy this trivially through the trait fallback.
+pub fn check_window_conformance(model: &dyn ForwardModel, tokens: &[i32]) -> Result<()> {
+    use anyhow::bail;
+
+    let b = model.batch();
+    let l = model.seq_len();
+    let mask_id = model.mask_id();
+    if tokens.len() != b * l {
+        bail!("conformance: token buffer {} != {b}x{l}", tokens.len());
+    }
+    let full = model.forward(tokens)?;
+
+    // per-row masked windows, plus the union for plain forward_window
+    let mut rows = Vec::new();
+    let mut spans = Vec::new();
+    let mut positions = Vec::new();
+    let mut union: Vec<usize> = Vec::new();
+    for bi in 0..b {
+        let start = positions.len();
+        for i in 0..l {
+            if tokens[bi * l + i] == mask_id {
+                positions.push(i);
+                union.push(i);
+            }
+        }
+        if positions.len() > start {
+            rows.push(bi);
+            spans.push((start, positions.len()));
+        }
+    }
+    union.sort_unstable();
+    union.dedup();
+
+    let check = |label: &str, got: &StepOutput, bi: usize, i: usize| -> Result<()> {
+        let v = model.vocab();
+        if got.logits.data[(bi * l + i) * v..(bi * l + i + 1) * v]
+            != full.logits.data[(bi * l + i) * v..(bi * l + i + 1) * v]
+        {
+            bail!("{label}: logits row ({bi}, {i}) differs from full forward");
+        }
+        for (name, a, f) in [
+            ("attn_avg", &got.attn_avg, &full.attn_avg),
+            ("edge_scores", &got.edge_scores, &full.edge_scores),
+        ] {
+            match (a, f) {
+                (Some(a), Some(f)) => {
+                    if a.data[(bi * l + i) * l..(bi * l + i + 1) * l]
+                        != f.data[(bi * l + i) * l..(bi * l + i + 1) * l]
+                    {
+                        bail!("{label}: {name} row ({bi}, {i}) differs from full forward");
+                    }
+                }
+                (None, None) => {}
+                _ => bail!("{label}: {name} presence differs from full forward"),
+            }
+        }
+        match (&got.degrees, &full.degrees) {
+            (Some(a), Some(f)) => {
+                if a.data[bi * l + i] != f.data[bi * l + i] {
+                    bail!("{label}: degree ({bi}, {i}) differs from full forward");
+                }
+            }
+            (None, None) => {}
+            _ => bail!("{label}: degrees presence differs from full forward"),
+        }
+        Ok(())
+    };
+
+    let win = model.forward_window(tokens, &union)?;
+    for bi in 0..b {
+        for &i in &union {
+            check("forward_window", &win, bi, i)?;
+        }
+    }
+    let windows = RowWindows {
+        rows: &rows,
+        spans: &spans,
+        positions: &positions,
+    };
+    let win_rows = model.forward_window_rows(tokens, &windows)?;
+    for (bi, pos) in windows.iter() {
+        for &i in pos {
+            check("forward_window_rows", &win_rows, bi, i)?;
+        }
+    }
+    Ok(())
 }

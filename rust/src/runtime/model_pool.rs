@@ -83,6 +83,21 @@ impl ModelPool {
         }
     }
 
+    /// Whether replicas serve windowed forwards natively (the mock
+    /// always does; a PJRT artifact does when its metadata declares a
+    /// `windowed_file` variant).  Knowable at deploy time, before any
+    /// replica compiles.
+    pub fn window_native(&self) -> bool {
+        match self {
+            ModelPool::Mock(_) => true,
+            ModelPool::Pjrt { engine, artifact } => engine
+                .meta
+                .find_by_name(artifact)
+                .map(|a| a.has_windowed())
+                .unwrap_or(false),
+        }
+    }
+
     /// Human-readable description for logs.
     pub fn describe(&self) -> String {
         match self {
@@ -90,7 +105,13 @@ impl ModelPool {
                 "mock(batch={} seq={} prompt={} vocab={})",
                 m.batch, m.seq_len, m.prompt_len, m.vocab
             ),
-            ModelPool::Pjrt { artifact, .. } => format!("pjrt({artifact})"),
+            ModelPool::Pjrt { artifact, .. } => {
+                if self.window_native() {
+                    format!("pjrt({artifact}, windowed)")
+                } else {
+                    format!("pjrt({artifact})")
+                }
+            }
         }
     }
 }
@@ -126,6 +147,16 @@ impl ForwardModel for PooledXla {
     }
     fn forward_window(&self, tokens: &[i32], window: &[usize]) -> Result<StepOutput> {
         self.model.forward_window(tokens, window)
+    }
+    fn forward_window_rows(
+        &self,
+        tokens: &[i32],
+        windows: &super::RowWindows<'_>,
+    ) -> Result<StepOutput> {
+        self.model.forward_window_rows(tokens, windows)
+    }
+    fn window_native(&self) -> bool {
+        self.model.window_native()
     }
 }
 

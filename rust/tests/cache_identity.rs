@@ -145,6 +145,64 @@ fn prefix_cache_round_trips_repeat_prompts() {
 }
 
 #[test]
+fn mixed_board_splice_stays_identical_across_refresh_periods() {
+    // a prefix-hit row admitted next to an in-flight row (the mixed
+    // board) must decode token-for-token like the uncached loop at any
+    // refresh period, for every method
+    let m = mock();
+    for method in Method::all() {
+        let cfg = DecodeConfig::new(method);
+        let ps = prompts(2);
+        let solo0 = decode_batch(&m, &[ps[0].clone()], &cfg).unwrap()[0].clone();
+        let solo1 = decode_batch(&m, &[ps[1].clone()], &cfg).unwrap()[0].clone();
+        for refresh_every in [1usize, 3, 6] {
+            let cc = CacheConfig {
+                prefix_lru_cap: 8,
+                ..cache(refresh_every)
+            };
+            let pc = Arc::new(PrefixCache::new(8));
+            let handle = PrefixHandle::new(Arc::clone(&pc), "mixed-identity");
+            // warm prompt 0
+            let mut warm = SlotBatch::with_cache(&m, &cfg, &cc, Some(handle.clone())).unwrap();
+            warm.admit(0, &ps[0]).unwrap();
+            while warm.occupied() > 0 {
+                warm.step().unwrap();
+            }
+            // mixed run: prompt 1 in flight, prompt 0 admitted at step 2
+            let mut sb = SlotBatch::with_cache(&m, &cfg, &cc, Some(handle.clone())).unwrap();
+            sb.admit(1, &ps[1]).unwrap();
+            let mut done = std::collections::HashMap::new();
+            for _ in 0..2 {
+                if sb.occupied() == 0 {
+                    break;
+                }
+                for (id, o) in sb.step().unwrap() {
+                    done.insert(id, o);
+                }
+            }
+            sb.admit(0, &ps[0]).unwrap();
+            while sb.occupied() > 0 {
+                for (id, o) in sb.step().unwrap() {
+                    done.insert(id, o);
+                }
+            }
+            let ctx = format!("{} mixed refresh={refresh_every}", method.name());
+            assert_same(&[solo0.clone()], &[done[&0].clone()], &ctx);
+            assert_same(&[solo1.clone()], &[done[&1].clone()], &ctx);
+            // refresh_every = 1 is the uncached degrade: a mixed board's
+            // forward is always full there, so the splice only has to
+            // show up at deeper refresh periods
+            if refresh_every > 1 {
+                assert!(
+                    sb.cache_stats().prefix_rows_spliced >= 1,
+                    "{ctx}: hit row was not spliced"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn cached_pool_matches_uncached_pool_token_for_token() {
     let ps = prompts(8);
     let cfg = DecodeConfig::new(Method::DapdStaged);

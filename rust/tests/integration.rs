@@ -152,6 +152,34 @@ fn decode_completes_on_real_model_all_methods() {
 }
 
 #[test]
+fn engine_windowed_forward_conforms_to_full_forward() {
+    // the engine half of the windowed-forward conformance pin (the mock
+    // half lives in runtime::mock unit tests): per-row windowed rows —
+    // native when the artifact declares a `windowed_file` variant,
+    // full-forward fallback otherwise — must be bit-identical to the
+    // same rows of a full forward
+    let Some(e) = engine() else { return };
+    let model = e.model_for("sim-llada", 2, e.meta.gen_len).unwrap();
+    let l = model.seq_len();
+    let p = model.prompt_len();
+    let mut tokens = vec![scorer::vocab::PAD; 2 * l];
+    for row in 0..2 {
+        for i in p..l {
+            tokens[row * l + i] = model.mask_id();
+        }
+        // rows progress unevenly so the per-row windows differ
+        for k in 0..row {
+            tokens[row * l + p + k] = scorer::vocab::EOS;
+        }
+    }
+    eprintln!(
+        "engine windowed path: native={}",
+        model.window_native()
+    );
+    dapd::runtime::check_window_conformance(&model, &tokens).unwrap();
+}
+
+#[test]
 fn dapd_beats_original_on_steps_with_real_model() {
     let Some(e) = engine() else { return };
     let model = e.model_for("sim-llada", 4, e.meta.gen_len).unwrap();

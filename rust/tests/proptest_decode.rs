@@ -1,10 +1,12 @@
 //! Property tests: decode-loop invariants over randomized mock models
 //! and configurations (artifact-free; complements rust/tests/integration.rs).
 
-use dapd::cache::CacheConfig;
+use std::sync::Arc;
+
+use dapd::cache::{CacheConfig, PrefixCache, PrefixHandle};
 use dapd::decode::{
     decode_batch, decode_batch_cached, make_strategy, DapdOrdering, DecodeConfig, DecodeOutcome,
-    Method, MethodParams, StepCtx,
+    Method, MethodParams, SlotBatch, StepCtx,
 };
 use dapd::graph::{max_normalize, EdgeScores, TauSchedule};
 use dapd::runtime::{ForwardModel, MockModel};
@@ -184,6 +186,93 @@ fn cached_decode_is_token_identical_to_uncached() {
             assert_eq!(w.gen, c.gen, "tokens diverged under caching");
             assert_eq!(w.steps, c.steps, "NFE diverged under caching");
             assert_eq!(w.per_step_commits, c.per_step_commits);
+        }
+    });
+}
+
+#[test]
+fn mixed_board_prefix_splice_matches_uncached_reference() {
+    // the mixed-board pin: a prefix-hit row admitted mid-flight next to
+    // in-flight rows is spliced from the cache, and every request's
+    // tokens, NFE and commit trajectory stay identical to the uncached
+    // reference decode — for every method, over random models, block
+    // counts and admission offsets
+    prop::check("mixed-prefix-splice", 8, |rng: &mut Pcg| {
+        let mut m = random_mock(rng);
+        m.batch = rng.range(2, 4); // a mixed board needs >= 2 rows
+        let mut solo = m.clone();
+        solo.batch = 1;
+        let g = m.seq_len - m.prompt_len;
+        let mk_prompt = |rng: &mut Pcg| -> Vec<i32> {
+            (0..m.prompt_len)
+                .map(|_| (2 + rng.below(m.vocab - 2)) as i32)
+                .collect()
+        };
+        let prompt_hit = mk_prompt(rng);
+        let mut prompt_live = mk_prompt(rng);
+        prompt_live[0] = if prompt_hit[0] as usize == m.vocab - 1 {
+            2
+        } else {
+            prompt_hit[0] + 1
+        }; // distinct prompts
+        // delay < refresh_every - 1 so the admission step cannot land on
+        // a cadence refresh: the splice must ride a windowed forward
+        let delay = rng.range(1, 3);
+        let refresh_every = rng.range(5, 9);
+        for method in Method::all() {
+            let mut cfg = DecodeConfig::new(method);
+            cfg.params = random_params(rng);
+            cfg.blocks = [1, 2, 4][rng.below(3)].min(g);
+            let want_hit_all = decode_batch(&solo, &[prompt_hit.clone()], &cfg).unwrap();
+            let want_live_all = decode_batch(&solo, &[prompt_live.clone()], &cfg).unwrap();
+            let (want_hit, want_live) = (&want_hit_all[0], &want_live_all[0]);
+
+            let cache = CacheConfig {
+                enabled: true,
+                refresh_every,
+                epsilon: 0.0,
+                prefix_lru_cap: 8,
+            };
+            let pc = Arc::new(PrefixCache::new(8));
+            let handle = PrefixHandle::new(Arc::clone(&pc), "prop-mixed");
+            // warm the cache for the hit prompt
+            decode_batch_cached(&m, &[prompt_hit.clone()], &cfg, &cache, Some(handle.clone()))
+                .unwrap();
+
+            let mut sb =
+                SlotBatch::with_cache(&m, &cfg, &cache, Some(handle.clone())).unwrap();
+            sb.admit(1, &prompt_live).unwrap();
+            let mut done = std::collections::HashMap::new();
+            for _ in 0..delay {
+                if sb.occupied() == 0 {
+                    break;
+                }
+                for (id, o) in sb.step().unwrap() {
+                    done.insert(id, o);
+                }
+            }
+            sb.admit(0, &prompt_hit).unwrap();
+            while sb.occupied() > 0 {
+                for (id, o) in sb.step().unwrap() {
+                    done.insert(id, o);
+                }
+            }
+            for (label, want, got) in [
+                ("hit", want_hit, &done[&0]),
+                ("live", want_live, &done[&1]),
+            ] {
+                assert_eq!(got.gen, want.gen, "{method:?} {label}: tokens diverged");
+                assert_eq!(got.steps, want.steps, "{method:?} {label}: NFE diverged");
+                assert_eq!(
+                    got.per_step_commits, want.per_step_commits,
+                    "{method:?} {label}: trajectory diverged"
+                );
+            }
+            let stats = sb.cache_stats();
+            assert!(
+                stats.prefix_rows_spliced >= 1,
+                "{method:?}: the hit row was never spliced"
+            );
         }
     });
 }
