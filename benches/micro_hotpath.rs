@@ -3,15 +3,20 @@
 //! plus one full decode step through the MockModel (no PJRT) and one
 //! through a real artifact when available.
 //!
-//! Environment knobs (CI's bench-smoke job uses both):
+//! Environment knobs (CI's bench-smoke job uses all three):
 //!   DAPD_ITERS=N        timed iterations per op (default 200)
 //!   DAPD_BENCH_JSON=f   also write the results as a JSON summary to `f`
+//!   DAPD_MIN_KERNEL_SPEEDUP=x  gate on the fused-native vs seed-scalar
+//!                       feature-derivation section (default 2.0 on the
+//!                       AVX2 tier; CI relaxes to 1.1; skipped when the
+//!                       native tier is not avx2)
 
 mod common;
 
 use dapd::decode::{decode_batch, DecodeConfig, Method};
 use dapd::graph::{max_normalize, DepGraph};
 use dapd::runtime::{ForwardModel, MockModel};
+use dapd::tensor::kernels::{self, Backend};
 use dapd::tensor::softmax_inplace;
 use dapd::util::bench::{fmt_f, time_it, Table};
 use dapd::util::json::Json;
@@ -50,11 +55,14 @@ impl Recorder {
         self.rows.push(row);
     }
 
-    fn finish(self) {
+    fn finish(self, extras: Vec<(&'static str, Json)>) {
         self.table.print();
         if let Ok(path) = std::env::var("DAPD_BENCH_JSON") {
             let mut out = Json::obj();
             out.set("bench", "micro_hotpath".into());
+            for (k, v) in extras {
+                out.set(k, v);
+            }
             out.set("rows", Json::Arr(self.rows));
             match std::fs::write(&path, out.dump()) {
                 Ok(()) => println!("wrote JSON summary to {path}"),
@@ -134,6 +142,102 @@ fn main() {
         rec.add("graph build + WP set", &n.to_string(), iters, m, sd);
     }
 
+    // ---- kernel layer: scalar reference vs runtime-dispatched native ---
+    // serving-shape rows: 40 candidates x vocab 256, with prev-step
+    // distributions so the fused kernel's KL term is exercised
+    let kv = 256usize;
+    let logit_rows: Vec<Vec<f32>> = (0..40)
+        .map(|_| (0..kv).map(|_| rng.f64() as f32 * 8.0).collect())
+        .collect();
+    let prev_rows: Vec<Vec<f32>> = logit_rows
+        .iter()
+        .map(|r| {
+            let mut p = r.clone();
+            kernels::softmax_inplace(Backend::Scalar, &mut p);
+            p
+        })
+        .collect();
+    let mut buf = vec![0.0f32; kv];
+
+    // the feature-derivation section: the seed's four-pass sequence
+    // (softmax + argmax + entropy + KL, scalar) vs one fused native call
+    let (t_seed, sd_seed) = time_it(
+        || {
+            for (r, q) in logit_rows.iter().zip(&prev_rows) {
+                buf.copy_from_slice(r);
+                kernels::softmax_inplace(Backend::Scalar, &mut buf);
+                let am = kernels::argmax(Backend::Scalar, &buf);
+                let h = kernels::entropy(Backend::Scalar, &buf);
+                let kl = kernels::kl_div(Backend::Scalar, &buf, q);
+                std::hint::black_box((am, h, kl));
+            }
+        },
+        warmup,
+        iters,
+    );
+    rec.add("feature derive x40 [seed-scalar]", &kv.to_string(), iters, t_seed, sd_seed);
+    let (t_fused, sd_fused) = time_it(
+        || {
+            for (r, q) in logit_rows.iter().zip(&prev_rows) {
+                buf.copy_from_slice(r);
+                std::hint::black_box(kernels::softmax_stats(
+                    Backend::Native,
+                    &mut buf,
+                    Some(q.as_slice()),
+                ));
+            }
+        },
+        warmup,
+        iters,
+    );
+    rec.add("feature derive x40 [native-fused]", &kv.to_string(), iters, t_fused, sd_fused);
+    let kernel_speedup = t_seed / t_fused;
+
+    // per-kernel scalar-vs-native rows
+    for backend in [Backend::Scalar, Backend::Native] {
+        let tag = backend.name();
+        let (m, sd) = time_it(
+            || {
+                for q in &prev_rows {
+                    std::hint::black_box(kernels::argmax(backend, q));
+                }
+            },
+            warmup,
+            iters,
+        );
+        rec.add(&format!("kernel argmax x40 [{tag}]"), &kv.to_string(), iters, m, sd);
+        let (m, sd) = time_it(
+            || {
+                for q in &prev_rows {
+                    std::hint::black_box(kernels::sum(backend, q));
+                }
+            },
+            warmup,
+            iters,
+        );
+        rec.add(&format!("kernel sum x40 [{tag}]"), &kv.to_string(), iters, m, sd);
+        let (m, sd) = time_it(
+            || {
+                for q in &prev_rows {
+                    std::hint::black_box(kernels::entropy(backend, q));
+                }
+            },
+            warmup,
+            iters,
+        );
+        rec.add(&format!("kernel entropy x40 [{tag}]"), &kv.to_string(), iters, m, sd);
+        let (m, sd) = time_it(
+            || {
+                for (r, q) in prev_rows.iter().zip(prev_rows.iter().rev()) {
+                    std::hint::black_box(kernels::kl_div(backend, r, q));
+                }
+            },
+            warmup,
+            iters,
+        );
+        rec.add(&format!("kernel kl_div x40 [{tag}]"), &kv.to_string(), iters, m, sd);
+    }
+
     // full decode on the mock (all strategy machinery, no PJRT)
     let mock = MockModel::new(4, 68, 28, 92);
     let prompts: Vec<Vec<i32>> = (0..4).map(|i| vec![(i as i32 % 9) + 7; 28]).collect();
@@ -161,7 +265,38 @@ fn main() {
         rec.add("PJRT forward b4 L68", "-", heavy_iters, m, sd);
     }
 
-    rec.finish();
+    let isa = kernels::active_isa(Backend::Native);
+    let mut extras: Vec<(&'static str, Json)> = vec![
+        ("kernel_isa", isa.into()),
+        ("kernel_feature_speedup", kernel_speedup.into()),
+    ];
+    let gate: f64 = match std::env::var("DAPD_MIN_KERNEL_SPEEDUP") {
+        Ok(v) => v.parse().unwrap_or_else(|_| {
+            eprintln!(
+                "warning: DAPD_MIN_KERNEL_SPEEDUP='{v}' is not a number; \
+                 using the strict default 2.0"
+            );
+            2.0
+        }),
+        Err(_) => 2.0,
+    };
+    extras.push(("kernel_speedup_gate", gate.into()));
+    rec.finish(extras);
+    println!(
+        "\nkernel layer: native tier = {isa}; feature-derivation \
+         fused-native vs seed-scalar speedup = {kernel_speedup:.2}x \
+         (gate: {gate:.2}x on avx2)"
+    );
+    if isa == "avx2" {
+        assert!(
+            kernel_speedup >= gate,
+            "fused native kernels must reach >= {gate:.2}x the seed scalar \
+             feature derivation on the AVX2 tier (got {kernel_speedup:.2}x; \
+             relax via DAPD_MIN_KERNEL_SPEEDUP)"
+        );
+    } else {
+        println!("(kernel speedup gate skipped: native tier is {isa}, the gate targets avx2)");
+    }
     println!("(forward pass should dominate every graph op by >=100x — the");
     println!(" paper's 'negligible graph overhead' claim, quantified)");
 }

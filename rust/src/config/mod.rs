@@ -13,7 +13,7 @@
 //!   "tau_min": 0.01, "tau_max": 0.15,
 //!   "cache_enabled": true, "refresh_every": 4,
 //!   "cache_epsilon": 0.0, "prefix_lru_cap": 64,
-//!   "feature_threads": 1
+//!   "feature_threads": 1, "kernels": "native"
 //! }
 //! ```
 //!
@@ -28,14 +28,24 @@
 //! `feature_threads` (CLI: `--feature-threads`) fans the per-step
 //! feature derivation out across slots; 1 keeps the sequential
 //! zero-alloc pipeline and results never depend on the value.
+//! `kernels` (CLI: `--kernels scalar|native`) pins the SIMD kernel
+//! backend for the vocab-width step math; unset, the `DAPD_KERNELS`
+//! environment variable wins, else runtime CPU detection picks the
+//! native tier (see `tensor::kernels`).
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::cache::CacheConfig;
 use crate::decode::{DecodeConfig, Method, MethodParams};
 use crate::graph::TauSchedule;
+use crate::tensor::kernels::{self, Backend as KernelBackend};
 use crate::util::args::Args;
 use crate::util::json::Json;
+
+fn parse_kernels(s: &str) -> Result<KernelBackend> {
+    KernelBackend::parse(s)
+        .ok_or_else(|| anyhow!("unknown kernels backend '{s}' (valid: scalar, native)"))
+}
 
 #[derive(Debug, Clone)]
 pub struct ServeSettings {
@@ -62,6 +72,9 @@ pub struct ServeSettings {
     pub prefix_lru_cap: usize,
     /// scoped threads for the per-step feature fan-out (1 = sequential)
     pub feature_threads: usize,
+    /// kernel backend pin for the vocab-width step math; `None` defers
+    /// to `DAPD_KERNELS` / runtime CPU detection
+    pub kernels: Option<KernelBackend>,
 }
 
 impl Default for ServeSettings {
@@ -83,6 +96,7 @@ impl Default for ServeSettings {
             cache_epsilon: CacheConfig::default().epsilon,
             prefix_lru_cap: CacheConfig::default().prefix_lru_cap,
             feature_threads: 1,
+            kernels: None,
         }
     }
 }
@@ -147,6 +161,9 @@ impl ServeSettings {
         if let Some(v) = j.get("feature_threads").as_usize() {
             self.feature_threads = v;
         }
+        if let Some(v) = j.get("kernels").as_str() {
+            self.kernels = Some(parse_kernels(v)?);
+        }
         let p = &mut self.params;
         if let Some(v) = j.get("conf_threshold").as_f64() {
             p.conf_threshold = v as f32;
@@ -199,6 +216,9 @@ impl ServeSettings {
         self.cache_epsilon = args.f64_or("cache-epsilon", self.cache_epsilon as f64) as f32;
         self.prefix_lru_cap = args.usize_or("prefix-lru-cap", self.prefix_lru_cap);
         self.feature_threads = args.usize_or("feature-threads", self.feature_threads);
+        if let Some(v) = args.get("kernels") {
+            self.kernels = Some(parse_kernels(v)?);
+        }
         let p = &mut self.params;
         p.conf_threshold = args.f64_or("conf-threshold", p.conf_threshold as f64) as f32;
         p.gamma = args.f64_or("gamma", p.gamma as f64) as f32;
@@ -267,6 +287,18 @@ impl ServeSettings {
         cfg.eos_suppress = self.eos_suppress;
         cfg.feature_threads = self.feature_threads;
         cfg
+    }
+
+    /// Pin the process-wide kernel backend if the deployment asked for
+    /// one (`kernels` key / `--kernels`); otherwise leave the
+    /// `DAPD_KERNELS` / CPU-detection default in place.  Returns the
+    /// label that will execute (also surfaced by `ModelPool::describe`
+    /// and the metrics endpoint).
+    pub fn apply_kernels(&self) -> String {
+        if let Some(b) = self.kernels {
+            kernels::set_process_default(b);
+        }
+        kernels::selected_label()
     }
 
     /// The compute-reuse policy for the coordinator pool.
@@ -406,6 +438,36 @@ mod tests {
         assert_eq!(s.prefix_lru_cap, 0);
         // defaults leave the cache off
         assert!(!ServeSettings::resolve(&args(&[])).unwrap().cache_enabled);
+    }
+
+    #[test]
+    fn kernels_setting_resolves_from_file_and_flags() {
+        // resolution only — applying the pin is process-global, so the
+        // serve path does that, not this test binary
+        assert_eq!(ServeSettings::resolve(&args(&[])).unwrap().kernels, None);
+        let s = ServeSettings::resolve(&args(&["--kernels", "scalar"])).unwrap();
+        assert_eq!(s.kernels, Some(KernelBackend::Scalar));
+        let dir = std::env::temp_dir().join("dapd_cfg_kernels_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"kernels": "native"}"#).unwrap();
+        let s = ServeSettings::resolve(&args(&["--config", path.to_str().unwrap()])).unwrap();
+        assert_eq!(s.kernels, Some(KernelBackend::Native));
+        // flag overrides file
+        let s = ServeSettings::resolve(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--kernels",
+            "scalar",
+        ]))
+        .unwrap();
+        assert_eq!(s.kernels, Some(KernelBackend::Scalar));
+        // bad values get an actionable message listing the valid names
+        let err = format!(
+            "{:#}",
+            ServeSettings::resolve(&args(&["--kernels", "avx2"])).unwrap_err()
+        );
+        assert!(err.contains("avx2") && err.contains("scalar") && err.contains("native"));
     }
 
     #[test]

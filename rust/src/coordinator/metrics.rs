@@ -160,10 +160,15 @@ impl Metrics {
 
     /// Structured snapshot for the serving metrics endpoint (the server's
     /// `{"metrics": true}` request returns one of these per worker plus
-    /// the aggregate).
+    /// the aggregate).  Tagged with the kernel backend executing the
+    /// step pipeline's vocab-width math (`kernel_backend`).
     pub fn to_json(&self) -> Json {
         let (p50, p95) = self.latency_p50_p95();
         let mut j = Json::obj();
+        j.set(
+            "kernel_backend",
+            crate::tensor::kernels::selected_label().into(),
+        );
         j.set(
             "requests",
             (self.requests.load(Ordering::Relaxed) as i64).into(),
@@ -372,5 +377,10 @@ mod tests {
         assert_eq!(j.get("tokens_out").as_i64(), Some(40));
         assert!(j.get("tps").as_f64().unwrap() > 0.0);
         assert!(j.get("latency_p95_s").as_f64().unwrap() >= 0.05 - 1e-9);
+        let backend = j.get("kernel_backend").as_str().unwrap();
+        assert!(
+            backend == "scalar" || backend.starts_with("native/"),
+            "unexpected kernel tag {backend}"
+        );
     }
 }

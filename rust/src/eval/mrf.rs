@@ -11,6 +11,7 @@ use anyhow::{bail, Result};
 use crate::graph::metrics::{evaluate, GraphEval};
 use crate::graph::EdgeScores;
 use crate::runtime::{ForwardModel, MrfSpec};
+use crate::tensor::kernels;
 use crate::tensor::{argmax, Tensor};
 use crate::util::rng::Pcg;
 use crate::util::stats;
@@ -64,23 +65,21 @@ pub struct MrfSummary {
 }
 
 /// Average the selected layers of `attn_layers` [B, nl, L, L] for batch
-/// row `b` into a reusable dense [L*L] buffer.
+/// row `b` into a reusable dense [L*L] buffer.  Each layer's [L, L]
+/// block is contiguous, so the accumulation and the final scale run
+/// through the kernel layer's streaming `acc`/`scale` (bit-identical to
+/// the scalar loops on every backend).
 fn layer_avg_into(attn: &Tensor, b: usize, layers: &[usize], l: usize, out: &mut Vec<f32>) {
     let nl = attn.dims[1];
+    let be = kernels::backend();
     out.clear();
     out.resize(l * l, 0.0);
     for &layer in layers {
         debug_assert!(layer < nl);
-        for i in 0..l {
-            for j in 0..l {
-                out[i * l + j] += attn.data[((b * nl + layer) * l + i) * l + j];
-            }
-        }
+        let base = (b * nl + layer) * l * l;
+        kernels::acc(be, out, &attn.data[base..base + l * l]);
     }
-    let inv = 1.0 / layers.len() as f32;
-    for x in out.iter_mut() {
-        *x *= inv;
-    }
+    kernels::scale(be, out, 1.0 / layers.len() as f32);
 }
 
 /// Run the validation: `n_paths` random unmasking orders, metrics at every

@@ -22,6 +22,14 @@
 //!
 //! [`DepGraph::from_csr`]: super::DepGraph::from_csr
 //! [`DepGraph::from_scores`]: super::DepGraph::from_scores
+//!
+//! The nnz-width reductions (`max`, `max_normalize`, `degrees_into`)
+//! run through the runtime-dispatched kernel layer
+//! ([`crate::tensor::kernels`]); `max`/`max_normalize` are bit-identical
+//! across backends, row sums may differ in the last ULPs under the SIMD
+//! reduction order (see the kernel module's exactness contract).
+
+use crate::tensor::kernels;
 
 /// Symmetric candidate-pair scores over `n` nodes, CSR layout, storing
 /// only strictly-positive entries.  Both `(i, j)` and `(j, i)` are
@@ -107,7 +115,7 @@ impl EdgeScores {
     /// Maximum stored score (0.0 when empty) — equal to the dense max,
     /// since dropped entries are zeros.
     pub fn max(&self) -> f32 {
-        self.vals.iter().cloned().fold(0.0f32, f32::max)
+        kernels::max_or(kernels::backend(), &self.vals, 0.0)
     }
 
     /// Divide every stored score by the max (no-op when the max is 0);
@@ -116,30 +124,29 @@ impl EdgeScores {
     pub fn max_normalize(&mut self) -> f32 {
         let m = self.max();
         if m > 0.0 {
-            let inv = 1.0 / m;
-            for v in &mut self.vals {
-                *v *= inv;
-            }
+            kernels::scale(kernels::backend(), &mut self.vals, 1.0 / m);
         }
         m
     }
 
     /// Row sums (proxy degrees) into a reusable buffer.
     pub fn degrees_into(&self, out: &mut Vec<f32>) {
+        let be = kernels::backend();
         out.clear();
         out.resize(self.n, 0.0);
         for i in 0..self.n {
             let (_, vals) = self.row(i);
-            out[i] = vals.iter().sum();
+            out[i] = kernels::sum(be, vals);
         }
     }
 
     /// Expand into a dense row-major `n*n` buffer (absent pairs = 0.0).
     /// For consumers that still need the dense view (graph-recovery
-    /// metrics); reuses `out`'s capacity.
+    /// metrics); reuses `out`'s capacity, resetting it through the
+    /// kernel-layer `fill` before the sparse scatter.
     pub fn to_dense_into(&self, out: &mut Vec<f32>) {
-        out.clear();
         out.resize(self.n * self.n, 0.0);
+        kernels::fill(kernels::backend(), out, 0.0);
         for i in 0..self.n {
             let (cols, vals) = self.row(i);
             for (&j, &s) in cols.iter().zip(vals) {

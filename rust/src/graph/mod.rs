@@ -10,6 +10,7 @@ pub mod metrics;
 
 pub use csr::EdgeScores;
 
+use crate::tensor::kernels;
 use crate::tensor::Tensor;
 
 /// Linear threshold schedule tau_t over decoding progress (App. A).
@@ -304,8 +305,6 @@ pub fn edge_scores_from_attn(
 ) {
     let n = masked.len();
     edges.begin(n);
-    degrees.clear();
-    degrees.resize(n, 0.0);
     for (ii, &i) in masked.iter().enumerate() {
         for (jj, &j) in masked.iter().enumerate() {
             if ii == jj {
@@ -314,21 +313,21 @@ pub fn edge_scores_from_attn(
             let s = 0.5 * (attn.at3(b, i, j) + attn.at3(b, j, i));
             if s > 0.0 {
                 edges.push(jj, s);
-                degrees[ii] += s;
             }
         }
         edges.end_row();
     }
+    // proxy degrees are exactly the CSR row sums — one kernel-dispatched
+    // reduction per row instead of the per-push accumulation
+    edges.degrees_into(degrees);
 }
 
 /// Max-normalize a dense score matrix in place; returns the max.
 pub fn max_normalize(scores: &mut [f32]) -> f32 {
-    let m = scores.iter().cloned().fold(0.0f32, f32::max);
+    let be = kernels::backend();
+    let m = kernels::max_or(be, scores, 0.0);
     if m > 0.0 {
-        let inv = 1.0 / m;
-        for s in scores.iter_mut() {
-            *s *= inv;
-        }
+        kernels::scale(be, scores, 1.0 / m);
     }
     m
 }

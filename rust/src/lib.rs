@@ -8,7 +8,9 @@
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //! * [`util`]        — offline substrates: json, rng, cli, stats, pool
-//! * [`tensor`]      — flat f32 tensor views + softmax/entropy/KL
+//! * [`tensor`]      — flat f32 tensor views + the fused,
+//!                     runtime-dispatched SIMD kernel layer
+//!                     (`tensor::kernels`: softmax/entropy/KL/argmax)
 //! * [`runtime`]     — artifact registry + PJRT engine + mock model +
 //!                     per-worker model replication (`ModelPool`)
 //! * [`graph`]       — attention-induced dependency graph, Welsh-Powell,

@@ -11,6 +11,9 @@
 //!           [--prefix-lru-cap N]   (compute-reuse subsystem)
 //!           [--feature-threads T]  (per-step feature fan-out; 1 =
 //!           the sequential zero-alloc pipeline, results unchanged)
+//!           [--kernels scalar|native]  (SIMD kernel backend for the
+//!           vocab-width step math; default: DAPD_KERNELS env, else
+//!           runtime CPU detection)
 //!   client  --addr HOST:PORT --task T [--n N] [--method X]
 //!
 //! Common flags: --artifacts DIR (default ./artifacts), --batch B,
@@ -238,6 +241,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // defaults < --config file.json < explicit flags (see config module)
     let settings = dapd::config::ServeSettings::resolve(args)?;
     let cfg = settings.decode_config();
+    // pin the kernel backend before any worker spawns (they inherit the
+    // process default); the label also shows up in ModelPool::describe
+    // and the metrics endpoint
+    let kernel_label = settings.apply_kernels();
+    logging::info(&format!("kernel backend: {kernel_label}"));
 
     // model source: registry artifact, or the synthetic model with --mock
     // (artifact-free serving for CI and demos; shapes mirror sim-llada)

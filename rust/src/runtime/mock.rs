@@ -9,6 +9,7 @@
 use anyhow::{bail, Result};
 
 use super::{ForwardModel, RowWindows, StepOutput};
+use crate::tensor::kernels;
 use crate::tensor::Tensor;
 
 #[derive(Debug, Clone)]
@@ -94,12 +95,12 @@ impl MockModel {
         } else {
             (row[i], 0.999) // committed tokens reproduce themselves
         };
-        // logits realizing: softmax = conf at target, uniform rest
+        // logits realizing: softmax = conf at target, uniform rest; the
+        // vocab-width fill runs through the kernel layer (bit-identical
+        // across backends)
         let rest = ((1.0 - conf) / (v as f32 - 1.0)).max(1e-7);
         let lo = rest.ln();
-        for t in 0..v {
-            logits[base + t] = lo;
-        }
+        kernels::fill(kernels::backend(), &mut logits[base..base + v], lo);
         logits[base + target as usize] = conf.max(1e-7).ln();
 
         // --- attention row: banded, row-normalized -----------------------

@@ -98,18 +98,21 @@ impl ModelPool {
         }
     }
 
-    /// Human-readable description for logs.
+    /// Human-readable description for logs, including the kernel
+    /// backend the replicas' feature derivation will execute
+    /// (`scalar` / `native/avx2` / `native/neon` / `native/fused`).
     pub fn describe(&self) -> String {
+        let kernels = crate::tensor::kernels::selected_label();
         match self {
             ModelPool::Mock(m) => format!(
-                "mock(batch={} seq={} prompt={} vocab={})",
+                "mock(batch={} seq={} prompt={} vocab={}) kernels={kernels}",
                 m.batch, m.seq_len, m.prompt_len, m.vocab
             ),
             ModelPool::Pjrt { artifact, .. } => {
                 if self.window_native() {
-                    format!("pjrt({artifact}, windowed)")
+                    format!("pjrt({artifact}, windowed) kernels={kernels}")
                 } else {
-                    format!("pjrt({artifact})")
+                    format!("pjrt({artifact}) kernels={kernels}")
                 }
             }
         }
@@ -179,6 +182,8 @@ mod tests {
     #[test]
     fn describe_names_the_backend() {
         let pool = ModelPool::mock(MockModel::new(1, 8, 2, 10));
-        assert!(pool.describe().starts_with("mock("));
+        let d = pool.describe();
+        assert!(d.starts_with("mock("));
+        assert!(d.contains("kernels="), "describe must name the kernel tier: {d}");
     }
 }

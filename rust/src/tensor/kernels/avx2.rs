@@ -1,0 +1,428 @@
+//! AVX2+FMA kernel tier (x86_64), selected at runtime by
+//! `std::arch::is_x86_feature_detected!`.
+//!
+//! Reductions process 8 lanes per iteration with a scalar tail; the
+//! transcendental kernels use the classic Cephes single-precision
+//! polynomial `exp`/`ln` (the same forms used by sse_mathfun/Eigen,
+//! ~1-2 ULP over the ranges reachable here).  The resulting statistics
+//! differ from the scalar reference only within the ULP bounds pinned by
+//! the `kernel_parity` property tests; `argmax`/`max_or`/`scale`/
+//! `fill`/`acc` are bit-identical to scalar (max is associative, the
+//! rest are element-wise).
+//!
+//! # Safety
+//!
+//! Every `pub(super) unsafe fn` here requires AVX2 and FMA; the
+//! dispatcher in the parent module checks [`available`] before calling.
+
+use core::arch::x86_64::*;
+
+use super::{SoftmaxStats, EXP_LO};
+
+pub(super) fn available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+// ---------------------------------------------------------------------
+// horizontal reductions
+// ---------------------------------------------------------------------
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hmax(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let m = _mm_max_ps(lo, hi);
+    let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+    let m = _mm_max_ss(m, _mm_shuffle_ps::<1>(m, m));
+    _mm_cvtss_f32(m)
+}
+
+// ---------------------------------------------------------------------
+// polynomial exp / ln (Cephes single-precision forms)
+// ---------------------------------------------------------------------
+
+const EXP_HI: f32 = 88.376_26;
+const LOG2EF: f32 = 1.442_695;
+const EXP_C1: f32 = 0.693_359_4;
+const EXP_C2: f32 = -2.121_944_4e-4;
+const EXP_P0: f32 = 1.987_569_1e-4;
+const EXP_P1: f32 = 1.398_199_9e-3;
+const EXP_P2: f32 = 8.333_452e-3;
+const EXP_P3: f32 = 4.166_579_6e-2;
+const EXP_P4: f32 = 1.666_666_5e-1;
+const EXP_P5: f32 = 5.0e-1;
+
+/// `exp(x)` per lane; callers clamp `x` into `[EXP_LO, EXP_HI]` first
+/// (this routine also clamps defensively).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn vexpf(x: __m256) -> __m256 {
+    let x = _mm256_min_ps(x, _mm256_set1_ps(EXP_HI));
+    let x = _mm256_max_ps(x, _mm256_set1_ps(EXP_LO));
+    // n = round(x * log2(e)) via floor(x*log2e + 0.5)
+    let fx = _mm256_fmadd_ps(x, _mm256_set1_ps(LOG2EF), _mm256_set1_ps(0.5));
+    let fx = _mm256_floor_ps(fx);
+    // r = x - n*ln2 (two-term Cody-Waite)
+    let x = _mm256_fnmadd_ps(fx, _mm256_set1_ps(EXP_C1), x);
+    let x = _mm256_fnmadd_ps(fx, _mm256_set1_ps(EXP_C2), x);
+    let z = _mm256_mul_ps(x, x);
+    let mut y = _mm256_set1_ps(EXP_P0);
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(EXP_P1));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(EXP_P2));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(EXP_P3));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(EXP_P4));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(EXP_P5));
+    y = _mm256_fmadd_ps(y, z, x);
+    y = _mm256_add_ps(y, _mm256_set1_ps(1.0));
+    // scale by 2^n through the exponent bits
+    let n = _mm256_cvtps_epi32(fx);
+    let n = _mm256_add_epi32(n, _mm256_set1_epi32(0x7f));
+    let pow2n = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(n));
+    _mm256_mul_ps(y, pow2n)
+}
+
+const SQRTHF: f32 = 0.707_106_77;
+const LOG_P0: f32 = 7.037_683_6e-2;
+const LOG_P1: f32 = -1.151_461e-1;
+const LOG_P2: f32 = 1.167_699_9e-1;
+const LOG_P3: f32 = -1.242_014_1e-1;
+const LOG_P4: f32 = 1.424_932_3e-1;
+const LOG_P5: f32 = -1.666_805_7e-1;
+const LOG_P6: f32 = 2.000_071_4e-1;
+const LOG_P7: f32 = -2.499_999_4e-1;
+const LOG_P8: f32 = 3.333_333e-1;
+const LOG_Q1: f32 = -2.121_944_4e-4;
+const LOG_Q2: f32 = 0.693_359_4;
+
+/// `ln(x)` per lane for strictly-positive normal `x` (callers clamp
+/// probabilities to `>= 1e-12` first, well above the subnormal range).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn vlogf(x: __m256) -> __m256 {
+    let one = _mm256_set1_ps(1.0);
+    let bits = _mm256_castps_si256(x);
+    // exponent e with mantissa renormalized into [0.5, 1)
+    let emm0 = _mm256_srli_epi32::<23>(bits);
+    let emm0 = _mm256_sub_epi32(emm0, _mm256_set1_epi32(0x7e));
+    let mut e = _mm256_cvtepi32_ps(emm0);
+    let mant = _mm256_or_si256(
+        _mm256_and_si256(bits, _mm256_set1_epi32(0x807f_ffffu32 as i32)),
+        _mm256_set1_epi32(0x3f00_0000),
+    );
+    let mut x = _mm256_castsi256_ps(mant);
+    // if mantissa < sqrt(1/2): e -= 1 and keep x in [sqrt(1/2), sqrt(2))
+    let mask = _mm256_cmp_ps::<_CMP_LT_OQ>(x, _mm256_set1_ps(SQRTHF));
+    let tmp = _mm256_and_ps(x, mask);
+    x = _mm256_sub_ps(x, one);
+    e = _mm256_sub_ps(e, _mm256_and_ps(one, mask));
+    x = _mm256_add_ps(x, tmp);
+
+    let z = _mm256_mul_ps(x, x);
+    let mut y = _mm256_set1_ps(LOG_P0);
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(LOG_P1));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(LOG_P2));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(LOG_P3));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(LOG_P4));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(LOG_P5));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(LOG_P6));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(LOG_P7));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(LOG_P8));
+    y = _mm256_mul_ps(y, x);
+    y = _mm256_mul_ps(y, z);
+    y = _mm256_fmadd_ps(e, _mm256_set1_ps(LOG_Q1), y);
+    y = _mm256_fnmadd_ps(_mm256_set1_ps(0.5), z, y);
+    let x = _mm256_add_ps(x, y);
+    _mm256_fmadd_ps(e, _mm256_set1_ps(LOG_Q2), x)
+}
+
+// ---------------------------------------------------------------------
+// kernels
+// ---------------------------------------------------------------------
+
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn sum(xs: &[f32]) -> f32 {
+    let mut acc = _mm256_setzero_ps();
+    let mut chunks = xs.chunks_exact(8);
+    for c in &mut chunks {
+        acc = _mm256_add_ps(acc, _mm256_loadu_ps(c.as_ptr()));
+    }
+    let mut s = hsum(acc);
+    for &x in chunks.remainder() {
+        s += x;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn max_or(xs: &[f32], init: f32) -> f32 {
+    let mut chunks = xs.chunks_exact(8);
+    let mut vm = _mm256_set1_ps(init);
+    for c in &mut chunks {
+        vm = _mm256_max_ps(vm, _mm256_loadu_ps(c.as_ptr()));
+    }
+    let mut m = init.max(hmax(vm));
+    for &x in chunks.remainder() {
+        m = m.max(x);
+    }
+    m
+}
+
+/// Max reduction, then a scan for the first index holding the max — the
+/// same `(lowest index, value)` answer as the scalar fold for NaN-free
+/// input.
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn argmax(xs: &[f32]) -> (usize, f32) {
+    let m = max_or(xs, f32::NEG_INFINITY);
+    for (i, &x) in xs.iter().enumerate() {
+        if x == m {
+            return (i, m);
+        }
+    }
+    (0, m) // unreachable for NaN-free, non-empty input
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn scale(xs: &mut [f32], c: f32) {
+    let vc = _mm256_set1_ps(c);
+    let mut chunks = xs.chunks_exact_mut(8);
+    for ch in &mut chunks {
+        let v = _mm256_mul_ps(_mm256_loadu_ps(ch.as_ptr()), vc);
+        _mm256_storeu_ps(ch.as_mut_ptr(), v);
+    }
+    for x in chunks.into_remainder() {
+        *x *= c;
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn fill(xs: &mut [f32], c: f32) {
+    let vc = _mm256_set1_ps(c);
+    let mut chunks = xs.chunks_exact_mut(8);
+    for ch in &mut chunks {
+        _mm256_storeu_ps(ch.as_mut_ptr(), vc);
+    }
+    for x in chunks.into_remainder() {
+        *x = c;
+    }
+}
+
+/// `dst += src`; caller asserts equal lengths.
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn acc(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len().min(src.len());
+    let mut i = 0;
+    while i + 8 <= n {
+        let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+        let s = _mm256_loadu_ps(src.as_ptr().add(i));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, s));
+        i += 8;
+    }
+    while i < n {
+        dst[i] += src[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn entropy(ps: &[f32]) -> f32 {
+    let eps = _mm256_set1_ps(1e-12);
+    let mut acc = _mm256_setzero_ps();
+    let mut chunks = ps.chunks_exact(8);
+    for c in &mut chunks {
+        let p = _mm256_loadu_ps(c.as_ptr());
+        let l = vlogf(_mm256_max_ps(p, eps));
+        let term = _mm256_mul_ps(p, l);
+        let mask = _mm256_cmp_ps::<_CMP_GT_OQ>(p, eps);
+        acc = _mm256_add_ps(acc, _mm256_and_ps(term, mask));
+    }
+    let mut s = hsum(acc);
+    for &p in chunks.remainder() {
+        if p > 1e-12 {
+            s += p * p.ln();
+        }
+    }
+    -s
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn kl_div(p: &[f32], q: &[f32]) -> f32 {
+    let eps = _mm256_set1_ps(1e-12);
+    let mut acc = _mm256_setzero_ps();
+    let n = p.len().min(q.len());
+    let mut i = 0;
+    while i + 8 <= n {
+        let vp = _mm256_loadu_ps(p.as_ptr().add(i));
+        let vq = _mm256_loadu_ps(q.as_ptr().add(i));
+        let lp = vlogf(_mm256_max_ps(vp, eps));
+        let lq = vlogf(_mm256_max_ps(vq, eps));
+        let term = _mm256_mul_ps(vp, _mm256_sub_ps(lp, lq));
+        let mask = _mm256_cmp_ps::<_CMP_GT_OQ>(vp, eps);
+        acc = _mm256_add_ps(acc, _mm256_and_ps(term, mask));
+        i += 8;
+    }
+    let mut s = hsum(acc);
+    while i < n {
+        let (pi, qi) = (p[i], q[i]);
+        if pi > 1e-12 {
+            s += pi * (pi / qi.max(1e-12)).ln();
+        }
+        i += 1;
+    }
+    s.max(0.0)
+}
+
+/// In-place softmax without the statistics (max pass, exp pass, scale).
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn softmax_inplace(xs: &mut [f32]) {
+    debug_assert!(xs.iter().all(|x| !x.is_nan()), "softmax over NaN logits");
+    let m = max_or(xs, f32::NEG_INFINITY);
+    if m == f32::NEG_INFINITY {
+        let u = 1.0 / xs.len() as f32;
+        fill(xs, u);
+        return;
+    }
+    let vm = _mm256_set1_ps(m);
+    let lo = _mm256_set1_ps(EXP_LO);
+    let mut vz = _mm256_setzero_ps();
+    let n = xs.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+        let t = _mm256_max_ps(_mm256_sub_ps(x, vm), lo);
+        let e = vexpf(t);
+        _mm256_storeu_ps(xs.as_mut_ptr().add(i), e);
+        vz = _mm256_add_ps(vz, e);
+        i += 8;
+    }
+    let mut z = hsum(vz);
+    while i < n {
+        let t = (xs[i] - m).max(EXP_LO);
+        let e = t.exp();
+        xs[i] = e;
+        z += e;
+        i += 1;
+    }
+    scale(xs, 1.0 / z);
+}
+
+/// The fused kernel: see the parent module docs for the identities.
+/// Caller asserts `prev.len() == row.len()` when `prev` is given.
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn softmax_stats(row: &mut [f32], prev: Option<&[f32]>) -> SoftmaxStats {
+    debug_assert!(row.iter().all(|x| !x.is_nan()), "softmax over NaN logits");
+    let (amax, m) = argmax(row);
+    if row.is_empty() || m == f32::NEG_INFINITY {
+        return super::degenerate(row, prev);
+    }
+    let vm = _mm256_set1_ps(m);
+    let lo = _mm256_set1_ps(EXP_LO);
+    let eps = _mm256_set1_ps(1e-12);
+    let mut vz = _mm256_setzero_ps();
+    let mut vs1 = _mm256_setzero_ps();
+    let mut vs2 = _mm256_setzero_ps();
+    let n = row.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(row.as_ptr().add(i));
+        let t = _mm256_max_ps(_mm256_sub_ps(x, vm), lo);
+        let e = vexpf(t);
+        _mm256_storeu_ps(row.as_mut_ptr().add(i), e);
+        vz = _mm256_add_ps(vz, e);
+        vs1 = _mm256_fmadd_ps(e, t, vs1);
+        if let Some(q) = prev {
+            let vq = _mm256_loadu_ps(q.as_ptr().add(i));
+            let lq = vlogf(_mm256_max_ps(vq, eps));
+            vs2 = _mm256_fmadd_ps(e, lq, vs2);
+        }
+        i += 8;
+    }
+    let mut z = hsum(vz);
+    let mut s1 = hsum(vs1);
+    let mut s2 = hsum(vs2);
+    while i < n {
+        let t = (row[i] - m).max(EXP_LO);
+        let e = t.exp();
+        row[i] = e;
+        z += e;
+        s1 += e * t;
+        if let Some(q) = prev {
+            s2 += e * q[i].max(1e-12).ln();
+        }
+        i += 1;
+    }
+    let inv = 1.0 / z;
+    let lnz = z.ln();
+    scale(row, inv);
+    SoftmaxStats {
+        argmax: amax,
+        conf: row[amax],
+        entropy: lnz - s1 * inv,
+        kl: match prev {
+            Some(_) => (s1 * inv - lnz - s2 * inv).max(0.0),
+            None => f32::INFINITY,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // direct unit checks of the polynomial transcendentals (the
+    // cross-backend bounds live in the kernel_parity suite)
+    #[test]
+    fn poly_exp_and_ln_track_libm() {
+        if !available() {
+            return;
+        }
+        let xs: [f32; 8] = [0.0, 1.0, -1.0, 10.0, -10.0, 0.5, -86.0, 20.0];
+        let mut got = [0.0f32; 8];
+        unsafe {
+            let v = vexpf(_mm256_loadu_ps(xs.as_ptr()));
+            _mm256_storeu_ps(got.as_mut_ptr(), v);
+        }
+        for (x, g) in xs.iter().zip(&got) {
+            let want = x.exp();
+            assert!(
+                (g - want).abs() <= 2e-6 * want.abs().max(1e-30),
+                "exp({x}) = {g}, want {want}"
+            );
+        }
+        let ps: [f32; 8] = [1e-12, 1e-6, 0.1, 0.5, 1.0, 2.0, 100.0, 0.9999];
+        unsafe {
+            let v = vlogf(_mm256_loadu_ps(ps.as_ptr()));
+            _mm256_storeu_ps(got.as_mut_ptr(), v);
+        }
+        for (p, g) in ps.iter().zip(&got) {
+            let want = p.ln();
+            assert!(
+                (g - want).abs() <= 1e-6 * want.abs().max(1.0),
+                "ln({p}) = {g}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn reductions_match_scalar_exactly() {
+        if !available() {
+            return;
+        }
+        let xs: Vec<f32> = (0..29).map(|i| ((i * 37) % 13) as f32 - 6.0).collect();
+        let want = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        unsafe {
+            assert_eq!(max_or(&xs, f32::NEG_INFINITY), want);
+            let (i, v) = argmax(&xs);
+            assert_eq!(v, want);
+            assert_eq!(xs[i], want);
+            assert!(xs[..i].iter().all(|&x| x < want), "not the first max");
+        }
+    }
+}

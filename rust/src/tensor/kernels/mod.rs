@@ -1,0 +1,835 @@
+//! Fused, runtime-dispatched SIMD kernels for the vocab-width and
+//! nnz-width hot loops of the step pipeline.
+//!
+//! With the zero-alloc arena pipeline and row-aware windowed forwards in
+//! place, per-step CPU time is dominated by O(candidates x vocab) scalar
+//! math: the seed made four-plus passes over every vocab-width logit row
+//! (`softmax_inplace`, `argmax`, `entropy`, `kl_div`).  This module
+//! replaces those ad-hoc free functions with a coherent kernel API:
+//!
+//! * [`softmax_stats`] — the fused tentpole kernel.  One pass finds
+//!   max + argmax, a second pass exponentiates while accumulating the
+//!   normalizer `z`, the entropy sum `s1 = sum e_i * t_i` and (against an
+//!   optional prev-probs row) the KL sum `s2 = sum e_i * ln q_i`; a final
+//!   streaming multiply normalizes in place.  Entropy falls out as
+//!   `ln z - s1/z` and `KL = s1/z - ln z - s2/z` — no per-element `ln`
+//!   over the row, which is where the seed spent most of its time.
+//! * streaming / reduction kernels for every other hot loop:
+//!   [`argmax`], [`max_or`], [`sum`], [`scale`], [`fill`], [`acc`],
+//!   [`entropy`], [`kl_div`], [`softmax_inplace`].
+//!
+//! # Dispatch model
+//!
+//! Every kernel takes a [`Backend`] as its first argument:
+//!
+//! * [`Backend::Scalar`] — the reference implementation: bit-for-bit the
+//!   seed's simple loops (plus the degenerate-row and empty-slice guards
+//!   documented below).  This is the exactness anchor; it never changes
+//!   behavior based on the host CPU.
+//! * [`Backend::Native`] — the best tier the host supports, selected by
+//!   `std::arch` runtime feature detection: AVX2+FMA on x86_64, NEON on
+//!   aarch64 for the streaming/reduction kernels, and a portable *fused*
+//!   scalar form (same two-pass formulas, no SIMD) everywhere else.
+//!
+//! The backend used by the convenience wrappers in [`crate::tensor`] is
+//! resolved once per process: the `DAPD_KERNELS=scalar|native`
+//! environment variable wins, else native.  Deployments can also pin it
+//! via the `kernels` config key / `--kernels` CLI flag
+//! ([`set_process_default`]), and tests/benches can force a backend on
+//! the current thread with [`with_backend`].  [`selected_label`] reports
+//! what actually runs (e.g. `native/avx2`) — surfaced in
+//! `ModelPool::describe`, the worker metrics and the metrics endpoint.
+//!
+//! # Exactness contract
+//!
+//! * `argmax`, `max_or`, `scale`, `fill`, `acc` are **bit-identical**
+//!   across backends for NaN-free input (max is associative; the others
+//!   are element-wise).  [`softmax_stats`] takes its argmax over the
+//!   *raw logit row* on every backend — logits are bit-identical across
+//!   backends, so the reported index (hence the emitted token) is too,
+//!   even at near-ties that f32 `exp` would collapse into equal
+//!   probabilities.
+//! * `sum`, `softmax_stats`, `entropy`, `kl_div` may differ from scalar
+//!   in the last ULPs (SIMD reduction order; polynomial exp/ln; the
+//!   fused entropy/KL identities).  The bound is pinned per kernel by
+//!   the `kernel_parity` property tests, and decode output is pinned
+//!   **token-identical** between backends across all six methods.
+//! * Degenerate softmax rows (every logit `-inf`, e.g. a fully masked
+//!   vocabulary) yield the uniform distribution on every backend instead
+//!   of the seed's NaN cascade; inputs are debug-asserted NaN-free.
+//! * `argmax` of an empty slice debug-asserts and returns the
+//!   `(usize::MAX, NEG_INFINITY)` sentinel in release builds instead of
+//!   silently claiming index 0.
+//!
+//! # Adding a kernel
+//!
+//! 1. write the scalar reference in the private `scalar` module
+//!    (semantics first);
+//! 2. add the dispatching public fn here (scalar arm + native arm that
+//!    falls back to the scalar/fused form when no ISA tier applies);
+//! 3. add the ISA implementations behind `cfg(target_arch)` +
+//!    `#[target_feature]` with runtime detection;
+//! 4. extend the `kernel_parity` property test with its ULP bound and
+//!    `benches/micro_hotpath.rs` with a scalar-vs-native row.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// Which kernel implementation family executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// The reference implementation (the seed's loops, bit-for-bit).
+    Scalar,
+    /// Runtime-detected best tier: AVX2, NEON, or the portable fused
+    /// scalar forms when no SIMD ISA is available.
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "scalar" => Some(Backend::Scalar),
+            "native" => Some(Backend::Native),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Native => "native",
+        }
+    }
+}
+
+/// Per-row results of the fused [`softmax_stats`] kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SoftmaxStats {
+    /// index of the highest logit (ties: lowest index, like the seed)
+    pub argmax: usize,
+    /// probability at `argmax` after normalization
+    pub conf: f32,
+    /// Shannon entropy of the distribution (nats)
+    pub entropy: f32,
+    /// `KL(probs || prev)` when a prev row was given, else
+    /// `f32::INFINITY` (the "no previous step" marker the KLASS gate
+    /// expects)
+    pub kl: f32,
+}
+
+// ---------------------------------------------------------------------
+// backend selection
+// ---------------------------------------------------------------------
+
+const UNRESOLVED: u8 = 0;
+const CODE_SCALAR: u8 = 1;
+const CODE_NATIVE: u8 = 2;
+
+/// Process-wide default, resolved lazily from `DAPD_KERNELS` / detection
+/// and overridable by [`set_process_default`] (config key, CLI flag).
+static PROCESS_DEFAULT: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+thread_local! {
+    /// Per-thread override installed by [`with_backend`] (tests and the
+    /// scalar-vs-native bench rows); `None` defers to the process
+    /// default.
+    static THREAD_OVERRIDE: Cell<Option<Backend>> = const { Cell::new(None) };
+}
+
+/// Whether a SIMD tier (AVX2+FMA or NEON) is available on this host.
+/// [`Backend::Native`] is selectable regardless — without SIMD it runs
+/// the portable fused forms.
+pub fn native_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        avx2::available()
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        neon::available()
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+fn resolve_default() -> Backend {
+    match PROCESS_DEFAULT.load(Ordering::Relaxed) {
+        CODE_SCALAR => return Backend::Scalar,
+        CODE_NATIVE => return Backend::Native,
+        _ => {}
+    }
+    let b = match std::env::var("DAPD_KERNELS") {
+        Ok(v) => match Backend::parse(&v) {
+            Some(b) => b,
+            None => {
+                // the config/CLI path hard-errors on the same typo;
+                // here resolution is lazy, so be loud instead of
+                // silently running the wrong math path
+                eprintln!(
+                    "warning: DAPD_KERNELS='{v}' not recognized \
+                     (valid: scalar, native); using native"
+                );
+                Backend::Native
+            }
+        },
+        Err(_) => Backend::Native,
+    };
+    set_process_default(b);
+    b
+}
+
+/// Pin the process-wide default backend (the `kernels` config key and
+/// `--kernels` flag land here; it also overrides `DAPD_KERNELS`).
+pub fn set_process_default(b: Backend) {
+    let code = match b {
+        Backend::Scalar => CODE_SCALAR,
+        Backend::Native => CODE_NATIVE,
+    };
+    PROCESS_DEFAULT.store(code, Ordering::Relaxed);
+}
+
+/// The backend the convenience wrappers use on this thread: the
+/// [`with_backend`] override if one is installed, else the process
+/// default.
+pub fn backend() -> Backend {
+    THREAD_OVERRIDE
+        .with(|c| c.get())
+        .unwrap_or_else(resolve_default)
+}
+
+/// Run `f` with the given backend forced on the current thread,
+/// restoring the previous selection afterwards (panic-safe).  Worker
+/// threads spawned inside `f` still see the process default — decode
+/// results never depend on the backend beyond the documented ULP bounds,
+/// so this only matters for bit-level parity tests.
+pub fn with_backend<R>(b: Backend, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Backend>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = THREAD_OVERRIDE.with(|c| c.replace(Some(b)));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// The instruction-set tier a backend executes on this host: `"scalar"`,
+/// `"avx2"`, `"neon"`, or `"fused"` (native requested, no SIMD tier —
+/// the portable fused forms).  On the NEON tier the streaming/reduction
+/// kernels are vectorized and the transcendental kernels use the
+/// portable fused forms.
+pub fn active_isa(b: Backend) -> &'static str {
+    match b {
+        Backend::Scalar => "scalar",
+        Backend::Native => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                return "avx2";
+            }
+            #[cfg(target_arch = "aarch64")]
+            if neon::available() {
+                return "neon";
+            }
+            "fused"
+        }
+    }
+}
+
+/// Human-readable tag of the currently selected backend and tier, e.g.
+/// `"scalar"` or `"native/avx2"` — what `ModelPool::describe`, the
+/// worker metrics and the metrics endpoint surface.
+pub fn selected_label() -> String {
+    let b = backend();
+    match b {
+        Backend::Scalar => "scalar".to_string(),
+        Backend::Native => format!("native/{}", active_isa(b)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// shared constants + degenerate-row handling
+// ---------------------------------------------------------------------
+
+/// Lower clamp on `x - max` before exponentiation: `exp` underflows to a
+/// subnormal rather than 0 here, which keeps `e * t` finite even for
+/// `-inf` logits (EOS suppression) without changing any result beyond
+/// the ULP bound.
+pub(crate) const EXP_LO: f32 = -87.336_54;
+
+/// A row whose every logit is `-inf` (fully masked vocabulary): yield
+/// the uniform distribution with its exact stats instead of the NaN
+/// cascade the seed produced.  Shared by every backend.
+fn degenerate(row: &mut [f32], prev: Option<&[f32]>) -> SoftmaxStats {
+    if row.is_empty() {
+        return SoftmaxStats {
+            argmax: usize::MAX,
+            conf: f32::NEG_INFINITY,
+            entropy: 0.0,
+            kl: f32::INFINITY,
+        };
+    }
+    let u = 1.0 / row.len() as f32;
+    for x in row.iter_mut() {
+        *x = u;
+    }
+    SoftmaxStats {
+        argmax: 0,
+        conf: u,
+        entropy: scalar::entropy(row),
+        kl: match prev {
+            Some(q) => scalar::kl_div(row, q),
+            None => f32::INFINITY,
+        },
+    }
+}
+
+// ---------------------------------------------------------------------
+// scalar reference implementations (the seed's math, bit-for-bit)
+// ---------------------------------------------------------------------
+
+mod scalar {
+    use super::SoftmaxStats;
+
+    /// Seed argmax; `(0, NEG_INFINITY)` on empty input (the public
+    /// dispatcher guards emptiness before calling in).
+    pub(super) fn argmax(xs: &[f32]) -> (usize, f32) {
+        let mut best = 0;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &x) in xs.iter().enumerate() {
+            if x > bv {
+                bv = x;
+                best = i;
+            }
+        }
+        (best, bv)
+    }
+
+    pub(super) fn softmax_inplace(xs: &mut [f32]) {
+        debug_assert!(xs.iter().all(|x| !x.is_nan()), "softmax over NaN logits");
+        let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if m == f32::NEG_INFINITY {
+            // degenerate (or empty) row: uniform instead of NaN
+            let u = 1.0 / xs.len() as f32;
+            for x in xs.iter_mut() {
+                *x = u;
+            }
+            return;
+        }
+        let mut z = 0.0;
+        for x in xs.iter_mut() {
+            *x = (*x - m).exp();
+            z += *x;
+        }
+        debug_assert!(z.is_finite() && z > 0.0, "softmax normalizer not positive");
+        let inv = 1.0 / z;
+        for x in xs.iter_mut() {
+            *x *= inv;
+        }
+    }
+
+    pub(super) fn entropy(ps: &[f32]) -> f32 {
+        let mut h = 0.0;
+        for &p in ps {
+            if p > 1e-12 {
+                h -= p * p.ln();
+            }
+        }
+        h
+    }
+
+    pub(super) fn kl_div(p: &[f32], q: &[f32]) -> f32 {
+        let mut kl = 0.0;
+        for (&pi, &qi) in p.iter().zip(q) {
+            if pi > 1e-12 {
+                kl += pi * (pi / qi.max(1e-12)).ln();
+            }
+        }
+        kl.max(0.0)
+    }
+
+    /// The reference composition: the seed's four-pass sequence over one
+    /// row, except that argmax is taken over the *raw logits* (the same
+    /// basis every backend uses).  For distinct-prob rows this is the
+    /// seed's answer exactly; at near-exact logit ties that f32 `exp`
+    /// collapses into equal probabilities, the max-*logit* index wins on
+    /// every backend instead of depending on which lanes collapsed —
+    /// logits are bit-identical across backends, so the index is too.
+    pub(super) fn softmax_stats(row: &mut [f32], prev: Option<&[f32]>) -> SoftmaxStats {
+        let (ai, _) = argmax(row);
+        softmax_inplace(row);
+        SoftmaxStats {
+            argmax: ai,
+            conf: row[ai],
+            entropy: entropy(row),
+            kl: match prev {
+                Some(q) => kl_div(row, q),
+                None => f32::INFINITY,
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// portable fused implementation (Native without a SIMD tier; also the
+// transcendental path of the NEON tier)
+// ---------------------------------------------------------------------
+
+fn fused_softmax_stats(row: &mut [f32], prev: Option<&[f32]>) -> SoftmaxStats {
+    debug_assert!(row.iter().all(|x| !x.is_nan()), "softmax over NaN logits");
+    let (amax, m) = scalar::argmax(row);
+    if row.is_empty() || m == f32::NEG_INFINITY {
+        return degenerate(row, prev);
+    }
+    let mut z = 0.0f32;
+    let mut s1 = 0.0f32; // sum e_i * t_i        (entropy accumulator)
+    let mut s2 = 0.0f32; // sum e_i * ln q_i     (KL accumulator)
+    match prev {
+        Some(q) => {
+            for (x, &qi) in row.iter_mut().zip(q) {
+                let t = (*x - m).max(EXP_LO);
+                let e = t.exp();
+                z += e;
+                s1 += e * t;
+                s2 += e * qi.max(1e-12).ln();
+                *x = e;
+            }
+        }
+        None => {
+            for x in row.iter_mut() {
+                let t = (*x - m).max(EXP_LO);
+                let e = t.exp();
+                z += e;
+                s1 += e * t;
+                *x = e;
+            }
+        }
+    }
+    let inv = 1.0 / z;
+    let lnz = z.ln();
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+    SoftmaxStats {
+        argmax: amax,
+        conf: row[amax],
+        entropy: lnz - s1 * inv,
+        kl: match prev {
+            Some(_) => (s1 * inv - lnz - s2 * inv).max(0.0),
+            None => f32::INFINITY,
+        },
+    }
+}
+
+// ---------------------------------------------------------------------
+// public dispatching kernels
+// ---------------------------------------------------------------------
+
+/// The fused kernel: in-place softmax over a logit row plus argmax,
+/// confidence, entropy and (against an optional previous-step
+/// distribution of the same length) KL — two reduction passes and one
+/// streaming normalize instead of the seed's four-plus passes.
+///
+/// Inputs must be NaN-free (debug-asserted).  A row of only `-inf`
+/// logits yields the uniform distribution.
+pub fn softmax_stats(b: Backend, row: &mut [f32], prev: Option<&[f32]>) -> SoftmaxStats {
+    if let Some(q) = prev {
+        assert_eq!(q.len(), row.len(), "softmax_stats: prev row length mismatch");
+    }
+    if row.is_empty() {
+        return SoftmaxStats {
+            argmax: usize::MAX,
+            conf: f32::NEG_INFINITY,
+            entropy: 0.0,
+            kl: f32::INFINITY,
+        };
+    }
+    match b {
+        Backend::Scalar => scalar::softmax_stats(row, prev),
+        Backend::Native => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                // SAFETY: AVX2+FMA presence just checked at runtime.
+                return unsafe { avx2::softmax_stats(row, prev) };
+            }
+            fused_softmax_stats(row, prev)
+        }
+    }
+}
+
+/// In-place numerically-stable softmax (degenerate rows become uniform).
+pub fn softmax_inplace(b: Backend, xs: &mut [f32]) {
+    match b {
+        Backend::Scalar => scalar::softmax_inplace(xs),
+        Backend::Native => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                // SAFETY: AVX2+FMA presence just checked at runtime.
+                unsafe { avx2::softmax_inplace(xs) };
+                return;
+            }
+            scalar::softmax_inplace(xs)
+        }
+    }
+}
+
+/// argmax + max over a slice; `(index, value)`, ties to the lowest
+/// index.  NaN-free inputs assumed.  Empty slices debug-assert and
+/// return the `(usize::MAX, NEG_INFINITY)` sentinel in release builds —
+/// callers that can see an empty slice must check before indexing.
+pub fn argmax(b: Backend, xs: &[f32]) -> (usize, f32) {
+    debug_assert!(!xs.is_empty(), "argmax of an empty slice");
+    if xs.is_empty() {
+        return (usize::MAX, f32::NEG_INFINITY);
+    }
+    match b {
+        Backend::Scalar => scalar::argmax(xs),
+        Backend::Native => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                // SAFETY: AVX2+FMA presence just checked at runtime.
+                return unsafe { avx2::argmax(xs) };
+            }
+            #[cfg(target_arch = "aarch64")]
+            if neon::available() {
+                // SAFETY: NEON presence just checked at runtime.
+                return unsafe { neon::argmax(xs) };
+            }
+            scalar::argmax(xs)
+        }
+    }
+}
+
+/// Max over a slice folded from `init` (bit-identical across backends
+/// for NaN-free input).
+pub fn max_or(b: Backend, xs: &[f32], init: f32) -> f32 {
+    match b {
+        Backend::Scalar => xs.iter().cloned().fold(init, f32::max),
+        Backend::Native => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                // SAFETY: AVX2+FMA presence just checked at runtime.
+                return unsafe { avx2::max_or(xs, init) };
+            }
+            #[cfg(target_arch = "aarch64")]
+            if neon::available() {
+                // SAFETY: NEON presence just checked at runtime.
+                return unsafe { neon::max_or(xs, init) };
+            }
+            xs.iter().cloned().fold(init, f32::max)
+        }
+    }
+}
+
+/// Slice sum (nnz-width row sums: proxy degrees).  Reduction order
+/// differs between backends (last-ULP differences on non-negative
+/// score data; see the module exactness contract).
+pub fn sum(b: Backend, xs: &[f32]) -> f32 {
+    match b {
+        Backend::Scalar => xs.iter().sum(),
+        Backend::Native => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                // SAFETY: AVX2+FMA presence just checked at runtime.
+                return unsafe { avx2::sum(xs) };
+            }
+            #[cfg(target_arch = "aarch64")]
+            if neon::available() {
+                // SAFETY: NEON presence just checked at runtime.
+                return unsafe { neon::sum(xs) };
+            }
+            xs.iter().sum()
+        }
+    }
+}
+
+/// Multiply every element by `c` in place (max-normalization's streaming
+/// half; bit-identical across backends).
+pub fn scale(b: Backend, xs: &mut [f32], c: f32) {
+    match b {
+        Backend::Scalar => {
+            for x in xs.iter_mut() {
+                *x *= c;
+            }
+        }
+        Backend::Native => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                // SAFETY: AVX2+FMA presence just checked at runtime.
+                unsafe { avx2::scale(xs, c) };
+                return;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if neon::available() {
+                // SAFETY: NEON presence just checked at runtime.
+                unsafe { neon::scale(xs, c) };
+                return;
+            }
+            for x in xs.iter_mut() {
+                *x *= c;
+            }
+        }
+    }
+}
+
+/// Fill a slice with a constant (vocab-width logit-row initialization in
+/// the mock backend; bit-identical across backends).
+pub fn fill(b: Backend, xs: &mut [f32], c: f32) {
+    match b {
+        Backend::Scalar => {
+            for x in xs.iter_mut() {
+                *x = c;
+            }
+        }
+        Backend::Native => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                // SAFETY: AVX2+FMA presence just checked at runtime.
+                unsafe { avx2::fill(xs, c) };
+                return;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if neon::available() {
+                // SAFETY: NEON presence just checked at runtime.
+                unsafe { neon::fill(xs, c) };
+                return;
+            }
+            for x in xs.iter_mut() {
+                *x = c;
+            }
+        }
+    }
+}
+
+/// `dst[i] += src[i]` element-wise (attention layer averaging;
+/// bit-identical across backends).
+pub fn acc(b: Backend, dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "acc: length mismatch");
+    match b {
+        Backend::Scalar => {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+        Backend::Native => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                // SAFETY: AVX2+FMA presence just checked at runtime;
+                // lengths asserted equal above.
+                unsafe { avx2::acc(dst, src) };
+                return;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if neon::available() {
+                // SAFETY: NEON presence just checked at runtime;
+                // lengths asserted equal above.
+                unsafe { neon::acc(dst, src) };
+                return;
+            }
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+    }
+}
+
+/// Shannon entropy (nats) of a probability slice.
+pub fn entropy(b: Backend, ps: &[f32]) -> f32 {
+    match b {
+        Backend::Scalar => scalar::entropy(ps),
+        Backend::Native => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                // SAFETY: AVX2+FMA presence just checked at runtime.
+                return unsafe { avx2::entropy(ps) };
+            }
+            scalar::entropy(ps)
+        }
+    }
+}
+
+/// `KL(p || q)` in nats; `q` is clamped away from zero.
+pub fn kl_div(b: Backend, p: &[f32], q: &[f32]) -> f32 {
+    assert_eq!(p.len(), q.len(), "kl_div: length mismatch");
+    match b {
+        Backend::Scalar => scalar::kl_div(p, q),
+        Backend::Native => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                // SAFETY: AVX2+FMA presence just checked at runtime;
+                // lengths asserted equal above.
+                return unsafe { avx2::kl_div(p, q) };
+            }
+            scalar::kl_div(p, q)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn both() -> [Backend; 2] {
+        [Backend::Scalar, Backend::Native]
+    }
+
+    #[test]
+    fn backend_parse_and_labels() {
+        assert_eq!(Backend::parse("scalar"), Some(Backend::Scalar));
+        assert_eq!(Backend::parse("native"), Some(Backend::Native));
+        assert_eq!(Backend::parse("avx2"), None);
+        assert_eq!(Backend::Scalar.name(), "scalar");
+        assert_eq!(active_isa(Backend::Scalar), "scalar");
+        let isa = active_isa(Backend::Native);
+        assert!(matches!(isa, "avx2" | "neon" | "fused"), "isa {isa}");
+    }
+
+    #[test]
+    fn with_backend_overrides_and_restores() {
+        let outer = backend();
+        let inner = with_backend(Backend::Scalar, || {
+            assert_eq!(backend(), Backend::Scalar);
+            with_backend(Backend::Native, backend)
+        });
+        assert_eq!(inner, Backend::Native);
+        assert_eq!(backend(), outer, "override must restore");
+        assert_eq!(
+            with_backend(Backend::Scalar, selected_label),
+            "scalar".to_string()
+        );
+        let native = with_backend(Backend::Native, selected_label);
+        assert!(native.starts_with("native/"), "{native}");
+    }
+
+    #[test]
+    fn degenerate_row_is_uniform_on_every_backend() {
+        for b in both() {
+            let mut row = [f32::NEG_INFINITY; 4];
+            let st = softmax_stats(b, &mut row, None);
+            assert_eq!(row, [0.25; 4], "{b:?}");
+            assert_eq!(st.argmax, 0);
+            assert_eq!(st.conf, 0.25);
+            assert!((st.entropy - (4f32).ln()).abs() < 1e-5);
+            assert_eq!(st.kl, f32::INFINITY);
+            let mut row = [f32::NEG_INFINITY; 3];
+            softmax_inplace(b, &mut row);
+            assert!(row.iter().all(|&p| (p - 1.0 / 3.0).abs() < 1e-7));
+        }
+    }
+
+    #[test]
+    fn partial_neg_inf_logits_get_zero_mass() {
+        // the EOS-suppression shape: one lane at -inf, the rest finite
+        for b in both() {
+            let mut row = [1.0, f32::NEG_INFINITY, 2.0, 0.5];
+            let st = softmax_stats(b, &mut row, None);
+            assert!(row[1] < 1e-30, "{b:?}: suppressed lane kept mass");
+            assert_eq!(st.argmax, 2);
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!((st.conf - row[2]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn fused_stats_match_scalar_on_a_simple_row() {
+        let logits = [1.0f32, 3.0, 2.0, -1.0, 0.0];
+        let prev = {
+            let mut p = logits;
+            softmax_inplace(Backend::Scalar, &mut p);
+            p
+        };
+        let mut a = logits;
+        let sa = softmax_stats(Backend::Scalar, &mut a, Some(&prev[..]));
+        let mut brow = logits;
+        let sb = softmax_stats(Backend::Native, &mut brow, Some(&prev[..]));
+        assert_eq!(sa.argmax, sb.argmax);
+        assert!((sa.conf - sb.conf).abs() < 1e-5);
+        assert!((sa.entropy - sb.entropy).abs() < 1e-3);
+        assert!((sa.kl - sb.kl).abs() < 1e-3);
+        for (x, y) in a.iter().zip(&brow) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        // prev identical to the distribution itself: KL ~ 0
+        assert!(sa.kl.abs() < 1e-6);
+        assert!(sb.kl.abs() < 1e-3);
+    }
+
+    #[test]
+    fn no_prev_marks_kl_infinite() {
+        for b in both() {
+            let mut row = [0.5f32, 1.5, -0.5];
+            let st = softmax_stats(b, &mut row, None);
+            assert_eq!(st.kl, f32::INFINITY, "{b:?}");
+            assert_eq!(st.argmax, 1);
+        }
+    }
+
+    #[test]
+    fn streaming_kernels_are_bit_identical() {
+        let xs: Vec<f32> = (0..37).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        for b in both() {
+            assert_eq!(argmax(b, &xs), argmax(Backend::Scalar, &xs), "{b:?}");
+            assert_eq!(
+                max_or(b, &xs, f32::NEG_INFINITY),
+                max_or(Backend::Scalar, &xs, f32::NEG_INFINITY)
+            );
+            assert_eq!(max_or(b, &[], 0.25), 0.25);
+            let mut a = xs.clone();
+            let mut c = xs.clone();
+            scale(b, &mut a, 0.125);
+            scale(Backend::Scalar, &mut c, 0.125);
+            assert_eq!(a, c);
+            fill(b, &mut a, -2.5);
+            assert!(a.iter().all(|&x| x == -2.5));
+            let mut d = xs.clone();
+            let mut e = xs.clone();
+            acc(b, &mut d, &c);
+            acc(Backend::Scalar, &mut e, &c);
+            assert_eq!(d, e);
+        }
+    }
+
+    #[test]
+    fn sum_agrees_within_tolerance() {
+        let xs: Vec<f32> = (0..133).map(|i| 0.01 + (i as f32 * 0.11).cos().abs()).collect();
+        let want: f32 = xs.iter().sum();
+        for b in both() {
+            let got = sum(b, &xs);
+            assert!((got - want).abs() <= 1e-4 * want.abs(), "{b:?}: {got} vs {want}");
+        }
+        assert_eq!(sum(Backend::Native, &[]), 0.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "argmax of an empty slice")]
+    fn argmax_empty_asserts_in_debug() {
+        argmax(Backend::Scalar, &[]);
+    }
+
+    #[test]
+    fn short_rows_hit_the_remainder_paths() {
+        // lengths below one SIMD lane group exercise the scalar tails
+        for n in 1..10usize {
+            let logits: Vec<f32> = (0..n).map(|i| i as f32 * 0.7 - 1.0).collect();
+            let mut a = logits.clone();
+            let sa = softmax_stats(Backend::Scalar, &mut a, None);
+            let mut b = logits.clone();
+            let sb = softmax_stats(Backend::Native, &mut b, None);
+            assert_eq!(sa.argmax, sb.argmax, "n={n}");
+            assert!((sa.conf - sb.conf).abs() < 1e-5, "n={n}");
+            assert!((sa.entropy - sb.entropy).abs() < 1e-3, "n={n}");
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-5, "n={n}");
+            }
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! NEON kernel tier (aarch64), selected at runtime by
+//! `std::arch::is_aarch64_feature_detected!`.
+//!
+//! Covers the streaming/reduction kernels (`sum`, `max_or`, `argmax`,
+//! `scale`, `fill`, `acc`) with 4-lane vectors and scalar tails; the
+//! transcendental kernels (`softmax_stats`, `entropy`, `kl_div`) use
+//! the portable fused scalar forms from the parent module until a
+//! vetted NEON `exp`/`ln` lands — see the dispatcher.
+//!
+//! # Safety
+//!
+//! Every `pub(super) unsafe fn` here requires NEON; the dispatcher in
+//! the parent module checks [`available`] before calling.
+
+use core::arch::aarch64::*;
+
+pub(super) fn available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn sum(xs: &[f32]) -> f32 {
+    let mut acc = vdupq_n_f32(0.0);
+    let mut chunks = xs.chunks_exact(4);
+    for c in &mut chunks {
+        acc = vaddq_f32(acc, vld1q_f32(c.as_ptr()));
+    }
+    let mut s = vaddvq_f32(acc);
+    for &x in chunks.remainder() {
+        s += x;
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn max_or(xs: &[f32], init: f32) -> f32 {
+    let mut vm = vdupq_n_f32(init);
+    let mut chunks = xs.chunks_exact(4);
+    for c in &mut chunks {
+        vm = vmaxq_f32(vm, vld1q_f32(c.as_ptr()));
+    }
+    let mut m = init.max(vmaxvq_f32(vm));
+    for &x in chunks.remainder() {
+        m = m.max(x);
+    }
+    m
+}
+
+/// Max reduction, then a scan for the first index holding the max — the
+/// same `(lowest index, value)` answer as the scalar fold for NaN-free
+/// input.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn argmax(xs: &[f32]) -> (usize, f32) {
+    let m = max_or(xs, f32::NEG_INFINITY);
+    for (i, &x) in xs.iter().enumerate() {
+        if x == m {
+            return (i, m);
+        }
+    }
+    (0, m) // unreachable for NaN-free, non-empty input
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn scale(xs: &mut [f32], c: f32) {
+    let mut chunks = xs.chunks_exact_mut(4);
+    for ch in &mut chunks {
+        let v = vmulq_n_f32(vld1q_f32(ch.as_ptr()), c);
+        vst1q_f32(ch.as_mut_ptr(), v);
+    }
+    for x in chunks.into_remainder() {
+        *x *= c;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn fill(xs: &mut [f32], c: f32) {
+    let vc = vdupq_n_f32(c);
+    let mut chunks = xs.chunks_exact_mut(4);
+    for ch in &mut chunks {
+        vst1q_f32(ch.as_mut_ptr(), vc);
+    }
+    for x in chunks.into_remainder() {
+        *x = c;
+    }
+}
+
+/// `dst += src`; caller asserts equal lengths.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn acc(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len().min(src.len());
+    let mut i = 0;
+    while i + 4 <= n {
+        let d = vld1q_f32(dst.as_ptr().add(i));
+        let s = vld1q_f32(src.as_ptr().add(i));
+        vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(d, s));
+        i += 4;
+    }
+    while i < n {
+        dst[i] += src[i];
+        i += 1;
+    }
+}

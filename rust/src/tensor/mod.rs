@@ -2,6 +2,17 @@
 //!
 //! Row-major, shape-checked indexing; slices borrow rather than copy so
 //! the decode hot loop can walk logits/attention without allocation.
+//!
+//! The vocab-width math lives in [`kernels`]: fused, runtime-dispatched
+//! SIMD kernels with a scalar reference backend.  The free functions
+//! below (`softmax_inplace`, `argmax`, `entropy`, `kl_div`) are thin
+//! wrappers over the kernel API using the process-selected backend —
+//! kept for the many analysis/bench call sites; the step pipeline calls
+//! the fused [`kernels::softmax_stats`] directly.
+
+pub mod kernels;
+
+pub use kernels::{Backend as KernelBackend, SoftmaxStats};
 
 /// Owned row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -81,54 +92,27 @@ impl Tensor {
 }
 
 /// argmax + max over a slice; returns (index, value).  NaN-free inputs
-/// assumed (softmax outputs).
+/// assumed (softmax outputs).  Empty slices debug-assert and return the
+/// `(usize::MAX, NEG_INFINITY)` sentinel in release builds.
 pub fn argmax(xs: &[f32]) -> (usize, f32) {
-    let mut best = 0;
-    let mut bv = f32::NEG_INFINITY;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > bv {
-            bv = x;
-            best = i;
-        }
-    }
-    (best, bv)
+    kernels::argmax(kernels::backend(), xs)
 }
 
-/// In-place softmax over a slice (numerically stable).
+/// In-place softmax over a slice (numerically stable).  A degenerate
+/// row (every logit `-inf`) yields the uniform distribution instead of
+/// NaNs.
 pub fn softmax_inplace(xs: &mut [f32]) {
-    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut z = 0.0;
-    for x in xs.iter_mut() {
-        *x = (*x - m).exp();
-        z += *x;
-    }
-    let inv = 1.0 / z;
-    for x in xs.iter_mut() {
-        *x *= inv;
-    }
+    kernels::softmax_inplace(kernels::backend(), xs)
 }
 
 /// Shannon entropy (nats) of a probability slice.
 pub fn entropy(ps: &[f32]) -> f32 {
-    let mut h = 0.0;
-    for &p in ps {
-        if p > 1e-12 {
-            h -= p * p.ln();
-        }
-    }
-    h
+    kernels::entropy(kernels::backend(), ps)
 }
 
 /// KL(p || q) in nats; q is clamped away from zero.
 pub fn kl_div(p: &[f32], q: &[f32]) -> f32 {
-    debug_assert_eq!(p.len(), q.len());
-    let mut kl = 0.0;
-    for (&pi, &qi) in p.iter().zip(q) {
-        if pi > 1e-12 {
-            kl += pi * (pi / qi.max(1e-12)).ln();
-        }
-    }
-    kl.max(0.0)
+    kernels::kl_div(kernels::backend(), p, q)
 }
 
 #[cfg(test)]
@@ -163,6 +147,19 @@ mod tests {
         let (i, v) = argmax(&xs);
         assert_eq!(i, 2);
         assert!(v > 0.6);
+    }
+
+    #[test]
+    fn fully_masked_row_softmaxes_to_uniform() {
+        // the seed divided by z == 0 here and poisoned conf/entropy with
+        // NaNs; degenerate rows now read as "no information": uniform
+        let mut xs = vec![f32::NEG_INFINITY; 5];
+        softmax_inplace(&mut xs);
+        assert!(xs.iter().all(|&p| (p - 0.2).abs() < 1e-7), "{xs:?}");
+        assert!((entropy(&xs) - (5f32).ln()).abs() < 1e-5);
+        let (i, v) = argmax(&xs);
+        assert_eq!(i, 0);
+        assert!((v - 0.2).abs() < 1e-7);
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Kernel-layer exactness contract (see `tensor::kernels`):
+//!
+//! * `kernel_native_matches_scalar` — per-kernel ULP/tolerance bounds
+//!   between the runtime-dispatched native tier and the scalar
+//!   reference, over random logit rows spanning subnormal to
+//!   exp-clamp-extreme magnitudes, `-inf` (EOS-suppressed) lanes and
+//!   fully-degenerate rows;
+//! * the streaming kernels (`argmax`, `max_or`, `scale`, `fill`, `acc`)
+//!   are pinned **bit-identical** across backends;
+//! * decode output is pinned **token-identical** between
+//!   `DAPD_KERNELS=scalar` and `native` across all six methods (the
+//!   in-process equivalent of CI's second `DAPD_KERNELS=scalar` test
+//!   run, forced each way via `with_backend`).
+
+use dapd::decode::{decode_batch, DecodeConfig, Method};
+use dapd::runtime::MockModel;
+use dapd::tensor::kernels::{self, Backend};
+use dapd::util::prop;
+use dapd::util::rng::Pcg;
+
+/// `|a - b| <= atol + rtol * max(|a|, |b|)`, with exact equality (and
+/// matching infinities) always accepted.
+fn close(a: f32, b: f32, atol: f32, rtol: f32) -> bool {
+    if a == b {
+        return true;
+    }
+    let d = (a - b).abs();
+    d <= atol + rtol * a.abs().max(b.abs())
+}
+
+/// Random logit row: one of several magnitude regimes (subnormal-scale,
+/// tiny, unit, wide, beyond the exp underflow clamp) with occasional
+/// `-inf` lanes — the EOS-suppression shape.
+fn random_logits(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    let scale = [1e-38f32, 1e-6, 1.0, 8.0, 60.0][rng.below(5)];
+    (0..n)
+        .map(|_| {
+            if rng.bool(0.05) {
+                f32::NEG_INFINITY
+            } else {
+                ((rng.f64() as f32) * 2.0 - 1.0) * scale
+            }
+        })
+        .collect()
+}
+
+/// A valid distribution to stand in for the previous step's probs.
+fn random_probs(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    let mut q: Vec<f32> = (0..n).map(|_| (rng.f64() as f32) * 4.0).collect();
+    kernels::softmax_inplace(Backend::Scalar, &mut q);
+    q
+}
+
+#[test]
+fn kernel_native_matches_scalar() {
+    prop::check("kernel-native-matches-scalar", 120, |rng: &mut Pcg| {
+        let n = rng.range(1, 300);
+        let logits = random_logits(rng, n);
+        let prev = random_probs(rng, n);
+        let with_prev = rng.bool(0.5);
+        let prev_opt = with_prev.then_some(&prev[..]);
+
+        // ---- the fused tentpole kernel ---------------------------------
+        let mut rs = logits.clone();
+        let ss = kernels::softmax_stats(Backend::Scalar, &mut rs, prev_opt);
+        let mut rn = logits.clone();
+        let sn = kernels::softmax_stats(Backend::Native, &mut rn, prev_opt);
+        assert_eq!(ss.argmax, sn.argmax, "argmax diverged");
+        assert!(close(ss.conf, sn.conf, 1e-5, 1e-5), "conf {} vs {}", ss.conf, sn.conf);
+        assert!(
+            close(ss.entropy, sn.entropy, 1e-3, 1e-4),
+            "entropy {} vs {}",
+            ss.entropy,
+            sn.entropy
+        );
+        assert!(close(ss.kl, sn.kl, 1e-3, 1e-4), "kl {} vs {}", ss.kl, sn.kl);
+        if !with_prev {
+            assert_eq!(ss.kl, f32::INFINITY);
+            assert_eq!(sn.kl, f32::INFINITY);
+        }
+        for (i, (a, b)) in rs.iter().zip(&rn).enumerate() {
+            assert!(close(*a, *b, 1e-5, 1e-5), "prob[{i}] {a} vs {b}");
+        }
+        let mass: f32 = rn.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-4, "native probs must sum to 1, got {mass}");
+
+        // ---- standalone reductions over the resulting distribution -----
+        assert!(
+            close(
+                kernels::entropy(Backend::Scalar, &rs),
+                kernels::entropy(Backend::Native, &rs),
+                1e-3,
+                1e-4
+            ),
+            "entropy kernel"
+        );
+        assert!(
+            close(
+                kernels::kl_div(Backend::Scalar, &rs, &prev),
+                kernels::kl_div(Backend::Native, &rs, &prev),
+                1e-3,
+                1e-4
+            ),
+            "kl kernel"
+        );
+        // reduction-order difference grows with length; bound generously
+        let want_sum = kernels::sum(Backend::Scalar, &rs);
+        let got_sum = kernels::sum(Backend::Native, &rs);
+        assert!(close(want_sum, got_sum, 1e-5, 1e-4), "sum {want_sum} vs {got_sum}");
+
+        // ---- bit-identical streaming kernels over the raw logits -------
+        let finite: Vec<f32> = logits.iter().map(|&x| x.max(-1e30)).collect();
+        assert_eq!(
+            kernels::argmax(Backend::Scalar, &logits),
+            kernels::argmax(Backend::Native, &logits),
+            "argmax must be bit-identical"
+        );
+        assert_eq!(
+            kernels::max_or(Backend::Scalar, &logits, f32::NEG_INFINITY),
+            kernels::max_or(Backend::Native, &logits, f32::NEG_INFINITY)
+        );
+        let mut a = finite.clone();
+        let mut b = finite.clone();
+        kernels::scale(Backend::Scalar, &mut a, 0.3071);
+        kernels::scale(Backend::Native, &mut b, 0.3071);
+        assert_eq!(a, b, "scale must be bit-identical");
+        kernels::acc(Backend::Scalar, &mut a, &finite);
+        kernels::acc(Backend::Native, &mut b, &finite);
+        assert_eq!(a, b, "acc must be bit-identical");
+        kernels::fill(Backend::Native, &mut b, -7.25);
+        assert!(b.iter().all(|&x| x == -7.25), "fill must be exact");
+    });
+}
+
+#[test]
+fn degenerate_rows_are_uniform_on_both_backends() {
+    for b in [Backend::Scalar, Backend::Native] {
+        let mut row = vec![f32::NEG_INFINITY; 11];
+        let st = kernels::softmax_stats(b, &mut row, None);
+        let u = 1.0 / 11.0;
+        assert!(row.iter().all(|&p| (p - u).abs() < 1e-7), "{b:?}");
+        assert_eq!(st.argmax, 0);
+        assert!((st.conf - u).abs() < 1e-7);
+        assert!((st.entropy - (11f32).ln()).abs() < 1e-4);
+    }
+}
+
+// ---------------------------------------------------------------------
+// decode token-identity across backends
+// ---------------------------------------------------------------------
+
+fn random_mock(rng: &mut Pcg) -> MockModel {
+    let prompt_len = rng.range(2, 8);
+    let gen_len = rng.range(4, 24);
+    let mut m = MockModel::new(rng.range(1, 4), prompt_len + gen_len, prompt_len, rng.range(8, 40));
+    m.band = rng.range(1, 4);
+    m.base_conf = 0.4 + 0.3 * rng.f64() as f32;
+    m.conf_gain = 0.05 + 0.2 * rng.f64() as f32;
+    m
+}
+
+#[test]
+fn decode_tokens_identical_across_kernel_backends() {
+    // the acceptance pin: DAPD_KERNELS=scalar and =native produce
+    // token-identical decodes for every method.  (Step trajectories may
+    // legally differ at exact priority ties under the documented ULP
+    // bounds; emitted tokens may not.)
+    prop::check("kernel-backend-token-identity", 16, |rng: &mut Pcg| {
+        let m = random_mock(rng);
+        let g = m.seq_len - m.prompt_len;
+        let prompts: Vec<Vec<i32>> = (0..m.batch)
+            .map(|_| {
+                (0..m.prompt_len)
+                    .map(|_| (2 + rng.below(m.vocab - 2)) as i32)
+                    .collect()
+            })
+            .collect();
+        for method in Method::all() {
+            let mut cfg = DecodeConfig::new(method);
+            cfg.blocks = [1, 2, 4][rng.below(3)].min(g);
+            let scalar_out = kernels::with_backend(Backend::Scalar, || {
+                decode_batch(&m, &prompts, &cfg).unwrap()
+            });
+            let native_out = kernels::with_backend(Backend::Native, || {
+                decode_batch(&m, &prompts, &cfg).unwrap()
+            });
+            for (s, n) in scalar_out.iter().zip(&native_out) {
+                assert!(s.gen.iter().all(|&t| t != m.mask_id), "{method:?}: not decoded");
+                assert_eq!(s.gen, n.gen, "{method:?}: tokens diverged across backends");
+                assert_eq!(s.tokens, n.tokens, "{method:?}: sequences diverged");
+            }
+        }
+    });
+}
+
+#[test]
+fn eos_suppressed_decode_is_token_identical_across_backends() {
+    // -inf logit lanes exercise the exp clamp on the native tier
+    prop::check("kernel-backend-eos-identity", 10, |rng: &mut Pcg| {
+        let m = random_mock(rng);
+        let mut cfg = DecodeConfig::new(Method::FastDllm);
+        cfg.eos_suppress = true;
+        cfg.eos_id = m.true_token(m.prompt_len + rng.below(m.seq_len - m.prompt_len));
+        let prompts = vec![vec![5i32; m.prompt_len]];
+        let scalar_out = kernels::with_backend(Backend::Scalar, || {
+            decode_batch(&m, &prompts, &cfg).unwrap()
+        });
+        let native_out = kernels::with_backend(Backend::Native, || {
+            decode_batch(&m, &prompts, &cfg).unwrap()
+        });
+        assert_eq!(scalar_out[0].gen, native_out[0].gen);
+        assert!(scalar_out[0].gen.iter().all(|&t| t != cfg.eos_id));
+    });
+}

@@ -10,7 +10,7 @@ use dapd::decode::{
 };
 use dapd::graph::{max_normalize, EdgeScores, TauSchedule};
 use dapd::runtime::{ForwardModel, MockModel};
-use dapd::tensor::{argmax, entropy, kl_div, softmax_inplace};
+use dapd::tensor::{argmax, kernels};
 use dapd::util::prop;
 use dapd::util::rng::Pcg;
 
@@ -279,9 +279,14 @@ fn mixed_board_prefix_splice_matches_uncached_reference() {
 
 /// The *seed's* decode loop, replicated densely over a batch-1 model:
 /// fresh per-step buffers, a dense gathered + max-normalized score
-/// matrix with row-sum degrees, converted to CSR only at the `StepCtx`
-/// boundary.  This is the dense reference the arena + CSR pipeline must
-/// match token-for-token and NFE-identically.
+/// matrix, converted to CSR only at the `StepCtx` boundary.  This is
+/// the dense reference the arena + CSR pipeline must match
+/// token-for-token and NFE-identically.
+///
+/// Row statistics and degree sums go through the same kernel layer as
+/// the pipeline (`tensor::kernels`) so the comparison pins the dense
+/// *structure* while staying bit-exact under whichever backend
+/// `DAPD_KERNELS` selected for this run.
 fn reference_decode(m: &MockModel, prompt: &[i32], cfg: &DecodeConfig) -> DecodeOutcome {
     assert_eq!(m.batch, 1);
     let l = m.seq_len;
@@ -326,6 +331,7 @@ fn reference_decode(m: &MockModel, prompt: &[i32], cfg: &DecodeConfig) -> Decode
             break;
         }
         let n = positions.len();
+        let be = kernels::backend();
         let mut conf = vec![0.0f32; n];
         let mut amax = vec![0i32; n];
         let mut ent = vec![0.0f32; n];
@@ -338,18 +344,18 @@ fn reference_decode(m: &MockModel, prompt: &[i32], cfg: &DecodeConfig) -> Decode
             if cfg.eos_suppress {
                 pb[cfg.eos_id as usize] = f32::NEG_INFINITY;
             }
-            softmax_inplace(pb);
-            let (ai, av) = argmax(pb);
-            conf[c] = av;
-            amax[c] = ai as i32;
-            ent[c] = entropy(pb);
             let gen_pos = pos - p;
-            if !prev_probs.is_empty() {
+            let prev = if prev_probs.is_empty() {
+                None
+            } else {
                 let prev = &prev_probs[gen_pos * v..(gen_pos + 1) * v];
-                if prev.iter().any(|&x| x > 0.0) {
-                    kl[c] = kl_div(pb, prev);
-                }
-            }
+                prev.iter().any(|&x| x > 0.0).then_some(prev)
+            };
+            let st = kernels::softmax_stats(be, pb, prev);
+            conf[c] = st.conf;
+            amax[c] = st.argmax as i32;
+            ent[c] = st.entropy;
+            kl[c] = st.kl;
         }
         let mut scores = vec![0.0f32; n * n];
         let mut degrees = vec![0.0f32; n];
@@ -363,11 +369,13 @@ fn reference_decode(m: &MockModel, prompt: &[i32], cfg: &DecodeConfig) -> Decode
                 }
             }
             max_normalize(&mut scores);
-            for ci in 0..n {
-                degrees[ci] = scores[ci * n..(ci + 1) * n].iter().sum();
-            }
         }
         let edges = EdgeScores::from_dense(&scores, n);
+        if is_dapd {
+            // degrees as CSR row sums — the pipeline's exact value
+            // sequence, so SIMD reduction order matches bit-for-bit
+            edges.degrees_into(&mut degrees);
+        }
         let masked_total = (p..p + g).filter(|&i| tokens[i] == mask_id).count();
         let ctx = StepCtx {
             positions: &positions,
