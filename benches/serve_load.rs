@@ -1,0 +1,376 @@
+//! Serving-load bench with a persistent, checked-in baseline.
+//!
+//! Drives the full in-process serving stack (coordinator pool + cached
+//! continuous batcher, mock model) with a bursty open-loop workload and
+//! reduces the run to a small normalized summary: throughput, request
+//! latency percentiles, compute-reuse ratios, and per-kernel hot-loop
+//! costs.  The summary is compared against the checked-in baseline
+//! (`BENCH_6.json` at the repo root) with a direction-aware noise band,
+//! so CI fails on real regressions rather than on shared-runner jitter.
+//!
+//! Environment knobs (CI's bench-smoke job sets the first two):
+//!   DAPD_BENCH_BASELINE=f  baseline path (default BENCH_6.json)
+//!   DAPD_BENCH_NOISE=x     relative tolerance band (default 0.5 = 50%)
+//!   DAPD_BENCH_WRITE=1     regenerate the baseline from this run and exit
+//!   DAPD_BENCH_JSON=f      also write this run's summary to `f` (artifact)
+//!   DAPD_SERVE_N=n         requests to drive (default 48)
+
+use std::time::{Duration, Instant};
+
+use dapd::cache::CacheConfig;
+use dapd::coordinator::{Coordinator, PoolOptions};
+use dapd::decode::{DecodeConfig, Method};
+use dapd::runtime::{MockModel, ModelPool};
+use dapd::tensor::kernels::{self, Backend};
+use dapd::util::bench::{fmt_f, time_it, Table};
+use dapd::util::json::Json;
+use dapd::util::rng::Pcg;
+use dapd::workload::arrivals::Arrival;
+
+/// One measured run, already reduced to the baseline schema.
+struct Measured {
+    steps_per_s: f64,
+    tokens_per_s: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    prefix_hit_ratio: f64,
+    compute_frac: f64,
+    /// (op name, mean cost per call in microseconds)
+    kernels: Vec<(String, f64)>,
+}
+
+impl Measured {
+    fn to_json(&self) -> Json {
+        let mut tput = Json::obj();
+        tput.set("steps_per_s", self.steps_per_s.into());
+        tput.set("tokens_per_s", self.tokens_per_s.into());
+        let mut lat = Json::obj();
+        lat.set("p50", self.p50_ms.into());
+        lat.set("p95", self.p95_ms.into());
+        lat.set("p99", self.p99_ms.into());
+        let mut cache = Json::obj();
+        cache.set("prefix_hit_ratio", self.prefix_hit_ratio.into());
+        cache.set("compute_frac", self.compute_frac.into());
+        let rows = self
+            .kernels
+            .iter()
+            .map(|(op, us)| {
+                let mut r = Json::obj();
+                r.set("op", op.as_str().into());
+                r.set("per_call_us", (*us).into());
+                r
+            })
+            .collect();
+        let mut out = Json::obj();
+        out.set("bench", "serve_load".into());
+        out.set("schema", 1i64.into());
+        out.set("throughput", tput);
+        out.set("latency_ms", lat);
+        out.set("cache", cache);
+        out.set("kernels", Json::Arr(rows));
+        out
+    }
+}
+
+/// Drive the bursty workload through a cached 2-worker pool.
+fn run_load(n: usize) -> Measured {
+    let pool = ModelPool::mock(MockModel::new(4, 68, 28, 92));
+    let opts = PoolOptions {
+        workers: 2,
+        batch_wait: Duration::from_millis(2),
+        queue_cap: n + 8,
+        cache: CacheConfig {
+            enabled: true,
+            ..CacheConfig::default()
+        },
+        ..PoolOptions::default()
+    };
+    let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
+
+    // a small set of distinct prompts, cycled, so the prefix cache sees
+    // repeats (the hit-ratio the baseline tracks)
+    let mut rng = Pcg::new(61);
+    let prompts: Vec<Vec<i32>> = (0..6)
+        .map(|_| (0..28).map(|_| (2 + rng.below(90)) as i32).collect())
+        .collect();
+    let times = Arrival::Bursty {
+        burst: 8,
+        period: 0.005,
+    }
+    .schedule(n, &mut rng);
+
+    let cfg = DecodeConfig::new(Method::DapdStaged);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = times
+        .iter()
+        .enumerate()
+        .map(|(i, &at)| {
+            let elapsed = t0.elapsed().as_secs_f64();
+            if at > elapsed {
+                std::thread::sleep(Duration::from_secs_f64(at - elapsed));
+            }
+            coord
+                .submit(prompts[i % prompts.len()].clone(), cfg.clone())
+                .unwrap()
+        })
+        .collect();
+    let mut tokens = 0usize;
+    for rx in rxs {
+        tokens += rx.recv().unwrap().gen.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    handles.join();
+
+    let (p50, p95, p99) = coord.metrics.latency_percentiles();
+    let steps = coord.metrics.steps_run.load(std::sync::atomic::Ordering::Relaxed);
+    let hit_ratio = coord
+        .prefix_cache()
+        .map(|pc| pc.hit_rate())
+        .unwrap_or(0.0);
+
+    Measured {
+        steps_per_s: steps as f64 / wall,
+        tokens_per_s: tokens as f64 / wall,
+        p50_ms: p50 * 1e3,
+        p95_ms: p95 * 1e3,
+        p99_ms: p99 * 1e3,
+        prefix_hit_ratio: hit_ratio,
+        compute_frac: coord.metrics.cache_compute_frac(),
+        kernels: kernel_rows(),
+    }
+}
+
+/// Per-kernel costs of the vocab-width hot loops on the dispatched
+/// (native-when-available) backend, in microseconds per call.
+fn kernel_rows() -> Vec<(String, f64)> {
+    let mut rng = Pcg::new(7);
+    let kv = 256usize;
+    let rows: Vec<Vec<f32>> = (0..40)
+        .map(|_| {
+            let mut r: Vec<f32> = (0..kv).map(|_| rng.f64() as f32 * 8.0).collect();
+            kernels::softmax_inplace(Backend::Scalar, &mut r);
+            r
+        })
+        .collect();
+    let mut buf = vec![0.0f32; kv];
+    let calls = rows.len() as f64;
+    let mut out = Vec::new();
+
+    let (m, _) = time_it(
+        || {
+            for (r, q) in rows.iter().zip(rows.iter().rev()) {
+                buf.copy_from_slice(r);
+                std::hint::black_box(kernels::softmax_stats(
+                    Backend::Native,
+                    &mut buf,
+                    Some(q.as_slice()),
+                ));
+            }
+        },
+        20,
+        200,
+    );
+    out.push(("softmax_stats".to_string(), m / calls * 1e6));
+    let (m, _) = time_it(
+        || {
+            for q in &rows {
+                std::hint::black_box(kernels::argmax(Backend::Native, q));
+            }
+        },
+        20,
+        200,
+    );
+    out.push(("argmax".to_string(), m / calls * 1e6));
+    let (m, _) = time_it(
+        || {
+            for q in &rows {
+                std::hint::black_box(kernels::entropy(Backend::Native, q));
+            }
+        },
+        20,
+        200,
+    );
+    out.push(("entropy".to_string(), m / calls * 1e6));
+    let (m, _) = time_it(
+        || {
+            for (r, q) in rows.iter().zip(rows.iter().rev()) {
+                std::hint::black_box(kernels::kl_div(Backend::Native, r, q));
+            }
+        },
+        20,
+        200,
+    );
+    out.push(("kl_div".to_string(), m / calls * 1e6));
+    out
+}
+
+/// Direction-aware baseline comparison within a relative noise band.
+struct Gate {
+    noise: f64,
+    checked: usize,
+    regressions: Vec<String>,
+}
+
+impl Gate {
+    fn check(&mut self, name: &str, cur: f64, base: Option<f64>, higher_is_better: bool) {
+        let Some(b) = base else {
+            println!("  (no baseline entry for {name}; skipped)");
+            return;
+        };
+        if b <= 0.0 || !b.is_finite() {
+            println!("  (baseline {name}={b} is not gateable; skipped)");
+            return;
+        }
+        self.checked += 1;
+        let (ok, bound) = if higher_is_better {
+            (cur >= b * (1.0 - self.noise), b * (1.0 - self.noise))
+        } else {
+            (cur <= b * (1.0 + self.noise), b * (1.0 + self.noise))
+        };
+        if !ok {
+            self.regressions.push(format!(
+                "{name}: {cur:.3} vs baseline {b:.3} (allowed {} {bound:.3})",
+                if higher_is_better { ">=" } else { "<=" }
+            ));
+        }
+    }
+}
+
+fn baseline_kernel_us(base: &Json, op: &str) -> Option<f64> {
+    base.get("kernels").as_arr()?.iter().find_map(|r| {
+        if r.get("op").as_str() == Some(op) {
+            r.get("per_call_us").as_f64()
+        } else {
+            None
+        }
+    })
+}
+
+fn main() {
+    let n: usize = std::env::var("DAPD_SERVE_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(48);
+    let baseline_path =
+        std::env::var("DAPD_BENCH_BASELINE").unwrap_or_else(|_| "BENCH_6.json".to_string());
+    let noise: f64 = std::env::var("DAPD_BENCH_NOISE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.5);
+
+    let m = run_load(n);
+
+    let mut t = Table::new(
+        &format!("Serving load summary (bursty open loop, n={n}, 2 workers)"),
+        &["metric", "value"],
+    );
+    t.row(vec!["steps/s".into(), fmt_f(m.steps_per_s, 1)]);
+    t.row(vec!["tokens/s".into(), fmt_f(m.tokens_per_s, 1)]);
+    t.row(vec!["latency p50 (ms)".into(), fmt_f(m.p50_ms, 2)]);
+    t.row(vec!["latency p95 (ms)".into(), fmt_f(m.p95_ms, 2)]);
+    t.row(vec!["latency p99 (ms)".into(), fmt_f(m.p99_ms, 2)]);
+    t.row(vec!["prefix hit ratio".into(), fmt_f(m.prefix_hit_ratio, 3)]);
+    t.row(vec!["compute frac".into(), fmt_f(m.compute_frac, 3)]);
+    for (op, us) in &m.kernels {
+        t.row(vec![format!("kernel {op} (us/call)"), fmt_f(*us, 3)]);
+    }
+    t.print();
+
+    let summary = m.to_json();
+    if let Ok(path) = std::env::var("DAPD_BENCH_JSON") {
+        match std::fs::write(&path, summary.dump_pretty()) {
+            Ok(()) => println!("wrote JSON summary to {path}"),
+            Err(e) => eprintln!("failed writing {path}: {e}"),
+        }
+    }
+
+    if std::env::var("DAPD_BENCH_WRITE").is_ok() {
+        std::fs::write(&baseline_path, summary.dump_pretty())
+            .unwrap_or_else(|e| panic!("failed writing baseline {baseline_path}: {e}"));
+        println!("regenerated baseline {baseline_path} from this run");
+        return;
+    }
+
+    let text = match std::fs::read_to_string(&baseline_path) {
+        Ok(t) => t,
+        Err(e) => {
+            // a missing baseline is a hard failure in CI: the gate exists
+            // to catch regressions, and silently skipping it would read
+            // as a pass
+            panic!(
+                "baseline {baseline_path} unreadable ({e}); regenerate with \
+                 DAPD_BENCH_WRITE=1 or point DAPD_BENCH_BASELINE elsewhere"
+            );
+        }
+    };
+    let base = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("baseline {baseline_path} is not valid JSON: {e}"));
+
+    println!("\ncomparing against {baseline_path} (noise band {:.0}%)", noise * 100.0);
+    let mut gate = Gate {
+        noise,
+        checked: 0,
+        regressions: Vec::new(),
+    };
+    let tput = base.get("throughput");
+    gate.check(
+        "throughput.steps_per_s",
+        m.steps_per_s,
+        tput.get("steps_per_s").as_f64(),
+        true,
+    );
+    gate.check(
+        "throughput.tokens_per_s",
+        m.tokens_per_s,
+        tput.get("tokens_per_s").as_f64(),
+        true,
+    );
+    let lat = base.get("latency_ms");
+    gate.check("latency_ms.p50", m.p50_ms, lat.get("p50").as_f64(), false);
+    gate.check("latency_ms.p95", m.p95_ms, lat.get("p95").as_f64(), false);
+    gate.check("latency_ms.p99", m.p99_ms, lat.get("p99").as_f64(), false);
+    let cache = base.get("cache");
+    gate.check(
+        "cache.prefix_hit_ratio",
+        m.prefix_hit_ratio,
+        cache.get("prefix_hit_ratio").as_f64(),
+        true,
+    );
+    gate.check(
+        "cache.compute_frac",
+        m.compute_frac,
+        cache.get("compute_frac").as_f64(),
+        false,
+    );
+    for (op, us) in &m.kernels {
+        gate.check(
+            &format!("kernels.{op}.per_call_us"),
+            *us,
+            baseline_kernel_us(&base, op),
+            false,
+        );
+    }
+
+    assert!(gate.checked > 0, "baseline {baseline_path} gated nothing");
+    if gate.regressions.is_empty() {
+        println!(
+            "baseline gate passed: {} metric(s) within the {:.0}% band",
+            gate.checked,
+            noise * 100.0
+        );
+    } else {
+        for r in &gate.regressions {
+            eprintln!("REGRESSION {r}");
+        }
+        panic!(
+            "{} of {} gated metric(s) regressed beyond the {:.0}% noise band \
+             (widen via DAPD_BENCH_NOISE or regenerate via DAPD_BENCH_WRITE=1 \
+             if the change is intentional)",
+            gate.regressions.len(),
+            gate.checked,
+            noise * 100.0
+        );
+    }
+}

@@ -30,7 +30,7 @@ fn main() -> Result<()> {
         DecodeConfig::new(Method::DapdStaged),
     )?;
     let addr = server.local_addr()?.to_string();
-    let stop = server.stop_handle();
+    let drain = server.drain_handle()?;
     let server_thread = std::thread::spawn(move || server.run());
     println!("serving on {addr}");
 
@@ -77,8 +77,7 @@ fn main() -> Result<()> {
     );
     assert!(coord.metrics.requests.load(Ordering::Relaxed) as usize >= total);
 
-    stop.store(true, Ordering::SeqCst);
+    drain.drain();
     server_thread.join().unwrap()?;
-    coord.shutdown();
     Ok(())
 }

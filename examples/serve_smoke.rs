@@ -1,0 +1,325 @@
+//! Serve smoke: boots (or attaches to) a serving front end and proves the
+//! three admission-control stories end to end over real TCP:
+//!
+//!   1. token identity — a streamed request replays to exactly the batch
+//!      response, frame by frame;
+//!   2. overload — a bursty workload far above capacity is shed with fast
+//!      typed refusals while every *accepted* request completes within
+//!      the latency SLO;
+//!   3. graceful drain — `{"drain": true}` refuses new work and loses
+//!      zero accepted requests.
+//!
+//!     cargo run --release --example serve_smoke            # self-boot
+//!     cargo run --release --example serve_smoke -- --addr HOST:PORT
+//!
+//! With `--addr`, drives an externally booted `dapd serve --mock` (the CI
+//! serve-smoke job does this, with tight `--queue-cap`/`--max-inflight`
+//! caps so the burst must shed).  Knobs:
+//!
+//!   --total N / --burst N / --period-ms X   overload shape (64 / 32 / 50)
+//!   DAPD_SMOKE_SLO_MS    p99 SLO for accepted requests (default 5000)
+//!   DAPD_SMOKE_JSON=f    write the latency/shed summary to `f`
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+use dapd::coordinator::{Coordinator, CoordinatorHandle, PoolOptions};
+use dapd::decode::{DecodeConfig, Method};
+use dapd::runtime::{MockModel, ModelPool};
+use dapd::server::{Client, Server};
+use dapd::util::args::Args;
+use dapd::util::json::Json;
+use dapd::util::rng::Pcg;
+use dapd::util::stats::Summary;
+use dapd::workload::arrivals::Arrival;
+
+const PROMPT_LEN: usize = 28;
+
+enum Outcome {
+    /// served in full
+    Accepted { latency_ms: f64, gen_len: usize },
+    /// fast admission-control shed (the 429 analogue)
+    Shed,
+    /// typed refusal that is not an overload (draining/expired)
+    Refused,
+    /// anything else — a lost request, a dropped connection, a malformed
+    /// reply; zero of these are tolerated in any phase
+    Lost(String),
+}
+
+fn prompt() -> Vec<i32> {
+    vec![7i32; PROMPT_LEN]
+}
+
+fn one_request(addr: &str) -> Outcome {
+    let t0 = Instant::now();
+    let mut client = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(e) => return Outcome::Lost(format!("connect: {e:#}")),
+    };
+    let mut req = Json::obj();
+    req.set(
+        "prompt",
+        prompt().iter().map(|&t| t as i64).collect::<Vec<i64>>().into(),
+    );
+    let resp = match client.roundtrip(&req) {
+        Ok(r) => r,
+        Err(e) => return Outcome::Lost(format!("roundtrip: {e:#}")),
+    };
+    if resp.get("ok").as_bool() == Some(true) {
+        let gen_len = resp.get("gen").to_i64_vec().map(|v| v.len()).unwrap_or(0);
+        if gen_len == 0 {
+            return Outcome::Lost(format!("ok reply without tokens: {}", resp.dump()));
+        }
+        return Outcome::Accepted {
+            latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+            gen_len,
+        };
+    }
+    if resp.get("overloaded").as_bool() == Some(true) {
+        Outcome::Shed
+    } else if resp.get("draining").as_bool() == Some(true)
+        || resp.get("expired").as_bool() == Some(true)
+    {
+        Outcome::Refused
+    } else {
+        Outcome::Lost(format!("untyped refusal: {}", resp.dump()))
+    }
+}
+
+/// Phase 1: streamed tokens must replay to exactly the batch response.
+fn check_identity(addr: &str) -> Result<()> {
+    let mut client = Client::connect(addr)?;
+    let mut req = Json::obj();
+    req.set(
+        "prompt",
+        prompt().iter().map(|&t| t as i64).collect::<Vec<i64>>().into(),
+    );
+    let batch = client.roundtrip(&req)?;
+    if batch.get("ok").as_bool() != Some(true) {
+        bail!("identity: batch request refused: {}", batch.dump());
+    }
+    let want = batch.get("gen").to_i64_vec().unwrap_or_default();
+    if want.is_empty() {
+        bail!("identity: batch request returned no tokens");
+    }
+
+    req.set("stream", true.into());
+    client.send(&req)?;
+    let mut rebuilt: Vec<Option<i64>> = vec![None; want.len()];
+    let done = loop {
+        let frame = client.read_frame()?;
+        if frame.get("ok").as_bool() != Some(true) {
+            bail!("identity: stream refused mid-way: {}", frame.dump());
+        }
+        match frame.get("frame").as_str() {
+            Some("tokens") => {
+                let pos = frame.get("positions").to_i64_vec().unwrap_or_default();
+                let tok = frame.get("tokens").to_i64_vec().unwrap_or_default();
+                for (p, t) in pos.iter().zip(&tok) {
+                    rebuilt[*p as usize] = Some(*t);
+                }
+            }
+            Some("done") => break frame,
+            other => bail!("identity: unexpected frame {other:?}"),
+        }
+    };
+    let streamed: Vec<i64> = rebuilt
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| t.ok_or_else(|| anyhow::anyhow!("position {i} never streamed")))
+        .collect::<Result<_>>()?;
+    if streamed != want {
+        bail!("identity: streamed tokens != batch response\n  streamed {streamed:?}\n  batch    {want:?}");
+    }
+    if done.get("gen").to_i64_vec().unwrap_or_default() != want {
+        bail!("identity: done frame disagrees with batch response");
+    }
+    println!("phase 1 identity: streamed == batch over {} tokens", want.len());
+    Ok(())
+}
+
+/// Fire `n` requests on the given arrival schedule, one thread each.
+fn drive(addr: &str, times: &[f64]) -> Vec<Outcome> {
+    let t0 = Instant::now();
+    let handles: Vec<_> = times
+        .iter()
+        .map(|&at| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let elapsed = t0.elapsed().as_secs_f64();
+                if at > elapsed {
+                    std::thread::sleep(Duration::from_secs_f64(at - elapsed));
+                }
+                one_request(&addr)
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let total = args.usize_or("total", 64);
+    let burst = args.usize_or("burst", 32);
+    let period = args.f64_or("period-ms", 50.0) / 1e3;
+    let slo_ms = std::env::var("DAPD_SMOKE_SLO_MS")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(5000.0);
+
+    // self-boot a mock pool with tight caps unless attached to an
+    // external server (CI boots `dapd serve --mock` and passes --addr)
+    let mut local: Option<(std::thread::JoinHandle<()>, CoordinatorHandle)> = None;
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => {
+            let pool = ModelPool::mock(MockModel::new(4, 68, PROMPT_LEN, 92));
+            let opts = PoolOptions {
+                workers: 2,
+                batch_wait: Duration::from_millis(2),
+                queue_cap: 4,
+                max_inflight: 4,
+                ..PoolOptions::default()
+            };
+            let (coord, handles) = Coordinator::start_pool(&pool, &opts)?;
+            let server = Server::bind(
+                "127.0.0.1:0",
+                coord,
+                DecodeConfig::new(Method::DapdStaged),
+            )?;
+            let addr = server.local_addr()?.to_string();
+            let sh = std::thread::spawn(move || server.run().unwrap());
+            println!("self-booted mock server on {addr} (queue_cap=4, max_inflight=4)");
+            local = Some((sh, handles));
+            addr
+        }
+    };
+
+    // ---- phase 1: token identity ---------------------------------------
+    check_identity(&addr)?;
+
+    // ---- phase 2: bursty overload gets shed, accepted stay in SLO ------
+    let mut rng = Pcg::new(17);
+    let times = Arrival::Bursty { burst, period }.schedule(total, &mut rng);
+    let outcomes = drive(&addr, &times);
+    let mut latency = Summary::new();
+    let (mut accepted, mut shed, mut refused) = (0usize, 0usize, 0usize);
+    let mut lost: Vec<String> = Vec::new();
+    for o in &outcomes {
+        match o {
+            Outcome::Accepted { latency_ms, .. } => {
+                accepted += 1;
+                latency.add(*latency_ms);
+            }
+            Outcome::Shed => shed += 1,
+            Outcome::Refused => refused += 1,
+            Outcome::Lost(e) => lost.push(e.clone()),
+        }
+    }
+    println!(
+        "phase 2 overload: {total} fired (bursts of {burst}) -> {accepted} accepted, \
+         {shed} shed, {refused} refused; accepted p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+        latency.p50(),
+        latency.p95(),
+        latency.p99()
+    );
+    if !lost.is_empty() {
+        bail!(
+            "phase 2: {} request(s) lost without a typed reply, e.g. {}",
+            lost.len(),
+            lost[0]
+        );
+    }
+    if accepted == 0 {
+        bail!("phase 2: overload shed everything — the server served no work at all");
+    }
+    if shed == 0 {
+        bail!(
+            "phase 2: a {burst}-wide burst against tight caps shed nothing — \
+             admission control is not engaging"
+        );
+    }
+    if latency.p99() > slo_ms {
+        bail!(
+            "phase 2: accepted-request p99 {:.1}ms exceeds the {slo_ms:.0}ms SLO \
+             (admission control should keep accepted latency bounded)",
+            latency.p99()
+        );
+    }
+
+    // ---- phase 3: graceful drain loses nothing -------------------------
+    let drain_wave: Vec<f64> = vec![0.0; 8];
+    let t0 = Instant::now();
+    let workers: Vec<_> = drain_wave
+        .iter()
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || one_request(&addr))
+        })
+        .collect();
+    // let the wave land, then drain while it is (at most) mid-flight
+    std::thread::sleep(Duration::from_millis(10));
+    let mut admin = Client::connect(&addr)?;
+    let mut dreq = Json::obj();
+    dreq.set("drain", true.into());
+    let ack = admin.roundtrip(&dreq)?;
+    if ack.get("draining").as_bool() != Some(true) {
+        bail!("drain request not acknowledged: {}", ack.dump());
+    }
+    let (mut drain_ok, mut drain_refused) = (0usize, 0usize);
+    let mut drain_lost: Vec<String> = Vec::new();
+    for h in workers {
+        match h.join().unwrap() {
+            Outcome::Accepted { .. } => drain_ok += 1,
+            Outcome::Shed | Outcome::Refused => drain_refused += 1,
+            Outcome::Lost(e) => drain_lost.push(e),
+        }
+    }
+    println!(
+        "phase 3 drain: {drain_ok} completed, {drain_refused} refused-typed, \
+         {} lost (drain took {:.0}ms)",
+        drain_lost.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    if !drain_lost.is_empty() {
+        bail!(
+            "phase 3: drain lost {} accepted/at-flight request(s), e.g. {}",
+            drain_lost.len(),
+            drain_lost[0]
+        );
+    }
+    // post-drain, no new work may be accepted (refusal, closed connection,
+    // or — once the process exits — connection refused are all fine)
+    match one_request(&addr) {
+        Outcome::Accepted { .. } => bail!("phase 3: server accepted work after drain"),
+        _ => println!("phase 3: post-drain request correctly not served"),
+    }
+
+    if let Some((sh, handles)) = local {
+        sh.join().unwrap();
+        handles.join();
+    }
+
+    if let Ok(path) = std::env::var("DAPD_SMOKE_JSON") {
+        let mut lat = Json::obj();
+        lat.set("p50", latency.p50().into());
+        lat.set("p95", latency.p95().into());
+        lat.set("p99", latency.p99().into());
+        lat.set("max", latency.max().into());
+        let mut out = Json::obj();
+        out.set("bench", "serve_smoke".into());
+        out.set("total", total.into());
+        out.set("accepted", accepted.into());
+        out.set("shed", shed.into());
+        out.set("refused", refused.into());
+        out.set("slo_ms", slo_ms.into());
+        out.set("latency_ms", lat);
+        out.set("drain_completed", drain_ok.into());
+        out.set("drain_lost", 0i64.into());
+        std::fs::write(&path, out.dump_pretty())?;
+        println!("wrote smoke summary to {path}");
+    }
+    println!("serve smoke passed: identity + overload shedding + zero-loss drain");
+    Ok(())
+}

@@ -8,7 +8,8 @@
 //! {
 //!   "model": "sim-llada", "batch": 4, "port": 7070, "workers": 4,
 //!   "method": "dapd-staged", "blocks": 1, "eos_suppress": false,
-//!   "batch_wait_ms": 5, "queue_cap": 256,
+//!   "batch_wait_ms": 5, "queue_cap": 256, "max_inflight": 0,
+//!   "deadline_ms": 0, "max_line_bytes": 1048576, "drain_wait_ms": 30000,
 //!   "conf_threshold": 0.9, "gamma": 0.1, "kl_threshold": 0.01,
 //!   "tau_min": 0.01, "tau_max": 0.15,
 //!   "cache_enabled": true, "refresh_every": 4,
@@ -32,6 +33,11 @@
 //! backend for the vocab-width step math; unset, the `DAPD_KERNELS`
 //! environment variable wins, else runtime CPU detection picks the
 //! native tier (see `tensor::kernels`).
+//! The admission/streaming knobs (CLI: `--max-inflight`,
+//! `--deadline-ms`, `--max-line-bytes`, `--drain-wait-ms`) bound
+//! end-to-end concurrency, default a per-request latency budget
+//! (0 = none), cap request line size, and bound the graceful-drain
+//! wait on stop.
 
 use anyhow::{anyhow, Context, Result};
 
@@ -60,6 +66,16 @@ pub struct ServeSettings {
     pub eos_suppress: bool,
     pub batch_wait_ms: u64,
     pub queue_cap: usize,
+    /// accepted-but-unfinished request cap (admission control; 0 = off)
+    pub max_inflight: usize,
+    /// default per-request latency budget in ms (0 = no deadline);
+    /// requests may override with their own `deadline_ms`
+    pub deadline_ms: u64,
+    /// hard bound on one request line on the wire
+    pub max_line_bytes: usize,
+    /// graceful-drain bound: how long `serve` waits for in-flight
+    /// connections to flush after stop
+    pub drain_wait_ms: u64,
     pub params: MethodParams,
     /// compute-reuse subsystem master switch
     pub cache_enabled: bool,
@@ -90,6 +106,10 @@ impl Default for ServeSettings {
             eos_suppress: false,
             batch_wait_ms: 5,
             queue_cap: 256,
+            max_inflight: 0,
+            deadline_ms: 0,
+            max_line_bytes: 1 << 20,
+            drain_wait_ms: 30_000,
             params: MethodParams::default(),
             cache_enabled: CacheConfig::default().enabled,
             refresh_every: CacheConfig::default().refresh_every,
@@ -145,6 +165,18 @@ impl ServeSettings {
         }
         if let Some(v) = j.get("queue_cap").as_usize() {
             self.queue_cap = v;
+        }
+        if let Some(v) = j.get("max_inflight").as_usize() {
+            self.max_inflight = v;
+        }
+        if let Some(v) = j.get("deadline_ms").as_usize() {
+            self.deadline_ms = v as u64;
+        }
+        if let Some(v) = j.get("max_line_bytes").as_usize() {
+            self.max_line_bytes = v;
+        }
+        if let Some(v) = j.get("drain_wait_ms").as_usize() {
+            self.drain_wait_ms = v as u64;
         }
         if let Some(v) = j.get("cache_enabled").as_bool() {
             self.cache_enabled = v;
@@ -204,6 +236,10 @@ impl ServeSettings {
         }
         self.batch_wait_ms = args.usize_or("batch-wait-ms", self.batch_wait_ms as usize) as u64;
         self.queue_cap = args.usize_or("queue-cap", self.queue_cap);
+        self.max_inflight = args.usize_or("max-inflight", self.max_inflight);
+        self.deadline_ms = args.usize_or("deadline-ms", self.deadline_ms as usize) as u64;
+        self.max_line_bytes = args.usize_or("max-line-bytes", self.max_line_bytes);
+        self.drain_wait_ms = args.usize_or("drain-wait-ms", self.drain_wait_ms as usize) as u64;
         if args.has("cache") {
             self.cache_enabled = true;
         }
@@ -259,6 +295,12 @@ impl ServeSettings {
                  as over-capacity)"
             ));
         }
+        if self.max_line_bytes < 1024 {
+            return Err(anyhow!(
+                "max_line_bytes must be >= 1024 (smaller bounds refuse even \
+                 minimal prompt requests)"
+            ));
+        }
         if !(0.0..=1.0).contains(&self.params.conf_threshold) {
             return Err(anyhow!("conf_threshold must be in [0,1]"));
         }
@@ -299,6 +341,21 @@ impl ServeSettings {
             kernels::set_process_default(b);
         }
         kernels::selected_label()
+    }
+
+    /// Front-end tunables for `Server::bind_with` (line bound, default
+    /// deadline, drain wait).
+    pub fn server_options(&self) -> crate::server::ServerOptions {
+        crate::server::ServerOptions {
+            max_line_bytes: self.max_line_bytes,
+            default_deadline: if self.deadline_ms == 0 {
+                None
+            } else {
+                Some(std::time::Duration::from_millis(self.deadline_ms))
+            },
+            drain_wait: std::time::Duration::from_millis(self.drain_wait_ms),
+            ..crate::server::ServerOptions::default()
+        }
     }
 
     /// The compute-reuse policy for the coordinator pool.
@@ -468,6 +525,57 @@ mod tests {
             ServeSettings::resolve(&args(&["--kernels", "avx2"])).unwrap_err()
         );
         assert!(err.contains("avx2") && err.contains("scalar") && err.contains("native"));
+    }
+
+    #[test]
+    fn admission_settings_resolve_from_file_and_flags() {
+        let s = ServeSettings::resolve(&args(&[])).unwrap();
+        assert_eq!(s.max_inflight, 0);
+        assert_eq!(s.deadline_ms, 0);
+        assert_eq!(s.max_line_bytes, 1 << 20);
+        assert_eq!(s.drain_wait_ms, 30_000);
+        let so = s.server_options();
+        assert_eq!(so.default_deadline, None, "deadline_ms 0 means no budget");
+
+        let dir = std::env::temp_dir().join("dapd_cfg_admission_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"max_inflight": 32, "deadline_ms": 2000,
+                "max_line_bytes": 4096, "drain_wait_ms": 5000}"#,
+        )
+        .unwrap();
+        let s = ServeSettings::resolve(&args(&["--config", path.to_str().unwrap()])).unwrap();
+        assert_eq!(s.max_inflight, 32);
+        assert_eq!(s.deadline_ms, 2000);
+        assert_eq!(s.max_line_bytes, 4096);
+        assert_eq!(s.drain_wait_ms, 5000);
+        let so = s.server_options();
+        assert_eq!(
+            so.default_deadline,
+            Some(std::time::Duration::from_millis(2000))
+        );
+        assert_eq!(so.max_line_bytes, 4096);
+        assert_eq!(so.drain_wait, std::time::Duration::from_millis(5000));
+        // flags override the file
+        let s = ServeSettings::resolve(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--max-inflight",
+            "8",
+            "--deadline-ms",
+            "500",
+        ]))
+        .unwrap();
+        assert_eq!(s.max_inflight, 8);
+        assert_eq!(s.deadline_ms, 500);
+        // a line bound too small to carry any request is a config error
+        let err = format!(
+            "{:#}",
+            ServeSettings::resolve(&args(&["--max-line-bytes", "10"])).unwrap_err()
+        );
+        assert!(err.contains("max_line_bytes must be >= 1024"));
     }
 
     #[test]

@@ -16,7 +16,14 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub tokens_out: AtomicU64,
     pub errors: AtomicU64,
+    /// admission-control sheds: queue or in-flight cap exceeded (the
+    /// 429-style fast rejections)
     pub rejected: AtomicU64,
+    /// requests dropped because their deadline expired before decode
+    pub deadline_dropped: AtomicU64,
+    /// streamed requests reaped mid-flight (client went away; the slot
+    /// was released and its capacity recovered)
+    pub cancelled: AtomicU64,
     pub queue_depth: AtomicU64,
     pub busy_micros: AtomicU64,
     /// forward passes run (continuous batching: one per step)
@@ -144,6 +151,12 @@ impl Metrics {
         (l.p50(), l.p95())
     }
 
+    /// Request latency percentiles (p50, p95, p99) in seconds.
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        let l = self.latency.lock().unwrap();
+        (l.p50(), l.p95(), l.p99())
+    }
+
     pub fn mean_steps(&self) -> f64 {
         self.steps.lock().unwrap().mean()
     }
@@ -163,7 +176,7 @@ impl Metrics {
     /// the aggregate).  Tagged with the kernel backend executing the
     /// step pipeline's vocab-width math (`kernel_backend`).
     pub fn to_json(&self) -> Json {
-        let (p50, p95) = self.latency_p50_p95();
+        let (p50, p95, p99) = self.latency_percentiles();
         let mut j = Json::obj();
         j.set(
             "kernel_backend",
@@ -187,6 +200,14 @@ impl Metrics {
             (self.rejected.load(Ordering::Relaxed) as i64).into(),
         );
         j.set(
+            "deadline_dropped",
+            (self.deadline_dropped.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "cancelled",
+            (self.cancelled.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
             "queue_depth",
             (self.queue_depth.load(Ordering::Relaxed) as i64).into(),
         );
@@ -199,6 +220,7 @@ impl Metrics {
         j.set("mean_batch_size", self.mean_batch_size().into());
         j.set("latency_p50_s", p50.into());
         j.set("latency_p95_s", p95.into());
+        j.set("latency_p99_s", p99.into());
         j.set(
             "cache_full_forwards",
             (self.cache_full_forwards.load(Ordering::Relaxed) as i64).into(),
@@ -248,10 +270,11 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
-        let (p50, p95) = self.latency_p50_p95();
+        let (p50, p95, p99) = self.latency_percentiles();
         let mut out = format!(
             "requests={} batches={} mean_batch={:.2} tokens={} tps={:.1} \
-             steps={:.1} latency_p50={:.3}s p95={:.3}s errors={} rejected={}",
+             steps={:.1} latency_p50={:.3}s p95={:.3}s p99={:.3}s errors={} \
+             rejected={} expired={} cancelled={}",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
@@ -260,8 +283,11 @@ impl Metrics {
             self.mean_steps(),
             p50,
             p95,
+            p99,
             self.errors.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.deadline_dropped.load(Ordering::Relaxed),
+            self.cancelled.load(Ordering::Relaxed),
         );
         let reused = self.cache_window_forwards.load(Ordering::Relaxed)
             + self.cache_prefix_steps.load(Ordering::Relaxed)
@@ -365,6 +391,33 @@ mod tests {
         assert_eq!(j.get("feature_ns").as_i64(), Some(150));
         assert_eq!(j.get("graph_build_ns").as_i64(), Some(40));
         assert_eq!(j.get("select_ns").as_i64(), Some(70));
+    }
+
+    #[test]
+    fn shed_counters_surface_in_json_and_report() {
+        let m = Metrics::new();
+        m.rejected.fetch_add(3, Ordering::Relaxed);
+        m.deadline_dropped.fetch_add(2, Ordering::Relaxed);
+        m.cancelled.fetch_add(1, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("rejected").as_i64(), Some(3));
+        assert_eq!(j.get("deadline_dropped").as_i64(), Some(2));
+        assert_eq!(j.get("cancelled").as_i64(), Some(1));
+        let r = m.report();
+        assert!(r.contains("rejected=3"));
+        assert!(r.contains("expired=2"));
+        assert!(r.contains("cancelled=1"));
+    }
+
+    #[test]
+    fn latency_percentiles_are_ordered() {
+        let m = Metrics::new();
+        for ms in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            m.record_request(Duration::from_millis(ms), 4);
+        }
+        let (p50, p95, p99) = m.latency_percentiles();
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(m.to_json().get("latency_p99_s").as_f64().unwrap() >= p95);
     }
 
     #[test]

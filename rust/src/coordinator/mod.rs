@@ -17,10 +17,25 @@
 //! for the whole board to drain.  When the board empties the worker goes
 //! back for the oldest request of *any* group.
 //!
-//! Backpressure is a bound on the total queued requests across all
-//! shards; `submit` rejects above it.  `shutdown` stops acceptance but
-//! drains both in-flight batches and already-queued requests before the
-//! workers exit (graceful).
+//! Admission control is two caps checked at `submit` time: a bound on
+//! the total queued requests across all shards (`queue_cap`) and a bound
+//! on accepted-but-unfinished requests (`max_inflight`).  Violating
+//! either returns [`SubmitError::Overloaded`] *fast* — the 429-style
+//! shed the server surfaces as `{"ok":false,"overloaded":true}` — so a
+//! burst degrades into quick rejections instead of unbounded queueing.
+//! Requests may also carry a deadline ([`SubmitOptions`]); workers drop
+//! deadline-expired requests at every queue-pop site *before* spending
+//! any decode compute on them.  `shutdown` stops acceptance but drains
+//! both in-flight batches and already-queued (unexpired) requests before
+//! the workers exit (graceful).
+//!
+//! Streaming: `submit_stream` returns a channel of [`StreamEvent`]s fed
+//! from the `SlotBatch` per-step commit log — one `Tokens` event per
+//! decode step the request committed in, then a terminal `Done` carrying
+//! the same `Response` a non-streamed submit would have received (token
+//! identity holds exactly).  A disconnected stream receiver is detected
+//! on the next commit and the slot is released immediately, so abandoned
+//! requests stop consuming board capacity mid-flight.
 //!
 //! Metrics are recorded twice: into the aggregate (`Coordinator::metrics`,
 //! the backward-compatible endpoint) and into a per-worker `Metrics` for
@@ -30,8 +45,9 @@
 pub mod metrics;
 
 use std::collections::{HashMap, VecDeque};
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{self, sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -49,7 +65,10 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub cfg: DecodeConfig,
     pub submitted: Instant,
-    respond: SyncSender<Response>,
+    /// absolute latency budget; workers shed the request at pop time
+    /// when this has already passed (never after decode has started)
+    deadline: Option<Instant>,
+    reply: Reply,
     /// batching compatibility key (method + blocks + eos flags)
     group: u64,
     /// global arrival order (FIFO across shards)
@@ -58,6 +77,65 @@ pub struct Request {
     /// so the worker's step path never takes the cache lock for a hit
     prefill: Option<Arc<FirstStepRows>>,
 }
+
+/// How a request's result travels back to the client.
+enum Reply {
+    /// classic request/response: one `Response` at the end
+    Once(SyncSender<Response>),
+    /// streaming: per-step `Tokens` events, then a terminal `Done`
+    Stream(mpsc::Sender<StreamEvent>),
+}
+
+/// Incremental events on a streamed request's channel.  `Tokens` carries
+/// the commits of one decode step as `(gen_relative_position, token)`
+/// pairs; replaying every event reconstructs exactly the `gen` of the
+/// terminal `Done` response.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    Tokens {
+        step: usize,
+        commits: Vec<(usize, i32)>,
+    },
+    Done(Response),
+    /// terminal failure after admission (batch error, expired deadline,
+    /// rejected admit); the channel closes after this
+    Error(String),
+}
+
+/// Per-request submission options.
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOptions {
+    /// total latency budget (queueing + decode).  A request still queued
+    /// when its budget runs out is dropped before decode; `None` means
+    /// no deadline.
+    pub deadline: Option<Duration>,
+}
+
+/// Fast admission-control rejections, distinguishable by the caller (the
+/// server maps each variant to a different `ok:false` reply).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// queue or in-flight cap exceeded — retry later (HTTP would say 429)
+    Overloaded { queued: usize, inflight: usize },
+    /// the supplied deadline budget was already zero at submit
+    DeadlineExpired,
+    /// the coordinator is draining / shut down
+    Closed,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Overloaded { queued, inflight } => {
+                write!(f, "overloaded: {queued} queued, {inflight} in flight")
+            }
+            SubmitError::DeadlineExpired => write!(f, "deadline expired before decode"),
+            SubmitError::Closed => write!(f, "coordinator shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// The reply a client receives.
 #[derive(Debug, Clone)]
@@ -173,6 +251,10 @@ pub struct PoolOptions {
     pub batch_wait: Duration,
     /// total queued-request bound across all shards (backpressure)
     pub queue_cap: usize,
+    /// accepted-but-unfinished request bound (admission control); 0
+    /// disables the cap.  Unlike `queue_cap` this also counts requests
+    /// already decoding, so it bounds end-to-end concurrency.
+    pub max_inflight: usize,
     /// compute-reuse subsystem (block-wise cached forwards, incremental
     /// dependency graphs, cross-request prefix cache)
     pub cache: CacheConfig,
@@ -184,6 +266,7 @@ impl Default for PoolOptions {
             workers: 1,
             batch_wait: Duration::from_millis(5),
             queue_cap: 256,
+            max_inflight: 0,
             cache: CacheConfig::default(),
         }
     }
@@ -216,6 +299,10 @@ pub struct Coordinator {
     /// per-worker breakdown, index = worker id
     worker_metrics: Arc<Vec<Arc<Metrics>>>,
     seq: Arc<AtomicU64>,
+    /// accepted-but-unfinished requests (admission-control numerator)
+    pending: Arc<AtomicU64>,
+    /// in-flight cap; 0 = unlimited
+    max_inflight: usize,
     /// compute-reuse policy handed to every worker's `SlotBatch`
     cache_cfg: CacheConfig,
     /// shared cross-request prefix cache (when the cache is enabled)
@@ -228,6 +315,7 @@ impl Coordinator {
         workers: usize,
         cache_cfg: CacheConfig,
         prefix: Option<PrefixHandle>,
+        max_inflight: usize,
     ) -> Coordinator {
         Coordinator {
             queue: Arc::new(Queue {
@@ -242,6 +330,8 @@ impl Coordinator {
             metrics: Arc::new(Metrics::new()),
             worker_metrics: Arc::new((0..workers).map(|_| Arc::new(Metrics::new())).collect()),
             seq: Arc::new(AtomicU64::new(0)),
+            pending: Arc::new(AtomicU64::new(0)),
+            max_inflight,
             cache_cfg,
             prefix,
         }
@@ -256,6 +346,7 @@ impl Coordinator {
         let queue = Arc::clone(&self.queue);
         let global = Arc::clone(&self.metrics);
         let local = Arc::clone(&self.worker_metrics[worker_id]);
+        let pending = Arc::clone(&self.pending);
         let cache_cfg = self.cache_cfg.clone();
         let prefix = self.prefix.clone();
         std::thread::Builder::new()
@@ -267,6 +358,7 @@ impl Coordinator {
                     queue,
                     global,
                     local,
+                    pending,
                     batch_wait,
                     cache_cfg,
                     prefix,
@@ -286,7 +378,7 @@ impl Coordinator {
     where
         M: ForwardModel + Send + 'static,
     {
-        let coord = Coordinator::with_capacity(queue_cap, 1, CacheConfig::default(), None);
+        let coord = Coordinator::with_capacity(queue_cap, 1, CacheConfig::default(), None, 0);
         let handle = coord.spawn_worker(0, Box::new(model), batch_wait);
         (coord, handle)
     }
@@ -314,8 +406,13 @@ impl Coordinator {
         } else {
             None
         };
-        let coord =
-            Coordinator::with_capacity(opts.queue_cap, opts.workers, opts.cache.clone(), prefix);
+        let coord = Coordinator::with_capacity(
+            opts.queue_cap,
+            opts.workers,
+            opts.cache.clone(),
+            prefix,
+            opts.max_inflight,
+        );
         let mut handles = Vec::with_capacity(opts.workers);
         for w in 0..opts.workers {
             let model = pool.replica()?;
@@ -338,13 +435,59 @@ impl Coordinator {
         Ok((coord, CoordinatorHandle { handles }))
     }
 
-    /// Submit a request; returns the response receiver.  Applies
-    /// backpressure by rejecting when the (sharded) queue is full.
-    /// Accepted requests consult the prefix cache here (counting
-    /// hits/misses) so hits ride into the worker with the request;
-    /// rejected submissions never touch the cache or its counters.
+    /// Submit a request; returns the response receiver.  Backward
+    /// compatible wrapper over [`Coordinator::submit_opts`] (no deadline,
+    /// `anyhow` errors).
     pub fn submit(&self, prompt: Vec<i32>, cfg: DecodeConfig) -> Result<Receiver<Response>> {
+        self.submit_opts(prompt, cfg, SubmitOptions::default())
+            .map_err(Into::into)
+    }
+
+    /// Submit a classic request/response call with per-request options.
+    /// Rejections are typed ([`SubmitError`]) so callers can answer an
+    /// overload differently from a drain.
+    pub fn submit_opts(
+        &self,
+        prompt: Vec<i32>,
+        cfg: DecodeConfig,
+        opts: SubmitOptions,
+    ) -> std::result::Result<Receiver<Response>, SubmitError> {
         let (tx, rx) = sync_channel(1);
+        self.submit_inner(prompt, cfg, opts, Reply::Once(tx))?;
+        Ok(rx)
+    }
+
+    /// Submit a streaming request: the receiver yields one
+    /// [`StreamEvent::Tokens`] per decode step the request commits in,
+    /// then a terminal `Done` (or `Error`).  Dropping the receiver
+    /// cancels the request: the worker reaps its slot at the next step.
+    pub fn submit_stream(
+        &self,
+        prompt: Vec<i32>,
+        cfg: DecodeConfig,
+        opts: SubmitOptions,
+    ) -> std::result::Result<mpsc::Receiver<StreamEvent>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_inner(prompt, cfg, opts, Reply::Stream(tx))?;
+        Ok(rx)
+    }
+
+    /// Shared admission path.  Applies the queue and in-flight caps, the
+    /// zero-budget deadline fast-path, and — only for accepted requests —
+    /// the prefix-cache consult (counting hits/misses), so rejected
+    /// submissions never touch the cache or its counters.
+    fn submit_inner(
+        &self,
+        prompt: Vec<i32>,
+        cfg: DecodeConfig,
+        opts: SubmitOptions,
+        reply: Reply,
+    ) -> std::result::Result<(), SubmitError> {
+        if opts.deadline.map(|d| d.is_zero()).unwrap_or(false) {
+            self.metrics.deadline_dropped.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::DeadlineExpired);
+        }
+        let deadline = opts.deadline.map(|d| Instant::now() + d);
         let group = group_key(&cfg);
         // hash outside the queue lock (pure function of the prompt)
         let prefix_key = self
@@ -354,11 +497,17 @@ impl Coordinator {
         {
             let mut st = self.queue.state.lock().unwrap();
             if st.closed {
-                bail!("coordinator shut down");
+                return Err(SubmitError::Closed);
             }
-            if st.total >= self.queue.capacity {
+            let inflight = self.pending.load(Ordering::Relaxed) as usize;
+            if st.total >= self.queue.capacity
+                || (self.max_inflight > 0 && inflight >= self.max_inflight)
+            {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                bail!("queue full ({} requests)", st.total);
+                return Err(SubmitError::Overloaded {
+                    queued: st.total,
+                    inflight,
+                });
             }
             // only accepted requests consult the cache; the prefix mutex
             // nests inside the queue lock (workers take it without the
@@ -367,11 +516,13 @@ impl Coordinator {
                 (Some(h), Some(key)) => h.cache.get(key, &prompt),
                 _ => None,
             };
+            self.pending.fetch_add(1, Ordering::Relaxed);
             st.push(Request {
                 prompt,
                 cfg,
                 submitted: Instant::now(),
-                respond: tx,
+                deadline,
+                reply,
                 group,
                 seq: self.seq.fetch_add(1, Ordering::Relaxed),
                 prefill,
@@ -381,7 +532,12 @@ impl Coordinator {
                 .store(st.total as u64, Ordering::Relaxed);
         }
         self.queue.available.notify_one();
-        Ok(rx)
+        Ok(())
+    }
+
+    /// Accepted-but-unfinished requests right now (queued + decoding).
+    pub fn inflight(&self) -> usize {
+        self.pending.load(Ordering::Relaxed) as usize
     }
 
     /// Blocking convenience: submit and wait.
@@ -420,13 +576,37 @@ impl Coordinator {
 }
 
 struct InFlight {
-    respond: SyncSender<Response>,
+    reply: Reply,
     submitted: Instant,
 }
 
+/// Deadline screen at queue-pop time: pass unexpired requests through,
+/// shed expired ones *before* any decode compute is spent.  A shed
+/// notifies streams, counts `deadline_dropped`, and frees the in-flight
+/// slot; a dropped `Once` channel signals the error to the caller.
+fn screen_deadline(
+    req: Request,
+    global: &Metrics,
+    local: &Metrics,
+    pending: &AtomicU64,
+) -> Option<Request> {
+    let expired = req.deadline.map(|d| Instant::now() >= d).unwrap_or(false);
+    if !expired {
+        return Some(req);
+    }
+    global.deadline_dropped.fetch_add(1, Ordering::Relaxed);
+    local.deadline_dropped.fetch_add(1, Ordering::Relaxed);
+    if let Reply::Stream(tx) = &req.reply {
+        let _ = tx.send(StreamEvent::Error("deadline expired before decode".into()));
+    }
+    pending.fetch_sub(1, Ordering::Relaxed);
+    None
+}
+
 /// Admit one request into the worker's batch, tracking it under a fresh
-/// ticket; on admit failure the response channel is dropped so the caller
-/// observes an error.
+/// ticket; on admit failure the reply channel is dropped (after an
+/// `Error` event on streams) so the caller observes an error.
+#[allow(clippy::too_many_arguments)]
 fn admit_request(
     worker_id: usize,
     ticket: &mut u64,
@@ -434,26 +614,35 @@ fn admit_request(
     inflight: &mut HashMap<u64, InFlight>,
     global: &Metrics,
     local: &Metrics,
+    pending: &AtomicU64,
     req: Request,
 ) {
     *ticket += 1;
     let Request {
         prompt,
-        respond,
+        reply,
         submitted,
         prefill,
         ..
     } = req;
+    // streamed requests need the board's per-step commit log; enabling it
+    // is idempotent and scoped to this worker's current batch
+    if matches!(reply, Reply::Stream(_)) {
+        batch.enable_commit_log();
+    }
     // the prefix cache was consulted at submit time; hand the rows over
     match batch.admit_prefetched(*ticket, &prompt, prefill) {
         Ok(_slot) => {
-            inflight.insert(*ticket, InFlight { respond, submitted });
+            inflight.insert(*ticket, InFlight { reply, submitted });
         }
         Err(e) => {
             logging::info(&format!("worker {worker_id}: rejected admit: {e:#}"));
             global.errors.fetch_add(1, Ordering::Relaxed);
             local.errors.fetch_add(1, Ordering::Relaxed);
-            // dropping the respond channel signals the error to the caller
+            if let Reply::Stream(tx) = &reply {
+                let _ = tx.send(StreamEvent::Error(format!("admit rejected: {e:#}")));
+            }
+            pending.fetch_sub(1, Ordering::Relaxed);
         }
     }
 }
@@ -468,6 +657,7 @@ fn worker_loop(
     queue: Arc<Queue>,
     global: Arc<Metrics>,
     local: Arc<Metrics>,
+    pending: Arc<AtomicU64>,
     batch_wait: Duration,
     cache_cfg: CacheConfig,
     prefix: Option<PrefixHandle>,
@@ -476,12 +666,16 @@ fn worker_loop(
     let mut ticket = 0u64;
     loop {
         // ---- adopt the globally oldest waiting request ------------------
+        // (shedding deadline-expired ones, which also keeps an expired
+        // backlog from blocking shutdown)
         let first = {
             let mut st = queue.state.lock().unwrap();
-            loop {
-                if let Some(req) = st.pop_oldest() {
+            'adopt: loop {
+                while let Some(req) = st.pop_oldest() {
                     global.queue_depth.store(st.total as u64, Ordering::Relaxed);
-                    break req;
+                    if let Some(req) = screen_deadline(req, &global, &local, &pending) {
+                        break 'adopt req;
+                    }
                 }
                 if st.closed {
                     return;
@@ -503,6 +697,10 @@ fn worker_loop(
                 logging::info(&format!("worker {worker_id}: bad config: {e:#}"));
                 global.errors.fetch_add(1, Ordering::Relaxed);
                 local.errors.fetch_add(1, Ordering::Relaxed);
+                if let Reply::Stream(tx) = &first.reply {
+                    let _ = tx.send(StreamEvent::Error(format!("bad config: {e:#}")));
+                }
+                pending.fetch_sub(1, Ordering::Relaxed);
                 continue;
             }
         };
@@ -514,38 +712,41 @@ fn worker_loop(
             &mut inflight,
             &global,
             &local,
+            &pending,
             first,
         );
 
         // ---- dynamic-batching window: wait for stragglers once ----------
         if batch.has_free_slot() && !batch_wait.is_zero() {
-            let deadline = Instant::now() + batch_wait;
+            let window_end = Instant::now() + batch_wait;
             let mut st = queue.state.lock().unwrap();
             loop {
                 while batch.has_free_slot() {
-                    match st.pop_group(group) {
-                        Some(req) => admit_request(
-                            worker_id,
-                            &mut ticket,
-                            &mut batch,
-                            &mut inflight,
-                            &global,
-                            &local,
-                            req,
-                        ),
-                        None => break,
-                    }
+                    let Some(req) = st.pop_group(group) else { break };
+                    let Some(req) = screen_deadline(req, &global, &local, &pending) else {
+                        continue;
+                    };
+                    admit_request(
+                        worker_id,
+                        &mut ticket,
+                        &mut batch,
+                        &mut inflight,
+                        &global,
+                        &local,
+                        &pending,
+                        req,
+                    );
                 }
                 if !batch.has_free_slot() || st.closed {
                     break;
                 }
                 let now = Instant::now();
-                if now >= deadline {
+                if now >= window_end {
                     break;
                 }
                 let (guard, _timeout) = queue
                     .available
-                    .wait_timeout(st, deadline - now)
+                    .wait_timeout(st, window_end - now)
                     .unwrap();
                 st = guard;
             }
@@ -565,6 +766,25 @@ fn worker_loop(
                 Ok(finished) => {
                     global.record_step(occupied);
                     local.record_step(occupied);
+                    // stream this step's commits first; a failed send means
+                    // the client went away, so reap the slot immediately —
+                    // backfill below reuses the capacity this very step
+                    for sc in batch.drain_commit_log() {
+                        let Some(fl) = inflight.get(&sc.id) else { continue };
+                        let Reply::Stream(tx) = &fl.reply else { continue };
+                        let sent = tx.send(StreamEvent::Tokens {
+                            step: sc.step,
+                            commits: sc.commits,
+                        });
+                        if sent.is_err() {
+                            inflight.remove(&sc.id);
+                            if batch.release(sc.id) {
+                                global.cancelled.fetch_add(1, Ordering::Relaxed);
+                                local.cancelled.fetch_add(1, Ordering::Relaxed);
+                            }
+                            pending.fetch_sub(1, Ordering::Relaxed);
+                        }
+                    }
                     for (id, out) in finished {
                         let Some(fl) = inflight.remove(&id) else { continue };
                         let latency = fl.submitted.elapsed();
@@ -572,19 +792,34 @@ fn worker_loop(
                         session_tokens += out.gen.len();
                         global.record_request(latency, out.steps);
                         local.record_request(latency, out.steps);
-                        let _ = fl.respond.send(Response {
+                        let resp = Response {
                             gen: out.gen,
                             steps: out.steps,
                             latency,
-                        });
+                        };
+                        match &fl.reply {
+                            Reply::Once(tx) => {
+                                let _ = tx.send(resp);
+                            }
+                            Reply::Stream(tx) => {
+                                let _ = tx.send(StreamEvent::Done(resp));
+                            }
+                        }
+                        pending.fetch_sub(1, Ordering::Relaxed);
                     }
                 }
                 Err(e) => {
                     logging::info(&format!("worker {worker_id}: batch failed: {e:#}"));
                     global.errors.fetch_add(1, Ordering::Relaxed);
                     local.errors.fetch_add(1, Ordering::Relaxed);
-                    // receivers see dropped channels -> error at call site
-                    inflight.clear();
+                    // receivers see dropped channels -> error at call site;
+                    // streams get an explicit terminal event first
+                    for (_, fl) in inflight.drain() {
+                        if let Reply::Stream(tx) = &fl.reply {
+                            let _ = tx.send(StreamEvent::Error(format!("batch failed: {e:#}")));
+                        }
+                        pending.fetch_sub(1, Ordering::Relaxed);
+                    }
                     break;
                 }
             }
@@ -592,18 +827,20 @@ fn worker_loop(
             if batch.has_free_slot() {
                 let mut st = queue.state.lock().unwrap();
                 while batch.has_free_slot() {
-                    match st.pop_group(group) {
-                        Some(req) => admit_request(
-                            worker_id,
-                            &mut ticket,
-                            &mut batch,
-                            &mut inflight,
-                            &global,
-                            &local,
-                            req,
-                        ),
-                        None => break,
-                    }
+                    let Some(req) = st.pop_group(group) else { break };
+                    let Some(req) = screen_deadline(req, &global, &local, &pending) else {
+                        continue;
+                    };
+                    admit_request(
+                        worker_id,
+                        &mut ticket,
+                        &mut batch,
+                        &mut inflight,
+                        &global,
+                        &local,
+                        &pending,
+                        req,
+                    );
                 }
                 global.queue_depth.store(st.total as u64, Ordering::Relaxed);
             }
@@ -769,6 +1006,116 @@ mod tests {
                 && m.select_ns.load(Ordering::Relaxed) > 0,
             "step-pipeline timings must reach the metrics"
         );
+    }
+
+    #[test]
+    fn zero_deadline_rejected_at_submit() {
+        let coord = Coordinator::with_capacity(8, 1, CacheConfig::default(), None, 0);
+        let opts = SubmitOptions {
+            deadline: Some(Duration::ZERO),
+        };
+        let err = coord.submit_opts(vec![5; 4], cfg(), opts).unwrap_err();
+        assert_eq!(err, SubmitError::DeadlineExpired);
+        assert_eq!(coord.metrics.deadline_dropped.load(Ordering::Relaxed), 1);
+        assert_eq!(coord.inflight(), 0);
+    }
+
+    #[test]
+    fn max_inflight_cap_sheds_overloaded() {
+        // no worker: accepted requests stay in flight, so the cap binds
+        let coord = Coordinator::with_capacity(64, 1, CacheConfig::default(), None, 2);
+        let _rx1 = coord
+            .submit_opts(vec![5; 4], cfg(), SubmitOptions::default())
+            .unwrap();
+        let _rx2 = coord
+            .submit_opts(vec![5; 4], cfg(), SubmitOptions::default())
+            .unwrap();
+        assert_eq!(coord.inflight(), 2);
+        let err = coord
+            .submit_opts(vec![5; 4], cfg(), SubmitOptions::default())
+            .unwrap_err();
+        assert_eq!(
+            err,
+            SubmitError::Overloaded {
+                queued: 2,
+                inflight: 2
+            }
+        );
+        assert!(err.to_string().contains("overloaded"));
+        assert_eq!(coord.metrics.rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn expired_queued_request_dropped_before_decode() {
+        let coord = Coordinator::with_capacity(8, 1, CacheConfig::default(), None, 0);
+        let opts = SubmitOptions {
+            deadline: Some(Duration::from_millis(1)),
+        };
+        let rx = coord.submit_opts(vec![5; 4], cfg(), opts).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        // the worker starts only after the budget has lapsed, so the
+        // request must be shed at pop time, never decoded
+        let handle = coord.spawn_worker(0, Box::new(MockModel::new(2, 16, 4, 12)), Duration::ZERO);
+        assert!(rx.recv().is_err(), "shed request must drop its channel");
+        coord.shutdown();
+        handle.join().unwrap();
+        assert_eq!(coord.metrics.deadline_dropped.load(Ordering::Relaxed), 1);
+        assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), 0);
+        assert_eq!(coord.inflight(), 0);
+    }
+
+    #[test]
+    fn stream_replays_to_exact_batch_response() {
+        let m = MockModel::new(2, 16, 4, 12);
+        let want: Vec<i32> = (4..16).map(|i| m.true_token(i)).collect();
+        let (coord, handle) = Coordinator::start(m, Duration::ZERO, 64);
+        let rx = coord
+            .submit_stream(vec![5; 4], cfg(), SubmitOptions::default())
+            .unwrap();
+        let mut rebuilt: Vec<Option<i32>> = vec![None; want.len()];
+        let mut done: Option<Response> = None;
+        for ev in rx {
+            match ev {
+                StreamEvent::Tokens { commits, .. } => {
+                    for (pos, tok) in commits {
+                        assert!(rebuilt[pos].is_none(), "position {pos} streamed twice");
+                        rebuilt[pos] = Some(tok);
+                    }
+                }
+                StreamEvent::Done(resp) => done = Some(resp),
+                StreamEvent::Error(e) => panic!("stream errored: {e}"),
+            }
+        }
+        let done = done.expect("stream must end with Done");
+        let streamed: Vec<i32> = rebuilt
+            .into_iter()
+            .map(|t| t.expect("position never streamed"))
+            .collect();
+        assert_eq!(streamed, done.gen, "streamed tokens != terminal response");
+        assert_eq!(done.gen, want);
+        coord.shutdown();
+        handle.join().unwrap();
+        assert_eq!(coord.inflight(), 0);
+    }
+
+    #[test]
+    fn dropped_stream_receiver_cancels_and_frees_capacity() {
+        let coord = Coordinator::with_capacity(8, 1, CacheConfig::default(), None, 0);
+        let rx = coord
+            .submit_stream(vec![5; 4], cfg(), SubmitOptions::default())
+            .unwrap();
+        // client goes away before the worker even starts: the first
+        // commit's failed send must reap the slot
+        drop(rx);
+        let handle = coord.spawn_worker(0, Box::new(MockModel::new(1, 16, 4, 12)), Duration::ZERO);
+        let resp = coord.call(vec![7; 4], cfg()).unwrap();
+        assert!(!resp.gen.is_empty());
+        coord.shutdown();
+        handle.join().unwrap();
+        assert_eq!(coord.metrics.cancelled.load(Ordering::Relaxed), 1);
+        // the cancelled request never completes, so it must not be counted
+        assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(coord.inflight(), 0);
     }
 
     #[test]

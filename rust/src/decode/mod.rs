@@ -38,7 +38,7 @@ use crate::graph::{DepGraph, EdgeScores, TauSchedule};
 use crate::runtime::ForwardModel;
 
 pub use features::{FeaturePipeline, ModelDims, StepArena, StepTimings};
-pub use slots::SlotBatch;
+pub use slots::{SlotBatch, StepCommits};
 pub use strategies::{make_strategy, Strategy};
 
 /// Which decoding method to run.

@@ -56,6 +56,20 @@ use crate::cache::{
 use crate::runtime::{ForwardModel, StepOutput};
 use crate::tensor::argmax;
 
+/// One step's commits for one slot, as recorded by the opt-in commit
+/// log ([`SlotBatch::enable_commit_log`]).  The streaming front end
+/// turns these into per-request token frames: replaying every entry for
+/// an id reconstructs that sample's generation exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepCommits {
+    /// caller-chosen request id (the `admit` id)
+    pub id: u64,
+    /// slot-local step index (per-sample NFE coordinates)
+    pub step: usize,
+    /// (generation-relative position, committed token), in commit order
+    pub commits: Vec<(usize, i32)>,
+}
+
 /// Per-slot decode state (one in-flight sample).  Step buffers live in
 /// the slot's [`StepArena`]; this carries only the request's identity
 /// and its commit trajectory.
@@ -114,6 +128,10 @@ pub struct SlotBatch<'m> {
     /// scratch: prefix keys already published this step (same-prompt
     /// slots on one board publish once, not once per slot)
     published_keys: Vec<u64>,
+    /// opt-in per-step commit log for streaming consumers (None — the
+    /// default — keeps the zero-steady-state-allocation guarantee of
+    /// the non-streaming step path)
+    commit_log: Option<Vec<StepCommits>>,
 }
 
 impl<'m> SlotBatch<'m> {
@@ -169,7 +187,46 @@ impl<'m> SlotBatch<'m> {
             active_rows: Vec::new(),
             splice_rows: Vec::new(),
             published_keys: Vec::new(),
+            commit_log: None,
         })
+    }
+
+    /// Opt into the per-step commit log.  Once enabled, every `step()`
+    /// appends one [`StepCommits`] per occupied slot; drain them with
+    /// [`SlotBatch::drain_commit_log`].  Off by default because the log
+    /// allocates per step, which would break the zero-steady-state-
+    /// allocation contract of the non-streaming pipeline.
+    pub fn enable_commit_log(&mut self) {
+        if self.commit_log.is_none() {
+            self.commit_log = Some(Vec::new());
+        }
+    }
+
+    /// Take the commit-log entries accumulated since the last drain
+    /// (empty when the log is not enabled).
+    pub fn drain_commit_log(&mut self) -> Vec<StepCommits> {
+        match &mut self.commit_log {
+            Some(log) => std::mem::take(log),
+            None => Vec::new(),
+        }
+    }
+
+    /// Free a slot mid-flight without producing an outcome (client
+    /// cancellation: the stream consumer went away, so finishing the
+    /// decode would waste forward passes).  Returns whether a slot held
+    /// `id`; board capacity is recovered immediately.
+    pub fn release(&mut self, id: u64) -> bool {
+        for slot in self.slots.iter_mut() {
+            if slot.as_ref().map(|st| st.id == id).unwrap_or(false) {
+                let st = slot.take().unwrap();
+                if let Some(ig) = &st.inc_graph {
+                    self.graph_stats.merge(&ig.stats);
+                }
+                self.occupied -= 1;
+                return true;
+            }
+        }
+        false
     }
 
     pub fn capacity(&self) -> usize {
@@ -462,6 +519,17 @@ impl<'m> SlotBatch<'m> {
                         st.per_step_flat.push(pos - p);
                     }
                     st.per_step_ends.push(st.per_step_flat.len());
+                    if let Some(log) = &mut self.commit_log {
+                        log.push(StepCommits {
+                            id: st.id,
+                            step,
+                            commits: self
+                                .sel_buf
+                                .iter()
+                                .map(|&c| (arena.positions[c] - p, arena.amax[c]))
+                                .collect(),
+                        });
+                    }
 
                     // store this step's distributions for KLASS stability
                     arena.commit_prev(p, v);
@@ -824,6 +892,73 @@ mod tests {
                 assert_eq!(b.per_step_commits, q.per_step_commits);
             }
         }
+    }
+
+    #[test]
+    fn commit_log_reconstructs_generation_exactly() {
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::DapdStaged);
+        let mut sb = SlotBatch::new(&m, &cfg).unwrap();
+        sb.enable_commit_log();
+        sb.admit(0, &prompt(0)).unwrap();
+        sb.admit(1, &prompt(1)).unwrap();
+        let g = m.gen_len();
+        let mut rebuilt: Vec<Vec<Option<i32>>> = vec![vec![None; g]; 2];
+        let mut done: Vec<Option<DecodeOutcome>> = vec![None, None];
+        while sb.occupied() > 0 {
+            let finished = sb.step().unwrap();
+            for sc in sb.drain_commit_log() {
+                for &(pos, tok) in &sc.commits {
+                    rebuilt[sc.id as usize][pos] = Some(tok);
+                }
+            }
+            for (id, o) in finished {
+                done[id as usize] = Some(o);
+            }
+        }
+        for (id, o) in done.iter().enumerate() {
+            let o = o.as_ref().unwrap();
+            let streamed: Vec<i32> = rebuilt[id]
+                .iter()
+                .map(|t| t.expect("position never streamed"))
+                .collect();
+            assert_eq!(streamed, o.gen, "streamed tokens != batch tokens");
+        }
+    }
+
+    #[test]
+    fn commit_log_disabled_by_default_and_drains_empty() {
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::FastDllm);
+        let mut sb = SlotBatch::new(&m, &cfg).unwrap();
+        sb.admit(0, &prompt(0)).unwrap();
+        sb.step().unwrap();
+        assert!(sb.drain_commit_log().is_empty());
+    }
+
+    #[test]
+    fn release_frees_capacity_without_perturbing_neighbors() {
+        let m = mock();
+        let cfg = DecodeConfig::new(Method::FastDllm);
+        let solo0 = decode_batch(&m, &[prompt(0)], &cfg).unwrap()[0].clone();
+        let mut sb = SlotBatch::new(&m, &cfg).unwrap();
+        sb.admit(0, &prompt(0)).unwrap();
+        sb.admit(1, &prompt(1)).unwrap();
+        sb.step().unwrap();
+        assert!(sb.release(1), "live slot must release");
+        assert!(!sb.release(1), "double release must be a no-op");
+        assert!(sb.has_free_slot(), "capacity must be recovered");
+        // the released slot is immediately reusable mid-flight
+        sb.admit(2, &prompt(2)).unwrap();
+        let mut done = std::collections::HashMap::new();
+        while sb.occupied() > 0 {
+            for (id, o) in sb.step().unwrap() {
+                done.insert(id, o);
+            }
+        }
+        assert!(!done.contains_key(&1), "released request must not finish");
+        assert_eq!(done[&0].gen, solo0.gen, "neighbor perturbed by release");
+        assert!(done.contains_key(&2));
     }
 
     #[test]

@@ -14,6 +14,13 @@
 //!           [--kernels scalar|native]  (SIMD kernel backend for the
 //!           vocab-width step math; default: DAPD_KERNELS env, else
 //!           runtime CPU detection)
+//!           [--max-inflight N]  (admission cap on accepted-but-
+//!           unfinished requests; 0 = unlimited)
+//!           [--deadline-ms D]   (default per-request latency budget;
+//!           0 = none; requests may send their own deadline_ms)
+//!           [--max-line-bytes B] [--drain-wait-ms W]
+//!           SIGINT/SIGTERM trigger graceful drain: refuse new work,
+//!           finish in-flight requests, flush streams, then exit.
 //!   client  --addr HOST:PORT --task T [--n N] [--method X]
 //!
 //! Common flags: --artifacts DIR (default ./artifacts), --batch B,
@@ -260,18 +267,81 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: settings.workers,
         batch_wait: Duration::from_millis(settings.batch_wait_ms),
         queue_cap: settings.queue_cap,
+        max_inflight: settings.max_inflight,
         cache: settings.cache_config(),
     };
-    let (coord, _handles) = Coordinator::start_pool(&pool, &opts)?;
+    let (coord, handles) = Coordinator::start_pool(&pool, &opts)?;
     let reporter = coord.clone();
-    let server = Server::bind(&format!("0.0.0.0:{}", settings.port), coord, cfg)?;
+    let summary = coord.clone();
+    let server = Server::bind_with(
+        &format!("0.0.0.0:{}", settings.port),
+        coord,
+        cfg,
+        settings.server_options(),
+    )?;
+    let drain = server.drain_handle()?;
+
+    // SIGINT/SIGTERM -> graceful drain instead of dying mid-request
+    #[cfg(unix)]
+    {
+        sig::install();
+        let drain = drain.clone();
+        std::thread::spawn(move || loop {
+            if sig::caught() {
+                drain.drain();
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        });
+    }
 
     // periodic metrics report (aggregate + per-worker breakdown)
     std::thread::spawn(move || loop {
         std::thread::sleep(Duration::from_secs(10));
         logging::info(&reporter.report());
     });
-    server.run()
+    let result = server.run();
+    // run() returned: acceptance stopped and connections flushed; make
+    // sure the workers are told to stop even if the drain handle never
+    // fired (e.g. run errored), then wait for them before the final
+    // report (metrics are complete once the workers have joined)
+    drain.drain();
+    handles.join();
+    logging::info(&format!("drained: {}", summary.report()));
+    result
+}
+
+/// Minimal Unix signal hookup without external crates: `signal(2)` is in
+/// every libc the toolchain links anyway, and a handler that only stores
+/// a relaxed atomic flag is async-signal-safe.  A watcher thread polls
+/// the flag and triggers the drain off the signal stack.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static CAUGHT: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" fn on_signal(_signum: i32) {
+        CAUGHT.store(true, Ordering::Relaxed);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn caught() -> bool {
+        CAUGHT.load(Ordering::Relaxed)
+    }
 }
 
 fn cmd_client(args: &Args) -> Result<()> {

@@ -1,44 +1,151 @@
-//! Newline-delimited JSON over TCP: the serving front end + a client.
+//! Newline-delimited JSON over TCP: the streaming serving front end + a
+//! client.
 //!
-//! Request:  {"prompt": [i32...], "method": "dapd-staged", "blocks": 1,
-//!            "eos_suppress": false}\n
-//! Response: {"ok": true, "gen": [...], "steps": n,
-//!            "latency_ms": x}\n  (or {"ok": false, "error": "..."})
+//! Requests (one JSON object per line, persistent connections):
 //!
-//! Metrics:  {"metrics": true}\n
-//!           -> {"ok": true, "aggregate": {...}, "workers": [{...}, ...]}
+//!   {"prompt": [i32...], "method": "dapd-staged", "blocks": 1,
+//!    "eos_suppress": false, "deadline_ms": 2000, "stream": true}\n
+//!   {"metrics": true}\n
+//!   {"drain": true}\n
+//!
+//! Non-streamed decode replies with a single line:
+//!
+//!   {"ok": true, "gen": [...], "steps": n, "latency_ms": x}\n
+//!
+//! Streamed decode (`"stream": true`) replies with one `tokens` frame per
+//! decode step the request committed in, then a terminal `done` frame
+//! carrying exactly the tokens a non-streamed request would have
+//! returned (token identity):
+//!
+//!   {"ok": true, "frame": "tokens", "step": s,
+//!    "positions": [...], "tokens": [...]}\n
+//!   {"ok": true, "frame": "done", "gen": [...], "steps": n,
+//!    "latency_ms": x}\n
+//!
+//! Admission control degrades overload into fast typed refusals instead
+//! of unbounded queueing:
+//!
+//!   {"ok": false, "overloaded": true, ...}   queue/in-flight caps hit
+//!   {"ok": false, "expired": true, ...}      deadline spent before decode
+//!   {"ok": false, "draining": true, ...}     server is shutting down
+//!
+//! Graceful drain: [`DrainHandle::drain`] (or a `{"drain": true}` admin
+//! request, or SIGINT/SIGTERM in `main`) stops acceptance, lets every
+//! in-flight request finish and flush, then returns from [`Server::run`].
+//! Request lines are read with a hard byte bound (`max_line_bytes`); an
+//! oversized line is discarded and answered with `ok:false` while the
+//! connection survives.
 //!
 //! One thread per connection; the inference side is the coordinator's
 //! sharded worker pool, so concurrent connections genuinely execute in
 //! parallel across workers.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, Response, StreamEvent, SubmitError, SubmitOptions};
 use crate::decode::{DecodeConfig, Method};
 use crate::util::json::Json;
 use crate::util::logging;
+
+/// Front-end tunables; see `config::ServeSettings` for the CLI flags.
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// hard bound on one request line; longer lines are discarded and
+    /// refused without buffering them (connection survives)
+    pub max_line_bytes: usize,
+    /// deadline applied to requests that do not send `deadline_ms`
+    pub default_deadline: Option<Duration>,
+    /// socket read timeout — the cadence at which idle persistent
+    /// connections notice a drain
+    pub read_timeout: Duration,
+    /// how long `run` waits for in-flight connections to flush after the
+    /// accept loop stops
+    pub drain_wait: Duration,
+}
+
+impl Default for ServerOptions {
+    fn default() -> ServerOptions {
+        ServerOptions {
+            max_line_bytes: 1 << 20,
+            default_deadline: None,
+            read_timeout: Duration::from_millis(250),
+            drain_wait: Duration::from_secs(30),
+        }
+    }
+}
+
+/// State shared between the accept loop, connection threads, and drain
+/// handles.
+struct ServerState {
+    stop: AtomicBool,
+    active_conns: AtomicUsize,
+}
+
+/// Triggers (and observes) graceful drain; cheap to clone and safe to
+/// fire from any thread, including a signal watcher or a connection
+/// handler serving `{"drain": true}`.
+#[derive(Clone)]
+pub struct DrainHandle {
+    state: Arc<ServerState>,
+    coord: Coordinator,
+    /// where to poke the blocking accept loop awake
+    wake: SocketAddr,
+}
+
+impl DrainHandle {
+    /// Begin graceful drain (idempotent): refuse new work, let in-flight
+    /// requests finish, unblock the accept loop so `run` can return.
+    pub fn drain(&self) {
+        if self.state.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        logging::info("drain: refusing new work, finishing in-flight requests");
+        self.coord.shutdown();
+        // the accept loop blocks in accept(); poke it with a connection
+        // so it observes the stop flag (std has no accept timeout)
+        let _ = TcpStream::connect_timeout(&self.wake, Duration::from_millis(200));
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.state.stop.load(Ordering::SeqCst)
+    }
+}
 
 pub struct Server {
     listener: TcpListener,
     coord: Coordinator,
     default_cfg: DecodeConfig,
-    stop: Arc<AtomicBool>,
+    opts: ServerOptions,
+    state: Arc<ServerState>,
 }
 
 impl Server {
     pub fn bind(addr: &str, coord: Coordinator, default_cfg: DecodeConfig) -> Result<Server> {
+        Server::bind_with(addr, coord, default_cfg, ServerOptions::default())
+    }
+
+    pub fn bind_with(
+        addr: &str,
+        coord: Coordinator,
+        default_cfg: DecodeConfig,
+        opts: ServerOptions,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         Ok(Server {
             listener,
             coord,
             default_cfg,
-            stop: Arc::new(AtomicBool::new(false)),
+            opts,
+            state: Arc::new(ServerState {
+                stop: AtomicBool::new(false),
+                active_conns: AtomicUsize::new(0),
+            }),
         })
     }
 
@@ -46,90 +153,153 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
-    pub fn stop_handle(&self) -> Arc<AtomicBool> {
-        Arc::clone(&self.stop)
+    /// A handle that triggers graceful drain from any thread.
+    pub fn drain_handle(&self) -> Result<DrainHandle> {
+        let mut wake = self.listener.local_addr()?;
+        if wake.ip().is_unspecified() {
+            // bound on 0.0.0.0/[::]: the loopback reaches the same socket
+            wake.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
+        }
+        Ok(DrainHandle {
+            state: Arc::clone(&self.state),
+            coord: self.coord.clone(),
+            wake,
+        })
     }
 
-    /// Accept loop; returns when the stop flag is set (checked between
-    /// connections via a short accept timeout emulation).
+    /// Accept loop: blocks in `accept` (no sleep-polling) until a drain
+    /// is triggered, then waits for in-flight connections to flush
+    /// (bounded by `drain_wait`) before returning.
     pub fn run(&self) -> Result<()> {
-        self.listener.set_nonblocking(true)?;
         logging::info(&format!("serving on {}", self.listener.local_addr()?));
+        let drain = self.drain_handle()?;
         loop {
-            if self.stop.load(Ordering::SeqCst) {
-                return Ok(());
-            }
-            match self.listener.accept() {
-                Ok((stream, peer)) => {
-                    logging::debug(&format!("connection from {peer}"));
-                    stream.set_nonblocking(false)?;
-                    let coord = self.coord.clone();
-                    let cfg = self.default_cfg.clone();
-                    std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, coord, cfg) {
-                            logging::debug(&format!("conn ended: {e:#}"));
-                        }
-                    });
-                }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(10));
-                }
+            let (stream, peer) = match self.listener.accept() {
+                Ok(conn) => conn,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 Err(e) => return Err(e.into()),
-            }
-        }
-    }
-}
-
-fn handle_conn(stream: TcpStream, coord: Coordinator, default_cfg: DecodeConfig) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
-        }
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = match handle_request(line.trim(), &coord, &default_cfg) {
-            Ok(mut obj) => {
-                obj.set("ok", true.into());
-                obj
-            }
-            Err(e) => {
+            };
+            if self.state.stop.load(Ordering::SeqCst) {
+                // drain raced this accept (or it is the drain wake-up
+                // connection itself): refuse, best-effort, and stop
+                let mut s = stream;
                 let mut obj = Json::obj();
                 obj.set("ok", false.into());
-                obj.set("error", format!("{e:#}").into());
-                obj
+                obj.set("draining", true.into());
+                let _ = s.write_all(obj.dump().as_bytes());
+                let _ = s.write_all(b"\n");
+                break;
             }
-        };
-        writer.write_all(reply.dump().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+            logging::debug(&format!("connection from {peer}"));
+            stream.set_read_timeout(Some(self.opts.read_timeout))?;
+            let coord = self.coord.clone();
+            let cfg = self.default_cfg.clone();
+            let opts = self.opts.clone();
+            let conn_drain = drain.clone();
+            let state = Arc::clone(&self.state);
+            self.state.active_conns.fetch_add(1, Ordering::SeqCst);
+            std::thread::spawn(move || {
+                if let Err(e) = handle_conn(stream, coord, cfg, opts, conn_drain) {
+                    logging::debug(&format!("conn ended: {e:#}"));
+                }
+                state.active_conns.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        // graceful: every accepted connection finishes its in-flight work
+        // and flushes before we return (drain_wait bounds a stuck peer)
+        let deadline = Instant::now() + self.opts.drain_wait;
+        while self.state.active_conns.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        Ok(())
     }
 }
 
-fn handle_request(line: &str, coord: &Coordinator, default_cfg: &DecodeConfig) -> Result<Json> {
-    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
-    if req.get("metrics").as_bool() == Some(true) {
-        let mut obj = Json::obj();
-        obj.set("aggregate", coord.metrics.to_json());
-        obj.set(
-            "workers",
-            Json::Arr(
-                coord
-                    .worker_metrics()
-                    .iter()
-                    .map(|m| m.to_json())
-                    .collect(),
-            ),
-        );
-        if let Some(pc) = coord.prefix_cache() {
-            obj.set("prefix_cache", pc.to_json());
+/// Outcome of one bounded line read.
+enum LineRead {
+    /// a complete line within the byte bound is in the buffer
+    Line,
+    /// the line exceeded the bound; it was discarded up to and including
+    /// its newline, so the connection can keep being served
+    Oversized,
+    /// peer closed the connection
+    Eof,
+    /// a drain began while the connection was idle
+    Stopped,
+}
+
+/// Read one newline-terminated line of at most `max` bytes (newline
+/// excluded) without ever buffering more than `max` bytes of an
+/// over-long line.  Read timeouts are used to poll the stop flag so idle
+/// persistent connections observe a drain.  `discarding` carries the
+/// skip-to-newline state across calls.
+fn read_bounded_line(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut Vec<u8>,
+    max: usize,
+    discarding: &mut bool,
+    stop: &AtomicBool,
+) -> Result<LineRead> {
+    loop {
+        let buf = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(LineRead::Stopped);
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        };
+        if buf.is_empty() {
+            return Ok(LineRead::Eof);
         }
-        return Ok(obj);
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                let over = *discarding || line.len() + i > max;
+                if !over {
+                    line.extend_from_slice(&buf[..i]);
+                }
+                reader.consume(i + 1);
+                *discarding = false;
+                return Ok(if over { LineRead::Oversized } else { LineRead::Line });
+            }
+            None => {
+                let n = buf.len();
+                if !*discarding {
+                    if line.len() + n > max {
+                        line.clear();
+                        *discarding = true;
+                    } else {
+                        line.extend_from_slice(buf);
+                    }
+                }
+                reader.consume(n);
+            }
+        }
     }
+}
+
+/// One decode request as parsed off the wire.
+struct DecodeRequest {
+    prompt: Vec<i32>,
+    cfg: DecodeConfig,
+    opts: SubmitOptions,
+    stream: bool,
+}
+
+fn parse_decode_request(
+    req: &Json,
+    default_cfg: &DecodeConfig,
+    opts: &ServerOptions,
+) -> Result<DecodeRequest> {
     let prompt: Vec<i32> = req
         .get("prompt")
         .to_i64_vec()
@@ -148,12 +318,214 @@ fn handle_request(line: &str, coord: &Coordinator, default_cfg: &DecodeConfig) -
     if let Some(e) = req.get("eos_suppress").as_bool() {
         cfg.eos_suppress = e;
     }
-    let resp = coord.call(prompt, cfg)?;
+    let deadline = match req.get("deadline_ms").as_f64() {
+        Some(ms) if ms.is_nan() || ms < 0.0 => bail!("deadline_ms must be a number >= 0"),
+        Some(ms) => Some(Duration::from_secs_f64(ms / 1e3)),
+        None => opts.default_deadline,
+    };
+    let stream = req.get("stream").as_bool() == Some(true);
+    Ok(DecodeRequest {
+        prompt,
+        cfg,
+        opts: SubmitOptions { deadline },
+        stream,
+    })
+}
+
+fn write_line(writer: &mut TcpStream, obj: &Json) -> Result<()> {
+    writer.write_all(obj.dump().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
+fn error_json(msg: &str) -> Json {
     let mut obj = Json::obj();
-    obj.set("gen", resp.gen.iter().map(|&t| t as i64).collect::<Vec<i64>>().into());
+    obj.set("ok", false.into());
+    obj.set("error", msg.into());
+    obj
+}
+
+/// Map a typed admission rejection onto its wire shape — the flags the
+/// load generators key on (`overloaded` is the 429 analogue).
+fn submit_error_json(e: &SubmitError) -> Json {
+    let mut obj = error_json(&e.to_string());
+    match e {
+        SubmitError::Overloaded { .. } => obj.set("overloaded", true.into()),
+        SubmitError::DeadlineExpired => obj.set("expired", true.into()),
+        SubmitError::Closed => obj.set("draining", true.into()),
+    }
+    obj
+}
+
+fn response_json(resp: &Response) -> Json {
+    let mut obj = Json::obj();
+    obj.set(
+        "gen",
+        resp.gen.iter().map(|&t| t as i64).collect::<Vec<i64>>().into(),
+    );
     obj.set("steps", resp.steps.into());
     obj.set("latency_ms", (resp.latency.as_secs_f64() * 1e3).into());
-    Ok(obj)
+    obj
+}
+
+fn metrics_json(coord: &Coordinator) -> Json {
+    let mut obj = Json::obj();
+    obj.set("ok", true.into());
+    obj.set("inflight", (coord.inflight() as i64).into());
+    obj.set("aggregate", coord.metrics.to_json());
+    obj.set(
+        "workers",
+        Json::Arr(coord.worker_metrics().iter().map(|m| m.to_json()).collect()),
+    );
+    if let Some(pc) = coord.prefix_cache() {
+        obj.set("prefix_cache", pc.to_json());
+    }
+    obj
+}
+
+/// Relay one streamed decode to the wire: `tokens` frames as steps
+/// commit, then the terminal `done`/`error` frame.  A failed write means
+/// the client went away; propagating the error drops the receiver, which
+/// the worker notices on its next commit (the slot is reaped there).
+fn stream_response(writer: &mut TcpStream, rx: mpsc::Receiver<StreamEvent>) -> Result<()> {
+    let mut terminal = false;
+    for ev in rx.iter() {
+        match ev {
+            StreamEvent::Tokens { step, commits } => {
+                let mut obj = Json::obj();
+                obj.set("ok", true.into());
+                obj.set("frame", "tokens".into());
+                obj.set("step", step.into());
+                obj.set(
+                    "positions",
+                    commits.iter().map(|&(p, _)| p as i64).collect::<Vec<i64>>().into(),
+                );
+                obj.set(
+                    "tokens",
+                    commits.iter().map(|&(_, t)| t as i64).collect::<Vec<i64>>().into(),
+                );
+                write_line(writer, &obj)?;
+            }
+            StreamEvent::Done(resp) => {
+                let mut obj = response_json(&resp);
+                obj.set("ok", true.into());
+                obj.set("frame", "done".into());
+                write_line(writer, &obj)?;
+                terminal = true;
+            }
+            StreamEvent::Error(e) => {
+                let mut obj = error_json(&e);
+                obj.set("frame", "error".into());
+                write_line(writer, &obj)?;
+                terminal = true;
+            }
+        }
+    }
+    if !terminal {
+        // worker died without a terminal event; tell the client rather
+        // than leaving the stream dangling
+        let mut obj = error_json("stream ended without terminal frame");
+        obj.set("frame", "error".into());
+        write_line(writer, &obj)?;
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coord: Coordinator,
+    default_cfg: DecodeConfig,
+    opts: ServerOptions,
+    drain: DrainHandle,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line: Vec<u8> = Vec::new();
+    let mut discarding = false;
+    loop {
+        line.clear();
+        match read_bounded_line(
+            &mut reader,
+            &mut line,
+            opts.max_line_bytes,
+            &mut discarding,
+            &drain.state.stop,
+        )? {
+            LineRead::Eof => return Ok(()),
+            LineRead::Stopped => {
+                // draining while idle: notify and close so run() can exit
+                let mut obj = Json::obj();
+                obj.set("ok", false.into());
+                obj.set("draining", true.into());
+                let _ = write_line(&mut writer, &obj);
+                return Ok(());
+            }
+            LineRead::Oversized => {
+                write_line(
+                    &mut writer,
+                    &error_json(&format!(
+                        "request line exceeds {} bytes",
+                        opts.max_line_bytes
+                    )),
+                )?;
+                continue;
+            }
+            LineRead::Line => {}
+        }
+        let text = String::from_utf8_lossy(&line);
+        let text = text.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let req = match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => {
+                write_line(&mut writer, &error_json(&format!("bad json: {e}")))?;
+                continue;
+            }
+        };
+        if req.get("metrics").as_bool() == Some(true) {
+            write_line(&mut writer, &metrics_json(&coord))?;
+            continue;
+        }
+        if req.get("drain").as_bool() == Some(true) {
+            drain.drain();
+            let mut obj = Json::obj();
+            obj.set("ok", true.into());
+            obj.set("draining", true.into());
+            write_line(&mut writer, &obj)?;
+            continue;
+        }
+        let dr = match parse_decode_request(&req, &default_cfg, &opts) {
+            Ok(dr) => dr,
+            Err(e) => {
+                write_line(&mut writer, &error_json(&format!("{e:#}")))?;
+                continue;
+            }
+        };
+        if dr.stream {
+            match coord.submit_stream(dr.prompt, dr.cfg, dr.opts) {
+                Ok(rx) => stream_response(&mut writer, rx)?,
+                Err(e) => write_line(&mut writer, &submit_error_json(&e))?,
+            }
+        } else {
+            match coord.submit_opts(dr.prompt, dr.cfg, dr.opts) {
+                Ok(rx) => match rx.recv() {
+                    Ok(resp) => {
+                        let mut obj = response_json(&resp);
+                        obj.set("ok", true.into());
+                        write_line(&mut writer, &obj)?;
+                    }
+                    Err(_) => write_line(
+                        &mut writer,
+                        &error_json("inference worker dropped request"),
+                    )?,
+                },
+                Err(e) => write_line(&mut writer, &submit_error_json(&e))?,
+            }
+        }
+    }
 }
 
 /// Minimal blocking client for examples/tests.
@@ -171,6 +543,31 @@ impl Client {
         })
     }
 
+    /// Send one request object and read one reply line (no ok-check —
+    /// callers inspecting refusal flags want the raw frame).
+    pub fn roundtrip(&mut self, req: &Json) -> Result<Json> {
+        self.send(req)?;
+        self.read_frame()
+    }
+
+    /// Send one request object without reading a reply (streamed
+    /// requests read frames with [`Client::read_frame`]).
+    pub fn send(&mut self, req: &Json) -> Result<()> {
+        self.writer.write_all(req.dump().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read one reply line as JSON.
+    pub fn read_frame(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("connection closed"));
+        }
+        Json::parse(line.trim()).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
     pub fn request(&mut self, prompt: &[i32], method: Option<&str>) -> Result<Json> {
         let mut req = Json::obj();
         req.set(
@@ -180,12 +577,7 @@ impl Client {
         if let Some(m) = method {
             req.set("method", m.into());
         }
-        self.writer.write_all(req.dump().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        self.writer.flush()?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let resp = Json::parse(line.trim()).map_err(|e| anyhow!("bad response: {e}"))?;
+        let resp = self.roundtrip(&req)?;
         if resp.get("ok").as_bool() != Some(true) {
             return Err(anyhow!(
                 "server error: {}",
@@ -201,7 +593,6 @@ mod tests {
     use super::*;
     use crate::decode::Method;
     use crate::runtime::MockModel;
-    use std::time::Duration;
 
     #[test]
     fn end_to_end_over_tcp() {
@@ -215,7 +606,7 @@ mod tests {
         )
         .unwrap();
         let addr = server.local_addr().unwrap().to_string();
-        let stop = server.stop_handle();
+        let drain = server.drain_handle().unwrap();
         let sh = std::thread::spawn(move || server.run().unwrap());
 
         let mut client = Client::connect(&addr).unwrap();
@@ -224,14 +615,13 @@ mod tests {
         assert!(resp.get("steps").as_usize().unwrap() >= 1);
         // malformed request surfaces an error, connection survives
         {
-            use std::io::Write;
-            let mut raw = TcpStream::connect(&addr).unwrap();
-            raw.write_all(b"{nope}\n").unwrap();
-            let mut r = BufReader::new(raw.try_clone().unwrap());
-            let mut line = String::new();
-            r.read_line(&mut line).unwrap();
-            let j = Json::parse(line.trim()).unwrap();
+            let mut raw = Client::connect(&addr).unwrap();
+            raw.writer.write_all(b"{nope}\n").unwrap();
+            let j = raw.read_frame().unwrap();
             assert_eq!(j.get("ok").as_bool(), Some(false));
+            // same connection still serves a well-formed request
+            let ok = raw.request(&[5; 4], None).unwrap();
+            assert!(ok.get("gen").to_i64_vec().is_some());
         }
         // wrong method name errors cleanly, listing the valid names
         let err = client.request(&[5; 4], Some("bogus")).unwrap_err();
@@ -244,21 +634,107 @@ mod tests {
 
         // metrics request reports the served traffic, per worker
         {
-            use std::io::Write;
-            let mut raw = TcpStream::connect(&addr).unwrap();
-            raw.write_all(b"{\"metrics\": true}\n").unwrap();
-            let mut r = BufReader::new(raw.try_clone().unwrap());
-            let mut line = String::new();
-            r.read_line(&mut line).unwrap();
-            let j = Json::parse(line.trim()).unwrap();
+            let mut req = Json::obj();
+            req.set("metrics", true.into());
+            let j = client.roundtrip(&req).unwrap();
             assert_eq!(j.get("ok").as_bool(), Some(true));
             assert!(j.get("aggregate").get("requests").as_i64().unwrap() >= 1);
             assert_eq!(j.get("workers").as_arr().unwrap().len(), 1);
+            assert_eq!(j.get("inflight").as_i64(), Some(0));
         }
 
-        stop.store(true, Ordering::SeqCst);
+        drain.drain();
         sh.join().unwrap();
-        coord.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn streamed_tokens_match_batch_response() {
+        let m = MockModel::new(2, 16, 4, 12);
+        let (coord, handle) = Coordinator::start(m, Duration::ZERO, 16);
+        let server = Server::bind(
+            "127.0.0.1:0",
+            coord.clone(),
+            DecodeConfig::new(Method::FastDllm),
+        )
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let drain = server.drain_handle().unwrap();
+        let sh = std::thread::spawn(move || server.run().unwrap());
+
+        let mut client = Client::connect(&addr).unwrap();
+        let batch = client.request(&[5; 4], None).unwrap();
+        let want = batch.get("gen").to_i64_vec().unwrap();
+
+        let mut req = Json::obj();
+        req.set("prompt", vec![5i64; 4].into());
+        req.set("stream", true.into());
+        client.send(&req).unwrap();
+        let mut rebuilt: Vec<Option<i64>> = vec![None; want.len()];
+        let mut saw_tokens = false;
+        let done = loop {
+            let frame = client.read_frame().unwrap();
+            assert_eq!(frame.get("ok").as_bool(), Some(true), "{}", frame.dump());
+            match frame.get("frame").as_str() {
+                Some("tokens") => {
+                    saw_tokens = true;
+                    let pos = frame.get("positions").to_i64_vec().unwrap();
+                    let tok = frame.get("tokens").to_i64_vec().unwrap();
+                    assert_eq!(pos.len(), tok.len());
+                    for (p, t) in pos.iter().zip(&tok) {
+                        rebuilt[*p as usize] = Some(*t);
+                    }
+                }
+                Some("done") => break frame,
+                other => panic!("unexpected frame {other:?}"),
+            }
+        };
+        assert!(saw_tokens, "streamed decode must emit tokens frames");
+        let streamed: Vec<i64> = rebuilt
+            .into_iter()
+            .map(|t| t.expect("position never streamed"))
+            .collect();
+        assert_eq!(streamed, want, "streamed tokens != batch response");
+        assert_eq!(done.get("gen").to_i64_vec().unwrap(), want);
+
+        // connection stays usable after a streamed exchange
+        let again = client.request(&[5; 4], None).unwrap();
+        assert_eq!(again.get("gen").to_i64_vec().unwrap(), want);
+
+        drain.drain();
+        sh.join().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn drain_request_stops_server_gracefully() {
+        let m = MockModel::new(2, 16, 4, 12);
+        let (coord, handle) = Coordinator::start(m, Duration::ZERO, 16);
+        let server = Server::bind(
+            "127.0.0.1:0",
+            coord.clone(),
+            DecodeConfig::new(Method::FastDllm),
+        )
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let sh = std::thread::spawn(move || server.run().unwrap());
+
+        let mut client = Client::connect(&addr).unwrap();
+        // a request served before the drain completes normally
+        let resp = client.request(&[5; 4], None).unwrap();
+        assert!(resp.get("gen").to_i64_vec().is_some());
+        let mut req = Json::obj();
+        req.set("drain", true.into());
+        let ack = client.roundtrip(&req).unwrap();
+        assert_eq!(ack.get("ok").as_bool(), Some(true));
+        assert_eq!(ack.get("draining").as_bool(), Some(true));
+        // run() exits without any external stop flag; before returning it
+        // waits for this connection, whose handler notices the drain at
+        // its next read timeout and sends a final draining notice
+        sh.join().unwrap();
+        let notice = client.read_frame().unwrap();
+        assert_eq!(notice.get("ok").as_bool(), Some(false));
+        assert_eq!(notice.get("draining").as_bool(), Some(true));
         handle.join().unwrap();
     }
 }

@@ -126,6 +126,58 @@ impl Json {
         s
     }
 
+    /// Human-readable dump: 2-space indent, one key/element per line
+    /// (checked-in baselines like `BENCH_6.json` diff cleanly this way).
+    /// Empty objects/arrays stay inline.
+    pub fn dump_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s.push('\n');
+        s
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    for _ in 0..indent + 1 {
+                        out.push_str("  ");
+                    }
+                    v.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                for _ in 0..indent {
+                    out.push_str("  ");
+                }
+                out.push(']');
+            }
+            Json::Obj(o) if !o.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    for _ in 0..indent + 1 {
+                        out.push_str("  ");
+                    }
+                    write_str(k, out);
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                for _ in 0..indent {
+                    out.push_str("  ");
+                }
+                out.push('}');
+            }
+            other => other.write(out),
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -473,6 +525,17 @@ mod tests {
     fn i64_vec_helper() {
         let v = Json::parse("[3, 1, 4]").unwrap();
         assert_eq!(v.to_i64_vec().unwrap(), vec![3, 1, 4]);
+    }
+
+    #[test]
+    fn pretty_dump_roundtrips_and_indents() {
+        let v = Json::parse(r#"{"a": [1, 2], "b": {"c": "x"}, "d": [], "e": {}}"#).unwrap();
+        let pretty = v.dump_pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), v, "pretty output must reparse");
+        assert!(pretty.contains("\"a\": [\n    1,\n    2\n  ]"), "{pretty}");
+        assert!(pretty.contains("\"d\": []"), "empty arrays stay inline: {pretty}");
+        assert!(pretty.contains("\"e\": {}"), "empty objects stay inline: {pretty}");
+        assert!(pretty.ends_with("}\n"), "trailing newline for checked-in files");
     }
 
     #[test]

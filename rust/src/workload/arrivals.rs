@@ -11,6 +11,10 @@ pub enum Arrival {
     Poisson { rate: f64 },
     /// fixed inter-arrival gap in seconds
     Uniform { gap: f64 },
+    /// bursty open loop: `burst` simultaneous requests every `period`
+    /// seconds — the overload shape the serve-smoke admission gate
+    /// drives (sustained rate = burst / period)
+    Bursty { burst: usize, period: f64 },
 }
 
 impl Arrival {
@@ -18,7 +22,7 @@ impl Arrival {
     pub fn schedule(&self, n: usize, rng: &mut Pcg) -> Vec<f64> {
         let mut t = 0.0;
         let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
+        for i in 0..n {
             match self {
                 Arrival::Closed => out.push(0.0),
                 Arrival::Poisson { rate } => {
@@ -28,6 +32,9 @@ impl Arrival {
                 Arrival::Uniform { gap } => {
                     out.push(t);
                     t += gap;
+                }
+                Arrival::Bursty { burst, period } => {
+                    out.push((i / (*burst).max(1)) as f64 * period);
                 }
             }
         }
@@ -62,5 +69,23 @@ mod tests {
         let mut rng = Pcg::new(2);
         let ts = Arrival::Uniform { gap: 0.5 }.schedule(4, &mut rng);
         assert_eq!(ts, vec![0.0, 0.5, 1.0, 1.5]);
+    }
+
+    #[test]
+    fn bursty_groups_arrivals_into_waves() {
+        let mut rng = Pcg::new(3);
+        let ts = Arrival::Bursty {
+            burst: 3,
+            period: 2.0,
+        }
+        .schedule(7, &mut rng);
+        assert_eq!(ts, vec![0.0, 0.0, 0.0, 2.0, 2.0, 2.0, 4.0]);
+        // degenerate burst size is clamped, not a divide-by-zero
+        let ts = Arrival::Bursty {
+            burst: 0,
+            period: 1.0,
+        }
+        .schedule(3, &mut rng);
+        assert_eq!(ts, vec![0.0, 1.0, 2.0]);
     }
 }

@@ -214,6 +214,7 @@ fn cached_pool_matches_uncached_pool_token_for_token() {
             batch_wait: Duration::from_millis(2),
             queue_cap: 64,
             cache,
+            ..PoolOptions::default()
         };
         let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
         let rxs: Vec<_> = ps

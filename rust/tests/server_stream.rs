@@ -1,0 +1,249 @@
+//! Server robustness integration tests: hostile and unlucky clients over
+//! real TCP — malformed payloads, oversized lines, spent deadlines, and
+//! mid-stream disconnects — must never take down the front end or leak
+//! decode capacity.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use dapd::coordinator::Coordinator;
+use dapd::decode::{DecodeConfig, Method};
+use dapd::runtime::MockModel;
+use dapd::server::{Client, DrainHandle, Server, ServerOptions};
+use dapd::util::json::Json;
+
+struct Harness {
+    addr: String,
+    coord: Coordinator,
+    drain: DrainHandle,
+    server: std::thread::JoinHandle<()>,
+    worker: std::thread::JoinHandle<()>,
+}
+
+fn boot(m: MockModel, opts: ServerOptions) -> Harness {
+    let (coord, worker) = Coordinator::start(m, Duration::ZERO, 64);
+    let server = Server::bind_with(
+        "127.0.0.1:0",
+        coord.clone(),
+        DecodeConfig::new(Method::FastDllm),
+        opts,
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let drain = server.drain_handle().unwrap();
+    let sh = std::thread::spawn(move || server.run().unwrap());
+    Harness {
+        addr,
+        coord,
+        drain,
+        server: sh,
+        worker,
+    }
+}
+
+impl Harness {
+    fn stop(self) {
+        self.drain.drain();
+        self.server.join().unwrap();
+        self.worker.join().unwrap();
+    }
+}
+
+/// Raw socket access for sending bytes `Client` refuses to produce.
+struct RawConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl RawConn {
+    fn connect(addr: &str) -> RawConn {
+        let s = TcpStream::connect(addr).unwrap();
+        RawConn {
+            reader: BufReader::new(s.try_clone().unwrap()),
+            writer: s,
+        }
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) {
+        self.writer.write_all(bytes).unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn read_json(&mut self) -> Json {
+        let mut line = String::new();
+        assert!(
+            self.reader.read_line(&mut line).unwrap() > 0,
+            "connection closed"
+        );
+        Json::parse(line.trim()).unwrap()
+    }
+}
+
+#[test]
+fn malformed_lines_error_without_killing_the_connection() {
+    let h = boot(MockModel::new(2, 16, 4, 12), ServerOptions::default());
+    let mut c = RawConn::connect(&h.addr);
+
+    c.send_raw(b"this is not json\n");
+    let r = c.read_json();
+    assert_eq!(r.get("ok").as_bool(), Some(false), "{}", r.dump());
+    assert!(r.get("error").as_str().unwrap().contains("bad json"));
+
+    // truncated object
+    c.send_raw(b"{\"prompt\": [1, 2\n");
+    let r = c.read_json();
+    assert_eq!(r.get("ok").as_bool(), Some(false));
+
+    // valid json, but not a valid request
+    c.send_raw(b"{\"metrics\": false}\n");
+    let r = c.read_json();
+    assert_eq!(r.get("ok").as_bool(), Some(false));
+    assert!(r.get("error").as_str().unwrap().contains("prompt"));
+
+    // blank lines are skipped (no reply), and the very same connection
+    // then serves a well-formed decode
+    c.send_raw(b"\n{\"prompt\": [5, 5, 5, 5]}\n");
+    let r = c.read_json();
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{}", r.dump());
+    assert_eq!(r.get("gen").to_i64_vec().unwrap().len(), 12);
+
+    h.stop();
+}
+
+#[test]
+fn oversized_line_is_bounded_refused_and_the_connection_survives() {
+    let h = boot(
+        MockModel::new(2, 16, 4, 12),
+        ServerOptions {
+            max_line_bytes: 4096,
+            ..ServerOptions::default()
+        },
+    );
+    let mut c = RawConn::connect(&h.addr);
+
+    // well past the bound (and past BufReader's internal chunk size, so
+    // the skip-to-newline state carries across fill_buf calls)
+    let mut big = vec![b'x'; 10_000];
+    big.push(b'\n');
+    c.send_raw(&big);
+    let r = c.read_json();
+    assert_eq!(r.get("ok").as_bool(), Some(false), "{}", r.dump());
+    assert!(
+        r.get("error").as_str().unwrap().contains("4096"),
+        "refusal should name the bound: {}",
+        r.dump()
+    );
+
+    // discard state resets between lines: a second oversized line is
+    // refused on its own
+    let mut big = vec![b'y'; 8_000];
+    big.push(b'\n');
+    c.send_raw(&big);
+    let r = c.read_json();
+    assert_eq!(r.get("ok").as_bool(), Some(false));
+
+    // and the same connection still decodes a well-formed request
+    c.send_raw(b"{\"prompt\": [5, 5, 5, 5]}\n");
+    let r = c.read_json();
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{}", r.dump());
+    assert_eq!(r.get("gen").to_i64_vec().unwrap().len(), 12);
+
+    h.stop();
+}
+
+#[test]
+fn zero_deadline_is_refused_before_decode_with_the_expired_flag() {
+    let h = boot(MockModel::new(2, 16, 4, 12), ServerOptions::default());
+    let mut client = Client::connect(&h.addr).unwrap();
+
+    let mut req = Json::obj();
+    req.set("prompt", vec![5i64; 4].into());
+    req.set("deadline_ms", 0i64.into());
+    let r = client.roundtrip(&req).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false), "{}", r.dump());
+    assert_eq!(r.get("expired").as_bool(), Some(true), "{}", r.dump());
+
+    // negative budgets are a request error, not an expiry
+    let mut neg = Json::obj();
+    neg.set("prompt", vec![5i64; 4].into());
+    neg.set("deadline_ms", (-5i64).into());
+    let r = client.roundtrip(&neg).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false));
+    assert_eq!(r.get("expired").as_bool(), None, "{}", r.dump());
+    assert!(r.get("error").as_str().unwrap().contains("deadline_ms"));
+
+    // the shed is visible in metrics and spent zero decode work
+    let mut m = Json::obj();
+    m.set("metrics", true.into());
+    let j = client.roundtrip(&m).unwrap();
+    assert!(j.get("aggregate").get("deadline_dropped").as_i64().unwrap() >= 1);
+    assert_eq!(j.get("inflight").as_i64(), Some(0));
+    assert_eq!(j.get("aggregate").get("requests").as_i64(), Some(0));
+
+    // a request with budget still decodes on the same connection
+    let mut ok = Json::obj();
+    ok.set("prompt", vec![5i64; 4].into());
+    ok.set("deadline_ms", 60_000i64.into());
+    let r = client.roundtrip(&ok).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{}", r.dump());
+    assert_eq!(r.get("gen").to_i64_vec().unwrap().len(), 12);
+
+    h.stop();
+}
+
+#[test]
+fn server_default_deadline_applies_when_the_request_omits_one() {
+    let h = boot(
+        MockModel::new(2, 16, 4, 12),
+        ServerOptions {
+            default_deadline: Some(Duration::ZERO),
+            ..ServerOptions::default()
+        },
+    );
+    let mut client = Client::connect(&h.addr).unwrap();
+
+    let mut req = Json::obj();
+    req.set("prompt", vec![5i64; 4].into());
+    let r = client.roundtrip(&req).unwrap();
+    assert_eq!(r.get("expired").as_bool(), Some(true), "{}", r.dump());
+
+    // an explicit per-request budget overrides the server default
+    req.set("deadline_ms", 60_000i64.into());
+    let r = client.roundtrip(&req).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{}", r.dump());
+
+    h.stop();
+}
+
+#[test]
+fn mid_stream_disconnect_reaps_the_slot_and_capacity_recovers() {
+    // long generation => many decode steps, so the disconnect lands
+    // mid-decode rather than after the fact
+    let h = boot(MockModel::new(2, 96, 4, 32), ServerOptions::default());
+    {
+        let mut client = Client::connect(&h.addr).unwrap();
+        let mut req = Json::obj();
+        req.set("prompt", vec![5i64; 4].into());
+        req.set("stream", true.into());
+        client.send(&req).unwrap();
+        // drop without reading a single frame: the relay's write fails,
+        // the receiver drops, and the worker reaps the slot at its next
+        // commit (or the decode finishes into a dead socket — either way
+        // the request must leave the in-flight set)
+    }
+    let t0 = Instant::now();
+    while h.coord.inflight() != 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "in-flight count never drained after client disconnect"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // the freed capacity serves a fresh connection in full
+    let mut client = Client::connect(&h.addr).unwrap();
+    let r = client.request(&[5; 4], None).unwrap();
+    assert_eq!(r.get("gen").to_i64_vec().unwrap().len(), 92);
+
+    h.stop();
+}
