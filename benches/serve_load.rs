@@ -14,6 +14,9 @@
 //!   DAPD_BENCH_WRITE=1     regenerate the baseline from this run and exit
 //!   DAPD_BENCH_JSON=f      also write this run's summary to `f` (artifact)
 //!   DAPD_SERVE_N=n         requests to drive (default 48)
+//!   DAPD_TRACE_OVERHEAD_MAX=x  allowed steps/s cost of tracing relative
+//!                          to the untraced run (default 0.05; CI widens
+//!                          it like the noise band — shared runners)
 
 use std::time::{Duration, Instant};
 
@@ -74,7 +77,7 @@ impl Measured {
 }
 
 /// Drive the bursty workload through a cached 2-worker pool.
-fn run_load(n: usize) -> Measured {
+fn run_load(n: usize, trace: bool) -> Measured {
     let pool = ModelPool::mock(MockModel::new(4, 68, 28, 92));
     let opts = PoolOptions {
         workers: 2,
@@ -84,6 +87,7 @@ fn run_load(n: usize) -> Measured {
             enabled: true,
             ..CacheConfig::default()
         },
+        trace,
         ..PoolOptions::default()
     };
     let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
@@ -260,7 +264,11 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(0.5);
 
-    let m = run_load(n);
+    let m = run_load(n, false);
+    // same workload with decode-path tracing on: the overhead of the
+    // ring-buffer recording relative to the untraced run
+    let traced = run_load(n, true);
+    let trace_overhead = 1.0 - traced.steps_per_s / m.steps_per_s;
 
     let mut t = Table::new(
         &format!("Serving load summary (bursty open loop, n={n}, 2 workers)"),
@@ -276,9 +284,18 @@ fn main() {
     for (op, us) in &m.kernels {
         t.row(vec![format!("kernel {op} (us/call)"), fmt_f(*us, 3)]);
     }
+    t.row(vec!["steps/s (traced)".into(), fmt_f(traced.steps_per_s, 1)]);
+    t.row(vec![
+        "trace overhead".into(),
+        format!("{:.1}%", trace_overhead * 100.0),
+    ]);
     t.print();
 
-    let summary = m.to_json();
+    let mut summary = m.to_json();
+    let mut obs = Json::obj();
+    obs.set("steps_per_s_traced", traced.steps_per_s.into());
+    obs.set("trace_overhead_frac", trace_overhead.into());
+    summary.set("obs", obs);
     if let Ok(path) = std::env::var("DAPD_BENCH_JSON") {
         match std::fs::write(&path, summary.dump_pretty()) {
             Ok(()) => println!("wrote JSON summary to {path}"),
@@ -352,6 +369,20 @@ fn main() {
             false,
         );
     }
+
+    // tracing must stay close to free even when enabled (the disabled
+    // path is gated by the zero-alloc test; this bounds the enabled one)
+    let max_overhead: f64 = std::env::var("DAPD_TRACE_OVERHEAD_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.05);
+    assert!(
+        trace_overhead <= max_overhead,
+        "tracing cost {:.1}% of steps/s (allowed {:.1}%; widen via \
+         DAPD_TRACE_OVERHEAD_MAX on noisy runners)",
+        trace_overhead * 100.0,
+        max_overhead * 100.0
+    );
 
     assert!(gate.checked > 0, "baseline {baseline_path} gated nothing");
     if gate.regressions.is_empty() {

@@ -108,7 +108,7 @@ fn paper_table(engine: dapd::runtime::Engine) {
             tokens += resp.gen.len();
         }
         let wall = t0.elapsed().as_secs_f64();
-        let (_, p95) = coord.metrics.latency_p50_p95();
+        let (_, p95, _) = coord.metrics.latency_percentiles();
         t.row(vec![
             method.name().into(),
             fmt_f(100.0 * acc / n as f64, 1),

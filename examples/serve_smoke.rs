@@ -6,7 +6,12 @@
 //!   2. overload — a bursty workload far above capacity is shed with fast
 //!      typed refusals while every *accepted* request completes within
 //!      the latency SLO;
-//!   3. graceful drain — `{"drain": true}` refuses new work and loses
+//!   3. observability — `{"prometheus": true}` returns a well-formed
+//!      exposition covering the served traffic, and `{"trace": true}`
+//!      drains a Chrome trace with request spans, every decode stage,
+//!      and per-step commit-width counters (written to the path in
+//!      `DAPD_SMOKE_TRACE` for artifact upload);
+//!   4. graceful drain — `{"drain": true}` refuses new work and loses
 //!      zero accepted requests.
 //!
 //!     cargo run --release --example serve_smoke            # self-boot
@@ -19,10 +24,17 @@
 //!   --total N / --burst N / --period-ms X   overload shape (64 / 32 / 50)
 //!   DAPD_SMOKE_SLO_MS    p99 SLO for accepted requests (default 5000)
 //!   DAPD_SMOKE_JSON=f    write the latency/shed summary to `f`
+//!   DAPD_SMOKE_TRACE=f   write the drained Chrome trace JSON to `f`
+//!
+//! The self-booted server runs with tracing and the cache on (so the
+//! graph stage appears in the trace); an external server needs
+//! `--trace --cache` for the trace phase to assert (without `--trace` it
+//! is reported as skipped).
 
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+use dapd::cache::CacheConfig;
 use dapd::coordinator::{Coordinator, CoordinatorHandle, PoolOptions};
 use dapd::decode::{DecodeConfig, Method};
 use dapd::runtime::{MockModel, ModelPool};
@@ -139,6 +151,99 @@ fn check_identity(addr: &str) -> Result<()> {
     Ok(())
 }
 
+/// Phase 3: the observability endpoints over the traffic phases 1-2
+/// generated.  Prometheus must expose the served requests; the trace
+/// drain must parse as Chrome trace JSON carrying request spans, every
+/// decode stage, and per-step commit-width counters.
+fn check_observability(addr: &str) -> Result<()> {
+    let mut client = Client::connect(addr)?;
+
+    let mut preq = Json::obj();
+    preq.set("prometheus", true.into());
+    let p = client.roundtrip(&preq)?;
+    if p.get("ok").as_bool() != Some(true) {
+        bail!("observability: prometheus request refused: {}", p.dump());
+    }
+    let text = p
+        .get("text")
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("prometheus reply without text"))?;
+    for needle in [
+        "# TYPE dapd_requests counter",
+        "dapd_requests{worker=\"all\"}",
+        "# TYPE dapd_stage_duration_seconds histogram",
+        "dapd_inflight",
+    ] {
+        if !text.contains(needle) {
+            bail!("observability: exposition missing `{needle}`");
+        }
+    }
+    println!(
+        "phase 3 observability: prometheus exposition ok ({} lines)",
+        text.lines().count()
+    );
+
+    let mut treq = Json::obj();
+    treq.set("trace", true.into());
+    let t = client.roundtrip(&treq)?;
+    if t.get("ok").as_bool() != Some(true) {
+        bail!("observability: trace request refused: {}", t.dump());
+    }
+    if t.get("enabled").as_bool() != Some(true) {
+        println!(
+            "phase 3 observability: tracing disabled on the server \
+             (boot with --trace); trace assertions skipped"
+        );
+        return Ok(());
+    }
+    let chrome = t.get("trace");
+    // must survive a JSON round-trip (what chrome://tracing would load)
+    let rt = Json::parse(&chrome.dump())
+        .map_err(|e| anyhow::anyhow!("trace is not valid JSON: {e}"))?;
+    let evs = rt
+        .get("traceEvents")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("trace without traceEvents"))?;
+    let count = |name: &str| {
+        evs.iter()
+            .filter(|e| e.get("name").as_str() == Some(name))
+            .count()
+    };
+    for name in [
+        "request",
+        "queue_wait",
+        "forward",
+        "feature",
+        "graph",
+        "select",
+        "commit",
+        "decode_step",
+    ] {
+        if count(name) == 0 {
+            bail!("observability: trace has no `{name}` events");
+        }
+    }
+    let committed = evs.iter().any(|e| {
+        e.get("name").as_str() == Some("decode_step")
+            && e.get("args").get("committed").as_i64().unwrap_or(0) >= 1
+    });
+    if !committed {
+        bail!("observability: no decode_step event carries a commit width");
+    }
+    println!(
+        "phase 3 observability: trace ok ({} events; {} request spans, \
+         {} decode steps)",
+        evs.len(),
+        count("request"),
+        count("decode_step")
+    );
+    if let Ok(path) = std::env::var("DAPD_SMOKE_TRACE") {
+        std::fs::write(&path, rt.dump_pretty())?;
+        println!("wrote Chrome trace to {path}");
+    }
+    Ok(())
+}
+
 /// Fire `n` requests on the given arrival schedule, one thread each.
 fn drive(addr: &str, times: &[f64]) -> Vec<Outcome> {
     let t0 = Instant::now();
@@ -180,6 +285,11 @@ fn main() -> Result<()> {
                 batch_wait: Duration::from_millis(2),
                 queue_cap: 4,
                 max_inflight: 4,
+                cache: CacheConfig {
+                    enabled: true,
+                    ..CacheConfig::default()
+                },
+                trace: true,
                 ..PoolOptions::default()
             };
             let (coord, handles) = Coordinator::start_pool(&pool, &opts)?;
@@ -248,7 +358,10 @@ fn main() -> Result<()> {
         );
     }
 
-    // ---- phase 3: graceful drain loses nothing -------------------------
+    // ---- phase 3: observability endpoints ------------------------------
+    check_observability(&addr)?;
+
+    // ---- phase 4: graceful drain loses nothing -------------------------
     let drain_wave: Vec<f64> = vec![0.0; 8];
     let t0 = Instant::now();
     let workers: Vec<_> = drain_wave
@@ -277,14 +390,14 @@ fn main() -> Result<()> {
         }
     }
     println!(
-        "phase 3 drain: {drain_ok} completed, {drain_refused} refused-typed, \
+        "phase 4 drain: {drain_ok} completed, {drain_refused} refused-typed, \
          {} lost (drain took {:.0}ms)",
         drain_lost.len(),
         t0.elapsed().as_secs_f64() * 1e3
     );
     if !drain_lost.is_empty() {
         bail!(
-            "phase 3: drain lost {} accepted/at-flight request(s), e.g. {}",
+            "phase 4: drain lost {} accepted/at-flight request(s), e.g. {}",
             drain_lost.len(),
             drain_lost[0]
         );
@@ -292,8 +405,8 @@ fn main() -> Result<()> {
     // post-drain, no new work may be accepted (refusal, closed connection,
     // or — once the process exits — connection refused are all fine)
     match one_request(&addr) {
-        Outcome::Accepted { .. } => bail!("phase 3: server accepted work after drain"),
-        _ => println!("phase 3: post-drain request correctly not served"),
+        Outcome::Accepted { .. } => bail!("phase 4: server accepted work after drain"),
+        _ => println!("phase 4: post-drain request correctly not served"),
     }
 
     if let Some((sh, handles)) = local {
@@ -320,6 +433,9 @@ fn main() -> Result<()> {
         std::fs::write(&path, out.dump_pretty())?;
         println!("wrote smoke summary to {path}");
     }
-    println!("serve smoke passed: identity + overload shedding + zero-loss drain");
+    println!(
+        "serve smoke passed: identity + overload shedding + observability + \
+         zero-loss drain"
+    );
     Ok(())
 }

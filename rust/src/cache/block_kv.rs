@@ -75,6 +75,18 @@ pub enum StepSource {
     PrefixOnly,
 }
 
+impl StepSource {
+    /// Stable lowercase tag for traces and logs.
+    pub fn label(self) -> &'static str {
+        match self {
+            StepSource::Full => "full",
+            StepSource::Windowed => "windowed",
+            StepSource::Frozen => "frozen",
+            StepSource::PrefixOnly => "prefix_only",
+        }
+    }
+}
+
 /// Frozen-snapshot forward cache; see the module docs.
 pub struct ForwardCache {
     refresh_every: usize,

@@ -14,7 +14,8 @@
 //!   "tau_min": 0.01, "tau_max": 0.15,
 //!   "cache_enabled": true, "refresh_every": 4,
 //!   "cache_epsilon": 0.0, "prefix_lru_cap": 64,
-//!   "feature_threads": 1, "kernels": "native"
+//!   "feature_threads": 1, "kernels": "native",
+//!   "trace": false, "trace_out": "trace.json"
 //! }
 //! ```
 //!
@@ -38,6 +39,11 @@
 //! end-to-end concurrency, default a per-request latency budget
 //! (0 = none), cap request line size, and bound the graceful-drain
 //! wait on stop.
+//! `trace` (CLI: `--trace`/`--no-trace`; env default `DAPD_TRACE=1`)
+//! starts the pool with decode-path tracing enabled — bounded
+//! per-worker rings drained as Chrome trace JSON by the
+//! `{"trace": true}` request; `trace_out` (CLI: `--trace-out`) also
+//! dumps whatever is still buffered to a file on graceful drain.
 
 use anyhow::{anyhow, Context, Result};
 
@@ -91,6 +97,22 @@ pub struct ServeSettings {
     /// kernel backend pin for the vocab-width step math; `None` defers
     /// to `DAPD_KERNELS` / runtime CPU detection
     pub kernels: Option<KernelBackend>,
+    /// start the pool with decode-path tracing on (`--trace`; defaults
+    /// from `DAPD_TRACE`); off, tracing costs one atomic load per probe
+    pub trace: bool,
+    /// file to dump still-buffered trace events to (as Chrome trace
+    /// JSON) on graceful drain (`--trace-out`; implies nothing when
+    /// tracing is off)
+    pub trace_out: Option<String>,
+}
+
+/// `DAPD_TRACE=1` (or `true`) turns tracing on for deployments that
+/// cannot pass flags; the config key and `--trace`/`--no-trace` win.
+fn env_trace_default() -> bool {
+    matches!(
+        std::env::var("DAPD_TRACE").as_deref(),
+        Ok("1") | Ok("true")
+    )
 }
 
 impl Default for ServeSettings {
@@ -117,6 +139,8 @@ impl Default for ServeSettings {
             prefix_lru_cap: CacheConfig::default().prefix_lru_cap,
             feature_threads: 1,
             kernels: None,
+            trace: env_trace_default(),
+            trace_out: None,
         }
     }
 }
@@ -196,6 +220,12 @@ impl ServeSettings {
         if let Some(v) = j.get("kernels").as_str() {
             self.kernels = Some(parse_kernels(v)?);
         }
+        if let Some(v) = j.get("trace").as_bool() {
+            self.trace = v;
+        }
+        if let Some(v) = j.get("trace_out").as_str() {
+            self.trace_out = Some(v.into());
+        }
         let p = &mut self.params;
         if let Some(v) = j.get("conf_threshold").as_f64() {
             p.conf_threshold = v as f32;
@@ -254,6 +284,16 @@ impl ServeSettings {
         self.feature_threads = args.usize_or("feature-threads", self.feature_threads);
         if let Some(v) = args.get("kernels") {
             self.kernels = Some(parse_kernels(v)?);
+        }
+        if args.has("trace") {
+            self.trace = true;
+        }
+        // flags override config/env in both directions; --no-trace wins
+        if args.has("no-trace") {
+            self.trace = false;
+        }
+        if let Some(v) = args.get("trace-out") {
+            self.trace_out = Some(v.into());
         }
         let p = &mut self.params;
         p.conf_threshold = args.f64_or("conf-threshold", p.conf_threshold as f64) as f32;
@@ -576,6 +616,34 @@ mod tests {
             ServeSettings::resolve(&args(&["--max-line-bytes", "10"])).unwrap_err()
         );
         assert!(err.contains("max_line_bytes must be >= 1024"));
+    }
+
+    #[test]
+    fn trace_settings_resolve_from_file_and_flags() {
+        // flag turns tracing on; untested env default stays whatever the
+        // harness environment says (tests must not mutate process env)
+        let s = ServeSettings::resolve(&args(&["--trace"])).unwrap();
+        assert!(s.trace);
+        assert_eq!(s.trace_out, None);
+        let s = ServeSettings::resolve(&args(&["--trace", "--trace-out", "t.json"])).unwrap();
+        assert!(s.trace);
+        assert_eq!(s.trace_out.as_deref(), Some("t.json"));
+
+        let dir = std::env::temp_dir().join("dapd_cfg_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"trace": true, "trace_out": "file.json"}"#).unwrap();
+        let s = ServeSettings::resolve(&args(&["--config", path.to_str().unwrap()])).unwrap();
+        assert!(s.trace);
+        assert_eq!(s.trace_out.as_deref(), Some("file.json"));
+        // --no-trace overrides a file that enabled tracing
+        let s = ServeSettings::resolve(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--no-trace",
+        ]))
+        .unwrap();
+        assert!(!s.trace);
     }
 
     #[test]

@@ -7,6 +7,7 @@ use std::time::Duration;
 
 use crate::cache::CacheStats;
 use crate::decode::StepTimings;
+use crate::obs::{Stage, StageHists};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -53,6 +54,9 @@ pub struct Metrics {
     /// individual edges flipped by delta updates (what `cache_epsilon`
     /// suppresses — the signal for tuning that knob)
     pub graph_pairs_toggled: AtomicU64,
+    /// step pipeline: wall-clock in the model forward (incl. the cache
+    /// layer's windowed/frozen fast paths)
+    pub forward_ns: AtomicU64,
     /// step pipeline: wall-clock in board-level feature derivation
     pub feature_ns: AtomicU64,
     /// step pipeline: wall-clock in cache-layer graph maintenance
@@ -60,9 +64,14 @@ pub struct Metrics {
     /// step pipeline: wall-clock in strategy selection (includes the
     /// uncached DAPD graph rebuild)
     pub select_ns: AtomicU64,
+    /// step pipeline: wall-clock committing selected tokens
+    pub commit_ns: AtomicU64,
     latency: Mutex<Summary>,
     steps: Mutex<Summary>,
     batch_sizes: Mutex<Summary>,
+    /// log-bucketed per-stage duration distributions (the `*_ns` sums
+    /// above only carry totals); drained by the Prometheus exposition
+    stage_hists: Mutex<StageHists>,
 }
 
 impl Metrics {
@@ -115,13 +124,34 @@ impl Metrics {
     }
 
     /// Fold a decode session's step-pipeline phase timings into the
-    /// metrics (`feature_ns` / `graph_build_ns` / `select_ns` in the
-    /// metrics endpoint).
+    /// metrics (`forward_ns` / `feature_ns` / `graph_build_ns` /
+    /// `select_ns` / `commit_ns` in the metrics endpoint).
     pub fn record_step_timings(&self, t: &StepTimings) {
+        self.forward_ns.fetch_add(t.forward_ns, Ordering::Relaxed);
         self.feature_ns.fetch_add(t.feature_ns, Ordering::Relaxed);
         self.graph_build_ns
             .fetch_add(t.graph_build_ns, Ordering::Relaxed);
         self.select_ns.fetch_add(t.select_ns, Ordering::Relaxed);
+        self.commit_ns.fetch_add(t.commit_ns, Ordering::Relaxed);
+    }
+
+    /// Fold a decode session's per-stage duration histograms into the
+    /// metrics.
+    pub fn record_stage_hists(&self, h: &StageHists) {
+        self.stage_hists.lock().unwrap().merge(h);
+    }
+
+    /// One request's submit-to-adoption queue wait.
+    pub fn record_queue_wait(&self, wait: Duration) {
+        self.stage_hists
+            .lock()
+            .unwrap()
+            .record_secs(Stage::QueueWait, wait.as_secs_f64());
+    }
+
+    /// Snapshot of the per-stage duration histograms.
+    pub fn stage_hists(&self) -> StageHists {
+        self.stage_hists.lock().unwrap().clone()
     }
 
     /// Fraction of per-position forward compute actually executed
@@ -144,11 +174,6 @@ impl Metrics {
             return 0.0;
         }
         self.tokens_out.load(Ordering::Relaxed) as f64 / busy
-    }
-
-    pub fn latency_p50_p95(&self) -> (f64, f64) {
-        let l = self.latency.lock().unwrap();
-        (l.p50(), l.p95())
     }
 
     /// Request latency percentiles (p50, p95, p99) in seconds.
@@ -255,6 +280,10 @@ impl Metrics {
             (self.graph_pairs_toggled.load(Ordering::Relaxed) as i64).into(),
         );
         j.set(
+            "forward_ns",
+            (self.forward_ns.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
             "feature_ns",
             (self.feature_ns.load(Ordering::Relaxed) as i64).into(),
         );
@@ -265,6 +294,10 @@ impl Metrics {
         j.set(
             "select_ns",
             (self.select_ns.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "commit_ns",
+            (self.commit_ns.load(Ordering::Relaxed) as i64).into(),
         );
         j
     }
@@ -289,11 +322,15 @@ impl Metrics {
             self.deadline_dropped.load(Ordering::Relaxed),
             self.cancelled.load(Ordering::Relaxed),
         );
-        let reused = self.cache_window_forwards.load(Ordering::Relaxed)
+        // any cache-layer activity (full refreshes included) surfaces
+        // the cache line: a cache running all-full-forwards is exactly
+        // the degenerate state worth seeing
+        let cache_active = self.cache_full_forwards.load(Ordering::Relaxed)
+            + self.cache_window_forwards.load(Ordering::Relaxed)
             + self.cache_prefix_steps.load(Ordering::Relaxed)
             + self.cache_prefix_rows_spliced.load(Ordering::Relaxed)
             + self.cache_frozen_steps.load(Ordering::Relaxed);
-        if reused > 0 {
+        if cache_active > 0 {
             out.push_str(&format!(
                 " cache[full={} window={} prefix_steps={} spliced_rows={} \
                  frozen={} compute_frac={:.2}]",
@@ -323,7 +360,7 @@ mod tests {
         assert!((m.mean_steps() - 15.0).abs() < 1e-9);
         assert!((m.tps() - 200.0).abs() < 1.0);
         assert!((m.mean_batch_size() - 2.0).abs() < 1e-9);
-        let (p50, p95) = m.latency_p50_p95();
+        let (p50, p95, _p99) = m.latency_percentiles();
         assert!(p50 >= 0.1 && p95 <= 0.3 + 1e-9);
         assert!(m.report().contains("requests=2"));
     }
@@ -378,19 +415,60 @@ mod tests {
     fn step_timings_fold_into_json() {
         let m = Metrics::new();
         m.record_step_timings(&StepTimings {
+            forward_ns: 900,
             feature_ns: 120,
             graph_build_ns: 40,
             select_ns: 60,
+            commit_ns: 15,
         });
         m.record_step_timings(&StepTimings {
+            forward_ns: 100,
             feature_ns: 30,
             graph_build_ns: 0,
             select_ns: 10,
+            commit_ns: 5,
         });
         let j = m.to_json();
+        assert_eq!(j.get("forward_ns").as_i64(), Some(1000));
         assert_eq!(j.get("feature_ns").as_i64(), Some(150));
         assert_eq!(j.get("graph_build_ns").as_i64(), Some(40));
         assert_eq!(j.get("select_ns").as_i64(), Some(70));
+        assert_eq!(j.get("commit_ns").as_i64(), Some(20));
+    }
+
+    #[test]
+    fn stage_hists_fold_and_snapshot() {
+        let m = Metrics::new();
+        assert_eq!(m.stage_hists().total(), 0);
+        let mut h = StageHists::new();
+        h.record_ns(Stage::Forward, 2_000_000);
+        h.record_ns(Stage::Select, 10_000);
+        m.record_stage_hists(&h);
+        m.record_stage_hists(&h);
+        m.record_queue_wait(Duration::from_millis(3));
+        let snap = m.stage_hists();
+        assert_eq!(snap.get(Stage::Forward).total, 2);
+        assert_eq!(snap.get(Stage::Select).total, 2);
+        assert_eq!(snap.get(Stage::QueueWait).total, 1);
+        assert!((snap.sum_secs(Stage::QueueWait) - 0.003).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_shows_cache_line_for_full_only_traffic() {
+        // refresh_every=1 (or a cold cache) runs nothing but full
+        // forwards; the cache line must still appear
+        let m = Metrics::new();
+        m.record_cache(&CacheStats {
+            full_forwards: 5,
+            positions_computed: 20,
+            positions_total: 20,
+            ..CacheStats::default()
+        });
+        assert!(
+            m.report().contains("cache[full=5"),
+            "full-only cache traffic must surface the cache line: {}",
+            m.report()
+        );
     }
 
     #[test]

@@ -41,6 +41,15 @@
 //! the backward-compatible endpoint) and into a per-worker `Metrics` for
 //! the breakdown (`worker_metrics`, surfaced by the server's metrics
 //! request and the periodic report).
+//!
+//! Observability: the pool owns one [`Tracing`] instance with a ring
+//! lane per worker plus a coordinator lane.  Admission instants are
+//! recorded at submit, queue-wait spans and whole-request spans in the
+//! worker loop, and each worker's `SlotBatch` gets a recorder for the
+//! step-stage spans — all no-ops behind one relaxed atomic when tracing
+//! is off (`PoolOptions::trace`, the default).  The always-on stage
+//! histograms fold into the metrics at session end next to the phase
+//! timings.
 
 pub mod metrics;
 
@@ -55,6 +64,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::cache::{CacheConfig, FirstStepRows, PrefixCache, PrefixHandle};
 use crate::decode::{DecodeConfig, SlotBatch};
+use crate::obs::trace::DEFAULT_TRACE_CAPACITY;
+use crate::obs::{TraceRecorder, Tracing};
 use crate::runtime::{ForwardModel, ModelPool};
 use crate::util::logging;
 use crate::util::{fnv1a, FNV_OFFSET};
@@ -258,6 +269,9 @@ pub struct PoolOptions {
     /// compute-reuse subsystem (block-wise cached forwards, incremental
     /// dependency graphs, cross-request prefix cache)
     pub cache: CacheConfig,
+    /// start with decode-path tracing enabled (`--trace`); off by
+    /// default, where every trace site is one relaxed atomic load
+    pub trace: bool,
 }
 
 impl Default for PoolOptions {
@@ -268,6 +282,7 @@ impl Default for PoolOptions {
             queue_cap: 256,
             max_inflight: 0,
             cache: CacheConfig::default(),
+            trace: false,
         }
     }
 }
@@ -307,6 +322,8 @@ pub struct Coordinator {
     cache_cfg: CacheConfig,
     /// shared cross-request prefix cache (when the cache is enabled)
     prefix: Option<PrefixHandle>,
+    /// decode-path trace rings: one lane per worker + a coordinator lane
+    tracing: Arc<Tracing>,
 }
 
 impl Coordinator {
@@ -316,6 +333,7 @@ impl Coordinator {
         cache_cfg: CacheConfig,
         prefix: Option<PrefixHandle>,
         max_inflight: usize,
+        trace: bool,
     ) -> Coordinator {
         Coordinator {
             queue: Arc::new(Queue {
@@ -334,6 +352,7 @@ impl Coordinator {
             max_inflight,
             cache_cfg,
             prefix,
+            tracing: Tracing::new(workers + 1, DEFAULT_TRACE_CAPACITY, trace),
         }
     }
 
@@ -349,6 +368,7 @@ impl Coordinator {
         let pending = Arc::clone(&self.pending);
         let cache_cfg = self.cache_cfg.clone();
         let prefix = self.prefix.clone();
+        let trace = self.tracing.recorder(worker_id);
         std::thread::Builder::new()
             .name(format!("dapd-infer-{worker_id}"))
             .spawn(move || {
@@ -362,6 +382,7 @@ impl Coordinator {
                     batch_wait,
                     cache_cfg,
                     prefix,
+                    trace,
                 )
             })
             .expect("spawn inference worker")
@@ -378,7 +399,7 @@ impl Coordinator {
     where
         M: ForwardModel + Send + 'static,
     {
-        let coord = Coordinator::with_capacity(queue_cap, 1, CacheConfig::default(), None, 0);
+        let coord = Coordinator::with_capacity(queue_cap, 1, CacheConfig::default(), None, 0, false);
         let handle = coord.spawn_worker(0, Box::new(model), batch_wait);
         (coord, handle)
     }
@@ -412,6 +433,7 @@ impl Coordinator {
             opts.cache.clone(),
             prefix,
             opts.max_inflight,
+            opts.trace,
         );
         let mut handles = Vec::with_capacity(opts.workers);
         for w in 0..opts.workers {
@@ -494,6 +516,7 @@ impl Coordinator {
             .prefix
             .as_ref()
             .map(|h| PrefixCache::key(h.model_salt, &prompt));
+        let ticket;
         {
             let mut st = self.queue.state.lock().unwrap();
             if st.closed {
@@ -517,6 +540,7 @@ impl Coordinator {
                 _ => None,
             };
             self.pending.fetch_add(1, Ordering::Relaxed);
+            ticket = self.seq.fetch_add(1, Ordering::Relaxed);
             st.push(Request {
                 prompt,
                 cfg,
@@ -524,12 +548,19 @@ impl Coordinator {
                 deadline,
                 reply,
                 group,
-                seq: self.seq.fetch_add(1, Ordering::Relaxed),
+                seq: ticket,
                 prefill,
             });
             self.metrics
                 .queue_depth
                 .store(st.total as u64, Ordering::Relaxed);
+        }
+        // admission instant on the coordinator lane (the last ring); the
+        // same ticket labels the queue-wait and request spans later
+        if self.tracing.is_enabled() {
+            self.tracing
+                .recorder(self.tracing.lane_count() - 1)
+                .admission(ticket);
         }
         self.queue.available.notify_one();
         Ok(())
@@ -558,6 +589,13 @@ impl Coordinator {
         &self.worker_metrics
     }
 
+    /// The pool's decode-path trace rings (drain via
+    /// [`Tracing::drain_chrome`]; the server's `{"trace": true}` request
+    /// and `--trace-out` both go through this).
+    pub fn tracing(&self) -> &Arc<Tracing> {
+        &self.tracing
+    }
+
     /// The shared cross-request prefix cache, when enabled.
     pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
         self.prefix.as_ref().map(|h| &h.cache)
@@ -578,6 +616,9 @@ impl Coordinator {
 struct InFlight {
     reply: Reply,
     submitted: Instant,
+    /// global submit sequence number — the trace ticket linking this
+    /// request's admission, queue-wait, and request spans
+    seq: u64,
 }
 
 /// Deadline screen at queue-pop time: pass unexpired requests through,
@@ -615,6 +656,7 @@ fn admit_request(
     global: &Metrics,
     local: &Metrics,
     pending: &AtomicU64,
+    trace: &TraceRecorder,
     req: Request,
 ) {
     *ticket += 1;
@@ -623,8 +665,14 @@ fn admit_request(
         reply,
         submitted,
         prefill,
+        seq,
         ..
     } = req;
+    // adoption ends the queue wait: histogram it (always-on) and span it
+    let wait = submitted.elapsed();
+    global.record_queue_wait(wait);
+    local.record_queue_wait(wait);
+    trace.queue_wait(seq, wait.as_nanos() as u64);
     // streamed requests need the board's per-step commit log; enabling it
     // is idempotent and scoped to this worker's current batch
     if matches!(reply, Reply::Stream(_)) {
@@ -633,7 +681,7 @@ fn admit_request(
     // the prefix cache was consulted at submit time; hand the rows over
     match batch.admit_prefetched(*ticket, &prompt, prefill) {
         Ok(_slot) => {
-            inflight.insert(*ticket, InFlight { reply, submitted });
+            inflight.insert(*ticket, InFlight { reply, submitted, seq });
         }
         Err(e) => {
             logging::info(&format!("worker {worker_id}: rejected admit: {e:#}"));
@@ -661,6 +709,7 @@ fn worker_loop(
     batch_wait: Duration,
     cache_cfg: CacheConfig,
     prefix: Option<PrefixHandle>,
+    trace: TraceRecorder,
 ) {
     let model: &dyn ForwardModel = model.as_ref();
     let mut ticket = 0u64;
@@ -704,6 +753,7 @@ fn worker_loop(
                 continue;
             }
         };
+        batch.attach_trace(trace.clone());
         let mut inflight: HashMap<u64, InFlight> = HashMap::new();
         admit_request(
             worker_id,
@@ -713,6 +763,7 @@ fn worker_loop(
             &global,
             &local,
             &pending,
+            &trace,
             first,
         );
 
@@ -734,6 +785,7 @@ fn worker_loop(
                         &global,
                         &local,
                         &pending,
+                        &trace,
                         req,
                     );
                 }
@@ -788,6 +840,7 @@ fn worker_loop(
                     for (id, out) in finished {
                         let Some(fl) = inflight.remove(&id) else { continue };
                         let latency = fl.submitted.elapsed();
+                        trace.request(fl.seq, latency.as_nanos() as u64);
                         session_reqs += 1;
                         session_tokens += out.gen.len();
                         global.record_request(latency, out.steps);
@@ -839,6 +892,7 @@ fn worker_loop(
                         &global,
                         &local,
                         &pending,
+                        &trace,
                         req,
                     );
                 }
@@ -858,6 +912,9 @@ fn worker_loop(
         let timings = batch.timings();
         global.record_step_timings(&timings);
         local.record_step_timings(&timings);
+        let hists = batch.stage_hists();
+        global.record_stage_hists(hists);
+        local.record_stage_hists(hists);
     }
 }
 
@@ -962,6 +1019,53 @@ mod tests {
     }
 
     #[test]
+    fn traced_pool_records_request_lifecycle() {
+        use crate::obs::Stage;
+        let pool = ModelPool::mock(MockModel::new(2, 16, 4, 12));
+        let opts = PoolOptions {
+            batch_wait: Duration::ZERO,
+            trace: true,
+            ..PoolOptions::default()
+        };
+        let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
+        coord.call(vec![5; 4], cfg()).unwrap();
+        coord.shutdown();
+        handles.join();
+        let chrome = coord.tracing().drain_chrome();
+        let evs = chrome.get("traceEvents").as_arr().unwrap();
+        let has = |name: &str| evs.iter().any(|e| e.get("name").as_str() == Some(name));
+        for name in [
+            "admission",
+            "queue_wait",
+            "request",
+            "forward",
+            "feature",
+            "select",
+            "commit",
+            "decode_step",
+        ] {
+            assert!(has(name), "missing trace event {name}");
+        }
+        // queue waits also land in the always-on stage histograms
+        assert!(coord.metrics.stage_hists().get(Stage::QueueWait).total >= 1);
+
+        // tracing off (the default): the rings stay empty
+        let opts2 = PoolOptions {
+            batch_wait: Duration::ZERO,
+            ..PoolOptions::default()
+        };
+        let (coord2, handles2) = Coordinator::start_pool(&pool, &opts2).unwrap();
+        coord2.call(vec![5; 4], cfg()).unwrap();
+        coord2.shutdown();
+        handles2.join();
+        assert!(coord2
+            .tracing()
+            .drain()
+            .iter()
+            .all(|(evs, d)| evs.is_empty() && *d == 0));
+    }
+
+    #[test]
     fn zero_queue_cap_is_rejected() {
         let pool = ModelPool::mock(MockModel::new(1, 16, 4, 12));
         let opts = PoolOptions {
@@ -1010,7 +1114,7 @@ mod tests {
 
     #[test]
     fn zero_deadline_rejected_at_submit() {
-        let coord = Coordinator::with_capacity(8, 1, CacheConfig::default(), None, 0);
+        let coord = Coordinator::with_capacity(8, 1, CacheConfig::default(), None, 0, false);
         let opts = SubmitOptions {
             deadline: Some(Duration::ZERO),
         };
@@ -1023,7 +1127,7 @@ mod tests {
     #[test]
     fn max_inflight_cap_sheds_overloaded() {
         // no worker: accepted requests stay in flight, so the cap binds
-        let coord = Coordinator::with_capacity(64, 1, CacheConfig::default(), None, 2);
+        let coord = Coordinator::with_capacity(64, 1, CacheConfig::default(), None, 2, false);
         let _rx1 = coord
             .submit_opts(vec![5; 4], cfg(), SubmitOptions::default())
             .unwrap();
@@ -1047,7 +1151,7 @@ mod tests {
 
     #[test]
     fn expired_queued_request_dropped_before_decode() {
-        let coord = Coordinator::with_capacity(8, 1, CacheConfig::default(), None, 0);
+        let coord = Coordinator::with_capacity(8, 1, CacheConfig::default(), None, 0, false);
         let opts = SubmitOptions {
             deadline: Some(Duration::from_millis(1)),
         };
@@ -1100,7 +1204,7 @@ mod tests {
 
     #[test]
     fn dropped_stream_receiver_cancels_and_frees_capacity() {
-        let coord = Coordinator::with_capacity(8, 1, CacheConfig::default(), None, 0);
+        let coord = Coordinator::with_capacity(8, 1, CacheConfig::default(), None, 0, false);
         let rx = coord
             .submit_stream(vec![5; 4], cfg(), SubmitOptions::default())
             .unwrap();

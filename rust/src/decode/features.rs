@@ -140,23 +140,31 @@ impl StepArena {
 }
 
 /// Aggregate wall-clock spent in the step pipeline's phases, reported
-/// through the worker metrics (`feature_ns` / `graph_build_ns` /
-/// `select_ns` in the `{"metrics": true}` endpoint).  `graph_build_ns`
-/// covers the cache layer's incremental-graph maintenance; the uncached
-/// DAPD path rebuilds its graph inside selection, so that cost lands in
-/// `select_ns`.
+/// through the worker metrics (`forward_ns` / `feature_ns` /
+/// `graph_build_ns` / `select_ns` / `commit_ns` in the
+/// `{"metrics": true}` endpoint), completing the step timeline:
+/// model forward -> feature derivation -> graph maintenance ->
+/// selection -> commit.  `graph_build_ns` covers the cache layer's
+/// incremental-graph maintenance; the uncached DAPD path rebuilds its
+/// graph inside selection, so that cost lands in `select_ns`.  The
+/// full per-stage distributions (not just these sums) live in the
+/// `obs::StageHists` log histograms.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct StepTimings {
+    pub forward_ns: u64,
     pub feature_ns: u64,
     pub graph_build_ns: u64,
     pub select_ns: u64,
+    pub commit_ns: u64,
 }
 
 impl StepTimings {
     pub fn merge(&mut self, o: &StepTimings) {
+        self.forward_ns += o.forward_ns;
         self.feature_ns += o.feature_ns;
         self.graph_build_ns += o.graph_build_ns;
         self.select_ns += o.select_ns;
+        self.commit_ns += o.commit_ns;
     }
 }
 

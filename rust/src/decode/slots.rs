@@ -25,9 +25,14 @@
 //! for KLASS), filled for the whole board in one pass before the
 //! per-slot select/commit loop.  Steady-state steps allocate nothing;
 //! `feature_threads > 1` fans the derivation out across scoped threads
-//! without changing any result.  Phase timings (`feature_ns`,
-//! `graph_build_ns`, `select_ns`) accumulate in [`StepTimings`] and flow
-//! into the worker metrics.
+//! without changing any result.  The full stage timeline (`forward_ns`,
+//! `feature_ns`, `graph_build_ns`, `select_ns`, `commit_ns`)
+//! accumulates in [`StepTimings`] and in the always-on log-bucketed
+//! [`StageHists`]; both flow into the worker metrics.  An optional
+//! [`TraceRecorder`] ([`SlotBatch::attach_trace`]) additionally emits
+//! per-step stage spans and decode-introspection events (graph edges,
+//! independent-set size, committed width, tau) — when tracing is
+//! disabled each emission site costs one relaxed atomic load.
 //!
 //! With a [`CacheConfig`] attached (see [`SlotBatch::with_cache`]) the
 //! loop runs through the compute-reuse subsystem: steady-state forwards
@@ -53,6 +58,7 @@ use crate::cache::{
     ActiveRows, CacheConfig, CacheStats, FirstStepRows, ForwardCache, GraphStats,
     IncrementalGraph, PrefixCache, PrefixHandle, StepSource,
 };
+use crate::obs::{Stage, StageHists, TraceRecorder};
 use crate::runtime::{ForwardModel, StepOutput};
 use crate::tensor::argmax;
 
@@ -132,6 +138,18 @@ pub struct SlotBatch<'m> {
     /// default — keeps the zero-steady-state-allocation guarantee of
     /// the non-streaming step path)
     commit_log: Option<Vec<StepCommits>>,
+    /// always-on log-bucketed stage-duration histograms, folded into the
+    /// worker metrics next to `timings`
+    stage_hists: StageHists,
+    /// opt-in decode-path trace recorder ([`SlotBatch::attach_trace`]);
+    /// attached-but-disabled recorders cost one relaxed load per stage
+    trace: Option<TraceRecorder>,
+    /// board-level step counter (trace span/event coordinates)
+    board_steps: u64,
+    /// scratch: candidate universe nodes for the traced introspection
+    node_scratch: Vec<usize>,
+    /// scratch: kept set of the greedy independent count
+    ind_scratch: Vec<usize>,
 }
 
 impl<'m> SlotBatch<'m> {
@@ -188,7 +206,20 @@ impl<'m> SlotBatch<'m> {
             splice_rows: Vec::new(),
             published_keys: Vec::new(),
             commit_log: None,
+            stage_hists: StageHists::new(),
+            trace: None,
+            board_steps: 0,
+            node_scratch: Vec::new(),
+            ind_scratch: Vec::new(),
         })
+    }
+
+    /// Attach a decode-path trace recorder: subsequent steps emit stage
+    /// spans and per-step introspection events into its lane.  The
+    /// recorder re-checks the global enable flag on every call, so this
+    /// is safe to attach unconditionally.
+    pub fn attach_trace(&mut self, rec: TraceRecorder) {
+        self.trace = Some(rec);
     }
 
     /// Opt into the per-step commit log.  Once enabled, every `step()`
@@ -330,6 +361,9 @@ impl<'m> SlotBatch<'m> {
         // recompute window, vacant rows are excluded outright, and a
         // board of only prefix rows takes no forward at all.  With the
         // cache disabled this is the plain full forward (the seed path).
+        let board_step = self.board_steps;
+        self.board_steps += 1;
+        let t_fwd = Instant::now();
         let step_source;
         let owned_out: StepOutput;
         let out: &StepOutput = if self.fwd_cache.is_some() {
@@ -363,6 +397,12 @@ impl<'m> SlotBatch<'m> {
             owned_out = self.model.forward(&self.tokens)?;
             &owned_out
         };
+        let fwd_ns = t_fwd.elapsed().as_nanos() as u64;
+        self.timings.forward_ns += fwd_ns;
+        self.stage_hists.record_ns(Stage::Forward, fwd_ns);
+        if let Some(tr) = &self.trace {
+            tr.stage_tagged(Stage::Forward, board_step, fwd_ns, step_source.label());
+        }
 
         // ---- board-level feature derivation (the zero-alloc pipeline) --
         let t_feat = Instant::now();
@@ -401,7 +441,12 @@ impl<'m> SlotBatch<'m> {
                 );
             }
         }
-        self.timings.feature_ns += t_feat.elapsed().as_nanos() as u64;
+        let feat_ns = t_feat.elapsed().as_nanos() as u64;
+        self.timings.feature_ns += feat_ns;
+        self.stage_hists.record_ns(Stage::Feature, feat_ns);
+        if let Some(tr) = &self.trace {
+            tr.stage(Stage::Feature, board_step, feat_ns);
+        }
 
         let mut finished = Vec::new();
         self.published_keys.clear();
@@ -477,8 +522,12 @@ impl<'m> SlotBatch<'m> {
                             .get_or_insert_with(|| IncrementalGraph::new(cache_eps));
                         let dep =
                             ig.update(&arena.universe, &arena.present, &arena.edges, tau);
-                        self.timings.graph_build_ns +=
-                            t_graph.elapsed().as_nanos() as u64;
+                        let graph_ns = t_graph.elapsed().as_nanos() as u64;
+                        self.timings.graph_build_ns += graph_ns;
+                        self.stage_hists.record_ns(Stage::Graph, graph_ns);
+                        if let Some(tr) = &self.trace {
+                            tr.stage(Stage::Graph, board_step, graph_ns);
+                        }
                         Some(dep)
                     } else {
                         None
@@ -509,9 +558,49 @@ impl<'m> SlotBatch<'m> {
                     }
                     self.sel_buf.sort_unstable();
                     self.sel_buf.dedup();
-                    self.timings.select_ns += t_sel.elapsed().as_nanos() as u64;
+                    let sel_ns = t_sel.elapsed().as_nanos() as u64;
+                    self.timings.select_ns += sel_ns;
+                    self.stage_hists.record_ns(Stage::Select, sel_ns);
+                    if let Some(tr) = &self.trace {
+                        tr.stage(Stage::Select, board_step, sel_ns);
+                    }
+
+                    // ---- traced per-step introspection ------------------
+                    // computed here because the graph's borrow of the slot
+                    // must end before the commit loop mutates it; the
+                    // committed set (`sel_buf`) is already final
+                    if self.trace.as_ref().map(|t| t.on()).unwrap_or(false) {
+                        let (edges, independent) = match graph {
+                            Some(dep) => {
+                                self.node_scratch.clear();
+                                self.node_scratch
+                                    .extend(arena.present.iter().map(|&(ui, _)| ui));
+                                (
+                                    dep.edge_count() as u64,
+                                    dep.independent_count(
+                                        &self.node_scratch,
+                                        &mut self.ind_scratch,
+                                    ) as u64,
+                                )
+                            }
+                            // no graph maintained: nothing is known to
+                            // depend on anything, so every candidate is
+                            // mutually independent
+                            None => (0, arena.positions.len() as u64),
+                        };
+                        if let Some(tr) = &self.trace {
+                            tr.step_intro(
+                                board_step,
+                                edges,
+                                independent,
+                                self.sel_buf.len() as u64,
+                                tau as f64,
+                            );
+                        }
+                    }
 
                     // ---- commit -----------------------------------------
+                    let t_commit = Instant::now();
                     for &c in &self.sel_buf {
                         let pos = arena.positions[c];
                         self.tokens[s * l + pos] = arena.amax[c];
@@ -533,6 +622,12 @@ impl<'m> SlotBatch<'m> {
 
                     // store this step's distributions for KLASS stability
                     arena.commit_prev(p, v);
+                    let commit_ns = t_commit.elapsed().as_nanos() as u64;
+                    self.timings.commit_ns += commit_ns;
+                    self.stage_hists.record_ns(Stage::Commit, commit_ns);
+                    if let Some(tr) = &self.trace {
+                        tr.stage(Stage::Commit, board_step, commit_ns);
+                    }
 
                     // done when nothing masked remains in the generation
                     // window, or the per-sample step cap is hit
@@ -600,6 +695,13 @@ impl<'m> SlotBatch<'m> {
     /// selection) — the worker pool folds these into its metrics.
     pub fn timings(&self) -> StepTimings {
         self.timings
+    }
+
+    /// Always-on log-bucketed stage-duration histograms since
+    /// construction — the full-distribution view of [`SlotBatch::timings`]
+    /// (the worker pool folds these into its metrics the same way).
+    pub fn stage_hists(&self) -> &StageHists {
+        &self.stage_hists
     }
 }
 
@@ -977,8 +1079,71 @@ mod tests {
             sb.step().unwrap();
         }
         let t = sb.timings();
+        assert!(t.forward_ns > 0, "forward phase untimed");
         assert!(t.feature_ns > 0, "feature phase untimed");
         assert!(t.select_ns > 0, "select phase untimed");
+        assert!(t.commit_ns > 0, "commit phase untimed");
         assert!(t.graph_build_ns > 0, "cached DAPD must time graph upkeep");
+        // the always-on histograms see the same samples: one forward and
+        // one feature record per board step
+        let sh = sb.stage_hists();
+        assert!(sh.get(Stage::Forward).total > 0);
+        assert_eq!(sh.get(Stage::Forward).total, sh.get(Stage::Feature).total);
+        assert!(sh.get(Stage::Commit).total > 0);
+    }
+
+    #[test]
+    fn trace_records_stages_and_per_step_commit_widths() {
+        use crate::obs::{TraceKind, Tracing};
+        let m = MockModel::new(1, 16, 4, 12);
+        let cfg = DecodeConfig::new(Method::DapdStaged);
+        let want = decode_batch(&m, &[vec![5; 4]], &cfg).unwrap()[0].clone();
+        let cache = CacheConfig {
+            enabled: true,
+            refresh_every: 4,
+            epsilon: 0.0,
+            prefix_lru_cap: 0,
+        };
+        let tracing = Tracing::new(1, 1024, true);
+        let mut sb = SlotBatch::with_cache(&m, &cfg, &cache, None).unwrap();
+        sb.attach_trace(tracing.recorder(0));
+        sb.admit(0, &[5; 4]).unwrap();
+        let mut got = None;
+        while sb.occupied() > 0 {
+            for (_, o) in sb.step().unwrap() {
+                got = Some(o);
+            }
+        }
+        assert_eq!(got.unwrap().gen, want.gen, "tracing must not change results");
+        let (evs, dropped) = tracing.drain().remove(0);
+        assert_eq!(dropped, 0);
+        // all five in-batch stages appear as spans, and the forward span
+        // carries its StepSource tag
+        let labels: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.kind == TraceKind::Stage)
+            .map(|e| e.label)
+            .collect();
+        for want_label in ["forward", "feature", "graph", "select", "commit"] {
+            assert!(labels.contains(&want_label), "missing stage {want_label}");
+        }
+        assert!(evs.iter().any(|e| e.label == "forward" && !e.tag.is_empty()));
+        // per-step introspection: committed widths replay the reference
+        // decode exactly (batch of one, so board steps == slot steps)
+        let intros: Vec<_> = evs
+            .iter()
+            .filter(|e| e.kind == TraceKind::StepIntro)
+            .collect();
+        let widths: Vec<u64> = intros.iter().map(|e| e.c).collect();
+        let want_widths: Vec<u64> = want
+            .per_step_commits
+            .iter()
+            .map(|v| v.len() as u64)
+            .collect();
+        assert_eq!(widths, want_widths);
+        for e in &intros {
+            assert!(e.b >= 1, "staged decode always has >= 1 independent node");
+            assert!(e.f.is_finite());
+        }
     }
 }

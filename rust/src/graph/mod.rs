@@ -279,6 +279,21 @@ impl DepGraph {
         }
         true
     }
+
+    /// Greedy (first-fit) independent-subset size among `nodes`: a node
+    /// is kept iff it has no edge to any already-kept node.  This is the
+    /// per-step introspection stat traced alongside the committed width —
+    /// how much parallelism the graph admits within the candidate set.
+    /// `scratch` holds the kept set so hot callers don't reallocate.
+    pub fn independent_count(&self, nodes: &[usize], scratch: &mut Vec<usize>) -> usize {
+        scratch.clear();
+        for &i in nodes {
+            if scratch.iter().all(|&j| !self.has_edge(i, j)) {
+                scratch.push(i);
+            }
+        }
+        scratch.len()
+    }
 }
 
 /// Reusable scratch for [`DepGraph::welsh_powell_into`].
@@ -356,6 +371,20 @@ mod tests {
         assert!(!g.has_edge(0, 3));
         assert_eq!(g.degree(1), 2);
         assert_eq!(g.edge_count(), 2);
+    }
+
+    #[test]
+    fn independent_count_is_greedy_first_fit() {
+        let g = path_graph(5); // edges: 0-1, 1-2, 2-3, 3-4
+        let mut scratch = Vec::new();
+        // keeps 0, skips 1 (edge to 0), keeps 2, skips 3, keeps 4
+        assert_eq!(g.independent_count(&[0, 1, 2, 3, 4], &mut scratch), 3);
+        // an edgeless subset is kept whole, in any order
+        assert_eq!(g.independent_count(&[4, 2, 0], &mut scratch), 3);
+        assert_eq!(g.independent_count(&[], &mut scratch), 0);
+        // kept set agrees with the independence predicate
+        g.independent_count(&[1, 2, 3, 4], &mut scratch);
+        assert!(g.is_independent(&scratch));
     }
 
     #[test]

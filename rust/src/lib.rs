@@ -25,6 +25,8 @@
 //! * [`eval`]        — experiment harness (accuracy/steps grids, segments,
 //!                     trajectories, MRF validation)
 //! * [`coordinator`] — sharded continuous-batching worker pool, metrics
+//! * [`obs`]         — observability: decode-path tracing (Chrome trace
+//!                     drains), stage histograms, Prometheus exposition
 //! * [`server`]      — JSON-over-TCP serving front end
 
 pub mod cache;
@@ -33,6 +35,7 @@ pub mod coordinator;
 pub mod decode;
 pub mod eval;
 pub mod graph;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

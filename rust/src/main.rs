@@ -19,6 +19,10 @@
 //!           [--deadline-ms D]   (default per-request latency budget;
 //!           0 = none; requests may send their own deadline_ms)
 //!           [--max-line-bytes B] [--drain-wait-ms W]
+//!           [--trace] [--no-trace] [--trace-out FILE]
+//!           (decode-path tracing: bounded per-worker rings, drained
+//!           as Chrome trace JSON via {"trace": true} or dumped to
+//!           FILE on graceful drain; DAPD_TRACE=1 sets the default)
 //!           SIGINT/SIGTERM trigger graceful drain: refuse new work,
 //!           finish in-flight requests, flush streams, then exit.
 //!   client  --addr HOST:PORT --task T [--n N] [--method X]
@@ -269,6 +273,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: settings.queue_cap,
         max_inflight: settings.max_inflight,
         cache: settings.cache_config(),
+        trace: settings.trace,
     };
     let (coord, handles) = Coordinator::start_pool(&pool, &opts)?;
     let reporter = coord.clone();
@@ -307,6 +312,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // report (metrics are complete once the workers have joined)
     drain.drain();
     handles.join();
+    // dump whatever trace events are still buffered (the workers have
+    // joined, so the rings are quiescent) as Chrome trace JSON
+    if let Some(path) = &settings.trace_out {
+        let chrome = summary.tracing().drain_chrome();
+        std::fs::write(path, chrome.dump_pretty())
+            .with_context(|| format!("writing trace to {path}"))?;
+        logging::info(&format!("trace written to {path}"));
+    }
     logging::info(&format!("drained: {}", summary.report()));
     result
 }

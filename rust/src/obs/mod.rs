@@ -1,0 +1,180 @@
+//! Observability: decode-path tracing, stage histograms, and Prometheus
+//! text exposition.
+//!
+//! Three surfaces, all fed from the same per-step instrumentation in
+//! `decode::slots` and the coordinator worker loop:
+//!
+//! - [`trace`]: a per-worker bounded ring-buffer [`TraceRecorder`] that
+//!   records typed spans/events across the whole request lifecycle
+//!   (admission -> queue wait -> step loop stages -> request
+//!   completion) plus per-step decode introspection (graph edges,
+//!   independent-set size, committed width, tau).  Off by default
+//!   behind one relaxed atomic; drains as Chrome trace-event JSON.
+//! - [`StageHists`]: always-on log-bucketed histograms of the six step
+//!   stages (queue wait, forward, feature, graph, select, commit) —
+//!   the full-distribution upgrade of the sum-only `*_ns` counters.
+//! - [`prometheus`]: renders every counter, gauge, and histogram the
+//!   coordinator metrics own as Prometheus text format with per-worker
+//!   labels, served by the `{"prometheus": true}` request.
+//!
+//! Overhead contract: with tracing disabled every recorder call is one
+//! relaxed atomic load and an immediate return — no locks, no
+//! allocation, no timestamps; the stage histograms add a handful of
+//! fixed-bin bucket increments per step.  With tracing enabled, ring
+//! slots are preallocated at attach time and events are `Copy`, so the
+//! steady-state decode path still does not allocate.
+
+pub mod prometheus;
+pub mod trace;
+
+pub use trace::{TraceEvent, TraceKind, TraceRecorder, Tracing};
+
+use crate::util::stats::Histogram;
+
+/// One stage of the decode timeline, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// submit-to-adoption wait in the coordinator queue (per request)
+    QueueWait,
+    /// model forward (full/windowed/frozen/prefix-only, per board step)
+    Forward,
+    /// per-step feature derivation over the candidate rows
+    Feature,
+    /// dependency-graph build / incremental update (per slot)
+    Graph,
+    /// strategy selection of the commit set (per slot)
+    Select,
+    /// committing the selected tokens into the board (per slot)
+    Commit,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 6] = [
+        Stage::QueueWait,
+        Stage::Forward,
+        Stage::Feature,
+        Stage::Graph,
+        Stage::Select,
+        Stage::Commit,
+    ];
+
+    /// Stable lowercase tag used as the trace span name and the
+    /// Prometheus `stage` label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::Forward => "forward",
+            Stage::Feature => "feature",
+            Stage::Graph => "graph",
+            Stage::Select => "select",
+            Stage::Commit => "commit",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Stage::QueueWait => 0,
+            Stage::Forward => 1,
+            Stage::Feature => 2,
+            Stage::Graph => 3,
+            Stage::Select => 4,
+            Stage::Commit => 5,
+        }
+    }
+}
+
+/// Histogram bounds: 100ns .. 10s in seconds, ~4.5 buckets per decade.
+const HIST_LO: f64 = 1e-7;
+const HIST_HI: f64 = 10.0;
+const HIST_BINS: usize = 36;
+
+/// Log-bucketed duration histograms for every [`Stage`], plus exact
+/// per-stage sums (the Prometheus `_sum` series).  Cheap enough to stay
+/// always-on: each record is one bucket increment and one add.
+#[derive(Debug, Clone)]
+pub struct StageHists {
+    hists: [Histogram; 6],
+    sum_secs: [f64; 6],
+}
+
+impl Default for StageHists {
+    fn default() -> StageHists {
+        StageHists::new()
+    }
+}
+
+impl StageHists {
+    pub fn new() -> StageHists {
+        StageHists {
+            hists: std::array::from_fn(|_| Histogram::new_log(HIST_LO, HIST_HI, HIST_BINS)),
+            sum_secs: [0.0; 6],
+        }
+    }
+
+    pub fn record_ns(&mut self, stage: Stage, ns: u64) {
+        self.record_secs(stage, ns as f64 * 1e-9);
+    }
+
+    pub fn record_secs(&mut self, stage: Stage, secs: f64) {
+        self.hists[stage.idx()].add(secs);
+        self.sum_secs[stage.idx()] += secs;
+    }
+
+    pub fn get(&self, stage: Stage) -> &Histogram {
+        &self.hists[stage.idx()]
+    }
+
+    /// Exact sum of everything recorded for `stage`, in seconds.
+    pub fn sum_secs(&self, stage: Stage) -> f64 {
+        self.sum_secs[stage.idx()]
+    }
+
+    /// Fold another set of stage histograms into this one (worker ->
+    /// aggregate, board-local -> worker metrics).
+    pub fn merge(&mut self, other: &StageHists) {
+        for s in Stage::ALL {
+            self.hists[s.idx()].merge(&other.hists[s.idx()]);
+            self.sum_secs[s.idx()] += other.sum_secs[s.idx()];
+        }
+    }
+
+    /// Total samples across all stages (0 = nothing recorded yet).
+    pub fn total(&self) -> u64 {
+        self.hists.iter().map(|h| h.total).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_hists_record_and_merge() {
+        let mut a = StageHists::new();
+        a.record_ns(Stage::Forward, 1_000_000); // 1ms
+        a.record_ns(Stage::Forward, 2_000_000);
+        a.record_secs(Stage::QueueWait, 0.5);
+        assert_eq!(a.get(Stage::Forward).total, 2);
+        assert_eq!(a.get(Stage::QueueWait).total, 1);
+        assert!((a.sum_secs(Stage::Forward) - 0.003).abs() < 1e-12);
+        assert_eq!(a.total(), 3);
+
+        let mut b = StageHists::new();
+        b.record_ns(Stage::Commit, 500);
+        b.merge(&a);
+        assert_eq!(b.total(), 4);
+        assert_eq!(b.get(Stage::Forward).total, 2);
+        assert!((b.sum_secs(Stage::QueueWait) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_labels_are_unique_and_stable() {
+        let labels: Vec<&str> = Stage::ALL.iter().map(|s| s.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len());
+        assert_eq!(labels[0], "queue_wait");
+        assert_eq!(labels[5], "commit");
+    }
+}

@@ -1,0 +1,444 @@
+//! Bounded ring-buffer decode-path tracing with Chrome trace-event
+//! export.
+//!
+//! [`Tracing`] owns one ring per lane (one lane per pool worker plus a
+//! coordinator lane for admission events); [`TraceRecorder`] is the
+//! cheap per-lane handle threaded into the worker loop and `SlotBatch`.
+//! Every recorder call starts with a single relaxed atomic load — with
+//! tracing off (the default) that load-and-return is the entire cost,
+//! and no lock is taken, no timestamp read, and nothing allocated.
+//!
+//! With tracing on, ring slots are preallocated at construction and
+//! [`TraceEvent`] is `Copy`, so recording stays allocation-free; when a
+//! ring fills, the oldest events are overwritten (the `dropped` count
+//! is reported in the drain).  [`Tracing::drain_chrome`] empties every
+//! ring into one Chrome trace-event JSON object (load it at
+//! `chrome://tracing` or in Perfetto).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::Stage;
+use crate::util::json::Json;
+
+/// Events each lane retains before overwriting the oldest (~3MB/lane
+/// when tracing is enabled; nothing is allocated when it is off).
+pub const DEFAULT_TRACE_CAPACITY: usize = 32_768;
+
+/// What one [`TraceEvent`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// whole-request span, submit to completion (`ph: "X"`)
+    Request,
+    /// one [`Stage`] span of the decode timeline (`ph: "X"`)
+    Stage,
+    /// request accepted into the queue (`ph: "i"` instant)
+    Admission,
+    /// per-step decode introspection counters (`ph: "C"`)
+    StepIntro,
+}
+
+/// One fixed-size, `Copy` trace record; field meaning depends on
+/// [`TraceKind`] (see the recorder constructors).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    /// nanoseconds since the [`Tracing`] epoch (span start for spans)
+    pub ts_ns: u64,
+    /// span duration; 0 for instants/counters
+    pub dur_ns: u64,
+    /// request ticket (request/admission/queue-wait) or board step
+    pub id: u64,
+    /// step-intro: graph edge count
+    pub a: u64,
+    /// step-intro: independent-set size within the committed set
+    pub b: u64,
+    /// step-intro: committed width
+    pub c: u64,
+    /// step-intro: tau threshold in effect
+    pub f: f64,
+    /// stage name for `Stage` events
+    pub label: &'static str,
+    /// secondary tag (the forward stage's `StepSource`)
+    pub tag: &'static str,
+}
+
+/// One lane's bounded buffer; oldest events are overwritten once full.
+struct Ring {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// once full: index of the oldest event (== next overwrite target)
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize, prealloc: bool) -> Ring {
+        Ring {
+            buf: if prealloc {
+                Vec::with_capacity(cap)
+            } else {
+                Vec::new()
+            },
+            cap,
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Take everything in chronological order and reset (capacity kept).
+    fn drain_ordered(&mut self) -> (Vec<TraceEvent>, u64) {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+        let dropped = self.dropped;
+        self.dropped = 0;
+        (out, dropped)
+    }
+}
+
+/// Shared tracing state: the enable flag, the time epoch, and one ring
+/// per lane.  Lanes `0..n-1` are pool workers; the last lane belongs to
+/// the coordinator (admission events).
+pub struct Tracing {
+    enabled: AtomicBool,
+    epoch: Instant,
+    lanes: Vec<Mutex<Ring>>,
+}
+
+impl Tracing {
+    /// `lanes` rings of `capacity` events each.  Rings are preallocated
+    /// only when tracing starts enabled, so a disabled instance costs a
+    /// few empty Vecs.
+    pub fn new(lanes: usize, capacity: usize, enabled: bool) -> Arc<Tracing> {
+        let cap = capacity.max(1);
+        Arc::new(Tracing {
+            enabled: AtomicBool::new(enabled),
+            epoch: Instant::now(),
+            lanes: (0..lanes.max(1))
+                .map(|_| Mutex::new(Ring::new(cap, enabled)))
+                .collect(),
+        })
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Flip the enable flag (tests; production sets it at construction).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Nanoseconds since this instance's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// A recorder bound to `lane` (clamped into range).
+    pub fn recorder(self: &Arc<Tracing>, lane: usize) -> TraceRecorder {
+        TraceRecorder {
+            shared: Arc::clone(self),
+            lane: lane.min(self.lanes.len() - 1),
+        }
+    }
+
+    /// Empty every ring (chronological per lane) and report per-lane
+    /// overwrite counts.  Destructive: a second drain returns nothing
+    /// until new events are recorded.
+    pub fn drain(&self) -> Vec<(Vec<TraceEvent>, u64)> {
+        self.lanes
+            .iter()
+            .map(|l| l.lock().unwrap().drain_ordered())
+            .collect()
+    }
+
+    /// Drain every ring into one Chrome trace-event JSON object
+    /// (`traceEvents` array; timestamps in microseconds).
+    pub fn drain_chrome(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        let mut meta = |name: &str, tid: usize, value: &str| {
+            let mut m = Json::obj();
+            m.set("ph", "M".into());
+            m.set("name", name.into());
+            m.set("pid", 0i64.into());
+            m.set("tid", (tid as i64).into());
+            let mut args = Json::obj();
+            args.set("name", value.into());
+            m.set("args", args);
+            m
+        };
+        events.push(meta("process_name", 0, "dapd"));
+        let n = self.lanes.len();
+        for lane in 0..n {
+            let label = if lane + 1 == n {
+                "coordinator".to_string()
+            } else {
+                format!("worker-{lane}")
+            };
+            events.push(meta("thread_name", lane, &label));
+        }
+        let mut dropped_total: u64 = 0;
+        for (lane, (evs, dropped)) in self.drain().into_iter().enumerate() {
+            dropped_total += dropped;
+            for ev in evs {
+                events.push(chrome_event(&ev, lane));
+            }
+        }
+        let mut other = Json::obj();
+        other.set("dropped", (dropped_total as i64).into());
+        other.set("lanes", (n as i64).into());
+        let mut out = Json::obj();
+        out.set("traceEvents", Json::Arr(events));
+        out.set("displayTimeUnit", "ms".into());
+        out.set("otherData", other);
+        out
+    }
+}
+
+fn chrome_event(ev: &TraceEvent, lane: usize) -> Json {
+    let mut j = Json::obj();
+    j.set("pid", 0i64.into());
+    j.set("tid", (lane as i64).into());
+    j.set("ts", (ev.ts_ns as f64 / 1e3).into());
+    let mut args = Json::obj();
+    match ev.kind {
+        TraceKind::Request => {
+            j.set("ph", "X".into());
+            j.set("name", "request".into());
+            j.set("cat", "request".into());
+            j.set("dur", (ev.dur_ns as f64 / 1e3).into());
+            args.set("ticket", (ev.id as i64).into());
+        }
+        TraceKind::Stage => {
+            j.set("ph", "X".into());
+            j.set("name", ev.label.into());
+            j.set("cat", "stage".into());
+            j.set("dur", (ev.dur_ns as f64 / 1e3).into());
+            if ev.label == Stage::QueueWait.label() {
+                args.set("ticket", (ev.id as i64).into());
+            } else {
+                args.set("step", (ev.id as i64).into());
+            }
+            if !ev.tag.is_empty() {
+                args.set("source", ev.tag.into());
+            }
+        }
+        TraceKind::Admission => {
+            j.set("ph", "i".into());
+            j.set("name", "admission".into());
+            j.set("cat", "admission".into());
+            j.set("s", "p".into());
+            args.set("ticket", (ev.id as i64).into());
+        }
+        TraceKind::StepIntro => {
+            j.set("ph", "C".into());
+            j.set("name", "decode_step".into());
+            j.set("cat", "decode".into());
+            args.set("edges", (ev.a as i64).into());
+            args.set("independent", (ev.b as i64).into());
+            args.set("committed", (ev.c as i64).into());
+            args.set("tau", ev.f.into());
+        }
+    }
+    j.set("args", args);
+    j
+}
+
+/// Per-lane recording handle; see the module docs for the overhead
+/// contract.  Every method is a no-op (one relaxed load) while tracing
+/// is disabled.
+#[derive(Clone)]
+pub struct TraceRecorder {
+    shared: Arc<Tracing>,
+    lane: usize,
+}
+
+impl TraceRecorder {
+    /// The single hot-path gate.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.shared.is_enabled()
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.shared.now_ns()
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        self.shared.lanes[self.lane].lock().unwrap().push(ev);
+    }
+
+    /// A span of `dur_ns` that ends now.
+    fn span_ending_now(&self, kind: TraceKind, dur_ns: u64) -> TraceEvent {
+        let end = self.shared.now_ns();
+        TraceEvent {
+            kind,
+            ts_ns: end.saturating_sub(dur_ns),
+            dur_ns,
+            id: 0,
+            a: 0,
+            b: 0,
+            c: 0,
+            f: 0.0,
+            label: "",
+            tag: "",
+        }
+    }
+
+    /// Request accepted into the queue (instant, coordinator lane).
+    pub fn admission(&self, ticket: u64) {
+        if !self.on() {
+            return;
+        }
+        let mut ev = self.span_ending_now(TraceKind::Admission, 0);
+        ev.id = ticket;
+        self.push(ev);
+    }
+
+    /// Submit-to-adoption queue wait (span ending now).
+    pub fn queue_wait(&self, ticket: u64, dur_ns: u64) {
+        if !self.on() {
+            return;
+        }
+        let mut ev = self.span_ending_now(TraceKind::Stage, dur_ns);
+        ev.id = ticket;
+        ev.label = Stage::QueueWait.label();
+        self.push(ev);
+    }
+
+    /// Whole-request lifetime, submit to completion (span ending now).
+    pub fn request(&self, ticket: u64, dur_ns: u64) {
+        if !self.on() {
+            return;
+        }
+        let mut ev = self.span_ending_now(TraceKind::Request, dur_ns);
+        ev.id = ticket;
+        self.push(ev);
+    }
+
+    /// One decode stage of board step `step` (span ending now).
+    pub fn stage(&self, stage: Stage, step: u64, dur_ns: u64) {
+        self.stage_tagged(stage, step, dur_ns, "");
+    }
+
+    /// [`TraceRecorder::stage`] with a secondary tag (the forward
+    /// stage's `StepSource` label).
+    pub fn stage_tagged(&self, stage: Stage, step: u64, dur_ns: u64, tag: &'static str) {
+        if !self.on() {
+            return;
+        }
+        let mut ev = self.span_ending_now(TraceKind::Stage, dur_ns);
+        ev.id = step;
+        ev.label = stage.label();
+        ev.tag = tag;
+        self.push(ev);
+    }
+
+    /// Per-step decode introspection counters (instant).
+    pub fn step_intro(&self, step: u64, edges: u64, independent: u64, committed: u64, tau: f64) {
+        if !self.on() {
+            return;
+        }
+        let mut ev = self.span_ending_now(TraceKind::StepIntro, 0);
+        ev.id = step;
+        ev.a = edges;
+        ev.b = independent;
+        ev.c = committed;
+        ev.f = tau;
+        self.push(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let t = Tracing::new(2, 16, false);
+        let rec = t.recorder(0);
+        assert!(!rec.on());
+        rec.admission(1);
+        rec.stage(Stage::Forward, 0, 100);
+        rec.step_intro(0, 3, 2, 2, 0.05);
+        for (evs, dropped) in t.drain() {
+            assert!(evs.is_empty());
+            assert_eq!(dropped, 0);
+        }
+    }
+
+    #[test]
+    fn ring_wraps_keeping_newest_in_order() {
+        let t = Tracing::new(1, 4, true);
+        let rec = t.recorder(0);
+        for i in 0..10u64 {
+            rec.admission(i);
+        }
+        let mut drained = t.drain();
+        assert_eq!(drained.len(), 1);
+        let (evs, dropped) = drained.remove(0);
+        assert_eq!(evs.len(), 4, "ring holds exactly its capacity");
+        assert_eq!(dropped, 6, "overwritten events are counted");
+        let ids: Vec<u64> = evs.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "newest events, oldest first");
+        // drain is destructive
+        let (again, d2) = t.drain().remove(0);
+        assert!(again.is_empty());
+        assert_eq!(d2, 0);
+    }
+
+    #[test]
+    fn chrome_drain_is_valid_and_typed() {
+        let t = Tracing::new(2, 64, true);
+        let w = t.recorder(0);
+        let c = t.recorder(1);
+        c.admission(7);
+        w.queue_wait(7, 1_000);
+        w.stage_tagged(Stage::Forward, 0, 2_000, "full");
+        w.stage(Stage::Commit, 0, 500);
+        w.step_intro(0, 5, 3, 3, 0.08);
+        w.request(7, 10_000);
+        let chrome = t.drain_chrome();
+        // must reparse as JSON and carry the Chrome schema fields
+        let rt = Json::parse(&chrome.dump()).unwrap();
+        let evs = rt.get("traceEvents").as_arr().unwrap();
+        let named = |name: &str| {
+            evs.iter()
+                .find(|e| e.get("name").as_str() == Some(name))
+                .unwrap_or_else(|| panic!("missing event {name}"))
+        };
+        assert_eq!(named("request").get("ph").as_str(), Some("X"));
+        assert_eq!(named("forward").get("args").get("source").as_str(), Some("full"));
+        assert_eq!(named("queue_wait").get("args").get("ticket").as_i64(), Some(7));
+        let intro = named("decode_step");
+        assert_eq!(intro.get("ph").as_str(), Some("C"));
+        assert_eq!(intro.get("args").get("committed").as_i64(), Some(3));
+        assert!(intro.get("args").get("tau").as_f64().unwrap() > 0.0);
+        // admission landed on the coordinator lane (tid 1 of 2)
+        assert_eq!(named("admission").get("tid").as_i64(), Some(1));
+        // thread metadata names both lanes
+        assert!(evs.iter().any(|e| {
+            e.get("name").as_str() == Some("thread_name")
+                && e.get("args").get("name").as_str() == Some("coordinator")
+        }));
+    }
+}

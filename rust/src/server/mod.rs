@@ -6,6 +6,8 @@
 //!   {"prompt": [i32...], "method": "dapd-staged", "blocks": 1,
 //!    "eos_suppress": false, "deadline_ms": 2000, "stream": true}\n
 //!   {"metrics": true}\n
+//!   {"prometheus": true}\n
+//!   {"trace": true}\n
 //!   {"drain": true}\n
 //!
 //! Non-streamed decode replies with a single line:
@@ -489,6 +491,24 @@ fn handle_conn(
             write_line(&mut writer, &metrics_json(&coord))?;
             continue;
         }
+        if req.get("prometheus").as_bool() == Some(true) {
+            let mut obj = Json::obj();
+            obj.set("ok", true.into());
+            obj.set("content_type", "text/plain; version=0.0.4".into());
+            obj.set("text", crate::obs::prometheus::exposition(&coord).into());
+            write_line(&mut writer, &obj)?;
+            continue;
+        }
+        if req.get("trace").as_bool() == Some(true) {
+            // drains (and clears) the trace rings: a Chrome trace-event
+            // JSON object under "trace", loadable by chrome://tracing
+            let mut obj = Json::obj();
+            obj.set("ok", true.into());
+            obj.set("enabled", coord.tracing().is_enabled().into());
+            obj.set("trace", coord.tracing().drain_chrome());
+            write_line(&mut writer, &obj)?;
+            continue;
+        }
         if req.get("drain").as_bool() == Some(true) {
             drain.drain();
             let mut obj = Json::obj();
@@ -736,5 +756,70 @@ mod tests {
         assert_eq!(notice.get("ok").as_bool(), Some(false));
         assert_eq!(notice.get("draining").as_bool(), Some(true));
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn prometheus_and_trace_requests_serve_observability() {
+        use crate::coordinator::PoolOptions;
+        use crate::runtime::ModelPool;
+        let pool = ModelPool::mock(MockModel::new(2, 16, 4, 12));
+        let opts = PoolOptions {
+            batch_wait: Duration::ZERO,
+            trace: true,
+            ..PoolOptions::default()
+        };
+        let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
+        let server = Server::bind(
+            "127.0.0.1:0",
+            coord.clone(),
+            DecodeConfig::new(Method::FastDllm),
+        )
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let drain = server.drain_handle().unwrap();
+        let sh = std::thread::spawn(move || server.run().unwrap());
+
+        let mut client = Client::connect(&addr).unwrap();
+        client.request(&[5; 4], Some("dapd-staged")).unwrap();
+
+        // Prometheus exposition: text format, aggregate + per-worker series
+        let mut req = Json::obj();
+        req.set("prometheus", true.into());
+        let j = client.roundtrip(&req).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        assert_eq!(
+            j.get("content_type").as_str(),
+            Some("text/plain; version=0.0.4")
+        );
+        let text = j.get("text").as_str().unwrap();
+        assert!(text.contains("# TYPE dapd_requests counter"));
+        assert!(text.contains("dapd_requests{worker=\"all\"} 1"));
+        assert!(text.contains("dapd_requests{worker=\"0\"} 1"));
+        assert!(text.contains("dapd_stage_duration_seconds_bucket"));
+        // the worker decrements the in-flight gauge *after* replying, so
+        // only assert the series is exposed, not its still-racing value
+        assert!(text.contains("# TYPE dapd_inflight gauge"));
+        assert!(text.contains("\ndapd_inflight "));
+
+        // trace drain: Chrome trace-event JSON with the request lifecycle
+        let mut req = Json::obj();
+        req.set("trace", true.into());
+        let j = client.roundtrip(&req).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        assert_eq!(j.get("enabled").as_bool(), Some(true));
+        let evs = j.get("trace").get("traceEvents").as_arr().unwrap();
+        let has = |name: &str| evs.iter().any(|e| e.get("name").as_str() == Some(name));
+        for name in ["admission", "queue_wait", "request", "forward", "commit"] {
+            assert!(has(name), "missing trace event {name}");
+        }
+        // the drain cleared the rings: a second drain carries only the
+        // process/thread metadata events, no recorded spans
+        let j2 = client.roundtrip(&req).unwrap();
+        let evs2 = j2.get("trace").get("traceEvents").as_arr().unwrap();
+        assert!(evs2.iter().all(|e| e.get("ph").as_str() == Some("M")));
+
+        drain.drain();
+        sh.join().unwrap();
+        handles.join();
     }
 }

@@ -1,7 +1,9 @@
 //! Statistics substrate: summaries, percentiles, histograms, ROC-AUC.
 //!
 //! Used by the coordinator metrics, the eval harness (Table 1/9/10 AUC and
-//! OVR), and the bench harness.
+//! OVR), the observability stage histograms, and the bench harness.
+
+use crate::util::rng::Pcg;
 
 /// Mean of a slice (0.0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
@@ -92,13 +94,18 @@ pub fn order_violation_rate(true_deg: &[f64], proxy_deg: &[f64]) -> f64 {
 }
 
 /// Fixed-bin histogram over [lo, hi); values outside are clamped to the
-/// edge bins.  Used for the Fig. 6 edge-score distribution.
+/// edge bins.  Linear bins by default (the Fig. 6 edge-score
+/// distribution); [`Histogram::new_log`] gives exponentially-spaced bins
+/// (stage latencies span ns..s, where linear bins waste all resolution
+/// on the tail).
 #[derive(Debug, Clone)]
 pub struct Histogram {
     pub lo: f64,
     pub hi: f64,
     pub counts: Vec<u64>,
     pub total: u64,
+    /// bucket in log-space (edges form a geometric series)
+    log: bool,
 }
 
 impl Histogram {
@@ -109,15 +116,81 @@ impl Histogram {
             hi,
             counts: vec![0; bins],
             total: 0,
+            log: false,
+        }
+    }
+
+    /// Exponentially-bucketed histogram over [lo, hi); bucket edges form
+    /// a geometric series, so each decade gets equal resolution.
+    /// Requires `lo > 0` (log-space has no zero); values at or below 0
+    /// clamp into the first bin like any other underflow.
+    pub fn new_log(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(lo > 0.0 && hi > lo && bins > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+            log: true,
+        }
+    }
+
+    pub fn is_log(&self) -> bool {
+        self.log
+    }
+
+    /// Fractional position of `x` along the bucket axis in [0, bins].
+    fn coord(&self, x: f64) -> f64 {
+        let bins = self.counts.len() as f64;
+        if self.log {
+            if x <= self.lo {
+                return if x < self.lo { -1.0 } else { 0.0 };
+            }
+            (x.ln() - self.lo.ln()) / (self.hi.ln() - self.lo.ln()) * bins
+        } else {
+            (x - self.lo) / (self.hi - self.lo) * bins
         }
     }
 
     pub fn add(&mut self, x: f64) {
         let bins = self.counts.len();
-        let t = ((x - self.lo) / (self.hi - self.lo) * bins as f64) as isize;
+        let t = self.coord(x) as isize;
         let b = t.clamp(0, bins as isize - 1) as usize;
         self.counts[b] += 1;
         self.total += 1;
+    }
+
+    /// Upper edge of bucket `i` (the Prometheus `le` bound); the last
+    /// bucket's edge is `hi`, but it also absorbs overflow values.
+    pub fn upper_edge(&self, i: usize) -> f64 {
+        let bins = self.counts.len();
+        assert!(i < bins);
+        let frac = (i + 1) as f64 / bins as f64;
+        if self.log {
+            self.lo * (self.hi / self.lo).powf(frac)
+        } else {
+            self.lo + (self.hi - self.lo) * frac
+        }
+    }
+
+    /// Fold another histogram of the identical shape into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert!(
+            self.log == other.log
+                && self.counts.len() == other.counts.len()
+                && self.lo == other.lo
+                && self.hi == other.hi,
+            "merging histograms with different bucket layouts"
+        );
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+    }
+
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
     }
 
     /// Fraction of mass strictly below x.
@@ -126,43 +199,87 @@ impl Histogram {
             return 0.0;
         }
         let bins = self.counts.len();
-        let t = ((x - self.lo) / (self.hi - self.lo) * bins as f64).floor() as isize;
+        let t = self.coord(x).floor() as isize;
         let b = t.clamp(0, bins as isize) as usize;
         let below: u64 = self.counts[..b.min(bins)].iter().sum();
         below as f64 / self.total as f64
     }
 }
 
+/// How many samples a [`Summary`] retains for percentile queries.
+/// Large enough that bounded test/bench traffic is stored exactly;
+/// sustained serve traffic degrades to a uniform sample instead of
+/// growing without bound.
+pub const RESERVOIR_CAP: usize = 4096;
+
 /// Online latency/throughput summary used by the coordinator metrics.
-#[derive(Debug, Clone, Default)]
+///
+/// Count, mean, and max are exact over everything ever added; percentiles
+/// come from a bounded reservoir (Algorithm R, [`RESERVOIR_CAP`] samples,
+/// deterministically seeded so runs are repeatable), so memory stays
+/// constant no matter how long the server runs.
+#[derive(Debug, Clone)]
 pub struct Summary {
-    xs: Vec<f64>,
+    n: u64,
+    sum: f64,
+    max: f64,
+    reservoir: Vec<f64>,
+    rng: Pcg,
+}
+
+impl Default for Summary {
+    fn default() -> Summary {
+        Summary::new()
+    }
 }
 
 impl Summary {
     pub fn new() -> Summary {
-        Summary::default()
+        Summary {
+            n: 0,
+            sum: 0.0,
+            max: f64::NEG_INFINITY,
+            reservoir: Vec::new(),
+            rng: Pcg::new(0x5eed_5a3b),
+        }
     }
     pub fn add(&mut self, x: f64) {
-        self.xs.push(x);
+        self.n += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if self.reservoir.len() < RESERVOIR_CAP {
+            self.reservoir.push(x);
+        } else {
+            // Algorithm R: keep each of the n samples with equal chance
+            let j = self.rng.below(self.n as usize);
+            if j < RESERVOIR_CAP {
+                self.reservoir[j] = x;
+            }
+        }
     }
     pub fn count(&self) -> usize {
-        self.xs.len()
+        self.n as usize
     }
     pub fn mean(&self) -> f64 {
-        mean(&self.xs)
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
     }
     pub fn p50(&self) -> f64 {
-        percentile(&self.xs, 0.50)
+        percentile(&self.reservoir, 0.50)
     }
     pub fn p95(&self) -> f64 {
-        percentile(&self.xs, 0.95)
+        percentile(&self.reservoir, 0.95)
     }
     pub fn p99(&self) -> f64 {
-        percentile(&self.xs, 0.99)
+        percentile(&self.reservoir, 0.99)
     }
     pub fn max(&self) -> f64 {
-        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        self.max
     }
 }
 
@@ -237,5 +354,80 @@ mod tests {
         assert!((s.p50() - 500.5).abs() < 1.0);
         assert!(s.p99() > 985.0);
         assert_eq!(s.max(), 1000.0);
+    }
+
+    #[test]
+    fn summary_memory_is_bounded_and_stats_stay_exact() {
+        let mut s = Summary::new();
+        let n = 10 * RESERVOIR_CAP;
+        for i in 1..=n {
+            s.add(i as f64);
+        }
+        // count/mean/max are exact no matter how much was added
+        assert_eq!(s.count(), n);
+        assert!((s.mean() - (n + 1) as f64 / 2.0).abs() < 1e-6);
+        assert_eq!(s.max(), n as f64);
+        // percentiles come from a uniform sample of everything seen, so
+        // they track the true quantiles within sampling error
+        let p50 = s.p50();
+        assert!(
+            (p50 - n as f64 / 2.0).abs() < n as f64 * 0.05,
+            "p50={p50} n={n}"
+        );
+        // deterministic seeding: two identical streams agree exactly
+        let mut t = Summary::new();
+        for i in 1..=n {
+            t.add(i as f64);
+        }
+        assert_eq!(s.p95(), t.p95());
+    }
+
+    #[test]
+    fn log_histogram_buckets_and_edges() {
+        let mut h = Histogram::new_log(1e-6, 1.0, 12);
+        assert!(h.is_log());
+        // edges form a geometric series: each bucket spans half a decade
+        for i in 1..12 {
+            let ratio = h.upper_edge(i) / h.upper_edge(i - 1);
+            assert!((ratio - 10f64.powf(0.5)).abs() < 1e-9, "ratio={ratio}");
+        }
+        assert!((h.upper_edge(11) - 1.0).abs() < 1e-12);
+        // 3e-5 lands mid-bucket two steps up from the bottom edge
+        h.add(3e-5);
+        assert_eq!(h.counts[2], 1);
+        // underflow (incl. zero) clamps into the first bin, overflow the last
+        h.add(0.0);
+        h.add(1e-9);
+        assert_eq!(h.counts[0], 2);
+        h.add(50.0);
+        assert_eq!(h.counts[11], 1);
+        assert_eq!(h.total, 4);
+        // cdf agrees with bucket mass
+        assert!((h.cdf_below(1e-6) - 0.0).abs() < 1e-12);
+        assert!(h.cdf_below(1.0) >= 0.75);
+    }
+
+    #[test]
+    fn histogram_merge_folds_counts() {
+        let mut a = Histogram::new_log(1e-6, 1.0, 8);
+        let mut b = a.clone();
+        a.add(1e-3);
+        b.add(1e-3);
+        b.add(0.5);
+        a.merge(&b);
+        assert_eq!(a.total, 3);
+        let direct: u64 = a.counts.iter().sum();
+        assert_eq!(direct, 3);
+        a.clear();
+        assert_eq!(a.total, 0);
+        assert!(a.counts.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "different bucket layouts")]
+    fn histogram_merge_rejects_mismatched_layouts() {
+        let mut a = Histogram::new(0.0, 1.0, 8);
+        let b = Histogram::new_log(1e-6, 1.0, 8);
+        a.merge(&b);
     }
 }
