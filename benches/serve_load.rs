@@ -4,12 +4,17 @@
 //! continuous batcher, mock model) with a bursty open-loop workload and
 //! reduces the run to a small normalized summary: throughput, request
 //! latency percentiles, compute-reuse ratios, and per-kernel hot-loop
-//! costs.  The summary is compared against the checked-in baseline
-//! (`BENCH_6.json` at the repo root) with a direction-aware noise band,
-//! so CI fails on real regressions rather than on shared-runner jitter.
+//! costs.  A second, heterogeneous workload (zipfian mix of
+//! shape-compatible configs) runs twice — per-group sharded and with
+//! cross-group stealing — and the bench *requires* stealing to improve
+//! board occupancy (plus throughput or queue-wait p95) while every
+//! request stays token-identical to its solo per-group reference.  The
+//! summary is compared against the checked-in baseline (`BENCH_8.json`
+//! at the repo root) with a direction-aware noise band, so CI fails on
+//! real regressions rather than on shared-runner jitter.
 //!
 //! Environment knobs (CI's bench-smoke job sets the first two):
-//!   DAPD_BENCH_BASELINE=f  baseline path (default BENCH_6.json)
+//!   DAPD_BENCH_BASELINE=f  baseline path (default BENCH_8.json)
 //!   DAPD_BENCH_NOISE=x     relative tolerance band (default 0.5 = 50%)
 //!   DAPD_BENCH_WRITE=1     regenerate the baseline from this run and exit
 //!   DAPD_BENCH_JSON=f      also write this run's summary to `f` (artifact)
@@ -22,13 +27,14 @@ use std::time::{Duration, Instant};
 
 use dapd::cache::CacheConfig;
 use dapd::coordinator::{Coordinator, PoolOptions};
-use dapd::decode::{DecodeConfig, Method};
+use dapd::decode::{decode_batch, DecodeConfig, Method};
+use dapd::obs::Stage;
 use dapd::runtime::{MockModel, ModelPool};
 use dapd::tensor::kernels::{self, Backend};
 use dapd::util::bench::{fmt_f, time_it, Table};
 use dapd::util::json::Json;
 use dapd::util::rng::Pcg;
-use dapd::workload::arrivals::Arrival;
+use dapd::workload::arrivals::{Arrival, ZipfMix};
 
 /// One measured run, already reduced to the baseline schema.
 struct Measured {
@@ -146,6 +152,110 @@ fn run_load(n: usize, trace: bool) -> Measured {
     }
 }
 
+/// One heterogeneous run, reduced to the scheduler-facing metrics.
+struct QueueMeasured {
+    steps_per_s: f64,
+    tokens_per_s: f64,
+    /// mean decoding rows per board step (`slot_steps / steps_run`)
+    occupancy: f64,
+    wait_p95_ms: f64,
+    steals: u64,
+    preemptions: u64,
+}
+
+/// Drive a zipfian mix of shape-compatible configs (same blocks,
+/// different method => different group key, same compat key) through a
+/// 2-worker pool, with cross-group stealing on or off.  Every response
+/// is checked token-identical against a solo per-group reference decode
+/// before any numbers are reported.
+fn run_hetero(n: usize, steal: bool) -> QueueMeasured {
+    let pool = ModelPool::mock(MockModel::new(4, 68, 28, 92));
+    let opts = PoolOptions {
+        workers: 2,
+        batch_wait: Duration::from_millis(2),
+        queue_cap: n + 8,
+        steal,
+        ..PoolOptions::default()
+    };
+    let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
+
+    let mut rng = Pcg::new(83);
+    let prompts: Vec<Vec<i32>> = (0..6)
+        .map(|_| (0..28).map(|_| (2 + rng.below(90)) as i32).collect())
+        .collect();
+    // head-heavy method mix: the tail groups cannot fill a board alone,
+    // which is exactly where per-group sharding strands capacity
+    let methods = [
+        Method::DapdStaged,
+        Method::FastDllm,
+        Method::EbSampler,
+        Method::Klass,
+        Method::DapdDirect,
+        Method::Original,
+    ];
+    let cfgs: Vec<DecodeConfig> = methods.iter().map(|&m| DecodeConfig::new(m)).collect();
+    let groups = ZipfMix::new(cfgs.len(), 1.2).assign(n, &mut rng);
+
+    // closed burst: everything queued up front, so scheduling (not
+    // arrival pacing) decides how full the boards run
+    let t0 = Instant::now();
+    let rxs: Vec<_> = groups
+        .iter()
+        .enumerate()
+        .map(|(i, &g)| {
+            coord
+                .submit(prompts[i % prompts.len()].clone(), cfgs[g].clone())
+                .unwrap()
+        })
+        .collect();
+    let mut tokens = 0usize;
+    let mut gens: Vec<Vec<i32>> = Vec::with_capacity(n);
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        tokens += r.gen.len();
+        gens.push(r.gen);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    handles.join();
+
+    // token identity: mixed-config packing must not change any output
+    let refmodel = MockModel::new(4, 68, 28, 92);
+    for (i, &g) in groups.iter().enumerate() {
+        let reference = decode_batch(
+            &refmodel,
+            std::slice::from_ref(&prompts[i % prompts.len()]),
+            &cfgs[g],
+        )
+        .unwrap();
+        assert_eq!(
+            gens[i], reference[0].gen,
+            "request {i} (group {g}, steal={steal}) diverged from its solo reference"
+        );
+    }
+
+    let steps = coord.metrics.steps_run.load(std::sync::atomic::Ordering::Relaxed);
+    QueueMeasured {
+        steps_per_s: steps as f64 / wall,
+        tokens_per_s: tokens as f64 / wall,
+        occupancy: coord.metrics.mean_batch_size(),
+        wait_p95_ms: coord
+            .metrics
+            .stage_hists()
+            .get(Stage::QueueWait)
+            .quantile(0.95)
+            * 1e3,
+        steals: coord
+            .metrics
+            .steals
+            .load(std::sync::atomic::Ordering::Relaxed),
+        preemptions: coord
+            .metrics
+            .preemptions
+            .load(std::sync::atomic::Ordering::Relaxed),
+    }
+}
+
 /// Per-kernel costs of the vocab-width hot loops on the dispatched
 /// (native-when-available) backend, in microseconds per call.
 fn kernel_rows() -> Vec<(String, f64)> {
@@ -258,7 +368,7 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(48);
     let baseline_path =
-        std::env::var("DAPD_BENCH_BASELINE").unwrap_or_else(|_| "BENCH_6.json".to_string());
+        std::env::var("DAPD_BENCH_BASELINE").unwrap_or_else(|_| "BENCH_8.json".to_string());
     let noise: f64 = std::env::var("DAPD_BENCH_NOISE")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -269,6 +379,10 @@ fn main() {
     // ring-buffer recording relative to the untraced run
     let traced = run_load(n, true);
     let trace_overhead = 1.0 - traced.steps_per_s / m.steps_per_s;
+    // heterogeneous mix, sharded vs cross-group stealing (same seed:
+    // identical prompts, configs, and assignment in both runs)
+    let sharded = run_hetero(n, false);
+    let stolen = run_hetero(n, true);
 
     let mut t = Table::new(
         &format!("Serving load summary (bursty open loop, n={n}, 2 workers)"),
@@ -291,11 +405,78 @@ fn main() {
     ]);
     t.print();
 
+    let mut h = Table::new(
+        &format!("Heterogeneous mix (zipf over 6 configs, n={n}, 2 workers)"),
+        &["metric", "sharded", "stealing"],
+    );
+    h.row(vec![
+        "board occupancy".into(),
+        fmt_f(sharded.occupancy, 3),
+        fmt_f(stolen.occupancy, 3),
+    ]);
+    h.row(vec![
+        "queue wait p95 (ms)".into(),
+        fmt_f(sharded.wait_p95_ms, 2),
+        fmt_f(stolen.wait_p95_ms, 2),
+    ]);
+    h.row(vec![
+        "steps/s".into(),
+        fmt_f(sharded.steps_per_s, 1),
+        fmt_f(stolen.steps_per_s, 1),
+    ]);
+    h.row(vec![
+        "tokens/s".into(),
+        fmt_f(sharded.tokens_per_s, 1),
+        fmt_f(stolen.tokens_per_s, 1),
+    ]);
+    h.row(vec![
+        "steals".into(),
+        sharded.steals.to_string(),
+        stolen.steals.to_string(),
+    ]);
+    h.row(vec![
+        "preemptions".into(),
+        sharded.preemptions.to_string(),
+        stolen.preemptions.to_string(),
+    ]);
+    h.print();
+
+    // the point of cross-group packing: boards run fuller, and that
+    // shows up as throughput or shorter queues — in the same run
+    assert_eq!(sharded.steals, 0, "stealing disabled must never steal");
+    assert!(stolen.steals > 0, "heterogeneous mix must exercise stealing");
+    assert!(
+        stolen.occupancy > sharded.occupancy * 1.02,
+        "cross-group packing must improve board occupancy: {} vs {} sharded",
+        stolen.occupancy,
+        sharded.occupancy
+    );
+    assert!(
+        stolen.steps_per_s > sharded.steps_per_s
+            || stolen.tokens_per_s > sharded.tokens_per_s
+            || stolen.wait_p95_ms < sharded.wait_p95_ms,
+        "stealing improved neither throughput ({} vs {} steps/s, {} vs {} tok/s) \
+         nor queue-wait p95 ({} vs {} ms)",
+        stolen.steps_per_s,
+        sharded.steps_per_s,
+        stolen.tokens_per_s,
+        sharded.tokens_per_s,
+        stolen.wait_p95_ms,
+        sharded.wait_p95_ms
+    );
+
     let mut summary = m.to_json();
     let mut obs = Json::obj();
     obs.set("steps_per_s_traced", traced.steps_per_s.into());
     obs.set("trace_overhead_frac", trace_overhead.into());
     summary.set("obs", obs);
+    let mut queue = Json::obj();
+    queue.set("wait_p95_ms", stolen.wait_p95_ms.into());
+    queue.set("occupancy", stolen.occupancy.into());
+    queue.set("occupancy_sharded", sharded.occupancy.into());
+    queue.set("steals", (stolen.steals as i64).into());
+    queue.set("preemptions", (stolen.preemptions as i64).into());
+    summary.set("queue", queue);
     if let Ok(path) = std::env::var("DAPD_BENCH_JSON") {
         match std::fs::write(&path, summary.dump_pretty()) {
             Ok(()) => println!("wrote JSON summary to {path}"),
@@ -369,6 +550,33 @@ fn main() {
             false,
         );
     }
+    let q = base.get("queue");
+    gate.check(
+        "queue.wait_p95_ms",
+        stolen.wait_p95_ms,
+        q.get("wait_p95_ms").as_f64(),
+        false,
+    );
+    gate.check(
+        "queue.occupancy",
+        stolen.occupancy,
+        q.get("occupancy").as_f64(),
+        true,
+    );
+    // steals/preemptions are recorded in the baseline for trend
+    // visibility; zero baselines are not gateable and skip cleanly
+    gate.check(
+        "queue.steals",
+        stolen.steals as f64,
+        q.get("steals").as_f64(),
+        true,
+    );
+    gate.check(
+        "queue.preemptions",
+        stolen.preemptions as f64,
+        q.get("preemptions").as_f64(),
+        true,
+    );
 
     // tracing must stay close to free even when enabled (the disabled
     // path is gated by the zero-alloc test; this bounds the enabled one)

@@ -12,7 +12,12 @@
 //!     dense derivation (fresh O(n*v) and O(n^2) buffers each step,
 //!     dense gather + normalize + row-sum degrees) for the
 //!     dependency-aware methods, gated at `DAPD_MIN_PIPELINE_SPEEDUP`
-//!     (default 1.0).
+//!     (default 1.0);
+//!   * **zero allocations across slot churn** — with the shared
+//!     [`BufferPool`] attached, a warm board performs exactly 0 heap
+//!     allocations across repeated admit/release cycles, extending the
+//!     steady-state contract across request turnover, not just within
+//!     one slot's lifetime.
 //!
 //! The model forward is outside the measured unit (its cost belongs to
 //! the backend; the `cache_reuse` bench covers forward reuse) — one mock
@@ -26,9 +31,11 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
+use dapd::alloc::BufferPool;
 use dapd::decode::features::{derive_slot, ModelDims, StepArena};
-use dapd::decode::{make_strategy, DecodeConfig, Method, MethodParams, StepCtx, Strategy};
+use dapd::decode::{make_strategy, DecodeConfig, Method, MethodParams, SlotBatch, StepCtx, Strategy};
 use dapd::graph::{max_normalize, DepGraph, EdgeScores};
 use dapd::runtime::{ForwardModel, MockModel, StepOutput};
 use dapd::tensor::{argmax, entropy, softmax_inplace};
@@ -391,6 +398,54 @@ fn main() {
     }
     table.print();
 
+    // ---- slot-churn section: the pooled allocator extends the
+    // zero-alloc contract across admit/retire, not just within a slot's
+    // lifetime (the per-step sections above) ---------------------------
+    let churn_model = MockModel::new(4, 64, 24, 48);
+    let churn_cfg = DecodeConfig::new(Method::DapdStaged);
+    let churn_prompt = vec![7i32; 24];
+    let pool = Arc::new(BufferPool::new(16));
+    let mut board = SlotBatch::new(&churn_model, &churn_cfg).unwrap();
+    board.attach_pool(Arc::clone(&pool));
+    // warm: grow the arenas, strategies, and pool free lists to peak
+    for _ in 0..5 {
+        for id in 0..4u64 {
+            board.admit(id, &churn_prompt).unwrap();
+        }
+        for id in 0..4u64 {
+            assert!(board.release(id), "admitted slot must release");
+        }
+    }
+    let churn_cycles = 50usize;
+    let a0 = allocs();
+    for _ in 0..churn_cycles {
+        for id in 0..4u64 {
+            board.admit(id, &churn_prompt).unwrap();
+        }
+        for id in 0..4u64 {
+            board.release(id);
+        }
+    }
+    let churn_allocs = allocs() - a0;
+    let ps = pool.stats();
+    println!(
+        "\nslot churn: {churn_allocs} allocations across {churn_cycles} warm \
+         admit/release cycles (pool: {} acquires, {} hits, {} misses, {} pooled)",
+        ps.acquires,
+        ps.hits,
+        ps.misses,
+        pool.pooled()
+    );
+    assert_eq!(
+        churn_allocs, 0,
+        "{churn_allocs} allocations across {churn_cycles} warm admit/release \
+         cycles (the pooled allocator must make slot churn allocation-free)"
+    );
+    assert!(
+        ps.hits > 0 && ps.dropped == 0,
+        "churn must reuse pooled buffers (stats: {ps:?})"
+    );
+
     let min_required: f64 = std::env::var("DAPD_MIN_PIPELINE_SPEEDUP")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -409,6 +464,7 @@ fn main() {
         let mut summary = Json::obj();
         summary.set("bench", "step_pipeline".into());
         summary.set("zero_alloc_steady_state", true.into());
+        summary.set("zero_alloc_slot_churn", true.into());
         summary.set("min_dapd_speedup", min_dapd_speedup.into());
         summary.set("rows", Json::Arr(rows));
         match std::fs::write(&path, summary.dump()) {

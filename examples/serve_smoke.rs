@@ -173,6 +173,10 @@ fn check_observability(addr: &str) -> Result<()> {
         "dapd_requests{worker=\"all\"}",
         "# TYPE dapd_stage_duration_seconds histogram",
         "dapd_inflight",
+        // scheduler counters + the per-group queue-depth gauge series
+        "dapd_steals{worker=\"all\"}",
+        "dapd_preemptions{worker=\"all\"}",
+        "dapd_queue_depth{group=\"",
     ] {
         if !text.contains(needle) {
             bail!("observability: exposition missing `{needle}`");

@@ -1,0 +1,300 @@
+//! Pooled board-buffer allocator: size-class free lists for the decode
+//! layer's per-slot buffers.
+//!
+//! PR 3 established a zero-steady-state-allocation contract *within* a
+//! slot's lifetime (the [`crate::decode::StepArena`] reuse).  This pool
+//! extends it *across* slot churn: the per-slot board buffers
+//! (`commit_step`, the per-step commit CSR) are acquired here on admit
+//! and released here on retire, so a worker that admits, drains, and
+//! backfills slots indefinitely performs no heap allocation once the
+//! pool is warm — regardless of how many requests flow through or how
+//! many workers share the pool.
+//!
+//! Design:
+//! * **Size classes** are powers of two.  `acquire_*(len)` returns an
+//!   empty vector with capacity `>= len.next_power_of_two()`; releases
+//!   file the buffer under the largest class its capacity covers, so a
+//!   released buffer always satisfies any future request routed to its
+//!   class.
+//! * **Bounded retention**: each class keeps at most `per_class_cap`
+//!   buffers (`--pool-cap`); beyond that, released buffers are dropped,
+//!   so a burst cannot pin memory forever.
+//! * **Shared**: one `Arc<BufferPool>` serves every worker's boards;
+//!   the free lists sit behind a mutex that is only touched at slot
+//!   admit/retire boundaries (never inside the step loop), so
+//!   contention is bounded by request churn, not step rate.
+//!
+//! The steady-state claim is checked by the `step_pipeline` bench's
+//! counting-allocator churn section, not just asserted here.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Number of power-of-two size classes (class `c` holds buffers with
+/// capacity in `[2^c, 2^(c+1))`); 48 classes cover any realistic board.
+const CLASSES: usize = 48;
+
+/// Cumulative acquire/release statistics for one element type.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PoolStats {
+    /// total acquires
+    pub acquires: u64,
+    /// acquires served from a free list (no heap allocation)
+    pub hits: u64,
+    /// acquires that had to allocate (cold pool / new high-water mark)
+    pub misses: u64,
+    /// total releases accepted back into a free list
+    pub releases: u64,
+    /// releases dropped because the class was at `per_class_cap`
+    pub dropped: u64,
+}
+
+/// Size-class free lists for one element type `T`.
+struct Classes<T> {
+    lists: Mutex<Vec<Vec<Vec<T>>>>,
+}
+
+impl<T> Classes<T> {
+    fn new() -> Classes<T> {
+        Classes {
+            lists: Mutex::new((0..CLASSES).map(|_| Vec::new()).collect()),
+        }
+    }
+
+    fn acquire(&self, len: usize, stats: &Counters) -> Vec<T> {
+        stats.acquires.fetch_add(1, Ordering::Relaxed);
+        let class = class_for_len(len);
+        if let Some(v) = self.lists.lock().unwrap()[class].pop() {
+            stats.hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        stats.misses.fetch_add(1, Ordering::Relaxed);
+        Vec::with_capacity(class_capacity(class, len))
+    }
+
+    fn release(&self, mut v: Vec<T>, per_class_cap: usize, stats: &Counters) {
+        if v.capacity() == 0 || per_class_cap == 0 {
+            stats.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        v.clear();
+        let class = class_for_cap(v.capacity());
+        let mut lists = self.lists.lock().unwrap();
+        if lists[class].len() >= per_class_cap {
+            stats.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        lists[class].push(v);
+        stats.releases.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn pooled(&self) -> usize {
+        self.lists.lock().unwrap().iter().map(|l| l.len()).sum()
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    acquires: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    releases: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> PoolStats {
+        PoolStats {
+            acquires: self.acquires.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            releases: self.releases.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Class whose buffers satisfy a request for `len` elements: the
+/// exponent of `len.next_power_of_two()`.
+fn class_for_len(len: usize) -> usize {
+    let want = len.next_power_of_two().max(1);
+    (want.trailing_zeros() as usize).min(CLASSES - 1)
+}
+
+/// Class a buffer of `cap` elements files under: the largest class
+/// whose requests it can satisfy (`2^class <= cap`).
+fn class_for_cap(cap: usize) -> usize {
+    debug_assert!(cap > 0);
+    ((usize::BITS - 1 - cap.leading_zeros()) as usize).min(CLASSES - 1)
+}
+
+/// Capacity to allocate on a pool miss: the class's full width, so the
+/// buffer re-files under the same class on release no matter which
+/// `len` within the class asked for it.
+fn class_capacity(class: usize, len: usize) -> usize {
+    (1usize << (class as u32).min(usize::BITS - 2)).max(len)
+}
+
+/// A shared pool of reusable board buffers, one free-list set per
+/// element type the decode layer churns.
+pub struct BufferPool {
+    usize_bufs: Classes<usize>,
+    per_class_cap: usize,
+    stats: Counters,
+}
+
+impl BufferPool {
+    /// A pool retaining at most `per_class_cap` buffers per size class
+    /// (0 disables retention: every acquire allocates, every release
+    /// drops).
+    pub fn new(per_class_cap: usize) -> BufferPool {
+        BufferPool {
+            usize_bufs: Classes::new(),
+            per_class_cap,
+            stats: Counters::default(),
+        }
+    }
+
+    /// An empty `Vec<usize>` with capacity for at least `len` elements,
+    /// reused from the pool when one is available.
+    pub fn acquire_usize(&self, len: usize) -> Vec<usize> {
+        self.usize_bufs.acquire(len, &self.stats)
+    }
+
+    /// Return a buffer to the pool (cleared; contents are discarded).
+    pub fn release_usize(&self, v: Vec<usize>) {
+        self.usize_bufs.release(v, self.per_class_cap, &self.stats);
+    }
+
+    /// Buffers currently held in free lists.
+    pub fn pooled(&self) -> usize {
+        self.usize_bufs.pooled()
+    }
+
+    /// Cumulative acquire/release statistics.
+    pub fn stats(&self) -> PoolStats {
+        self.stats.snapshot()
+    }
+}
+
+impl Default for BufferPool {
+    /// Matches the serve default (`--pool-cap 64`).
+    fn default() -> BufferPool {
+        BufferPool::new(64)
+    }
+}
+
+impl std::fmt::Debug for BufferPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("BufferPool")
+            .field("per_class_cap", &self.per_class_cap)
+            .field("pooled", &self.pooled())
+            .field("stats", &s)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_roundtrip_reuses_capacity() {
+        let pool = BufferPool::new(8);
+        let mut v = pool.acquire_usize(10);
+        assert!(v.is_empty() && v.capacity() >= 10);
+        v.resize(10, 7);
+        let cap = v.capacity();
+        let ptr = v.as_ptr();
+        pool.release_usize(v);
+        assert_eq!(pool.pooled(), 1);
+        let v2 = pool.acquire_usize(12); // same class (16)
+        assert!(v2.is_empty(), "pooled buffers come back cleared");
+        assert_eq!(v2.capacity(), cap);
+        assert_eq!(v2.as_ptr(), ptr, "same buffer must be reused");
+        let s = pool.stats();
+        assert_eq!(s.acquires, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn classes_do_not_serve_undersized_buffers() {
+        let pool = BufferPool::new(8);
+        pool.release_usize(Vec::with_capacity(8));
+        // a request for 100 elements must not get the 8-cap buffer
+        let v = pool.acquire_usize(100);
+        assert!(v.capacity() >= 100);
+        assert_eq!(pool.stats().misses, 1);
+        assert_eq!(pool.pooled(), 1, "small buffer stays pooled");
+    }
+
+    #[test]
+    fn per_class_cap_bounds_retention() {
+        let pool = BufferPool::new(2);
+        for _ in 0..5 {
+            pool.release_usize(Vec::with_capacity(16));
+        }
+        assert_eq!(pool.pooled(), 2);
+        let s = pool.stats();
+        assert_eq!(s.releases, 2);
+        assert_eq!(s.dropped, 3);
+    }
+
+    #[test]
+    fn zero_cap_pool_never_retains() {
+        let pool = BufferPool::new(0);
+        pool.release_usize(Vec::with_capacity(16));
+        assert_eq!(pool.pooled(), 0);
+        assert!(pool.acquire_usize(16).capacity() >= 16);
+        assert_eq!(pool.stats().misses, 1);
+    }
+
+    #[test]
+    fn zero_len_acquire_is_safe() {
+        let pool = BufferPool::new(4);
+        let v = pool.acquire_usize(0);
+        assert!(v.is_empty());
+        pool.release_usize(v);
+    }
+
+    #[test]
+    fn class_math_is_consistent() {
+        // every (release cap, acquire len) pair within one class must
+        // satisfy the acquire
+        for class in 0..20usize {
+            let cap = 1usize << class;
+            assert_eq!(class_for_cap(cap), class);
+            assert_eq!(class_for_len(cap), class);
+            if cap > 2 {
+                assert_eq!(class_for_cap(cap + 1), class, "caps round down");
+                assert_eq!(class_for_len(cap - 1), class, "lens round up");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let pool = Arc::new(BufferPool::new(64));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    let mut v = p.acquire_usize(32);
+                    v.push(1);
+                    p.release_usize(v);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = pool.stats();
+        assert_eq!(s.acquires, 400);
+        assert!(s.hits > 0);
+        assert!(pool.pooled() <= 64);
+    }
+}

@@ -15,6 +15,7 @@
 //!   "cache_enabled": true, "refresh_every": 4,
 //!   "cache_epsilon": 0.0, "prefix_lru_cap": 64,
 //!   "feature_threads": 1, "kernels": "native",
+//!   "steal": true, "preempt_deadline_ms": 0, "pool_cap": 64,
 //!   "trace": false, "trace_out": "trace.json"
 //! }
 //! ```
@@ -34,6 +35,13 @@
 //! backend for the vocab-width step math; unset, the `DAPD_KERNELS`
 //! environment variable wins, else runtime CPU detection picks the
 //! native tier (see `tensor::kernels`).
+//! The scheduler knobs (CLI: `--steal`/`--no-steal`,
+//! `--preempt-deadline-ms`, `--pool-cap`) govern cross-group packing:
+//! whether an idle worker steals the oldest shape-compatible request
+//! from another group's queue, how close to its deadline a request must
+//! be before it may preempt a best-effort slot (0 = preemption off),
+//! and how many board buffers per size class the shared allocator pool
+//! retains across slot churn.
 //! The admission/streaming knobs (CLI: `--max-inflight`,
 //! `--deadline-ms`, `--max-line-bytes`, `--drain-wait-ms`) bound
 //! end-to-end concurrency, default a per-request latency budget
@@ -94,6 +102,16 @@ pub struct ServeSettings {
     pub prefix_lru_cap: usize,
     /// scoped threads for the per-step feature fan-out (1 = sequential)
     pub feature_threads: usize,
+    /// let idle workers steal the oldest shape-compatible request from
+    /// other groups' queues (`--steal`/`--no-steal`)
+    pub steal: bool,
+    /// deadline horizon within which a request may preempt a
+    /// best-effort slot, in ms (0 = preemption off;
+    /// `--preempt-deadline-ms`)
+    pub preempt_deadline_ms: u64,
+    /// board buffers retained per size class in the shared allocator
+    /// pool (0 = no retention; `--pool-cap`)
+    pub pool_cap: usize,
     /// kernel backend pin for the vocab-width step math; `None` defers
     /// to `DAPD_KERNELS` / runtime CPU detection
     pub kernels: Option<KernelBackend>,
@@ -138,6 +156,9 @@ impl Default for ServeSettings {
             cache_epsilon: CacheConfig::default().epsilon,
             prefix_lru_cap: CacheConfig::default().prefix_lru_cap,
             feature_threads: 1,
+            steal: true,
+            preempt_deadline_ms: 0,
+            pool_cap: 64,
             kernels: None,
             trace: env_trace_default(),
             trace_out: None,
@@ -217,6 +238,15 @@ impl ServeSettings {
         if let Some(v) = j.get("feature_threads").as_usize() {
             self.feature_threads = v;
         }
+        if let Some(v) = j.get("steal").as_bool() {
+            self.steal = v;
+        }
+        if let Some(v) = j.get("preempt_deadline_ms").as_usize() {
+            self.preempt_deadline_ms = v as u64;
+        }
+        if let Some(v) = j.get("pool_cap").as_usize() {
+            self.pool_cap = v;
+        }
         if let Some(v) = j.get("kernels").as_str() {
             self.kernels = Some(parse_kernels(v)?);
         }
@@ -282,6 +312,17 @@ impl ServeSettings {
         self.cache_epsilon = args.f64_or("cache-epsilon", self.cache_epsilon as f64) as f32;
         self.prefix_lru_cap = args.usize_or("prefix-lru-cap", self.prefix_lru_cap);
         self.feature_threads = args.usize_or("feature-threads", self.feature_threads);
+        if args.has("steal") {
+            self.steal = true;
+        }
+        // flags override a config file in both directions; --no-steal
+        // wins if both are given
+        if args.has("no-steal") {
+            self.steal = false;
+        }
+        self.preempt_deadline_ms =
+            args.usize_or("preempt-deadline-ms", self.preempt_deadline_ms as usize) as u64;
+        self.pool_cap = args.usize_or("pool-cap", self.pool_cap);
         if let Some(v) = args.get("kernels") {
             self.kernels = Some(parse_kernels(v)?);
         }
@@ -644,6 +685,44 @@ mod tests {
         ]))
         .unwrap();
         assert!(!s.trace);
+    }
+
+    #[test]
+    fn scheduler_settings_resolve_from_file_and_flags() {
+        // defaults: stealing on, preemption off, bounded pool
+        let s = ServeSettings::resolve(&args(&[])).unwrap();
+        assert!(s.steal);
+        assert_eq!(s.preempt_deadline_ms, 0);
+        assert_eq!(s.pool_cap, 64);
+
+        let dir = std::env::temp_dir().join("dapd_cfg_sched_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"steal": false, "preempt_deadline_ms": 250, "pool_cap": 8}"#,
+        )
+        .unwrap();
+        let s = ServeSettings::resolve(&args(&["--config", path.to_str().unwrap()])).unwrap();
+        assert!(!s.steal);
+        assert_eq!(s.preempt_deadline_ms, 250);
+        assert_eq!(s.pool_cap, 8);
+        // --steal overrides a file that disabled stealing
+        let s = ServeSettings::resolve(&args(&["--config", path.to_str().unwrap(), "--steal"]))
+            .unwrap();
+        assert!(s.steal);
+        // --no-steal wins over the default
+        let s = ServeSettings::resolve(&args(&[
+            "--no-steal",
+            "--preempt-deadline-ms",
+            "500",
+            "--pool-cap",
+            "0",
+        ]))
+        .unwrap();
+        assert!(!s.steal);
+        assert_eq!(s.preempt_deadline_ms, 500);
+        assert_eq!(s.pool_cap, 0, "0 disables pool retention, not a config error");
     }
 
     #[test]

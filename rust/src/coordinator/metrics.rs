@@ -25,6 +25,12 @@ pub struct Metrics {
     /// streamed requests reaped mid-flight (client went away; the slot
     /// was released and its capacity recovered)
     pub cancelled: AtomicU64,
+    /// cross-group work steals: requests adopted onto a board whose
+    /// group differs, via the shape-compatibility pick
+    pub steals: AtomicU64,
+    /// best-effort residents evicted from a full board (and requeued)
+    /// to make room for a deadline-urgent request
+    pub preemptions: AtomicU64,
     pub queue_depth: AtomicU64,
     pub busy_micros: AtomicU64,
     /// forward passes run (continuous batching: one per step)
@@ -232,6 +238,11 @@ impl Metrics {
             "cancelled",
             (self.cancelled.load(Ordering::Relaxed) as i64).into(),
         );
+        j.set("steals", (self.steals.load(Ordering::Relaxed) as i64).into());
+        j.set(
+            "preemptions",
+            (self.preemptions.load(Ordering::Relaxed) as i64).into(),
+        );
         j.set(
             "queue_depth",
             (self.queue_depth.load(Ordering::Relaxed) as i64).into(),
@@ -307,7 +318,7 @@ impl Metrics {
         let mut out = format!(
             "requests={} batches={} mean_batch={:.2} tokens={} tps={:.1} \
              steps={:.1} latency_p50={:.3}s p95={:.3}s p99={:.3}s errors={} \
-             rejected={} expired={} cancelled={}",
+             rejected={} expired={} cancelled={} steals={} preemptions={}",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
@@ -321,6 +332,8 @@ impl Metrics {
             self.rejected.load(Ordering::Relaxed),
             self.deadline_dropped.load(Ordering::Relaxed),
             self.cancelled.load(Ordering::Relaxed),
+            self.steals.load(Ordering::Relaxed),
+            self.preemptions.load(Ordering::Relaxed),
         );
         // any cache-layer activity (full refreshes included) surfaces
         // the cache line: a cache running all-full-forwards is exactly
@@ -477,14 +490,20 @@ mod tests {
         m.rejected.fetch_add(3, Ordering::Relaxed);
         m.deadline_dropped.fetch_add(2, Ordering::Relaxed);
         m.cancelled.fetch_add(1, Ordering::Relaxed);
+        m.steals.fetch_add(5, Ordering::Relaxed);
+        m.preemptions.fetch_add(4, Ordering::Relaxed);
         let j = m.to_json();
         assert_eq!(j.get("rejected").as_i64(), Some(3));
         assert_eq!(j.get("deadline_dropped").as_i64(), Some(2));
         assert_eq!(j.get("cancelled").as_i64(), Some(1));
+        assert_eq!(j.get("steals").as_i64(), Some(5));
+        assert_eq!(j.get("preemptions").as_i64(), Some(4));
         let r = m.report();
         assert!(r.contains("rejected=3"));
         assert!(r.contains("expired=2"));
         assert!(r.contains("cancelled=1"));
+        assert!(r.contains("steals=5"));
+        assert!(r.contains("preemptions=4"));
     }
 
     #[test]

@@ -17,6 +17,23 @@
 //! for the whole board to drain.  When the board empties the worker goes
 //! back for the oldest request of *any* group.
 //!
+//! Cross-group packing: boards are mixed-config (`SlotBatch` resolves
+//! method/tau/EOS per slot), so a worker whose own group's shard drains
+//! *steals* the oldest request from any other shard in the same
+//! shape-compatibility class ([`compat_key`]: block geometry; vocab and
+//! cache salt are uniform across one pool's replicas) instead of
+//! idling rows — `PoolOptions::steal`, on by default.  With
+//! `PoolOptions::preempt_deadline` set, a deadline-critical request
+//! whose budget is about to lapse can claim a row on a *full* board by
+//! preempting a best-effort resident (no deadline, non-streaming): the
+//! victim is released and requeued at the front of its shard, then
+//! restarted from scratch later — decoding is deterministic, so its
+//! tokens are unchanged.  Every pop site (adopt, straggler window,
+//! backfill, steal, preempt) funnels through one deadline-screened
+//! helper, and the per-slot board buffers come from one shared
+//! [`BufferPool`] so slot churn across all workers allocates nothing
+//! in steady state.
+//!
 //! Admission control is two caps checked at `submit` time: a bound on
 //! the total queued requests across all shards (`queue_cap`) and a bound
 //! on accepted-but-unfinished requests (`max_inflight`).  Violating
@@ -53,7 +70,7 @@
 
 pub mod metrics;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, sync_channel, Receiver, SyncSender};
@@ -62,6 +79,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::alloc::BufferPool;
 use crate::cache::{CacheConfig, FirstStepRows, PrefixCache, PrefixHandle};
 use crate::decode::{DecodeConfig, SlotBatch};
 use crate::obs::trace::DEFAULT_TRACE_CAPACITY;
@@ -177,9 +195,24 @@ pub fn group_key(cfg: &DecodeConfig) -> u64 {
     h
 }
 
+/// Shape-compatibility key: requests with equal keys may share a *board*
+/// even across groups, because `SlotBatch` resolves method, tau
+/// schedule, EOS policy, and step cap per slot.  Only the block
+/// geometry must match board-wide; vocab width and the cache salt are
+/// uniform across one pool's model replicas (every worker holds a
+/// replica of the same compiled model), so they need no folding here.
+pub fn compat_key(cfg: &DecodeConfig) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, b"compat");
+    h = fnv1a(h, &(cfg.blocks as u64).to_le_bytes());
+    h
+}
+
 /// One compatibility group's FIFO sub-queue.
 struct Shard {
     key: u64,
+    /// shape-compatibility class of every request in this shard
+    /// ([`compat_key`] is a function of the group's config)
+    compat: u64,
     items: VecDeque<Request>,
 }
 
@@ -187,10 +220,27 @@ struct QueueState {
     shards: Vec<Shard>,
     /// total requests across all shards (the backpressure bound)
     total: usize,
+    /// per-group queue depth, persisted at zero after a shard drains so
+    /// the Prometheus series keeps reporting every group ever seen
+    depths: BTreeMap<u64, usize>,
     closed: bool,
 }
 
 impl QueueState {
+    /// Remove the request at `pi` of shard `si`, maintaining the totals
+    /// and per-group depths (every pop path funnels through here).
+    fn take_at(&mut self, si: usize, pi: usize) -> Request {
+        let req = self.shards[si].items.remove(pi).unwrap();
+        if self.shards[si].items.is_empty() {
+            self.shards.remove(si);
+        }
+        self.total -= 1;
+        if let Some(d) = self.depths.get_mut(&req.group) {
+            *d = d.saturating_sub(1);
+        }
+        req
+    }
+
     /// Pop the globally oldest request (FIFO across shards).
     fn pop_oldest(&mut self) -> Option<Request> {
         let idx = self
@@ -200,12 +250,7 @@ impl QueueState {
             .filter(|(_, sh)| !sh.items.is_empty())
             .min_by_key(|(_, sh)| sh.items.front().unwrap().seq)
             .map(|(i, _)| i)?;
-        let req = self.shards[idx].items.pop_front().unwrap();
-        if self.shards[idx].items.is_empty() {
-            self.shards.remove(idx);
-        }
-        self.total -= 1;
-        Some(req)
+        Some(self.take_at(idx, 0))
     }
 
     /// Pop the oldest request of one compatibility group — unless an
@@ -225,22 +270,83 @@ impl QueueState {
         if older_elsewhere {
             return None;
         }
-        let req = self.shards[idx].items.pop_front().unwrap();
-        if self.shards[idx].items.is_empty() {
-            self.shards.remove(idx);
+        Some(self.take_at(idx, 0))
+    }
+
+    /// Pop the oldest request in one shape-compatibility class, any
+    /// group — the work-stealing pick, tried after [`QueueState::pop_group`]
+    /// came up empty.  Keeps the same starvation bound, generalized to
+    /// the class: an older request of an *incompatible* class wins, so
+    /// the board still drains and returns to `pop_oldest` for it.
+    fn pop_compat(&mut self, compat: u64) -> Option<Request> {
+        let idx = self
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, sh)| sh.compat == compat && !sh.items.is_empty())
+            .min_by_key(|(_, sh)| sh.items.front().unwrap().seq)
+            .map(|(i, _)| i)?;
+        let head_seq = self.shards[idx].items.front().unwrap().seq;
+        let older_elsewhere = self.shards.iter().any(|sh| {
+            sh.compat != compat
+                && sh.items.front().map(|r| r.seq < head_seq).unwrap_or(false)
+        });
+        if older_elsewhere {
+            return None;
         }
-        self.total -= 1;
-        Some(req)
+        Some(self.take_at(idx, 0))
+    }
+
+    /// Pop the oldest *deadline-urgent* request in a compatibility
+    /// class: one whose deadline falls at or before `horizon`.  Unlike
+    /// the FIFO picks this scans whole shards — an urgent request stuck
+    /// behind best-effort traffic is exactly the one preemption exists
+    /// to rescue.
+    fn pop_urgent(&mut self, compat: u64, horizon: Instant) -> Option<Request> {
+        let mut best: Option<(usize, usize, u64)> = None;
+        for (si, sh) in self.shards.iter().enumerate() {
+            if sh.compat != compat {
+                continue;
+            }
+            for (pi, r) in sh.items.iter().enumerate() {
+                let urgent = r.deadline.map(|d| d <= horizon).unwrap_or(false);
+                if urgent && best.map(|(_, _, s)| r.seq < s).unwrap_or(true) {
+                    best = Some((si, pi, r.seq));
+                }
+            }
+        }
+        let (si, pi, _) = best?;
+        Some(self.take_at(si, pi))
     }
 
     fn push(&mut self, req: Request) {
+        *self.depths.entry(req.group).or_insert(0) += 1;
         match self.shards.iter_mut().find(|sh| sh.key == req.group) {
             Some(sh) => sh.items.push_back(req),
             None => {
                 let key = req.group;
+                let compat = compat_key(&req.cfg);
                 let mut items = VecDeque::new();
                 items.push_back(req);
-                self.shards.push(Shard { key, items });
+                self.shards.push(Shard { key, compat, items });
+            }
+        }
+        self.total += 1;
+    }
+
+    /// Put a previously-popped request back at the *front* of its shard
+    /// (its original `seq` makes it the shard's oldest, so FIFO order is
+    /// preserved) — the preemption path returns its victim through here.
+    fn requeue(&mut self, req: Request) {
+        *self.depths.entry(req.group).or_insert(0) += 1;
+        match self.shards.iter_mut().find(|sh| sh.key == req.group) {
+            Some(sh) => sh.items.push_front(req),
+            None => {
+                let key = req.group;
+                let compat = compat_key(&req.cfg);
+                let mut items = VecDeque::new();
+                items.push_back(req);
+                self.shards.push(Shard { key, compat, items });
             }
         }
         self.total += 1;
@@ -272,6 +378,18 @@ pub struct PoolOptions {
     /// start with decode-path tracing enabled (`--trace`); off by
     /// default, where every trace site is one relaxed atomic load
     pub trace: bool,
+    /// work-stealing between group queues (`--steal`, on by default): a
+    /// worker whose own shard drains takes the oldest request of any
+    /// shape-compatible group instead of idling board rows
+    pub steal: bool,
+    /// deadline-preemption horizon (`--preempt-deadline-ms`): a queued
+    /// request whose deadline falls within this window may claim a row
+    /// on a full board by preempting a best-effort resident.
+    /// `Duration::ZERO` (the default) disables preemption.
+    pub preempt_deadline: Duration,
+    /// per-size-class retention cap of the shared board-buffer pool
+    /// (`--pool-cap`); 0 disables pooling entirely
+    pub pool_cap: usize,
 }
 
 impl Default for PoolOptions {
@@ -283,6 +401,9 @@ impl Default for PoolOptions {
             max_inflight: 0,
             cache: CacheConfig::default(),
             trace: false,
+            steal: true,
+            preempt_deadline: Duration::ZERO,
+            pool_cap: 64,
         }
     }
 }
@@ -324,6 +445,12 @@ pub struct Coordinator {
     prefix: Option<PrefixHandle>,
     /// decode-path trace rings: one lane per worker + a coordinator lane
     tracing: Arc<Tracing>,
+    /// work-stealing between group queues (see [`PoolOptions::steal`])
+    steal: bool,
+    /// deadline-preemption horizon; ZERO disables preemption
+    preempt_deadline: Duration,
+    /// board-buffer pool shared by every worker's `SlotBatch`
+    pool: Arc<BufferPool>,
 }
 
 impl Coordinator {
@@ -340,6 +467,7 @@ impl Coordinator {
                 state: Mutex::new(QueueState {
                     shards: Vec::new(),
                     total: 0,
+                    depths: BTreeMap::new(),
                     closed: false,
                 }),
                 available: Condvar::new(),
@@ -353,6 +481,9 @@ impl Coordinator {
             cache_cfg,
             prefix,
             tracing: Tracing::new(workers + 1, DEFAULT_TRACE_CAPACITY, trace),
+            steal: true,
+            preempt_deadline: Duration::ZERO,
+            pool: Arc::new(BufferPool::default()),
         }
     }
 
@@ -369,19 +500,17 @@ impl Coordinator {
         let cache_cfg = self.cache_cfg.clone();
         let prefix = self.prefix.clone();
         let trace = self.tracing.recorder(worker_id);
+        let policy = WorkerPolicy {
+            batch_wait,
+            steal: self.steal,
+            preempt_deadline: self.preempt_deadline,
+            pool: Arc::clone(&self.pool),
+        };
         std::thread::Builder::new()
             .name(format!("dapd-infer-{worker_id}"))
             .spawn(move || {
                 worker_loop(
-                    worker_id,
-                    model,
-                    queue,
-                    global,
-                    local,
-                    pending,
-                    batch_wait,
-                    cache_cfg,
-                    prefix,
+                    worker_id, model, queue, global, local, pending, policy, cache_cfg, prefix,
                     trace,
                 )
             })
@@ -427,7 +556,7 @@ impl Coordinator {
         } else {
             None
         };
-        let coord = Coordinator::with_capacity(
+        let mut coord = Coordinator::with_capacity(
             opts.queue_cap,
             opts.workers,
             opts.cache.clone(),
@@ -435,6 +564,9 @@ impl Coordinator {
             opts.max_inflight,
             opts.trace,
         );
+        coord.steal = opts.steal;
+        coord.preempt_deadline = opts.preempt_deadline;
+        coord.pool = Arc::new(BufferPool::new(opts.pool_cap));
         let mut handles = Vec::with_capacity(opts.workers);
         for w in 0..opts.workers {
             let model = pool.replica()?;
@@ -601,6 +733,19 @@ impl Coordinator {
         self.prefix.as_ref().map(|h| &h.cache)
     }
 
+    /// Current per-group queue depths as `(group_key, depth)` pairs,
+    /// sorted by key.  Groups persist at depth 0 after their shard
+    /// drains, so exported series don't disappear between scrapes.
+    pub fn queue_depths(&self) -> Vec<(u64, u64)> {
+        let st = self.queue.state.lock().unwrap();
+        st.depths.iter().map(|(&k, &v)| (k, v as u64)).collect()
+    }
+
+    /// Acquire/release statistics of the shared board-buffer pool.
+    pub fn pool_stats(&self) -> crate::alloc::PoolStats {
+        self.pool.stats()
+    }
+
     /// Aggregate + per-worker report for logs.
     pub fn report(&self) -> String {
         let mut out = self.metrics.report();
@@ -619,6 +764,91 @@ struct InFlight {
     /// global submit sequence number — the trace ticket linking this
     /// request's admission, queue-wait, and request spans
     seq: u64,
+    /// group key, retained (with the fields below) so a preempted
+    /// request can be requeued and restarted from scratch
+    group: u64,
+    deadline: Option<Instant>,
+    prompt: Vec<i32>,
+    cfg: DecodeConfig,
+    prefill: Option<Arc<FirstStepRows>>,
+}
+
+/// Per-worker scheduling policy, fixed at pool start.
+#[derive(Clone)]
+struct WorkerPolicy {
+    /// dynamic-batching straggler window before the first step
+    batch_wait: Duration,
+    /// steal shape-compatible requests from other groups' shards
+    steal: bool,
+    /// deadline-preemption horizon; ZERO disables preemption
+    preempt_deadline: Duration,
+    /// shared board-buffer pool attached to every worker's `SlotBatch`
+    pool: Arc<BufferPool>,
+}
+
+/// Which request a pop site is asking the queue for.
+#[derive(Clone, Copy)]
+enum Pick {
+    /// globally oldest, any group (board adoption)
+    Oldest,
+    /// oldest of one group (straggler window / backfill)
+    Group(u64),
+    /// oldest of any group in one shape-compatibility class (stealing)
+    Compat(u64),
+    /// oldest request whose deadline falls at or before `horizon`
+    /// within one compatibility class (preemption)
+    Urgent { compat: u64, horizon: Instant },
+}
+
+/// The single deadline-screened pop: every queue-pop site — adoption,
+/// straggler window, backfill, steal, preemption — funnels through
+/// here, so no pop path (present or future) can skip the deadline
+/// screen.  Sheds expired requests until an admissible one (or none)
+/// remains for the pick.
+fn pop_screened(
+    st: &mut QueueState,
+    pick: Pick,
+    global: &Metrics,
+    local: &Metrics,
+    pending: &AtomicU64,
+) -> Option<Request> {
+    loop {
+        let req = match pick {
+            Pick::Oldest => st.pop_oldest(),
+            Pick::Group(key) => st.pop_group(key),
+            Pick::Compat(compat) => st.pop_compat(compat),
+            Pick::Urgent { compat, horizon } => st.pop_urgent(compat, horizon),
+        }?;
+        if let Some(req) = screen_deadline(req, global, local, pending) {
+            return Some(req);
+        }
+    }
+}
+
+/// Pop the next request admissible on a running board: the board's own
+/// group first, then — with stealing enabled — the oldest request of
+/// any shape-compatible group.  Cross-group picks count as steals.
+fn next_for_board(
+    st: &mut QueueState,
+    group: u64,
+    compat: u64,
+    steal: bool,
+    global: &Metrics,
+    local: &Metrics,
+    pending: &AtomicU64,
+) -> Option<Request> {
+    if let Some(req) = pop_screened(st, Pick::Group(group), global, local, pending) {
+        return Some(req);
+    }
+    if !steal {
+        return None;
+    }
+    let req = pop_screened(st, Pick::Compat(compat), global, local, pending)?;
+    if req.group != group {
+        global.steals.fetch_add(1, Ordering::Relaxed);
+        local.steals.fetch_add(1, Ordering::Relaxed);
+    }
+    Some(req)
 }
 
 /// Deadline screen at queue-pop time: pass unexpired requests through,
@@ -660,34 +890,50 @@ fn admit_request(
     req: Request,
 ) {
     *ticket += 1;
-    let Request {
-        prompt,
-        reply,
-        submitted,
-        prefill,
-        seq,
-        ..
-    } = req;
     // adoption ends the queue wait: histogram it (always-on) and span it
-    let wait = submitted.elapsed();
+    let wait = req.submitted.elapsed();
     global.record_queue_wait(wait);
     local.record_queue_wait(wait);
-    trace.queue_wait(seq, wait.as_nanos() as u64);
+    trace.queue_wait(req.seq, wait.as_nanos() as u64);
     // streamed requests need the board's per-step commit log; enabling it
     // is idempotent and scoped to this worker's current batch
-    if matches!(reply, Reply::Stream(_)) {
+    if matches!(req.reply, Reply::Stream(_)) {
         batch.enable_commit_log();
     }
-    // the prefix cache was consulted at submit time; hand the rows over
-    match batch.admit_prefetched(*ticket, &prompt, prefill) {
+    // the prefix cache was consulted at submit time; hand the rows over.
+    // Admission carries the request's *own* config: mixed-config boards
+    // decode every slot under exactly what its client submitted.
+    match batch.admit_prefetched_with(*ticket, &req.prompt, req.prefill.clone(), req.cfg.clone()) {
         Ok(_slot) => {
-            inflight.insert(*ticket, InFlight { reply, submitted, seq });
+            let Request {
+                prompt,
+                cfg,
+                submitted,
+                deadline,
+                reply,
+                group,
+                seq,
+                prefill,
+            } = req;
+            inflight.insert(
+                *ticket,
+                InFlight {
+                    reply,
+                    submitted,
+                    seq,
+                    group,
+                    deadline,
+                    prompt,
+                    cfg,
+                    prefill,
+                },
+            );
         }
         Err(e) => {
             logging::info(&format!("worker {worker_id}: rejected admit: {e:#}"));
             global.errors.fetch_add(1, Ordering::Relaxed);
             local.errors.fetch_add(1, Ordering::Relaxed);
-            if let Reply::Stream(tx) = &reply {
+            if let Reply::Stream(tx) = &req.reply {
                 let _ = tx.send(StreamEvent::Error(format!("admit rejected: {e:#}")));
             }
             pending.fetch_sub(1, Ordering::Relaxed);
@@ -696,8 +942,9 @@ fn admit_request(
 }
 
 /// One inference worker: adopt the oldest group, batch continuously at
-/// step granularity, drain, repeat.  Exits when the coordinator is closed
-/// and every shard is empty.
+/// step granularity (backfilling from its own shard, then stealing from
+/// shape-compatible ones), drain, repeat.  Exits when the coordinator
+/// is closed and every shard is empty.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
@@ -706,7 +953,7 @@ fn worker_loop(
     global: Arc<Metrics>,
     local: Arc<Metrics>,
     pending: Arc<AtomicU64>,
-    batch_wait: Duration,
+    policy: WorkerPolicy,
     cache_cfg: CacheConfig,
     prefix: Option<PrefixHandle>,
     trace: TraceRecorder,
@@ -720,12 +967,12 @@ fn worker_loop(
         let first = {
             let mut st = queue.state.lock().unwrap();
             'adopt: loop {
-                while let Some(req) = st.pop_oldest() {
+                if let Some(req) = pop_screened(&mut st, Pick::Oldest, &global, &local, &pending)
+                {
                     global.queue_depth.store(st.total as u64, Ordering::Relaxed);
-                    if let Some(req) = screen_deadline(req, &global, &local, &pending) {
-                        break 'adopt req;
-                    }
+                    break 'adopt req;
                 }
+                global.queue_depth.store(st.total as u64, Ordering::Relaxed);
                 if st.closed {
                     return;
                 }
@@ -738,6 +985,7 @@ fn worker_loop(
         };
 
         let group = first.group;
+        let compat = compat_key(&first.cfg);
         let cfg = first.cfg.clone();
         let mut batch = match SlotBatch::with_cache(model, &cfg, &cache_cfg, prefix.clone()) {
             Ok(b) => b,
@@ -754,6 +1002,7 @@ fn worker_loop(
             }
         };
         batch.attach_trace(trace.clone());
+        batch.attach_pool(Arc::clone(&policy.pool));
         let mut inflight: HashMap<u64, InFlight> = HashMap::new();
         admit_request(
             worker_id,
@@ -768,14 +1017,21 @@ fn worker_loop(
         );
 
         // ---- dynamic-batching window: wait for stragglers once ----------
-        if batch.has_free_slot() && !batch_wait.is_zero() {
-            let window_end = Instant::now() + batch_wait;
+        if batch.has_free_slot() && !policy.batch_wait.is_zero() {
+            let window_end = Instant::now() + policy.batch_wait;
             let mut st = queue.state.lock().unwrap();
             loop {
                 while batch.has_free_slot() {
-                    let Some(req) = st.pop_group(group) else { break };
-                    let Some(req) = screen_deadline(req, &global, &local, &pending) else {
-                        continue;
+                    let Some(req) = next_for_board(
+                        &mut st,
+                        group,
+                        compat,
+                        policy.steal,
+                        &global,
+                        &local,
+                        &pending,
+                    ) else {
+                        break;
                     };
                     admit_request(
                         worker_id,
@@ -876,13 +1132,80 @@ fn worker_loop(
                     break;
                 }
             }
-            // backfill freed slots from this group's shard, step-granular
+            // deadline preemption: a full board yields a best-effort row
+            // (no deadline, non-streaming) to a queued request whose
+            // deadline falls within the policy horizon.  The victim is
+            // requeued at the front of its shard and restarted later —
+            // decoding is deterministic, so its tokens are unchanged.
+            if !policy.preempt_deadline.is_zero() && !batch.has_free_slot() {
+                // newest best-effort resident: least progress to discard
+                let victim = inflight
+                    .iter()
+                    .filter(|(_, fl)| {
+                        fl.deadline.is_none() && matches!(fl.reply, Reply::Once(_))
+                    })
+                    .max_by_key(|(_, fl)| fl.seq)
+                    .map(|(id, _)| *id);
+                if let Some(vid) = victim {
+                    let urgent = {
+                        let mut st = queue.state.lock().unwrap();
+                        let horizon = Instant::now() + policy.preempt_deadline;
+                        let got = pop_screened(
+                            &mut st,
+                            Pick::Urgent { compat, horizon },
+                            &global,
+                            &local,
+                            &pending,
+                        );
+                        if got.is_some() {
+                            let fl = inflight.remove(&vid).unwrap();
+                            batch.release(vid);
+                            st.requeue(Request {
+                                prompt: fl.prompt,
+                                cfg: fl.cfg,
+                                submitted: fl.submitted,
+                                deadline: fl.deadline,
+                                reply: fl.reply,
+                                group: fl.group,
+                                seq: fl.seq,
+                                prefill: fl.prefill,
+                            });
+                            global.preemptions.fetch_add(1, Ordering::Relaxed);
+                            local.preemptions.fetch_add(1, Ordering::Relaxed);
+                            queue.available.notify_one();
+                        }
+                        got
+                    };
+                    if let Some(req) = urgent {
+                        admit_request(
+                            worker_id,
+                            &mut ticket,
+                            &mut batch,
+                            &mut inflight,
+                            &global,
+                            &local,
+                            &pending,
+                            &trace,
+                            req,
+                        );
+                    }
+                }
+            }
+            // backfill freed slots: this group's shard first, then steal
+            // the oldest shape-compatible request — step-granular
             if batch.has_free_slot() {
                 let mut st = queue.state.lock().unwrap();
                 while batch.has_free_slot() {
-                    let Some(req) = st.pop_group(group) else { break };
-                    let Some(req) = screen_deadline(req, &global, &local, &pending) else {
-                        continue;
+                    let Some(req) = next_for_board(
+                        &mut st,
+                        group,
+                        compat,
+                        policy.steal,
+                        &global,
+                        &local,
+                        &pending,
+                    ) else {
+                        break;
                     };
                     admit_request(
                         worker_id,
@@ -1232,5 +1555,38 @@ mod tests {
         assert_ne!(group_key(&a), group_key(&c));
         let d = DecodeConfig::new(Method::DapdStaged);
         assert_ne!(group_key(&a), group_key(&d));
+    }
+
+    #[test]
+    fn compat_key_relaxes_group_key_to_board_shape() {
+        // different methods, same block geometry: distinct groups, one
+        // board-compatibility class (the cross-group packing premise)
+        let a = cfg();
+        let b = DecodeConfig::new(Method::DapdStaged);
+        assert_ne!(group_key(&a), group_key(&b));
+        assert_eq!(compat_key(&a), compat_key(&b));
+        let mut c = cfg();
+        c.blocks = 4;
+        assert_ne!(compat_key(&a), compat_key(&c), "block geometry must split");
+    }
+
+    #[test]
+    fn queue_depths_track_groups_and_persist_at_zero() {
+        let coord = Coordinator::with_capacity(8, 1, CacheConfig::default(), None, 0, false);
+        let _r0 = coord.submit(vec![5; 4], cfg()).unwrap();
+        let _r1 = coord.submit(vec![5; 4], cfg()).unwrap();
+        let _r2 = coord
+            .submit(vec![5; 4], DecodeConfig::new(Method::DapdStaged))
+            .unwrap();
+        let depths = coord.queue_depths();
+        assert_eq!(depths.len(), 2, "two groups queued");
+        assert_eq!(depths.iter().map(|&(_, d)| d).sum::<u64>(), 3);
+        let handle =
+            coord.spawn_worker(0, Box::new(MockModel::new(2, 16, 4, 12)), Duration::ZERO);
+        coord.shutdown();
+        handle.join().unwrap();
+        let depths = coord.queue_depths();
+        assert_eq!(depths.len(), 2, "drained groups must persist in the map");
+        assert!(depths.iter().all(|&(_, d)| d == 0));
     }
 }

@@ -172,6 +172,9 @@ impl StepTimings {
 pub struct FeatureJob<'a> {
     /// batch row index
     pub slot: usize,
+    /// the slot's own decode config (mixed-config boards derive each
+    /// row under its request's method/EOS policy, not a board constant)
+    pub cfg: &'a DecodeConfig,
     /// the slot's active block before this step
     pub cur_block: usize,
     /// the slot's token row, [seq_len]
@@ -197,20 +200,14 @@ impl FeaturePipeline {
         self.threads
     }
 
-    /// Derive every job's features.  Jobs touch disjoint arenas and read
-    /// shared immutable state, so the parallel fan-out is bit-identical
-    /// to the sequential pass.
-    pub fn derive_board(
-        &self,
-        cfg: &DecodeConfig,
-        dims: &ModelDims,
-        out: &StepOutput,
-        jobs: &mut [FeatureJob<'_>],
-    ) {
+    /// Derive every job's features, each under its own job config.
+    /// Jobs touch disjoint arenas and read shared immutable state, so
+    /// the parallel fan-out is bit-identical to the sequential pass.
+    pub fn derive_board(&self, dims: &ModelDims, out: &StepOutput, jobs: &mut [FeatureJob<'_>]) {
         if self.threads <= 1 || jobs.len() <= 1 {
             for job in jobs.iter_mut() {
                 derive_slot(
-                    cfg,
+                    job.cfg,
                     dims,
                     job.tokens,
                     out,
@@ -222,7 +219,7 @@ impl FeaturePipeline {
         } else {
             pool::scope_chunks(self.threads, jobs, |job| {
                 derive_slot(
-                    cfg,
+                    job.cfg,
                     dims,
                     job.tokens,
                     out,
@@ -536,12 +533,13 @@ mod tests {
                 .enumerate()
                 .map(|(s, arena)| FeatureJob {
                     slot: s,
+                    cfg: &cfg,
                     cur_block: 0,
                     tokens: &tokens[s * dims.seq_len..(s + 1) * dims.seq_len],
                     arena,
                 })
                 .collect();
-            FeaturePipeline::new(threads).derive_board(&cfg, &dims, &out, &mut jobs);
+            FeaturePipeline::new(threads).derive_board(&dims, &out, &mut jobs);
             drop(jobs); // release the arena borrows before reading results
             arenas
                 .iter()

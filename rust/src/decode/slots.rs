@@ -46,6 +46,19 @@
 //! stays on the windowed path, and a board of only hits takes no
 //! forward at all.  Disabled (the default), the loop is
 //! result-identical to the seed path.
+//!
+//! **Mixed-config boards.**  Every slot carries its *own*
+//! [`DecodeConfig`] ([`SlotBatch::admit_with`]): method dispatch, tau
+//! schedules, EOS policy, and the per-sample step cap all resolve per
+//! slot, so one board can pack requests from different config groups as
+//! long as they share the model shape.  Rows are independent, so each
+//! sample still decodes bit-identically to a solo run under its exact
+//! config.  Per-slot strategies are cached per row and rebuilt only
+//! when an admitted config actually differs (strategies are stateless
+//! across requests, pinned by a decode property test), and the per-slot
+//! board buffers come from a shared [`BufferPool`]
+//! ([`SlotBatch::attach_pool`]) so admit/retire churn allocates nothing
+//! once the pool is warm.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -54,6 +67,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::features::{self, FeatureJob, FeaturePipeline, ModelDims, StepArena, StepTimings};
 use super::{make_strategy, DecodeConfig, DecodeOutcome, Method, PrebuiltGraph, StepCtx, Strategy};
+use crate::alloc::BufferPool;
 use crate::cache::{
     ActiveRows, CacheConfig, CacheStats, FirstStepRows, ForwardCache, GraphStats,
     IncrementalGraph, PrefixCache, PrefixHandle, StepSource,
@@ -77,20 +91,28 @@ pub struct StepCommits {
 }
 
 /// Per-slot decode state (one in-flight sample).  Step buffers live in
-/// the slot's [`StepArena`]; this carries only the request's identity
-/// and its commit trajectory.
+/// the slot's [`StepArena`]; this carries the request's identity, its
+/// own decode config (mixed-config boards resolve method/tau/EOS per
+/// slot), and its commit trajectory in pool-backed buffers.
 struct SlotState {
     /// caller-chosen request id, echoed back on completion
     id: u64,
+    /// this request's decode config (method, params, EOS policy, ...)
+    cfg: DecodeConfig,
+    /// per-sample step cap resolved from `cfg.max_steps` at admit
+    max_steps: usize,
     /// forwards this slot has participated in (per-sample NFE)
     steps: usize,
     cur_block: usize,
     /// slot-local step at which each generation position committed
+    /// (acquired from the board's [`BufferPool`] at admit)
     commit_step: Vec<usize>,
     /// flat commit log: generation-relative positions in commit order
-    /// (capacity `gen_len`, so steady-state pushes never reallocate)
+    /// (pool-backed, capacity `gen_len`: steady-state pushes never
+    /// reallocate)
     per_step_flat: Vec<usize>,
     /// end offset into `per_step_flat` after each recorded step
+    /// (pool-backed)
     per_step_ends: Vec<usize>,
     /// prefix-cache key of this slot's prompt (prefix cache attached)
     prefix_key: Option<u64>,
@@ -100,13 +122,46 @@ struct SlotState {
     inc_graph: Option<IncrementalGraph>,
 }
 
+/// Fingerprint of exactly the config surface a [`Strategy`] is built
+/// from (method + every hyperparameter, bitwise).  Row strategies are
+/// reused across admits when the fingerprint matches, so same-config
+/// churn never reconstructs a strategy.
+fn strategy_fingerprint(cfg: &DecodeConfig) -> u64 {
+    fn mix(h: u64, x: u64) -> u64 {
+        (h ^ x).wrapping_mul(0x100_0000_01b3)
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in cfg.method.name().bytes() {
+        h = mix(h, b as u64);
+    }
+    let p = &cfg.params;
+    for f in [
+        p.conf_threshold,
+        p.gamma,
+        p.kl_threshold,
+        p.tau.min,
+        p.tau.max,
+        p.conf_one_eps,
+        p.stage_ratio,
+    ] {
+        h = mix(h, f.to_bits() as u64);
+    }
+    mix(h, p.ordering as u64)
+}
+
 /// A continuously-batched decode loop over one model's compiled batch.
 pub struct SlotBatch<'m> {
     model: &'m dyn ForwardModel,
+    /// board-default config: used by [`SlotBatch::admit`] and as the
+    /// pipeline's thread policy; per-slot configs may differ
     cfg: DecodeConfig,
     dims: ModelDims,
-    strategy: Box<dyn Strategy>,
-    max_steps: usize,
+    /// per-row strategy cache: (config fingerprint, warm strategy).
+    /// Rebuilt only when a row is admitted under a different config.
+    row_strategies: Vec<Option<(u64, Box<dyn Strategy>)>>,
+    /// pooled allocator backing the per-slot board buffers; shared
+    /// across workers when the coordinator attaches its pool
+    pool: Arc<BufferPool>,
     /// token board, row-major [batch * seq_len]
     tokens: Vec<i32>,
     slots: Vec<Option<SlotState>>,
@@ -175,17 +230,12 @@ impl<'m> SlotBatch<'m> {
         if cache.enabled && cache.refresh_every == 0 {
             bail!("cache refresh_every must be >= 1");
         }
-        let max_steps = if cfg.max_steps == 0 {
-            g + 4
-        } else {
-            cfg.max_steps
-        };
         Ok(SlotBatch {
             model,
             cfg: cfg.clone(),
             dims: ModelDims::of(model),
-            strategy: make_strategy(cfg.method, cfg.params),
-            max_steps,
+            row_strategies: (0..model.batch()).map(|_| None).collect(),
+            pool: Arc::new(BufferPool::default()),
             tokens: vec![0i32; model.batch() * model.seq_len()],
             slots: (0..model.batch()).map(|_| None).collect(),
             arenas: (0..model.batch()).map(|_| StepArena::new()).collect(),
@@ -222,6 +272,19 @@ impl<'m> SlotBatch<'m> {
         self.trace = Some(rec);
     }
 
+    /// Share a board-buffer pool with this batch (the coordinator hands
+    /// every worker's boards one pool, so buffers released by one
+    /// worker's retired slots serve another worker's admits).  Call
+    /// before the first admit; a fresh private pool is the default.
+    pub fn attach_pool(&mut self, pool: Arc<BufferPool>) {
+        self.pool = pool;
+    }
+
+    /// Acquire/release statistics of the attached buffer pool.
+    pub fn pool_stats(&self) -> crate::alloc::PoolStats {
+        self.pool.stats()
+    }
+
     /// Opt into the per-step commit log.  Once enabled, every `step()`
     /// appends one [`StepCommits`] per occupied slot; drain them with
     /// [`SlotBatch::drain_commit_log`].  Off by default because the log
@@ -249,10 +312,13 @@ impl<'m> SlotBatch<'m> {
     pub fn release(&mut self, id: u64) -> bool {
         for slot in self.slots.iter_mut() {
             if slot.as_ref().map(|st| st.id == id).unwrap_or(false) {
-                let st = slot.take().unwrap();
+                let mut st = slot.take().unwrap();
                 if let Some(ig) = &st.inc_graph {
                     self.graph_stats.merge(&ig.stats);
                 }
+                self.pool.release_usize(std::mem::take(&mut st.commit_step));
+                self.pool.release_usize(std::mem::take(&mut st.per_step_flat));
+                self.pool.release_usize(std::mem::take(&mut st.per_step_ends));
                 self.occupied -= 1;
                 return true;
             }
@@ -276,15 +342,24 @@ impl<'m> SlotBatch<'m> {
         &self.cfg
     }
 
-    /// Occupy a free slot with a fresh request.  Callable between any two
-    /// steps; the new sample starts at its own step 0.  Consults the
-    /// attached prefix cache (counting hits/misses) when one is present.
+    /// Occupy a free slot with a fresh request under the board-default
+    /// config.  Callable between any two steps; the new sample starts at
+    /// its own step 0.  Consults the attached prefix cache (counting
+    /// hits/misses) when one is present.
     pub fn admit(&mut self, id: u64, prompt: &[i32]) -> Result<usize> {
+        let cfg = self.cfg.clone();
+        self.admit_with(id, prompt, cfg)
+    }
+
+    /// `admit` under a request-specific config: the slot decodes with
+    /// its *own* method, hyperparameters, EOS policy, and step cap —
+    /// the mixed-config board entry point for cross-group packing.
+    pub fn admit_with(&mut self, id: u64, prompt: &[i32], cfg: DecodeConfig) -> Result<usize> {
         let prefill = self
             .prefix
             .as_ref()
             .and_then(|h| h.cache.get(PrefixCache::key(h.model_salt, prompt), prompt));
-        self.admit_prefetched(id, prompt, prefill)
+        self.admit_prefetched_with(id, prompt, prefill, cfg)
     }
 
     /// `admit` with first-step rows the caller already fetched from the
@@ -296,12 +371,28 @@ impl<'m> SlotBatch<'m> {
         prompt: &[i32],
         prefill: Option<Arc<FirstStepRows>>,
     ) -> Result<usize> {
+        let cfg = self.cfg.clone();
+        self.admit_prefetched_with(id, prompt, prefill, cfg)
+    }
+
+    /// [`SlotBatch::admit_with`] + [`SlotBatch::admit_prefetched`]
+    /// combined: request-specific config and prefetched prefix rows.
+    pub fn admit_prefetched_with(
+        &mut self,
+        id: u64,
+        prompt: &[i32],
+        prefill: Option<Arc<FirstStepRows>>,
+        cfg: DecodeConfig,
+    ) -> Result<usize> {
         let l = self.dims.seq_len;
         let p = self.dims.prompt_len;
         let g = self.dims.gen_len;
         let mask_id = self.dims.mask_id;
         if prompt.len() != p {
             bail!("prompt length {} != prompt_len {p}", prompt.len());
+        }
+        if cfg.blocks == 0 || cfg.blocks > g {
+            bail!("invalid block count {} for admitted config", cfg.blocks);
         }
         let slot = self
             .slots
@@ -325,13 +416,29 @@ impl<'m> SlotBatch<'m> {
             .as_ref()
             .map(|h| PrefixCache::key(h.model_salt, prompt));
         self.arenas[slot].reset_request(g, self.dims.vocab);
+        // warm row strategy: rebuild only when the config actually
+        // changed (same-config churn reuses the existing one)
+        let fp = strategy_fingerprint(&cfg);
+        let rebuild = !matches!(&self.row_strategies[slot], Some((f, _)) if *f == fp);
+        if rebuild {
+            self.row_strategies[slot] = Some((fp, make_strategy(cfg.method, cfg.params)));
+        }
+        // pool-backed board buffers (released on retire, so churn
+        // allocates nothing once the pool is warm)
+        let mut commit_step = self.pool.acquire_usize(g);
+        commit_step.resize(g, usize::MAX);
+        let per_step_flat = self.pool.acquire_usize(g);
+        let per_step_ends = self.pool.acquire_usize(g + 1);
+        let max_steps = if cfg.max_steps == 0 { g + 4 } else { cfg.max_steps };
         self.slots[slot] = Some(SlotState {
             id,
+            cfg,
+            max_steps,
             steps: 0,
             cur_block: 0,
-            commit_step: vec![usize::MAX; g],
-            per_step_flat: Vec::with_capacity(g),
-            per_step_ends: Vec::with_capacity(g + 1),
+            commit_step,
+            per_step_flat,
+            per_step_ends,
             prefix_key,
             prefill: if self.prefix.is_some() { prefill } else { None },
             inc_graph: None,
@@ -419,19 +526,20 @@ impl<'m> SlotBatch<'m> {
                 if let Some(st) = slot {
                     jobs.push(FeatureJob {
                         slot: s,
+                        cfg: &st.cfg,
                         cur_block: st.cur_block,
                         tokens: &self.tokens[s * l..(s + 1) * l],
                         arena,
                     });
                 }
             }
-            self.pipeline.derive_board(&self.cfg, &self.dims, out, &mut jobs);
+            self.pipeline.derive_board(&self.dims, out, &mut jobs);
         } else {
             for s in 0..self.slots.len() {
                 let Some(st) = &self.slots[s] else { continue };
                 let cur_block = st.cur_block;
                 features::derive_slot(
-                    &self.cfg,
+                    &st.cfg,
                     &self.dims,
                     &self.tokens[s * l..(s + 1) * l],
                     out,
@@ -456,8 +564,12 @@ impl<'m> SlotBatch<'m> {
             }
             let mut finish = false;
             {
-                let cfg = &self.cfg;
                 let st = self.slots[s].as_mut().unwrap();
+                // per-slot config: mixed boards resolve method, tau
+                // schedule, and EOS policy per row (all-Copy fields, so
+                // the clone is heap-free)
+                let cfg = st.cfg.clone();
+                let cfg = &cfg;
                 let step = st.steps;
                 st.steps += 1;
 
@@ -549,7 +661,10 @@ impl<'m> SlotBatch<'m> {
                         }),
                     };
                     let t_sel = Instant::now();
-                    self.strategy.select(&ctx, &mut self.sel_buf);
+                    let strat = self.row_strategies[s]
+                        .as_mut()
+                        .expect("occupied slot has a strategy");
+                    strat.1.select(&ctx, &mut self.sel_buf);
                     if self.sel_buf.is_empty() {
                         // guarantee progress: commit the max-confidence
                         // candidate
@@ -633,13 +748,13 @@ impl<'m> SlotBatch<'m> {
                     // window, or the per-sample step cap is hit
                     let remaining =
                         (p..p + g).any(|i| self.tokens[s * l + i] == mask_id);
-                    if !remaining || st.steps >= self.max_steps {
+                    if !remaining || st.steps >= st.max_steps {
                         finish = true;
                     }
                 }
             }
             if finish {
-                let st = self.slots[s].take().unwrap();
+                let mut st = self.slots[s].take().unwrap();
                 if let Some(ig) = &st.inc_graph {
                     self.graph_stats.merge(&ig.stats);
                 }
@@ -665,6 +780,11 @@ impl<'m> SlotBatch<'m> {
                         per_step_commits: per_step,
                     },
                 ));
+                // return the board buffers to the pool so the next
+                // admit (any worker) reuses them instead of allocating
+                self.pool.release_usize(std::mem::take(&mut st.commit_step));
+                self.pool.release_usize(std::mem::take(&mut st.per_step_flat));
+                self.pool.release_usize(std::mem::take(&mut st.per_step_ends));
             }
         }
         Ok(finished)
@@ -790,6 +910,53 @@ mod tests {
             assert_eq!(finished.len(), 1);
             assert_eq!(finished[0].0, round);
         }
+    }
+
+    #[test]
+    fn mixed_config_board_matches_solo_runs() {
+        let m = mock();
+        let mut cfg_a = DecodeConfig::new(Method::FastDllm);
+        cfg_a.params.conf_threshold = 0.85;
+        let mut cfg_b = DecodeConfig::new(Method::DapdStaged);
+        cfg_b.params.tau.min = 0.15;
+        let solo_a = decode_batch(&m, &[prompt(0)], &cfg_a).unwrap()[0].clone();
+        let solo_b = decode_batch(&m, &[prompt(1)], &cfg_b).unwrap()[0].clone();
+
+        // board default is cfg_a; slot 1 is admitted under cfg_b
+        let mut sb = SlotBatch::new(&m, &cfg_a).unwrap();
+        sb.admit(0, &prompt(0)).unwrap();
+        sb.admit_with(1, &prompt(1), cfg_b.clone()).unwrap();
+        let mut done = std::collections::HashMap::new();
+        while sb.occupied() > 0 {
+            for (id, o) in sb.step().unwrap() {
+                done.insert(id, o);
+            }
+        }
+        assert_eq!(done[&0].gen, solo_a.gen, "default-config row diverged");
+        assert_eq!(done[&0].steps, solo_a.steps);
+        assert_eq!(done[&1].gen, solo_b.gen, "admit_with row diverged from solo");
+        assert_eq!(done[&1].steps, solo_b.steps);
+        assert_eq!(done[&1].per_step_commits, solo_b.per_step_commits);
+    }
+
+    #[test]
+    fn pool_backed_churn_reuses_buffers() {
+        let m = MockModel::new(1, 16, 4, 12);
+        let cfg = DecodeConfig::new(Method::FastDllm);
+        let pool = Arc::new(crate::alloc::BufferPool::new(8));
+        let mut sb = SlotBatch::new(&m, &cfg).unwrap();
+        sb.attach_pool(Arc::clone(&pool));
+        for round in 0..4u64 {
+            sb.admit(round, &[5; 4]).unwrap();
+            while sb.occupied() > 0 {
+                sb.step().unwrap();
+            }
+        }
+        let s = pool.stats();
+        assert_eq!(s.acquires, 12, "3 board buffers per admit");
+        assert_eq!(s.misses, 3, "only the first admit may allocate");
+        assert_eq!(s.hits, 9, "slot churn must reuse the pooled buffers");
+        assert_eq!(s.dropped, 0);
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //! * [`util`]        — offline substrates: json, rng, cli, stats, pool
+//! * [`alloc`]       — pooled board-buffer allocator (size-class free
+//!                     lists shared across workers and slot churn)
 //! * [`tensor`]      — flat f32 tensor views + the fused,
 //!                     runtime-dispatched SIMD kernel layer
 //!                     (`tensor::kernels`: softmax/entropy/KL/argmax)
@@ -29,6 +31,7 @@
 //!                     drains), stage histograms, Prometheus exposition
 //! * [`server`]      — JSON-over-TCP serving front end
 
+pub mod alloc;
 pub mod cache;
 pub mod config;
 pub mod coordinator;

@@ -19,6 +19,13 @@
 //!           [--deadline-ms D]   (default per-request latency budget;
 //!           0 = none; requests may send their own deadline_ms)
 //!           [--max-line-bytes B] [--drain-wait-ms W]
+//!           [--steal] [--no-steal]  (cross-group work stealing: idle
+//!           workers take the oldest shape-compatible request from
+//!           other groups' queues; on by default)
+//!           [--preempt-deadline-ms D]  (requests within D ms of their
+//!           deadline may preempt a best-effort slot; 0 = off)
+//!           [--pool-cap N]  (board buffers retained per size class in
+//!           the shared allocator pool; 0 = no retention)
 //!           [--trace] [--no-trace] [--trace-out FILE]
 //!           (decode-path tracing: bounded per-worker rings, drained
 //!           as Chrome trace JSON via {"trace": true} or dumped to
@@ -274,6 +281,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_inflight: settings.max_inflight,
         cache: settings.cache_config(),
         trace: settings.trace,
+        steal: settings.steal,
+        preempt_deadline: Duration::from_millis(settings.preempt_deadline_ms),
+        pool_cap: settings.pool_cap,
     };
     let (coord, handles) = Coordinator::start_pool(&pool, &opts)?;
     let reporter = coord.clone();

@@ -193,6 +193,24 @@ impl Histogram {
         self.total = 0;
     }
 
+    /// Value at quantile `q` in [0, 1], resolved to a bucket upper edge
+    /// (a conservative estimate: the true quantile is at or below it).
+    /// Returns 0.0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return self.upper_edge(i);
+            }
+        }
+        self.hi
+    }
+
     /// Fraction of mass strictly below x.
     pub fn cdf_below(&self, x: f64) -> f64 {
         if self.total == 0 {
@@ -405,6 +423,27 @@ mod tests {
         // cdf agrees with bucket mass
         assert!((h.cdf_below(1e-6) - 0.0).abs() < 1e-12);
         assert!(h.cdf_below(1.0) >= 0.75);
+    }
+
+    #[test]
+    fn histogram_quantile_tracks_mass() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram");
+        for i in 0..100 {
+            h.add(i as f64 / 100.0);
+        }
+        // uniform mass: quantiles land on the matching bucket edges
+        assert!((h.quantile(0.5) - 0.5).abs() < 1e-9);
+        assert!((h.quantile(0.95) - 1.0).abs() < 1e-9);
+        assert!((h.quantile(0.0) - 0.1).abs() < 1e-9, "first occupied edge");
+        // the estimate is conservative: true quantile <= reported edge
+        let mut skew = Histogram::new_log(1e-6, 1.0, 12);
+        for _ in 0..99 {
+            skew.add(1e-5);
+        }
+        skew.add(0.9);
+        assert!(skew.quantile(0.5) < 1e-4);
+        assert!(skew.quantile(0.999) > 0.5);
     }
 
     #[test]

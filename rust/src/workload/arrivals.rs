@@ -42,6 +42,54 @@ impl Arrival {
     }
 }
 
+/// Zipfian assignment of requests to configuration groups, for
+/// heterogeneous-workload benchmarks: group `k` (1-based rank) gets
+/// traffic proportional to `1 / k^s`.  A realistic serving mix is
+/// head-heavy — one dominant config plus a long tail of rare ones —
+/// which is exactly the shape where per-group sharding strands capacity
+/// (tail groups cannot fill a board alone) and cross-group packing
+/// wins.
+#[derive(Debug, Clone)]
+pub struct ZipfMix {
+    /// cumulative probability per group, `cdf[last] == 1.0`
+    cdf: Vec<f64>,
+}
+
+impl ZipfMix {
+    /// A mix over `groups` configs with Zipf exponent `s` (`s = 0` is
+    /// uniform; larger `s` concentrates traffic on the head group).
+    pub fn new(groups: usize, s: f64) -> ZipfMix {
+        assert!(groups > 0, "a mix needs at least one group");
+        let weights: Vec<f64> = (1..=groups).map(|k| (k as f64).powf(-s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let cdf = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        ZipfMix { cdf }
+    }
+
+    pub fn groups(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Sample one group index in `0..groups`.
+    pub fn sample(&self, rng: &mut Pcg) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    /// Assign `n` requests to groups (the heterogeneous analogue of
+    /// [`Arrival::schedule`]: one group index per request).
+    pub fn assign(&self, n: usize, rng: &mut Pcg) -> Vec<usize> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +135,42 @@ mod tests {
         }
         .schedule(3, &mut rng);
         assert_eq!(ts, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn zipf_mix_is_head_heavy_and_covers_all_groups() {
+        let mix = ZipfMix::new(4, 1.0);
+        assert_eq!(mix.groups(), 4);
+        let mut rng = Pcg::new(11);
+        let picks = mix.assign(4000, &mut rng);
+        assert!(picks.iter().all(|&g| g < 4));
+        let mut counts = [0usize; 4];
+        for &g in &picks {
+            counts[g] += 1;
+        }
+        // monotone head-heavy: rank 1 > rank 2 > ... (with slack for
+        // sampling noise on the tail)
+        assert!(counts[0] > counts[1] && counts[1] > counts[3], "{counts:?}");
+        // harmonic weights 1, 1/2, 1/3, 1/4: the head gets 12/25 = 48%
+        let head = counts[0] as f64 / 4000.0;
+        assert!((head - 0.48).abs() < 0.05, "head share {head}");
+        assert!(counts.iter().all(|&c| c > 0), "tail groups still appear");
+    }
+
+    #[test]
+    fn zipf_mix_zero_exponent_is_uniform() {
+        let mix = ZipfMix::new(3, 0.0);
+        let mut rng = Pcg::new(12);
+        let picks = mix.assign(3000, &mut rng);
+        let mut counts = [0usize; 3];
+        for &g in &picks {
+            counts[g] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 / 1000.0 - 1.0).abs() < 0.15, "{counts:?}");
+        }
+        // determinism: same seed, same assignment
+        let again = mix.assign(3000, &mut Pcg::new(12));
+        assert_eq!(picks, again);
     }
 }

@@ -1,11 +1,12 @@
 //! Worker-pool coordinator tests on the mock model (artifact-free):
 //! compatibility grouping, backpressure, graceful shutdown with in-flight
-//! requests, and the pool-vs-sequential decode-equivalence guarantee.
+//! requests, cross-group work-stealing, deadline preemption, and the
+//! pool-vs-sequential decode-equivalence guarantee.
 
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
-use dapd::coordinator::{group_key, Coordinator, PoolOptions};
+use dapd::coordinator::{compat_key, group_key, Coordinator, PoolOptions, SubmitOptions};
 use dapd::decode::{decode_all, DecodeConfig, Method};
 use dapd::runtime::{MockModel, ModelPool};
 use dapd::util::rng::Pcg;
@@ -166,6 +167,120 @@ fn incompatible_groups_get_correct_results() {
     }
     coord.shutdown();
     handles.join();
+}
+
+#[test]
+fn work_stealing_packs_compatible_groups_token_identically() {
+    // two methods, same block geometry: distinct groups, one
+    // shape-compatibility class — the cross-group packing premise
+    let m = mock();
+    let fast = DecodeConfig::new(Method::FastDllm);
+    let staged = DecodeConfig::new(Method::DapdStaged);
+    assert_ne!(group_key(&fast), group_key(&staged));
+    assert_eq!(compat_key(&fast), compat_key(&staged));
+    let ps = prompts(12);
+    let base_fast = decode_all(&m, &ps, &fast).unwrap();
+    let base_staged = decode_all(&m, &ps, &staged).unwrap();
+
+    let run = |steal: bool, batch_wait_ms: u64| {
+        let pool = ModelPool::mock(mock());
+        let opts = PoolOptions {
+            workers: 1,
+            batch_wait: Duration::from_millis(batch_wait_ms),
+            queue_cap: 64,
+            steal,
+            ..PoolOptions::default()
+        };
+        let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
+        let rxs: Vec<_> = ps
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let cfg = if i % 2 == 0 { fast.clone() } else { staged.clone() };
+                coord.submit(p.clone(), cfg).unwrap()
+            })
+            .collect();
+        let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        coord.shutdown();
+        handles.join();
+        (responses, coord.metrics.steals.load(Ordering::Relaxed))
+    };
+
+    // stealing on (the default), with a straggler window long enough for
+    // the interleaved backlog to queue up: the single worker's board must
+    // fill with both groups, because its own shard alone cannot fill it
+    // while the other group holds the global FIFO front
+    let (stolen, steals) = run(true, 50);
+    assert!(steals >= 1, "interleaved compatible groups must be stolen");
+    // sharded control: the flag fully disables cross-group picks
+    let (sharded, none) = run(false, 2);
+    assert_eq!(none, 0, "steal=false must never pick across groups");
+
+    for responses in [&stolen, &sharded] {
+        for (i, r) in responses.iter().enumerate() {
+            let base = if i % 2 == 0 { &base_fast[i] } else { &base_staged[i] };
+            assert_eq!(r.gen, base.gen, "request {i}: packing changed the tokens");
+            assert_eq!(r.steps, base.steps, "request {i}: packing changed the NFE");
+        }
+    }
+}
+
+#[test]
+fn deadline_preemption_claims_a_row_and_restarts_the_victim_exactly() {
+    // batch-1 board: one long best-effort request occupies the whole
+    // board, so an urgent request can only get in by preempting it
+    let m = MockModel::new(1, 256, 8, 24);
+    let best_cfg = DecodeConfig::new(Method::Original); // 1 token/step: long
+    let urgent_cfg = DecodeConfig::new(Method::FastDllm);
+    assert_eq!(compat_key(&best_cfg), compat_key(&urgent_cfg));
+    let p_victim = vec![5i32; 8];
+    let p_urgent = vec![7i32; 8];
+    let base_victim = decode_all(&m, &[p_victim.clone()], &best_cfg).unwrap();
+    let base_urgent = decode_all(&m, &[p_urgent.clone()], &urgent_cfg).unwrap();
+
+    let pool = ModelPool::mock(m);
+    let opts = PoolOptions {
+        workers: 1,
+        batch_wait: Duration::ZERO,
+        queue_cap: 8,
+        preempt_deadline: Duration::from_secs(60),
+        ..PoolOptions::default()
+    };
+    let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
+    // the best-effort victim is globally oldest, so the worker adopts it
+    let victim_rx = coord.submit(p_victim, best_cfg).unwrap();
+    // the urgent request's deadline is far from expiring but inside the
+    // 60 s preemption horizon, so it may claim the victim's row
+    let urgent_rx = coord
+        .submit_opts(
+            p_urgent,
+            urgent_cfg,
+            SubmitOptions {
+                deadline: Some(Duration::from_secs(10)),
+            },
+        )
+        .unwrap();
+    let urgent = urgent_rx.recv().expect("urgent request must complete");
+    let victim = victim_rx.recv().expect("preempted request must still complete");
+    coord.shutdown();
+    handles.join();
+
+    assert_eq!(
+        coord.metrics.preemptions.load(Ordering::Relaxed),
+        1,
+        "the urgent request must preempt the best-effort resident once"
+    );
+    assert_eq!(
+        coord.metrics.deadline_dropped.load(Ordering::Relaxed),
+        0,
+        "the urgent request was never close to expiring"
+    );
+    // decoding is deterministic: the restarted victim's tokens and NFE
+    // are exactly what an unpreempted run would have produced
+    assert_eq!(victim.gen, base_victim[0].gen, "victim tokens changed across restart");
+    assert_eq!(victim.steps, base_victim[0].steps, "victim NFE changed across restart");
+    assert_eq!(urgent.gen, base_urgent[0].gen);
+    assert_eq!(urgent.steps, base_urgent[0].steps);
 }
 
 #[test]

@@ -474,6 +474,88 @@ fn arena_csr_pipeline_matches_seed_dense_path_all_methods() {
 }
 
 #[test]
+fn mixed_config_board_matches_per_group_sharded_boards() {
+    // the cross-group packing pin: one board carrying every method at
+    // once — each row with its own params, block count shared (the
+    // shape-compatibility key), and its own EOS policy — decodes every
+    // row token-identical to the same request run on a per-group
+    // sharded board (a solo decode under its own config), both
+    // uncached and through the compute-reuse subsystem
+    prop::check("mixed-config-board", 10, |rng: &mut Pcg| {
+        let mut m = random_mock(rng);
+        m.batch = Method::all().len(); // one row per method
+        let mut solo = m.clone();
+        solo.batch = 1;
+        let g = m.seq_len - m.prompt_len;
+        let blocks = [1, 2, 4][rng.below(3)].min(g);
+        let rows: Vec<(Vec<i32>, DecodeConfig)> = Method::all()
+            .iter()
+            .map(|&method| {
+                let mut cfg = DecodeConfig::new(method);
+                cfg.params = random_params(rng);
+                cfg.blocks = blocks;
+                if rng.below(2) == 1 {
+                    cfg.eos_suppress = true;
+                    cfg.eos_id = m.true_token(m.prompt_len + rng.below(g));
+                }
+                let prompt = (0..m.prompt_len)
+                    .map(|_| (2 + rng.below(m.vocab - 2)) as i32)
+                    .collect();
+                (prompt, cfg)
+            })
+            .collect();
+
+        let cache = CacheConfig {
+            enabled: true,
+            refresh_every: rng.range(1, 5),
+            epsilon: 0.0,
+            prefix_lru_cap: 0,
+        };
+        for cached in [false, true] {
+            let base = rows[0].1.clone();
+            let mut sb = if cached {
+                SlotBatch::with_cache(&m, &base, &cache, None).unwrap()
+            } else {
+                SlotBatch::new(&m, &base).unwrap()
+            };
+            for (i, (prompt, cfg)) in rows.iter().enumerate() {
+                sb.admit_with(i as u64, prompt, cfg.clone()).unwrap();
+            }
+            let mut done = std::collections::HashMap::new();
+            while sb.occupied() > 0 {
+                for (id, o) in sb.step().unwrap() {
+                    done.insert(id, o);
+                }
+            }
+            for (i, (prompt, cfg)) in rows.iter().enumerate() {
+                let want = if cached {
+                    decode_batch_cached(&solo, &[prompt.clone()], cfg, &cache, None).unwrap()
+                } else {
+                    decode_batch(&solo, &[prompt.clone()], cfg).unwrap()
+                };
+                let got = &done[&(i as u64)];
+                let label = if cached { "cached" } else { "uncached" };
+                assert_eq!(
+                    got.gen, want[0].gen,
+                    "{:?} {label}: tokens diverged on the mixed board",
+                    cfg.method
+                );
+                assert_eq!(
+                    got.steps, want[0].steps,
+                    "{:?} {label}: NFE diverged on the mixed board",
+                    cfg.method
+                );
+                assert_eq!(
+                    got.per_step_commits, want[0].per_step_commits,
+                    "{:?} {label}: trajectory diverged on the mixed board",
+                    cfg.method
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn feature_thread_fanout_is_invisible() {
     // feature_threads is a deployment knob: any thread count must give
     // bit-identical decodes (slots write only their own arenas)
