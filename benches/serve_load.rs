@@ -134,6 +134,8 @@ fn run_load(n: usize, trace: bool) -> Measured {
     handles.join();
 
     let (p50, p95, p99) = coord.metrics.latency_percentiles();
+    // ordering: Relaxed — post-shutdown counter read; all workers have
+    // joined, so every increment already happened-before this load.
     let steps = coord.metrics.steps_run.load(std::sync::atomic::Ordering::Relaxed);
     let hit_ratio = coord
         .prefix_cache()
@@ -234,6 +236,7 @@ fn run_hetero(n: usize, steal: bool) -> QueueMeasured {
         );
     }
 
+    // ordering: Relaxed — post-shutdown counter read; see above.
     let steps = coord.metrics.steps_run.load(std::sync::atomic::Ordering::Relaxed);
     QueueMeasured {
         steps_per_s: steps as f64 / wall,
@@ -248,10 +251,12 @@ fn run_hetero(n: usize, steal: bool) -> QueueMeasured {
         steals: coord
             .metrics
             .steals
+            // ordering: Relaxed — post-shutdown counter read; see above.
             .load(std::sync::atomic::Ordering::Relaxed),
         preemptions: coord
             .metrics
             .preemptions
+            // ordering: Relaxed — post-shutdown counter read; see above.
             .load(std::sync::atomic::Ordering::Relaxed),
     }
 }

@@ -48,22 +48,31 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: pure pass-through to `System` plus a Relaxed counter bump —
+// every `GlobalAlloc` contract obligation is delegated unchanged.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: forwards `layout` to `System` untouched.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // ordering: Relaxed — monotone tally, read only after joins.
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: as `alloc`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        // ordering: Relaxed — as `alloc`.
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: as `alloc` — `ptr`/`layout` come from this allocator.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // ordering: Relaxed — as `alloc`.
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: as `alloc` — `ptr`/`layout` come from this allocator.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
@@ -73,6 +82,8 @@ unsafe impl GlobalAlloc for CountingAlloc {
 static COUNTER: CountingAlloc = CountingAlloc;
 
 fn allocs() -> u64 {
+    // ordering: Relaxed — tally read; the measured section runs on this
+    // thread or is joined before the read.
     ALLOCS.load(Ordering::Relaxed)
 }
 

@@ -75,6 +75,7 @@ fn main() -> Result<()> {
         100.0 * correct / total as f64,
         coord.metrics.mean_batch_size()
     );
+    // ordering: Relaxed — advisory sanity read after all clients joined.
     assert!(coord.metrics.requests.load(Ordering::Relaxed) as usize >= total);
 
     drain.drain();

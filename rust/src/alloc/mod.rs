@@ -57,23 +57,32 @@ struct Classes<T> {
 impl<T> Classes<T> {
     fn new() -> Classes<T> {
         Classes {
+            // lint:allow(no-alloc-hot-path): one-time pool construction
             lists: Mutex::new((0..CLASSES).map(|_| Vec::new()).collect()),
         }
     }
 
     fn acquire(&self, len: usize, stats: &Counters) -> Vec<T> {
+        // ordering: Relaxed — pool stats are independent counters read
+        // only by `snapshot`; nothing synchronizes through them (the
+        // free lists themselves are under the mutex).
         stats.acquires.fetch_add(1, Ordering::Relaxed);
         let class = class_for_len(len);
         if let Some(v) = self.lists.lock().unwrap()[class].pop() {
+            // ordering: as above.
             stats.hits.fetch_add(1, Ordering::Relaxed);
             return v;
         }
+        // ordering: as above.
         stats.misses.fetch_add(1, Ordering::Relaxed);
+        // lint:allow(no-alloc-hot-path): the miss path must allocate —
+        // this is the one place pool growth happens
         Vec::with_capacity(class_capacity(class, len))
     }
 
     fn release(&self, mut v: Vec<T>, per_class_cap: usize, stats: &Counters) {
         if v.capacity() == 0 || per_class_cap == 0 {
+            // ordering: Relaxed — pool stat counter; see `acquire`.
             stats.dropped.fetch_add(1, Ordering::Relaxed);
             return;
         }
@@ -81,10 +90,12 @@ impl<T> Classes<T> {
         let class = class_for_cap(v.capacity());
         let mut lists = self.lists.lock().unwrap();
         if lists[class].len() >= per_class_cap {
+            // ordering: Relaxed — pool stat counter; see `acquire`.
             stats.dropped.fetch_add(1, Ordering::Relaxed);
             return;
         }
         lists[class].push(v);
+        // ordering: Relaxed — pool stat counter; see `acquire`.
         stats.releases.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -104,12 +115,15 @@ struct Counters {
 
 impl Counters {
     fn snapshot(&self) -> PoolStats {
+        // ordering: Relaxed — approximate stat snapshot; the fields
+        // need not be mutually consistent with one another.
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
         PoolStats {
-            acquires: self.acquires.load(Ordering::Relaxed),
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            releases: self.releases.load(Ordering::Relaxed),
-            dropped: self.dropped.load(Ordering::Relaxed),
+            acquires: ld(&self.acquires),
+            hits: ld(&self.hits),
+            misses: ld(&self.misses),
+            releases: ld(&self.releases),
+            dropped: ld(&self.dropped),
         }
     }
 }

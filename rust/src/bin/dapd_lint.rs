@@ -1,0 +1,103 @@
+//! `dapd-lint` — the in-repo invariant checker (DESIGN.md "Static
+//! analysis").  Scans every `.rs` file for violations of the decode
+//! stack's source-level contracts and exits non-zero on any
+//! unsuppressed finding, so CI can gate on it.
+//!
+//! ```text
+//! cargo run --bin dapd-lint                       # human output
+//! cargo run --bin dapd-lint -- --format json      # CI artifact
+//! cargo run --bin dapd-lint -- --root DIR --config DIR/lint.toml
+//! ```
+//!
+//! Exit codes: 0 = clean, 1 = unsuppressed findings, 2 = usage or
+//! config error.
+
+use dapd::lint::{self, Config};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Opts {
+    root: PathBuf,
+    config: PathBuf,
+    json: bool,
+    json_out: Option<PathBuf>,
+}
+
+const USAGE: &str = "usage: dapd-lint [--root DIR] [--config FILE] \
+                     [--format human|json] [--json-out FILE]";
+
+fn parse_opts(args: &[String]) -> Result<Opts, String> {
+    let mut root = PathBuf::from(".");
+    let mut config: Option<PathBuf> = None;
+    let mut json = false;
+    let mut json_out = None;
+    let mut i = 0;
+    while i < args.len() {
+        let need_val = |i: usize| -> Result<&String, String> {
+            args.get(i + 1)
+                .ok_or_else(|| format!("{} needs a value", args[i]))
+        };
+        match args[i].as_str() {
+            "--root" => {
+                root = PathBuf::from(need_val(i)?);
+                i += 2;
+            }
+            "--config" => {
+                config = Some(PathBuf::from(need_val(i)?));
+                i += 2;
+            }
+            "--format" => {
+                json = match need_val(i)?.as_str() {
+                    "json" => true,
+                    "human" => false,
+                    other => return Err(format!("unknown format `{other}`")),
+                };
+                i += 2;
+            }
+            "--json-out" => {
+                json_out = Some(PathBuf::from(need_val(i)?));
+                i += 2;
+            }
+            "--help" | "-h" => return Err(USAGE.to_string()),
+            other => return Err(format!("unknown flag `{other}`\n{USAGE}")),
+        }
+    }
+    let config = config.unwrap_or_else(|| root.join("lint.toml"));
+    Ok(Opts {
+        root,
+        config,
+        json,
+        json_out,
+    })
+}
+
+fn real_main() -> Result<ExitCode, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = parse_opts(&args)?;
+    let cfg = Config::load(&opts.config)?;
+    let report = lint::run(&opts.root, &cfg).map_err(|e| format!("scan failed: {e}"))?;
+    let json_text = report.to_json();
+    if let Some(path) = &opts.json_out {
+        std::fs::write(path, &json_text).map_err(|e| format!("{}: {e}", path.display()))?;
+    }
+    if opts.json {
+        println!("{json_text}");
+    } else {
+        print!("{}", report.render_human());
+    }
+    if report.unsuppressed() == 0 {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        Ok(ExitCode::from(1))
+    }
+}
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("dapd-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

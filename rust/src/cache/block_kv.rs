@@ -109,12 +109,12 @@ impl ForwardCache {
         ForwardCache {
             refresh_every: refresh_every.max(1),
             cached: None,
-            last_tokens: Vec::new(),
+            last_tokens: Vec::new(), // lint:allow(no-alloc-hot-path): cold constructor
             steps_since_refresh: 0,
-            in_window: Vec::new(),
-            win_positions: Vec::new(),
-            win_rows: Vec::new(),
-            win_spans: Vec::new(),
+            in_window: Vec::new(),     // lint:allow(no-alloc-hot-path): cold constructor
+            win_positions: Vec::new(), // lint:allow(no-alloc-hot-path): cold constructor
+            win_rows: Vec::new(),      // lint:allow(no-alloc-hot-path): cold constructor
+            win_spans: Vec::new(),     // lint:allow(no-alloc-hot-path): cold constructor
             stats: CacheStats::default(),
         }
     }
@@ -329,9 +329,15 @@ fn blank_board(
         batch: b,
         seq_len: l,
         vocab: v,
+        // lint:allow(no-alloc-hot-path): cold all-prefill board — no
+        // snapshot exists yet, so this one allocation replaces a full
+        // model forward
         logits: Tensor::new(vec![0.0; b * l * v], &[b, l, v]),
+        // lint:allow(no-alloc-hot-path): as logits above
         attn_avg: with_attn.then(|| Tensor::new(vec![0.0; b * l * l], &[b, l, l])),
+        // lint:allow(no-alloc-hot-path): as logits above
         edge_scores: with_scores.then(|| Tensor::new(vec![0.0; b * l * l], &[b, l, l])),
+        // lint:allow(no-alloc-hot-path): as logits above
         degrees: with_degrees.then(|| Tensor::new(vec![0.0; b * l], &[b, l])),
         attn_layers: None,
     }
@@ -410,6 +416,9 @@ impl<M: ForwardModel> ForwardModel for CachedModel<M> {
     }
     fn forward(&self, tokens: &[i32]) -> Result<StepOutput> {
         let mut cache = self.cache.borrow_mut();
+        // lint:allow(no-alloc-hot-path): the ForwardModel trait returns
+        // an owned StepOutput; only this compat wrapper pays the clone —
+        // the slot path borrows from the cache directly
         Ok(cache.forward(&self.inner, tokens)?.clone())
     }
     // forward_window / forward_window_rows deliberately not overridden:

@@ -159,10 +159,12 @@ impl PrefixCache {
         match lru.map.get_mut(&key) {
             Some(entry) if entry.prompt == prompt => {
                 entry.last_used = tick;
+                // ordering: Relaxed — hit/miss stat counter only.
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(Arc::clone(&entry.rows))
             }
             _ => {
+                // ordering: Relaxed — hit/miss stat counter only.
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
@@ -197,6 +199,7 @@ impl PrefixCache {
                 rows: Arc::new(rows),
             },
         );
+        // ordering: Relaxed — stat counter only.
         self.inserts.fetch_add(1, Ordering::Relaxed);
         while lru.map.len() > self.cap {
             // capacity is config-bounded, so the O(n) victim scan is fine
@@ -207,6 +210,7 @@ impl PrefixCache {
                 .map(|(k, _)| *k)
                 .unwrap();
             lru.map.remove(&victim);
+            // ordering: Relaxed — stat counter only.
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -220,10 +224,12 @@ impl PrefixCache {
     }
 
     pub fn hits(&self) -> u64 {
+        // ordering: Relaxed — approximate stat read.
         self.hits.load(Ordering::Relaxed)
     }
 
     pub fn misses(&self) -> u64 {
+        // ordering: Relaxed — approximate stat read.
         self.misses.load(Ordering::Relaxed)
     }
 
@@ -245,10 +251,12 @@ impl PrefixCache {
         j.set("misses", (self.misses() as i64).into());
         j.set(
             "inserts",
+            // ordering: Relaxed — approximate stat read.
             (self.inserts.load(Ordering::Relaxed) as i64).into(),
         );
         j.set(
             "evictions",
+            // ordering: Relaxed — approximate stat read.
             (self.evictions.load(Ordering::Relaxed) as i64).into(),
         );
         j.set("hit_rate", self.hit_rate().into());

@@ -1,5 +1,13 @@
 //! Serving metrics: counters + latency summaries (Table 6 TPS numbers
 //! come from here).
+//!
+//! ordering: every atomic in this module is an independent monotone
+//! counter or advisory gauge, written on the decode path and read only
+//! by reporting (`to_json`, `report`, the Prometheus exposition).  No
+//! cross-field consistency is promised between scrapes, so every site
+//! uses `Ordering::Relaxed`; this one policy line stands in for
+//! per-site notes (the file is on `dapd-lint`'s
+//! `atomic_ordering.allow_files` list).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -10,6 +18,7 @@ use crate::decode::StepTimings;
 use crate::obs::{Stage, StageHists};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+use crate::util::LockExt;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -87,8 +96,8 @@ impl Metrics {
 
     pub fn record_request(&self, latency: Duration, steps: usize) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        self.latency.lock().unwrap().add(latency.as_secs_f64());
-        self.steps.lock().unwrap().add(steps as f64);
+        self.latency.lock_unpoisoned().add(latency.as_secs_f64());
+        self.steps.lock_unpoisoned().add(steps as f64);
     }
 
     pub fn record_batch(&self, size: usize, tokens: usize, wall: Duration) {
@@ -96,7 +105,7 @@ impl Metrics {
         self.tokens_out.fetch_add(tokens as u64, Ordering::Relaxed);
         self.busy_micros
             .fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
-        self.batch_sizes.lock().unwrap().add(size as f64);
+        self.batch_sizes.lock_unpoisoned().add(size as f64);
     }
 
     /// One forward pass with `occupied` live slots (continuous batching).
@@ -144,20 +153,19 @@ impl Metrics {
     /// Fold a decode session's per-stage duration histograms into the
     /// metrics.
     pub fn record_stage_hists(&self, h: &StageHists) {
-        self.stage_hists.lock().unwrap().merge(h);
+        self.stage_hists.lock_unpoisoned().merge(h);
     }
 
     /// One request's submit-to-adoption queue wait.
     pub fn record_queue_wait(&self, wait: Duration) {
         self.stage_hists
-            .lock()
-            .unwrap()
+            .lock_unpoisoned()
             .record_secs(Stage::QueueWait, wait.as_secs_f64());
     }
 
     /// Snapshot of the per-stage duration histograms.
     pub fn stage_hists(&self) -> StageHists {
-        self.stage_hists.lock().unwrap().clone()
+        self.stage_hists.lock_unpoisoned().clone()
     }
 
     /// Fraction of per-position forward compute actually executed
@@ -184,12 +192,12 @@ impl Metrics {
 
     /// Request latency percentiles (p50, p95, p99) in seconds.
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
-        let l = self.latency.lock().unwrap();
+        let l = self.latency.lock_unpoisoned();
         (l.p50(), l.p95(), l.p99())
     }
 
     pub fn mean_steps(&self) -> f64 {
-        self.steps.lock().unwrap().mean()
+        self.steps.lock_unpoisoned().mean()
     }
 
     /// Mean slot occupancy per forward pass when step records exist
@@ -199,7 +207,7 @@ impl Metrics {
         if steps > 0 {
             return self.slot_steps.load(Ordering::Relaxed) as f64 / steps as f64;
         }
-        self.batch_sizes.lock().unwrap().mean()
+        self.batch_sizes.lock_unpoisoned().mean()
     }
 
     /// Structured snapshot for the serving metrics endpoint (the server's

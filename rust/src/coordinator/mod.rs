@@ -86,7 +86,7 @@ use crate::obs::trace::DEFAULT_TRACE_CAPACITY;
 use crate::obs::{TraceRecorder, Tracing};
 use crate::runtime::{ForwardModel, ModelPool};
 use crate::util::logging;
-use crate::util::{fnv1a, FNV_OFFSET};
+use crate::util::{fnv1a, CondvarExt, FNV_OFFSET, LockExt};
 pub use metrics::Metrics;
 
 /// A decode request: fixed-width prompt + the method configuration.
@@ -230,6 +230,8 @@ impl QueueState {
     /// Remove the request at `pi` of shard `si`, maintaining the totals
     /// and per-group depths (every pop path funnels through here).
     fn take_at(&mut self, si: usize, pi: usize) -> Request {
+        // lint:allow(no-panic-request-path): every caller derives `pi`
+        // from a scan of this same locked state, so the slot exists
         let req = self.shards[si].items.remove(pi).unwrap();
         if self.shards[si].items.is_empty() {
             self.shards.remove(si);
@@ -248,6 +250,7 @@ impl QueueState {
             .iter()
             .enumerate()
             .filter(|(_, sh)| !sh.items.is_empty())
+            // lint:allow(no-panic-request-path): the filter above keeps only non-empty shards
             .min_by_key(|(_, sh)| sh.items.front().unwrap().seq)
             .map(|(i, _)| i)?;
         Some(self.take_at(idx, 0))
@@ -261,7 +264,8 @@ impl QueueState {
     /// at most one batch drain.
     fn pop_group(&mut self, key: u64) -> Option<Request> {
         let idx = self.shards.iter().position(|sh| sh.key == key)?;
-        // shards are dropped when emptied, so front() is always Some
+        // lint:allow(no-panic-request-path): shards are dropped when
+        // emptied, so front() is always Some
         let head_seq = self.shards[idx].items.front().unwrap().seq;
         let older_elsewhere = self.shards.iter().any(|sh| {
             sh.key != key
@@ -284,8 +288,11 @@ impl QueueState {
             .iter()
             .enumerate()
             .filter(|(_, sh)| sh.compat == compat && !sh.items.is_empty())
+            // lint:allow(no-panic-request-path): the filter above keeps only non-empty shards
             .min_by_key(|(_, sh)| sh.items.front().unwrap().seq)
             .map(|(i, _)| i)?;
+        // lint:allow(no-panic-request-path): idx indexes a shard the
+        // filter above kept because it was non-empty
         let head_seq = self.shards[idx].items.front().unwrap().seq;
         let older_elsewhere = self.shards.iter().any(|sh| {
             sh.compat != compat
@@ -514,6 +521,8 @@ impl Coordinator {
                     trace,
                 )
             })
+            // lint:allow(no-panic-request-path): pool startup — spawn
+            // failure here precedes any request acceptance
             .expect("spawn inference worker")
     }
 
@@ -528,7 +537,8 @@ impl Coordinator {
     where
         M: ForwardModel + Send + 'static,
     {
-        let coord = Coordinator::with_capacity(queue_cap, 1, CacheConfig::default(), None, 0, false);
+        let coord =
+            Coordinator::with_capacity(queue_cap, 1, CacheConfig::default(), None, 0, false);
         let handle = coord.spawn_worker(0, Box::new(model), batch_wait);
         (coord, handle)
     }
@@ -638,7 +648,7 @@ impl Coordinator {
         reply: Reply,
     ) -> std::result::Result<(), SubmitError> {
         if opts.deadline.map(|d| d.is_zero()).unwrap_or(false) {
-            self.metrics.deadline_dropped.fetch_add(1, Ordering::Relaxed);
+            bump(&self.metrics.deadline_dropped);
             return Err(SubmitError::DeadlineExpired);
         }
         let deadline = opts.deadline.map(|d| Instant::now() + d);
@@ -650,15 +660,17 @@ impl Coordinator {
             .map(|h| PrefixCache::key(h.model_salt, &prompt));
         let ticket;
         {
-            let mut st = self.queue.state.lock().unwrap();
+            let mut st = self.queue.state.lock_unpoisoned();
             if st.closed {
                 return Err(SubmitError::Closed);
             }
+            // ordering: Relaxed — advisory inflight read; the cap
+            // tolerates racing worker-side decrements.
             let inflight = self.pending.load(Ordering::Relaxed) as usize;
             if st.total >= self.queue.capacity
                 || (self.max_inflight > 0 && inflight >= self.max_inflight)
             {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                bump(&self.metrics.rejected);
                 return Err(SubmitError::Overloaded {
                     queued: st.total,
                     inflight,
@@ -671,7 +683,11 @@ impl Coordinator {
                 (Some(h), Some(key)) => h.cache.get(key, &prompt),
                 _ => None,
             };
+            // ordering: Relaxed — both are mutated under the queue
+            // lock, which orders them; the atomics only let readers
+            // peek without the lock.
             self.pending.fetch_add(1, Ordering::Relaxed);
+            // ordering: as above — tickets take the lock's order.
             ticket = self.seq.fetch_add(1, Ordering::Relaxed);
             st.push(Request {
                 prompt,
@@ -683,9 +699,7 @@ impl Coordinator {
                 seq: ticket,
                 prefill,
             });
-            self.metrics
-                .queue_depth
-                .store(st.total as u64, Ordering::Relaxed);
+            publish_depth(&self.metrics, &st);
         }
         // admission instant on the coordinator lane (the last ring); the
         // same ticket labels the queue-wait and request spans later
@@ -700,6 +714,7 @@ impl Coordinator {
 
     /// Accepted-but-unfinished requests right now (queued + decoding).
     pub fn inflight(&self) -> usize {
+        // ordering: Relaxed — advisory snapshot for callers/reports.
         self.pending.load(Ordering::Relaxed) as usize
     }
 
@@ -712,7 +727,7 @@ impl Coordinator {
     /// Stop accepting requests and wake the workers; queued and in-flight
     /// requests still complete (graceful drain).
     pub fn shutdown(&self) {
-        self.queue.state.lock().unwrap().closed = true;
+        self.queue.state.lock_unpoisoned().closed = true;
         self.queue.available.notify_all();
     }
 
@@ -737,7 +752,7 @@ impl Coordinator {
     /// sorted by key.  Groups persist at depth 0 after their shard
     /// drains, so exported series don't disappear between scrapes.
     pub fn queue_depths(&self) -> Vec<(u64, u64)> {
-        let st = self.queue.state.lock().unwrap();
+        let st = self.queue.state.lock_unpoisoned();
         st.depths.iter().map(|(&k, &v)| (k, v as u64)).collect()
     }
 
@@ -845,10 +860,39 @@ fn next_for_board(
     }
     let req = pop_screened(st, Pick::Compat(compat), global, local, pending)?;
     if req.group != group {
-        global.steals.fetch_add(1, Ordering::Relaxed);
-        local.steals.fetch_add(1, Ordering::Relaxed);
+        bump2(&global.steals, &local.steals);
     }
     Some(req)
+}
+
+/// Bump one stat counter.
+fn bump(c: &AtomicU64) {
+    // ordering: Relaxed — the metrics atomics are independent monotone
+    // counters read only by reporting; nothing synchronizes through
+    // them.
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Bump one stat counter on both the pool aggregate and the worker's
+/// own metrics (worker-side events are recorded twice).
+fn bump2(global: &AtomicU64, local: &AtomicU64) {
+    // ordering: Relaxed — see `bump`.
+    global.fetch_add(1, Ordering::Relaxed);
+    // ordering: as above.
+    local.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Release one in-flight slot (`submit_inner` took it).
+fn release_pending(pending: &AtomicU64) {
+    // ordering: Relaxed — `pending` is the advisory admission gauge;
+    // the `max_inflight` check reads it approximately (`submit_inner`).
+    pending.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Publish the queue depth observed under the queue lock.
+fn publish_depth(m: &Metrics, st: &QueueState) {
+    // ordering: Relaxed — advisory gauge for scrapes and reports only.
+    m.queue_depth.store(st.total as u64, Ordering::Relaxed);
 }
 
 /// Deadline screen at queue-pop time: pass unexpired requests through,
@@ -865,12 +909,11 @@ fn screen_deadline(
     if !expired {
         return Some(req);
     }
-    global.deadline_dropped.fetch_add(1, Ordering::Relaxed);
-    local.deadline_dropped.fetch_add(1, Ordering::Relaxed);
+    bump2(&global.deadline_dropped, &local.deadline_dropped);
     if let Reply::Stream(tx) = &req.reply {
         let _ = tx.send(StreamEvent::Error("deadline expired before decode".into()));
     }
-    pending.fetch_sub(1, Ordering::Relaxed);
+    release_pending(pending);
     None
 }
 
@@ -931,12 +974,11 @@ fn admit_request(
         }
         Err(e) => {
             logging::info(&format!("worker {worker_id}: rejected admit: {e:#}"));
-            global.errors.fetch_add(1, Ordering::Relaxed);
-            local.errors.fetch_add(1, Ordering::Relaxed);
+            bump2(&global.errors, &local.errors);
             if let Reply::Stream(tx) = &req.reply {
                 let _ = tx.send(StreamEvent::Error(format!("admit rejected: {e:#}")));
             }
-            pending.fetch_sub(1, Ordering::Relaxed);
+            release_pending(pending);
         }
     }
 }
@@ -965,21 +1007,20 @@ fn worker_loop(
         // (shedding deadline-expired ones, which also keeps an expired
         // backlog from blocking shutdown)
         let first = {
-            let mut st = queue.state.lock().unwrap();
+            let mut st = queue.state.lock_unpoisoned();
             'adopt: loop {
                 if let Some(req) = pop_screened(&mut st, Pick::Oldest, &global, &local, &pending)
                 {
-                    global.queue_depth.store(st.total as u64, Ordering::Relaxed);
+                    publish_depth(&global, &st);
                     break 'adopt req;
                 }
-                global.queue_depth.store(st.total as u64, Ordering::Relaxed);
+                publish_depth(&global, &st);
                 if st.closed {
                     return;
                 }
                 let (guard, _timeout) = queue
                     .available
-                    .wait_timeout(st, Duration::from_millis(50))
-                    .unwrap();
+                    .wait_timeout_unpoisoned(st, Duration::from_millis(50));
                 st = guard;
             }
         };
@@ -992,12 +1033,11 @@ fn worker_loop(
             Err(e) => {
                 // invalid config: drop the channel so the caller errors out
                 logging::info(&format!("worker {worker_id}: bad config: {e:#}"));
-                global.errors.fetch_add(1, Ordering::Relaxed);
-                local.errors.fetch_add(1, Ordering::Relaxed);
+                bump2(&global.errors, &local.errors);
                 if let Reply::Stream(tx) = &first.reply {
                     let _ = tx.send(StreamEvent::Error(format!("bad config: {e:#}")));
                 }
-                pending.fetch_sub(1, Ordering::Relaxed);
+                release_pending(&pending);
                 continue;
             }
         };
@@ -1019,7 +1059,7 @@ fn worker_loop(
         // ---- dynamic-batching window: wait for stragglers once ----------
         if batch.has_free_slot() && !policy.batch_wait.is_zero() {
             let window_end = Instant::now() + policy.batch_wait;
-            let mut st = queue.state.lock().unwrap();
+            let mut st = queue.state.lock_unpoisoned();
             loop {
                 while batch.has_free_slot() {
                     let Some(req) = next_for_board(
@@ -1054,11 +1094,10 @@ fn worker_loop(
                 }
                 let (guard, _timeout) = queue
                     .available
-                    .wait_timeout(st, window_end - now)
-                    .unwrap();
+                    .wait_timeout_unpoisoned(st, window_end - now);
                 st = guard;
             }
-            global.queue_depth.store(st.total as u64, Ordering::Relaxed);
+            publish_depth(&global, &st);
         }
 
         // ---- continuous-batching session --------------------------------
@@ -1087,10 +1126,9 @@ fn worker_loop(
                         if sent.is_err() {
                             inflight.remove(&sc.id);
                             if batch.release(sc.id) {
-                                global.cancelled.fetch_add(1, Ordering::Relaxed);
-                                local.cancelled.fetch_add(1, Ordering::Relaxed);
+                                bump2(&global.cancelled, &local.cancelled);
                             }
-                            pending.fetch_sub(1, Ordering::Relaxed);
+                            release_pending(&pending);
                         }
                     }
                     for (id, out) in finished {
@@ -1114,20 +1152,19 @@ fn worker_loop(
                                 let _ = tx.send(StreamEvent::Done(resp));
                             }
                         }
-                        pending.fetch_sub(1, Ordering::Relaxed);
+                        release_pending(&pending);
                     }
                 }
                 Err(e) => {
                     logging::info(&format!("worker {worker_id}: batch failed: {e:#}"));
-                    global.errors.fetch_add(1, Ordering::Relaxed);
-                    local.errors.fetch_add(1, Ordering::Relaxed);
+                    bump2(&global.errors, &local.errors);
                     // receivers see dropped channels -> error at call site;
                     // streams get an explicit terminal event first
                     for (_, fl) in inflight.drain() {
                         if let Reply::Stream(tx) = &fl.reply {
                             let _ = tx.send(StreamEvent::Error(format!("batch failed: {e:#}")));
                         }
-                        pending.fetch_sub(1, Ordering::Relaxed);
+                        release_pending(&pending);
                     }
                     break;
                 }
@@ -1148,7 +1185,7 @@ fn worker_loop(
                     .map(|(id, _)| *id);
                 if let Some(vid) = victim {
                     let urgent = {
-                        let mut st = queue.state.lock().unwrap();
+                        let mut st = queue.state.lock_unpoisoned();
                         let horizon = Instant::now() + policy.preempt_deadline;
                         let got = pop_screened(
                             &mut st,
@@ -1158,6 +1195,8 @@ fn worker_loop(
                             &pending,
                         );
                         if got.is_some() {
+                            // lint:allow(no-panic-request-path): vid was
+                            // drawn from `inflight` just above
                             let fl = inflight.remove(&vid).unwrap();
                             batch.release(vid);
                             st.requeue(Request {
@@ -1170,8 +1209,7 @@ fn worker_loop(
                                 seq: fl.seq,
                                 prefill: fl.prefill,
                             });
-                            global.preemptions.fetch_add(1, Ordering::Relaxed);
-                            local.preemptions.fetch_add(1, Ordering::Relaxed);
+                            bump2(&global.preemptions, &local.preemptions);
                             queue.available.notify_one();
                         }
                         got
@@ -1194,7 +1232,7 @@ fn worker_loop(
             // backfill freed slots: this group's shard first, then steal
             // the oldest shape-compatible request — step-granular
             if batch.has_free_slot() {
-                let mut st = queue.state.lock().unwrap();
+                let mut st = queue.state.lock_unpoisoned();
                 while batch.has_free_slot() {
                     let Some(req) = next_for_board(
                         &mut st,
@@ -1219,7 +1257,7 @@ fn worker_loop(
                         req,
                     );
                 }
-                global.queue_depth.store(st.total as u64, Ordering::Relaxed);
+                publish_depth(&global, &st);
             }
         }
         if session_reqs > 0 {

@@ -30,6 +30,10 @@
 //! * [`obs`]         — observability: decode-path tracing (Chrome trace
 //!                     drains), stage histograms, Prometheus exposition
 //! * [`server`]      — JSON-over-TCP serving front end
+//! * [`lint`]        — `dapd-lint`, the in-repo invariant checker that
+//!                     holds the contracts above at the source level
+//!                     (no hot-path allocs, justified `unsafe`/atomics,
+//!                     panic-free request paths, lock hierarchy)
 
 pub mod alloc;
 pub mod cache;
@@ -38,6 +42,7 @@ pub mod coordinator;
 pub mod decode;
 pub mod eval;
 pub mod graph;
+pub mod lint;
 pub mod obs;
 pub mod runtime;
 pub mod server;

@@ -1,0 +1,314 @@
+//! `lint.toml` loader: a minimal TOML subset parsed by hand (the image
+//! is offline, so no toml crate).
+//!
+//! Supported syntax — exactly what the checked-in configs use:
+//! * `[table]` headers and `[[lock_class]]` array-of-tables headers
+//! * `key = "string"`, `key = 123`, `key = true|false`
+//! * `key = ["a", "b", …]`, including multi-line arrays
+//! * `#` comments (outside strings)
+//!
+//! Unknown tables/keys are hard errors so config typos surface instead
+//! of silently disabling a rule.
+
+use std::path::Path;
+
+/// One level of the declared lock hierarchy.  A nested `.lock()` chain
+/// must acquire strictly increasing ranks (outermost = lowest rank).
+#[derive(Debug, Clone, Default)]
+pub struct LockClass {
+    pub name: String,
+    pub rank: u32,
+    /// Receiver suffixes that identify this class at a `.lock()` call
+    /// site, e.g. `"queue.state"` or `"inner"`.
+    pub receivers: Vec<String>,
+    /// Path prefixes where these receivers are meaningful; empty means
+    /// every scanned file.
+    pub files: Vec<String>,
+}
+
+/// Parsed `lint.toml`.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    /// Path prefixes the scanner never descends into.
+    pub exclude: Vec<String>,
+    /// Hot-path prefixes for `no-alloc-hot-path`.
+    pub hot_paths: Vec<String>,
+    /// Files exempt from `atomic-ordering` (e.g. a counters-only
+    /// metrics module with a module-level ordering policy comment).
+    pub atomic_allow_files: Vec<String>,
+    /// Request-path prefixes for `no-panic-request-path`.
+    pub panic_paths: Vec<String>,
+    /// The declared lock hierarchy for `lock-order`.
+    pub lock_classes: Vec<LockClass>,
+}
+
+impl Config {
+    /// Read and parse a config file.
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {}", path.display(), e))?;
+        parse(&src).map_err(|e| format!("{}: {}", path.display(), e))
+    }
+}
+
+/// Strip a `#` comment, ignoring `#` inside double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let b = line.as_bytes();
+    let mut in_str = false;
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'\\' if in_str => i += 1,
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+/// Net `[` / `]` balance outside strings (for multi-line arrays).
+fn bracket_balance(s: &str) -> i32 {
+    let b = s.as_bytes();
+    let mut in_str = false;
+    let mut bal = 0i32;
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'\\' if in_str => i += 1,
+            b'"' => in_str = !in_str,
+            b'[' if !in_str => bal += 1,
+            b']' if !in_str => bal -= 1,
+            _ => {}
+        }
+        i += 1;
+    }
+    bal
+}
+
+fn parse_string(val: &str) -> Result<String, String> {
+    let t = val.trim();
+    let inner = t
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .ok_or_else(|| format!("expected a quoted string, got `{t}`"))?;
+    let mut out = String::with_capacity(inner.len());
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('\\') => out.push('\\'),
+                Some('"') => out.push('"'),
+                Some(other) => return Err(format!("unsupported escape `\\{other}`")),
+                None => return Err("dangling escape".to_string()),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+fn parse_string_array(val: &str) -> Result<Vec<String>, String> {
+    let t = val.trim();
+    let inner = t
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| format!("expected an array, got `{t}`"))?;
+    let mut out = Vec::new();
+    let b = inner.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'"' {
+            let start = i + 1;
+            let mut j = start;
+            while j < b.len() && b[j] != b'"' {
+                if b[j] == b'\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            if j >= b.len() {
+                return Err("unterminated string in array".to_string());
+            }
+            out.push(parse_string(&inner[i..j + 1])?);
+            i = j + 1;
+        } else if b[i] == b',' || b[i].is_ascii_whitespace() {
+            i += 1;
+        } else {
+            return Err(format!("unexpected `{}` in array", b[i] as char));
+        }
+    }
+    Ok(out)
+}
+
+fn parse_u32(val: &str) -> Result<u32, String> {
+    val.trim()
+        .parse::<u32>()
+        .map_err(|_| format!("expected an integer, got `{}`", val.trim()))
+}
+
+/// Parse config text.  Errors carry the 1-based line number.
+pub fn parse(src: &str) -> Result<Config, String> {
+    let mut cfg = Config::default();
+    let mut section = String::new();
+    let mut pending = String::new();
+    let mut pending_line = 0usize;
+
+    for (idx, raw) in src.lines().enumerate() {
+        let ln = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if pending.is_empty() && line.starts_with('[') {
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                if name.trim() != "lock_class" {
+                    return Err(format!("line {ln}: unknown array table `[[{name}]]`"));
+                }
+                cfg.lock_classes.push(LockClass::default());
+                section = "lock_class".to_string();
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim();
+                let known = [
+                    "scan",
+                    "no_alloc_hot_path",
+                    "atomic_ordering",
+                    "no_panic_request_path",
+                ];
+                if !known.contains(&name) {
+                    return Err(format!("line {ln}: unknown table `[{name}]`"));
+                }
+                section = name.to_string();
+            } else {
+                return Err(format!("line {ln}: malformed table header `{line}`"));
+            }
+            continue;
+        }
+        if pending.is_empty() {
+            pending_line = ln;
+        }
+        pending.push_str(line);
+        pending.push(' ');
+        if bracket_balance(&pending) > 0 {
+            continue; // inside a multi-line array
+        }
+        let stmt = std::mem::take(&mut pending);
+        let stmt = stmt.trim();
+        let eq = stmt
+            .find('=')
+            .ok_or_else(|| format!("line {pending_line}: expected `key = value`, got `{stmt}`"))?;
+        let key = stmt[..eq].trim();
+        let val = stmt[eq + 1..].trim();
+        let err = |msg: String| format!("line {pending_line}: {msg}");
+        match (section.as_str(), key) {
+            ("scan", "exclude") => cfg.exclude = parse_string_array(val).map_err(err)?,
+            ("no_alloc_hot_path", "paths") => {
+                cfg.hot_paths = parse_string_array(val).map_err(err)?;
+            }
+            ("atomic_ordering", "allow_files") => {
+                cfg.atomic_allow_files = parse_string_array(val).map_err(err)?;
+            }
+            ("no_panic_request_path", "paths") => {
+                cfg.panic_paths = parse_string_array(val).map_err(err)?;
+            }
+            ("lock_class", _) => {
+                let class = cfg
+                    .lock_classes
+                    .last_mut()
+                    .ok_or_else(|| format!("line {pending_line}: key outside [[lock_class]]"))?;
+                match key {
+                    "name" => class.name = parse_string(val).map_err(err)?,
+                    "rank" => class.rank = parse_u32(val).map_err(err)?,
+                    "receivers" => class.receivers = parse_string_array(val).map_err(err)?,
+                    "files" => class.files = parse_string_array(val).map_err(err)?,
+                    _ => {
+                        return Err(format!(
+                            "line {pending_line}: unknown key `{key}` in [[lock_class]]"
+                        ));
+                    }
+                }
+            }
+            _ => {
+                return Err(format!(
+                    "line {pending_line}: unknown key `{key}` in table `[{section}]`"
+                ));
+            }
+        }
+    }
+    if !pending.trim().is_empty() {
+        return Err(format!("line {pending_line}: unterminated value"));
+    }
+    for class in &cfg.lock_classes {
+        if class.name.is_empty() || class.receivers.is_empty() {
+            return Err("every [[lock_class]] needs a name and receivers".to_string());
+        }
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_shape() {
+        let src = r#"
+# comment
+[scan]
+exclude = ["vendor", "rust/tests/lint_fixtures"]
+
+[no_alloc_hot_path]
+paths = [
+    "rust/src/alloc",  # trailing comment
+    "rust/src/graph/csr.rs",
+]
+
+[atomic_ordering]
+allow_files = ["rust/src/coordinator/metrics.rs"]
+
+[no_panic_request_path]
+paths = ["rust/src/server"]
+
+[[lock_class]]
+name = "coordinator.queue"
+rank = 1
+receivers = ["queue.state", "state"]
+files = ["rust/src/coordinator"]
+
+[[lock_class]]
+name = "alloc.pool"
+rank = 3
+receivers = ["lists"]
+"#;
+        let cfg = parse(src).unwrap();
+        assert_eq!(cfg.exclude.len(), 2);
+        assert_eq!(cfg.hot_paths.len(), 2);
+        assert_eq!(cfg.atomic_allow_files, vec!["rust/src/coordinator/metrics.rs"]);
+        assert_eq!(cfg.panic_paths, vec!["rust/src/server"]);
+        assert_eq!(cfg.lock_classes.len(), 2);
+        assert_eq!(cfg.lock_classes[0].rank, 1);
+        assert_eq!(cfg.lock_classes[0].receivers.len(), 2);
+        assert!(cfg.lock_classes[1].files.is_empty());
+    }
+
+    #[test]
+    fn unknown_keys_are_errors() {
+        assert!(parse("[scan]\nexclud = [\"x\"]\n").is_err());
+        assert!(parse("[scna]\n").is_err());
+        assert!(parse("[[lock_clas]]\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_strings_is_not_a_comment() {
+        let src = "[scan]\nexclude = [\"a#b\"]\n";
+        let cfg = parse(src).unwrap();
+        assert_eq!(cfg.exclude, vec!["a#b"]);
+    }
+
+    #[test]
+    fn lock_class_requires_name_and_receivers() {
+        assert!(parse("[[lock_class]]\nrank = 1\n").is_err());
+    }
+}

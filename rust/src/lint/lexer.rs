@@ -1,0 +1,562 @@
+//! Hand-rolled Rust lexer for `dapd-lint` (no crates.io dependencies).
+//!
+//! Produces a flat token stream with just enough structure for the lint
+//! rules: identifier/punct/literal kinds, 1-based line numbers, brace
+//! depth, and an `in_test` flag covering `#[cfg(test)]` / `#[test]` /
+//! `#[bench]` items.  Comments are not tokens; their text is collected
+//! per line so rules can look for `// SAFETY:` / `// ordering:` /
+//! `// lint:allow(...)` markers on a line or in the contiguous
+//! comment/attribute block above it.
+//!
+//! The lexer understands the token-level constructs that would
+//! otherwise produce false matches: line and nested block comments,
+//! string / raw-string / byte-string / char literals, lifetimes
+//! (`'a` is not a char literal), and raw identifiers (`r#fn`).
+
+/// Token class.  Literals keep no text: no rule inspects their value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Lit,
+}
+
+/// One lexed token with the position facts the rules key off.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Brace depth: for `{` and `}` this is the depth *outside* the
+    /// block, so a block's opener and closer record the same depth.
+    pub depth: u32,
+    /// Inside a `#[cfg(test)]` / `#[test]` / `#[bench]` item body.
+    pub in_test: bool,
+}
+
+impl Token {
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+}
+
+/// Per-line facts used by the comment-marker walks.
+#[derive(Debug, Clone, Default)]
+pub struct LineInfo {
+    /// Concatenated comment text on this line (line + block comments).
+    pub comment: String,
+    /// The line carries at least one non-comment token.
+    pub has_code: bool,
+    /// The first token on this line is `#` (an attribute line).
+    pub starts_attr: bool,
+}
+
+/// A lexed file: the token stream plus per-line comment facts.
+/// `lines` is indexed by 1-based line number (entry 0 is unused).
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub lines: Vec<LineInfo>,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_' || c >= 0x80
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_' || c >= 0x80
+}
+
+fn count_nl(b: &[u8]) -> u32 {
+    b.iter().filter(|&&c| c == b'\n').count() as u32
+}
+
+/// Skip a `"…"` string starting at the opening quote; returns the index
+/// one past the closing quote.
+fn skip_string(b: &[u8], mut i: usize) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    b.len()
+}
+
+/// Skip a raw-string body; `i` points one past the opening quote and
+/// `hashes` is the number of `#` in the opener.
+fn skip_raw_body(b: &[u8], mut i: usize, hashes: usize) -> usize {
+    while i < b.len() {
+        if b[i] == b'"' {
+            let mut k = 0;
+            while k < hashes && i + 1 + k < b.len() && b[i + 1 + k] == b'#' {
+                k += 1;
+            }
+            if k == hashes {
+                return i + 1 + hashes;
+            }
+        }
+        i += 1;
+    }
+    b.len()
+}
+
+/// Skip a char (or byte-char) literal starting at the opening quote.
+fn skip_char(b: &[u8], mut i: usize) -> usize {
+    i += 1;
+    if i < b.len() && b[i] == b'\\' {
+        i += 2;
+    } else if i < b.len() {
+        i += 1;
+    }
+    while i < b.len() && b[i] != b'\'' {
+        i += 1;
+    }
+    (i + 1).min(b.len())
+}
+
+fn line_mut(lines: &mut Vec<LineInfo>, line: u32) -> &mut LineInfo {
+    let idx = line as usize;
+    if lines.len() <= idx {
+        lines.resize(idx + 1, LineInfo::default());
+    }
+    &mut lines[idx]
+}
+
+fn push_token(
+    tokens: &mut Vec<Token>,
+    lines: &mut Vec<LineInfo>,
+    kind: TokKind,
+    text: &str,
+    line: u32,
+    depth: u32,
+) {
+    let info = line_mut(lines, line);
+    if !info.has_code {
+        info.has_code = true;
+        info.starts_attr = kind == TokKind::Punct && text == "#";
+    }
+    tokens.push(Token {
+        kind,
+        text: text.to_string(),
+        line,
+        depth,
+        in_test: false,
+    });
+}
+
+fn record_comment(lines: &mut Vec<LineInfo>, line: u32, text: &str) {
+    let info = line_mut(lines, line);
+    let t = text.trim();
+    if t.is_empty() {
+        // an empty comment still marks the line as non-blank for the
+        // contiguity walk (e.g. the `///` spacer inside a doc block)
+        if info.comment.is_empty() {
+            info.comment.push(' ');
+        }
+        return;
+    }
+    if !info.comment.is_empty() {
+        info.comment.push(' ');
+    }
+    info.comment.push_str(t);
+}
+
+/// Lex `src` into tokens + per-line comment facts and mark test regions.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut depth: u32 = 0;
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut lines: Vec<LineInfo> = Vec::new();
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (also covers /// and //! doc comments)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            record_comment(&mut lines, line, &src[start..j]);
+            i = j;
+            continue;
+        }
+        // nested block comment, text recorded per line
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut level = 1u32;
+            let mut j = i + 2;
+            let mut seg = j;
+            while j < n && level > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    level += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    level -= 1;
+                    j += 2;
+                } else if b[j] == b'\n' {
+                    record_comment(&mut lines, line, &src[seg..j]);
+                    line += 1;
+                    j += 1;
+                    seg = j;
+                } else {
+                    j += 1;
+                }
+            }
+            let tail = src[seg..j].trim_end_matches("*/");
+            record_comment(&mut lines, line, tail);
+            i = j;
+            continue;
+        }
+        // string literal
+        if c == b'"' {
+            let end = skip_string(b, i);
+            push_token(&mut tokens, &mut lines, TokKind::Lit, "\"\"", line, depth);
+            line += count_nl(&b[i..end]);
+            i = end;
+            continue;
+        }
+        // char literal or lifetime
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] != b'\\' && is_ident_start(b[i + 1]) {
+                let mut j = i + 2;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == b'\'' {
+                    // 'a' — a char literal
+                    push_token(&mut tokens, &mut lines, TokKind::Lit, "''", line, depth);
+                    i = j + 1;
+                } else {
+                    // 'a — a lifetime; emits no token
+                    i = j;
+                }
+            } else {
+                let end = skip_char(b, i);
+                push_token(&mut tokens, &mut lines, TokKind::Lit, "''", line, depth);
+                line += count_nl(&b[i..end]);
+                i = end;
+            }
+            continue;
+        }
+        // number literal ('.' only joins when followed by a digit, so
+        // tuple indexing like `x.0.clone()` still splits on the dot)
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n {
+                let d = b[j];
+                if d.is_ascii_alphanumeric() || d == b'_' {
+                    j += 1;
+                } else if d == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            push_token(&mut tokens, &mut lines, TokKind::Lit, "0", line, depth);
+            i = j;
+            continue;
+        }
+        // identifier, possibly a raw-string / byte-string prefix
+        if is_ident_start(c) {
+            let start = i;
+            let mut j = i + 1;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            let text = &src[start..j];
+            if (text == "r" || text == "br") && j < n && (b[j] == b'"' || b[j] == b'#') {
+                let mut k = j;
+                let mut hashes = 0usize;
+                while k < n && b[k] == b'#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == b'"' {
+                    // raw string r"…" / r#"…"# / br#"…"#
+                    let end = skip_raw_body(b, k + 1, hashes);
+                    push_token(&mut tokens, &mut lines, TokKind::Lit, "\"\"", line, depth);
+                    line += count_nl(&b[j..end]);
+                    i = end;
+                    continue;
+                }
+                if text == "r" && hashes == 1 {
+                    // raw identifier r#ident
+                    let s2 = j + 1;
+                    let mut m = s2;
+                    while m < n && is_ident_continue(b[m]) {
+                        m += 1;
+                    }
+                    push_token(&mut tokens, &mut lines, TokKind::Ident, &src[s2..m], line, depth);
+                    i = m;
+                    continue;
+                }
+            }
+            if text == "b" && j < n && b[j] == b'"' {
+                let end = skip_string(b, j);
+                push_token(&mut tokens, &mut lines, TokKind::Lit, "\"\"", line, depth);
+                line += count_nl(&b[j..end]);
+                i = end;
+                continue;
+            }
+            if text == "b" && j < n && b[j] == b'\'' {
+                let end = skip_char(b, j);
+                push_token(&mut tokens, &mut lines, TokKind::Lit, "''", line, depth);
+                i = end;
+                continue;
+            }
+            push_token(&mut tokens, &mut lines, TokKind::Ident, text, line, depth);
+            i = j;
+            continue;
+        }
+        // single-char punctuation
+        if c == b'{' {
+            push_token(&mut tokens, &mut lines, TokKind::Punct, "{", line, depth);
+            depth += 1;
+        } else if c == b'}' {
+            depth = depth.saturating_sub(1);
+            push_token(&mut tokens, &mut lines, TokKind::Punct, "}", line, depth);
+        } else {
+            let text = &src[i..i + 1];
+            push_token(&mut tokens, &mut lines, TokKind::Punct, text, line, depth);
+        }
+        i += 1;
+    }
+
+    let mut lexed = Lexed { tokens, lines };
+    mark_tests(&mut lexed.tokens);
+    lexed
+}
+
+/// Decide whether the attribute tokens between `#[` and `]` mark a test
+/// item: `#[test]`, `#[bench]`, `#[tokio::test]`, `#[cfg(test)]`,
+/// `#[cfg(any(test, …))]`.  `#[cfg(not(test))]` is production code.
+fn is_test_attr(body: &[Token]) -> bool {
+    let mut saw_cfg = false;
+    let mut saw_not = false;
+    let mut saw_test = false;
+    for t in body {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        match t.text.as_str() {
+            "cfg" => saw_cfg = true,
+            "not" => saw_not = true,
+            "test" | "bench" => saw_test = true,
+            _ => {}
+        }
+    }
+    if !saw_test {
+        return false;
+    }
+    !(saw_cfg && saw_not)
+}
+
+/// Mark every token inside a test item's body (and its attribute)
+/// `in_test`.  An item is the attribute's target: the next `{`…`}`
+/// body at the attribute's depth, unless a `;` ends the item first.
+fn mark_tests(tokens: &mut [Token]) {
+    let n = tokens.len();
+    let mut i = 0;
+    while i < n {
+        if !tokens[i].is_punct("#") || i + 1 >= n || !tokens[i + 1].is_punct("[") {
+            i += 1;
+            continue;
+        }
+        // scan to the matching `]`
+        let mut j = i + 2;
+        let mut brk = 1i32;
+        while j < n && brk > 0 {
+            if tokens[j].is_punct("[") {
+                brk += 1;
+            } else if tokens[j].is_punct("]") {
+                brk -= 1;
+            }
+            j += 1;
+        }
+        if !is_test_attr(&tokens[i + 2..j.saturating_sub(1)]) {
+            i = j;
+            continue;
+        }
+        // find the item body `{` (or give up at a terminating `;`)
+        let item_depth = tokens[i].depth;
+        let mut body = None;
+        let mut nest = 0i32;
+        let mut k = j;
+        while k < n {
+            let t = &tokens[k];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" => nest += 1,
+                    ")" | "]" => nest -= 1,
+                    "{" if nest == 0 && t.depth == item_depth => {
+                        body = Some(k);
+                    }
+                    _ => {}
+                }
+                if body.is_some() || (t.text == ";" && nest == 0 && t.depth == item_depth) {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        let Some(bs) = body else {
+            i = j;
+            continue;
+        };
+        // mark from the attribute through the matching `}`
+        let close_depth = tokens[bs].depth;
+        let mut m = bs + 1;
+        while m < n {
+            if tokens[m].is_punct("}") && tokens[m].depth == close_depth {
+                break;
+            }
+            m += 1;
+        }
+        let end = m.min(n - 1);
+        for t in tokens.iter_mut().take(end + 1).skip(i) {
+            t.in_test = true;
+        }
+        i = end + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_chars_do_not_leak_tokens() {
+        let src = r##"let s = "vec![unsafe]"; let r = r#"Ordering::Relaxed"#; let c = 'u';"##;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "s", "let", "r", "let", "c"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        let ids = idents(src);
+        assert!(ids.contains(&"str".to_string()));
+        // the `{ x }` body must still be seen (a char-literal misparse
+        // would swallow it)
+        assert!(ids.contains(&"x".to_string()));
+    }
+
+    #[test]
+    fn comments_are_collected_per_line() {
+        let src = "// SAFETY: fine\nlet x = 1; // ordering: relaxed\n/* block */ let y = 2;\n";
+        let lx = lex(src);
+        assert!(lx.lines[1].comment.contains("SAFETY:"));
+        assert!(!lx.lines[1].has_code);
+        assert!(lx.lines[2].comment.contains("ordering:"));
+        assert!(lx.lines[2].has_code);
+        assert!(lx.lines[3].comment.contains("block"));
+    }
+
+    #[test]
+    fn block_comments_track_newlines() {
+        let src = "/* a\n b\n c */ let x = 1;\n";
+        let lx = lex(src);
+        let tok = lx.tokens.iter().find(|t| t.is_ident("let")).unwrap();
+        assert_eq!(tok.line, 3);
+    }
+
+    #[test]
+    fn cfg_test_mod_is_marked() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\nfn prod2() {}\n";
+        let lx = lex(src);
+        let helper = lx.tokens.iter().find(|t| t.is_ident("helper")).unwrap();
+        assert!(helper.in_test);
+        let prod = lx.tokens.iter().find(|t| t.is_ident("prod")).unwrap();
+        assert!(!prod.in_test);
+        let prod2 = lx.tokens.iter().find(|t| t.is_ident("prod2")).unwrap();
+        assert!(!prod2.in_test);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_marked() {
+        let src = "#[cfg(not(test))]\nfn prod() { body(); }\n";
+        let lx = lex(src);
+        let body = lx.tokens.iter().find(|t| t.is_ident("body")).unwrap();
+        assert!(!body.in_test);
+    }
+
+    #[test]
+    fn cfg_test_use_without_body_marks_nothing() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn prod() { body(); }\n";
+        let lx = lex(src);
+        let body = lx.tokens.iter().find(|t| t.is_ident("body")).unwrap();
+        assert!(!body.in_test);
+    }
+
+    #[test]
+    fn array_semicolon_in_signature_does_not_end_the_item() {
+        let src = "#[test]\nfn t(x: [u8; 4]) { inner(); }\n";
+        let lx = lex(src);
+        let inner = lx.tokens.iter().find(|t| t.is_ident("inner")).unwrap();
+        assert!(inner.in_test);
+    }
+
+    #[test]
+    fn depth_is_outer_for_both_braces() {
+        let src = "fn f() { if x { y(); } }";
+        let lx = lex(src);
+        let braces: Vec<(String, u32)> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.is_punct("{") || t.is_punct("}"))
+            .map(|t| (t.text.clone(), t.depth))
+            .collect();
+        assert_eq!(
+            braces,
+            vec![
+                ("{".to_string(), 0),
+                ("{".to_string(), 1),
+                ("}".to_string(), 1),
+                ("}".to_string(), 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_idents() {
+        let ids = idents("let r#fn = 1;");
+        assert_eq!(ids, vec!["let", "fn"]);
+    }
+
+    #[test]
+    fn attribute_lines_are_flagged() {
+        let src = "#[inline]\nfn f() {}\n";
+        let lx = lex(src);
+        assert!(lx.lines[1].starts_attr);
+        assert!(!lx.lines[2].starts_attr);
+    }
+}

@@ -1,0 +1,247 @@
+//! `dapd-lint`: the in-repo invariant checker for the concurrent
+//! decode stack (see DESIGN.md "Static analysis").
+//!
+//! The performance and safety story of this crate rests on contracts —
+//! zero steady-state allocation in the step path, justified `unsafe`,
+//! documented atomic orderings, panic-free request paths, and a single
+//! declared lock hierarchy.  The dynamic checks (counting-allocator
+//! benches, ULP parity tests) catch regressions only on the paths they
+//! execute; this lexer-level analysis holds the contracts at the
+//! source level, on every line, in CI.  It is dependency-free by
+//! design: the offline image vendors no crates.io parser, and the
+//! rules need token- and comment-level facts, not full type analysis.
+//!
+//! Five rules (see [`rules::Rule`]):
+//! * `no-alloc-hot-path` — allocating calls in declared hot modules
+//! * `safety-comment` — every `unsafe` carries a `// SAFETY:` note
+//! * `atomic-ordering` — non-SeqCst orderings carry `// ordering:`
+//! * `no-panic-request-path` — no `unwrap`/`expect`/`panic!` where a
+//!   panic strands a worker's queue shard
+//! * `lock-order` — nested `.lock()`s follow the `lint.toml` hierarchy
+//!
+//! Run locally with `cargo run --bin dapd-lint`; the fixture suite in
+//! `rust/tests/lint_rules.rs` locks rule behavior, and the repo itself
+//! must lint clean (zero unsuppressed findings) in CI.
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+pub use config::{Config, LockClass};
+pub use rules::{Finding, Rule};
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// The result of linting a file tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// All findings, suppressed ones included, sorted by (file, line).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn unsuppressed(&self) -> usize {
+        self.findings.iter().filter(|f| !f.suppressed).count()
+    }
+
+    pub fn suppressed(&self) -> usize {
+        self.findings.len() - self.unsuppressed()
+    }
+
+    /// Machine-readable report (the CI artifact).
+    pub fn to_json(&self) -> String {
+        let mut counts = Json::obj();
+        for rule in Rule::ALL {
+            let n = self
+                .findings
+                .iter()
+                .filter(|f| f.rule == rule && !f.suppressed)
+                .count();
+            counts.set(rule.name(), Json::from_i64(n as i64));
+        }
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = Json::obj();
+                o.set("file", Json::Str(f.file.clone()));
+                o.set("line", Json::from_i64(f.line as i64));
+                o.set("rule", Json::Str(f.rule.name().to_string()));
+                o.set("message", Json::Str(f.message.clone()));
+                o.set("suppressed", Json::Bool(f.suppressed));
+                if f.suppressed {
+                    o.set("reason", Json::Str(f.reason.clone()));
+                }
+                o
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.set("files_scanned", Json::from_i64(self.files_scanned as i64));
+        root.set("unsuppressed", Json::from_i64(self.unsuppressed() as i64));
+        root.set("suppressed", Json::from_i64(self.suppressed() as i64));
+        root.set("counts", counts);
+        root.set("findings", Json::Arr(findings));
+        root.dump_pretty()
+    }
+
+    /// Human-readable report for local runs.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            if f.suppressed {
+                continue;
+            }
+            out.push_str(&format!(
+                "{}:{}: [{}] {}\n",
+                f.file,
+                f.line,
+                f.rule.name(),
+                f.message
+            ));
+        }
+        for f in &self.findings {
+            if f.suppressed {
+                out.push_str(&format!(
+                    "{}:{}: [{}] suppressed: {}\n",
+                    f.file,
+                    f.line,
+                    f.rule.name(),
+                    f.reason
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "{} file(s) scanned, {} finding(s) ({} suppressed)\n",
+            self.files_scanned,
+            self.unsuppressed(),
+            self.suppressed()
+        ));
+        out
+    }
+}
+
+/// Lint one file's source text under its repo-relative path.
+pub fn lint_source(rel: &str, src: &str, cfg: &Config) -> Vec<Finding> {
+    let lx = lexer::lex(src);
+    rules::lint_tokens(&lx, rel, cfg)
+}
+
+fn excluded(rel: &str, cfg: &Config) -> bool {
+    cfg.exclude.iter().any(|p| match rel.strip_prefix(p.as_str()) {
+        Some(rest) => rest.is_empty() || rest.starts_with('/'),
+        None => false,
+    })
+}
+
+fn collect_rs(
+    root: &Path,
+    rel_dir: &str,
+    cfg: &Config,
+    out: &mut Vec<String>,
+) -> std::io::Result<()> {
+    let abs = if rel_dir.is_empty() {
+        PathBuf::from(root)
+    } else {
+        root.join(rel_dir)
+    };
+    let mut entries: Vec<_> = std::fs::read_dir(&abs)?
+        .collect::<Result<Vec<_>, _>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        let rel = if rel_dir.is_empty() {
+            name.to_string()
+        } else {
+            format!("{rel_dir}/{name}")
+        };
+        if path.is_dir() {
+            if name == "target" || name.starts_with('.') || excluded(&rel, cfg) {
+                continue;
+            }
+            collect_rs(root, &rel, cfg, out)?;
+        } else if name.ends_with(".rs") && !excluded(&rel, cfg) {
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (skipping `target/`, dot
+/// directories, and the config's `[scan] exclude` prefixes).
+pub fn run(root: &Path, cfg: &Config) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, "", cfg, &mut files)?;
+    let mut findings = Vec::new();
+    for rel in &files {
+        let src = std::fs::read_to_string(root.join(rel))?;
+        findings.extend(lint_source(rel, &src, cfg));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(Report {
+        findings,
+        files_scanned: files.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_report_has_the_contract_fields() {
+        let report = Report {
+            findings: vec![Finding {
+                file: "a.rs".to_string(),
+                line: 3,
+                rule: Rule::SafetyComment,
+                message: "m".to_string(),
+                suppressed: false,
+                reason: String::new(),
+            }],
+            files_scanned: 1,
+        };
+        let j = Json::parse(&report.to_json()).unwrap();
+        assert_eq!(j.get("unsuppressed").as_i64(), Some(1));
+        assert_eq!(j.get("counts").get("safety-comment").as_i64(), Some(1));
+        let arr = j.get("findings").as_arr().unwrap();
+        assert_eq!(arr[0].get("file").as_str(), Some("a.rs"));
+        assert_eq!(arr[0].get("line").as_i64(), Some(3));
+    }
+
+    #[test]
+    fn human_report_lists_unsuppressed_first() {
+        let report = Report {
+            findings: vec![
+                Finding {
+                    file: "a.rs".to_string(),
+                    line: 1,
+                    rule: Rule::AtomicOrdering,
+                    message: "sup".to_string(),
+                    suppressed: true,
+                    reason: "because".to_string(),
+                },
+                Finding {
+                    file: "b.rs".to_string(),
+                    line: 2,
+                    rule: Rule::LockOrder,
+                    message: "bad".to_string(),
+                    suppressed: false,
+                    reason: String::new(),
+                },
+            ],
+            files_scanned: 2,
+        };
+        let text = report.render_human();
+        let bad = text.find("bad").unwrap();
+        let sup = text.find("because").unwrap();
+        assert!(bad < sup);
+        assert!(text.contains("2 file(s) scanned, 1 finding(s) (1 suppressed)"));
+    }
+}

@@ -1,0 +1,621 @@
+//! The five `dapd-lint` rules, run over the token stream from
+//! [`crate::lint::lexer`].
+//!
+//! Every rule supports the same escape hatch: a
+//! `// lint:allow(<rule>): <reason>` comment on the finding's line or
+//! in the contiguous comment/attribute block above it marks the
+//! finding suppressed (it is still reported, with its reason, but does
+//! not fail the run).  An allow without a reason does **not** suppress:
+//! the point of the hatch is a recorded justification, not a mute.
+
+use super::config::{Config, LockClass};
+use super::lexer::{Lexed, LineInfo, TokKind, Token};
+
+/// Rule identifiers, named as they appear in findings and allows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    NoAllocHotPath,
+    SafetyComment,
+    AtomicOrdering,
+    NoPanicRequestPath,
+    LockOrder,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] = [
+        Rule::NoAllocHotPath,
+        Rule::SafetyComment,
+        Rule::AtomicOrdering,
+        Rule::NoPanicRequestPath,
+        Rule::LockOrder,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::NoAllocHotPath => "no-alloc-hot-path",
+            Rule::SafetyComment => "safety-comment",
+            Rule::AtomicOrdering => "atomic-ordering",
+            Rule::NoPanicRequestPath => "no-panic-request-path",
+            Rule::LockOrder => "lock-order",
+        }
+    }
+}
+
+/// One lint finding, suppressed or not.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub message: String,
+    pub suppressed: bool,
+    /// The `lint:allow` reason when suppressed.
+    pub reason: String,
+}
+
+/// Run every rule over one lexed file.
+pub fn lint_tokens(lx: &Lexed, rel: &str, cfg: &Config) -> Vec<Finding> {
+    let mut out = Vec::new();
+    rule_no_alloc(lx, rel, cfg, &mut out);
+    rule_safety(lx, rel, &mut out);
+    rule_atomic(lx, rel, cfg, &mut out);
+    rule_no_panic(lx, rel, cfg, &mut out);
+    rule_lock_order(lx, rel, cfg, &mut out);
+    out.sort_by_key(|f| f.line);
+    out
+}
+
+/// `rel` is under one of `prefixes` (exact file or directory prefix).
+fn path_matches(rel: &str, prefixes: &[String]) -> bool {
+    prefixes.iter().any(|p| match rel.strip_prefix(p.as_str()) {
+        Some(rest) => rest.is_empty() || rest.starts_with('/'),
+        None => false,
+    })
+}
+
+/// The comment text of the line carrying `marker`, searching the
+/// finding's own line and then the contiguous comment/attribute block
+/// above it.  A blank line or a non-attribute code line ends the walk.
+fn find_comment_with<'a>(lines: &'a [LineInfo], line: u32, marker: &str) -> Option<&'a str> {
+    let idx = line as usize;
+    if let Some(info) = lines.get(idx) {
+        if info.comment.contains(marker) {
+            return Some(&info.comment);
+        }
+    }
+    let mut cur = idx;
+    while cur > 1 {
+        cur -= 1;
+        let info = lines.get(cur)?;
+        if info.has_code && !info.starts_attr {
+            return None;
+        }
+        if !info.has_code && info.comment.is_empty() {
+            return None; // a blank line breaks contiguity
+        }
+        if info.comment.contains(marker) {
+            return Some(&info.comment);
+        }
+    }
+    None
+}
+
+fn has_marker(lines: &[LineInfo], line: u32, marker: &str) -> bool {
+    find_comment_with(lines, line, marker).is_some()
+}
+
+/// Apply the `lint:allow` escape hatch to a fresh finding.
+fn apply_suppression(lines: &[LineInfo], f: &mut Finding) {
+    let tag = format!("lint:allow({})", f.rule.name());
+    let Some(text) = find_comment_with(lines, f.line, &tag) else {
+        return;
+    };
+    let Some(pos) = text.find(&tag) else {
+        return;
+    };
+    let after = text[pos + tag.len()..].trim_start();
+    let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        f.message
+            .push_str(" [lint:allow present but missing `: <reason>`]");
+    } else {
+        f.suppressed = true;
+        f.reason = reason.to_string();
+    }
+}
+
+fn push(out: &mut Vec<Finding>, lx: &Lexed, rel: &str, rule: Rule, line: u32, message: String) {
+    let mut f = Finding {
+        file: rel.to_string(),
+        line,
+        rule,
+        message,
+        suppressed: false,
+        reason: String::new(),
+    };
+    apply_suppression(&lx.lines, &mut f);
+    out.push(f);
+}
+
+fn ident_text(t: &[Token], i: usize) -> Option<&str> {
+    t.get(i)
+        .filter(|x| x.kind == TokKind::Ident)
+        .map(|x| x.text.as_str())
+}
+
+fn is_punct_at(t: &[Token], i: usize, s: &str) -> bool {
+    matches!(t.get(i), Some(x) if x.is_punct(s))
+}
+
+/// `t[i]` begins a `::` separator.
+fn is_path_sep(t: &[Token], i: usize) -> bool {
+    is_punct_at(t, i, ":") && is_punct_at(t, i + 1, ":")
+}
+
+// ---------------------------------------------------------------------
+// Rule 1: no-alloc-hot-path
+// ---------------------------------------------------------------------
+
+/// Allocating constructors reached through a path (`Vec::new(…)`).
+const ALLOC_PATHS: [(&str, &str); 7] = [
+    ("Vec", "new"),
+    ("Vec", "with_capacity"),
+    ("Vec", "from"),
+    ("Box", "new"),
+    ("String", "new"),
+    ("String", "from"),
+    ("String", "with_capacity"),
+];
+
+/// Allocating methods (`x.clone()`, `iter.collect::<…>()`).
+const ALLOC_METHODS: [&str; 5] = ["clone", "to_vec", "to_string", "to_owned", "collect"];
+
+fn rule_no_alloc(lx: &Lexed, rel: &str, cfg: &Config, out: &mut Vec<Finding>) {
+    if !path_matches(rel, &cfg.hot_paths) {
+        return;
+    }
+    let t = &lx.tokens;
+    for i in 0..t.len() {
+        if t[i].in_test || t[i].kind != TokKind::Ident {
+            continue;
+        }
+        let name = t[i].text.as_str();
+        if (name == "vec" || name == "format") && is_punct_at(t, i + 1, "!") {
+            let msg = format!("allocating macro `{name}!` in a declared hot-path module");
+            push(out, lx, rel, Rule::NoAllocHotPath, t[i].line, msg);
+            continue;
+        }
+        if is_path_sep(t, i + 1) {
+            if let Some(seg) = ident_text(t, i + 3) {
+                if ALLOC_PATHS.iter().any(|&(ty, m)| ty == name && m == seg) {
+                    let msg =
+                        format!("allocating call `{name}::{seg}` in a declared hot-path module");
+                    push(out, lx, rel, Rule::NoAllocHotPath, t[i].line, msg);
+                    continue;
+                }
+            }
+        }
+        if i > 0
+            && is_punct_at(t, i - 1, ".")
+            && ALLOC_METHODS.contains(&name)
+            && (is_punct_at(t, i + 1, "(") || is_path_sep(t, i + 1))
+        {
+            let msg = format!("allocating method `.{name}()` in a declared hot-path module");
+            push(out, lx, rel, Rule::NoAllocHotPath, t[i].line, msg);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 2: safety-comment
+// ---------------------------------------------------------------------
+
+fn rule_safety(lx: &Lexed, rel: &str, out: &mut Vec<Finding>) {
+    let t = &lx.tokens;
+    for i in 0..t.len() {
+        if !t[i].is_ident("unsafe") {
+            continue;
+        }
+        let line = t[i].line;
+        if has_marker(&lx.lines, line, "SAFETY:") || has_marker(&lx.lines, line, "# Safety") {
+            continue;
+        }
+        let what = match t.get(i + 1) {
+            Some(nx) if nx.is_ident("fn") => "unsafe fn",
+            Some(nx) if nx.is_ident("impl") => "unsafe impl",
+            Some(nx) if nx.is_ident("trait") => "unsafe trait",
+            Some(nx) if nx.is_punct("{") => "unsafe block",
+            _ => "unsafe",
+        };
+        let msg = format!("`{what}` without a `// SAFETY:` comment");
+        push(out, lx, rel, Rule::SafetyComment, line, msg);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 3: atomic-ordering
+// ---------------------------------------------------------------------
+
+fn rule_atomic(lx: &Lexed, rel: &str, cfg: &Config, out: &mut Vec<Finding>) {
+    if path_matches(rel, &cfg.atomic_allow_files) {
+        return;
+    }
+    let t = &lx.tokens;
+    for i in 0..t.len() {
+        if t[i].in_test || !t[i].is_ident("Ordering") || !is_path_sep(t, i + 1) {
+            continue;
+        }
+        let Some(ord) = ident_text(t, i + 3) else {
+            continue;
+        };
+        if !matches!(ord, "Relaxed" | "Acquire" | "Release" | "AcqRel") {
+            continue;
+        }
+        let line = t[i].line;
+        if has_marker(&lx.lines, line, "ordering:") {
+            continue;
+        }
+        let msg = format!("`Ordering::{ord}` without an `// ordering:` justification");
+        push(out, lx, rel, Rule::AtomicOrdering, line, msg);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 4: no-panic-request-path
+// ---------------------------------------------------------------------
+
+fn rule_no_panic(lx: &Lexed, rel: &str, cfg: &Config, out: &mut Vec<Finding>) {
+    if !path_matches(rel, &cfg.panic_paths) {
+        return;
+    }
+    let t = &lx.tokens;
+    for i in 0..t.len() {
+        if t[i].in_test || t[i].kind != TokKind::Ident {
+            continue;
+        }
+        let name = t[i].text.as_str();
+        if matches!(name, "unwrap" | "expect")
+            && i > 0
+            && is_punct_at(t, i - 1, ".")
+            && is_punct_at(t, i + 1, "(")
+        {
+            let msg = format!("`.{name}()` on a request-handling path (a panic strands the shard)");
+            push(out, lx, rel, Rule::NoPanicRequestPath, t[i].line, msg);
+            continue;
+        }
+        if matches!(name, "panic" | "todo" | "unimplemented") && is_punct_at(t, i + 1, "!") {
+            let msg = format!("`{name}!` on a request-handling path (a panic strands the shard)");
+            push(out, lx, rel, Rule::NoPanicRequestPath, t[i].line, msg);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 5: lock-order
+// ---------------------------------------------------------------------
+
+/// A live guard tracked by the lexical lock-order analysis.
+struct LiveGuard {
+    class_idx: usize,
+    rank: u32,
+    /// `let`-binding name when we could parse one (else empty).
+    name: String,
+    /// Brace depth at acquisition: a named guard dies when its block
+    /// closes; a temporary dies at the next `;` at or below this depth.
+    depth: u32,
+    temp: bool,
+}
+
+/// Walk backward from the `.` before `lock` and collect the receiver
+/// chain as dot-joined identifiers, skipping index/call groups:
+/// `self.shards[si].queue.state.lock()` → `"self.shards.queue.state"`.
+/// Returns the chain and the token index where it starts.
+fn receiver_chain(t: &[Token], dot_idx: usize) -> (String, usize) {
+    let mut parts: Vec<String> = Vec::new();
+    let mut j = dot_idx;
+    let mut start = dot_idx;
+    loop {
+        if j == 0 {
+            break;
+        }
+        let k = j - 1;
+        if t[k].is_punct("]") || t[k].is_punct(")") {
+            let (open, close) = if t[k].is_punct("]") {
+                ("[", "]")
+            } else {
+                ("(", ")")
+            };
+            let mut bal = 1i32;
+            let mut m = k;
+            while m > 0 && bal > 0 {
+                m -= 1;
+                if t[m].is_punct(close) {
+                    bal += 1;
+                } else if t[m].is_punct(open) {
+                    bal -= 1;
+                }
+            }
+            if bal != 0 {
+                break;
+            }
+            j = m;
+            start = m;
+            continue;
+        }
+        if t[k].kind == TokKind::Ident {
+            parts.push(t[k].text.clone());
+            start = k;
+            if k >= 1 && t[k - 1].is_punct(".") {
+                j = k - 1;
+                continue;
+            }
+        }
+        break;
+    }
+    parts.reverse();
+    (parts.join("."), start)
+}
+
+/// A chain names a class when one of the class's receiver patterns is
+/// the whole chain or a `.`-suffix of it.
+fn receiver_names_class(chain: &str, class: &LockClass) -> bool {
+    class
+        .receivers
+        .iter()
+        .any(|r| chain == r.as_str() || chain.ends_with(&format!(".{r}")))
+}
+
+/// The `let`-binding name of the statement containing `chain_start`,
+/// if the statement is a parseable `let [mut] NAME = …`.  Returns
+/// `(is_let, name)`.
+fn binding_of(t: &[Token], chain_start: usize, lock_idx: usize) -> (bool, String) {
+    let mut k = chain_start;
+    while k > 0 {
+        let p = &t[k - 1];
+        if p.kind == TokKind::Punct && matches!(p.text.as_str(), ";" | "{" | "}" | "(" | ",") {
+            break;
+        }
+        k -= 1;
+    }
+    if !t[k].is_ident("let") {
+        return (false, String::new());
+    }
+    for e in k..lock_idx {
+        if t[e].is_punct("=") {
+            if e > k && t[e - 1].kind == TokKind::Ident {
+                return (true, t[e - 1].text.clone());
+            }
+            return (true, String::new());
+        }
+    }
+    (true, String::new())
+}
+
+fn rule_lock_order(lx: &Lexed, rel: &str, cfg: &Config, out: &mut Vec<Finding>) {
+    let classes: Vec<(usize, &LockClass)> = cfg
+        .lock_classes
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.files.is_empty() || path_matches(rel, &c.files))
+        .collect();
+    if classes.is_empty() {
+        return;
+    }
+    let t = &lx.tokens;
+    let mut guards: Vec<LiveGuard> = Vec::new();
+    for i in 0..t.len() {
+        let tok = &t[i];
+        if tok.in_test {
+            continue;
+        }
+        if tok.is_ident("fn") {
+            guards.clear();
+            continue;
+        }
+        if tok.is_punct("}") {
+            guards.retain(|g| g.depth <= tok.depth);
+            continue;
+        }
+        if tok.is_punct(";") {
+            guards.retain(|g| !(g.temp && tok.depth <= g.depth));
+            continue;
+        }
+        if tok.is_ident("drop") && is_punct_at(t, i + 1, "(") && is_punct_at(t, i + 3, ")") {
+            if let Some(name) = ident_text(t, i + 2) {
+                guards.retain(|g| g.name != name);
+            }
+            continue;
+        }
+        // `lock_unpoisoned` is `util::LockExt`'s poison-recovering
+        // `lock`; both acquire, so both participate in the hierarchy.
+        if (tok.is_ident("lock") || tok.is_ident("lock_unpoisoned"))
+            && i > 0
+            && t[i - 1].is_punct(".")
+            && is_punct_at(t, i + 1, "(")
+            && is_punct_at(t, i + 2, ")")
+        {
+            let (chain, chain_start) = receiver_chain(t, i - 1);
+            let Some((ci, class)) = classes
+                .iter()
+                .find(|(_, c)| receiver_names_class(&chain, c))
+            else {
+                continue;
+            };
+            if let Some(held) = guards.iter().find(|g| g.rank >= class.rank) {
+                let held_name = &cfg.lock_classes[held.class_idx].name;
+                let msg = if held.class_idx == *ci {
+                    format!(
+                        "nested acquisition of lock class `{}` (self-deadlock risk)",
+                        class.name
+                    )
+                } else {
+                    format!(
+                        "acquired `{}` (rank {}) while holding `{}` (rank {}); \
+                         the declared order is lowest-rank outermost",
+                        class.name, class.rank, held_name, held.rank
+                    )
+                };
+                push(out, lx, rel, Rule::LockOrder, tok.line, msg);
+            }
+            let (is_let, name) = binding_of(t, chain_start, i);
+            guards.push(LiveGuard {
+                class_idx: *ci,
+                rank: class.rank,
+                name,
+                depth: tok.depth,
+                temp: !is_let,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn cfg_hot() -> Config {
+        Config {
+            hot_paths: vec!["hot".to_string()],
+            panic_paths: vec!["srv".to_string()],
+            ..Config::default()
+        }
+    }
+
+    fn findings(rel: &str, src: &str, cfg: &Config) -> Vec<Finding> {
+        lint_tokens(&lex(src), rel, cfg)
+    }
+
+    #[test]
+    fn alloc_rule_only_fires_in_hot_paths() {
+        let src = "fn f() { let v = Vec::new(); }\n";
+        assert_eq!(findings("hot/a.rs", src, &cfg_hot()).len(), 1);
+        assert_eq!(findings("cold/a.rs", src, &cfg_hot()).len(), 0);
+    }
+
+    #[test]
+    fn alloc_rule_skips_tests_and_matches_methods() {
+        let src = "fn f(xs: &[u32]) -> Vec<u32> { xs.to_vec() }\n\
+                   #[cfg(test)]\nmod tests { fn g() { let v = vec![1]; } }\n";
+        let f = findings("hot/a.rs", src, &cfg_hot());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("to_vec"));
+    }
+
+    #[test]
+    fn unwrap_or_is_not_unwrap() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n";
+        assert_eq!(findings("srv/a.rs", src, &cfg_hot()).len(), 0);
+        let src2 = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(findings("srv/a.rs", src2, &cfg_hot()).len(), 1);
+    }
+
+    #[test]
+    fn suppression_requires_a_reason() {
+        let cfg = cfg_hot();
+        let with_reason = "fn f() {\n    // lint:allow(no-panic-request-path): startup only\n    \
+                           x.unwrap();\n}\n";
+        let f = findings("srv/a.rs", with_reason, &cfg);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].suppressed);
+        assert_eq!(f[0].reason, "startup only");
+
+        let without = "fn f() {\n    // lint:allow(no-panic-request-path)\n    x.unwrap();\n}\n";
+        let f = findings("srv/a.rs", without, &cfg);
+        assert_eq!(f.len(), 1);
+        assert!(!f[0].suppressed);
+        assert!(f[0].message.contains("missing"));
+    }
+
+    #[test]
+    fn safety_comment_accepted_on_line_or_above_attrs() {
+        let cfg = Config::default();
+        let ok = "// SAFETY: checked\n#[inline]\nunsafe fn f() {}\n";
+        assert_eq!(findings("a.rs", ok, &cfg).len(), 0);
+        let ok2 = "fn g() { let x = unsafe { p.read() }; // SAFETY: p is valid\n}\n";
+        assert_eq!(findings("a.rs", ok2, &cfg).len(), 0);
+        let bad = "unsafe fn f() {}\n";
+        assert_eq!(findings("a.rs", bad, &cfg).len(), 1);
+        let blank_breaks = "// SAFETY: too far\n\nunsafe fn f() {}\n";
+        assert_eq!(findings("a.rs", blank_breaks, &cfg).len(), 1);
+    }
+
+    #[test]
+    fn atomic_rule_exempts_seqcst_and_allowlist() {
+        let cfg = Config {
+            atomic_allow_files: vec!["m.rs".to_string()],
+            ..Config::default()
+        };
+        let src = "fn f(a: &AtomicU64) { a.load(Ordering::Relaxed); }\n";
+        assert_eq!(findings("a.rs", src, &cfg).len(), 1);
+        assert_eq!(findings("m.rs", src, &cfg).len(), 0);
+        let seq = "fn f(a: &AtomicU64) { a.load(Ordering::SeqCst); }\n";
+        assert_eq!(findings("a.rs", seq, &cfg).len(), 0);
+        let noted = "fn f(a: &AtomicU64) {\n    // ordering: counter only\n    \
+                     a.load(Ordering::Relaxed);\n}\n";
+        assert_eq!(findings("a.rs", noted, &cfg).len(), 0);
+    }
+
+    fn lock_cfg() -> Config {
+        Config {
+            lock_classes: vec![
+                LockClass {
+                    name: "outer".to_string(),
+                    rank: 1,
+                    receivers: vec!["state".to_string()],
+                    files: Vec::new(),
+                },
+                LockClass {
+                    name: "inner".to_string(),
+                    rank: 2,
+                    receivers: vec!["slots".to_string()],
+                    files: Vec::new(),
+                },
+            ],
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn lock_order_flags_inversion_not_declared_order() {
+        let ok = "fn f(&self) {\n    let g = self.state.lock();\n    \
+                  let h = self.slots.lock();\n}\n";
+        assert_eq!(findings("a.rs", ok, &lock_cfg()).len(), 0);
+        let bad = "fn f(&self) {\n    let g = self.slots.lock();\n    \
+                   let h = self.state.lock();\n}\n";
+        let f = findings("a.rs", bad, &lock_cfg());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("rank"));
+    }
+
+    #[test]
+    fn lock_order_respects_scopes_and_drop() {
+        let scoped = "fn f(&self) {\n    { let g = self.slots.lock(); }\n    \
+                      let h = self.state.lock();\n}\n";
+        assert_eq!(findings("a.rs", scoped, &lock_cfg()).len(), 0);
+        let dropped = "fn f(&self) {\n    let g = self.slots.lock();\n    drop(g);\n    \
+                       let h = self.state.lock();\n}\n";
+        assert_eq!(findings("a.rs", dropped, &lock_cfg()).len(), 0);
+        let temp = "fn f(&self) {\n    self.slots.lock().push(1);\n    \
+                    let h = self.state.lock();\n}\n";
+        assert_eq!(findings("a.rs", temp, &lock_cfg()).len(), 0);
+    }
+
+    #[test]
+    fn lock_order_flags_same_class_nesting() {
+        let bad = "fn f(&self) {\n    let g = self.state.lock();\n    \
+                   let h = other.state.lock();\n}\n";
+        let f = findings("a.rs", bad, &lock_cfg());
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("self-deadlock"));
+    }
+
+    #[test]
+    fn lock_order_tracks_lock_unpoisoned_like_lock() {
+        let bad = "fn f(&self) {\n    let g = self.slots.lock_unpoisoned();\n    \
+                   let h = self.state.lock_unpoisoned();\n}\n";
+        let f = findings("a.rs", bad, &lock_cfg());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("rank"));
+    }
+}

@@ -348,6 +348,9 @@ mod sig {
     const SIGTERM: i32 = 15;
 
     extern "C" fn on_signal(_signum: i32) {
+        // ordering: Relaxed — an isolated latch polled by the accept
+        // loop; nothing else is published through it, and Relaxed
+        // store/load is async-signal-safe.
         CAUGHT.store(true, Ordering::Relaxed);
     }
 
@@ -356,6 +359,9 @@ mod sig {
     }
 
     pub fn install() {
+        // SAFETY: libc `signal` with a handler that only performs an
+        // async-signal-safe atomic store; called once at startup from
+        // the main thread, before any worker exists.
         unsafe {
             signal(SIGINT, on_signal);
             signal(SIGTERM, on_signal);
@@ -363,6 +369,7 @@ mod sig {
     }
 
     pub fn caught() -> bool {
+        // ordering: Relaxed — see `on_signal`.
         CAUGHT.load(Ordering::Relaxed)
     }
 }

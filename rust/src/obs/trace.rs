@@ -136,11 +136,15 @@ impl Tracing {
 
     #[inline]
     pub fn is_enabled(&self) -> bool {
+        // ordering: Relaxed — advisory sampling gate; a stale read only
+        // drops or admits a handful of events around the flip, and the
+        // event payloads are published under each lane's mutex.
         self.enabled.load(Ordering::Relaxed)
     }
 
     /// Flip the enable flag (tests; production sets it at construction).
     pub fn set_enabled(&self, on: bool) {
+        // ordering: Relaxed — see `is_enabled`.
         self.enabled.store(on, Ordering::Relaxed);
     }
 

@@ -45,8 +45,15 @@ struct CompiledArtifact {
 // keep it in an `Arc` or leak it).  The only cross-thread traffic is moves
 // and `Arc` clones of immutable compiled artifacts, never shared mutation.
 unsafe impl Send for Engine {}
+// SAFETY: as above — `cache` is the one mutable field and sits behind a
+// `Mutex`; `client` and `meta` are only read after construction, and the
+// PJRT C API tolerates concurrent calls on one client.
 unsafe impl Sync for Engine {}
+// SAFETY: as above — a compiled artifact is immutable after
+// construction; it crosses threads only as a move or an `Arc` clone.
 unsafe impl Send for CompiledArtifact {}
+// SAFETY: as above — shared access is read-only execution through the
+// thread-safe PJRT C API; the handles are never mutated after compile.
 unsafe impl Sync for CompiledArtifact {}
 
 impl Engine {

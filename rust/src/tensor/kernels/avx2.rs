@@ -27,6 +27,9 @@ pub(super) fn available() -> bool {
 // horizontal reductions
 // ---------------------------------------------------------------------
 
+// SAFETY: unsafe only for `target_feature`; register-to-register
+// math, no memory access.  Called from kernels carrying the same
+// feature set (checked once by the dispatcher via `available`).
 #[target_feature(enable = "avx2,fma")]
 unsafe fn hsum(v: __m256) -> f32 {
     let lo = _mm256_castps256_ps128(v);
@@ -37,6 +40,7 @@ unsafe fn hsum(v: __m256) -> f32 {
     _mm_cvtss_f32(s)
 }
 
+// SAFETY: as `hsum` — feature-gated register math only.
 #[target_feature(enable = "avx2,fma")]
 unsafe fn hmax(v: __m256) -> f32 {
     let lo = _mm256_castps256_ps128(v);
@@ -64,6 +68,7 @@ const EXP_P5: f32 = 5.0e-1;
 
 /// `exp(x)` per lane; callers clamp `x` into `[EXP_LO, EXP_HI]` first
 /// (this routine also clamps defensively).
+// SAFETY: as `hsum` — feature-gated register math only.
 #[target_feature(enable = "avx2,fma")]
 unsafe fn vexpf(x: __m256) -> __m256 {
     let x = _mm256_min_ps(x, _mm256_set1_ps(EXP_HI));
@@ -105,6 +110,7 @@ const LOG_Q2: f32 = 0.693_359_4;
 
 /// `ln(x)` per lane for strictly-positive normal `x` (callers clamp
 /// probabilities to `>= 1e-12` first, well above the subnormal range).
+// SAFETY: as `hsum` — feature-gated register math only.
 #[target_feature(enable = "avx2,fma")]
 unsafe fn vlogf(x: __m256) -> __m256 {
     let one = _mm256_set1_ps(1.0);
@@ -147,6 +153,10 @@ unsafe fn vlogf(x: __m256) -> __m256 {
 // kernels
 // ---------------------------------------------------------------------
 
+// SAFETY: unsafe only for `target_feature` — the caller must ensure
+// AVX2+FMA (the parent dispatcher checks `available` once).  All loads
+// are unaligned (`loadu`) and bounded by `chunks_exact`, so slice
+// validity is the only memory invariant and the borrow checker holds it.
 #[target_feature(enable = "avx2,fma")]
 pub(super) unsafe fn sum(xs: &[f32]) -> f32 {
     let mut acc = _mm256_setzero_ps();
@@ -161,6 +171,7 @@ pub(super) unsafe fn sum(xs: &[f32]) -> f32 {
     s
 }
 
+// SAFETY: as `sum` — feature-gated; `chunks_exact`-bounded `loadu`.
 #[target_feature(enable = "avx2,fma")]
 pub(super) unsafe fn max_or(xs: &[f32], init: f32) -> f32 {
     let mut chunks = xs.chunks_exact(8);
@@ -178,6 +189,7 @@ pub(super) unsafe fn max_or(xs: &[f32], init: f32) -> f32 {
 /// Max reduction, then a scan for the first index holding the max — the
 /// same `(lowest index, value)` answer as the scalar fold for NaN-free
 /// input.
+// SAFETY: as `sum` — feature-gated; delegates loads to `max_or`.
 #[target_feature(enable = "avx2,fma")]
 pub(super) unsafe fn argmax(xs: &[f32]) -> (usize, f32) {
     let m = max_or(xs, f32::NEG_INFINITY);
@@ -189,6 +201,8 @@ pub(super) unsafe fn argmax(xs: &[f32]) -> (usize, f32) {
     (0, m) // unreachable for NaN-free, non-empty input
 }
 
+// SAFETY: as `sum` — feature-gated; `chunks_exact_mut`-bounded
+// unaligned load/store pairs within one exclusive borrow.
 #[target_feature(enable = "avx2,fma")]
 pub(super) unsafe fn scale(xs: &mut [f32], c: f32) {
     let vc = _mm256_set1_ps(c);
@@ -202,6 +216,7 @@ pub(super) unsafe fn scale(xs: &mut [f32], c: f32) {
     }
 }
 
+// SAFETY: as `scale` — feature-gated; bounded unaligned stores.
 #[target_feature(enable = "avx2,fma")]
 pub(super) unsafe fn fill(xs: &mut [f32], c: f32) {
     let vc = _mm256_set1_ps(c);
@@ -215,6 +230,8 @@ pub(super) unsafe fn fill(xs: &mut [f32], c: f32) {
 }
 
 /// `dst += src`; caller asserts equal lengths.
+// SAFETY: as `sum` — feature-gated; `i + 8 <= n` with
+// `n = min(len, len)` bounds every pointer-offset load/store.
 #[target_feature(enable = "avx2,fma")]
 pub(super) unsafe fn acc(dst: &mut [f32], src: &[f32]) {
     let n = dst.len().min(src.len());
@@ -231,6 +248,7 @@ pub(super) unsafe fn acc(dst: &mut [f32], src: &[f32]) {
     }
 }
 
+// SAFETY: as `sum` — feature-gated; `chunks_exact`-bounded `loadu`.
 #[target_feature(enable = "avx2,fma")]
 pub(super) unsafe fn entropy(ps: &[f32]) -> f32 {
     let eps = _mm256_set1_ps(1e-12);
@@ -252,6 +270,8 @@ pub(super) unsafe fn entropy(ps: &[f32]) -> f32 {
     -s
 }
 
+// SAFETY: as `acc` — feature-gated; `i + 8 <= min(p.len, q.len)`
+// bounds every pointer-offset load.
 #[target_feature(enable = "avx2,fma")]
 pub(super) unsafe fn kl_div(p: &[f32], q: &[f32]) -> f32 {
     let eps = _mm256_set1_ps(1e-12);
@@ -280,6 +300,9 @@ pub(super) unsafe fn kl_div(p: &[f32], q: &[f32]) -> f32 {
 }
 
 /// In-place softmax without the statistics (max pass, exp pass, scale).
+// SAFETY: as `acc` — feature-gated; `i + 8 <= n` bounds every
+// pointer-offset access, and the nested kernel calls share the
+// feature set.
 #[target_feature(enable = "avx2,fma")]
 pub(super) unsafe fn softmax_inplace(xs: &mut [f32]) {
     debug_assert!(xs.iter().all(|x| !x.is_nan()), "softmax over NaN logits");
@@ -315,6 +338,8 @@ pub(super) unsafe fn softmax_inplace(xs: &mut [f32]) {
 
 /// The fused kernel: see the parent module docs for the identities.
 /// Caller asserts `prev.len() == row.len()` when `prev` is given.
+// SAFETY: as `softmax_inplace`; the `prev` loads rely on the caller's
+// documented `prev.len() == row.len()` contract (asserted upstream).
 #[target_feature(enable = "avx2,fma")]
 pub(super) unsafe fn softmax_stats(row: &mut [f32], prev: Option<&[f32]>) -> SoftmaxStats {
     debug_assert!(row.iter().all(|x| !x.is_nan()), "softmax over NaN logits");
@@ -385,6 +410,7 @@ mod tests {
         }
         let xs: [f32; 8] = [0.0, 1.0, -1.0, 10.0, -10.0, 0.5, -86.0, 20.0];
         let mut got = [0.0f32; 8];
+        // SAFETY: `available()` was checked above; arrays are 8 wide.
         unsafe {
             let v = vexpf(_mm256_loadu_ps(xs.as_ptr()));
             _mm256_storeu_ps(got.as_mut_ptr(), v);
@@ -397,6 +423,7 @@ mod tests {
             );
         }
         let ps: [f32; 8] = [1e-12, 1e-6, 0.1, 0.5, 1.0, 2.0, 100.0, 0.9999];
+        // SAFETY: as above — feature checked, 8-wide arrays.
         unsafe {
             let v = vlogf(_mm256_loadu_ps(ps.as_ptr()));
             _mm256_storeu_ps(got.as_mut_ptr(), v);
@@ -417,6 +444,7 @@ mod tests {
         }
         let xs: Vec<f32> = (0..29).map(|i| ((i * 37) % 13) as f32 - 6.0).collect();
         let want = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        // SAFETY: `available()` was checked above; slices bound loads.
         unsafe {
             assert_eq!(max_or(&xs, f32::NEG_INFINITY), want);
             let (i, v) = argmax(&xs);

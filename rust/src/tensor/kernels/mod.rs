@@ -160,6 +160,9 @@ pub fn native_available() -> bool {
 }
 
 fn resolve_default() -> Backend {
+    // ordering: Relaxed — an isolated backend-selector byte; no other
+    // memory is published through it, and racing lazy initializers
+    // converge on the same env-derived value.
     match PROCESS_DEFAULT.load(Ordering::Relaxed) {
         CODE_SCALAR => return Backend::Scalar,
         CODE_NATIVE => return Backend::Native,
@@ -192,6 +195,7 @@ pub fn set_process_default(b: Backend) {
         Backend::Scalar => CODE_SCALAR,
         Backend::Native => CODE_NATIVE,
     };
+    // ordering: Relaxed — see `resolve_default`.
     PROCESS_DEFAULT.store(code, Ordering::Relaxed);
 }
 
@@ -249,7 +253,10 @@ pub fn active_isa(b: Backend) -> &'static str {
 pub fn selected_label() -> String {
     let b = backend();
     match b {
+        // lint:allow(no-alloc-hot-path): cold diagnostics — built once
+        // per describe/metrics scrape, never on the step path.
         Backend::Scalar => "scalar".to_string(),
+        // lint:allow(no-alloc-hot-path): as above.
         Backend::Native => format!("native/{}", active_isa(b)),
     }
 }

@@ -18,6 +18,10 @@ pub(super) fn available() -> bool {
     std::arch::is_aarch64_feature_detected!("neon")
 }
 
+// SAFETY: unsafe only for `target_feature` — the caller must ensure
+// NEON (the parent dispatcher checks `available` once).  Loads are
+// bounded by `chunks_exact`, so slice validity is the only memory
+// invariant and the borrow checker holds it.
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn sum(xs: &[f32]) -> f32 {
     let mut acc = vdupq_n_f32(0.0);
@@ -32,6 +36,7 @@ pub(super) unsafe fn sum(xs: &[f32]) -> f32 {
     s
 }
 
+// SAFETY: as `sum` — feature-gated; `chunks_exact`-bounded loads.
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn max_or(xs: &[f32], init: f32) -> f32 {
     let mut vm = vdupq_n_f32(init);
@@ -49,6 +54,7 @@ pub(super) unsafe fn max_or(xs: &[f32], init: f32) -> f32 {
 /// Max reduction, then a scan for the first index holding the max — the
 /// same `(lowest index, value)` answer as the scalar fold for NaN-free
 /// input.
+// SAFETY: as `sum` — feature-gated; delegates loads to `max_or`.
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn argmax(xs: &[f32]) -> (usize, f32) {
     let m = max_or(xs, f32::NEG_INFINITY);
@@ -60,6 +66,8 @@ pub(super) unsafe fn argmax(xs: &[f32]) -> (usize, f32) {
     (0, m) // unreachable for NaN-free, non-empty input
 }
 
+// SAFETY: as `sum` — feature-gated; `chunks_exact_mut`-bounded
+// load/store pairs within one exclusive borrow.
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn scale(xs: &mut [f32], c: f32) {
     let mut chunks = xs.chunks_exact_mut(4);
@@ -72,6 +80,7 @@ pub(super) unsafe fn scale(xs: &mut [f32], c: f32) {
     }
 }
 
+// SAFETY: as `scale` — feature-gated; bounded stores.
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn fill(xs: &mut [f32], c: f32) {
     let vc = vdupq_n_f32(c);
@@ -85,6 +94,8 @@ pub(super) unsafe fn fill(xs: &mut [f32], c: f32) {
 }
 
 /// `dst += src`; caller asserts equal lengths.
+// SAFETY: as `sum` — feature-gated; `i + 4 <= min(dst.len, src.len)`
+// bounds every pointer-offset access.
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn acc(dst: &mut [f32], src: &[f32]) {
     let n = dst.len().min(src.len());

@@ -2,6 +2,9 @@
 //! external crates beyond the in-tree `anyhow` shim under `vendor/`, and
 //! the PJRT binding is stubbed — see DESIGN.md "Substitutions").
 
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
 pub mod args;
 pub mod bench;
 pub mod json;
@@ -24,6 +27,55 @@ pub fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
     h
 }
 
+/// Poison-tolerant locking for request-path shared state.
+///
+/// `Mutex::lock().unwrap()` turns one panicked holder into a permanent
+/// denial of service: the poison flag makes every later locker panic,
+/// unwinding the whole worker pool one thread at a time.  The state
+/// guarded by this crate's mutexes (queue shards, metric summaries,
+/// trace lanes, pool free lists) stays structurally valid even if a
+/// holder unwound mid-update, so recovering the guard and continuing
+/// is strictly better than stranding every subsequent request.
+/// `dapd-lint`'s `no-panic-request-path` rule pushes server/coordinator
+/// code onto this trait, and its `lock-order` rule tracks
+/// `.lock_unpoisoned()` exactly like `.lock()`.
+pub trait LockExt<T> {
+    /// Lock, recovering (and logging) if a previous holder panicked.
+    fn lock_unpoisoned(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn lock_unpoisoned(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(|poisoned| {
+            logging::info("recovered a poisoned lock (a previous holder panicked)");
+            poisoned.into_inner()
+        })
+    }
+}
+
+/// [`LockExt`]'s counterpart for condvar waits: re-acquire the guard
+/// even if another holder panicked while this thread slept.
+pub trait CondvarExt {
+    fn wait_timeout_unpoisoned<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult);
+}
+
+impl CondvarExt for Condvar {
+    fn wait_timeout_unpoisoned<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        self.wait_timeout(guard, dur).unwrap_or_else(|poisoned| {
+            logging::info("recovered a poisoned lock after a condvar wait");
+            poisoned.into_inner()
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::{fnv1a, FNV_OFFSET};
@@ -33,6 +85,39 @@ mod tests {
         // FNV-1a("a") = 0xaf63dc4c8601ec8c
         assert_eq!(fnv1a(FNV_OFFSET, b"a"), 0xaf63dc4c8601ec8c);
         assert_ne!(fnv1a(FNV_OFFSET, b"ab"), fnv1a(FNV_OFFSET, b"ba"));
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_from_a_panicked_holder() {
+        use super::LockExt;
+        use std::sync::{Arc, Mutex};
+        let m = Arc::new(Mutex::new(7));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*m.lock_unpoisoned(), 7);
+    }
+
+    #[test]
+    fn wait_timeout_unpoisoned_recovers_and_times_out() {
+        use super::{CondvarExt, LockExt};
+        use std::sync::{Arc, Condvar, Mutex};
+        use std::time::Duration;
+        let m = Arc::new(Mutex::new(0));
+        let cv = Condvar::new();
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        let guard = m.lock_unpoisoned();
+        let (_guard, timeout) = cv.wait_timeout_unpoisoned(guard, Duration::from_millis(1));
+        assert!(timeout.timed_out());
     }
 }
 
@@ -44,16 +129,20 @@ pub mod logging {
     static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=quiet 1=info 2=debug
 
     pub fn set_level(level: u8) {
+        // ordering: Relaxed — the level is an isolated advisory byte;
+        // no other memory is published through it.
         LEVEL.store(level, Ordering::Relaxed);
     }
 
     pub fn info(msg: &str) {
+        // ordering: Relaxed — advisory filter read; see `set_level`.
         if LEVEL.load(Ordering::Relaxed) >= 1 {
             eprintln!("[dapd] {msg}");
         }
     }
 
     pub fn debug(msg: &str) {
+        // ordering: Relaxed — advisory filter read; see `set_level`.
         if LEVEL.load(Ordering::Relaxed) >= 2 {
             eprintln!("[dapd:debug] {msg}");
         }

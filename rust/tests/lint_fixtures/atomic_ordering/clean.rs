@@ -1,0 +1,12 @@
+// Golden fixture: orderings the rule accepts — SeqCst needs no note,
+// and a Relaxed site with an `// ordering:` justification passes.
+// Expected findings: none.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    // ordering: Relaxed — isolated stat counter, nothing published.
+    let prev = c.load(Ordering::Relaxed);
+    c.store(prev + 1, Ordering::SeqCst);
+    prev
+}

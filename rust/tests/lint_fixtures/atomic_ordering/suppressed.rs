@@ -1,0 +1,10 @@
+// Golden fixture: a Relaxed site suppressed through the escape hatch
+// (no per-site note; the justification lives in the allow reason).
+// Expected findings: one, suppressed, reason "fixture counter".
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    // lint:allow(atomic-ordering): fixture counter
+    c.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,12 @@
+// Golden fixture: relaxed-family orderings without justification.
+// Expected findings (all unsuppressed):
+//   line 9  — `Ordering::Relaxed`
+//   line 10 — `Ordering::Release`
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    let prev = c.load(Ordering::Relaxed);
+    c.store(prev + 1, Ordering::Release);
+    prev
+}

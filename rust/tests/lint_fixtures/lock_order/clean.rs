@@ -1,0 +1,25 @@
+// Golden fixture: legal acquisition patterns — declared order
+// (lowest rank outermost), a scope-bounded guard, and an explicit
+// `drop` before the next class.  Expected findings: none.
+
+pub fn declared_order(this: &Shards) -> usize {
+    let g = this.state.lock();
+    let h = this.slots.lock();
+    g.len() + h.len()
+}
+
+pub fn scoped(this: &Shards) -> usize {
+    {
+        let g = this.slots.lock();
+        g.touch();
+    }
+    let h = this.state.lock();
+    h.len()
+}
+
+pub fn dropped(this: &Shards) -> usize {
+    let g = this.slots.lock();
+    drop(g);
+    let h = this.state.lock();
+    h.len()
+}

@@ -1,0 +1,11 @@
+// Golden fixture: a deliberate inversion justified through the escape
+// hatch (e.g. a teardown path where every other thread has already
+// exited).  Expected findings: one, suppressed, reason "teardown —
+// workers joined, no concurrent holder exists".
+
+pub fn teardown(this: &Shards) -> usize {
+    let g = this.slots.lock();
+    // lint:allow(lock-order): teardown — workers joined, no concurrent holder exists
+    let h = this.state.lock();
+    g.len() + h.len()
+}

@@ -1,0 +1,17 @@
+// Golden fixture: two hierarchy violations against the fixture config
+// (`state` = rank 1, `slots` = rank 2).  Expected findings (both
+// unsuppressed):
+//   line 9  — rank inversion (acquired rank 1 while holding rank 2)
+//   line 15 — same-class nesting (self-deadlock risk)
+
+pub fn inverted(this: &Shards) -> usize {
+    let g = this.slots.lock();
+    let h = this.state.lock();
+    g.len() + h.len()
+}
+
+pub fn doubled(a: &Shards, b: &Shards) -> usize {
+    let g = a.state.lock();
+    let h = b.state.lock();
+    g.len() + h.len()
+}

@@ -1,0 +1,20 @@
+// Golden fixture: a hot-path module that holds the zero-allocation
+// contract.  The `vec![…]` below sits in a `#[cfg(test)]` module, which
+// the rule skips — test scratch may allocate.  Expected findings: none.
+
+pub fn hot_sum(xs: &[f32]) -> f32 {
+    let mut s = 0.0;
+    for &x in xs {
+        s += x;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn scratch_may_allocate() {
+        let v = vec![1.0f32, 2.0];
+        assert!((super::hot_sum(&v) - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,20 @@
+// Golden fixture: a cold-path allocation inside a hot-path module,
+// justified through the escape hatch.  Expected findings: one,
+// suppressed, reason "one-time fixture constructor".
+
+pub struct Pool {
+    slots: Vec<f32>,
+}
+
+impl Pool {
+    pub fn new(n: usize) -> Pool {
+        Pool {
+            // lint:allow(no-alloc-hot-path): one-time fixture constructor
+            slots: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+}

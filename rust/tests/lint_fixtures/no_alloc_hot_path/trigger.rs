@@ -1,0 +1,15 @@
+// Golden fixture: three allocation sites in a declared hot-path
+// module, none justified.  Expected findings (all unsuppressed):
+//   line 8  — `Vec::with_capacity`
+//   line 10 — `format!`
+//   line 11 — `.to_vec()`
+
+pub fn hot_step(xs: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(xs.len());
+    out.extend_from_slice(xs);
+    let label = format!("{} lanes", xs.len());
+    let copy = xs.to_vec();
+    drop(label);
+    drop(copy);
+    out
+}

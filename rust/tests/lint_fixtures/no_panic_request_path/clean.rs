@@ -1,0 +1,21 @@
+// Golden fixture: the degradation patterns the rule wants —
+// `unwrap_or`-family fallbacks and explicit matches.  The `.unwrap()`
+// in the `#[test]` is skipped: panicking asserts belong in tests.
+// Expected findings: none.
+
+pub fn handle(req: Option<u32>, body: Result<u32, String>) -> Result<u32, String> {
+    let id = req.unwrap_or(0);
+    match body {
+        Ok(n) => Ok(id + n),
+        Err(e) => Err(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        let got = super::handle(Some(1), Ok(2)).unwrap();
+        assert_eq!(got, 3);
+    }
+}

@@ -1,0 +1,9 @@
+// Golden fixture: an intentional panic on a request path, justified
+// through the escape hatch (startup-only invariant).  Expected
+// findings: one, suppressed, reason "startup only, before any request
+// is accepted".
+
+pub fn boot(listener: Option<u32>) -> u32 {
+    // lint:allow(no-panic-request-path): startup only, before any request is accepted
+    listener.expect("bind the listener before serving")
+}

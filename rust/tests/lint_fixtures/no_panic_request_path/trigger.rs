@@ -1,0 +1,14 @@
+// Golden fixture: three panic sites on a declared request path.
+// Expected findings (all unsuppressed):
+//   line 8  — `.unwrap()`
+//   line 9  — `.expect()`
+//   line 11 — `panic!`
+
+pub fn handle(req: Option<u32>, body: Result<u32, String>) -> u32 {
+    let id = req.unwrap();
+    let n = body.expect("body must parse");
+    if n == 0 {
+        panic!("zero-length request {id}");
+    }
+    id + n
+}

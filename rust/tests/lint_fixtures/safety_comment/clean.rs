@@ -1,0 +1,23 @@
+// Golden fixture: the same three constructs, each carrying a marker
+// the rule accepts — a `# Safety` doc section, a `// SAFETY:` line
+// above, and a trailing `// SAFETY:` on the block's own line.
+// Expected findings: none.
+
+/// Reads one lane.
+///
+/// # Safety
+///
+/// `p` must be valid for reads and properly aligned.
+pub unsafe fn read_lane(p: *const f32) -> f32 {
+    *p
+}
+
+pub struct Handle(*mut u8);
+
+// SAFETY: the pointer is only dereferenced on the owning thread.
+unsafe impl Send for Handle {}
+
+pub fn peek(p: &u8) -> u8 {
+    let q: *const u8 = p;
+    unsafe { *q } // SAFETY: derived from the live reference above
+}

@@ -1,0 +1,9 @@
+// Golden fixture: an unsafe block justified through the escape hatch
+// rather than a SAFETY comment (e.g. a call into a module whose own
+// docs carry the argument).  Expected findings: one, suppressed,
+// reason "invariant documented on the module".
+
+pub fn peek(p: *const u8) -> u8 {
+    // lint:allow(safety-comment): invariant documented on the module
+    unsafe { *p }
+}

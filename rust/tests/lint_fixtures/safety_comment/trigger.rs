@@ -1,0 +1,17 @@
+// Golden fixture: three `unsafe` constructs without SAFETY comments.
+// Expected findings (all unsuppressed):
+//   line 7  — `unsafe fn`
+//   line 13 — `unsafe impl`
+//   line 16 — `unsafe block`
+
+pub unsafe fn read_lane(p: *const f32) -> f32 {
+    *p
+}
+
+pub struct Handle(*mut u8);
+
+unsafe impl Send for Handle {}
+
+pub fn peek(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,167 @@
+//! Golden-fixture suite for `dapd-lint` (DESIGN.md "Static analysis").
+//!
+//! Every rule is locked by three checked-in fixtures under
+//! `rust/tests/lint_fixtures/<rule>/`: `trigger.rs` must fire at the
+//! exact golden lines, `clean.rs` must be silent, and `suppressed.rs`
+//! must report its finding as suppressed with the recorded reason.
+//! On top of the per-rule goldens, the suite pins the JSON artifact
+//! shape, the binary's exit-code contract (the CI gate), and the
+//! repo-wide invariant that the tree itself lints clean.
+
+use dapd::lint::{self, Config, Finding, Rule};
+use dapd::util::json::Json;
+use std::path::PathBuf;
+use std::process::Command;
+
+const RULE_DIRS: [(Rule, &str); 5] = [
+    (Rule::NoAllocHotPath, "no_alloc_hot_path"),
+    (Rule::SafetyComment, "safety_comment"),
+    (Rule::AtomicOrdering, "atomic_ordering"),
+    (Rule::NoPanicRequestPath, "no_panic_request_path"),
+    (Rule::LockOrder, "lock_order"),
+];
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixtures_root() -> PathBuf {
+    repo_root().join("rust/tests/lint_fixtures")
+}
+
+fn fixture_report() -> lint::Report {
+    let root = fixtures_root();
+    let cfg = Config::load(&root.join("lint.toml")).expect("fixture lint.toml parses");
+    lint::run(&root, &cfg).expect("fixture scan succeeds")
+}
+
+fn in_file<'a>(report: &'a lint::Report, rel: &str) -> Vec<&'a Finding> {
+    report.findings.iter().filter(|f| f.file == rel).collect()
+}
+
+#[test]
+fn every_trigger_fixture_fires_at_its_golden_lines() {
+    let report = fixture_report();
+    let golden: [(&str, &[u32]); 5] = [
+        ("no_alloc_hot_path", &[8, 10, 11]),
+        ("safety_comment", &[7, 13, 16]),
+        ("atomic_ordering", &[9, 10]),
+        ("no_panic_request_path", &[8, 9, 11]),
+        ("lock_order", &[9, 15]),
+    ];
+    for (rule, dir) in RULE_DIRS {
+        let rel = format!("{dir}/trigger.rs");
+        let found = in_file(&report, &rel);
+        let want = golden.iter().find(|(d, _)| *d == dir).unwrap().1;
+        let lines: Vec<u32> = found.iter().map(|f| f.line).collect();
+        assert_eq!(lines, want, "{rel}: {found:?}");
+        for f in &found {
+            assert_eq!(f.rule, rule, "{rel}: wrong rule in {f:?}");
+            assert!(!f.suppressed, "{rel}: trigger finding must not suppress");
+        }
+    }
+}
+
+#[test]
+fn lock_order_trigger_distinguishes_inversion_from_self_nesting() {
+    let report = fixture_report();
+    let found = in_file(&report, "lock_order/trigger.rs");
+    assert_eq!(found.len(), 2);
+    assert!(found[0].message.contains("rank"), "{:?}", found[0]);
+    assert!(found[1].message.contains("self-deadlock"), "{:?}", found[1]);
+}
+
+#[test]
+fn clean_fixtures_are_silent() {
+    let report = fixture_report();
+    for (_, dir) in RULE_DIRS {
+        let rel = format!("{dir}/clean.rs");
+        let found = in_file(&report, &rel);
+        assert!(found.is_empty(), "{rel}: {found:?}");
+    }
+}
+
+#[test]
+fn suppressed_fixtures_report_the_recorded_reason() {
+    let report = fixture_report();
+    for (rule, dir) in RULE_DIRS {
+        let rel = format!("{dir}/suppressed.rs");
+        let found = in_file(&report, &rel);
+        assert_eq!(found.len(), 1, "{rel}: {found:?}");
+        let f = found[0];
+        assert_eq!(f.rule, rule);
+        assert!(f.suppressed, "{rel}: expected a suppressed finding");
+        assert!(!f.reason.is_empty(), "{rel}: suppression must carry a reason");
+    }
+}
+
+#[test]
+fn fixture_json_artifact_has_the_gate_fields() {
+    let report = fixture_report();
+    assert_eq!(report.unsuppressed(), 13);
+    assert_eq!(report.suppressed(), 5);
+    let j = Json::parse(&report.to_json()).expect("artifact parses");
+    assert_eq!(j.get("files_scanned").as_i64(), Some(15));
+    assert_eq!(j.get("unsuppressed").as_i64(), Some(13));
+    assert_eq!(j.get("suppressed").as_i64(), Some(5));
+    let counts = j.get("counts");
+    assert_eq!(counts.get("no-alloc-hot-path").as_i64(), Some(3));
+    assert_eq!(counts.get("safety-comment").as_i64(), Some(3));
+    assert_eq!(counts.get("atomic-ordering").as_i64(), Some(2));
+    assert_eq!(counts.get("no-panic-request-path").as_i64(), Some(3));
+    assert_eq!(counts.get("lock-order").as_i64(), Some(2));
+    let findings = j.get("findings").as_arr().expect("findings array");
+    assert_eq!(findings.len(), 18);
+    for f in findings {
+        assert!(f.get("file").as_str().is_some());
+        assert!(f.get("line").as_i64().is_some());
+        assert!(f.get("rule").as_str().is_some());
+        let suppressed = f.get("suppressed").as_bool() == Some(true);
+        assert_eq!(f.get("reason").as_str().is_some(), suppressed);
+    }
+}
+
+/// The repo's own contract: `cargo run --bin dapd-lint` at the root
+/// reports zero unsuppressed findings.  Run in-process so a failure
+/// prints the offending findings, not just a count.
+#[test]
+fn the_repo_lints_clean_under_its_checked_in_config() {
+    let root = repo_root();
+    let cfg = Config::load(&root.join("lint.toml")).expect("repo lint.toml parses");
+    let report = lint::run(&root, &cfg).expect("repo scan succeeds");
+    assert_eq!(report.unsuppressed(), 0, "findings:\n{}", report.render_human());
+}
+
+/// The exit-code contract CI gates on: 0 clean, 1 findings, 2 usage.
+/// The fixture tree doubles as the seeded violation — the binary must
+/// fail on it with the same config the fixture tests use.
+#[test]
+fn binary_exit_codes_gate_clean_seeded_and_usage() {
+    let bin = env!("CARGO_BIN_EXE_dapd-lint");
+    let fixtures = fixtures_root();
+
+    let clean = Command::new(bin)
+        .args(["--root"])
+        .arg(repo_root())
+        .output()
+        .expect("run dapd-lint on the repo");
+    assert_eq!(clean.status.code(), Some(0), "{clean:?}");
+
+    let seeded = Command::new(bin)
+        .args(["--format", "json", "--root"])
+        .arg(&fixtures)
+        .args(["--config"])
+        .arg(fixtures.join("lint.toml"))
+        .output()
+        .expect("run dapd-lint on the fixtures");
+    assert_eq!(seeded.status.code(), Some(1), "{seeded:?}");
+    let stdout = String::from_utf8(seeded.stdout).expect("utf8 artifact");
+    let j = Json::parse(&stdout).expect("json output parses");
+    assert_eq!(j.get("unsuppressed").as_i64(), Some(13));
+
+    let usage = Command::new(bin)
+        .arg("--no-such-flag")
+        .output()
+        .expect("run dapd-lint with a bad flag");
+    assert_eq!(usage.status.code(), Some(2), "{usage:?}");
+}
