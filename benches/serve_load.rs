@@ -127,7 +127,7 @@ fn run_load(n: usize, trace: bool) -> Measured {
         .collect();
     let mut tokens = 0usize;
     for rx in rxs {
-        tokens += rx.recv().unwrap().gen.len();
+        tokens += rx.recv().unwrap().unwrap().gen.len();
     }
     let wall = t0.elapsed().as_secs_f64();
     coord.shutdown();
@@ -213,7 +213,7 @@ fn run_hetero(n: usize, steal: bool) -> QueueMeasured {
     let mut tokens = 0usize;
     let mut gens: Vec<Vec<i32>> = Vec::with_capacity(n);
     for rx in rxs {
-        let r = rx.recv().unwrap();
+        let r = rx.recv().unwrap().unwrap();
         tokens += r.gen.len();
         gens.push(r.gen);
     }

@@ -55,7 +55,7 @@ fn pool_scaling(n: usize) {
             .collect();
         let mut tokens = 0usize;
         for rx in rxs {
-            tokens += rx.recv().unwrap().gen.len();
+            tokens += rx.recv().unwrap().unwrap().gen.len();
         }
         let wall = t0.elapsed().as_secs_f64();
         coord.shutdown();
@@ -103,7 +103,7 @@ fn paper_table(engine: dapd::runtime::Engine) {
         let mut acc = 0.0;
         let mut tokens = 0usize;
         for (inst, rx) in set.instances.iter().zip(rxs) {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             acc += scorer::score("struct", &resp.gen, &inst.expect, &inst.spec);
             tokens += resp.gen.len();
         }

@@ -72,7 +72,7 @@ fn run_load(
     let mut tokens = 0usize;
     let mut gens = HashMap::new();
     for (i, rx) in pending {
-        let r = rx.recv()?;
+        let r = rx.recv()??;
         lat.add(r.latency.as_secs_f64());
         tokens += r.gen.len();
         gens.insert(i, r.gen);

@@ -16,7 +16,8 @@
 //!   "cache_epsilon": 0.0, "prefix_lru_cap": 64,
 //!   "feature_threads": 1, "kernels": "native",
 //!   "steal": true, "preempt_deadline_ms": 0, "pool_cap": 64,
-//!   "trace": false, "trace_out": "trace.json"
+//!   "trace": false, "trace_out": "trace.json",
+//!   "fault_spec": "", "forward_timeout_ms": 0, "max_retries": 3
 //! }
 //! ```
 //!
@@ -47,6 +48,14 @@
 //! end-to-end concurrency, default a per-request latency budget
 //! (0 = none), cap request line size, and bound the graceful-drain
 //! wait on stop.
+//! The fault-tolerance knobs (CLI: `--fault-spec`, env default
+//! `DAPD_FAULTS`; `--forward-timeout-ms`; `--max-retries`) drive the
+//! chaos harness and the supervised recovery path: `fault_spec` is a
+//! deterministic seeded fault schedule injected into every worker's
+//! forward pass (see `runtime::fault` for the clause grammar; a typo'd
+//! spec fails at deploy time), `forward_timeout_ms` arms the watchdog
+//! that reaps hung forwards (0 = off), and `max_retries` bounds both
+//! in-place forward retries and post-fault board requeues per request.
 //! `trace` (CLI: `--trace`/`--no-trace`; env default `DAPD_TRACE=1`)
 //! starts the pool with decode-path tracing enabled — bounded
 //! per-worker rings drained as Chrome trace JSON by the
@@ -58,6 +67,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::cache::CacheConfig;
 use crate::decode::{DecodeConfig, Method, MethodParams};
 use crate::graph::TauSchedule;
+use crate::runtime::FaultPlan;
 use crate::tensor::kernels::{self, Backend as KernelBackend};
 use crate::util::args::Args;
 use crate::util::json::Json;
@@ -122,6 +132,15 @@ pub struct ServeSettings {
     /// JSON) on graceful drain (`--trace-out`; implies nothing when
     /// tracing is off)
     pub trace_out: Option<String>,
+    /// deterministic fault-injection schedule (`--fault-spec`; env
+    /// default `DAPD_FAULTS`); empty/None serves fault-free
+    pub fault_spec: Option<String>,
+    /// watchdog bound on one forward pass, in ms (0 = watchdog off;
+    /// `--forward-timeout-ms`)
+    pub forward_timeout_ms: u64,
+    /// per-request recovery budget: in-place forward retries and
+    /// post-fault requeues (`--max-retries`)
+    pub max_retries: u32,
 }
 
 /// `DAPD_TRACE=1` (or `true`) turns tracing on for deployments that
@@ -131,6 +150,12 @@ fn env_trace_default() -> bool {
         std::env::var("DAPD_TRACE").as_deref(),
         Ok("1") | Ok("true")
     )
+}
+
+/// `DAPD_FAULTS=<spec>` arms fault injection for deployments that
+/// cannot pass flags; the config key and `--fault-spec` win.
+fn env_faults_default() -> Option<String> {
+    std::env::var("DAPD_FAULTS").ok().filter(|s| !s.is_empty())
 }
 
 impl Default for ServeSettings {
@@ -162,6 +187,9 @@ impl Default for ServeSettings {
             kernels: None,
             trace: env_trace_default(),
             trace_out: None,
+            fault_spec: env_faults_default(),
+            forward_timeout_ms: 0,
+            max_retries: 3,
         }
     }
 }
@@ -256,6 +284,16 @@ impl ServeSettings {
         if let Some(v) = j.get("trace_out").as_str() {
             self.trace_out = Some(v.into());
         }
+        if let Some(v) = j.get("fault_spec").as_str() {
+            // empty string turns a DAPD_FAULTS env default back off
+            self.fault_spec = if v.is_empty() { None } else { Some(v.into()) };
+        }
+        if let Some(v) = j.get("forward_timeout_ms").as_usize() {
+            self.forward_timeout_ms = v as u64;
+        }
+        if let Some(v) = j.get("max_retries").as_usize() {
+            self.max_retries = v as u32;
+        }
         let p = &mut self.params;
         if let Some(v) = j.get("conf_threshold").as_f64() {
             p.conf_threshold = v as f32;
@@ -336,6 +374,13 @@ impl ServeSettings {
         if let Some(v) = args.get("trace-out") {
             self.trace_out = Some(v.into());
         }
+        if let Some(v) = args.get("fault-spec") {
+            // an explicit empty spec turns the env/file default back off
+            self.fault_spec = if v.is_empty() { None } else { Some(v.into()) };
+        }
+        self.forward_timeout_ms =
+            args.usize_or("forward-timeout-ms", self.forward_timeout_ms as usize) as u64;
+        self.max_retries = args.usize_or("max-retries", self.max_retries as usize) as u32;
         let p = &mut self.params;
         p.conf_threshold = args.f64_or("conf-threshold", p.conf_threshold as f64) as f32;
         p.gamma = args.f64_or("gamma", p.gamma as f64) as f32;
@@ -400,7 +445,22 @@ impl ServeSettings {
                  pipeline)"
             ));
         }
+        // a typo'd chaos spec must fail at deploy time, not silently
+        // serve a fault-free run
+        if let Some(spec) = &self.fault_spec {
+            FaultPlan::parse(spec).with_context(|| format!("parsing fault_spec '{spec}'"))?;
+        }
         Ok(self)
+    }
+
+    /// The parsed fault schedule, if one was configured.  `resolve`
+    /// already validated the spec, so this only errors when a settings
+    /// value was mutated after resolution.
+    pub fn fault_plan(&self) -> Result<Option<FaultPlan>> {
+        self.fault_spec
+            .as_deref()
+            .map(FaultPlan::parse)
+            .transpose()
     }
 
     pub fn decode_config(&self) -> DecodeConfig {
@@ -723,6 +783,62 @@ mod tests {
         assert!(!s.steal);
         assert_eq!(s.preempt_deadline_ms, 500);
         assert_eq!(s.pool_cap, 0, "0 disables pool retention, not a config error");
+    }
+
+    #[test]
+    fn fault_settings_resolve_from_file_and_flags() {
+        // defaults: no injection, watchdog off, budget 3 (env default
+        // untested — tests must not mutate process env)
+        let s = ServeSettings::resolve(&args(&[])).unwrap();
+        assert_eq!(s.forward_timeout_ms, 0);
+        assert_eq!(s.max_retries, 3);
+
+        let s = ServeSettings::resolve(&args(&[
+            "--fault-spec",
+            "seed=7;error=0.1",
+            "--forward-timeout-ms",
+            "250",
+            "--max-retries",
+            "5",
+        ]))
+        .unwrap();
+        assert_eq!(s.fault_spec.as_deref(), Some("seed=7;error=0.1"));
+        assert_eq!(s.forward_timeout_ms, 250);
+        assert_eq!(s.max_retries, 5);
+        let plan = s.fault_plan().unwrap().expect("spec configured");
+        assert_eq!(plan.seed, 7);
+
+        let dir = std::env::temp_dir().join("dapd_cfg_fault_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"fault_spec": "error=0.5;until=10", "forward_timeout_ms": 100,
+                "max_retries": 1}"#,
+        )
+        .unwrap();
+        let s = ServeSettings::resolve(&args(&["--config", path.to_str().unwrap()])).unwrap();
+        assert_eq!(s.fault_spec.as_deref(), Some("error=0.5;until=10"));
+        assert_eq!(s.forward_timeout_ms, 100);
+        assert_eq!(s.max_retries, 1);
+        // an explicit empty flag turns the file's schedule back off
+        let s = ServeSettings::resolve(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--fault-spec",
+            "",
+        ]))
+        .unwrap();
+        assert_eq!(s.fault_spec, None);
+        assert!(s.fault_plan().unwrap().is_none());
+
+        // a typo'd spec is a deploy-time config error, not a silent
+        // fault-free run
+        let err = format!(
+            "{:#}",
+            ServeSettings::resolve(&args(&["--fault-spec", "bogus=1"])).unwrap_err()
+        );
+        assert!(err.contains("bogus"), "error must echo the clause: {err}");
     }
 
     #[test]

@@ -40,6 +40,26 @@ pub struct Metrics {
     /// best-effort residents evicted from a full board (and requeued)
     /// to make room for a deadline-urgent request
     pub preemptions: AtomicU64,
+    /// fault injection: faults the harness actually fired (errors, NaN/Inf
+    /// corruption, latency spikes, hangs, panics)
+    pub faults_injected: AtomicU64,
+    /// recovery: forward-level in-place retries plus board-level requeues
+    /// of in-flight requests after a faulted session
+    pub retries: AtomicU64,
+    /// recovery: per-replica circuit-breaker open transitions
+    pub breaker_trips: AtomicU64,
+    /// gauge — per worker: breaker state code (0 closed / 1 half-open /
+    /// 2 open); on the aggregate: workers whose breaker is not closed
+    pub breaker_state: AtomicU64,
+    /// recovery: hung forwards reaped by the watchdog timeout
+    pub watchdog_reaps: AtomicU64,
+    /// gauge — per worker: degradation tier (0 full / 1 uncached /
+    /// 2 uncached+scalar); on the aggregate: workers running degraded
+    pub degraded: AtomicU64,
+    /// decode steps executed while the worker was in a degraded tier
+    pub degraded_steps: AtomicU64,
+    /// worker panics survived by supervised respawn
+    pub worker_restarts: AtomicU64,
     pub queue_depth: AtomicU64,
     pub busy_micros: AtomicU64,
     /// forward passes run (continuous batching: one per step)
@@ -252,6 +272,38 @@ impl Metrics {
             (self.preemptions.load(Ordering::Relaxed) as i64).into(),
         );
         j.set(
+            "faults_injected",
+            (self.faults_injected.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "retries",
+            (self.retries.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "breaker_trips",
+            (self.breaker_trips.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "breaker_state",
+            (self.breaker_state.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "watchdog_reaps",
+            (self.watchdog_reaps.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "degraded",
+            (self.degraded.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "degraded_steps",
+            (self.degraded_steps.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
+            "worker_restarts",
+            (self.worker_restarts.load(Ordering::Relaxed) as i64).into(),
+        );
+        j.set(
             "queue_depth",
             (self.queue_depth.load(Ordering::Relaxed) as i64).into(),
         );
@@ -361,6 +413,28 @@ impl Metrics {
                 self.cache_prefix_rows_spliced.load(Ordering::Relaxed),
                 self.cache_frozen_steps.load(Ordering::Relaxed),
                 self.cache_compute_frac(),
+            ));
+        }
+        // any fault-harness or recovery activity surfaces the faults
+        // line; a clean run stays one line shorter
+        let fault_active = self.faults_injected.load(Ordering::Relaxed)
+            + self.retries.load(Ordering::Relaxed)
+            + self.breaker_trips.load(Ordering::Relaxed)
+            + self.watchdog_reaps.load(Ordering::Relaxed)
+            + self.degraded_steps.load(Ordering::Relaxed)
+            + self.worker_restarts.load(Ordering::Relaxed)
+            + self.degraded.load(Ordering::Relaxed);
+        if fault_active > 0 {
+            out.push_str(&format!(
+                " faults[injected={} retries={} breaker_trips={} reaps={} \
+                 restarts={} degraded={} degraded_steps={}]",
+                self.faults_injected.load(Ordering::Relaxed),
+                self.retries.load(Ordering::Relaxed),
+                self.breaker_trips.load(Ordering::Relaxed),
+                self.watchdog_reaps.load(Ordering::Relaxed),
+                self.worker_restarts.load(Ordering::Relaxed),
+                self.degraded.load(Ordering::Relaxed),
+                self.degraded_steps.load(Ordering::Relaxed),
             ));
         }
         out
@@ -512,6 +586,37 @@ mod tests {
         assert!(r.contains("cancelled=1"));
         assert!(r.contains("steals=5"));
         assert!(r.contains("preemptions=4"));
+    }
+
+    #[test]
+    fn fault_counters_surface_in_json_and_report() {
+        let m = Metrics::new();
+        assert!(
+            !m.report().contains("faults["),
+            "clean runs must not grow a faults line: {}",
+            m.report()
+        );
+        m.faults_injected.fetch_add(6, Ordering::Relaxed);
+        m.retries.fetch_add(4, Ordering::Relaxed);
+        m.breaker_trips.fetch_add(1, Ordering::Relaxed);
+        m.breaker_state.store(2, Ordering::Relaxed);
+        m.watchdog_reaps.fetch_add(2, Ordering::Relaxed);
+        m.degraded.store(1, Ordering::Relaxed);
+        m.degraded_steps.fetch_add(9, Ordering::Relaxed);
+        m.worker_restarts.fetch_add(1, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("faults_injected").as_i64(), Some(6));
+        assert_eq!(j.get("retries").as_i64(), Some(4));
+        assert_eq!(j.get("breaker_trips").as_i64(), Some(1));
+        assert_eq!(j.get("breaker_state").as_i64(), Some(2));
+        assert_eq!(j.get("watchdog_reaps").as_i64(), Some(2));
+        assert_eq!(j.get("degraded").as_i64(), Some(1));
+        assert_eq!(j.get("degraded_steps").as_i64(), Some(9));
+        assert_eq!(j.get("worker_restarts").as_i64(), Some(1));
+        let r = m.report();
+        assert!(r.contains("faults[injected=6 retries=4"));
+        assert!(r.contains("restarts=1"));
+        assert!(r.contains("degraded_steps=9"));
     }
 
     #[test]

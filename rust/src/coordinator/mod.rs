@@ -67,11 +67,29 @@
 //! is off (`PoolOptions::trace`, the default).  The always-on stage
 //! histograms fold into the metrics at session end next to the phase
 //! timings.
+//!
+//! Fault tolerance: every worker decodes through a supervised model
+//! chain — `SupervisedModel(WatchdogModel(FaultyModel(replica)))`, the
+//! inner two layers present only under `--forward-timeout-ms` /
+//! `--fault-spec`.  Forward-level faults are screened (NaN/Inf, shape),
+//! retried with capped backoff, and breaker-gated *inside* the chain;
+//! a fault that still escapes fails the whole session, which classifies
+//! the error and requeues retryable in-flight requests at the front of
+//! their shards (original `seq`, so FIFO order and the deadline screen
+//! still apply) under a per-request retry budget — decoding is
+//! deterministic, so a retried request is token-identical.  A worker
+//! panic (a replica's, re-raised by the watchdog, or in-thread) is
+//! caught by `catch_unwind`, the chain respawned, and the same requeue
+//! applied.  Repeated faulty sessions degrade the worker (tier 1:
+//! uncached boards; tier 2: scalar kernels) until sessions run clean
+//! again; requests that exhaust recovery fail with a typed
+//! [`RequestError`] on their own reply channel.
 
 pub mod metrics;
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -83,8 +101,12 @@ use crate::alloc::BufferPool;
 use crate::cache::{CacheConfig, FirstStepRows, PrefixCache, PrefixHandle};
 use crate::decode::{DecodeConfig, SlotBatch};
 use crate::obs::trace::DEFAULT_TRACE_CAPACITY;
-use crate::obs::{TraceRecorder, Tracing};
-use crate::runtime::{ForwardModel, ModelPool};
+use crate::obs::{Stage, TraceRecorder, Tracing};
+use crate::runtime::{
+    FaultPlan, FaultyModel, ForwardModel, ModelPool, RespawnFn, RetryPolicy, SupervisedModel,
+    SuperviseSnapshot, SuperviseStats, WatchdogModel,
+};
+use crate::tensor::kernels::{self, Backend};
 use crate::util::logging;
 use crate::util::{fnv1a, CondvarExt, FNV_OFFSET, LockExt};
 pub use metrics::Metrics;
@@ -105,12 +127,17 @@ pub struct Request {
     /// first-step rows prefetched from the prefix cache at submit time,
     /// so the worker's step path never takes the cache lock for a hit
     prefill: Option<Arc<FirstStepRows>>,
+    /// fault-recovery requeues so far (the board-level retry budget
+    /// numerator; deadline preemption doesn't count — it loses no work
+    /// to a fault)
+    retries: u32,
 }
 
 /// How a request's result travels back to the client.
 enum Reply {
-    /// classic request/response: one `Response` at the end
-    Once(SyncSender<Response>),
+    /// classic request/response: the response (or a typed post-admission
+    /// failure) at the end
+    Once(SyncSender<RequestResult>),
     /// streaming: per-step `Tokens` events, then a terminal `Done`
     Stream(mpsc::Sender<StreamEvent>),
 }
@@ -126,9 +153,9 @@ pub enum StreamEvent {
         commits: Vec<(usize, i32)>,
     },
     Done(Response),
-    /// terminal failure after admission (batch error, expired deadline,
-    /// rejected admit); the channel closes after this
-    Error(String),
+    /// terminal failure after admission (decode fault past recovery,
+    /// expired deadline, rejected admit); the channel closes after this
+    Error(RequestError),
 }
 
 /// Per-request submission options.
@@ -165,6 +192,65 @@ impl fmt::Display for SubmitError {
 }
 
 impl std::error::Error for SubmitError {}
+
+/// What a classic submit's receiver yields: the response, or a typed
+/// post-admission failure.
+pub type RequestResult = std::result::Result<Response, RequestError>;
+
+/// Typed post-admission failure, delivered on the request's own reply
+/// channel (the connection survives; the server serializes it as
+/// `{"ok":false,"error":<code>,"retryable":...}`).  Admission-time
+/// rejections stay on [`SubmitError`]; this type covers everything that
+/// can go wrong *after* a request was accepted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestError {
+    /// stable machine-readable code: `decode_failed`, `expired`, or
+    /// `rejected`
+    pub code: &'static str,
+    /// human-readable detail
+    pub msg: String,
+    /// whether resubmitting the identical request may succeed (false
+    /// for persistent faults, expiry, and config rejections)
+    pub retryable: bool,
+}
+
+impl RequestError {
+    /// Decode failed after exhausting recovery (retries / breaker /
+    /// respawn).
+    fn decode_failed(msg: impl Into<String>, retryable: bool) -> RequestError {
+        RequestError {
+            code: "decode_failed",
+            msg: msg.into(),
+            retryable,
+        }
+    }
+
+    /// The deadline lapsed while the request was still queued.
+    fn expired() -> RequestError {
+        RequestError {
+            code: "expired",
+            msg: "deadline expired before decode".into(),
+            retryable: false,
+        }
+    }
+
+    /// The board rejected the request at admit time (bad config).
+    fn rejected(msg: impl Into<String>) -> RequestError {
+        RequestError {
+            code: "rejected",
+            msg: msg.into(),
+            retryable: false,
+        }
+    }
+}
+
+impl fmt::Display for RequestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.msg)
+    }
+}
+
+impl std::error::Error for RequestError {}
 
 /// The reply a client receives.
 #[derive(Debug, Clone)]
@@ -397,6 +483,18 @@ pub struct PoolOptions {
     /// per-size-class retention cap of the shared board-buffer pool
     /// (`--pool-cap`); 0 disables pooling entirely
     pub pool_cap: usize,
+    /// deterministic fault-injection plan (`--fault-spec` /
+    /// `DAPD_FAULTS`); `None` (the default) injects nothing
+    pub fault: Option<FaultPlan>,
+    /// forward watchdog: a single forward exceeding this wall-clock
+    /// budget is reaped and surfaces as a retryable timeout fault
+    /// (`--forward-timeout-ms`); `Duration::ZERO` (the default)
+    /// disables the watchdog
+    pub forward_timeout: Duration,
+    /// retry budget (`--max-retries`): both the forward-level backoff
+    /// retries inside the supervised chain and the board-level requeues
+    /// after a faulted session are bounded by this, independently
+    pub max_retries: u32,
 }
 
 impl Default for PoolOptions {
@@ -411,6 +509,9 @@ impl Default for PoolOptions {
             steal: true,
             preempt_deadline: Duration::ZERO,
             pool_cap: 64,
+            fault: None,
+            forward_timeout: Duration::ZERO,
+            max_retries: 3,
         }
     }
 }
@@ -458,6 +559,9 @@ pub struct Coordinator {
     preempt_deadline: Duration,
     /// board-buffer pool shared by every worker's `SlotBatch`
     pool: Arc<BufferPool>,
+    /// board-level retry budget per request (requeues after a faulted
+    /// session); forward-level retries live inside the supervised chain
+    retry_budget: u32,
 }
 
 impl Coordinator {
@@ -491,14 +595,40 @@ impl Coordinator {
             steal: true,
             preempt_deadline: Duration::ZERO,
             pool: Arc::new(BufferPool::default()),
+            retry_budget: 3,
         }
     }
 
+    /// Spawn one worker around a bare model: it is wrapped in the
+    /// supervised retry/screen layer with default policy (no injection,
+    /// no watchdog, no respawn).  The single-model test path.
     fn spawn_worker(
         &self,
         worker_id: usize,
         model: Box<dyn ForwardModel + Send>,
         batch_wait: Duration,
+    ) -> std::thread::JoinHandle<()> {
+        let stats = Arc::new(SuperviseStats::default());
+        let supervised = Box::new(SupervisedModel::new(
+            model,
+            worker_id,
+            RetryPolicy::default(),
+            Arc::clone(&stats),
+            None,
+        ));
+        self.spawn_worker_supervised(worker_id, supervised, batch_wait, SuperviseHooks::bare(stats))
+    }
+
+    /// Spawn one worker around an already-supervised model chain.
+    /// `hooks` carries the chain's shared fault counters (folded into
+    /// the worker metrics at session end) and the respawn factory used
+    /// by panic supervision.
+    fn spawn_worker_supervised(
+        &self,
+        worker_id: usize,
+        model: Box<dyn ForwardModel + Send>,
+        batch_wait: Duration,
+        hooks: SuperviseHooks,
     ) -> std::thread::JoinHandle<()> {
         let queue = Arc::clone(&self.queue);
         let global = Arc::clone(&self.metrics);
@@ -512,13 +642,14 @@ impl Coordinator {
             steal: self.steal,
             preempt_deadline: self.preempt_deadline,
             pool: Arc::clone(&self.pool),
+            max_retries: self.retry_budget,
         };
         std::thread::Builder::new()
             .name(format!("dapd-infer-{worker_id}"))
             .spawn(move || {
                 worker_loop(
-                    worker_id, model, queue, global, local, pending, policy, cache_cfg, prefix,
-                    trace,
+                    worker_id, model, hooks, queue, global, local, pending, policy, cache_cfg,
+                    prefix, trace,
                 )
             })
             // lint:allow(no-panic-request-path): pool startup — spawn
@@ -577,10 +708,75 @@ impl Coordinator {
         coord.steal = opts.steal;
         coord.preempt_deadline = opts.preempt_deadline;
         coord.pool = Arc::new(BufferPool::new(opts.pool_cap));
+        coord.retry_budget = opts.max_retries;
         let mut handles = Vec::with_capacity(opts.workers);
         for w in 0..opts.workers {
-            let model = pool.replica()?;
-            handles.push(coord.spawn_worker(w, model, opts.batch_wait));
+            let stats = Arc::new(SuperviseStats::default());
+            let injected = Arc::new(AtomicU64::new(0));
+            let reaps = Arc::new(AtomicU64::new(0));
+            // shared across respawns so one-shot fault clauses (hang_at,
+            // panic_at) fire once per replica, not once per respawned life
+            let fault_calls = Arc::new(AtomicU64::new(0));
+            // innermost layer: a fresh replica, fault-wrapped when the
+            // plan targets this worker.  The watchdog respawns through
+            // this after reaping a hung executor.
+            let make_replica: RespawnFn = {
+                let pool = pool.clone();
+                let plan = opts.fault.clone();
+                let injected = Arc::clone(&injected);
+                let fault_calls = Arc::clone(&fault_calls);
+                Arc::new(move || {
+                    let replica = pool.replica()?;
+                    let m: Box<dyn ForwardModel + Send> = match &plan {
+                        Some(p) if p.applies_to(w) => Box::new(FaultyModel::with_counters(
+                            replica,
+                            p.clone(),
+                            w,
+                            Arc::clone(&fault_calls),
+                            Arc::clone(&injected),
+                        )),
+                        _ => replica,
+                    };
+                    Ok(m)
+                })
+            };
+            // full chain: supervised(watchdog(faulty(replica))); worker
+            // panic supervision respawns through this
+            let make_chain: RespawnFn = {
+                let make_replica = Arc::clone(&make_replica);
+                let board = pool.breakers().clone();
+                let stats = Arc::clone(&stats);
+                let reaps = Arc::clone(&reaps);
+                let timeout = opts.forward_timeout;
+                let retry = RetryPolicy::with_max_retries(opts.max_retries as usize);
+                Arc::new(move || {
+                    let mut m = make_replica()?;
+                    if !timeout.is_zero() {
+                        m = Box::new(WatchdogModel::new(
+                            m,
+                            timeout,
+                            w,
+                            Some(Arc::clone(&make_replica)),
+                            Arc::clone(&reaps),
+                        ));
+                    }
+                    Ok(Box::new(SupervisedModel::new(
+                        m,
+                        w,
+                        retry,
+                        Arc::clone(&stats),
+                        Some(board.clone()),
+                    )) as Box<dyn ForwardModel + Send>)
+                })
+            };
+            let model = make_chain()?;
+            let hooks = SuperviseHooks {
+                stats,
+                injected,
+                reaps,
+                respawn: Some(make_chain),
+            };
+            handles.push(coord.spawn_worker_supervised(w, model, opts.batch_wait, hooks));
         }
         let cache_note = if opts.cache.enabled {
             format!(
@@ -599,10 +795,11 @@ impl Coordinator {
         Ok((coord, CoordinatorHandle { handles }))
     }
 
-    /// Submit a request; returns the response receiver.  Backward
-    /// compatible wrapper over [`Coordinator::submit_opts`] (no deadline,
-    /// `anyhow` errors).
-    pub fn submit(&self, prompt: Vec<i32>, cfg: DecodeConfig) -> Result<Receiver<Response>> {
+    /// Submit a request; returns the response receiver (each received
+    /// value is a [`RequestResult`]: the response or a typed
+    /// post-admission failure).  Backward compatible wrapper over
+    /// [`Coordinator::submit_opts`] (no deadline, `anyhow` errors).
+    pub fn submit(&self, prompt: Vec<i32>, cfg: DecodeConfig) -> Result<Receiver<RequestResult>> {
         self.submit_opts(prompt, cfg, SubmitOptions::default())
             .map_err(Into::into)
     }
@@ -615,7 +812,7 @@ impl Coordinator {
         prompt: Vec<i32>,
         cfg: DecodeConfig,
         opts: SubmitOptions,
-    ) -> std::result::Result<Receiver<Response>, SubmitError> {
+    ) -> std::result::Result<Receiver<RequestResult>, SubmitError> {
         let (tx, rx) = sync_channel(1);
         self.submit_inner(prompt, cfg, opts, Reply::Once(tx))?;
         Ok(rx)
@@ -698,6 +895,7 @@ impl Coordinator {
                 group,
                 seq: ticket,
                 prefill,
+                retries: 0,
             });
             publish_depth(&self.metrics, &st);
         }
@@ -718,10 +916,13 @@ impl Coordinator {
         self.pending.load(Ordering::Relaxed) as usize
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Blocking convenience: submit and wait; typed post-admission
+    /// failures flatten into `anyhow` errors.
     pub fn call(&self, prompt: Vec<i32>, cfg: DecodeConfig) -> Result<Response> {
         let rx = self.submit(prompt, cfg)?;
-        rx.recv().map_err(|_| anyhow!("inference worker dropped request"))
+        rx.recv()
+            .map_err(|_| anyhow!("inference worker dropped request"))?
+            .map_err(Into::into)
     }
 
     /// Stop accepting requests and wake the workers; queued and in-flight
@@ -786,6 +987,9 @@ struct InFlight {
     prompt: Vec<i32>,
     cfg: DecodeConfig,
     prefill: Option<Arc<FirstStepRows>>,
+    /// fault-recovery requeues so far (carried back into the `Request`
+    /// on requeue; bounds the board-level retry budget)
+    retries: u32,
 }
 
 /// Per-worker scheduling policy, fixed at pool start.
@@ -799,6 +1003,9 @@ struct WorkerPolicy {
     preempt_deadline: Duration,
     /// shared board-buffer pool attached to every worker's `SlotBatch`
     pool: Arc<BufferPool>,
+    /// board-level retry budget per request: how many times a request
+    /// may be requeued after a faulted session before it fails typed
+    max_retries: u32,
 }
 
 /// Which request a pop site is asking the queue for.
@@ -897,8 +1104,10 @@ fn publish_depth(m: &Metrics, st: &QueueState) {
 
 /// Deadline screen at queue-pop time: pass unexpired requests through,
 /// shed expired ones *before* any decode compute is spent.  A shed
-/// notifies streams, counts `deadline_dropped`, and frees the in-flight
-/// slot; a dropped `Once` channel signals the error to the caller.
+/// counts `deadline_dropped`, delivers a typed `expired` failure on the
+/// request's own reply channel, and frees the in-flight slot.  Requeued
+/// requests re-enter through the same pop sites, so fault recovery
+/// cannot smuggle an expired request past this screen.
 fn screen_deadline(
     req: Request,
     global: &Metrics,
@@ -910,11 +1119,22 @@ fn screen_deadline(
         return Some(req);
     }
     bump2(&global.deadline_dropped, &local.deadline_dropped);
-    if let Reply::Stream(tx) = &req.reply {
-        let _ = tx.send(StreamEvent::Error("deadline expired before decode".into()));
-    }
+    fail_request(&req.reply, RequestError::expired());
     release_pending(pending);
     None
+}
+
+/// Deliver a typed post-admission failure on either reply flavor (the
+/// terminal event; the channel closes right after).
+fn fail_request(reply: &Reply, err: RequestError) {
+    match reply {
+        Reply::Once(tx) => {
+            let _ = tx.send(Err(err));
+        }
+        Reply::Stream(tx) => {
+            let _ = tx.send(StreamEvent::Error(err));
+        }
+    }
 }
 
 /// Admit one request into the worker's batch, tracking it under a fresh
@@ -957,6 +1177,7 @@ fn admit_request(
                 group,
                 seq,
                 prefill,
+                retries,
             } = req;
             inflight.insert(
                 *ticket,
@@ -969,17 +1190,237 @@ fn admit_request(
                     prompt,
                     cfg,
                     prefill,
+                    retries,
                 },
             );
         }
         Err(e) => {
             logging::info(&format!("worker {worker_id}: rejected admit: {e:#}"));
             bump2(&global.errors, &local.errors);
-            if let Reply::Stream(tx) = &req.reply {
-                let _ = tx.send(StreamEvent::Error(format!("admit rejected: {e:#}")));
-            }
+            fail_request(
+                &req.reply,
+                RequestError::rejected(format!("admit rejected: {e:#}")),
+            );
             release_pending(pending);
         }
+    }
+}
+
+/// Shared handles into one worker's supervised model chain: the
+/// supervised layer's counters, the fault/watchdog layers' own counters
+/// (they sit below the supervised layer, so they need separate handles
+/// that survive respawns), and the respawn factory panic supervision
+/// rebuilds the chain through.
+struct SuperviseHooks {
+    /// counters of the supervised (outermost) wrapper
+    stats: Arc<SuperviseStats>,
+    /// faults injected by the `FaultyModel` layer
+    injected: Arc<AtomicU64>,
+    /// forwards reaped by the watchdog layer
+    reaps: Arc<AtomicU64>,
+    /// rebuild the whole chain after a worker panic; `None` on the
+    /// single-model test path (a panic there keeps the old model)
+    respawn: Option<RespawnFn>,
+}
+
+impl SuperviseHooks {
+    /// Hooks for a bare supervised model: no injection, no watchdog, no
+    /// respawn (the `spawn_worker` path).
+    fn bare(stats: Arc<SuperviseStats>) -> SuperviseHooks {
+        SuperviseHooks {
+            stats,
+            injected: Arc::new(AtomicU64::new(0)),
+            reaps: Arc::new(AtomicU64::new(0)),
+            respawn: None,
+        }
+    }
+}
+
+/// Folds the supervised chain's counters into the worker metrics at
+/// session end and publishes the breaker/degradation gauges: each
+/// worker's *local* gauge carries its own value (breaker state code,
+/// degradation tier) while the pool aggregate counts workers in the
+/// non-healthy state, maintained by 0<->nonzero transition tracking.
+#[derive(Default)]
+struct SuperviseFold {
+    prev: SuperviseSnapshot,
+    prev_injected: u64,
+    prev_reaps: u64,
+    /// whether this worker currently counts into the aggregate
+    /// non-closed-breaker gauge
+    breaker_nonzero: bool,
+    /// whether this worker currently counts into the aggregate
+    /// degraded-workers gauge
+    degraded_nonzero: bool,
+}
+
+impl SuperviseFold {
+    /// Fold the chain's counter deltas since the last call into both
+    /// metrics; returns whether any fault-path activity happened.
+    fn fold(&mut self, hooks: &SuperviseHooks, global: &Metrics, local: &Metrics) -> bool {
+        let snap = hooks.stats.snapshot();
+        let d = snap.since(self.prev);
+        self.prev = snap;
+        // ordering: Relaxed — monotone stat counters (see `bump`).
+        let injected = hooks.injected.load(Ordering::Relaxed);
+        // ordering: as above.
+        let reaps = hooks.reaps.load(Ordering::Relaxed);
+        let d_injected = injected.saturating_sub(self.prev_injected);
+        let d_reaps = reaps.saturating_sub(self.prev_reaps);
+        self.prev_injected = injected;
+        self.prev_reaps = reaps;
+        for (delta, g, l) in [
+            (d_injected, &global.faults_injected, &local.faults_injected),
+            (d.retries, &global.retries, &local.retries),
+            (d.breaker_trips, &global.breaker_trips, &local.breaker_trips),
+            (d_reaps, &global.watchdog_reaps, &local.watchdog_reaps),
+        ] {
+            if delta > 0 {
+                // ordering: Relaxed — see `bump`.
+                g.fetch_add(delta, Ordering::Relaxed);
+                // ordering: as above.
+                l.fetch_add(delta, Ordering::Relaxed);
+            }
+        }
+        d.any() || d_injected > 0 || d_reaps > 0
+    }
+
+    /// Publish the worker's breaker gauge (local: state code 0/1/2;
+    /// aggregate: count of workers whose breaker is not closed).
+    fn publish_breaker(&mut self, code: u64, global: &Metrics, local: &Metrics) {
+        // ordering: Relaxed — advisory gauges for scrapes and reports.
+        local.breaker_state.store(code, Ordering::Relaxed);
+        let nonzero = code != 0;
+        if nonzero != self.breaker_nonzero {
+            if nonzero {
+                // ordering: as above.
+                global.breaker_state.fetch_add(1, Ordering::Relaxed);
+            } else {
+                // ordering: as above.
+                global.breaker_state.fetch_sub(1, Ordering::Relaxed);
+            }
+            self.breaker_nonzero = nonzero;
+        }
+    }
+
+    /// Publish the worker's degradation gauge (local: tier; aggregate:
+    /// count of degraded workers).
+    fn publish_degraded(&mut self, tier: u32, global: &Metrics, local: &Metrics) {
+        // ordering: Relaxed — advisory gauges for scrapes and reports.
+        local.degraded.store(tier as u64, Ordering::Relaxed);
+        let nonzero = tier != 0;
+        if nonzero != self.degraded_nonzero {
+            if nonzero {
+                // ordering: as above.
+                global.degraded.fetch_add(1, Ordering::Relaxed);
+            } else {
+                // ordering: as above.
+                global.degraded.fetch_sub(1, Ordering::Relaxed);
+            }
+            self.degraded_nonzero = nonzero;
+        }
+    }
+}
+
+/// Graceful-degradation ladder, walked per session: repeated faulty
+/// sessions escalate the worker one service tier, sustained clean
+/// sessions walk it back down.  Tier 0: full service.  Tier 1: uncached
+/// boards (no forward-cache snapshots, no prefix cache — the cheapest
+/// way to rule out reuse-path corruption while staying correct).
+/// Tier 2: additionally decode under scalar kernels (rules out the
+/// native SIMD paths).  Decoding is deterministic at every tier, so
+/// tokens are identical — degraded mode trades throughput, not output.
+#[derive(Default)]
+struct Degrade {
+    tier: u32,
+    faulty_streak: u32,
+    clean_streak: u32,
+}
+
+impl Degrade {
+    const MAX_TIER: u32 = 2;
+    /// consecutive faulty sessions before escalating one tier
+    const ESCALATE_AFTER: u32 = 2;
+    /// consecutive clean sessions before de-escalating one tier
+    const RECOVER_AFTER: u32 = 3;
+
+    /// Observe one session's outcome; returns the (possibly new) tier.
+    fn observe(&mut self, faulty: bool) -> u32 {
+        if faulty {
+            self.clean_streak = 0;
+            self.faulty_streak += 1;
+            if self.faulty_streak >= Self::ESCALATE_AFTER && self.tier < Self::MAX_TIER {
+                self.tier += 1;
+                self.faulty_streak = 0;
+            }
+        } else {
+            self.faulty_streak = 0;
+            if self.tier > 0 {
+                self.clean_streak += 1;
+                if self.clean_streak >= Self::RECOVER_AFTER {
+                    self.tier -= 1;
+                    self.clean_streak = 0;
+                }
+            }
+        }
+        self.tier
+    }
+}
+
+/// Recover the in-flight requests of a faulted (or panicked) session:
+/// a retryable, non-streaming request with budget left is requeued at
+/// the *front* of its shard under its original `seq` — FIFO order and
+/// the deadline screen still apply, and decoding is deterministic, so
+/// the retried request is token-identical.  Everything else fails with
+/// a typed `decode_failed` on its own reply channel.  Streams never
+/// requeue: a replay would re-emit `Tokens` events the client already
+/// consumed.
+#[allow(clippy::too_many_arguments)]
+fn recover_inflight(
+    inflight: &mut HashMap<u64, InFlight>,
+    retryable: bool,
+    why: &str,
+    max_retries: u32,
+    queue: &Queue,
+    global: &Metrics,
+    local: &Metrics,
+    pending: &AtomicU64,
+) {
+    let mut requeued = 0usize;
+    {
+        let mut st = queue.state.lock_unpoisoned();
+        for (_, fl) in inflight.drain() {
+            let streaming = matches!(fl.reply, Reply::Stream(_));
+            if retryable && !streaming && fl.retries < max_retries {
+                bump2(&global.retries, &local.retries);
+                st.requeue(Request {
+                    prompt: fl.prompt,
+                    cfg: fl.cfg,
+                    submitted: fl.submitted,
+                    deadline: fl.deadline,
+                    reply: fl.reply,
+                    group: fl.group,
+                    seq: fl.seq,
+                    prefill: fl.prefill,
+                    retries: fl.retries + 1,
+                });
+                requeued += 1;
+            } else {
+                let detail = if streaming {
+                    format!("{why} (stream cannot replay)")
+                } else if retryable {
+                    format!("{why} (retry budget exhausted)")
+                } else {
+                    why.to_string()
+                };
+                fail_request(&fl.reply, RequestError::decode_failed(detail, retryable));
+                release_pending(pending);
+            }
+        }
+        publish_depth(global, &st);
+    }
+    for _ in 0..requeued {
+        queue.available.notify_one();
     }
 }
 
@@ -987,10 +1428,19 @@ fn admit_request(
 /// step granularity (backfilling from its own shard, then stealing from
 /// shape-compatible ones), drain, repeat.  Exits when the coordinator
 /// is closed and every shard is empty.
+///
+/// The worker is also its own supervisor: each continuous-batching
+/// session runs under `catch_unwind`, so a replica panic (re-raised by
+/// the watchdog) or an in-thread bug respawns the model chain and
+/// requeues the session's in-flight requests instead of killing the
+/// worker.  After every session the chain's fault counters fold into
+/// the metrics and the degradation ladder decides the next session's
+/// service tier.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
     model: Box<dyn ForwardModel + Send>,
+    hooks: SuperviseHooks,
     queue: Arc<Queue>,
     global: Arc<Metrics>,
     local: Arc<Metrics>,
@@ -1000,8 +1450,10 @@ fn worker_loop(
     prefix: Option<PrefixHandle>,
     trace: TraceRecorder,
 ) {
-    let model: &dyn ForwardModel = model.as_ref();
+    let mut model = model;
     let mut ticket = 0u64;
+    let mut fold = SuperviseFold::default();
+    let mut degrade = Degrade::default();
     loop {
         // ---- adopt the globally oldest waiting request ------------------
         // (shedding deadline-expired ones, which also keeps an expired
@@ -1025,258 +1477,375 @@ fn worker_loop(
             }
         };
 
-        let group = first.group;
-        let compat = compat_key(&first.cfg);
-        let cfg = first.cfg.clone();
-        let mut batch = match SlotBatch::with_cache(model, &cfg, &cache_cfg, prefix.clone()) {
-            Ok(b) => b,
-            Err(e) => {
-                // invalid config: drop the channel so the caller errors out
-                logging::info(&format!("worker {worker_id}: bad config: {e:#}"));
-                bump2(&global.errors, &local.errors);
-                if let Reply::Stream(tx) = &first.reply {
-                    let _ = tx.send(StreamEvent::Error(format!("bad config: {e:#}")));
+        // ---- degraded-mode service tier for this session ----------------
+        let tier = degrade.tier;
+        let degraded = tier > 0;
+        let tier2 = tier >= Degrade::MAX_TIER;
+        let eff_cache = if degraded {
+            CacheConfig {
+                enabled: false,
+                ..cache_cfg.clone()
+            }
+        } else {
+            cache_cfg.clone()
+        };
+        let eff_prefix = if degraded { None } else { prefix.clone() };
+
+        // ---- one continuous-batching session, panic-supervised ----------
+        let mut inflight: HashMap<u64, InFlight> = HashMap::new();
+        let outcome = {
+            let model_ref: &dyn ForwardModel = model.as_ref();
+            let ticket = &mut ticket;
+            let inflight = &mut inflight;
+            catch_unwind(AssertUnwindSafe(|| {
+                let session = || {
+                    run_session(
+                        worker_id,
+                        model_ref,
+                        ticket,
+                        inflight,
+                        first,
+                        degraded,
+                        &eff_cache,
+                        eff_prefix,
+                        &queue,
+                        &global,
+                        &local,
+                        &pending,
+                        &policy,
+                        &trace,
+                    )
+                };
+                if tier2 {
+                    kernels::with_backend(Backend::Scalar, session)
+                } else {
+                    session()
                 }
-                release_pending(&pending);
-                continue;
+            }))
+        };
+        let clean = match outcome {
+            Ok(clean) => clean,
+            Err(_panic) => {
+                // a replica panic (re-raised by the watchdog) or an
+                // in-thread bug: survive it — count the restart, requeue
+                // what the session had in flight, respawn the chain
+                bump2(&global.worker_restarts, &local.worker_restarts);
+                trace.stage_tagged(Stage::Forward, 0, 0, "worker_restart");
+                logging::info(&format!(
+                    "worker {worker_id}: panic during decode; respawning model chain"
+                ));
+                recover_inflight(
+                    &mut inflight,
+                    true,
+                    "worker panicked during decode",
+                    policy.max_retries,
+                    &queue,
+                    &global,
+                    &local,
+                    &pending,
+                );
+                match hooks.respawn.as_ref().map(|f| f()) {
+                    Some(Ok(m)) => model = m,
+                    Some(Err(e)) => logging::info(&format!(
+                        "worker {worker_id}: respawn failed ({e:#}); keeping the old chain"
+                    )),
+                    None => {}
+                }
+                false
             }
         };
-        batch.attach_trace(trace.clone());
-        batch.attach_pool(Arc::clone(&policy.pool));
-        let mut inflight: HashMap<u64, InFlight> = HashMap::new();
-        admit_request(
-            worker_id,
-            &mut ticket,
-            &mut batch,
-            &mut inflight,
+
+        // ---- fold fault counters; walk the degradation ladder -----------
+        let activity = fold.fold(&hooks, &global, &local);
+        fold.publish_breaker(
+            // ordering: Relaxed — advisory gauge snapshot (see `bump`).
+            hooks.stats.breaker_state.load(Ordering::Relaxed),
             &global,
             &local,
-            &pending,
-            &trace,
-            first,
         );
+        let after = degrade.observe(!clean || activity);
+        fold.publish_degraded(after, &global, &local);
+    }
+}
 
-        // ---- dynamic-batching window: wait for stragglers once ----------
-        if batch.has_free_slot() && !policy.batch_wait.is_zero() {
-            let window_end = Instant::now() + policy.batch_wait;
-            let mut st = queue.state.lock_unpoisoned();
-            loop {
-                while batch.has_free_slot() {
-                    let Some(req) = next_for_board(
-                        &mut st,
-                        group,
-                        compat,
-                        policy.steal,
-                        &global,
-                        &local,
-                        &pending,
-                    ) else {
-                        break;
-                    };
-                    admit_request(
-                        worker_id,
-                        &mut ticket,
-                        &mut batch,
-                        &mut inflight,
-                        &global,
-                        &local,
-                        &pending,
-                        &trace,
-                        req,
-                    );
-                }
-                if !batch.has_free_slot() || st.closed {
-                    break;
-                }
-                let now = Instant::now();
-                if now >= window_end {
-                    break;
-                }
-                let (guard, _timeout) = queue
-                    .available
-                    .wait_timeout_unpoisoned(st, window_end - now);
-                st = guard;
-            }
-            publish_depth(&global, &st);
+/// One continuous-batching session: build the board around `first`,
+/// batch continuously until it drains, fold the session's stats.
+/// Returns whether the session ran clean (no batch-level fault); a
+/// faulted session recovers its in-flight requests (requeue or typed
+/// failure) before returning.
+#[allow(clippy::too_many_arguments)]
+fn run_session(
+    worker_id: usize,
+    model: &dyn ForwardModel,
+    ticket: &mut u64,
+    inflight: &mut HashMap<u64, InFlight>,
+    first: Request,
+    degraded: bool,
+    cache_cfg: &CacheConfig,
+    prefix: Option<PrefixHandle>,
+    queue: &Queue,
+    global: &Metrics,
+    local: &Metrics,
+    pending: &AtomicU64,
+    policy: &WorkerPolicy,
+    trace: &TraceRecorder,
+) -> bool {
+    let group = first.group;
+    let compat = compat_key(&first.cfg);
+    let cfg = first.cfg.clone();
+    let mut batch = match SlotBatch::with_cache(model, &cfg, cache_cfg, prefix) {
+        Ok(b) => b,
+        Err(e) => {
+            // invalid config: a typed rejection, not a fault — the
+            // session still counts as clean
+            logging::info(&format!("worker {worker_id}: bad config: {e:#}"));
+            bump2(&global.errors, &local.errors);
+            fail_request(
+                &first.reply,
+                RequestError::rejected(format!("bad config: {e:#}")),
+            );
+            release_pending(pending);
+            return true;
         }
+    };
+    batch.attach_trace(trace.clone());
+    batch.attach_pool(Arc::clone(&policy.pool));
+    admit_request(
+        worker_id,
+        ticket,
+        &mut batch,
+        inflight,
+        global,
+        local,
+        pending,
+        trace,
+        first,
+    );
 
-        // ---- continuous-batching session --------------------------------
-        let session_t0 = Instant::now();
-        let mut session_reqs = 0usize;
-        let mut session_tokens = 0usize;
+    // ---- dynamic-batching window: wait for stragglers once --------------
+    if batch.has_free_slot() && !policy.batch_wait.is_zero() {
+        let window_end = Instant::now() + policy.batch_wait;
+        let mut st = queue.state.lock_unpoisoned();
         loop {
-            if batch.occupied() == 0 {
+            while batch.has_free_slot() {
+                let Some(req) =
+                    next_for_board(&mut st, group, compat, policy.steal, global, local, pending)
+                else {
+                    break;
+                };
+                admit_request(
+                    worker_id,
+                    ticket,
+                    &mut batch,
+                    inflight,
+                    global,
+                    local,
+                    pending,
+                    trace,
+                    req,
+                );
+            }
+            if !batch.has_free_slot() || st.closed {
                 break;
             }
-            let occupied = batch.occupied();
-            match batch.step() {
-                Ok(finished) => {
-                    global.record_step(occupied);
-                    local.record_step(occupied);
-                    // stream this step's commits first; a failed send means
-                    // the client went away, so reap the slot immediately —
-                    // backfill below reuses the capacity this very step
-                    for sc in batch.drain_commit_log() {
-                        let Some(fl) = inflight.get(&sc.id) else { continue };
-                        let Reply::Stream(tx) = &fl.reply else { continue };
-                        let sent = tx.send(StreamEvent::Tokens {
-                            step: sc.step,
-                            commits: sc.commits,
-                        });
-                        if sent.is_err() {
-                            inflight.remove(&sc.id);
-                            if batch.release(sc.id) {
-                                bump2(&global.cancelled, &local.cancelled);
-                            }
-                            release_pending(&pending);
-                        }
-                    }
-                    for (id, out) in finished {
-                        let Some(fl) = inflight.remove(&id) else { continue };
-                        let latency = fl.submitted.elapsed();
-                        trace.request(fl.seq, latency.as_nanos() as u64);
-                        session_reqs += 1;
-                        session_tokens += out.gen.len();
-                        global.record_request(latency, out.steps);
-                        local.record_request(latency, out.steps);
-                        let resp = Response {
-                            gen: out.gen,
-                            steps: out.steps,
-                            latency,
-                        };
-                        match &fl.reply {
-                            Reply::Once(tx) => {
-                                let _ = tx.send(resp);
-                            }
-                            Reply::Stream(tx) => {
-                                let _ = tx.send(StreamEvent::Done(resp));
-                            }
-                        }
-                        release_pending(&pending);
-                    }
-                }
-                Err(e) => {
-                    logging::info(&format!("worker {worker_id}: batch failed: {e:#}"));
-                    bump2(&global.errors, &local.errors);
-                    // receivers see dropped channels -> error at call site;
-                    // streams get an explicit terminal event first
-                    for (_, fl) in inflight.drain() {
-                        if let Reply::Stream(tx) = &fl.reply {
-                            let _ = tx.send(StreamEvent::Error(format!("batch failed: {e:#}")));
-                        }
-                        release_pending(&pending);
-                    }
-                    break;
-                }
+            let now = Instant::now();
+            if now >= window_end {
+                break;
             }
-            // deadline preemption: a full board yields a best-effort row
-            // (no deadline, non-streaming) to a queued request whose
-            // deadline falls within the policy horizon.  The victim is
-            // requeued at the front of its shard and restarted later —
-            // decoding is deterministic, so its tokens are unchanged.
-            if !policy.preempt_deadline.is_zero() && !batch.has_free_slot() {
-                // newest best-effort resident: least progress to discard
-                let victim = inflight
-                    .iter()
-                    .filter(|(_, fl)| {
-                        fl.deadline.is_none() && matches!(fl.reply, Reply::Once(_))
-                    })
-                    .max_by_key(|(_, fl)| fl.seq)
-                    .map(|(id, _)| *id);
-                if let Some(vid) = victim {
-                    let urgent = {
-                        let mut st = queue.state.lock_unpoisoned();
-                        let horizon = Instant::now() + policy.preempt_deadline;
-                        let got = pop_screened(
-                            &mut st,
-                            Pick::Urgent { compat, horizon },
-                            &global,
-                            &local,
-                            &pending,
-                        );
-                        if got.is_some() {
-                            // lint:allow(no-panic-request-path): vid was
-                            // drawn from `inflight` just above
-                            let fl = inflight.remove(&vid).unwrap();
-                            batch.release(vid);
-                            st.requeue(Request {
-                                prompt: fl.prompt,
-                                cfg: fl.cfg,
-                                submitted: fl.submitted,
-                                deadline: fl.deadline,
-                                reply: fl.reply,
-                                group: fl.group,
-                                seq: fl.seq,
-                                prefill: fl.prefill,
-                            });
-                            bump2(&global.preemptions, &local.preemptions);
-                            queue.available.notify_one();
+            let (guard, _timeout) = queue
+                .available
+                .wait_timeout_unpoisoned(st, window_end - now);
+            st = guard;
+        }
+        publish_depth(global, &st);
+    }
+
+    // ---- continuous-batching session ------------------------------------
+    let session_t0 = Instant::now();
+    let mut session_reqs = 0usize;
+    let mut session_tokens = 0usize;
+    let mut clean = true;
+    loop {
+        if batch.occupied() == 0 {
+            break;
+        }
+        let occupied = batch.occupied();
+        match batch.step() {
+            Ok(finished) => {
+                global.record_step(occupied);
+                local.record_step(occupied);
+                if degraded {
+                    bump2(&global.degraded_steps, &local.degraded_steps);
+                }
+                // stream this step's commits first; a failed send means
+                // the client went away, so reap the slot immediately —
+                // backfill below reuses the capacity this very step
+                for sc in batch.drain_commit_log() {
+                    let Some(fl) = inflight.get(&sc.id) else { continue };
+                    let Reply::Stream(tx) = &fl.reply else { continue };
+                    let sent = tx.send(StreamEvent::Tokens {
+                        step: sc.step,
+                        commits: sc.commits,
+                    });
+                    if sent.is_err() {
+                        inflight.remove(&sc.id);
+                        if batch.release(sc.id) {
+                            bump2(&global.cancelled, &local.cancelled);
                         }
-                        got
+                        release_pending(pending);
+                    }
+                }
+                for (id, out) in finished {
+                    let Some(fl) = inflight.remove(&id) else { continue };
+                    let latency = fl.submitted.elapsed();
+                    trace.request(fl.seq, latency.as_nanos() as u64);
+                    session_reqs += 1;
+                    session_tokens += out.gen.len();
+                    global.record_request(latency, out.steps);
+                    local.record_request(latency, out.steps);
+                    let resp = Response {
+                        gen: out.gen,
+                        steps: out.steps,
+                        latency,
                     };
-                    if let Some(req) = urgent {
-                        admit_request(
-                            worker_id,
-                            &mut ticket,
-                            &mut batch,
-                            &mut inflight,
-                            &global,
-                            &local,
-                            &pending,
-                            &trace,
-                            req,
-                        );
+                    match &fl.reply {
+                        Reply::Once(tx) => {
+                            let _ = tx.send(Ok(resp));
+                        }
+                        Reply::Stream(tx) => {
+                            let _ = tx.send(StreamEvent::Done(resp));
+                        }
                     }
+                    release_pending(pending);
                 }
             }
-            // backfill freed slots: this group's shard first, then steal
-            // the oldest shape-compatible request — step-granular
-            if batch.has_free_slot() {
-                let mut st = queue.state.lock_unpoisoned();
-                while batch.has_free_slot() {
-                    let Some(req) = next_for_board(
+            Err(e) => {
+                // the supervised chain already retried and breaker-gated
+                // this forward; an error here means recovery inside the
+                // chain is exhausted.  Classify it, abort the session,
+                // and requeue / fail what was on the board.
+                let retry_ok = crate::runtime::retryable(&e);
+                logging::info(&format!(
+                    "worker {worker_id}: batch failed ({}): {e:#}",
+                    if retry_ok { "retryable" } else { "fatal" }
+                ));
+                bump2(&global.errors, &local.errors);
+                trace.stage_tagged(Stage::Forward, 0, 0, "fault_abort");
+                recover_inflight(
+                    inflight,
+                    retry_ok,
+                    &format!("batch failed: {e:#}"),
+                    policy.max_retries,
+                    queue,
+                    global,
+                    local,
+                    pending,
+                );
+                clean = false;
+                break;
+            }
+        }
+        // deadline preemption: a full board yields a best-effort row
+        // (no deadline, non-streaming) to a queued request whose
+        // deadline falls within the policy horizon.  The victim is
+        // requeued at the front of its shard and restarted later —
+        // decoding is deterministic, so its tokens are unchanged.
+        if !policy.preempt_deadline.is_zero() && !batch.has_free_slot() {
+            // newest best-effort resident: least progress to discard
+            let victim = inflight
+                .iter()
+                .filter(|(_, fl)| fl.deadline.is_none() && matches!(fl.reply, Reply::Once(_)))
+                .max_by_key(|(_, fl)| fl.seq)
+                .map(|(id, _)| *id);
+            if let Some(vid) = victim {
+                let urgent = {
+                    let mut st = queue.state.lock_unpoisoned();
+                    let horizon = Instant::now() + policy.preempt_deadline;
+                    let got = pop_screened(
                         &mut st,
-                        group,
-                        compat,
-                        policy.steal,
-                        &global,
-                        &local,
-                        &pending,
-                    ) else {
-                        break;
-                    };
+                        Pick::Urgent { compat, horizon },
+                        global,
+                        local,
+                        pending,
+                    );
+                    if got.is_some() {
+                        // lint:allow(no-panic-request-path): vid was
+                        // drawn from `inflight` just above
+                        let fl = inflight.remove(&vid).unwrap();
+                        batch.release(vid);
+                        st.requeue(Request {
+                            prompt: fl.prompt,
+                            cfg: fl.cfg,
+                            submitted: fl.submitted,
+                            deadline: fl.deadline,
+                            reply: fl.reply,
+                            group: fl.group,
+                            seq: fl.seq,
+                            prefill: fl.prefill,
+                            retries: fl.retries,
+                        });
+                        bump2(&global.preemptions, &local.preemptions);
+                        queue.available.notify_one();
+                    }
+                    got
+                };
+                if let Some(req) = urgent {
                     admit_request(
                         worker_id,
-                        &mut ticket,
+                        ticket,
                         &mut batch,
-                        &mut inflight,
-                        &global,
-                        &local,
-                        &pending,
-                        &trace,
+                        inflight,
+                        global,
+                        local,
+                        pending,
+                        trace,
                         req,
                     );
                 }
-                publish_depth(&global, &st);
             }
         }
-        if session_reqs > 0 {
-            let wall = session_t0.elapsed();
-            global.record_batch(session_reqs, session_tokens, wall);
-            local.record_batch(session_reqs, session_tokens, wall);
+        // backfill freed slots: this group's shard first, then steal
+        // the oldest shape-compatible request — step-granular
+        if batch.has_free_slot() {
+            let mut st = queue.state.lock_unpoisoned();
+            while batch.has_free_slot() {
+                let Some(req) =
+                    next_for_board(&mut st, group, compat, policy.steal, global, local, pending)
+                else {
+                    break;
+                };
+                admit_request(
+                    worker_id,
+                    ticket,
+                    &mut batch,
+                    inflight,
+                    global,
+                    local,
+                    pending,
+                    trace,
+                    req,
+                );
+            }
+            publish_depth(global, &st);
         }
-        // fold this session's compute-reuse counters and step-pipeline
-        // phase timings into the metrics
-        let cache_stats = batch.cache_stats();
-        global.record_cache(&cache_stats);
-        local.record_cache(&cache_stats);
-        let timings = batch.timings();
-        global.record_step_timings(&timings);
-        local.record_step_timings(&timings);
-        let hists = batch.stage_hists();
-        global.record_stage_hists(hists);
-        local.record_stage_hists(hists);
     }
+    if session_reqs > 0 {
+        let wall = session_t0.elapsed();
+        global.record_batch(session_reqs, session_tokens, wall);
+        local.record_batch(session_reqs, session_tokens, wall);
+    }
+    // fold this session's compute-reuse counters and step-pipeline
+    // phase timings into the metrics
+    let cache_stats = batch.cache_stats();
+    global.record_cache(&cache_stats);
+    local.record_cache(&cache_stats);
+    let timings = batch.timings();
+    global.record_step_timings(&timings);
+    local.record_step_timings(&timings);
+    let hists = batch.stage_hists();
+    global.record_stage_hists(hists);
+    local.record_stage_hists(hists);
+    clean
 }
 
 #[cfg(test)]
@@ -1309,7 +1878,7 @@ mod tests {
             .map(|_| coord.submit(vec![5; 4], cfg()).unwrap())
             .collect();
         for rx in rxs {
-            let r = rx.recv().unwrap();
+            let r = rx.recv().unwrap().unwrap();
             assert!(!r.gen.is_empty());
         }
         coord.shutdown();
@@ -1366,7 +1935,7 @@ mod tests {
             .map(|_| coord.submit(vec![5; 4], cfg()).unwrap())
             .collect();
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         coord.shutdown();
         handles.join();
@@ -1521,7 +2090,9 @@ mod tests {
         // the worker starts only after the budget has lapsed, so the
         // request must be shed at pop time, never decoded
         let handle = coord.spawn_worker(0, Box::new(MockModel::new(2, 16, 4, 12)), Duration::ZERO);
-        assert!(rx.recv().is_err(), "shed request must drop its channel");
+        let err = rx.recv().unwrap().unwrap_err();
+        assert_eq!(err.code, "expired", "shed request must fail typed");
+        assert!(!err.retryable);
         coord.shutdown();
         handle.join().unwrap();
         assert_eq!(coord.metrics.deadline_dropped.load(Ordering::Relaxed), 1);
@@ -1626,5 +2197,87 @@ mod tests {
         let depths = coord.queue_depths();
         assert_eq!(depths.len(), 2, "drained groups must persist in the map");
         assert!(depths.iter().all(|&(_, d)| d == 0));
+    }
+
+    #[test]
+    fn degrade_ladder_escalates_and_recovers() {
+        let mut d = Degrade::default();
+        assert_eq!(d.observe(true), 0, "one faulty session is not a pattern");
+        assert_eq!(d.observe(true), 1, "two consecutive faulty sessions escalate");
+        assert_eq!(d.observe(true), 1);
+        assert_eq!(d.observe(true), 2, "and keep escalating to the scalar tier");
+        assert_eq!(d.observe(true), 2, "the tier is capped");
+        assert_eq!(d.observe(false), 2);
+        assert_eq!(d.observe(false), 2);
+        assert_eq!(d.observe(false), 1, "three clean sessions walk one tier back");
+        assert_eq!(d.observe(true), 1, "a fault resets the clean streak");
+        for _ in 0..3 {
+            d.observe(false);
+        }
+        assert_eq!(d.tier, 0, "sustained clean service fully recovers");
+    }
+
+    #[test]
+    fn faulted_pool_recovers_token_identically() {
+        let m = MockModel::new(2, 16, 4, 12);
+        let want: Vec<i32> = (4..16).map(|i| m.true_token(i)).collect();
+        let pool = ModelPool::mock(m);
+        // seed 3 injects transient errors in runs of at most two
+        // consecutive calls within the first 20 — always recoverable
+        // inside the chain's retry budget (3), so the fault path is
+        // exercised while every response stays token-identical.
+        let opts = PoolOptions {
+            workers: 1,
+            batch_wait: Duration::ZERO,
+            fault: Some(FaultPlan::parse("seed=3;error=0.25;until=20").unwrap()),
+            ..PoolOptions::default()
+        };
+        let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
+        for _ in 0..6 {
+            let resp = coord.call(vec![5; 4], cfg()).unwrap();
+            assert_eq!(resp.gen, want, "faulted pool changed the generation");
+        }
+        coord.shutdown();
+        handles.join();
+        assert!(
+            coord.metrics.faults_injected.load(Ordering::Relaxed) >= 1,
+            "the plan must actually inject"
+        );
+        assert!(
+            coord.metrics.retries.load(Ordering::Relaxed) >= 1,
+            "injected faults must be retried"
+        );
+    }
+
+    #[test]
+    fn worker_panic_is_survived_with_respawn_and_requeue() {
+        let m = MockModel::new(2, 16, 4, 12);
+        let want: Vec<i32> = (4..16).map(|i| m.true_token(i)).collect();
+        let pool = ModelPool::mock(m);
+        // the second forward of replica 0 panics, exactly once (the call
+        // counter is shared across respawns)
+        let opts = PoolOptions {
+            workers: 1,
+            batch_wait: Duration::ZERO,
+            fault: Some(FaultPlan::parse("panic_at=1").unwrap()),
+            ..PoolOptions::default()
+        };
+        let (coord, handles) = Coordinator::start_pool(&pool, &opts).unwrap();
+        for _ in 0..3 {
+            let resp = coord.call(vec![5; 4], cfg()).unwrap();
+            assert_eq!(resp.gen, want, "retried request changed the generation");
+        }
+        coord.shutdown();
+        handles.join();
+        assert_eq!(
+            coord.metrics.worker_restarts.load(Ordering::Relaxed),
+            1,
+            "the panic must restart the worker exactly once"
+        );
+        assert!(
+            coord.metrics.retries.load(Ordering::Relaxed) >= 1,
+            "the in-flight request must be requeued"
+        );
+        assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), 3);
     }
 }

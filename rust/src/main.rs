@@ -30,6 +30,14 @@
 //!           (decode-path tracing: bounded per-worker rings, drained
 //!           as Chrome trace JSON via {"trace": true} or dumped to
 //!           FILE on graceful drain; DAPD_TRACE=1 sets the default)
+//!           [--fault-spec SPEC]  (deterministic fault injection into
+//!           every worker's forward pass, e.g.
+//!           "seed=7;error=0.1;nan=0.05;latency=0.1:5"; DAPD_FAULTS
+//!           sets the default; see runtime::fault for the grammar)
+//!           [--forward-timeout-ms D]  (watchdog: reap a forward pass
+//!           hung past D ms and respawn the replica; 0 = off)
+//!           [--max-retries N]  (per-request recovery budget: in-place
+//!           forward retries and post-fault requeues; default 3)
 //!           SIGINT/SIGTERM trigger graceful drain: refuse new work,
 //!           finish in-flight requests, flush streams, then exit.
 //!   client  --addr HOST:PORT --task T [--n N] [--method X]
@@ -274,6 +282,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let gen_len = engine.meta.gen_len;
         ModelPool::pjrt(engine, &settings.model, settings.batch, gen_len)?
     };
+    let fault = settings.fault_plan()?;
+    if let Some(plan) = &fault {
+        logging::info(&format!(
+            "fault injection armed: {:?} (watchdog {} ms, max_retries {})",
+            plan, settings.forward_timeout_ms, settings.max_retries
+        ));
+    }
     let opts = PoolOptions {
         workers: settings.workers,
         batch_wait: Duration::from_millis(settings.batch_wait_ms),
@@ -284,6 +299,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         steal: settings.steal,
         preempt_deadline: Duration::from_millis(settings.preempt_deadline_ms),
         pool_cap: settings.pool_cap,
+        fault,
+        forward_timeout: Duration::from_millis(settings.forward_timeout_ms),
+        max_retries: settings.max_retries,
     };
     let (coord, handles) = Coordinator::start_pool(&pool, &opts)?;
     let reporter = coord.clone();

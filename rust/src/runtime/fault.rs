@@ -1,0 +1,452 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! [`FaultyModel`] wraps any [`ForwardModel`] and injects failures
+//! according to a seeded [`FaultPlan`], so every failure mode the
+//! recovery machinery must survive — transient and persistent error
+//! returns, NaN/Inf logit corruption, latency spikes, indefinite hangs,
+//! worker panics — is reproducible bit-for-bit in unit tests, benches,
+//! and the chaos-smoke CI job.
+//!
+//! A plan is a `;`-separated clause list (`--fault-spec` / `DAPD_FAULTS`):
+//!
+//! ```text
+//! seed=7;error=0.15;nan=0.05;latency=0.1:5;until=400;hang_at=3;panic_at=9
+//! ```
+//!
+//! | clause            | effect                                                        |
+//! |-------------------|---------------------------------------------------------------|
+//! | `seed=N`          | RNG seed for the probabilistic clauses (default 0)            |
+//! | `replica=N`       | inject only on replica/worker `N` (default: all replicas)     |
+//! | `error=P`         | each forward returns a transient error with probability `P`   |
+//! | `nan=P`           | corrupt one logit row with NaN with probability `P`           |
+//! | `inf=P`           | corrupt one logit with +Inf with probability `P`              |
+//! | `latency=P:MS`    | with probability `P`, sleep `MS` ms before returning          |
+//! | `error_at=K`      | one-shot transient error on the `K`-th call (0-based)         |
+//! | `hang_at=K`       | one-shot indefinite hang on the `K`-th call (needs watchdog)  |
+//! | `panic_at=K`      | one-shot panic on the `K`-th call                             |
+//! | `persist_after=K` | every call with index `>= K` fails persistently               |
+//! | `until=K`         | probabilistic clauses stop after `K` calls (bounds chaos runs)|
+//!
+//! Decisions are pure functions of `(seed, replica, call index, clause)`
+//! via splitmix64, so a plan replays identically regardless of wall
+//! clock or thread scheduling.  The call counter is shared across
+//! respawns of the same replica (`Arc<AtomicU64>`), so a one-shot clause
+//! fires exactly once even after the supervisor replaces the wrapper.
+//!
+//! Corruption mutates only the *returned* [`StepOutput`]; the wrapped
+//! model's internal state is untouched, so a retried call observes a
+//! clean forward and the retry is token-identical by construction.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::supervise::DecodeFault;
+use super::{ForwardModel, RowWindows, StepOutput};
+
+/// Per-clause salts so error / latency / nan / inf decisions at the same
+/// call index are independent draws.
+const SALT_ERROR: u64 = 0x45;
+const SALT_LATENCY: u64 = 0x4C;
+const SALT_NAN: u64 = 0x4E;
+const SALT_INF: u64 = 0x49;
+const SALT_SITE: u64 = 0x53;
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A parsed, deterministic fault schedule.  See the module docs for the
+/// clause grammar.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Inject only on this replica; `None` targets every replica.
+    pub replica: Option<usize>,
+    pub error_p: f64,
+    pub nan_p: f64,
+    pub inf_p: f64,
+    pub latency_p: f64,
+    pub latency_ms: u64,
+    pub error_at: Option<u64>,
+    pub hang_at: Option<u64>,
+    pub panic_at: Option<u64>,
+    pub persist_after: Option<u64>,
+    pub until: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Parse a `;`-separated clause list.  Unknown keys and malformed
+    /// values are hard errors so a typo'd chaos spec fails at deploy
+    /// time, not silently as a fault-free run.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        let mut any = false;
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            any = true;
+            let (key, val) = match clause.split_once('=') {
+                Some(kv) => kv,
+                None => bail!("fault-spec clause `{clause}` is not key=value"),
+            };
+            let int = |v: &str| -> Result<u64> {
+                match v.parse::<u64>() {
+                    Ok(n) => Ok(n),
+                    Err(_) => bail!("fault-spec `{key}={v}`: expected an integer"),
+                }
+            };
+            let prob = |v: &str| -> Result<f64> {
+                match v.parse::<f64>() {
+                    Ok(p) if (0.0..=1.0).contains(&p) => Ok(p),
+                    _ => bail!("fault-spec `{key}={v}`: expected a probability in [0, 1]"),
+                }
+            };
+            match key {
+                "seed" => plan.seed = int(val)?,
+                "replica" => plan.replica = Some(int(val)? as usize),
+                "error" => plan.error_p = prob(val)?,
+                "nan" => plan.nan_p = prob(val)?,
+                "inf" => plan.inf_p = prob(val)?,
+                "latency" => match val.split_once(':') {
+                    Some((p, ms)) => {
+                        plan.latency_p = prob(p)?;
+                        plan.latency_ms = int(ms)?;
+                    }
+                    None => bail!("fault-spec `latency={val}`: expected P:MS"),
+                },
+                "error_at" => plan.error_at = Some(int(val)?),
+                "hang_at" => plan.hang_at = Some(int(val)?),
+                "panic_at" => plan.panic_at = Some(int(val)?),
+                "persist_after" => plan.persist_after = Some(int(val)?),
+                "until" => plan.until = Some(int(val)?),
+                _ => bail!(
+                    "fault-spec clause `{key}` unknown (expected seed/replica/error/nan/inf/\
+                     latency/error_at/hang_at/panic_at/persist_after/until)"
+                ),
+            }
+        }
+        if !any {
+            bail!("fault-spec is empty");
+        }
+        Ok(plan)
+    }
+
+    /// Whether this plan injects on the given replica at all.
+    pub fn applies_to(&self, replica: usize) -> bool {
+        self.replica.map_or(true, |r| r == replica)
+    }
+
+    /// Uniform draw in `[0, 1)` for clause `salt` at call `i` — a pure
+    /// function of the plan seed, the replica, and the call index.
+    fn roll(&self, replica: usize, i: u64, salt: u64) -> f64 {
+        let h = splitmix64(self.seed ^ splitmix64((replica as u64) << 32 | salt) ^ splitmix64(i));
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Deterministic corruption site for call `i`, in `[0, n)`.
+    fn site(&self, replica: usize, i: u64, n: usize) -> usize {
+        let h = splitmix64(self.seed ^ splitmix64((replica as u64) << 32 | SALT_SITE) ^ i);
+        (h % n.max(1) as u64) as usize
+    }
+}
+
+/// A `ForwardModel` wrapper that injects the faults its [`FaultPlan`]
+/// schedules.  Delegates every dimension accessor and forward variant to
+/// the wrapped model; injection happens around the delegated call.
+pub struct FaultyModel {
+    inner: Box<dyn ForwardModel + Send>,
+    plan: FaultPlan,
+    replica: usize,
+    /// Shared across respawns so one-shot clauses fire exactly once.
+    calls: Arc<AtomicU64>,
+    /// Shared `faults_injected` counter (folded into `Metrics`).
+    injected: Arc<AtomicU64>,
+}
+
+impl FaultyModel {
+    /// Wrap with fresh counters (tests, ad-hoc use).
+    pub fn new(
+        inner: Box<dyn ForwardModel + Send>,
+        plan: FaultPlan,
+        replica: usize,
+    ) -> FaultyModel {
+        FaultyModel::with_counters(
+            inner,
+            plan,
+            replica,
+            Arc::new(AtomicU64::new(0)),
+            Arc::new(AtomicU64::new(0)),
+        )
+    }
+
+    /// Wrap with caller-owned counters.  The supervisor passes the same
+    /// `calls` across respawns so the injection schedule continues where
+    /// the lost replica left off instead of replaying one-shots.
+    pub fn with_counters(
+        inner: Box<dyn ForwardModel + Send>,
+        plan: FaultPlan,
+        replica: usize,
+        calls: Arc<AtomicU64>,
+        injected: Arc<AtomicU64>,
+    ) -> FaultyModel {
+        FaultyModel {
+            inner,
+            plan,
+            replica,
+            calls,
+            injected,
+        }
+    }
+
+    /// Faults injected so far (all kinds, including latency spikes).
+    pub fn injected(&self) -> u64 {
+        // ordering: stat counter; readers tolerate a stale tally
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    fn inject(&self) {
+        // ordering: stat counter
+        self.injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Run one forward with the plan applied around it.
+    fn around<F>(&self, run: F) -> Result<StepOutput>
+    where
+        F: FnOnce(&dyn ForwardModel) -> Result<StepOutput>,
+    {
+        let p = &self.plan;
+        if !p.applies_to(self.replica) {
+            return run(self.inner.as_ref());
+        }
+        // ordering: the schedule only needs a unique per-call index; no
+        // memory is published under this counter
+        let i = self.calls.fetch_add(1, Ordering::Relaxed);
+        if p.panic_at == Some(i) {
+            self.inject();
+            // lint:allow(no-panic-request-path): deliberate injected panic — the
+            // supervisor's catch_unwind + respawn path is exactly what this exercises
+            panic!("injected panic (call {i}, replica {})", self.replica);
+        }
+        if p.hang_at == Some(i) {
+            self.inject();
+            // Indefinite hang: only the forward watchdog can reap this
+            // (the executor thread it runs on is abandoned).
+            loop {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+        if p.persist_after.is_some_and(|k| i >= k) {
+            self.inject();
+            return Err(DecodeFault::persistent(format!(
+                "injected persistent error (call {i}, replica {})",
+                self.replica
+            ))
+            .into());
+        }
+        let active = p.until.map_or(true, |k| i < k);
+        if active && p.error_at == Some(i) {
+            self.inject();
+            return Err(DecodeFault::transient(format!(
+                "injected one-shot error (call {i}, replica {})",
+                self.replica
+            ))
+            .into());
+        }
+        if active && p.error_p > 0.0 && p.roll(self.replica, i, SALT_ERROR) < p.error_p {
+            self.inject();
+            return Err(DecodeFault::transient(format!(
+                "injected transient error (call {i}, replica {})",
+                self.replica
+            ))
+            .into());
+        }
+        if active && p.latency_p > 0.0 && p.roll(self.replica, i, SALT_LATENCY) < p.latency_p {
+            self.inject();
+            std::thread::sleep(Duration::from_millis(p.latency_ms));
+        }
+        let mut out = run(self.inner.as_ref())?;
+        if active && p.nan_p > 0.0 && p.roll(self.replica, i, SALT_NAN) < p.nan_p {
+            self.inject();
+            // Corrupt one whole logit row: (batch, position) chosen
+            // deterministically from the call index.
+            let rows = out.batch * out.seq_len;
+            let row = self.plan.site(self.replica, i, rows);
+            let v = out.vocab;
+            for x in &mut out.logits.data[row * v..(row + 1) * v] {
+                *x = f32::NAN;
+            }
+        }
+        if active && p.inf_p > 0.0 && p.roll(self.replica, i, SALT_INF) < p.inf_p {
+            self.inject();
+            let n = out.logits.data.len();
+            out.logits.data[self.plan.site(self.replica, i.wrapping_add(1), n)] = f32::INFINITY;
+        }
+        Ok(out)
+    }
+}
+
+impl ForwardModel for FaultyModel {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+    fn prompt_len(&self) -> usize {
+        self.inner.prompt_len()
+    }
+    fn gen_len(&self) -> usize {
+        self.inner.gen_len()
+    }
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn mask_id(&self) -> i32 {
+        self.inner.mask_id()
+    }
+    fn forward(&self, tokens: &[i32]) -> Result<StepOutput> {
+        self.around(|m| m.forward(tokens))
+    }
+    fn forward_window(&self, tokens: &[i32], window: &[usize]) -> Result<StepOutput> {
+        self.around(|m| m.forward_window(tokens, window))
+    }
+    fn forward_window_rows(&self, tokens: &[i32], windows: &RowWindows<'_>) -> Result<StepOutput> {
+        self.around(|m| m.forward_window_rows(tokens, windows))
+    }
+    fn window_native(&self) -> bool {
+        self.inner.window_native()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::supervise::{classify, FaultClass};
+    use super::super::MockModel;
+    use super::*;
+
+    fn mock() -> Box<dyn ForwardModel + Send> {
+        Box::new(MockModel::new(2, 16, 4, 12))
+    }
+
+    #[test]
+    fn parse_accepts_the_full_grammar() {
+        let p = FaultPlan::parse(
+            "seed=7;replica=1;error=0.25;nan=0.5;inf=0.125;latency=0.1:5;\
+             error_at=3;hang_at=4;panic_at=5;persist_after=100;until=50",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.replica, Some(1));
+        assert_eq!(p.error_p, 0.25);
+        assert_eq!(p.nan_p, 0.5);
+        assert_eq!(p.inf_p, 0.125);
+        assert_eq!((p.latency_p, p.latency_ms), (0.1, 5));
+        assert_eq!(p.error_at, Some(3));
+        assert_eq!(p.hang_at, Some(4));
+        assert_eq!(p.panic_at, Some(5));
+        assert_eq!(p.persist_after, Some(100));
+        assert_eq!(p.until, Some(50));
+    }
+
+    #[test]
+    fn parse_rejects_typos_and_bad_values() {
+        for bad in ["", "bogus=1", "error=2.0", "latency=0.5", "seed=x", "error"] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn injection_sequence_is_deterministic_per_seed() {
+        let plan = FaultPlan::parse("seed=11;error=0.5;until=64").unwrap();
+        let run = || -> Vec<bool> {
+            let m = FaultyModel::new(mock(), plan.clone(), 0);
+            let tokens = vec![1i32; 2 * 16];
+            (0..64).map(|_| m.forward(&tokens).is_err()).collect()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same plan must replay identically");
+        let errs = a.iter().filter(|&&e| e).count();
+        assert!((16..=48).contains(&errs), "p=0.5 over 64 calls: {errs}");
+    }
+
+    #[test]
+    fn replica_targeting_spares_other_replicas() {
+        let plan = FaultPlan::parse("replica=1;error=1.0").unwrap();
+        assert!(!plan.applies_to(0) && plan.applies_to(1));
+        let tokens = vec![1i32; 2 * 16];
+        let spared = FaultyModel::new(mock(), plan.clone(), 0);
+        assert!(spared.forward(&tokens).is_ok(), "replica 0 is not targeted");
+        let hit = FaultyModel::new(mock(), plan, 1);
+        assert!(hit.forward(&tokens).is_err(), "replica 1 is targeted");
+    }
+
+    #[test]
+    fn one_shot_error_fires_once_and_is_transient() {
+        let plan = FaultPlan::parse("error_at=1").unwrap();
+        let m = FaultyModel::new(mock(), plan, 0);
+        let tokens = vec![1i32; 2 * 16];
+        assert!(m.forward(&tokens).is_ok());
+        let e = m.forward(&tokens).unwrap_err();
+        assert_eq!(classify(&e), Some(FaultClass::Transient));
+        assert!(m.forward(&tokens).is_ok());
+        assert_eq!(m.injected(), 1);
+    }
+
+    #[test]
+    fn persistent_faults_never_clear() {
+        let plan = FaultPlan::parse("persist_after=0").unwrap();
+        let m = FaultyModel::new(mock(), plan, 0);
+        let tokens = vec![1i32; 2 * 16];
+        for _ in 0..3 {
+            let e = m.forward(&tokens).unwrap_err();
+            assert_eq!(classify(&e), Some(FaultClass::Persistent));
+        }
+    }
+
+    #[test]
+    fn nan_corruption_leaves_the_inner_model_clean() {
+        let plan = FaultPlan::parse("nan=1.0;until=1").unwrap();
+        let m = FaultyModel::new(mock(), plan, 0);
+        let tokens = vec![1i32; 2 * 16];
+        let corrupt = m.forward(&tokens).unwrap();
+        assert!(
+            corrupt.logits.data.iter().any(|v| v.is_nan()),
+            "first call must carry the injected NaN row"
+        );
+        let clean = m.forward(&tokens).unwrap();
+        assert!(
+            clean.logits.data.iter().all(|v| v.is_finite()),
+            "retry after `until` must see an uncorrupted forward"
+        );
+    }
+
+    #[test]
+    fn shared_call_counter_survives_respawn() {
+        let plan = FaultPlan::parse("error_at=1").unwrap();
+        let calls = Arc::new(AtomicU64::new(0));
+        let injected = Arc::new(AtomicU64::new(0));
+        let tokens = vec![1i32; 2 * 16];
+        let a = FaultyModel::with_counters(
+            mock(),
+            plan.clone(),
+            0,
+            Arc::clone(&calls),
+            Arc::clone(&injected),
+        );
+        assert!(a.forward(&tokens).is_ok());
+        assert!(a.forward(&tokens).is_err());
+        // "respawned" wrapper continues the schedule: the one-shot is spent
+        let b = FaultyModel::with_counters(mock(), plan, 0, calls, injected);
+        assert!(b.forward(&tokens).is_ok());
+        assert_eq!(b.injected(), 1);
+    }
+}

@@ -3,14 +3,22 @@
 
 pub mod artifact;
 pub mod engine;
+pub mod fault;
 pub mod mock;
 pub mod model_pool;
 pub mod pjrt;
+pub mod supervise;
 
 pub use artifact::{ArtifactInfo, ArtifactKind, Metadata, MrfSpec, SpecialTokens};
 pub use engine::{Engine, XlaModel};
+pub use fault::{FaultPlan, FaultyModel};
 pub use mock::MockModel;
 pub use model_pool::ModelPool;
+pub use supervise::{
+    classify, retryable, screen_output, BreakerBoard, BreakerPolicy, BreakerState, CircuitBreaker,
+    DecodeFault, FaultClass, RespawnFn, RetryPolicy, SupervisedModel, SuperviseSnapshot,
+    SuperviseStats, WatchdogModel,
+};
 
 use anyhow::Result;
 

@@ -13,15 +13,23 @@
 //!
 //! Replicas are `Box<dyn ForwardModel + Send>` so the coordinator can move
 //! them into worker threads without caring which backend they came from.
+//!
+//! The pool also owns the shared [`BreakerBoard`]: each worker's
+//! supervised wrapper publishes its per-replica circuit-breaker state
+//! here, so deploy-time callers (logs, the server) can see which
+//! replicas are tripped without reaching into worker threads.  Clones
+//! of a pool share one board.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::supervise::{BreakerBoard, BreakerState};
 use super::{Engine, ForwardModel, MockModel, StepOutput, XlaModel};
 
-/// A source of per-worker `ForwardModel` replicas.
-pub enum ModelPool {
+/// How replicas are produced.
+#[derive(Clone)]
+enum Source {
     /// Synthetic model; replicas are cheap clones.
     Mock(MockModel),
     /// Registry artifact; each replica is a fresh per-worker compile.
@@ -31,10 +39,21 @@ pub enum ModelPool {
     },
 }
 
+/// A source of per-worker `ForwardModel` replicas plus the shared
+/// per-replica breaker states.
+#[derive(Clone)]
+pub struct ModelPool {
+    source: Source,
+    breakers: BreakerBoard,
+}
+
 impl ModelPool {
     /// Pool backed by the pure-rust mock model.
     pub fn mock(model: MockModel) -> ModelPool {
-        ModelPool::Mock(model)
+        ModelPool {
+            source: Source::Mock(model),
+            breakers: BreakerBoard::new(),
+        }
     }
 
     /// Pool backed by a registry artifact selected by
@@ -47,33 +66,37 @@ impl ModelPool {
         gen_len: usize,
     ) -> Result<ModelPool> {
         let artifact = engine.meta.find(model, batch, gen_len)?.name.clone();
-        Ok(ModelPool::Pjrt { engine, artifact })
+        Ok(ModelPool {
+            source: Source::Pjrt { engine, artifact },
+            breakers: BreakerBoard::new(),
+        })
     }
 
     /// Pool backed by a registry artifact addressed by name.
     pub fn pjrt_by_name(engine: Arc<Engine>, artifact: &str) -> Result<ModelPool> {
         engine.meta.find_by_name(artifact)?;
-        Ok(ModelPool::Pjrt {
-            engine,
-            artifact: artifact.to_string(),
+        Ok(ModelPool {
+            source: Source::Pjrt {
+                engine,
+                artifact: artifact.to_string(),
+            },
+            breakers: BreakerBoard::new(),
         })
     }
 
     /// Batch capacity of every replica this pool produces.
     pub fn batch(&self) -> Result<usize> {
-        match self {
-            ModelPool::Mock(m) => Ok(m.batch),
-            ModelPool::Pjrt { engine, artifact } => {
-                Ok(engine.meta.find_by_name(artifact)?.batch)
-            }
+        match &self.source {
+            Source::Mock(m) => Ok(m.batch),
+            Source::Pjrt { engine, artifact } => Ok(engine.meta.find_by_name(artifact)?.batch),
         }
     }
 
     /// Produce one worker-owned replica.
     pub fn replica(&self) -> Result<Box<dyn ForwardModel + Send>> {
-        match self {
-            ModelPool::Mock(m) => Ok(Box::new(m.clone())),
-            ModelPool::Pjrt { engine, artifact } => {
+        match &self.source {
+            Source::Mock(m) => Ok(Box::new(m.clone())),
+            Source::Pjrt { engine, artifact } => {
                 let model = engine.model_fresh(artifact)?;
                 Ok(Box::new(PooledXla {
                     model,
@@ -83,14 +106,26 @@ impl ModelPool {
         }
     }
 
+    /// The shared per-replica circuit-breaker board.  Supervised workers
+    /// publish transitions here; clones of this pool observe them.
+    pub fn breakers(&self) -> &BreakerBoard {
+        &self.breakers
+    }
+
+    /// `(replica, breaker state)` pairs for every supervised replica
+    /// that has published, ascending by replica id.
+    pub fn breaker_states(&self) -> Vec<(usize, BreakerState)> {
+        self.breakers.states()
+    }
+
     /// Whether replicas serve windowed forwards natively (the mock
     /// always does; a PJRT artifact does when its metadata declares a
     /// `windowed_file` variant).  Knowable at deploy time, before any
     /// replica compiles.
     pub fn window_native(&self) -> bool {
-        match self {
-            ModelPool::Mock(_) => true,
-            ModelPool::Pjrt { engine, artifact } => engine
+        match &self.source {
+            Source::Mock(_) => true,
+            Source::Pjrt { engine, artifact } => engine
                 .meta
                 .find_by_name(artifact)
                 .map(|a| a.has_windowed())
@@ -100,22 +135,34 @@ impl ModelPool {
 
     /// Human-readable description for logs, including the kernel
     /// backend the replicas' feature derivation will execute
-    /// (`scalar` / `native/avx2` / `native/neon` / `native/fused`).
+    /// (`scalar` / `native/avx2` / `native/neon` / `native/fused`) and,
+    /// once workers are supervised, any non-closed breakers.
     pub fn describe(&self) -> String {
         let kernels = crate::tensor::kernels::selected_label();
-        match self {
-            ModelPool::Mock(m) => format!(
+        let mut d = match &self.source {
+            Source::Mock(m) => format!(
                 "mock(batch={} seq={} prompt={} vocab={}) kernels={kernels}",
                 m.batch, m.seq_len, m.prompt_len, m.vocab
             ),
-            ModelPool::Pjrt { artifact, .. } => {
+            Source::Pjrt { artifact, .. } => {
                 if self.window_native() {
                     format!("pjrt({artifact}, windowed) kernels={kernels}")
                 } else {
                     format!("pjrt({artifact}) kernels={kernels}")
                 }
             }
+        };
+        let tripped: Vec<String> = self
+            .breakers
+            .states()
+            .into_iter()
+            .filter(|(_, s)| *s != BreakerState::Closed)
+            .map(|(r, s)| format!("{r}:{}", s.label()))
+            .collect();
+        if !tripped.is_empty() {
+            d.push_str(&format!(" breakers=[{}]", tripped.join(",")));
         }
+        d
     }
 }
 
@@ -185,5 +232,18 @@ mod tests {
         let d = pool.describe();
         assert!(d.starts_with("mock("));
         assert!(d.contains("kernels="), "describe must name the kernel tier: {d}");
+    }
+
+    #[test]
+    fn clones_share_the_breaker_board() {
+        let pool = ModelPool::mock(MockModel::new(1, 8, 2, 10));
+        let clone = pool.clone();
+        clone.breakers().publish(2, BreakerState::Open);
+        assert_eq!(pool.breaker_states(), vec![(2, BreakerState::Open)]);
+        assert!(
+            pool.describe().contains("breakers=[2:open]"),
+            "tripped breakers must surface in describe: {}",
+            pool.describe()
+        );
     }
 }

@@ -1,0 +1,1166 @@
+//! Fault detection and supervised recovery around `ForwardModel`.
+//!
+//! Layered wrappers, innermost first (see DESIGN.md "Fault tolerance"):
+//!
+//! * [`FaultyModel`](super::fault::FaultyModel) — optional, injection only.
+//! * [`WatchdogModel`] — runs forwards on a dedicated executor thread and
+//!   bounds them with `--forward-timeout-ms`; a hung forward is reaped
+//!   (the executor is abandoned and respawned), an executor panic is
+//!   re-raised on the calling worker so the coordinator's
+//!   `catch_unwind` + respawn supervision sees it.
+//! * [`SupervisedModel`] — screens every [`StepOutput`] for silent
+//!   corruption (NaN/Inf, shape mismatch), retries retryable faults with
+//!   capped exponential backoff under a retry budget, and gates calls
+//!   through a per-replica [`CircuitBreaker`] published to the pool's
+//!   [`BreakerBoard`].
+//!
+//! The cache-quarantine invariant lives here: a faulted forward returns
+//! `Err` from the wrapper stack, so it can never be published to
+//! `PrefixCache` or frozen into a `ForwardCache` snapshot — both only
+//! ever see screened `Ok` outputs.
+//!
+//! The vendored `anyhow` shim carries no downcast, so typed faults
+//! travel as a stable `decode_fault[<kind>]:` Display prefix that
+//! [`classify`] recovers by scanning the context chain.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::{ForwardModel, RowWindows, StepOutput};
+use crate::util::LockExt;
+
+// ---------------------------------------------------------------------------
+// Typed faults over the string-chain error shim
+// ---------------------------------------------------------------------------
+
+/// Stable Display prefix that tags a [`DecodeFault`] in an error chain.
+const FAULT_TAG: &str = "decode_fault[";
+
+/// Marker prefix for a panic that crossed the watchdog's executor
+/// channel; [`WatchdogModel`] re-raises it on the calling thread.
+const PANIC_TAG: &str = "replica_panic: ";
+
+/// What kind of fault a failed forward was — drives retry policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Backend returned an error expected to clear (injected transient,
+    /// spurious PJRT failure).  Retryable.
+    Transient,
+    /// Backend is not coming back without intervention (breaker open,
+    /// replica lost with no respawn).  Not retryable.
+    Persistent,
+    /// Forward "succeeded" but the output failed the sanity screen
+    /// (NaN/Inf, shape mismatch).  Retryable — recompute, don't trust.
+    Corrupt,
+    /// The watchdog reaped a hung forward.  Retryable on a fresh
+    /// executor.
+    Timeout,
+}
+
+impl FaultClass {
+    pub fn retryable(self) -> bool {
+        !matches!(self, FaultClass::Persistent)
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            FaultClass::Transient => "transient",
+            FaultClass::Persistent => "persistent",
+            FaultClass::Corrupt => "corrupt",
+            FaultClass::Timeout => "timeout",
+        }
+    }
+
+    fn from_tag(tag: &str) -> Option<FaultClass> {
+        Some(match tag {
+            "transient" => FaultClass::Transient,
+            "persistent" => FaultClass::Persistent,
+            "corrupt" => FaultClass::Corrupt,
+            "timeout" => FaultClass::Timeout,
+            _ => return None,
+        })
+    }
+}
+
+/// A typed decode-path fault.  Converts into `anyhow::Error` through the
+/// shim's `std::error::Error` impl, keeping the class recoverable from
+/// the Display text (`decode_fault[transient]: ...`).
+#[derive(Debug)]
+pub struct DecodeFault {
+    pub class: FaultClass,
+    pub msg: String,
+}
+
+impl DecodeFault {
+    pub fn transient(msg: impl Into<String>) -> DecodeFault {
+        DecodeFault {
+            class: FaultClass::Transient,
+            msg: msg.into(),
+        }
+    }
+    pub fn persistent(msg: impl Into<String>) -> DecodeFault {
+        DecodeFault {
+            class: FaultClass::Persistent,
+            msg: msg.into(),
+        }
+    }
+    pub fn corrupt(msg: impl Into<String>) -> DecodeFault {
+        DecodeFault {
+            class: FaultClass::Corrupt,
+            msg: msg.into(),
+        }
+    }
+    pub fn timeout(msg: impl Into<String>) -> DecodeFault {
+        DecodeFault {
+            class: FaultClass::Timeout,
+            msg: msg.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for DecodeFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{FAULT_TAG}{}]: {}", self.class.tag(), self.msg)
+    }
+}
+
+impl std::error::Error for DecodeFault {}
+
+/// Recover the fault class from an error chain, if any entry carries the
+/// `decode_fault[...]` tag.  `None` means the error did not originate in
+/// the fault machinery (e.g. a config error).
+pub fn classify(e: &anyhow::Error) -> Option<FaultClass> {
+    for entry in e.chain() {
+        if let Some(rest) = entry.find(FAULT_TAG).map(|i| &entry[i + FAULT_TAG.len()..]) {
+            if let Some(end) = rest.find(']') {
+                return FaultClass::from_tag(&rest[..end]);
+            }
+        }
+    }
+    None
+}
+
+/// Whether a failed forward is worth retrying.  Unclassified errors
+/// default to retryable: nothing was committed, and a bounded retry of a
+/// genuinely persistent error costs three backoffs, not correctness.
+pub fn retryable(e: &anyhow::Error) -> bool {
+    classify(e).map_or(true, FaultClass::retryable)
+}
+
+// ---------------------------------------------------------------------------
+// Output screening
+// ---------------------------------------------------------------------------
+
+/// Sanity-screen one forward output against the model's declared shape:
+/// dimension mismatches and non-finite values (NaN/Inf) become a typed
+/// [`FaultClass::Corrupt`] fault *before* the output can reach feature
+/// extraction, the dependency graph, commit, or either cache.
+///
+/// Windowed forwards leave out-of-window rows zero or stale — both
+/// finite — so the whole-buffer scan is valid for every forward variant.
+pub fn screen_output(
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    out: &StepOutput,
+) -> Result<(), DecodeFault> {
+    if (out.batch, out.seq_len, out.vocab) != (batch, seq_len, vocab) {
+        return Err(DecodeFault::corrupt(format!(
+            "forward shape ({}, {}, {}) != model ({batch}, {seq_len}, {vocab})",
+            out.batch, out.seq_len, out.vocab
+        )));
+    }
+    if out.logits.data.len() != batch * seq_len * vocab {
+        return Err(DecodeFault::corrupt(format!(
+            "logit buffer {} != {batch}x{seq_len}x{vocab}",
+            out.logits.data.len()
+        )));
+    }
+    let screens: [(&str, Option<&crate::tensor::Tensor>); 5] = [
+        ("logits", Some(&out.logits)),
+        ("attn_avg", out.attn_avg.as_ref()),
+        ("edge_scores", out.edge_scores.as_ref()),
+        ("degrees", out.degrees.as_ref()),
+        ("attn_layers", out.attn_layers.as_ref()),
+    ];
+    for (name, tensor) in screens {
+        let Some(t) = tensor else { continue };
+        if let Some(i) = t.data.iter().position(|v| !v.is_finite()) {
+            return Err(DecodeFault::corrupt(format!(
+                "non-finite {name}[{i}] = {}",
+                t.data[i]
+            )));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Circuit breaker
+// ---------------------------------------------------------------------------
+
+/// Breaker position, ordered by severity (`code()`: 0 closed,
+/// 1 half-open, 2 open) for the `breaker_state` gauge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BreakerState {
+    Closed,
+    HalfOpen,
+    Open,
+}
+
+impl BreakerState {
+    pub fn code(self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::HalfOpen => 1,
+            BreakerState::Open => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::HalfOpen => "half-open",
+            BreakerState::Open => "open",
+        }
+    }
+}
+
+/// When to trip and how long to cool down.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerPolicy {
+    /// Consecutive failures (attempts, not requests) that open the breaker.
+    pub threshold: u32,
+    /// How long an open breaker rejects before allowing a half-open probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> BreakerPolicy {
+        BreakerPolicy {
+            threshold: 5,
+            cooldown: Duration::from_millis(200),
+        }
+    }
+}
+
+/// Per-replica circuit breaker: closed → (threshold consecutive
+/// failures) → open → (cooldown) → half-open probe → closed on success,
+/// straight back to open on failure.  Plain struct, caller-locked.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    policy: BreakerPolicy,
+    fails: u32,
+    state: BreakerState,
+    open_until: Instant,
+}
+
+impl CircuitBreaker {
+    pub fn new(policy: BreakerPolicy) -> CircuitBreaker {
+        CircuitBreaker {
+            policy,
+            fails: 0,
+            state: BreakerState::Closed,
+            open_until: Instant::now(),
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// May a call proceed at `now`?  An open breaker whose cooldown has
+    /// elapsed transitions to half-open and admits exactly this call as
+    /// the probe.
+    pub fn allow(&mut self, now: Instant) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                if now >= self.open_until {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Time left before an open breaker admits its probe.
+    pub fn cooldown_remaining(&self, now: Instant) -> Option<Duration> {
+        match self.state {
+            BreakerState::Open => Some(self.open_until.saturating_duration_since(now)),
+            _ => None,
+        }
+    }
+
+    pub fn on_success(&mut self) {
+        self.state = BreakerState::Closed;
+        self.fails = 0;
+    }
+
+    /// Record a failed attempt; returns `true` when this failure tripped
+    /// the breaker open (closed→open on threshold, or a failed probe).
+    pub fn on_failure(&mut self, now: Instant) -> bool {
+        match self.state {
+            BreakerState::Closed => {
+                self.fails += 1;
+                if self.fails >= self.policy.threshold {
+                    self.state = BreakerState::Open;
+                    self.open_until = now + self.policy.cooldown;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                self.state = BreakerState::Open;
+                self.open_until = now + self.policy.cooldown;
+                true
+            }
+            BreakerState::Open => false,
+        }
+    }
+}
+
+/// Shared per-replica breaker states, surfaced through `ModelPool` so
+/// deploy-time callers can see which replicas are degraded without
+/// reaching into worker threads.
+#[derive(Clone, Default)]
+pub struct BreakerBoard {
+    board: Arc<Mutex<BTreeMap<usize, BreakerState>>>,
+}
+
+impl BreakerBoard {
+    pub fn new() -> BreakerBoard {
+        BreakerBoard::default()
+    }
+
+    pub fn publish(&self, replica: usize, state: BreakerState) {
+        self.board.lock_unpoisoned().insert(replica, state);
+    }
+
+    pub fn state(&self, replica: usize) -> Option<BreakerState> {
+        self.board.lock_unpoisoned().get(&replica).copied()
+    }
+
+    /// `(replica, state)` pairs, ascending by replica.
+    pub fn states(&self) -> Vec<(usize, BreakerState)> {
+        self.board
+            .lock_unpoisoned()
+            .iter()
+            .map(|(&r, &s)| (r, s))
+            .collect()
+    }
+
+    /// Most severe state across replicas (Closed when none registered).
+    pub fn worst(&self) -> BreakerState {
+        self.board
+            .lock_unpoisoned()
+            .values()
+            .copied()
+            .max()
+            .unwrap_or(BreakerState::Closed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Supervision stats (folded into coordinator Metrics per session)
+// ---------------------------------------------------------------------------
+
+/// Counters the wrapper stack bumps; the owning worker folds deltas into
+/// its `Metrics` at session end (same pattern as `CacheStats`).
+#[derive(Debug, Default)]
+pub struct SuperviseStats {
+    pub faults_injected: AtomicU64,
+    pub retries: AtomicU64,
+    pub breaker_trips: AtomicU64,
+    /// Gauge: current breaker state code (0/1/2) of this replica.
+    pub breaker_state: AtomicU64,
+    pub watchdog_reaps: AtomicU64,
+}
+
+/// Point-in-time reading of [`SuperviseStats`] counters, used by workers
+/// to fold per-session deltas.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SuperviseSnapshot {
+    pub faults_injected: u64,
+    pub retries: u64,
+    pub breaker_trips: u64,
+    pub watchdog_reaps: u64,
+}
+
+impl SuperviseStats {
+    pub fn snapshot(&self) -> SuperviseSnapshot {
+        SuperviseSnapshot {
+            faults_injected: self.faults_injected.load(Ordering::Relaxed), // ordering: counter
+            retries: self.retries.load(Ordering::Relaxed),                 // ordering: counter
+            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),     // ordering: counter
+            watchdog_reaps: self.watchdog_reaps.load(Ordering::Relaxed),   // ordering: counter
+        }
+    }
+}
+
+impl SuperviseSnapshot {
+    /// Counter deltas since `prev` (saturating, counters only grow).
+    pub fn since(self, prev: SuperviseSnapshot) -> SuperviseSnapshot {
+        SuperviseSnapshot {
+            faults_injected: self.faults_injected.saturating_sub(prev.faults_injected),
+            retries: self.retries.saturating_sub(prev.retries),
+            breaker_trips: self.breaker_trips.saturating_sub(prev.breaker_trips),
+            watchdog_reaps: self.watchdog_reaps.saturating_sub(prev.watchdog_reaps),
+        }
+    }
+
+    pub fn any(&self) -> bool {
+        self.faults_injected + self.retries + self.breaker_trips + self.watchdog_reaps > 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Watchdog
+// ---------------------------------------------------------------------------
+
+/// Factory that rebuilds a replica's model chain after it is lost to a
+/// hang or panic.  Must be deterministic w.r.t. decode output (fresh
+/// replicas of the same artifact agree bit-for-bit).
+pub type RespawnFn = Arc<dyn Fn() -> Result<Box<dyn ForwardModel + Send>> + Send + Sync>;
+
+/// Owned forward request shipped to the executor thread.
+enum WatchReq {
+    Full {
+        tokens: Vec<i32>,
+    },
+    Window {
+        tokens: Vec<i32>,
+        window: Vec<usize>,
+    },
+    Rows {
+        tokens: Vec<i32>,
+        rows: Vec<usize>,
+        spans: Vec<(usize, usize)>,
+        positions: Vec<usize>,
+    },
+}
+
+struct Executor {
+    tx: mpsc::Sender<(u64, WatchReq)>,
+    rx: mpsc::Receiver<(u64, Result<StepOutput>)>,
+}
+
+struct WatchState {
+    exec: Option<Executor>,
+    next_id: u64,
+}
+
+/// Cached model dimensions so accessors never cross the executor channel.
+#[derive(Clone, Copy)]
+struct Dims {
+    batch: usize,
+    seq_len: usize,
+    prompt_len: usize,
+    gen_len: usize,
+    vocab: usize,
+    mask_id: i32,
+    window_native: bool,
+}
+
+fn dims_of(m: &dyn ForwardModel) -> Dims {
+    Dims {
+        batch: m.batch(),
+        seq_len: m.seq_len(),
+        prompt_len: m.prompt_len(),
+        gen_len: m.gen_len(),
+        vocab: m.vocab(),
+        mask_id: m.mask_id(),
+        window_native: m.window_native(),
+    }
+}
+
+fn spawn_executor(model: Box<dyn ForwardModel + Send>, replica: usize) -> Executor {
+    let (req_tx, req_rx) = mpsc::channel::<(u64, WatchReq)>();
+    let (res_tx, res_rx) = mpsc::channel::<(u64, Result<StepOutput>)>();
+    // The JoinHandle is dropped on purpose: a hung executor is abandoned
+    // (its thread stays parked in the backend call) and replaced.
+    let _ = std::thread::Builder::new()
+        .name(format!("dapd-exec-{replica}"))
+        .spawn(move || {
+            while let Ok((id, req)) = req_rx.recv() {
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match &req {
+                    WatchReq::Full { tokens } => model.forward(tokens),
+                    WatchReq::Window { tokens, window } => model.forward_window(tokens, window),
+                    WatchReq::Rows {
+                        tokens,
+                        rows,
+                        spans,
+                        positions,
+                    } => model.forward_window_rows(
+                        tokens,
+                        &RowWindows {
+                            rows,
+                            spans,
+                            positions,
+                        },
+                    ),
+                }));
+                match run {
+                    Ok(res) => {
+                        if res_tx.send((id, res)).is_err() {
+                            return; // watchdog abandoned us after a reap
+                        }
+                    }
+                    Err(payload) => {
+                        // Ship the panic back as a tagged error and die;
+                        // the watchdog re-raises it on the worker thread.
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".to_string());
+                        let _ = res_tx.send((id, Err(anyhow::anyhow!("{PANIC_TAG}{msg}"))));
+                        return;
+                    }
+                }
+            }
+        });
+    Executor {
+        tx: req_tx,
+        rx: res_rx,
+    }
+}
+
+/// Bounds every forward with a wall-clock timeout by running it on a
+/// dedicated executor thread.  On timeout the executor is abandoned
+/// (reaped) and lazily respawned through the [`RespawnFn`]; without a
+/// factory, later calls fail persistently.  An executor panic is
+/// re-raised on the calling worker thread so panic supervision
+/// (`catch_unwind` + requeue in the coordinator) handles it uniformly.
+pub struct WatchdogModel {
+    dims: Dims,
+    timeout: Duration,
+    replica: usize,
+    respawn: Option<RespawnFn>,
+    reaps: Arc<AtomicU64>,
+    state: Mutex<WatchState>,
+}
+
+impl WatchdogModel {
+    pub fn new(
+        inner: Box<dyn ForwardModel + Send>,
+        timeout: Duration,
+        replica: usize,
+        respawn: Option<RespawnFn>,
+        reaps: Arc<AtomicU64>,
+    ) -> WatchdogModel {
+        let dims = dims_of(inner.as_ref());
+        WatchdogModel {
+            dims,
+            timeout,
+            replica,
+            respawn,
+            reaps,
+            state: Mutex::new(WatchState {
+                exec: Some(spawn_executor(inner, replica)),
+                next_id: 0,
+            }),
+        }
+    }
+
+    /// Hung forwards reaped so far.
+    pub fn reaps(&self) -> u64 {
+        // ordering: stat counter; readers tolerate a stale tally
+        self.reaps.load(Ordering::Relaxed)
+    }
+
+    fn ensure_executor(&self, st: &mut WatchState) -> Result<()> {
+        if st.exec.is_some() {
+            return Ok(());
+        }
+        match &self.respawn {
+            Some(f) => {
+                let inner = f()?;
+                st.exec = Some(spawn_executor(inner, self.replica));
+                Ok(())
+            }
+            None => Err(DecodeFault::persistent(format!(
+                "replica {} lost (hung or dead) and no respawn factory",
+                self.replica
+            ))
+            .into()),
+        }
+    }
+
+    fn call(&self, req: WatchReq) -> Result<StepOutput> {
+        let mut st = self.state.lock_unpoisoned();
+        self.ensure_executor(&mut st)?;
+        // Take the executor out for the duration of the call; it is only
+        // put back on a clean reply, so every abandon path (reap, panic,
+        // dead channel) leaves `exec: None` for the next respawn.
+        let exec = match st.exec.take() {
+            Some(e) => e,
+            None => {
+                return Err(DecodeFault::persistent(format!(
+                    "replica {} executor unavailable",
+                    self.replica
+                ))
+                .into())
+            }
+        };
+        let id = st.next_id;
+        st.next_id += 1;
+        if exec.tx.send((id, req)).is_err() {
+            // Executor died between calls (panic already reported on the
+            // call that crossed it); treat the replica as lost.
+            return Err(DecodeFault::persistent(format!(
+                "replica {} executor is gone",
+                self.replica
+            ))
+            .into());
+        }
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match exec.rx.recv_timeout(remaining) {
+                Ok((rid, res)) if rid == id => match res {
+                    Err(e) if e.chain().any(|s| s.starts_with(PANIC_TAG)) => {
+                        drop(st);
+                        // lint:allow(no-panic-request-path): re-raising a replica
+                        // panic so coordinator-level catch_unwind supervision
+                        // (respawn + requeue) handles it like an in-thread panic
+                        panic!("model replica panicked during forward: {e:#}");
+                    }
+                    res => {
+                        st.exec = Some(exec);
+                        return res;
+                    }
+                },
+                Ok((_stale, _)) => continue, // late reply from a reaped call
+                Err(RecvTimeoutError::Timeout) => {
+                    // Abandon the hung executor (dropping its channels).
+                    // ordering: reap tally is a stat counter, not a sync point
+                    self.reaps.fetch_add(1, Ordering::Relaxed);
+                    return Err(DecodeFault::timeout(format!(
+                        "forward exceeded the {}ms watchdog timeout (replica {})",
+                        self.timeout.as_millis(),
+                        self.replica
+                    ))
+                    .into());
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(DecodeFault::persistent(format!(
+                        "replica {} executor thread died without replying",
+                        self.replica
+                    ))
+                    .into());
+                }
+            }
+        }
+    }
+}
+
+impl ForwardModel for WatchdogModel {
+    fn batch(&self) -> usize {
+        self.dims.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.dims.seq_len
+    }
+    fn prompt_len(&self) -> usize {
+        self.dims.prompt_len
+    }
+    fn gen_len(&self) -> usize {
+        self.dims.gen_len
+    }
+    fn vocab(&self) -> usize {
+        self.dims.vocab
+    }
+    fn mask_id(&self) -> i32 {
+        self.dims.mask_id
+    }
+    fn forward(&self, tokens: &[i32]) -> Result<StepOutput> {
+        self.call(WatchReq::Full {
+            tokens: tokens.to_vec(),
+        })
+    }
+    fn forward_window(&self, tokens: &[i32], window: &[usize]) -> Result<StepOutput> {
+        self.call(WatchReq::Window {
+            tokens: tokens.to_vec(),
+            window: window.to_vec(),
+        })
+    }
+    fn forward_window_rows(&self, tokens: &[i32], windows: &RowWindows<'_>) -> Result<StepOutput> {
+        self.call(WatchReq::Rows {
+            tokens: tokens.to_vec(),
+            rows: windows.rows.to_vec(),
+            spans: windows.spans.to_vec(),
+            positions: windows.positions.to_vec(),
+        })
+    }
+    fn window_native(&self) -> bool {
+        self.dims.window_native
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Supervised retry wrapper
+// ---------------------------------------------------------------------------
+
+/// Forward-level retry budget and backoff shape.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Retries per forward call (total attempts = 1 + max_retries).
+    pub max_retries: usize,
+    /// First backoff; doubles per retry.
+    pub base_backoff: Duration,
+    /// Backoff cap.
+    pub max_backoff: Duration,
+    pub breaker: BreakerPolicy,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(50),
+            breaker: BreakerPolicy::default(),
+        }
+    }
+}
+
+impl RetryPolicy {
+    pub fn with_max_retries(max_retries: usize) -> RetryPolicy {
+        RetryPolicy {
+            max_retries,
+            ..RetryPolicy::default()
+        }
+    }
+
+    fn backoff(&self, attempt: usize) -> Duration {
+        let exp = attempt.saturating_sub(1).min(16) as u32;
+        self.base_backoff
+            .saturating_mul(1u32 << exp)
+            .min(self.max_backoff)
+    }
+}
+
+/// The outermost wrapper every worker decodes through: screens outputs,
+/// retries retryable faults with capped exponential backoff, and gates
+/// attempts through the per-replica breaker.  A forward that returns
+/// `Ok` from here is shape-valid, finite, and retry-stable — only such
+/// outputs may reach features, the graph, commit, or the caches.
+pub struct SupervisedModel {
+    inner: Box<dyn ForwardModel + Send>,
+    policy: RetryPolicy,
+    replica: usize,
+    breaker: Mutex<CircuitBreaker>,
+    stats: Arc<SuperviseStats>,
+    board: Option<BreakerBoard>,
+}
+
+impl SupervisedModel {
+    pub fn new(
+        inner: Box<dyn ForwardModel + Send>,
+        replica: usize,
+        policy: RetryPolicy,
+        stats: Arc<SuperviseStats>,
+        board: Option<BreakerBoard>,
+    ) -> SupervisedModel {
+        let m = SupervisedModel {
+            inner,
+            policy,
+            replica,
+            breaker: Mutex::new(CircuitBreaker::new(policy.breaker)),
+            stats,
+            board,
+        };
+        m.publish(BreakerState::Closed);
+        m
+    }
+
+    pub fn stats(&self) -> &Arc<SuperviseStats> {
+        &self.stats
+    }
+
+    pub fn breaker_state(&self) -> BreakerState {
+        self.breaker.lock_unpoisoned().state()
+    }
+
+    fn publish(&self, state: BreakerState) {
+        // ordering: gauge publication only — the breaker's truth lives
+        // under its mutex; a stale read of the code is harmless
+        self.stats.breaker_state.store(state.code(), Ordering::Relaxed);
+        if let Some(board) = &self.board {
+            board.publish(self.replica, state);
+        }
+    }
+
+    fn attempt<F>(&self, run: F) -> Result<StepOutput>
+    where
+        F: Fn(&dyn ForwardModel) -> Result<StepOutput>,
+    {
+        let (b, l, v) = (self.inner.batch(), self.inner.seq_len(), self.inner.vocab());
+        let mut attempt = 0usize;
+        loop {
+            let now = Instant::now();
+            let (allowed, wait) = {
+                let mut br = self.breaker.lock_unpoisoned();
+                let allowed = br.allow(now);
+                let wait = br.cooldown_remaining(now);
+                let state = br.state();
+                drop(br);
+                self.publish(state);
+                (allowed, wait)
+            };
+            if !allowed {
+                // Open breaker: burn one retry waiting out the cooldown
+                // rather than failing the whole board instantly.
+                if attempt >= self.policy.max_retries {
+                    return Err(DecodeFault::persistent(format!(
+                        "circuit breaker open on replica {} and retry budget exhausted",
+                        self.replica
+                    ))
+                    .into());
+                }
+                attempt += 1;
+                // ordering: stat counter
+                self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(wait.unwrap_or(self.policy.breaker.cooldown));
+                continue;
+            }
+            let res = run(self.inner.as_ref()).and_then(|out| match screen_output(b, l, v, &out) {
+                Ok(()) => Ok(out),
+                Err(fault) => Err(fault.into()),
+            });
+            match res {
+                Ok(out) => {
+                    let mut br = self.breaker.lock_unpoisoned();
+                    br.on_success();
+                    let state = br.state();
+                    drop(br);
+                    self.publish(state);
+                    return Ok(out);
+                }
+                Err(e) => {
+                    let (tripped, state) = {
+                        let mut br = self.breaker.lock_unpoisoned();
+                        let tripped = br.on_failure(Instant::now());
+                        (tripped, br.state())
+                    };
+                    self.publish(state);
+                    if tripped {
+                        // ordering: stat counter
+                        self.stats.breaker_trips.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if !retryable(&e) || attempt >= self.policy.max_retries {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    // ordering: stat counter
+                    self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(self.policy.backoff(attempt));
+                }
+            }
+        }
+    }
+}
+
+impl ForwardModel for SupervisedModel {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+    fn prompt_len(&self) -> usize {
+        self.inner.prompt_len()
+    }
+    fn gen_len(&self) -> usize {
+        self.inner.gen_len()
+    }
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn mask_id(&self) -> i32 {
+        self.inner.mask_id()
+    }
+    fn forward(&self, tokens: &[i32]) -> Result<StepOutput> {
+        self.attempt(|m| m.forward(tokens))
+    }
+    fn forward_window(&self, tokens: &[i32], window: &[usize]) -> Result<StepOutput> {
+        self.attempt(|m| m.forward_window(tokens, window))
+    }
+    fn forward_window_rows(&self, tokens: &[i32], windows: &RowWindows<'_>) -> Result<StepOutput> {
+        self.attempt(|m| m.forward_window_rows(tokens, windows))
+    }
+    fn window_native(&self) -> bool {
+        self.inner.window_native()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fault::{FaultPlan, FaultyModel};
+    use super::super::MockModel;
+    use super::*;
+
+    fn mock() -> MockModel {
+        MockModel::new(2, 16, 4, 12)
+    }
+
+    fn tokens() -> Vec<i32> {
+        vec![1i32; 2 * 16]
+    }
+
+    #[test]
+    fn classify_survives_context_wrapping() {
+        let e: anyhow::Error = DecodeFault::timeout("watchdog fired").into();
+        let e = e.context("batch failed");
+        assert_eq!(classify(&e), Some(FaultClass::Timeout));
+        assert!(retryable(&e));
+        let e: anyhow::Error = DecodeFault::persistent("gone").into();
+        assert!(!retryable(&e));
+        assert_eq!(classify(&anyhow::anyhow!("plain error")), None);
+        assert!(retryable(&anyhow::anyhow!("plain error")));
+    }
+
+    #[test]
+    fn screen_flags_nan_inf_and_shape_mismatch() {
+        let m = mock();
+        let mut out = m.forward(&tokens()).unwrap();
+        assert!(screen_output(2, 16, 12, &out).is_ok());
+        out.logits.data[7] = f32::NAN;
+        let e = screen_output(2, 16, 12, &out).unwrap_err();
+        assert_eq!(e.class, FaultClass::Corrupt);
+        out.logits.data[7] = f32::NEG_INFINITY;
+        assert!(screen_output(2, 16, 12, &out).is_err());
+        out.logits.data[7] = 0.0;
+        assert!(screen_output(2, 16, 12, &out).is_ok());
+        assert_eq!(
+            screen_output(4, 16, 12, &out).unwrap_err().class,
+            FaultClass::Corrupt,
+            "batch mismatch must screen as corrupt"
+        );
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_halfopen_closed() {
+        let policy = BreakerPolicy {
+            threshold: 2,
+            cooldown: Duration::from_millis(20),
+        };
+        let mut br = CircuitBreaker::new(policy);
+        let t0 = Instant::now();
+        assert!(br.allow(t0));
+        assert!(!br.on_failure(t0), "below threshold must not trip");
+        assert!(br.on_failure(t0), "threshold-th failure trips open");
+        assert_eq!(br.state(), BreakerState::Open);
+        assert!(!br.allow(t0), "open rejects during cooldown");
+        let after = t0 + policy.cooldown;
+        assert!(br.allow(after), "cooldown elapsed admits the probe");
+        assert_eq!(br.state(), BreakerState::HalfOpen);
+        br.on_success();
+        assert_eq!(br.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_failed_probe_reopens() {
+        let policy = BreakerPolicy {
+            threshold: 1,
+            cooldown: Duration::from_millis(20),
+        };
+        let mut br = CircuitBreaker::new(policy);
+        let t0 = Instant::now();
+        assert!(br.on_failure(t0));
+        assert!(br.allow(t0 + policy.cooldown));
+        assert!(br.on_failure(t0 + policy.cooldown), "failed probe re-trips");
+        assert_eq!(br.state(), BreakerState::Open);
+        assert!(!br.allow(t0 + policy.cooldown));
+    }
+
+    #[test]
+    fn supervised_retry_recovers_transient_faults_token_identically() {
+        let stats = Arc::new(SuperviseStats::default());
+        let clean = mock().forward(&tokens()).unwrap();
+        // Two injected transient errors, then clean forwards.
+        let faulty = FaultyModel::new(
+            Box::new(mock()),
+            FaultPlan::parse("error_at=0;error=1.0;until=2").unwrap(),
+            0,
+        );
+        let sup = SupervisedModel::new(
+            Box::new(faulty),
+            0,
+            RetryPolicy::default(),
+            Arc::clone(&stats),
+            None,
+        );
+        let out = sup.forward(&tokens()).unwrap();
+        assert_eq!(out.logits.data, clean.logits.data, "retry must be identical");
+        assert_eq!(stats.retries.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn supervised_screen_retries_nan_corruption() {
+        let stats = Arc::new(SuperviseStats::default());
+        let clean = mock().forward(&tokens()).unwrap();
+        let faulty = FaultyModel::new(
+            Box::new(mock()),
+            FaultPlan::parse("nan=1.0;until=1").unwrap(),
+            0,
+        );
+        let sup = SupervisedModel::new(
+            Box::new(faulty),
+            0,
+            RetryPolicy::default(),
+            Arc::clone(&stats),
+            None,
+        );
+        let out = sup.forward(&tokens()).unwrap();
+        assert_eq!(out.logits.data, clean.logits.data);
+        assert!(out.logits.data.iter().all(|v| v.is_finite()));
+        assert_eq!(stats.retries.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn supervised_does_not_retry_persistent_faults() {
+        let stats = Arc::new(SuperviseStats::default());
+        let faulty = FaultyModel::new(
+            Box::new(mock()),
+            FaultPlan::parse("persist_after=0").unwrap(),
+            0,
+        );
+        let sup = SupervisedModel::new(
+            Box::new(faulty),
+            0,
+            RetryPolicy::default(),
+            Arc::clone(&stats),
+            None,
+        );
+        let e = sup.forward(&tokens()).unwrap_err();
+        assert_eq!(classify(&e), Some(FaultClass::Persistent));
+        assert_eq!(stats.retries.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn supervised_trips_breaker_and_publishes_to_board() {
+        let stats = Arc::new(SuperviseStats::default());
+        let board = BreakerBoard::new();
+        let faulty = FaultyModel::new(
+            Box::new(mock()),
+            FaultPlan::parse("error=1.0").unwrap(),
+            3,
+        );
+        let sup = SupervisedModel::new(
+            Box::new(faulty),
+            3,
+            RetryPolicy {
+                max_retries: 6,
+                base_backoff: Duration::from_micros(100),
+                max_backoff: Duration::from_micros(200),
+                breaker: BreakerPolicy {
+                    threshold: 2,
+                    cooldown: Duration::from_millis(1),
+                },
+            },
+            Arc::clone(&stats),
+            Some(board.clone()),
+        );
+        assert!(sup.forward(&tokens()).is_err());
+        assert!(stats.breaker_trips.load(Ordering::Relaxed) >= 1);
+        assert_ne!(board.state(3), Some(BreakerState::Closed));
+        assert_ne!(board.worst(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn watchdog_reaps_a_hang_within_twice_the_timeout_and_respawns() {
+        let timeout = Duration::from_millis(150);
+        let reaps = Arc::new(AtomicU64::new(0));
+        let calls = Arc::new(AtomicU64::new(0));
+        let injected = Arc::new(AtomicU64::new(0));
+        let plan = FaultPlan::parse("hang_at=0").unwrap();
+        let make = {
+            let (plan, calls, injected) = (plan.clone(), Arc::clone(&calls), Arc::clone(&injected));
+            move || -> Result<Box<dyn ForwardModel + Send>> {
+                Ok(Box::new(FaultyModel::with_counters(
+                    Box::new(mock()),
+                    plan.clone(),
+                    0,
+                    Arc::clone(&calls),
+                    Arc::clone(&injected),
+                )))
+            }
+        };
+        let wd = WatchdogModel::new(
+            make().unwrap(),
+            timeout,
+            0,
+            Some(Arc::new(make)),
+            Arc::clone(&reaps),
+        );
+        let t0 = Instant::now();
+        let e = wd.forward(&tokens()).unwrap_err();
+        let reaped_in = t0.elapsed();
+        assert_eq!(classify(&e), Some(FaultClass::Timeout));
+        assert!(
+            reaped_in < timeout * 2,
+            "hang must be reaped within 2x the timeout, took {reaped_in:?}"
+        );
+        assert_eq!(wd.reaps(), 1);
+        // The respawned executor (shared call counter: the one-shot hang
+        // is spent) serves the retry.
+        let out = wd.forward(&tokens()).unwrap();
+        assert_eq!(out.logits.data, mock().forward(&tokens()).unwrap().logits.data);
+    }
+
+    #[test]
+    fn watchdog_without_respawn_fails_persistently_after_reap() {
+        let wd = WatchdogModel::new(
+            Box::new(FaultyModel::new(
+                Box::new(mock()),
+                FaultPlan::parse("hang_at=0").unwrap(),
+                0,
+            )),
+            Duration::from_millis(50),
+            0,
+            None,
+            Arc::new(AtomicU64::new(0)),
+        );
+        let e = wd.forward(&tokens()).unwrap_err();
+        assert_eq!(classify(&e), Some(FaultClass::Timeout));
+        let e = wd.forward(&tokens()).unwrap_err();
+        assert_eq!(classify(&e), Some(FaultClass::Persistent));
+    }
+
+    #[test]
+    fn watchdog_delegates_dims_and_windows() {
+        let wd = WatchdogModel::new(
+            Box::new(mock()),
+            Duration::from_secs(5),
+            0,
+            None,
+            Arc::new(AtomicU64::new(0)),
+        );
+        assert_eq!(
+            (wd.batch(), wd.seq_len(), wd.vocab(), wd.mask_id()),
+            (2, 16, 12, 1)
+        );
+        assert!(wd.window_native());
+        super::super::check_window_conformance(&wd, &{
+            let m = mock();
+            let mut t = vec![2i32; 2 * 16];
+            for r in 0..2 {
+                for i in 8..16 {
+                    t[r * 16 + i] = m.mask_id();
+                }
+            }
+            t
+        })
+        .unwrap();
+    }
+}

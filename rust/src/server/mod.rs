@@ -31,6 +31,16 @@
 //!   {"ok": false, "expired": true, ...}      deadline spent before decode
 //!   {"ok": false, "draining": true, ...}     server is shutting down
 //!
+//! A request that was *accepted* but whose decode failed past the
+//! supervised recovery path (retries, watchdog, respawn) is answered
+//! with a typed refusal on the surviving connection — `error` is a
+//! stable code (`decode_failed` / `expired` / `rejected`) and
+//! `retryable` says whether resubmitting the identical request may
+//! succeed:
+//!
+//!   {"ok": false, "error": "decode_failed", "retryable": true,
+//!    "detail": "..."}\n
+//!
 //! Graceful drain: [`DrainHandle::drain`] (or a `{"drain": true}` admin
 //! request, or SIGINT/SIGTERM in `main`) stops acceptance, lets every
 //! in-flight request finish and flush, then returns from [`Server::run`].
@@ -50,7 +60,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{Coordinator, Response, StreamEvent, SubmitError, SubmitOptions};
+use crate::coordinator::{
+    Coordinator, RequestError, Response, StreamEvent, SubmitError, SubmitOptions,
+};
 use crate::decode::{DecodeConfig, Method};
 use crate::util::json::Json;
 use crate::util::logging;
@@ -360,6 +372,25 @@ fn submit_error_json(e: &SubmitError) -> Json {
     obj
 }
 
+/// Map a typed post-admission failure onto the wire.  Unlike
+/// [`submit_error_json`] (admission refusals), these arrive on the
+/// request's own reply channel after it was accepted; the connection
+/// survives and `retryable` tells the client whether resubmitting the
+/// identical request can succeed.
+fn request_error_json(e: &RequestError) -> Json {
+    let mut obj = Json::obj();
+    obj.set("ok", false.into());
+    obj.set("error", e.code.into());
+    obj.set("detail", e.msg.as_str().into());
+    obj.set("retryable", e.retryable.into());
+    if e.code == "expired" {
+        // keep the admission-refusal flag shape so load generators key
+        // on one field for both expiry paths
+        obj.set("expired", true.into());
+    }
+    obj
+}
+
 fn response_json(resp: &Response) -> Json {
     let mut obj = Json::obj();
     obj.set(
@@ -417,7 +448,7 @@ fn stream_response(writer: &mut TcpStream, rx: mpsc::Receiver<StreamEvent>) -> R
                 terminal = true;
             }
             StreamEvent::Error(e) => {
-                let mut obj = error_json(&e);
+                let mut obj = request_error_json(&e);
                 obj.set("frame", "error".into());
                 write_line(writer, &obj)?;
                 terminal = true;
@@ -532,11 +563,12 @@ fn handle_conn(
         } else {
             match coord.submit_opts(dr.prompt, dr.cfg, dr.opts) {
                 Ok(rx) => match rx.recv() {
-                    Ok(resp) => {
+                    Ok(Ok(resp)) => {
                         let mut obj = response_json(&resp);
                         obj.set("ok", true.into());
                         write_line(&mut writer, &obj)?;
                     }
+                    Ok(Err(e)) => write_line(&mut writer, &request_error_json(&e))?,
                     Err(_) => write_line(
                         &mut writer,
                         &error_json("inference worker dropped request"),

@@ -221,7 +221,10 @@ fn cached_pool_matches_uncached_pool_token_for_token() {
             .iter()
             .map(|p| coord.submit(p.clone(), cfg.clone()).unwrap())
             .collect();
-        let gens: Vec<Vec<i32>> = rxs.into_iter().map(|rx| rx.recv().unwrap().gen).collect();
+        let gens: Vec<Vec<i32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap().gen)
+            .collect();
         coord.shutdown();
         handles.join();
         if opts.cache.enabled {

@@ -111,7 +111,7 @@ fn pool_backpressure_rejects_on_full_queue() {
         "rejections must be counted"
     );
     for rx in acks {
-        rx.recv().unwrap(); // accepted requests still complete
+        rx.recv().unwrap().unwrap(); // accepted requests still complete
     }
     coord.shutdown();
     handles.join();
@@ -132,7 +132,10 @@ fn shutdown_drains_queued_and_inflight_requests() {
     assert!(coord.submit(vec![5; 8], cfg).is_err());
     // ...but everything already accepted completes
     for rx in rxs {
-        let r = rx.recv().expect("graceful shutdown must drain accepted work");
+        let r = rx
+            .recv()
+            .expect("graceful shutdown must drain accepted work")
+            .expect("drained request must succeed");
         assert!(!r.gen.is_empty());
     }
     handles.join();
@@ -160,7 +163,7 @@ fn incompatible_groups_get_correct_results() {
         })
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let r = rx.recv().unwrap();
+        let r = rx.recv().unwrap().unwrap();
         let base = if i % 2 == 0 { &base_fast[i] } else { &base_orig[i] };
         assert_eq!(r.gen, base.gen, "request {i} decoded under the wrong config");
         assert_eq!(r.steps, base.steps, "request {i} NFE changed");
@@ -200,7 +203,7 @@ fn work_stealing_packs_compatible_groups_token_identically() {
                 coord.submit(p.clone(), cfg).unwrap()
             })
             .collect();
-        let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
         coord.shutdown();
         handles.join();
         (responses, coord.metrics.steals.load(Ordering::Relaxed))
@@ -260,8 +263,14 @@ fn deadline_preemption_claims_a_row_and_restarts_the_victim_exactly() {
             },
         )
         .unwrap();
-    let urgent = urgent_rx.recv().expect("urgent request must complete");
-    let victim = victim_rx.recv().expect("preempted request must still complete");
+    let urgent = urgent_rx
+        .recv()
+        .expect("urgent request must complete")
+        .unwrap();
+    let victim = victim_rx
+        .recv()
+        .expect("preempted request must still complete")
+        .unwrap();
     coord.shutdown();
     handles.join();
 
@@ -293,7 +302,7 @@ fn per_worker_metrics_sum_to_aggregate() {
         .map(|p| coord.submit(p, cfg.clone()).unwrap())
         .collect();
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     coord.shutdown();
     handles.join();

@@ -269,7 +269,7 @@ fn coordinator_serves_real_model() {
         .collect();
     let mut total_score = 0.0;
     for (inst, rx) in set.instances.iter().zip(rxs) {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.gen.len(), e.meta.gen_len);
         total_score += scorer::score("multiq", &resp.gen, &inst.expect, &inst.spec);
     }

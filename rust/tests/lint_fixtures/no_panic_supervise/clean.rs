@@ -1,0 +1,19 @@
+// Golden fixture: the recovery patterns supervision actually uses —
+// a failed forward flows back to the retry loop as a value, never as
+// a panic; panicking asserts stay in tests.  Expected findings: none.
+
+pub fn retry_forward(out: Result<u32, String>, slot: Option<u32>) -> Result<u32, String> {
+    let replica = slot.unwrap_or(0);
+    match out {
+        Ok(logits) => Ok(logits + replica),
+        Err(e) => Err(format!("replica {replica}: {e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        assert_eq!(super::retry_forward(Ok(2), Some(1)).unwrap(), 3);
+    }
+}

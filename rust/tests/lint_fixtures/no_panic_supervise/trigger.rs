@@ -1,0 +1,16 @@
+// Golden fixture: panic sites in supervision-flavoured retry code —
+// the expanded request-path scope (runtime/supervise.rs and
+// runtime/fault.rs in the real tree).  Expected findings (all
+// unsuppressed):
+//   line 10 — `.unwrap()`
+//   line 11 — `.expect()`
+//   line 13 — `panic!`
+
+pub fn retry_forward(out: Result<u32, String>, slot: Option<u32>, budget: u32) -> u32 {
+    let logits = out.unwrap();
+    let replica = slot.expect("a live replica");
+    if budget == 0 {
+        panic!("retry budget exhausted on replica {replica}");
+    }
+    logits + replica
+}

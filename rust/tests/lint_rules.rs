@@ -6,7 +6,10 @@
 //! must report its finding as suppressed with the recorded reason.
 //! On top of the per-rule goldens, the suite pins the JSON artifact
 //! shape, the binary's exit-code contract (the CI gate), and the
-//! repo-wide invariant that the tree itself lints clean.
+//! repo-wide invariant that the tree itself lints clean.  The
+//! `no_panic_supervise/` trigger/clean pair locks the expanded
+//! `no-panic-request-path` scope that covers the supervision layer
+//! (`runtime/supervise.rs`, `runtime/fault.rs`).
 
 use dapd::lint::{self, Config, Finding, Rule};
 use dapd::util::json::Json;
@@ -71,6 +74,23 @@ fn lock_order_trigger_distinguishes_inversion_from_self_nesting() {
     assert!(found[1].message.contains("self-deadlock"), "{:?}", found[1]);
 }
 
+/// The supervision-flavoured trigger/clean pair behind the expanded
+/// `no-panic-request-path` scope: retry-loop panic sites fire at the
+/// golden lines; the value-flow recovery shape is silent.
+#[test]
+fn supervise_fixture_pair_locks_the_expanded_request_path_scope() {
+    let report = fixture_report();
+    let found = in_file(&report, "no_panic_supervise/trigger.rs");
+    let lines: Vec<u32> = found.iter().map(|f| f.line).collect();
+    assert_eq!(lines, [10, 11, 13], "{found:?}");
+    for f in &found {
+        assert_eq!(f.rule, Rule::NoPanicRequestPath, "{f:?}");
+        assert!(!f.suppressed, "trigger finding must not suppress: {f:?}");
+    }
+    let clean = in_file(&report, "no_panic_supervise/clean.rs");
+    assert!(clean.is_empty(), "{clean:?}");
+}
+
 #[test]
 fn clean_fixtures_are_silent() {
     let report = fixture_report();
@@ -98,20 +118,20 @@ fn suppressed_fixtures_report_the_recorded_reason() {
 #[test]
 fn fixture_json_artifact_has_the_gate_fields() {
     let report = fixture_report();
-    assert_eq!(report.unsuppressed(), 13);
+    assert_eq!(report.unsuppressed(), 16);
     assert_eq!(report.suppressed(), 5);
     let j = Json::parse(&report.to_json()).expect("artifact parses");
-    assert_eq!(j.get("files_scanned").as_i64(), Some(15));
-    assert_eq!(j.get("unsuppressed").as_i64(), Some(13));
+    assert_eq!(j.get("files_scanned").as_i64(), Some(17));
+    assert_eq!(j.get("unsuppressed").as_i64(), Some(16));
     assert_eq!(j.get("suppressed").as_i64(), Some(5));
     let counts = j.get("counts");
     assert_eq!(counts.get("no-alloc-hot-path").as_i64(), Some(3));
     assert_eq!(counts.get("safety-comment").as_i64(), Some(3));
     assert_eq!(counts.get("atomic-ordering").as_i64(), Some(2));
-    assert_eq!(counts.get("no-panic-request-path").as_i64(), Some(3));
+    assert_eq!(counts.get("no-panic-request-path").as_i64(), Some(6));
     assert_eq!(counts.get("lock-order").as_i64(), Some(2));
     let findings = j.get("findings").as_arr().expect("findings array");
-    assert_eq!(findings.len(), 18);
+    assert_eq!(findings.len(), 21);
     for f in findings {
         assert!(f.get("file").as_str().is_some());
         assert!(f.get("line").as_i64().is_some());
@@ -157,7 +177,7 @@ fn binary_exit_codes_gate_clean_seeded_and_usage() {
     assert_eq!(seeded.status.code(), Some(1), "{seeded:?}");
     let stdout = String::from_utf8(seeded.stdout).expect("utf8 artifact");
     let j = Json::parse(&stdout).expect("json output parses");
-    assert_eq!(j.get("unsuppressed").as_i64(), Some(13));
+    assert_eq!(j.get("unsuppressed").as_i64(), Some(16));
 
     let usage = Command::new(bin)
         .arg("--no-such-flag")

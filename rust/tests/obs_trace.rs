@@ -156,7 +156,7 @@ fn prometheus_multi_worker_exposition_is_well_formed_and_complete() {
         })
         .collect();
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     coord.shutdown();
     handles.join();
